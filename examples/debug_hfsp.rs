@@ -1,0 +1,65 @@
+//! Scratch diagnostics for HFSP scheduling behaviour (not part of the
+//! documented example set; kept because it is a handy tracing harness).
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::scheduler::hfsp::HfspConfig;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 100,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+    let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(HfspConfig::default()), &wl);
+    println!(
+        "FAIR mean {:.1}  HFSP mean {:.1}; hfsp counters: suspends {} resumes {} swap-ins {} stale {}",
+        fair.sojourn.mean(),
+        hfsp.sojourn.mean(),
+        hfsp.counters.suspends,
+        hfsp.counters.resumes,
+        hfsp.counters.swap_ins,
+        hfsp.counters.stale_completions,
+    );
+    let f = fair.sojourn.by_job();
+    let h = hfsp.sojourn.by_job();
+    let mut diffs: Vec<(i64, u64)> = Vec::new();
+    for (&id, &hs) in &h {
+        diffs.push(((hs - f[&id]) as i64, id));
+    }
+    diffs.sort();
+    println!("worst 12 jobs for HFSP (hfsp_sojourn - fair_sojourn, positive = HFSP worse):");
+    for &(d, id) in diffs.iter().rev().take(12) {
+        let spec = wl.jobs.iter().find(|j| j.id == id).unwrap();
+        println!(
+            "  job {id:>3} {:<7} maps {:>4} reduces {:>4} submit {:>6.0}  diff {d:>6}s (hfsp {:.0} fair {:.0})",
+            spec.class.name(),
+            spec.n_maps(),
+            spec.n_reduces(),
+            spec.submit_time,
+            h[&id],
+            f[&id]
+        );
+    }
+    println!("best 8 jobs for HFSP:");
+    for &(d, id) in diffs.iter().take(8) {
+        let spec = wl.jobs.iter().find(|j| j.id == id).unwrap();
+        println!(
+            "  job {id:>3} {:<7} maps {:>4} reduces {:>4} submit {:>6.0}  diff {d:>6}s (hfsp {:.0} fair {:.0})",
+            spec.class.name(),
+            spec.n_maps(),
+            spec.n_reduces(),
+            spec.submit_time,
+            h[&id],
+            f[&id]
+        );
+    }
+}

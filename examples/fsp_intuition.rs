@@ -1,0 +1,56 @@
+//! The PS-vs-FSP intuition of the paper's Fig. 1 and Fig. 2 (§2.1),
+//! rendered as slot timelines from real simulation runs.
+//!
+//! ```bash
+//! cargo run --release --example fsp_intuition
+//! ```
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::scheduler::hfsp::HfspConfig;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::workload::synthetic::{fig1_workload, fig2_workload};
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let slots = 4;
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 1,
+            map_slots: slots,
+            reduce_slots: 1,
+            heartbeat_s: 0.5,
+            ..Default::default()
+        },
+        record_timelines: true,
+        ..Default::default()
+    };
+    for (label, wl) in [
+        (
+            "Fig.1 — three full-width jobs (30/10/10 s at t=0/10/15)",
+            fig1_workload(slots, 6),
+        ),
+        (
+            "Fig.2 — jobs needing 100%/55%/35% of the cluster",
+            fig2_workload(slots, 6),
+        ),
+    ] {
+        println!("=== {label} ===");
+        for kind in [
+            SchedulerKind::Fair(Default::default()),
+            SchedulerKind::Hfsp(HfspConfig::default()),
+        ] {
+            let o = run_simulation(&cfg, kind, &wl);
+            println!(
+                "--- {} (mean sojourn {:.1} s; completion order by finish time) ---",
+                o.scheduler,
+                o.sojourn.mean()
+            );
+            print!("{}", o.timelines.ascii_chart(0.0, o.makespan, 72));
+        }
+        println!();
+    }
+    println!("FAIR approximates processor sharing (slots split among jobs);");
+    println!("HFSP runs jobs to completion in their projected PS finish order,");
+    println!("which shortens mean sojourn without mistreating any job.");
+}

@@ -1,0 +1,63 @@
+//! Preemption-discipline study (the paper's Fig. 7 scenario, §4.3).
+//!
+//! Five reduce-only jobs on a 4-node × 2-reduce-slot cluster: a long job
+//! j1, then four short jobs ten seconds later. Compares eager
+//! SUSPEND/RESUME against WAIT and KILL, printing the per-job slot
+//! allocation timelines.
+//!
+//! ```bash
+//! cargo run --release --example preemption_study
+//! ```
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::workload::synthetic::fig7_workload;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 4,
+            map_slots: 1,
+            reduce_slots: 2,
+            ..Default::default()
+        },
+        record_timelines: true,
+        ..Default::default()
+    };
+    let wl = fig7_workload();
+    println!("workload: j1 = 11 x 500 s reduce tasks @t=140 s; j2..j5 = 5 x 60 s tasks @t=150 s");
+    println!("cluster:  4 nodes x 2 reduce slots = 8 slots\n");
+
+    for prim in [
+        PreemptionPrimitive::Suspend,
+        PreemptionPrimitive::Wait,
+        PreemptionPrimitive::Kill,
+    ] {
+        let o = run_simulation(
+            &cfg,
+            SchedulerKind::Hfsp(HfspConfig {
+                preemption: prim,
+                ..Default::default()
+            }),
+            &wl,
+        );
+        println!(
+            "=== {} — mean sojourn {:.1} min ===",
+            prim.name(),
+            o.sojourn.mean() / 60.0
+        );
+        print!("{}", o.timelines.ascii_chart(120.0, o.makespan, 90));
+        println!(
+            "suspends {}, resumes {}, kills {}, j1 finish {:.0} s\n",
+            o.counters.suspends,
+            o.counters.resumes,
+            o.counters.kills,
+            o.sojourn.by_job()[&1] + 140.0
+        );
+    }
+    println!("paper shape: eager preemption suspends only the tasks j2..j5 need,");
+    println!("cutting the average sojourn by ~40% vs WAIT; KILL wastes j1's work.");
+}

@@ -1,0 +1,76 @@
+"""AOT compile path: lower the L2 graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange is **HLO text**, not serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes ``manifest.json`` recording the static shapes, so the rust
+runtime can pad its inputs and fail loudly on shape drift.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_estimator() -> str:
+    spec = jax.ShapeDtypeStruct((model.EST_BATCH, model.EST_SAMPLES), "float32")
+    n_spec = jax.ShapeDtypeStruct((model.EST_BATCH,), "float32")
+    lowered = jax.jit(model.estimator_fn).lower(spec, spec, n_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_maxmin() -> str:
+    d_spec = jax.ShapeDtypeStruct((model.MAXMIN_JOBS,), "float32")
+    c_spec = jax.ShapeDtypeStruct((), "float32")
+    lowered = jax.jit(model.maxmin_fn).lower(d_spec, c_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, text in [
+        ("estimator.hlo.txt", lower_estimator()),
+        ("maxmin.hlo.txt", lower_maxmin()),
+    ]:
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+    manifest = {
+        "estimator": {"batch": model.EST_BATCH, "samples": model.EST_SAMPLES},
+        "maxmin": {"jobs": model.MAXMIN_JOBS, "iters": model.MAXMIN_ITERS},
+        "jax": jax.__version__,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest to {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: batched masked least-squares quantile fit.
+
+The job-size estimator's hot loop (§3.2.1 of the paper) as a Pallas
+kernel: given a batch of *sorted* sample sets (sorting happens in the L2
+graph — data-dependent permutation is a poor fit for a systolic array),
+fit the empirical quantile function by least squares and emit the
+estimated serialized phase size per job.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the whole batch is
+one `(B, S)` VMEM tile — B jobs' estimates are produced by a single
+kernel invocation, amortizing the HBM↔VMEM transfer; all reductions are
+masked vector ops over the S (lane) axis, with no data-dependent shapes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU lowering is compile-only in this environment.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _estimator_kernel(sorted_ref, count_ref, n_tasks_ref, out_ref):
+    """Per-row masked LSQ over plotting positions.
+
+    sorted_ref:  f32[B, S] samples sorted ascending, zero-padded at tail.
+    count_ref:   f32[B]    number of valid samples per row.
+    n_tasks_ref: f32[B]    task count of each phase.
+    out_ref:     f32[B]    estimated phase sizes.
+    """
+    srt = sorted_ref[...]
+    s_count = count_ref[...]
+    n_tasks = n_tasks_ref[...]
+    b, s = srt.shape
+
+    k = jax.lax.broadcasted_iota(jnp.float32, (b, s), 1)
+    s_safe = jnp.maximum(s_count, 1.0)[:, None]
+    valid = (k < s_count[:, None]).astype(jnp.float32)
+    u = (k + 0.5) / s_safe
+
+    n = jnp.maximum(s_count, 1.0)
+    sx = jnp.sum(u * valid, axis=1)
+    sy = jnp.sum(srt * valid, axis=1)
+    sxx = jnp.sum(u * u * valid, axis=1)
+    sxy = jnp.sum(u * srt * valid, axis=1)
+    denom = n * sxx - sx * sx
+    safe = jnp.abs(denom) > 1e-9
+    slope = jnp.where(safe, (n * sxy - sx * sy) / jnp.where(safe, denom, 1.0), 0.0)
+    intercept = (sy - slope * sx) / n
+    size = n_tasks * (intercept + 0.5 * slope)
+    size = jnp.maximum(size, 0.0)
+    out_ref[...] = jnp.where(s_count > 0, size, 0.0)
+
+
+def lsq_phase_sizes(sorted_samples, counts, n_tasks, *, interpret=True):
+    """Invoke the Pallas estimator kernel.
+
+    Args:
+      sorted_samples: f32[B, S] sorted-ascending samples, zero padding at
+        the tail of each row.
+      counts: f32[B] valid-sample counts.
+      n_tasks: f32[B] phase task counts.
+
+    Returns:
+      f32[B] estimated phase sizes.
+    """
+    b, _s = sorted_samples.shape
+    return pl.pallas_call(
+        _estimator_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(
+        sorted_samples.astype(jnp.float32),
+        counts.astype(jnp.float32),
+        n_tasks.astype(jnp.float32),
+    )

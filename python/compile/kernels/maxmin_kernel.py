@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: max-min fair (water-filling) allocation.
+
+The virtual cluster's resource-allocation step (§3.1 of the paper) runs
+on every job arrival / task completion, over the live job set. The
+classic implementation sorts demands; on a TPU-shaped target we instead
+solve for the water level by **fixed-iteration bisection** — a branch-free
+schedule of fused vector min/sum reductions over a single VMEM-resident
+demand vector, with no data-dependent trip counts (DESIGN.md
+§Hardware-Adaptation).
+
+64 iterations bisect the level to f32 resolution regardless of N.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ITERS = 64
+
+
+def _maxmin_kernel(demands_ref, capacity_ref, out_ref):
+    """Water-filling by bisection on the level.
+
+    demands_ref: f32[N] non-negative demands (zero padding harmless).
+    capacity_ref: f32[1] capacity.
+    out_ref: f32[N] allocations.
+    """
+    d = demands_ref[...]
+    cap = capacity_ref[0]
+    total = jnp.sum(d)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        used = jnp.sum(jnp.minimum(d, mid))
+        under = used < cap
+        lo = jnp.where(under, mid, lo)
+        hi = jnp.where(under, hi, mid)
+        return lo, hi
+
+    lo0 = jnp.float32(0.0)
+    hi0 = jnp.maximum(jnp.max(d), jnp.float32(1.0))
+    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo0, hi0))
+    level = 0.5 * (lo + hi)
+    alloc = jnp.minimum(d, level)
+    out_ref[...] = jnp.where(total <= cap, d, alloc)
+
+
+def maxmin_allocate(demands, capacity, *, interpret=True):
+    """Invoke the Pallas water-filling kernel.
+
+    Args:
+      demands: f32[N] demands.
+      capacity: f32[] or f32[1] capacity.
+
+    Returns:
+      f32[N] max-min fair allocations.
+    """
+    n = demands.shape[0]
+    capacity = jnp.reshape(jnp.asarray(capacity, dtype=jnp.float32), (1,))
+    return pl.pallas_call(
+        _maxmin_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(demands.astype(jnp.float32), capacity)

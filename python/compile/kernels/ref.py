@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest`` asserts the Pallas
+kernels (and, transitively, the AOT artifacts executed from rust) agree
+with these implementations to float32 tolerance. They mirror, in batched
+array form, the native rust implementations in
+``rust/src/scheduler/hfsp/estimator.rs`` (least-squares quantile fit) and
+``rust/src/scheduler/hfsp/virtual_cluster.rs`` (max-min water-filling).
+"""
+
+import jax.numpy as jnp
+
+
+def estimate_phase_sizes_ref(samples, mask, n_tasks):
+    """Estimated serialized phase sizes from sampled task durations.
+
+    The paper's estimator (§3.2.1): sort the sample set, treat it as an
+    empirical quantile function q(u) at plotting positions
+    u_k = (k + 0.5)/s, fit ``q(u) ~ a + b*u`` by least squares, and sum
+    the predicted durations of all ``n`` tasks:
+
+        size = sum_j a + b * (j + 0.5)/n = n * (a + b/2)
+
+    Args:
+      samples: f32[B, S] task durations, padded with zeros.
+      mask:    f32[B, S] 1.0 for valid samples, 0.0 for padding. Valid
+               entries must be a prefix (the rust caller packs them).
+      n_tasks: f32[B] total task count of each phase.
+
+    Returns:
+      f32[B] estimated phase sizes; 0 where a row has no valid samples.
+    """
+    samples = samples.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n_tasks = n_tasks.astype(jnp.float32)
+    s_count = jnp.sum(mask, axis=1)  # [B]
+    # Sort valid samples ascending, pushing padding to the end.
+    big = jnp.float32(3.4e38)
+    sortable = jnp.where(mask > 0, samples, big)
+    srt = jnp.sort(sortable, axis=1)
+    srt = jnp.where(srt >= big, 0.0, srt)
+    s_ = jnp.maximum(s_count, 1.0)[:, None]  # avoid /0
+    k = jnp.arange(samples.shape[1], dtype=jnp.float32)[None, :]
+    u = (k + 0.5) / s_  # plotting positions
+    valid = (k < s_count[:, None]).astype(jnp.float32)
+    # Masked least squares over (u, srt).
+    n = jnp.maximum(s_count, 1.0)
+    sx = jnp.sum(u * valid, axis=1)
+    sy = jnp.sum(srt * valid, axis=1)
+    sxx = jnp.sum(u * u * valid, axis=1)
+    sxy = jnp.sum(u * srt * valid, axis=1)
+    denom = n * sxx - sx * sx
+    # Degenerate (single sample): flat line through the mean.
+    safe = jnp.abs(denom) > 1e-9
+    b = jnp.where(safe, (n * sxy - sx * sy) / jnp.where(safe, denom, 1.0), 0.0)
+    a = (sy - b * sx) / n
+    size = n_tasks * (a + 0.5 * b)
+    size = jnp.maximum(size, 0.0)
+    return jnp.where(s_count > 0, size, 0.0)
+
+
+def maxmin_allocate_ref(demands, capacity, iters=64):
+    """Max-min fair (water-filling) allocation by bisection on the level.
+
+    alloc_i = min(demand_i, L) with L chosen so that
+    sum_i alloc_i = min(capacity, sum_i demand_i).
+
+    Args:
+      demands:  f32[N] non-negative demands (padding = 0 is harmless).
+      capacity: f32[] capacity to distribute.
+      iters:    bisection iterations (64 reaches f32 resolution).
+
+    Returns:
+      f32[N] allocations.
+    """
+    demands = demands.astype(jnp.float32)
+    capacity = jnp.asarray(capacity, dtype=jnp.float32)
+    total = jnp.sum(demands)
+
+    lo = jnp.float32(0.0)
+    hi = jnp.maximum(jnp.max(demands), jnp.float32(1.0))
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        used = jnp.sum(jnp.minimum(demands, mid))
+        under = used < capacity
+        lo = jnp.where(under, mid, lo)
+        hi = jnp.where(under, hi, mid)
+    level = 0.5 * (lo + hi)
+    alloc = jnp.minimum(demands, level)
+    # Everyone satisfied when demand fits in capacity.
+    return jnp.where(total <= capacity, demands, alloc)

@@ -1,0 +1,60 @@
+"""L2 JAX graphs: the estimator model and the allocation model.
+
+These are the computations the rust coordinator executes through PJRT
+(lowered once by ``aot.py``). Each composes array pre/post-processing
+(sorting, masking — things XLA fuses well) with the L1 Pallas kernels
+(``kernels/``) so that everything lowers into a single HLO module.
+
+Python runs only at build time; the request path sees only the compiled
+artifacts.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import estimator_kernel, maxmin_kernel
+
+# Static shapes the artifacts are lowered with (recorded in
+# artifacts/manifest.json; the rust runtime pads to these).
+EST_BATCH = 8
+EST_SAMPLES = 8
+MAXMIN_JOBS = 256
+MAXMIN_ITERS = maxmin_kernel.ITERS
+
+
+def estimate_phase_sizes(samples, mask, n_tasks):
+    """Batched job-size estimation (§3.2.1 of the paper).
+
+    Sorting (data-dependent permutation) stays in the XLA graph; the
+    masked least-squares quantile fit is the Pallas kernel.
+
+    Args:
+      samples: f32[B, S] sampled task durations, zero-padded.
+      mask:    f32[B, S] validity mask (prefix-packed).
+      n_tasks: f32[B] task count per phase.
+
+    Returns:
+      f32[B] estimated serialized phase sizes.
+    """
+    samples = samples.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    counts = jnp.sum(mask, axis=1)
+    big = jnp.float32(3.4e38)
+    sortable = jnp.where(mask > 0, samples, big)
+    srt = jnp.sort(sortable, axis=1)
+    srt = jnp.where(srt >= big, 0.0, srt)
+    return estimator_kernel.lsq_phase_sizes(srt, counts, n_tasks.astype(jnp.float32))
+
+
+def maxmin_allocate(demands, capacity):
+    """Max-min fair allocation (§3.1) — thin wrapper over the kernel."""
+    return maxmin_kernel.maxmin_allocate(demands, capacity)
+
+
+def estimator_fn(samples, mask, n_tasks):
+    """AOT entry point: 1-tuple result (the rust side unwraps it)."""
+    return (estimate_phase_sizes(samples, mask, n_tasks),)
+
+
+def maxmin_fn(demands, capacity):
+    """AOT entry point: 1-tuple result."""
+    return (maxmin_allocate(demands, capacity),)

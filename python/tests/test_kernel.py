@@ -1,0 +1,187 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Pallas kernels (interpret mode) must agree with the pure-jnp oracles in
+``ref.py`` to float32 tolerance, across hand-written cases and
+hypothesis-driven shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import estimator_kernel, maxmin_kernel, ref
+
+
+def _pack(rows, s):
+    """Pack ragged sample rows into (samples, mask) arrays."""
+    b = len(rows)
+    samples = np.zeros((b, s), dtype=np.float32)
+    mask = np.zeros((b, s), dtype=np.float32)
+    for i, row in enumerate(rows):
+        for j, x in enumerate(row[:s]):
+            samples[i, j] = x
+            mask[i, j] = 1.0
+    return jnp.asarray(samples), jnp.asarray(mask)
+
+
+def _run_estimator(rows, n_tasks, s=8):
+    samples, mask = _pack(rows, s)
+    n = jnp.asarray(np.asarray(n_tasks, dtype=np.float32))
+    expected = ref.estimate_phase_sizes_ref(samples, mask, n)
+    counts = jnp.sum(mask, axis=1)
+    big = jnp.float32(3.4e38)
+    srt = jnp.sort(jnp.where(mask > 0, samples, big), axis=1)
+    srt = jnp.where(srt >= big, 0.0, srt)
+    got = estimator_kernel.lsq_phase_sizes(srt, counts, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-5, atol=1e-4)
+    return np.asarray(got)
+
+
+class TestEstimatorKernel:
+    def test_constant_durations(self):
+        got = _run_estimator([[10.0] * 5], [100.0])
+        np.testing.assert_allclose(got, [1000.0], rtol=1e-5)
+
+    def test_uniform_quantiles_exact(self):
+        # Samples at quantiles of U[0, 20]: mean 10 -> size n*10.
+        rows = [[(k + 0.5) / 5.0 * 20.0 for k in range(5)]]
+        got = _run_estimator(rows, [50.0])
+        np.testing.assert_allclose(got, [500.0], rtol=1e-5)
+
+    def test_single_sample_scales(self):
+        got = _run_estimator([[7.0]], [3.0])
+        np.testing.assert_allclose(got, [21.0], rtol=1e-5)
+
+    def test_empty_row_is_zero(self):
+        got = _run_estimator([[], [5.0, 5.0]], [10.0, 10.0])
+        np.testing.assert_allclose(got[0], 0.0, atol=1e-6)
+        np.testing.assert_allclose(got[1], 50.0, rtol=1e-5)
+
+    def test_batch_rows_independent(self):
+        a = _run_estimator([[10.0, 20.0, 30.0]], [10.0])
+        both = _run_estimator([[10.0, 20.0, 30.0], [1.0]], [10.0, 5.0])
+        np.testing.assert_allclose(both[0], a[0], rtol=1e-6)
+
+    def test_unsorted_input_handled_by_model_sort(self):
+        # model.estimate_phase_sizes sorts internally.
+        from compile import model
+
+        samples, mask = _pack([[3.0, 1.0, 2.0]], 8)
+        n = jnp.asarray(np.asarray([10.0], dtype=np.float32))
+        got = model.estimate_phase_sizes(samples, mask, n)
+        expected = ref.estimate_phase_sizes_ref(samples, mask, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-5)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        data=st.lists(
+            st.lists(
+                st.floats(min_value=0.015625, max_value=1e4, width=32),
+                min_size=1,
+                max_size=8,
+            ),
+            min_size=1,
+            max_size=8,
+        ),
+        n_scale=st.floats(min_value=1.0, max_value=5000.0, width=32),
+    )
+    def test_hypothesis_matches_ref(self, data, n_scale):
+        n_tasks = [max(len(r), 1) * n_scale / 100.0 + 1.0 for r in data]
+        _run_estimator(data, n_tasks)
+
+    @settings(max_examples=20, deadline=None)
+    @given(s=st.integers(min_value=1, max_value=16), b=st.integers(min_value=1, max_value=8))
+    def test_hypothesis_shapes(self, s, b):
+        rows = [[float(i + j + 1) for j in range(min(s, 4))] for i in range(b)]
+        _run_estimator(rows, [10.0] * b, s=s)
+
+
+def _run_maxmin(demands, capacity, n=None):
+    d = np.asarray(demands, dtype=np.float32)
+    if n is not None and n > len(d):
+        d = np.pad(d, (0, n - len(d)))
+    got = maxmin_kernel.maxmin_allocate(jnp.asarray(d), capacity)
+    expected = ref.maxmin_allocate_ref(jnp.asarray(d), capacity)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-5, atol=1e-3)
+    return np.asarray(got)
+
+
+class TestMaxMinKernel:
+    def test_all_satisfied(self):
+        got = _run_maxmin([1.0, 2.0, 3.0], 10.0)
+        np.testing.assert_allclose(got, [1.0, 2.0, 3.0], atol=1e-3)
+
+    def test_even_split(self):
+        got = _run_maxmin([5.0, 5.0, 5.0], 6.0)
+        np.testing.assert_allclose(got, [2.0, 2.0, 2.0], atol=1e-3)
+
+    def test_small_demand_served_fully(self):
+        got = _run_maxmin([1.0, 10.0, 10.0], 9.0)
+        np.testing.assert_allclose(got, [1.0, 4.0, 4.0], atol=1e-3)
+
+    def test_padding_zeros_harmless(self):
+        got = _run_maxmin([3.0, 7.0], 4.0, n=16)
+        assert got.shape == (16,)
+        np.testing.assert_allclose(got[2:], 0.0, atol=1e-4)
+        np.testing.assert_allclose(got[:2].sum(), 4.0, atol=1e-2)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        demands=st.lists(
+            st.floats(min_value=0.0, max_value=1e4, width=32), min_size=1, max_size=64
+        ),
+        capacity=st.floats(min_value=0.125, max_value=2e4, width=32),
+    )
+    def test_hypothesis_invariants(self, demands, capacity):
+        got = _run_maxmin(demands, capacity)
+        d = np.asarray(demands, dtype=np.float32)
+        # 0 <= alloc <= demand
+        assert (got >= -1e-3).all()
+        assert (got <= d + 1e-2 + d * 1e-4).all()
+        # sum(alloc) == min(capacity, sum(demand)) within f32 bisection tol
+        target = min(capacity, float(d.sum()))
+        assert abs(float(got.sum()) - target) <= max(2e-2 * max(target, 1.0), 1e-2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=256))
+    def test_hypothesis_sizes(self, n):
+        _run_maxmin([1.0] * n, n / 2.0)
+
+
+class TestModelShapes:
+    def test_estimator_entrypoint_shapes(self):
+        from compile import model
+
+        samples = jnp.zeros((model.EST_BATCH, model.EST_SAMPLES), jnp.float32)
+        mask = jnp.zeros_like(samples)
+        n = jnp.zeros((model.EST_BATCH,), jnp.float32)
+        (out,) = model.estimator_fn(samples, mask, n)
+        assert out.shape == (model.EST_BATCH,)
+
+    def test_maxmin_entrypoint_shapes(self):
+        from compile import model
+
+        d = jnp.ones((model.MAXMIN_JOBS,), jnp.float32)
+        (out,) = model.maxmin_fn(d, jnp.float32(10.0))
+        assert out.shape == (model.MAXMIN_JOBS,)
+
+
+class TestAotLowering:
+    def test_estimator_lowers_to_hlo_text(self):
+        from compile import aot
+
+        text = aot.lower_estimator()
+        assert "HloModule" in text
+        assert len(text) > 500
+
+    def test_maxmin_lowers_to_hlo_text(self):
+        from compile import aot
+
+        text = aot.lower_maxmin()
+        assert "HloModule" in text
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

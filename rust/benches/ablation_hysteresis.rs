@@ -1,0 +1,60 @@
+//! §3.3 ablation — suspension thresholds with hysteresis.
+//!
+//! The pathological workload the paper mentions ("a large number of jobs
+//! arriving in decreasing size"): every arrival preempts its
+//! predecessor; without a bound on suspended contexts, parked tasks pile
+//! up. We compare tight vs effectively-disabled hysteresis thresholds.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::report::table;
+use hfsp::scheduler::hfsp::HfspConfig;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::workload::synthetic::decreasing_size_workload;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 4,
+            map_slots: 1,
+            reduce_slots: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // 12 jobs, each wanting all 8 reduce slots, sizes decreasing 0.7x.
+    let wl = decreasing_size_workload(12, 8, 800.0);
+
+    let mut rows = Vec::new();
+    for (label, hi, lo) in [
+        ("tight (hi=8, lo=4)", 8usize, 4usize),
+        ("loose (hi=32, lo=16)", 32, 16),
+        ("disabled (hi=10^6)", 1_000_000, 500_000),
+    ] {
+        let hcfg = HfspConfig {
+            suspend_hi: hi,
+            suspend_lo: lo,
+            ..Default::default()
+        };
+        let o = run_simulation(&cfg, SchedulerKind::Hfsp(hcfg), &wl);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}", o.sojourn.mean()),
+            o.counters.suspends.to_string(),
+            o.counters.swap_ins.to_string(),
+            format!("{:.0}", o.makespan),
+        ]);
+    }
+    println!("=== §3.3 ablation — suspension-threshold hysteresis ===");
+    println!("(12 jobs in strictly decreasing size, each wanting the whole cluster)\n");
+    println!(
+        "{}",
+        table(
+            &["thresholds", "mean sojourn (s)", "suspends", "swap-ins", "makespan (s)"],
+            &rows
+        )
+    );
+    println!("paper: when too many tasks are suspended HFSP falls back to WAIT,");
+    println!("bounding memory pressure at a small sojourn cost.");
+}

@@ -1,0 +1,79 @@
+//! Fig. 3 — ECDFs of sojourn times for the FB-dataset, clustered by job
+//! class (small / medium / large), FAIR vs HFSP (FIFO added for
+//! reference).
+//!
+//! Paper shape to reproduce: HFSP ≈ FAIR for small jobs; sojourn times
+//! significantly shorter under HFSP for medium and large jobs.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::job::JobClass;
+use hfsp::report::{ascii_chart, write_csv, Series};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use std::path::Path;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let cfg = SimConfig::default();
+    let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+
+    let kinds = [
+        SchedulerKind::Fifo,
+        SchedulerKind::Fair(Default::default()),
+        SchedulerKind::Hfsp(Default::default()),
+    ];
+    let outcomes: Vec<_> = kinds
+        .into_iter()
+        .map(|k| run_simulation(&cfg, k, &wl))
+        .collect();
+
+    println!("=== Fig. 3: ECDFs of sojourn times (FB-dataset, 100 nodes) ===\n");
+    for class in JobClass::ALL {
+        let series: Vec<Series> = outcomes
+            .iter()
+            .map(|o| {
+                let ecdf = o.sojourn.ecdf(Some(class));
+                Series::new(o.scheduler, ecdf.series(64))
+            })
+            .collect();
+        println!(
+            "{}",
+            ascii_chart(
+                &format!("Fig 3 ({}) — P(sojourn <= x)", class.name()),
+                &series,
+                72,
+                14,
+                true
+            )
+        );
+        write_csv(
+            Path::new(&format!("reports/fig3_{}.csv", class.name())),
+            &series,
+        )
+        .expect("write csv");
+        for o in &outcomes {
+            println!(
+                "  {:<5} mean sojourn ({:<6}) = {:>8.1} s",
+                o.scheduler,
+                class.name(),
+                o.sojourn.mean_class(class)
+            );
+        }
+        println!();
+    }
+    let fair = &outcomes[1];
+    let hfsp = &outcomes[2];
+    println!("paper-shape checks:");
+    let small_ratio =
+        hfsp.sojourn.mean_class(JobClass::Small) / fair.sojourn.mean_class(JobClass::Small);
+    println!("  small-class HFSP/FAIR ratio = {small_ratio:.2} (paper: ~1.0)");
+    for class in [JobClass::Medium, JobClass::Large] {
+        let r = hfsp.sojourn.mean_class(class) / fair.sojourn.mean_class(class);
+        println!(
+            "  {}-class HFSP/FAIR ratio = {r:.2} (paper: < 1.0)",
+            class.name()
+        );
+    }
+    println!("\nCSV written to reports/fig3_*.csv");
+}

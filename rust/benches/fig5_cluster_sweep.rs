@@ -1,0 +1,76 @@
+//! Fig. 5 — impact of cluster size (hence load) on scheduling
+//! performance: mean job sojourn time for FAIR and HFSP as the cluster
+//! shrinks from 100 to 10 nodes (same workload ⇒ higher load per node).
+//!
+//! Paper shape: HFSP's advantage grows as resources become scarce; "for
+//! equivalent sojourn times, the workload requires a smaller cluster
+//! when HFSP is used".
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::report::{ascii_chart, table, write_csv, Series};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use std::path::Path;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+    let sizes = [10usize, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+
+    let mut fair_pts = Vec::new();
+    let mut hfsp_pts = Vec::new();
+    let mut rows = Vec::new();
+    for &nodes in &sizes {
+        let cfg = SimConfig {
+            cluster: ClusterConfig {
+                nodes,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
+        let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+        fair_pts.push((nodes as f64, fair.sojourn.mean()));
+        hfsp_pts.push((nodes as f64, hfsp.sojourn.mean()));
+        rows.push(vec![
+            nodes.to_string(),
+            format!("{:.0}", fair.sojourn.mean()),
+            format!("{:.0}", hfsp.sojourn.mean()),
+            format!("{:.2}", fair.sojourn.mean() / hfsp.sojourn.mean()),
+        ]);
+    }
+    let series = vec![
+        Series::new("FAIR", fair_pts.clone()),
+        Series::new("HFSP", hfsp_pts.clone()),
+    ];
+    println!(
+        "{}",
+        ascii_chart(
+            "Fig 5 — mean sojourn (s) vs cluster size (nodes)",
+            &series,
+            72,
+            16,
+            false
+        )
+    );
+    println!(
+        "{}",
+        table(
+            &["nodes", "FAIR mean (s)", "HFSP mean (s)", "FAIR/HFSP"],
+            &rows
+        )
+    );
+    write_csv(Path::new("reports/fig5_cluster_sweep.csv"), &series).expect("write csv");
+
+    // Shape check: the advantage must grow under scarcity.
+    let ratio_small_cluster = fair_pts[0].1 / hfsp_pts[0].1;
+    let ratio_big_cluster = fair_pts.last().unwrap().1 / hfsp_pts.last().unwrap().1;
+    println!(
+        "FAIR/HFSP ratio: {ratio_small_cluster:.2} at {} nodes vs {ratio_big_cluster:.2} at {} nodes (paper: grows under scarcity)",
+        sizes[0],
+        sizes.last().unwrap()
+    );
+    println!("\nCSV written to reports/fig5_cluster_sweep.csv");
+}

@@ -1,0 +1,104 @@
+//! §Perf — hot-path microbenchmarks and end-to-end throughput.
+//!
+//! Run with `cargo bench --bench perf_hot_paths`. Measures (wall clock,
+//! custom harness — criterion is unavailable offline):
+//!
+//! * water-filling allocation at several job counts (the per-event cost
+//!   of the virtual cluster's aging step);
+//! * projected-finish-order fluid simulation at several job counts;
+//! * full FB-dataset macro runs per scheduler (events/second);
+//! * PJRT artifact execution latency (when artifacts are built).
+
+use hfsp::bench::Bench;
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::runtime::{ArtifactSet, EstimatorExec, MaxMinExec};
+use hfsp::scheduler::hfsp::virtual_cluster::{maxmin_waterfill, VirtualCluster};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use std::path::Path;
+use std::rc::Rc;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let mut b = Bench::new().with_samples(2, 10);
+
+    // -- water-filling ------------------------------------------------
+    let mut rng = Pcg64::seed_from_u64(1);
+    for n in [8usize, 64, 256] {
+        let demands: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(0.0, 100.0)).collect();
+        b.run(&format!("maxmin_waterfill n={n}"), || {
+            maxmin_waterfill(&demands, 400.0)
+        });
+    }
+
+    // -- fluid projection ----------------------------------------------
+    for n in [10usize, 40, 100] {
+        let mut vc = VirtualCluster::new(400);
+        let mut rng = Pcg64::seed_from_u64(2);
+        for id in 0..n as u64 {
+            let tasks = 1 + rng.gen_index(500);
+            vc.add_job(id, tasks as f64 * rng.gen_range_f64(10.0, 60.0), tasks, 0.0);
+        }
+        b.run(&format!("fluid projected_finish_order jobs={n}"), || {
+            vc.age_to(0.0); // invalidate nothing; cache...
+            vc.set_total(0, 1000.0, 0.0); // force recompute
+            vc.projected_finish_order().len()
+        });
+    }
+
+    // -- end-to-end macro runs ------------------------------------------
+    let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+    let cfg = SimConfig::default();
+    let mut evts = Vec::new();
+    for kind in [
+        SchedulerKind::Fifo,
+        SchedulerKind::Fair(Default::default()),
+        SchedulerKind::Hfsp(Default::default()),
+    ] {
+        let label = kind.label();
+        let events = std::cell::Cell::new(0u64);
+        let m = b.run(&format!("fb-dataset 100-node macro run [{label}]"), || {
+            let o = run_simulation(&cfg, kind.clone(), &wl);
+            events.set(o.events_processed);
+            o.events_processed
+        });
+        evts.push((label, events.get(), m.mean_ns()));
+    }
+
+    // -- PJRT artifact latency ------------------------------------------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let set = Rc::new(ArtifactSet::load(&dir).expect("artifacts load"));
+        let est = EstimatorExec::new(set.clone());
+        let mm = MaxMinExec::new(set);
+        let samples = [35.0f64, 36.0, 34.5, 35.5, 35.2];
+        b.run("pjrt estimator execute (1 job)", || {
+            est.estimate_one(&samples, 300).unwrap()
+        });
+        let batch: Vec<(&[f64], usize)> = (0..est.batch()).map(|_| (&samples[..], 300)).collect();
+        b.run(&format!("pjrt estimator execute (batch={})", est.batch()), || {
+            est.estimate_batch(&batch).unwrap().len()
+        });
+        let demands: Vec<f64> = (0..64).map(|i| (i % 13) as f64).collect();
+        b.run("pjrt maxmin execute (64 jobs)", || {
+            mm.allocate(&demands, 400.0).unwrap().len()
+        });
+    } else {
+        eprintln!("artifacts not built; skipping PJRT latency benches");
+    }
+
+    println!();
+    b.print_table();
+    println!();
+    for (label, events, ns) in evts {
+        println!(
+            "{label}: {events} events, {:.2} M events/s",
+            events as f64 / (ns / 1e9) / 1e6
+        );
+    }
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/perf_hot_paths.json", b.to_json().to_string_pretty())
+        .expect("write perf json");
+    println!("\nJSON written to reports/perf_hot_paths.json");
+}

@@ -1,0 +1,66 @@
+//! §4.2 headline numbers — FIFO vs FAIR vs HFSP mean sojourn times.
+//!
+//! The paper reports a FIFO mean sojourn of 2983 s, "about 5 times
+//! bigger than that of HFSP", on the FB-dataset. We regenerate the
+//! three-way comparison across seeds and cluster sizes and report the
+//! ratios (shape, not absolute numbers: the testbed is a simulator).
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::report::table;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::util::stats::Moments;
+use hfsp::workload::swim::FbWorkload;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let mut rows = Vec::new();
+    for &nodes in &[100usize, 50, 30] {
+        let mut ratios_fifo = Moments::new();
+        let mut ratios_fair = Moments::new();
+        let mut hfsp_mean = Moments::new();
+        let mut fifo_mean = Moments::new();
+        for seed in [42u64, 7, 1234] {
+            let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(seed));
+            let cfg = SimConfig {
+                cluster: ClusterConfig {
+                    nodes,
+                    ..Default::default()
+                },
+                seed,
+                ..Default::default()
+            };
+            let fifo = run_simulation(&cfg, SchedulerKind::Fifo, &wl);
+            let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
+            let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+            ratios_fifo.push(fifo.sojourn.mean() / hfsp.sojourn.mean());
+            ratios_fair.push(fair.sojourn.mean() / hfsp.sojourn.mean());
+            hfsp_mean.push(hfsp.sojourn.mean());
+            fifo_mean.push(fifo.sojourn.mean());
+        }
+        rows.push(vec![
+            nodes.to_string(),
+            format!("{:.0}", fifo_mean.mean()),
+            format!("{:.0}", hfsp_mean.mean()),
+            format!("{:.1}x", ratios_fifo.mean()),
+            format!("{:.1}x", ratios_fair.mean()),
+        ]);
+    }
+    println!("=== §4.2 — FIFO vs HFSP (3 seeds per row) ===\n");
+    println!(
+        "{}",
+        table(
+            &[
+                "nodes",
+                "FIFO mean (s)",
+                "HFSP mean (s)",
+                "FIFO/HFSP",
+                "FAIR/HFSP"
+            ],
+            &rows
+        )
+    );
+    println!("paper: FIFO = 2983 s ≈ 5× HFSP on their 100-node EC2 testbed;");
+    println!("the ratio is load-dependent — it crosses 5× as the cluster shrinks.");
+}

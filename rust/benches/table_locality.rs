@@ -1,0 +1,60 @@
+//! §4.3 "Impact of data locality" — fraction of MAP tasks reading local
+//! data, FAIR vs HFSP, aggregated over the macro-benchmark runs.
+//!
+//! Paper: FAIR 98 %, HFSP 100 % over >14 000 map tasks — both use delay
+//! scheduling; HFSP benefits further from focusing whole jobs.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::metrics::LocalityStats;
+use hfsp::report::table;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let mut fair_total = LocalityStats::default();
+    let mut hfsp_total = LocalityStats::default();
+    let mut fifo_total = LocalityStats::default();
+    for seed in [42u64, 7, 1234] {
+        let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(seed));
+        let cfg = SimConfig {
+            seed,
+            ..Default::default()
+        };
+        fifo_total.merge(&run_simulation(&cfg, SchedulerKind::Fifo, &wl).locality);
+        fair_total.merge(
+            &run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl).locality,
+        );
+        hfsp_total.merge(
+            &run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl).locality,
+        );
+    }
+    let rows = vec![
+        vec![
+            "FIFO".into(),
+            fifo_total.total().to_string(),
+            format!("{:.2}%", fifo_total.fraction_local() * 100.0),
+        ],
+        vec![
+            "FAIR".into(),
+            fair_total.total().to_string(),
+            format!("{:.2}%", fair_total.fraction_local() * 100.0),
+        ],
+        vec![
+            "HFSP".into(),
+            hfsp_total.total().to_string(),
+            format!("{:.2}%", hfsp_total.fraction_local() * 100.0),
+        ],
+    ];
+    println!("=== §4.3 — map-task data locality (3 seeds, 100 nodes) ===\n");
+    println!(
+        "{}",
+        table(&["scheduler", "map tasks", "local fraction"], &rows)
+    );
+    println!("paper: FAIR 98%, HFSP 100% over >14,000 tasks (FIFO not reported).");
+    assert!(
+        hfsp_total.fraction_local() >= fair_total.fraction_local() - 0.01,
+        "HFSP locality should not trail FAIR"
+    );
+}

@@ -1,0 +1,164 @@
+//! Wall-clock benchmark harness.
+//!
+//! `criterion` is not available offline, so `cargo bench` targets use this
+//! harness: warmup, N timed samples, mean / p50 / p99 and a JSON record.
+//! Figure-reproduction benches additionally print the paper-shaped series
+//! through [`crate::report`].
+
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ns)
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&s, 50.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&s, 99.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into());
+        o.set("samples", self.samples_ns.len().into());
+        o.set("mean_ns", self.mean_ns().into());
+        o.set("p50_ns", self.p50_ns().into());
+        o.set("p99_ns", self.p99_ns().into());
+        o
+    }
+
+    /// Human-readable single line.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns()),
+            fmt_ns(self.p99_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    warmup: usize,
+    samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self {
+            warmup: 2,
+            samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, warmup: usize, samples: usize) -> Self {
+        self.warmup = warmup;
+        self.samples = samples.max(1);
+        self
+    }
+
+    /// Time `f`, which should perform one full unit of work and return a
+    /// value kept alive to prevent dead-code elimination.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            samples_ns: samples,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print the classic header + one line per measurement.
+    pub fn print_table(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p99"
+        );
+        for m in &self.results {
+            println!("{}", m.report_line());
+        }
+    }
+
+    /// Dump all measurements as a JSON array (for regression tracking).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(Measurement::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::new().with_samples(1, 5);
+        b.run("noop", || 42);
+        b.run("spin", || (0..1000).sum::<u64>());
+        assert_eq!(b.results().len(), 2);
+        let m = &b.results()[1];
+        assert_eq!(m.samples_ns.len(), 5);
+        assert!(m.mean_ns() >= 0.0);
+        assert!(m.p99_ns() >= m.p50_ns() * 0.5);
+        let j = b.to_json().to_string_compact();
+        assert!(j.contains("\"spin\""));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,197 @@
+//! Cluster assembly: the set of TaskTracker nodes plus global slot math.
+
+use super::node::{Node, NodeConfig};
+use crate::job::{Phase, TaskRef};
+
+/// Cluster-wide configuration.
+///
+/// Defaults mirror the paper's Amazon Cluster (§4.1): 100 m1.xlarge nodes,
+/// 4 MAP + 2 REDUCE slots each, 15 GB RAM, 4 disks, 128 MB HDFS blocks
+/// with replication 3, and Hadoop's 3 s heartbeat.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub map_slots: usize,
+    pub reduce_slots: usize,
+    /// HDFS replication factor.
+    pub replication: usize,
+    /// TaskTracker heartbeat period, seconds.
+    pub heartbeat_s: f64,
+    /// Node RAM available to task JVMs, MB.
+    pub ram_mb: f64,
+    /// RAM-per-slot (child JVM context size), MB.
+    pub ram_per_slot_mb: f64,
+    /// Swap partition size, MB.
+    pub swap_mb: f64,
+    /// Aggregate disk bandwidth for swap in/out, MB/s.
+    pub disk_mbps: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 100,
+            map_slots: 4,
+            reduce_slots: 2,
+            replication: 3,
+            heartbeat_s: 3.0,
+            // 15 GB minus ~3 GB for daemons/OS. Hadoop 0.21 child JVMs
+            // default to a few hundred MB of heap (mapred.child.java.opts);
+            // §5 argues suspended contexts usually stay in RAM — with
+            // 600 MB contexts, 6 running tasks leave room for ~14 parked
+            // contexts before the OS pages anything out.
+            ram_mb: 12_000.0,
+            ram_per_slot_mb: 600.0,
+            swap_mb: 16_000.0,
+            // 4 spindles at ~100 MB/s.
+            disk_mbps: 400.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn node_config(&self) -> NodeConfig {
+        NodeConfig {
+            map_slots: self.map_slots,
+            reduce_slots: self.reduce_slots,
+            ram_mb: self.ram_mb,
+            ram_per_slot_mb: self.ram_per_slot_mb,
+            swap_mb: self.swap_mb,
+            disk_mbps: self.disk_mbps,
+        }
+    }
+
+    pub fn total_slots(&self, phase: Phase) -> usize {
+        self.nodes
+            * match phase {
+                Phase::Map => self.map_slots,
+                Phase::Reduce => self.reduce_slots,
+            }
+    }
+}
+
+/// The live cluster: nodes indexed by id.
+#[derive(Debug)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        assert!(cfg.nodes > 0, "cluster needs at least one node");
+        let nodes = (0..cfg.nodes)
+            .map(|id| Node::new(id, cfg.node_config()))
+            .collect();
+        Self { nodes, cfg }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: usize) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: usize) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn total_slots(&self, phase: Phase) -> usize {
+        self.cfg.total_slots(phase)
+    }
+
+    pub fn free_slots(&self, phase: Phase) -> usize {
+        self.nodes.iter().map(|n| n.free_slots(phase)).sum()
+    }
+
+    pub fn running_tasks(&self, phase: Phase) -> usize {
+        self.nodes.iter().map(|n| n.running(phase).len()).sum()
+    }
+
+    /// Locate the node on which `task` is currently running.
+    pub fn node_running(&self, task: TaskRef) -> Option<usize> {
+        self.nodes
+            .iter()
+            .find(|n| n.running(task.phase).contains(&task))
+            .map(|n| n.id)
+    }
+
+    /// Locate the node holding `task`'s suspended context.
+    pub fn node_suspending(&self, task: TaskRef) -> Option<usize> {
+        self.nodes
+            .iter()
+            .find(|n| n.is_suspended_here(task))
+            .map(|n| n.id)
+    }
+
+    /// Total suspended contexts cluster-wide (drives HFSP's hysteresis).
+    pub fn suspended_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.suspended_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_testbed() {
+        let cfg = ClusterConfig::default();
+        assert_eq!(cfg.nodes, 100);
+        assert_eq!(cfg.total_slots(Phase::Map), 400);
+        assert_eq!(cfg.total_slots(Phase::Reduce), 200);
+        assert_eq!(cfg.replication, 3);
+    }
+
+    #[test]
+    fn cluster_aggregates_slots() {
+        let cfg = ClusterConfig {
+            nodes: 4,
+            map_slots: 2,
+            reduce_slots: 1,
+            ..Default::default()
+        };
+        let mut c = Cluster::new(cfg);
+        assert_eq!(c.free_slots(Phase::Map), 8);
+        let t = TaskRef {
+            job: 1,
+            phase: Phase::Map,
+            index: 0,
+        };
+        c.node_mut(2).start_task(t);
+        assert_eq!(c.free_slots(Phase::Map), 7);
+        assert_eq!(c.running_tasks(Phase::Map), 1);
+        assert_eq!(c.node_running(t), Some(2));
+        assert_eq!(c.node_suspending(t), None);
+    }
+
+    #[test]
+    fn suspended_count_aggregates() {
+        let cfg = ClusterConfig {
+            nodes: 2,
+            map_slots: 1,
+            reduce_slots: 1,
+            ..Default::default()
+        };
+        let mut c = Cluster::new(cfg);
+        let t = TaskRef {
+            job: 1,
+            phase: Phase::Map,
+            index: 0,
+        };
+        c.node_mut(0).start_task(t);
+        c.node_mut(0).suspend_task(t, 1.0);
+        assert_eq!(c.suspended_count(), 1);
+        assert_eq!(c.node_suspending(t), Some(0));
+    }
+}

@@ -1,0 +1,487 @@
+//! The JobTracker: event-loop glue between the DES engine, the cluster
+//! model and the pluggable scheduler.
+//!
+//! Responsibilities (mirroring Hadoop's JobTracker, §2.2 of the paper):
+//!
+//! * deliver job arrivals from the workload;
+//! * drive per-node heartbeats (period [`ClusterConfig::heartbeat_s`],
+//!   staggered across nodes) and apply the scheduler's [`Action`]s;
+//! * track task attempts, including the extended preemption state machine
+//!   (SUSPEND/RESUME/KILL) and its memory/swap consequences;
+//! * emit the Δ-progress reports the reduce-size estimator consumes
+//!   (§3.2.1);
+//! * collect metrics: sojourn times, data locality, slot timelines.
+//!
+//! Completion events are guarded by per-task **epochs**: every task state
+//! transition bumps the epoch, so a completion scheduled before a
+//! suspension (now stale) is recognized and dropped.
+
+use crate::cluster::{Cluster, ClusterConfig, Hdfs};
+use crate::job::task::NodeId;
+use crate::job::{Job, JobId, Phase, TaskRef};
+use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
+use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
+use crate::sim::{Engine, StopReason, Time};
+use crate::util::rng::{Pcg64, SeedableRng};
+use crate::util::timeline::TimelineSet;
+use crate::workload::Workload;
+use std::collections::BTreeMap;
+
+/// Simulation-level configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub cluster: ClusterConfig,
+    /// Master seed (HDFS placement and any scheduler randomness derive
+    /// from it).
+    pub seed: u64,
+    /// The paper's Δ parameter: a reduce task reports its progress after
+    /// Δ seconds of execution, bounding estimator training time (§3.2.1;
+    /// default 60 s as in §4.1).
+    pub reduce_progress_delta_s: f64,
+    /// Record per-job slot timelines (needed by Fig. 7; off by default —
+    /// it costs memory on large runs).
+    pub record_timelines: bool,
+    /// Safety valve: abort the run if simulated time exceeds this.
+    pub max_sim_time_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            seed: 42,
+            reduce_progress_delta_s: 60.0,
+            record_timelines: false,
+            max_sim_time_s: 30.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+/// Counters over preemption primitives and scheduling activity.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActionCounters {
+    pub launches: u64,
+    pub suspends: u64,
+    pub resumes: u64,
+    pub kills: u64,
+    pub swap_ins: u64,
+    pub heartbeats: u64,
+    pub stale_completions: u64,
+    pub rejected_actions: u64,
+}
+
+/// Everything a simulation run produces.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub scheduler: &'static str,
+    pub workload: String,
+    pub sojourn: SojournStats,
+    pub locality: LocalityStats,
+    pub timelines: TimelineSet,
+    pub counters: ActionCounters,
+    /// Completion time of the last job (simulated seconds).
+    pub makespan: Time,
+    pub events_processed: u64,
+    /// Host wall-clock spent simulating, milliseconds.
+    pub wall_ms: f64,
+}
+
+/// Simulator events.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(usize),
+    Heartbeat(NodeId),
+    TaskDone { task: TaskRef, epoch: u64 },
+    ReduceProgress { task: TaskRef, epoch: u64, delta: f64 },
+}
+
+struct Driver<'a> {
+    workload: &'a Workload,
+    jobs: BTreeMap<JobId, Job>,
+    cluster: Cluster,
+    hdfs: Hdfs,
+    scheduler: Box<dyn Scheduler>,
+    sojourn: SojournStats,
+    locality: LocalityStats,
+    timelines: TimelineSet,
+    counters: ActionCounters,
+    finished_jobs: usize,
+    delta: f64,
+    record_timelines: bool,
+    max_sim_time: f64,
+}
+
+/// Run `workload` under `kind` on the cluster described by `cfg`.
+pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload) -> SimOutcome {
+    let t0 = std::time::Instant::now();
+    let mut master = Pcg64::seed_from_u64(cfg.seed);
+    let hdfs_rng = master.split();
+    let scheduler = kind.build();
+    let scheduler_name = scheduler.name();
+
+    let mut driver = Driver {
+        workload,
+        jobs: BTreeMap::new(),
+        cluster: Cluster::new(cfg.cluster),
+        hdfs: Hdfs::new(cfg.cluster.nodes, cfg.cluster.replication, hdfs_rng),
+        scheduler,
+        sojourn: SojournStats::new(),
+        locality: LocalityStats::default(),
+        timelines: TimelineSet::default(),
+        counters: ActionCounters::default(),
+        finished_jobs: 0,
+        delta: cfg.reduce_progress_delta_s,
+        record_timelines: cfg.record_timelines,
+        max_sim_time: cfg.max_sim_time_s,
+    };
+
+    let mut engine: Engine<Ev> = Engine::new();
+    // Job arrivals.
+    for (i, job) in workload.jobs.iter().enumerate() {
+        engine.schedule_at(job.submit_time, Ev::Arrival(i));
+    }
+    // Staggered heartbeats: node i phase-shifted by i/n of a period, so
+    // a 100-node cluster probes the scheduler ~every 30 ms of simulated
+    // time instead of in 3 s bursts.
+    let hb = cfg.cluster.heartbeat_s;
+    for node in 0..cfg.cluster.nodes {
+        let offset = hb * (node as f64 + 1.0) / cfg.cluster.nodes as f64;
+        engine.schedule_at(offset, Ev::Heartbeat(node));
+    }
+
+    let reason = engine.run(|eng, now, ev| driver.handle(eng, now, ev));
+    if reason == StopReason::EventLimit {
+        log::error!("simulation hit the event-limit guard; results are partial");
+    }
+    if driver.finished_jobs != workload.len() {
+        log::warn!(
+            "simulation ended with {}/{} jobs finished (scheduler={})",
+            driver.finished_jobs,
+            workload.len(),
+            scheduler_name
+        );
+    }
+
+    SimOutcome {
+        scheduler: scheduler_name,
+        workload: workload.name.clone(),
+        sojourn: driver.sojourn,
+        locality: driver.locality,
+        timelines: driver.timelines,
+        counters: driver.counters,
+        makespan: engine.now(),
+        events_processed: engine.processed(),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+impl<'a> Driver<'a> {
+    fn handle(&mut self, eng: &mut Engine<Ev>, now: Time, ev: Ev) {
+        match ev {
+            Ev::Arrival(i) => self.on_arrival(now, i),
+            Ev::Heartbeat(node) => self.on_heartbeat(eng, now, node),
+            Ev::TaskDone { task, epoch } => self.on_task_done(eng, now, task, epoch),
+            Ev::ReduceProgress { task, epoch, delta } => {
+                self.on_reduce_progress(now, task, epoch, delta)
+            }
+        }
+        if self.finished_jobs == self.workload.len() {
+            eng.halt();
+        }
+    }
+
+    fn on_arrival(&mut self, now: Time, index: usize) {
+        let spec = self.workload.jobs[index].clone();
+        let id = spec.id;
+        self.hdfs.place_job(id, spec.n_maps());
+        let job = Job::new(spec);
+        // Degenerate zero-task job: finishes instantly.
+        if job.is_finished() {
+            let mut job = job;
+            job.finish_time = Some(now);
+            self.record_finish(&job);
+            self.jobs.insert(id, job);
+            self.finished_jobs += 1;
+            return;
+        }
+        self.jobs.insert(id, job);
+        let view = SchedView {
+            jobs: &self.jobs,
+            cluster: &self.cluster,
+            hdfs: &self.hdfs,
+            now,
+        };
+        self.scheduler.on_job_arrival(&view, id);
+    }
+
+    fn on_heartbeat(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId) {
+        self.counters.heartbeats += 1;
+        if now > self.max_sim_time {
+            log::error!("simulated time exceeded max_sim_time_s; halting");
+            eng.halt();
+            return;
+        }
+        let actions = {
+            let view = SchedView {
+                jobs: &self.jobs,
+                cluster: &self.cluster,
+                hdfs: &self.hdfs,
+                now,
+            };
+            self.scheduler.on_heartbeat(&view, node)
+        };
+        for action in actions {
+            log::trace!("t={now:.2} node={node} apply {action:?}");
+            self.apply(eng, now, action);
+        }
+        // Keep heartbeating while work remains.
+        if self.finished_jobs != self.workload.len() {
+            eng.schedule_in(self.cluster.config().heartbeat_s, Ev::Heartbeat(node));
+        }
+    }
+
+    fn apply(&mut self, eng: &mut Engine<Ev>, now: Time, action: Action) {
+        match action {
+            Action::Launch { task, node, local: _ } => self.do_launch(eng, now, task, node),
+            Action::Suspend { task } => self.do_suspend(now, task),
+            Action::Resume { task } => self.do_resume(eng, now, task),
+            Action::Kill { task } => self.do_kill(now, task),
+        }
+    }
+
+    fn do_launch(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef, node: NodeId) {
+        let Some(job) = self.jobs.get(&task.job) else {
+            self.reject(task, "launch of unknown job");
+            return;
+        };
+        if !job.task(task).state.is_pending() {
+            self.reject(task, "launch of non-pending task");
+            return;
+        }
+        if task.phase == Phase::Reduce && !job.map_phase_done() {
+            self.reject(task, "launch of reduce before map phase done");
+            return;
+        }
+        if !self.cluster.node(node).has_free_slot(task.phase) {
+            self.reject(task, "launch without free slot");
+            return;
+        }
+        // Ground-truth locality (map tasks only; reduces are always
+        // "local" by convention and excluded from locality stats, §4.3).
+        let local = task.phase == Phase::Map && self.hdfs.is_local(node, task);
+        let swapped = self.cluster.node_mut(node).start_task(task);
+        self.mark_swapped(&swapped);
+        let job = self.jobs.get_mut(&task.job).unwrap();
+        let delay = job.task_mut(task).launch(node, now, local);
+        job.counts_mut(task.phase).on_launch();
+        let epoch = job.task(task).epoch;
+        eng.schedule_in(delay, Ev::TaskDone { task, epoch });
+        // First Δ-progress report for reduce estimation; skipped if the
+        // task finishes before Δ (completion then reports the exact time).
+        if task.phase == Phase::Reduce && job.task(task).attempts == 1 && delay > self.delta {
+            eng.schedule_in(
+                self.delta,
+                Ev::ReduceProgress {
+                    task,
+                    epoch,
+                    delta: self.delta,
+                },
+            );
+        }
+        if self.record_timelines {
+            self.timelines.acquire(task.job, now);
+        }
+        self.counters.launches += 1;
+    }
+
+    fn do_suspend(&mut self, now: Time, task: TaskRef) {
+        let Some(job) = self.jobs.get(&task.job) else {
+            self.reject(task, "suspend of unknown job");
+            return;
+        };
+        let Some(node) = job.task(task).state.node().filter(|_| job.task(task).state.is_running())
+        else {
+            self.reject(task, "suspend of non-running task");
+            return;
+        };
+        // Suspension itself is context-count neutral (running → parked);
+        // the scheduler's per-heartbeat context budget is the memory
+        // policy. Log if the node is outside RAM+swap capacity anyway —
+        // that indicates a scheduler accounting bug.
+        if self.cluster.node(node).context_headroom() == 0 {
+            log::debug!("suspending {task} on node {node} with zero context headroom");
+        }
+        let swapped = self.cluster.node_mut(node).suspend_task(task, now);
+        self.mark_swapped(&swapped);
+        let job = self.jobs.get_mut(&task.job).unwrap();
+        job.task_mut(task).suspend(now);
+        job.counts_mut(task.phase).on_suspend();
+        if self.record_timelines {
+            self.timelines.release(task.job, now);
+        }
+        self.counters.suspends += 1;
+    }
+
+    fn do_resume(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef) {
+        let Some(job) = self.jobs.get(&task.job) else {
+            self.reject(task, "resume of unknown job");
+            return;
+        };
+        if !job.task(task).state.is_suspended() {
+            self.reject(task, "resume of non-suspended task");
+            return;
+        }
+        let node = job.task(task).state.node().unwrap();
+        if !self.cluster.node(node).has_free_slot(task.phase) {
+            self.reject(task, "resume without free slot on context node");
+            return;
+        }
+        let (was_swapped, swapped_others) = self.cluster.node_mut(node).resume_task(task);
+        self.mark_swapped(&swapped_others);
+        let swap_delay = if was_swapped {
+            self.counters.swap_ins += 1;
+            self.cluster.node(node).swap_in_delay()
+        } else {
+            0.0
+        };
+        let job = self.jobs.get_mut(&task.job).unwrap();
+        let delay = job.task_mut(task).resume(now, swap_delay);
+        job.counts_mut(task.phase).on_resume();
+        let epoch = job.task(task).epoch;
+        eng.schedule_in(delay, Ev::TaskDone { task, epoch });
+        if self.record_timelines {
+            self.timelines.acquire(task.job, now);
+        }
+        self.counters.resumes += 1;
+    }
+
+    fn do_kill(&mut self, now: Time, task: TaskRef) {
+        let Some(job) = self.jobs.get_mut(&task.job) else {
+            self.reject(task, "kill of unknown job");
+            return;
+        };
+        let state = job.task(task).state;
+        if state.is_running() {
+            let node = state.node().unwrap();
+            self.cluster.node_mut(node).finish_task(task);
+            job.task_mut(task).kill(now);
+            job.counts_mut(task.phase).on_kill_running();
+            if self.record_timelines {
+                self.timelines.release(task.job, now);
+            }
+        } else if state.is_suspended() {
+            let node = state.node().unwrap();
+            self.cluster.node_mut(node).drop_suspended(task);
+            job.task_mut(task).kill(now);
+            job.counts_mut(task.phase).on_kill_suspended();
+            // Slot already released at suspension time.
+        } else {
+            self.reject(task, "kill of non-active task");
+            return;
+        }
+        self.counters.kills += 1;
+    }
+
+    fn mark_swapped(&mut self, tasks: &[TaskRef]) {
+        for &t in tasks {
+            if let Some(job) = self.jobs.get_mut(&t.job) {
+                job.task_mut(t).mark_swapped();
+            }
+        }
+    }
+
+    fn reject(&mut self, task: TaskRef, why: &str) {
+        // A rejected action is a scheduler bug in tests, but production
+        // behaviour is to drop it and continue.
+        log::warn!("rejected action on {task}: {why}");
+        self.counters.rejected_actions += 1;
+        debug_assert!(false, "rejected action on {task}: {why}");
+    }
+
+    fn on_task_done(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef, epoch: u64) {
+        let _ = eng;
+        let Some(job) = self.jobs.get_mut(&task.job) else {
+            return;
+        };
+        {
+            let rt = job.task(task);
+            if !rt.state.is_running() || rt.epoch != epoch {
+                self.counters.stale_completions += 1;
+                return;
+            }
+        }
+        let node = job.task(task).state.node().unwrap();
+        job.task_mut(task).complete(now);
+        job.counts_mut(task.phase).on_complete();
+        self.cluster.node_mut(node).finish_task(task);
+        match task.phase {
+            Phase::Map => job.maps_done += 1,
+            Phase::Reduce => job.reduces_done += 1,
+        }
+        if task.phase == Phase::Map {
+            self.locality.record(job.task(task).local);
+        }
+        if self.record_timelines {
+            self.timelines.release(task.job, now);
+        }
+        let observed = job.task(task).total_work;
+        let finished = job.is_finished();
+        if finished {
+            job.finish_time = Some(now);
+        }
+        // Scheduler callbacks observe post-completion state.
+        {
+            let view = SchedView {
+                jobs: &self.jobs,
+                cluster: &self.cluster,
+                hdfs: &self.hdfs,
+                now,
+            };
+            self.scheduler.on_task_completed(&view, task, observed);
+            if finished {
+                self.scheduler.on_job_finished(&view, task.job);
+            }
+        }
+        if finished {
+            let job = self.jobs[&task.job].clone();
+            self.record_finish(&job);
+            self.finished_jobs += 1;
+            self.hdfs.evict_job(task.job, job.spec.n_maps());
+        }
+    }
+
+    fn on_reduce_progress(&mut self, now: Time, task: TaskRef, epoch: u64, delta: f64) {
+        let progress = {
+            let Some(job) = self.jobs.get(&task.job) else {
+                return;
+            };
+            let rt = job.task(task);
+            if !rt.state.is_running() || rt.epoch != epoch {
+                return; // preempted/completed meanwhile
+            }
+            // Fraction of input processed after Δ seconds: for the
+            // I/O-bound jobs of the FB-dataset this is Δ / total work
+            // (§3.2.1 — the progress embeds any input-size skew).
+            (delta / rt.total_work).clamp(0.0, 1.0)
+        };
+        let view = SchedView {
+            jobs: &self.jobs,
+            cluster: &self.cluster,
+            hdfs: &self.hdfs,
+            now,
+        };
+        self.scheduler.on_reduce_progress(&view, task, delta, progress);
+    }
+
+    fn record_finish(&mut self, job: &Job) {
+        self.sojourn.push(PerJobRecord {
+            job: job.id(),
+            class: job.spec.class,
+            submit: job.spec.submit_time,
+            finish: job.finish_time.expect("finished job has finish_time"),
+            n_maps: job.spec.n_maps(),
+            n_reduces: job.spec.n_reduces(),
+            true_size: job.spec.true_size(),
+        });
+    }
+}

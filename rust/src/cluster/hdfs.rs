@@ -1,0 +1,151 @@
+//! HDFS block placement and locality lookup.
+//!
+//! Each MAP task of a job reads exactly one HDFS block (the paper fixes
+//! block size at 128 MB; the number of map tasks *is* the number of input
+//! partitions). Blocks are placed on `replication` distinct nodes chosen
+//! uniformly at random — the paper explicitly calls out "the random data
+//! placement strategy used by HDFS" when explaining HFSP's 100 % locality
+//! result, so the randomness matters for Fig. 3/locality reproduction.
+
+use crate::job::{JobId, TaskRef};
+use crate::util::rng::{sample_indices, Pcg64};
+use std::collections::HashMap;
+
+/// Block → replica-node mapping for every map task in the system.
+#[derive(Debug)]
+pub struct Hdfs {
+    n_nodes: usize,
+    replication: usize,
+    /// (job, map index) → replica nodes.
+    placements: HashMap<(JobId, u32), Vec<usize>>,
+    rng: Pcg64,
+}
+
+impl Hdfs {
+    pub fn new(n_nodes: usize, replication: usize, rng: Pcg64) -> Self {
+        assert!(n_nodes > 0);
+        Self {
+            n_nodes,
+            replication: replication.min(n_nodes),
+            placements: HashMap::new(),
+            rng,
+        }
+    }
+
+    /// Place the input blocks for a job's map tasks (called at submission;
+    /// in real Hadoop the data pre-exists, but placement is equally random).
+    pub fn place_job(&mut self, job: JobId, n_maps: usize) {
+        for i in 0..n_maps {
+            let nodes = sample_indices(&mut self.rng, self.n_nodes, self.replication);
+            self.placements.insert((job, i as u32), nodes);
+        }
+    }
+
+    /// Replica nodes holding the block read by `task` (map tasks only).
+    pub fn replicas(&self, job: JobId, map_index: u32) -> &[usize] {
+        self.placements
+            .get(&(job, map_index))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Whether a map task's input has a replica on `node`.
+    pub fn is_local(&self, node: usize, task: TaskRef) -> bool {
+        debug_assert_eq!(task.phase, crate::job::Phase::Map);
+        self.replicas(task.job, task.index).contains(&node)
+    }
+
+    /// Drop a finished job's placements (keeps the map bounded over long
+    /// workloads).
+    pub fn evict_job(&mut self, job: JobId, n_maps: usize) {
+        for i in 0..n_maps {
+            self.placements.remove(&(job, i as u32));
+        }
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Phase;
+    use crate::util::rng::SeedableRng;
+
+    fn hdfs(n: usize, r: usize) -> Hdfs {
+        Hdfs::new(n, r, Pcg64::seed_from_u64(1))
+    }
+
+    #[test]
+    fn placement_has_distinct_replicas() {
+        let mut h = hdfs(20, 3);
+        h.place_job(1, 50);
+        for i in 0..50u32 {
+            let reps = h.replicas(1, i);
+            assert_eq!(reps.len(), 3);
+            let mut d = reps.to_vec();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 3, "replicas must be distinct nodes");
+            assert!(reps.iter().all(|&n| n < 20));
+        }
+    }
+
+    #[test]
+    fn replication_clamped_to_cluster_size() {
+        let mut h = hdfs(2, 3);
+        assert_eq!(h.replication(), 2);
+        h.place_job(1, 4);
+        assert_eq!(h.replicas(1, 0).len(), 2);
+    }
+
+    #[test]
+    fn locality_check() {
+        let mut h = hdfs(10, 3);
+        h.place_job(7, 1);
+        let reps: Vec<usize> = h.replicas(7, 0).to_vec();
+        let t = TaskRef {
+            job: 7,
+            phase: Phase::Map,
+            index: 0,
+        };
+        for n in 0..10 {
+            assert_eq!(h.is_local(n, t), reps.contains(&n));
+        }
+    }
+
+    #[test]
+    fn placement_is_roughly_uniform() {
+        let mut h = hdfs(10, 1);
+        h.place_job(1, 10_000);
+        let mut counts = vec![0usize; 10];
+        for i in 0..10_000u32 {
+            counts[h.replicas(1, i)[0]] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn evict_removes_placements() {
+        let mut h = hdfs(5, 2);
+        h.place_job(3, 2);
+        assert!(!h.replicas(3, 1).is_empty());
+        h.evict_job(3, 2);
+        assert!(h.replicas(3, 1).is_empty());
+    }
+
+    #[test]
+    fn missing_placement_is_never_local() {
+        let h = hdfs(5, 2);
+        let t = TaskRef {
+            job: 99,
+            phase: Phase::Map,
+            index: 0,
+        };
+        assert!(!h.is_local(0, t));
+    }
+}

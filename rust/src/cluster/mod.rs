@@ -1,0 +1,22 @@
+//! Simulated Hadoop cluster substrate.
+//!
+//! Models the pieces of Hadoop 0.21 that scheduling decisions observe
+//! (§2.2 of the paper): TaskTracker nodes with fixed MAP/REDUCE slot
+//! counts, an HDFS layer with random block placement and replication
+//! (data locality), periodic heartbeats, and — because HFSP's eager
+//! preemption interacts with the OS — a per-node RAM/swap model that
+//! prices SUSPEND/RESUME.
+//!
+//! The paper's testbed is 100 EC2 "m1.xlarge" instances (4×2 GHz cores,
+//! 15 GB RAM, 4 disks ≈ 1.6 TB), configured with 4 MAP + 2 REDUCE slots
+//! per node and 128 MB HDFS blocks with replication 3; those are the
+//! defaults of [`ClusterConfig`].
+
+pub mod cluster;
+pub mod driver;
+pub mod hdfs;
+pub mod node;
+
+pub use cluster::{Cluster, ClusterConfig};
+pub use hdfs::Hdfs;
+pub use node::Node;

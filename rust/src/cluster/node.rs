@@ -1,0 +1,353 @@
+//! TaskTracker node: slots, running/suspended task sets, RAM/swap model.
+//!
+//! A node owns a fixed number of MAP and REDUCE slots (the paper: 4 + 2
+//! per m1.xlarge). Running tasks occupy slots; **suspended tasks do not**
+//! — that is the whole point of eager preemption (§3.3) — but their JVM
+//! contexts keep occupying memory. The memory model prices that:
+//!
+//! * each task context costs `ram_per_slot_mb` (Hadoop's RAM-per-slot
+//!   configuration, which the paper identifies as the bound on suspension
+//!   cost, §5 "Preemption performance");
+//! * when contexts exceed node RAM, the OS pages the
+//!   longest-suspended context to swap; resuming a swapped context pays
+//!   `ram_per_slot_mb / disk_mbps` seconds of swap-in I/O;
+//! * swap space itself is finite; a node that cannot fit another context
+//!   in RAM+swap refuses further suspensions (HFSP then falls back to
+//!   WAIT via its hysteresis thresholds).
+
+use crate::job::{Phase, TaskRef};
+use crate::sim::Time;
+
+/// Per-node configuration (see [`super::ClusterConfig`] for defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeConfig {
+    pub map_slots: usize,
+    pub reduce_slots: usize,
+    pub ram_mb: f64,
+    pub ram_per_slot_mb: f64,
+    pub swap_mb: f64,
+    pub disk_mbps: f64,
+}
+
+/// A suspended task context parked on this node.
+#[derive(Clone, Debug)]
+struct SuspendedCtx {
+    task: TaskRef,
+    suspended_at: Time,
+    swapped: bool,
+}
+
+/// One TaskTracker.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    cfg: NodeConfig,
+    running_maps: Vec<TaskRef>,
+    running_reduces: Vec<TaskRef>,
+    suspended: Vec<SuspendedCtx>,
+}
+
+impl Node {
+    pub fn new(id: usize, cfg: NodeConfig) -> Self {
+        Self {
+            id,
+            cfg,
+            running_maps: Vec::with_capacity(cfg.map_slots),
+            running_reduces: Vec::with_capacity(cfg.reduce_slots),
+            suspended: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &NodeConfig {
+        &self.cfg
+    }
+
+    pub fn slots(&self, phase: Phase) -> usize {
+        match phase {
+            Phase::Map => self.cfg.map_slots,
+            Phase::Reduce => self.cfg.reduce_slots,
+        }
+    }
+
+    pub fn running(&self, phase: Phase) -> &[TaskRef] {
+        match phase {
+            Phase::Map => &self.running_maps,
+            Phase::Reduce => &self.running_reduces,
+        }
+    }
+
+    pub fn free_slots(&self, phase: Phase) -> usize {
+        self.slots(phase) - self.running(phase).len()
+    }
+
+    pub fn has_free_slot(&self, phase: Phase) -> bool {
+        self.free_slots(phase) > 0
+    }
+
+    /// Tasks suspended on this node (any phase).
+    pub fn suspended_tasks(&self) -> impl Iterator<Item = TaskRef> + '_ {
+        self.suspended.iter().map(|c| c.task)
+    }
+
+    pub fn suspended_count(&self) -> usize {
+        self.suspended.len()
+    }
+
+    pub fn is_suspended_here(&self, task: TaskRef) -> bool {
+        self.suspended.iter().any(|c| c.task == task)
+    }
+
+    // -- memory accounting ---------------------------------------------
+
+    /// MB of RAM used by task contexts (running + suspended-in-RAM).
+    pub fn ram_used_mb(&self) -> f64 {
+        let contexts = self.running_maps.len()
+            + self.running_reduces.len()
+            + self.suspended.iter().filter(|c| !c.swapped).count();
+        contexts as f64 * self.cfg.ram_per_slot_mb
+    }
+
+    pub fn swap_used_mb(&self) -> f64 {
+        self.suspended.iter().filter(|c| c.swapped).count() as f64 * self.cfg.ram_per_slot_mb
+    }
+
+    /// How many additional task contexts (RAM + swap) this node can hold
+    /// beyond the current running + suspended set. Each suspension is
+    /// followed by a backfill launch, so one eager preemption consumes one
+    /// unit of headroom.
+    pub fn context_headroom(&self) -> usize {
+        let ram_slots = (self.cfg.ram_mb / self.cfg.ram_per_slot_mb).floor() as usize;
+        let swap_slots = (self.cfg.swap_mb / self.cfg.ram_per_slot_mb).floor() as usize;
+        let used =
+            self.running_maps.len() + self.running_reduces.len() + self.suspended.len();
+        (ram_slots + swap_slots).saturating_sub(used)
+    }
+
+    /// Can one more suspended context (plus its backfill launch) be
+    /// accommodated in RAM or swap?
+    pub fn can_suspend(&self) -> bool {
+        self.context_headroom() >= 1
+    }
+
+    /// Swap-in delay (seconds) for a paged-out context.
+    pub fn swap_in_delay(&self) -> f64 {
+        self.cfg.ram_per_slot_mb / self.cfg.disk_mbps
+    }
+
+    // -- transitions ------------------------------------------------------
+
+    /// Occupy a slot. Launching may evict the longest-suspended in-RAM
+    /// context to swap (the OS reclaiming memory, §5); returns the list of
+    /// tasks newly swapped so the driver can mark them.
+    pub fn start_task(&mut self, task: TaskRef) -> Vec<TaskRef> {
+        assert!(
+            self.has_free_slot(task.phase),
+            "node {} has no free {} slot",
+            self.id,
+            task.phase.name()
+        );
+        match task.phase {
+            Phase::Map => self.running_maps.push(task),
+            Phase::Reduce => self.running_reduces.push(task),
+        }
+        self.page_out_if_needed()
+    }
+
+    /// Release the slot held by `task` (completion or kill).
+    pub fn finish_task(&mut self, task: TaskRef) {
+        let list = match task.phase {
+            Phase::Map => &mut self.running_maps,
+            Phase::Reduce => &mut self.running_reduces,
+        };
+        let pos = list
+            .iter()
+            .position(|&t| t == task)
+            .unwrap_or_else(|| panic!("task {task} not running on node {}", self.id));
+        list.swap_remove(pos);
+    }
+
+    /// Running → suspended: frees the slot, parks the context (a
+    /// context-count-neutral transition; memory policy lives in the
+    /// scheduler's context budget). Returns tasks whose contexts were
+    /// newly paged out by the added memory pressure.
+    pub fn suspend_task(&mut self, task: TaskRef, now: Time) -> Vec<TaskRef> {
+        self.finish_task(task);
+        self.suspended.push(SuspendedCtx {
+            task,
+            suspended_at: now,
+            swapped: false,
+        });
+        // The context remains in RAM until memory pressure pages it out.
+        self.page_out_if_needed()
+    }
+
+    /// Suspended → running. Returns whether *this* context had been
+    /// swapped (the driver then adds [`Node::swap_in_delay`] to the task's
+    /// work) plus any other tasks paged out by the swap-in.
+    pub fn resume_task(&mut self, task: TaskRef) -> (bool, Vec<TaskRef>) {
+        assert!(self.has_free_slot(task.phase), "resume without free slot");
+        let pos = self
+            .suspended
+            .iter()
+            .position(|c| c.task == task)
+            .unwrap_or_else(|| panic!("task {task} not suspended on node {}", self.id));
+        let ctx = self.suspended.swap_remove(pos);
+        match task.phase {
+            Phase::Map => self.running_maps.push(task),
+            Phase::Reduce => self.running_reduces.push(task),
+        }
+        let swapped_others = self.page_out_if_needed();
+        (ctx.swapped, swapped_others)
+    }
+
+    /// Remove a suspended context entirely (task killed while suspended).
+    pub fn drop_suspended(&mut self, task: TaskRef) {
+        let pos = self
+            .suspended
+            .iter()
+            .position(|c| c.task == task)
+            .unwrap_or_else(|| panic!("task {task} not suspended on node {}", self.id));
+        self.suspended.swap_remove(pos);
+    }
+
+    /// Page out longest-suspended in-RAM contexts until RAM fits. Returns
+    /// the tasks that were swapped by this call.
+    fn page_out_if_needed(&mut self) -> Vec<TaskRef> {
+        let mut swapped = Vec::new();
+        while self.ram_used_mb() > self.cfg.ram_mb {
+            // Oldest suspended in-RAM context is the OS's eviction victim.
+            let victim = self
+                .suspended
+                .iter_mut()
+                .filter(|c| !c.swapped)
+                .min_by(|a, b| a.suspended_at.partial_cmp(&b.suspended_at).unwrap());
+            match victim {
+                Some(ctx) => {
+                    ctx.swapped = true;
+                    swapped.push(ctx.task);
+                }
+                // All contexts already swapped: running set alone exceeds
+                // RAM — the cluster is misconfigured; tolerate (the paper's
+                // §5 discussion assumes RAM-per-slot × slots ≤ RAM).
+                None => break,
+            }
+        }
+        swapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Phase;
+
+    fn cfg() -> NodeConfig {
+        NodeConfig {
+            map_slots: 2,
+            reduce_slots: 1,
+            ram_mb: 6000.0,
+            ram_per_slot_mb: 1900.0,
+            swap_mb: 4000.0,
+            disk_mbps: 400.0,
+        }
+    }
+
+    fn t(job: u64, phase: Phase, index: u32) -> TaskRef {
+        TaskRef { job, phase, index }
+    }
+
+    #[test]
+    fn slot_accounting() {
+        let mut n = Node::new(0, cfg());
+        assert_eq!(n.free_slots(Phase::Map), 2);
+        n.start_task(t(1, Phase::Map, 0));
+        n.start_task(t(1, Phase::Map, 1));
+        assert!(!n.has_free_slot(Phase::Map));
+        assert!(n.has_free_slot(Phase::Reduce));
+        n.finish_task(t(1, Phase::Map, 0));
+        assert_eq!(n.free_slots(Phase::Map), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no free")]
+    fn overcommit_panics() {
+        let mut n = Node::new(0, cfg());
+        n.start_task(t(1, Phase::Reduce, 0));
+        n.start_task(t(2, Phase::Reduce, 0));
+    }
+
+    #[test]
+    fn suspend_frees_slot_and_parks_context() {
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Reduce, 0);
+        n.start_task(a);
+        assert!(!n.has_free_slot(Phase::Reduce));
+        n.suspend_task(a, 10.0);
+        assert!(n.has_free_slot(Phase::Reduce));
+        assert_eq!(n.suspended_count(), 1);
+        assert!(n.is_suspended_here(a));
+    }
+
+    #[test]
+    fn resume_reoccupies_slot() {
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Reduce, 0);
+        n.start_task(a);
+        n.suspend_task(a, 10.0);
+        let (swapped, others) = n.resume_task(a);
+        assert!(!swapped, "no memory pressure: not swapped");
+        assert!(others.is_empty());
+        assert!(!n.has_free_slot(Phase::Reduce));
+        assert_eq!(n.suspended_count(), 0);
+    }
+
+    #[test]
+    fn memory_pressure_pages_out_oldest() {
+        // RAM fits 3 contexts (6000/1900 = 3.15).
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Map, 0);
+        let b = t(2, Phase::Map, 0);
+        n.start_task(a);
+        n.start_task(b);
+        n.suspend_task(a, 1.0); // 1 running + 1 suspended = 2 ctx
+        n.suspend_task(b, 2.0); // 0 running + 2 suspended = 2 ctx
+        // Fill both map slots again: 2 running + 2 suspended = 4 ctx > 3.
+        n.start_task(t(3, Phase::Map, 0));
+        let swapped = n.start_task(t(4, Phase::Map, 0));
+        assert_eq!(swapped, vec![a], "oldest suspension paged out first");
+        assert!(n.swap_used_mb() > 0.0);
+        // Resuming the swapped context reports it.
+        n.finish_task(t(3, Phase::Map, 0));
+        assert!(n.resume_task(a).0);
+    }
+
+    #[test]
+    fn can_suspend_respects_swap_capacity() {
+        let mut small = NodeConfig {
+            swap_mb: 0.0,
+            ram_mb: 1900.0, // fits exactly one context
+            ..cfg()
+        };
+        small.map_slots = 2;
+        let mut n = Node::new(0, small);
+        let a = t(1, Phase::Map, 0);
+        n.start_task(a); // 1 ctx = full RAM
+        assert!(!n.can_suspend(), "no RAM headroom and no swap");
+    }
+
+    #[test]
+    fn swap_in_delay_prices_context_io() {
+        let n = Node::new(0, cfg());
+        assert!((n.swap_in_delay() - 1900.0 / 400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_suspended_removes_context() {
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Map, 0);
+        n.start_task(a);
+        n.suspend_task(a, 0.0);
+        n.drop_suspended(a);
+        assert_eq!(n.suspended_count(), 0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Job and task model.
+//!
+//! A MapReduce job is two phases of tasks (MAP, then REDUCE once the map
+//! output is materialized), following the Hadoop model described in §2.2 of
+//! the paper. Per-task *true* durations are part of the [`JobSpec`] — they
+//! are ground truth known to the simulator but **hidden from schedulers**,
+//! which only observe task completions (and the Δ-progress reports used by
+//! the reduce-size estimator, §3.2.1).
+
+pub mod task;
+
+pub use task::{TaskRef, TaskRuntime, TaskState};
+
+use crate::sim::Time;
+
+/// Job identifier (dense, assigned by the workload generator).
+pub type JobId = u64;
+
+/// MapReduce phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Phase {
+    Map,
+    Reduce,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Map => "map",
+            Phase::Reduce => "reduce",
+        }
+    }
+}
+
+/// Job class, following the FB-dataset clustering of §4.1
+/// (small: 1–2 maps; medium: 5–500 maps; large: the 6 biggest jobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum JobClass {
+    Small,
+    Medium,
+    Large,
+}
+
+impl JobClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobClass::Small => "small",
+            JobClass::Medium => "medium",
+            JobClass::Large => "large",
+        }
+    }
+
+    pub const ALL: [JobClass; 3] = [JobClass::Small, JobClass::Medium, JobClass::Large];
+}
+
+/// Immutable job description produced by the workload generator.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    pub class: JobClass,
+    /// Submission (arrival) time, seconds.
+    pub submit_time: Time,
+    /// True duration of each MAP task, seconds (one HDFS block each).
+    pub map_durations: Vec<f64>,
+    /// True duration of each REDUCE task, seconds.
+    pub reduce_durations: Vec<f64>,
+}
+
+impl JobSpec {
+    pub fn n_maps(&self) -> usize {
+        self.map_durations.len()
+    }
+
+    pub fn n_reduces(&self) -> usize {
+        self.reduce_durations.len()
+    }
+
+    pub fn n_tasks(&self, phase: Phase) -> usize {
+        match phase {
+            Phase::Map => self.n_maps(),
+            Phase::Reduce => self.n_reduces(),
+        }
+    }
+
+    pub fn duration_of(&self, t: TaskRef) -> f64 {
+        debug_assert_eq!(t.job, self.id);
+        match t.phase {
+            Phase::Map => self.map_durations[t.index as usize],
+            Phase::Reduce => self.reduce_durations[t.index as usize],
+        }
+    }
+
+    /// The paper's "serialized" job size for a phase: the **sum** of task
+    /// runtimes, as if executed in series on one slot (§3.1, "The virtual
+    /// cluster"). Ground-truth value, used by tests and the error-injection
+    /// benchmark (Fig. 6).
+    pub fn true_phase_size(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Map => self.map_durations.iter().sum(),
+            Phase::Reduce => self.reduce_durations.iter().sum(),
+        }
+    }
+
+    /// Total serialized work over both phases.
+    pub fn true_size(&self) -> f64 {
+        self.true_phase_size(Phase::Map) + self.true_phase_size(Phase::Reduce)
+    }
+}
+
+/// O(1) per-phase task-state counters, kept in sync by the driver on
+/// every task transition (the schedulers read these on hot paths instead
+/// of scanning task arrays).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseCounts {
+    pub pending: usize,
+    pub running: usize,
+    pub suspended: usize,
+    pub done: usize,
+}
+
+impl PhaseCounts {
+    fn new(n: usize) -> Self {
+        Self {
+            pending: n,
+            ..Default::default()
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.pending + self.running + self.suspended
+    }
+
+    pub fn on_launch(&mut self) {
+        self.pending -= 1;
+        self.running += 1;
+    }
+    pub fn on_suspend(&mut self) {
+        self.running -= 1;
+        self.suspended += 1;
+    }
+    pub fn on_resume(&mut self) {
+        self.suspended -= 1;
+        self.running += 1;
+    }
+    pub fn on_kill_running(&mut self) {
+        self.running -= 1;
+        self.pending += 1;
+    }
+    pub fn on_kill_suspended(&mut self) {
+        self.suspended -= 1;
+        self.pending += 1;
+    }
+    pub fn on_complete(&mut self) {
+        self.running -= 1;
+        self.done += 1;
+    }
+}
+
+/// Runtime state of a job inside the simulator (driver-owned).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub spec: JobSpec,
+    pub maps: Vec<TaskRuntime>,
+    pub reduces: Vec<TaskRuntime>,
+    /// Completion counters (cached; kept in sync by the driver).
+    pub maps_done: usize,
+    pub reduces_done: usize,
+    /// O(1) state counters per phase (driver-maintained).
+    pub map_counts: PhaseCounts,
+    pub reduce_counts: PhaseCounts,
+    /// Set when the last task completes.
+    pub finish_time: Option<Time>,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec) -> Self {
+        let maps: Vec<TaskRuntime> = spec
+            .map_durations
+            .iter()
+            .map(|&d| TaskRuntime::new(d))
+            .collect();
+        let reduces: Vec<TaskRuntime> = spec
+            .reduce_durations
+            .iter()
+            .map(|&d| TaskRuntime::new(d))
+            .collect();
+        let map_counts = PhaseCounts::new(maps.len());
+        let reduce_counts = PhaseCounts::new(reduces.len());
+        Self {
+            spec,
+            maps,
+            reduces,
+            maps_done: 0,
+            reduces_done: 0,
+            map_counts,
+            reduce_counts,
+            finish_time: None,
+        }
+    }
+
+    pub fn counts(&self, phase: Phase) -> &PhaseCounts {
+        match phase {
+            Phase::Map => &self.map_counts,
+            Phase::Reduce => &self.reduce_counts,
+        }
+    }
+
+    pub fn counts_mut(&mut self, phase: Phase) -> &mut PhaseCounts {
+        match phase {
+            Phase::Map => &mut self.map_counts,
+            Phase::Reduce => &mut self.reduce_counts,
+        }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.spec.id
+    }
+
+    pub fn task(&self, t: TaskRef) -> &TaskRuntime {
+        debug_assert_eq!(t.job, self.spec.id);
+        match t.phase {
+            Phase::Map => &self.maps[t.index as usize],
+            Phase::Reduce => &self.reduces[t.index as usize],
+        }
+    }
+
+    pub fn task_mut(&mut self, t: TaskRef) -> &mut TaskRuntime {
+        debug_assert_eq!(t.job, self.spec.id);
+        match t.phase {
+            Phase::Map => &mut self.maps[t.index as usize],
+            Phase::Reduce => &mut self.reduces[t.index as usize],
+        }
+    }
+
+    pub fn tasks(&self, phase: Phase) -> &[TaskRuntime] {
+        match phase {
+            Phase::Map => &self.maps,
+            Phase::Reduce => &self.reduces,
+        }
+    }
+
+    /// All map tasks have finished: reduce tasks become eligible (we model
+    /// Hadoop's slowstart with α = 1: reducers are *scheduled* only when the
+    /// whole intermediate output is available — the same simplification the
+    /// paper's estimator makes, §3.2.1).
+    pub fn map_phase_done(&self) -> bool {
+        self.maps_done == self.maps.len()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.maps_done == self.maps.len() && self.reduces_done == self.reduces.len()
+    }
+
+    /// Number of tasks of `phase` not yet launched (pending, never run or
+    /// re-queued after a kill). O(1) via driver-maintained counters.
+    pub fn pending_tasks(&self, phase: Phase) -> usize {
+        self.counts(phase).pending
+    }
+
+    pub fn running_tasks(&self, phase: Phase) -> usize {
+        self.counts(phase).running
+    }
+
+    pub fn suspended_tasks(&self, phase: Phase) -> usize {
+        self.counts(phase).suspended
+    }
+
+    /// Remaining tasks (pending + running + suspended) of a phase.
+    pub fn remaining_tasks(&self, phase: Phase) -> usize {
+        self.counts(phase).remaining()
+    }
+
+    /// Debug validation: counters must agree with a full scan.
+    #[cfg(debug_assertions)]
+    pub fn validate_counts(&self) {
+        for phase in [Phase::Map, Phase::Reduce] {
+            let scan = |f: fn(&TaskState) -> bool| {
+                self.tasks(phase).iter().filter(|t| f(&t.state)).count()
+            };
+            let c = self.counts(phase);
+            assert_eq!(c.pending, scan(TaskState::is_pending), "pending desync");
+            assert_eq!(c.running, scan(TaskState::is_running), "running desync");
+            assert_eq!(c.suspended, scan(TaskState::is_suspended), "suspended desync");
+            assert_eq!(c.done, scan(TaskState::is_done), "done desync");
+        }
+    }
+
+    /// First pending task index of a phase, if any.
+    pub fn next_pending(&self, phase: Phase) -> Option<TaskRef> {
+        self.tasks(phase)
+            .iter()
+            .position(|t| t.state.is_pending())
+            .map(|i| TaskRef {
+                job: self.spec.id,
+                phase,
+                index: i as u32,
+            })
+    }
+
+    /// Sojourn time (finish − submit), if finished.
+    pub fn sojourn(&self) -> Option<f64> {
+        self.finish_time.map(|f| f - self.spec.submit_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            id: 1,
+            name: "j1".into(),
+            class: JobClass::Medium,
+            submit_time: 10.0,
+            map_durations: vec![5.0, 7.0, 9.0],
+            reduce_durations: vec![20.0],
+        }
+    }
+
+    #[test]
+    fn sizes_are_serialized_sums() {
+        let s = spec();
+        assert_eq!(s.n_maps(), 3);
+        assert_eq!(s.n_reduces(), 1);
+        assert!((s.true_phase_size(Phase::Map) - 21.0).abs() < 1e-12);
+        assert!((s.true_phase_size(Phase::Reduce) - 20.0).abs() < 1e-12);
+        assert!((s.true_size() - 41.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_task_accessors() {
+        let mut j = Job::new(spec());
+        let t = TaskRef {
+            job: 1,
+            phase: Phase::Map,
+            index: 2,
+        };
+        assert_eq!(j.spec.duration_of(t), 9.0);
+        assert!(j.task(t).state.is_pending());
+        j.task_mut(t).state = TaskState::Done;
+        assert!(!j.task(t).state.is_pending());
+    }
+
+    #[test]
+    fn phase_progression() {
+        let mut j = Job::new(spec());
+        assert!(!j.map_phase_done());
+        assert_eq!(j.pending_tasks(Phase::Map), 3);
+        for i in 0..3 {
+            j.maps[i].state = TaskState::Done;
+            j.maps_done += 1;
+        }
+        assert!(j.map_phase_done());
+        assert!(!j.is_finished());
+        j.reduces[0].state = TaskState::Done;
+        j.reduces_done += 1;
+        assert!(j.is_finished());
+    }
+
+    #[test]
+    fn next_pending_scans_in_order() {
+        let mut j = Job::new(spec());
+        assert_eq!(j.next_pending(Phase::Map).unwrap().index, 0);
+        j.maps[0].state = TaskState::Done;
+        assert_eq!(j.next_pending(Phase::Map).unwrap().index, 1);
+    }
+
+    #[test]
+    fn sojourn_requires_finish() {
+        let mut j = Job::new(spec());
+        assert_eq!(j.sojourn(), None);
+        j.finish_time = Some(110.0);
+        assert!((j.sojourn().unwrap() - 100.0).abs() < 1e-12);
+    }
+}

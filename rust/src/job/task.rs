@@ -1,0 +1,307 @@
+//! Task-level runtime state.
+//!
+//! HFSP's eager preemption (§3.3 of the paper) required the authors to
+//! "introduce a new set of states associated to an Hadoop task"; this
+//! module is the simulator's version of that extended state machine:
+//!
+//! ```text
+//!  Pending ──launch──▶ Running ──complete──▶ Done
+//!     ▲                  │  │
+//!     │     (KILL)       │  │ (SUSPEND, SIGSTOP)
+//!     └──────────────────┘  ▼
+//!                        Suspended ──(RESUME, SIGCONT)──▶ Running
+//! ```
+//!
+//! A suspended task remembers its node (resume must happen on the *same
+//! machine*, since its spilled state lives there) and whether its context
+//! was materialized to swap (which prices the resume delay).
+
+use crate::job::{JobId, Phase};
+use crate::sim::Time;
+
+/// Globally unique reference to one task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskRef {
+    pub job: JobId,
+    pub phase: Phase,
+    pub index: u32,
+}
+
+impl std::fmt::Display for TaskRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "j{}/{}[{}]", self.job, self.phase.name(), self.index)
+    }
+}
+
+/// Node identifier within the simulated cluster.
+pub type NodeId = usize;
+
+/// Task state machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskState {
+    /// Not yet launched (or re-queued after a KILL).
+    Pending,
+    /// Occupying a slot on `node`; `started` is this attempt's launch (or
+    /// resume) instant, `remaining_at_start` the work left at that instant.
+    Running {
+        node: NodeId,
+        started: Time,
+        remaining_at_start: f64,
+    },
+    /// SIGSTOPped on `node` with `remaining` seconds of work left;
+    /// `swapped` records whether the OS paged the context out (resume will
+    /// then pay a swap-in delay).
+    Suspended {
+        node: NodeId,
+        remaining: f64,
+        swapped: bool,
+    },
+    Done,
+}
+
+impl TaskState {
+    pub fn is_pending(&self) -> bool {
+        matches!(self, TaskState::Pending)
+    }
+    pub fn is_running(&self) -> bool {
+        matches!(self, TaskState::Running { .. })
+    }
+    pub fn is_suspended(&self) -> bool {
+        matches!(self, TaskState::Suspended { .. })
+    }
+    pub fn is_done(&self) -> bool {
+        matches!(self, TaskState::Done)
+    }
+
+    pub fn node(&self) -> Option<NodeId> {
+        match self {
+            TaskState::Running { node, .. } | TaskState::Suspended { node, .. } => Some(*node),
+            _ => None,
+        }
+    }
+}
+
+/// Per-task mutable runtime bookkeeping (driver-owned).
+#[derive(Clone, Debug)]
+pub struct TaskRuntime {
+    pub state: TaskState,
+    /// True total work of this task, seconds (mirrors the spec; kept here
+    /// so remaining-work math never needs the spec).
+    pub total_work: f64,
+    /// Scheduling epoch: incremented on every launch/suspend/resume/kill.
+    /// Completion events carry the epoch they were scheduled under, letting
+    /// the driver discard events that became stale due to preemption.
+    pub epoch: u64,
+    /// Number of times this task was launched (1 + number of kills).
+    pub attempts: u32,
+    /// Whether the *current/last* attempt reads its block from local disk
+    /// (map tasks only; reduces have no input locality, §3.1).
+    pub local: bool,
+    /// First launch instant (for wait-time metrics).
+    pub first_launch: Option<Time>,
+    /// Completion instant.
+    pub finished_at: Option<Time>,
+    /// Cumulative seconds spent suspended (diagnostics).
+    pub suspended_secs: f64,
+    /// Instant of the last suspension (to integrate `suspended_secs`).
+    pub suspended_since: Option<Time>,
+}
+
+impl TaskRuntime {
+    pub fn new(total_work: f64) -> Self {
+        Self {
+            state: TaskState::Pending,
+            total_work,
+            epoch: 0,
+            attempts: 0,
+            local: false,
+            first_launch: None,
+            finished_at: None,
+            suspended_secs: 0.0,
+            suspended_since: None,
+        }
+    }
+
+    /// Work remaining at time `now` given the current state.
+    pub fn remaining(&self, now: Time) -> f64 {
+        match self.state {
+            TaskState::Pending => self.total_work,
+            TaskState::Running {
+                started,
+                remaining_at_start,
+                ..
+            } => (remaining_at_start - (now - started)).max(0.0),
+            TaskState::Suspended { remaining, .. } => remaining,
+            TaskState::Done => 0.0,
+        }
+    }
+
+    /// Transition Pending → Running. Returns the completion delay.
+    pub fn launch(&mut self, node: NodeId, now: Time, local: bool) -> f64 {
+        assert!(self.state.is_pending(), "launch of non-pending task");
+        self.state = TaskState::Running {
+            node,
+            started: now,
+            remaining_at_start: self.total_work,
+        };
+        self.epoch += 1;
+        self.attempts += 1;
+        self.local = local;
+        if self.first_launch.is_none() {
+            self.first_launch = Some(now);
+        }
+        self.total_work
+    }
+
+    /// Transition Running → Suspended (SIGSTOP).
+    pub fn suspend(&mut self, now: Time) {
+        let TaskState::Running { node, .. } = self.state else {
+            panic!("suspend of non-running task");
+        };
+        let remaining = self.remaining(now);
+        self.state = TaskState::Suspended {
+            node,
+            remaining,
+            swapped: false,
+        };
+        self.epoch += 1;
+        self.suspended_since = Some(now);
+    }
+
+    /// Mark the suspended context as paged out to disk.
+    pub fn mark_swapped(&mut self) {
+        if let TaskState::Suspended { swapped, .. } = &mut self.state {
+            *swapped = true;
+        } else {
+            panic!("mark_swapped of non-suspended task");
+        }
+    }
+
+    /// Transition Suspended → Running (SIGCONT) on the same node. Returns
+    /// the completion delay **including** `swap_in_delay` if the context
+    /// was paged out.
+    pub fn resume(&mut self, now: Time, swap_in_delay: f64) -> f64 {
+        let TaskState::Suspended {
+            node,
+            remaining,
+            swapped,
+        } = self.state
+        else {
+            panic!("resume of non-suspended task");
+        };
+        let delay = if swapped { swap_in_delay } else { 0.0 };
+        self.state = TaskState::Running {
+            node,
+            started: now,
+            remaining_at_start: remaining + delay,
+        };
+        self.epoch += 1;
+        if let Some(since) = self.suspended_since.take() {
+            self.suspended_secs += now - since;
+        }
+        remaining + delay
+    }
+
+    /// Transition Running|Suspended → Pending, losing all work (KILL).
+    pub fn kill(&mut self, now: Time) {
+        assert!(
+            self.state.is_running() || self.state.is_suspended(),
+            "kill of non-active task"
+        );
+        if let Some(since) = self.suspended_since.take() {
+            self.suspended_secs += now - since;
+        }
+        self.state = TaskState::Pending;
+        self.epoch += 1;
+    }
+
+    /// Transition Running → Done.
+    pub fn complete(&mut self, now: Time) {
+        assert!(self.state.is_running(), "complete of non-running task");
+        self.state = TaskState::Done;
+        self.epoch += 1;
+        self.finished_at = Some(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_run_complete() {
+        let mut t = TaskRuntime::new(10.0);
+        let d = t.launch(3, 100.0, true);
+        assert_eq!(d, 10.0);
+        assert!(t.state.is_running());
+        assert_eq!(t.state.node(), Some(3));
+        assert_eq!(t.remaining(104.0), 6.0);
+        t.complete(110.0);
+        assert!(t.state.is_done());
+        assert_eq!(t.finished_at, Some(110.0));
+        assert_eq!(t.attempts, 1);
+    }
+
+    #[test]
+    fn suspend_preserves_remaining_work() {
+        let mut t = TaskRuntime::new(10.0);
+        t.launch(0, 0.0, false);
+        t.suspend(4.0);
+        assert!(t.state.is_suspended());
+        assert_eq!(t.remaining(99.0), 6.0); // frozen while suspended
+        let d = t.resume(50.0, 2.5);
+        assert_eq!(d, 6.0); // not swapped: no delay
+        assert_eq!(t.remaining(53.0), 3.0);
+        assert!((t.suspended_secs - 46.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swapped_resume_pays_delay() {
+        let mut t = TaskRuntime::new(10.0);
+        t.launch(0, 0.0, false);
+        t.suspend(4.0);
+        t.mark_swapped();
+        let d = t.resume(8.0, 2.5);
+        assert!((d - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kill_resets_work() {
+        let mut t = TaskRuntime::new(10.0);
+        t.launch(0, 0.0, true);
+        t.kill(7.0);
+        assert!(t.state.is_pending());
+        assert_eq!(t.remaining(7.0), 10.0);
+        t.launch(1, 8.0, false);
+        assert_eq!(t.attempts, 2);
+    }
+
+    #[test]
+    fn epochs_increment_on_every_transition() {
+        let mut t = TaskRuntime::new(10.0);
+        assert_eq!(t.epoch, 0);
+        t.launch(0, 0.0, false);
+        assert_eq!(t.epoch, 1);
+        t.suspend(1.0);
+        assert_eq!(t.epoch, 2);
+        t.resume(2.0, 0.0);
+        assert_eq!(t.epoch, 3);
+        t.complete(20.0);
+        assert_eq!(t.epoch, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-pending")]
+    fn double_launch_panics() {
+        let mut t = TaskRuntime::new(1.0);
+        t.launch(0, 0.0, false);
+        t.launch(0, 0.0, false);
+    }
+
+    #[test]
+    fn remaining_clamps_at_zero() {
+        let mut t = TaskRuntime::new(5.0);
+        t.launch(0, 0.0, false);
+        assert_eq!(t.remaining(100.0), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! # HFSP — the Hadoop Fair Sojourn Protocol
+//!
+//! A reproduction of *"Practical Size-based Scheduling for MapReduce
+//! Workloads"* (a.k.a. *"HFSP: The Hadoop Fair Sojourn Protocol"*,
+//! Pastorelli, Barbuzzi, Carra, Michiardi, 2013).
+//!
+//! HFSP is a size-based, preemptive job scheduler for Hadoop MapReduce.
+//! It extends the Fair Sojourn Protocol (FSP) of Friedman & Henderson to a
+//! multi-processor, two-phase (MAP/REDUCE) slotted cluster:
+//!
+//! * a **virtual cluster** simulates max-min-fair processor sharing to
+//!   obtain a projected PS completion order ([`scheduler::hfsp::virtual_cluster`]);
+//! * the **real cluster** is scheduled in that order, focusing resources on
+//!   the job that would finish first under PS ([`scheduler::hfsp`]);
+//! * job sizes are **estimated on-line** by a Training module that samples
+//!   task runtimes and fits a task-time distribution
+//!   ([`scheduler::hfsp::training`], [`scheduler::hfsp::estimator`]);
+//! * **preemption** is implemented with SUSPEND/RESUME primitives (with
+//!   WAIT and KILL fallbacks and a hysteresis guard on suspended-task
+//!   memory pressure) ([`scheduler::hfsp::preemption`]).
+//!
+//! The crate is organised as a three-layer system:
+//!
+//! * **L3 (this crate)** — the coordinator: a discrete-event Hadoop cluster
+//!   simulator ([`sim`], [`cluster`]), the schedulers ([`scheduler`]:
+//!   FIFO, FAIR and HFSP), the SWIM-like workload generator ([`workload`]),
+//!   metrics and report generation ([`metrics`], [`report`]).
+//! * **L2/L1 (python, build time only)** — the estimator compute graph and
+//!   its Pallas kernels, AOT-lowered to HLO text artifacts.
+//! * **runtime** — loads the artifacts through PJRT and executes them from
+//!   the scheduler hot path ([`runtime`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hfsp::prelude::*;
+//!
+//! let cfg = SimConfig::default();
+//! let workload = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+//! let outcome = run_simulation(&cfg, SchedulerKind::Hfsp(HfspConfig::default()), &workload);
+//! println!("mean sojourn: {:.1}s", outcome.sojourn.mean());
+//! ```
+
+pub mod bench;
+pub mod cluster;
+pub mod job;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports of the most frequently used types.
+pub mod prelude {
+    pub use crate::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+    pub use crate::cluster::ClusterConfig;
+    pub use crate::job::{JobClass, JobId, JobSpec, Phase};
+    pub use crate::metrics::sojourn::SojournStats;
+    pub use crate::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    pub use crate::scheduler::SchedulerKind;
+    pub use crate::util::rng::{Pcg64, Rng, SeedableRng};
+    pub use crate::workload::swim::FbWorkload;
+    pub use crate::workload::Workload;
+}

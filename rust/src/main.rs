@@ -1,0 +1,282 @@
+//! `hfsp` — launcher CLI for the HFSP reproduction.
+//!
+//! Subcommands:
+//!
+//! * `workload-gen` — synthesize an FB-dataset trace (SWIM-like, §4.1);
+//! * `simulate` — run one scheduler over a workload and report sojourn
+//!   statistics;
+//! * `compare` — run FIFO, FAIR and HFSP on the *same* workload and print
+//!   the paper-style comparison table;
+//! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use hfsp::cluster::ClusterConfig;
+use hfsp::job::JobClass;
+use hfsp::report;
+use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::cli::{Cli, Command, Parsed};
+use hfsp::util::json::Json;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use hfsp::workload::{synthetic, trace, Workload};
+use std::path::{Path, PathBuf};
+
+fn cli() -> Cli {
+    Cli {
+        about: "hfsp — Hadoop Fair Sojourn Protocol reproduction",
+        commands: vec![
+            Command::new("workload-gen", "synthesize an FB-dataset workload trace")
+                .flag("seed", "42", "rng seed")
+                .flag("scale", "1.0", "scale job counts by this factor")
+                .flag("out", "", "output trace path (JSONL, required)"),
+            Command::new("simulate", "run one scheduler over a workload")
+                .flag("scheduler", "hfsp", "fifo | fair | hfsp")
+                .flag("nodes", "100", "cluster size")
+                .flag("map-slots", "4", "map slots per node")
+                .flag("reduce-slots", "2", "reduce slots per node")
+                .flag("seed", "42", "rng seed (workload + placement)")
+                .flag("trace", "", "replay this JSONL trace instead of generating")
+                .flag("preemption", "suspend", "hfsp preemption: suspend | wait | kill")
+                .flag("estimator", "native", "hfsp estimator: native | mean | xla")
+                .flag("maxmin", "native", "hfsp max-min backend: native | xla")
+                .flag("artifacts", "artifacts", "artifact dir for xla backends")
+                .flag("out", "", "write JSON outcome summary here")
+                .switch("timelines", "record per-job slot timelines")
+                .switch("per-class", "print per-class sojourn breakdown"),
+            Command::new("compare", "run FIFO, FAIR and HFSP on the same workload")
+                .flag("nodes", "100", "cluster size")
+                .flag("seed", "42", "rng seed")
+                .flag("trace", "", "replay this JSONL trace instead of generating")
+                .flag("out", "", "write JSON outcome summary here"),
+            Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
+                .flag("slots", "4", "single-node slot count"),
+        ],
+    }
+}
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    match cli().parse(argv)? {
+        Parsed::Help(text) => {
+            println!("{text}");
+            Ok(())
+        }
+        Parsed::Command("workload-gen", args) => {
+            let seed: u64 = args.require("seed")?;
+            let scale: f64 = args.require("scale")?;
+            let out: PathBuf = args.require("out")?;
+            let wl = FbWorkload::scaled(scale).generate(&mut Pcg64::seed_from_u64(seed));
+            trace::write_trace(&wl, &out)?;
+            println!(
+                "wrote {} jobs ({} tasks, {:.0} s serialized work) to {}",
+                wl.len(),
+                wl.total_tasks(),
+                wl.total_work(),
+                out.display()
+            );
+            Ok(())
+        }
+        Parsed::Command("simulate", args) => {
+            let kind = scheduler_from_args(&args)?;
+            let (cfg, wl) = sim_setup(&args)?;
+            let outcome = run_simulation(&cfg, kind, &wl);
+            print_outcome(&outcome, args.get_bool("per-class"));
+            maybe_write_json(args.get("out"), &[&outcome])?;
+            Ok(())
+        }
+        Parsed::Command("compare", args) => {
+            let (cfg, wl) = sim_setup(&args)?;
+            let outcomes: Vec<SimOutcome> = [
+                SchedulerKind::Fifo,
+                SchedulerKind::Fair(Default::default()),
+                SchedulerKind::Hfsp(HfspConfig::default()),
+            ]
+            .into_iter()
+            .map(|kind| run_simulation(&cfg, kind, &wl))
+            .collect();
+            let rows: Vec<Vec<String>> = outcomes
+                .iter()
+                .map(|o| {
+                    vec![
+                        o.scheduler.to_string(),
+                        format!("{:.0}", o.sojourn.mean()),
+                        format!("{:.0}", o.sojourn.mean_class(JobClass::Small)),
+                        format!("{:.0}", o.sojourn.mean_class(JobClass::Medium)),
+                        format!("{:.0}", o.sojourn.mean_class(JobClass::Large)),
+                        format!("{:.1}%", o.locality.fraction_local() * 100.0),
+                        format!("{:.0}", o.makespan),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(
+                    &[
+                        "scheduler",
+                        "mean sojourn (s)",
+                        "small (s)",
+                        "medium (s)",
+                        "large (s)",
+                        "map locality",
+                        "makespan (s)"
+                    ],
+                    &rows
+                )
+            );
+            let refs: Vec<&SimOutcome> = outcomes.iter().collect();
+            maybe_write_json(args.get("out"), &refs)?;
+            Ok(())
+        }
+        Parsed::Command("fsp-demo", args) => {
+            let slots: usize = args.require("slots")?;
+            fsp_demo(slots);
+            Ok(())
+        }
+        Parsed::Command(other, _) => anyhow::bail!("unhandled subcommand {other}"),
+    }
+}
+
+fn scheduler_from_args(args: &hfsp::util::cli::Args) -> anyhow::Result<SchedulerKind> {
+    let name = args.get("scheduler").unwrap_or("hfsp");
+    let mut kind = SchedulerKind::from_name(name)?;
+    if let SchedulerKind::Hfsp(cfg) = &mut kind {
+        cfg.preemption = PreemptionPrimitive::from_name(args.get("preemption").unwrap_or("suspend"))?;
+        let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+        cfg.estimator = match args.get("estimator").unwrap_or("native") {
+            "native" => EstimatorKind::Native,
+            "mean" => EstimatorKind::Mean,
+            "xla" => EstimatorKind::Xla {
+                artifact_dir: artifacts.clone(),
+            },
+            other => anyhow::bail!("unknown estimator {other:?}"),
+        };
+        cfg.maxmin = match args.get("maxmin").unwrap_or("native") {
+            "native" => MaxMinKind::Native,
+            "xla" => MaxMinKind::Xla {
+                artifact_dir: artifacts,
+            },
+            other => anyhow::bail!("unknown maxmin backend {other:?}"),
+        };
+    }
+    Ok(kind)
+}
+
+fn sim_setup(args: &hfsp::util::cli::Args) -> anyhow::Result<(SimConfig, Workload)> {
+    let seed: u64 = args.require("seed")?;
+    let nodes: usize = args.require("nodes")?;
+    let mut cluster = ClusterConfig {
+        nodes,
+        ..Default::default()
+    };
+    if let Some(ms) = args.get_parsed::<usize>("map-slots")? {
+        cluster.map_slots = ms;
+    }
+    if let Some(rs) = args.get_parsed::<usize>("reduce-slots")? {
+        cluster.reduce_slots = rs;
+    }
+    let cfg = SimConfig {
+        cluster,
+        seed,
+        record_timelines: args.get_bool("timelines"),
+        ..Default::default()
+    };
+    let wl = match args.get("trace") {
+        Some(path) => trace::read_trace(Path::new(path))?,
+        None => FbWorkload::default().generate(&mut Pcg64::seed_from_u64(seed)),
+    };
+    Ok((cfg, wl))
+}
+
+fn print_outcome(o: &SimOutcome, per_class: bool) {
+    println!(
+        "{} on {:<14} mean sojourn {:>8.1} s | {} jobs | locality {:.1}% | makespan {:.0} s | {} events in {:.0} ms",
+        o.scheduler,
+        o.workload,
+        o.sojourn.mean(),
+        o.sojourn.len(),
+        o.locality.fraction_local() * 100.0,
+        o.makespan,
+        o.events_processed,
+        o.wall_ms
+    );
+    if per_class {
+        for class in JobClass::ALL {
+            let m = o.sojourn.mean_class(class);
+            if !m.is_nan() {
+                println!("  {:<8} mean sojourn {:>8.1} s", class.name(), m);
+            }
+        }
+        let c = o.counters;
+        println!(
+            "  launches {} suspends {} resumes {} kills {} swap-ins {}",
+            c.launches, c.suspends, c.resumes, c.kills, c.swap_ins
+        );
+    }
+}
+
+fn maybe_write_json(path: Option<&str>, outcomes: &[&SimOutcome]) -> anyhow::Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let arr: Vec<Json> = outcomes
+        .iter()
+        .map(|o| {
+            let mut j = o.sojourn.to_json();
+            j.set("scheduler", o.scheduler.into());
+            j.set("workload", o.workload.as_str().into());
+            j.set("makespan_s", o.makespan.into());
+            j.set("locality", o.locality.to_json());
+            j.set("events", o.events_processed.into());
+            j
+        })
+        .collect();
+    std::fs::write(path, Json::Arr(arr).to_string_pretty())?;
+    println!("wrote outcome summary to {path}");
+    Ok(())
+}
+
+/// Print the Fig. 1 / Fig. 2 PS-vs-FSP intuition using the simulator on a
+/// single node.
+fn fsp_demo(slots: usize) {
+    let cluster = ClusterConfig {
+        nodes: 1,
+        map_slots: slots,
+        reduce_slots: 1,
+        heartbeat_s: 0.5,
+        ..Default::default()
+    };
+    let cfg = SimConfig {
+        cluster,
+        record_timelines: true,
+        ..Default::default()
+    };
+    for (label, wl) in [
+        ("Fig.1 (full-width jobs)", synthetic::fig1_workload(slots, 6)),
+        ("Fig.2 (fractional jobs)", synthetic::fig2_workload(slots, 6)),
+    ] {
+        println!("=== {label} ===");
+        for kind in [
+            SchedulerKind::Fair(Default::default()),
+            SchedulerKind::Hfsp(HfspConfig::default()),
+        ] {
+            let o = run_simulation(&cfg, kind, &wl);
+            println!(
+                "--- {} (mean sojourn {:.1} s) ---",
+                o.scheduler,
+                o.sojourn.mean()
+            );
+            print!("{}", o.timelines.ascii_chart(0.0, o.makespan, 72));
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Data-locality accounting (§4.3 "Impact of data locality").
+//!
+//! Counts, over MAP tasks only, how many attempts read their block from
+//! the local disk of the machine they ran on. The paper reports FAIR at
+//! 98 % and HFSP at 100 % across >14 000 tasks.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocalityStats {
+    pub local: u64,
+    pub remote: u64,
+}
+
+impl LocalityStats {
+    pub fn record(&mut self, local: bool) {
+        if local {
+            self.local += 1;
+        } else {
+            self.remote += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.local + self.remote
+    }
+
+    /// Fraction of local map tasks in `[0, 1]`; NaN when empty.
+    pub fn fraction_local(&self) -> f64 {
+        if self.total() == 0 {
+            f64::NAN
+        } else {
+            self.local as f64 / self.total() as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &LocalityStats) {
+        self.local += other.local;
+        self.remote += other.remote;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("local_map_tasks", self.local.into());
+        o.set("remote_map_tasks", self.remote.into());
+        o.set("fraction_local", self.fraction_local().into());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_computation() {
+        let mut l = LocalityStats::default();
+        for _ in 0..98 {
+            l.record(true);
+        }
+        for _ in 0..2 {
+            l.record(false);
+        }
+        assert_eq!(l.total(), 100);
+        assert!((l.fraction_local() - 0.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(LocalityStats::default().fraction_local().is_nan());
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = LocalityStats { local: 3, remote: 1 };
+        a.merge(&LocalityStats { local: 1, remote: 1 });
+        assert_eq!(a.local, 4);
+        assert_eq!(a.remote, 2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Measurement pipeline: sojourn statistics, locality counters, slot
+//! timelines and their JSON export.
+
+pub mod locality;
+pub mod sojourn;
+
+pub use locality::LocalityStats;
+pub use sojourn::{PerJobRecord, SojournStats};

@@ -1,0 +1,178 @@
+//! Job sojourn-time accounting.
+//!
+//! The paper's headline metric is the **sojourn time**: total time a job
+//! spends in the system, waiting plus service (§1, §2). This module
+//! collects per-job records and per-class summaries (the clustering of
+//! Fig. 3) and produces ECDF series.
+
+use crate::job::{JobClass, JobId};
+use crate::util::json::Json;
+use crate::util::stats::{Ecdf, Moments};
+use std::collections::BTreeMap;
+
+/// One finished job's outcome.
+#[derive(Clone, Debug)]
+pub struct PerJobRecord {
+    pub job: JobId,
+    pub class: JobClass,
+    pub submit: f64,
+    pub finish: f64,
+    pub n_maps: usize,
+    pub n_reduces: usize,
+    /// Serialized true size (map + reduce), seconds.
+    pub true_size: f64,
+}
+
+impl PerJobRecord {
+    pub fn sojourn(&self) -> f64 {
+        self.finish - self.submit
+    }
+}
+
+/// Collection of sojourn outcomes.
+#[derive(Clone, Debug, Default)]
+pub struct SojournStats {
+    records: Vec<PerJobRecord>,
+}
+
+impl SojournStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: PerJobRecord) {
+        debug_assert!(rec.finish >= rec.submit, "finish before submit");
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[PerJobRecord] {
+        &self.records
+    }
+
+    pub fn sojourns(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.sojourn()).collect()
+    }
+
+    /// Mean sojourn over all jobs.
+    pub fn mean(&self) -> f64 {
+        let mut m = Moments::new();
+        for r in &self.records {
+            m.push(r.sojourn());
+        }
+        m.mean()
+    }
+
+    /// Mean sojourn restricted to one class.
+    pub fn mean_class(&self, class: JobClass) -> f64 {
+        let mut m = Moments::new();
+        for r in self.records.iter().filter(|r| r.class == class) {
+            m.push(r.sojourn());
+        }
+        m.mean()
+    }
+
+    /// ECDF of sojourn times for a class (Fig. 3 series); `None` for the
+    /// all-jobs ECDF.
+    pub fn ecdf(&self, class: Option<JobClass>) -> Ecdf {
+        Ecdf::new(
+            self.records
+                .iter()
+                .filter(|r| class.map(|c| r.class == c).unwrap_or(true))
+                .map(|r| r.sojourn())
+                .collect(),
+        )
+    }
+
+    /// Per-job sojourn, keyed by job id — used for the Fig. 4 FAIR−HFSP
+    /// per-job difference.
+    pub fn by_job(&self) -> BTreeMap<JobId, f64> {
+        self.records.iter().map(|r| (r.job, r.sojourn())).collect()
+    }
+
+    /// Class counts (sanity checks).
+    pub fn class_counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut m = BTreeMap::new();
+        for r in &self.records {
+            *m.entry(r.class.name()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// JSON summary (mean / per-class means / count).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("jobs", self.len().into());
+        o.set("mean_sojourn_s", self.mean().into());
+        for class in JobClass::ALL {
+            let m = self.mean_class(class);
+            if !m.is_nan() {
+                o.set(&format!("mean_sojourn_{}_s", class.name()), m.into());
+            }
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(job: JobId, class: JobClass, submit: f64, finish: f64) -> PerJobRecord {
+        PerJobRecord {
+            job,
+            class,
+            submit,
+            finish,
+            n_maps: 1,
+            n_reduces: 0,
+            true_size: 10.0,
+        }
+    }
+
+    #[test]
+    fn mean_and_class_means() {
+        let mut s = SojournStats::new();
+        s.push(rec(1, JobClass::Small, 0.0, 10.0));
+        s.push(rec(2, JobClass::Small, 0.0, 20.0));
+        s.push(rec(3, JobClass::Large, 0.0, 100.0));
+        assert!((s.mean() - (10.0 + 20.0 + 100.0) / 3.0).abs() < 1e-12);
+        assert!((s.mean_class(JobClass::Small) - 15.0).abs() < 1e-12);
+        assert!((s.mean_class(JobClass::Large) - 100.0).abs() < 1e-12);
+        assert!(s.mean_class(JobClass::Medium).is_nan());
+    }
+
+    #[test]
+    fn ecdf_filters_class() {
+        let mut s = SojournStats::new();
+        s.push(rec(1, JobClass::Small, 0.0, 10.0));
+        s.push(rec(2, JobClass::Large, 0.0, 100.0));
+        assert_eq!(s.ecdf(Some(JobClass::Small)).len(), 1);
+        assert_eq!(s.ecdf(None).len(), 2);
+    }
+
+    #[test]
+    fn by_job_maps_ids() {
+        let mut s = SojournStats::new();
+        s.push(rec(7, JobClass::Small, 5.0, 11.0));
+        assert!((s.by_job()[&7] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_summary_has_fields() {
+        let mut s = SojournStats::new();
+        s.push(rec(1, JobClass::Small, 0.0, 4.0));
+        let j = s.to_json();
+        assert_eq!(j.get("jobs").unwrap().as_u64(), Some(1));
+        assert!(j.get("mean_sojourn_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("mean_sojourn_small_s").is_some());
+        assert!(j.get("mean_sojourn_large_s").is_none());
+    }
+}

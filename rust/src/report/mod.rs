@@ -1,0 +1,226 @@
+//! Figure/table regeneration: CSV series + ASCII charts.
+//!
+//! Every bench target reproduces one paper figure or table; this module
+//! renders the measured series in two forms — machine-readable CSV (saved
+//! under `reports/`) and a terminal ASCII chart whose *shape* can be
+//! compared against the paper at a glance.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A labelled (x, y) series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Self {
+            label: label.into(),
+            points,
+        }
+    }
+}
+
+/// Render series as CSV: `x,label1,label2,...` — series are resampled on
+/// the union of x values (missing points are left empty).
+pub fn to_csv(series: &[Series]) -> String {
+    let mut xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|&(x, _)| x))
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    let mut out = String::from("x");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.label.replace(',', ";"));
+    }
+    out.push('\n');
+    for &x in &xs {
+        out.push_str(&format!("{x}"));
+        for s in series {
+            out.push(',');
+            if let Some(&(_, y)) = s
+                .points
+                .iter()
+                .find(|&&(px, _)| (px - x).abs() < 1e-12)
+            {
+                out.push_str(&format!("{y}"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Persist CSV under the given path, creating parent directories.
+pub fn write_csv(path: &Path, series: &[Series]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_csv(series).as_bytes())?;
+    Ok(())
+}
+
+/// ASCII line chart. One glyph per series ('A', 'B', ...). Optional log-x
+/// (sojourn ECDFs span decades). Returns the rendered string.
+pub fn ascii_chart(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    log_x: bool,
+) -> String {
+    assert!(width >= 16 && height >= 4);
+    let tx = |x: f64| if log_x { x.max(1e-9).log10() } else { x };
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in series {
+        for &(x, y) in &s.points {
+            let x = tx(x);
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+    }
+    if !x0.is_finite() || x1 <= x0 {
+        x0 = 0.0;
+        x1 = 1.0;
+    }
+    if !y0.is_finite() || y1 <= y0 {
+        y0 = 0.0;
+        y1 = 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = (b'A' + (si % 26) as u8) as char;
+        for &(x, y) in &s.points {
+            let cx = ((tx(x) - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            let col = cx.min(width - 1);
+            grid[row][col] = glyph;
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    for (si, s) in series.iter().enumerate() {
+        let glyph = (b'A' + (si % 26) as u8) as char;
+        out.push_str(&format!("  [{glyph}] {}\n", s.label));
+    }
+    out.push_str(&format!("  y: [{y0:.3}, {y1:.3}]\n"));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    let xlabel = if log_x {
+        format!("  x (log10): [{x0:.2}, {x1:.2}]")
+    } else {
+        format!("  x: [{x0:.2}, {x1:.2}]")
+    };
+    out.push_str(&xlabel);
+    out.push('\n');
+    out
+}
+
+/// Simple aligned table (paper-style "who wins by how much").
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string() + "\n"
+    };
+    out.push_str(&fmt_row(
+        headers.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    out.push_str(&fmt_row(
+        widths.iter().map(|w| "-".repeat(*w)).collect(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_merges_x_values() {
+        let s = vec![
+            Series::new("a", vec![(1.0, 10.0), (2.0, 20.0)]),
+            Series::new("b", vec![(2.0, 5.0), (3.0, 6.0)]),
+        ];
+        let csv = to_csv(&s);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].starts_with("2,20,5"));
+        assert!(lines[1].ends_with(',')); // b missing at x=1
+    }
+
+    #[test]
+    fn ascii_chart_renders_all_series() {
+        let s = vec![
+            Series::new("hfsp", (0..20).map(|i| (i as f64, i as f64)).collect()),
+            Series::new("fair", (0..20).map(|i| (i as f64, 2.0 * i as f64)).collect()),
+        ];
+        let chart = ascii_chart("test", &s, 40, 10, false);
+        assert!(chart.contains("[A] hfsp"));
+        assert!(chart.contains("[B] fair"));
+        assert!(chart.contains('A'));
+        assert!(chart.contains('B'));
+    }
+
+    #[test]
+    fn ascii_chart_log_x() {
+        let s = vec![Series::new(
+            "e",
+            vec![(1.0, 0.0), (10.0, 0.5), (100.0, 1.0)],
+        )];
+        let chart = ascii_chart("ecdf", &s, 30, 6, true);
+        assert!(chart.contains("log10"));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["scheduler", "mean sojourn"],
+            &[
+                vec!["HFSP".into(), "551".into()],
+                vec!["FIFO".into(), "2983".into()],
+            ],
+        );
+        assert!(t.contains("| HFSP"));
+        assert!(t.contains("| 2983"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn csv_writes_to_disk() {
+        let dir = std::env::temp_dir().join("hfsp-report-test");
+        let path = dir.join("series.csv");
+        write_csv(&path, &[Series::new("a", vec![(0.0, 1.0)])]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("x,a"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,111 @@
+//! Artifact manifest and set loading.
+//!
+//! `python/compile/aot.py` writes, next to the HLO text files, a
+//! `manifest.json` recording the static shapes each artifact was lowered
+//! with:
+//!
+//! ```json
+//! {"estimator": {"batch": 8, "samples": 8},
+//!  "maxmin":    {"jobs": 256, "iters": 64},
+//!  "jax": "0.8.2"}
+//! ```
+//!
+//! The rust side pads its inputs to those shapes; the manifest keeps the
+//! two layers honest (shape drift fails loudly at load time, not with
+//! silent garbage at execute time).
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Static shapes the artifacts were compiled for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactManifest {
+    /// Estimator batch rows.
+    pub est_batch: usize,
+    /// Estimator max sample-set size.
+    pub est_samples: usize,
+    /// Max-min job-vector length.
+    pub maxmin_jobs: usize,
+    /// Water-level bisection iterations compiled into the kernel.
+    pub maxmin_iters: usize,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let field = |obj: &str, key: &str| -> anyhow::Result<usize> {
+            v.get(obj)
+                .and_then(|o| o.get(key))
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {obj}.{key}"))
+        };
+        Ok(Self {
+            est_batch: field("estimator", "batch")?,
+            est_samples: field("estimator", "samples")?,
+            maxmin_jobs: field("maxmin", "jobs")?,
+            maxmin_iters: field("maxmin", "iters")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+}
+
+/// A loaded artifact set sharing one PJRT client.
+pub struct ArtifactSet {
+    pub manifest: ArtifactManifest,
+    pub client: Rc<xla::PjRtClient>,
+    pub estimator: xla::PjRtLoadedExecutable,
+    pub maxmin: xla::PjRtLoadedExecutable,
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Load and compile both artifacts from `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactSet> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = Rc::new(
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?,
+        );
+        let estimator = super::load_hlo_text(&client, &dir.join("estimator.hlo.txt"))?;
+        let maxmin = super::load_hlo_text(&client, &dir.join("maxmin.hlo.txt"))?;
+        Ok(ArtifactSet {
+            manifest,
+            client,
+            estimator,
+            maxmin,
+            dir: dir.to_path_buf(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "estimator": {"batch": 8, "samples": 8},
+            "maxmin": {"jobs": 256, "iters": 64},
+            "jax": "0.8.2"
+        }"#;
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.est_batch, 8);
+        assert_eq!(m.est_samples, 8);
+        assert_eq!(m.maxmin_jobs, 256);
+        assert_eq!(m.maxmin_iters, 64);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(ArtifactManifest::parse(r#"{"estimator": {"batch": 8}}"#).is_err());
+        assert!(ArtifactManifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Typed executors over the AOT artifacts: padding, execution, unpadding.
+//!
+//! Both artifacts are lowered with `return_tuple=True`, so every result is
+//! a 1-tuple that must be unwrapped with `to_tuple1`.
+
+use super::artifacts::ArtifactSet;
+use anyhow::Result;
+use std::path::Path;
+use std::rc::Rc;
+
+fn run_one(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<f32>> {
+    let out = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow::anyhow!("PJRT execute: {e}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("PJRT to_literal: {e}"))?;
+    let inner = lit
+        .to_tuple1()
+        .map_err(|e| anyhow::anyhow!("unwrapping 1-tuple result: {e}"))?;
+    inner
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("reading f32 result: {e}"))
+}
+
+/// Batched size-estimator executor.
+///
+/// Artifact signature (see `python/compile/model.py`):
+/// `(samples f32[B,S], mask f32[B,S], n_tasks f32[B]) -> (sizes f32[B])`.
+pub struct EstimatorExec {
+    set: Rc<ArtifactSet>,
+}
+
+impl EstimatorExec {
+    pub fn new(set: Rc<ArtifactSet>) -> Self {
+        Self { set }
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Self::new(Rc::new(ArtifactSet::load(dir)?)))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.set.manifest.est_batch
+    }
+
+    pub fn max_samples(&self) -> usize {
+        self.set.manifest.est_samples
+    }
+
+    /// Estimate phase sizes for up to `batch()` jobs at once. Each entry
+    /// is `(samples, n_tasks)`; samples beyond `max_samples()` are
+    /// truncated (the paper's sample set is 5 ≤ S).
+    pub fn estimate_batch(&self, jobs: &[(&[f64], usize)]) -> Result<Vec<f64>> {
+        let b = self.batch();
+        let s = self.max_samples();
+        anyhow::ensure!(
+            jobs.len() <= b,
+            "estimator batch {} exceeds artifact batch {b}",
+            jobs.len()
+        );
+        let mut samples = vec![0f32; b * s];
+        let mut mask = vec![0f32; b * s];
+        let mut n_tasks = vec![0f32; b];
+        for (row, (xs, n)) in jobs.iter().enumerate() {
+            let take = xs.len().min(s);
+            if xs.len() > s {
+                log::debug!("estimator: truncating {} samples to artifact S={s}", xs.len());
+            }
+            for (k, &x) in xs.iter().take(take).enumerate() {
+                samples[row * s + k] = x as f32;
+                mask[row * s + k] = 1.0;
+            }
+            n_tasks[row] = *n as f32;
+        }
+        let lit_samples = xla::Literal::vec1(&samples)
+            .reshape(&[b as i64, s as i64])
+            .map_err(|e| anyhow::anyhow!("reshape samples: {e}"))?;
+        let lit_mask = xla::Literal::vec1(&mask)
+            .reshape(&[b as i64, s as i64])
+            .map_err(|e| anyhow::anyhow!("reshape mask: {e}"))?;
+        let lit_n = xla::Literal::vec1(&n_tasks);
+        let out = run_one(&self.set.estimator, &[lit_samples, lit_mask, lit_n])?;
+        anyhow::ensure!(out.len() == b, "estimator returned {} values", out.len());
+        Ok(out[..jobs.len()].iter().map(|&x| x as f64).collect())
+    }
+
+    /// Single-job convenience wrapper.
+    pub fn estimate_one(&self, samples: &[f64], n_tasks: usize) -> Result<f64> {
+        Ok(self.estimate_batch(&[(samples, n_tasks)])?[0])
+    }
+}
+
+/// Max-min (water-filling) allocation executor.
+///
+/// Artifact signature: `(demands f32[N], capacity f32[]) -> (alloc f32[N])`.
+pub struct MaxMinExec {
+    set: Rc<ArtifactSet>,
+}
+
+impl MaxMinExec {
+    pub fn new(set: Rc<ArtifactSet>) -> Self {
+        Self { set }
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Self::new(Rc::new(ArtifactSet::load(dir)?)))
+    }
+
+    pub fn max_jobs(&self) -> usize {
+        self.set.manifest.maxmin_jobs
+    }
+
+    /// Max-min fair allocation of `capacity` over `demands`
+    /// (`demands.len() ≤ max_jobs()`).
+    pub fn allocate(&self, demands: &[f64], capacity: f64) -> Result<Vec<f64>> {
+        let n = self.max_jobs();
+        anyhow::ensure!(
+            demands.len() <= n,
+            "maxmin demand vector {} exceeds artifact N={n}",
+            demands.len()
+        );
+        let mut d = vec![0f32; n];
+        for (i, &x) in demands.iter().enumerate() {
+            d[i] = x as f32;
+        }
+        let lit_d = xla::Literal::vec1(&d);
+        let lit_cap = xla::Literal::scalar(capacity as f32);
+        let out = run_one(&self.set.maxmin, &[lit_d, lit_cap])?;
+        anyhow::ensure!(out.len() == n, "maxmin returned {} values", out.len());
+        Ok(out[..demands.len()].iter().map(|&x| x as f64).collect())
+    }
+}

@@ -1,0 +1,41 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, build-time only) lowers the
+//! L2 JAX graphs to **HLO text** in `artifacts/`; this module loads them
+//! through the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → compile → execute) and exposes
+//! typed, padded executors to the scheduler hot path. Python is never on
+//! the request path.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod executors;
+
+pub use artifacts::{ArtifactManifest, ArtifactSet};
+pub use executors::{EstimatorExec, MaxMinExec};
+
+use std::path::Path;
+
+/// Compile an HLO-text artifact on the CPU PJRT client.
+pub fn load_hlo_text(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {path:?} on PJRT: {e}"))
+}
+
+/// Default artifact directory: `$HFSP_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("HFSP_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,195 @@
+//! The Hadoop Fair Scheduler ("FAIR", §2.2 of the paper), with delay
+//! scheduling (Zaharia et al.).
+//!
+//! FAIR groups jobs into pools with guaranteed minimum shares; the paper's
+//! experiments use the default configuration — a **single pool** with no
+//! minimum share — so the discipline reduces to: split slots evenly among
+//! runnable jobs, scheduling each free slot to the job *furthest below its
+//! fair share* (Hadoop's "deficit" ordering; we use the
+//! running-tasks-per-weight ordering of the fair scheduler's task
+//! assignment, with submission-time tie-break). Map placement follows
+//! delay scheduling with a configurable locality timeout.
+
+use super::delay::{pick_reduce, DelayTimer, LocalityIndex};
+use super::{Action, SchedView, Scheduler};
+use crate::job::task::NodeId;
+use crate::job::{Job, JobId, Phase, TaskRef};
+use std::collections::{HashMap, HashSet};
+
+/// FAIR configuration.
+#[derive(Clone, Debug)]
+pub struct FairConfig {
+    /// Delay-scheduling locality timeout, seconds (the original delay
+    /// scheduler's W; 5 s ≈ 1.5 heartbeats works well at FB scale).
+    pub locality_timeout_s: f64,
+    /// Per-job weight (single pool, uniform weights by default).
+    pub default_weight: f64,
+}
+
+impl Default for FairConfig {
+    fn default() -> Self {
+        Self {
+            locality_timeout_s: 5.0,
+            default_weight: 1.0,
+        }
+    }
+}
+
+pub struct FairScheduler {
+    cfg: FairConfig,
+    index: LocalityIndex,
+    delay: DelayTimer,
+    /// Weights (extension point for pools; uniform in the paper's setup).
+    weights: HashMap<JobId, f64>,
+}
+
+impl FairScheduler {
+    pub fn new(cfg: FairConfig) -> Self {
+        let delay = DelayTimer::new(cfg.locality_timeout_s);
+        Self {
+            cfg,
+            index: LocalityIndex::new(),
+            delay,
+            weights: HashMap::new(),
+        }
+    }
+
+    fn weight(&self, job: JobId) -> f64 {
+        self.weights
+            .get(&job)
+            .copied()
+            .unwrap_or(self.cfg.default_weight)
+    }
+
+    /// Jobs with schedulable work in `phase`, ordered by deficit: fewest
+    /// running-tasks-per-weight first (the job furthest below its fair
+    /// share), submission order as tie-break. `extra` counts tasks picked
+    /// earlier in this same heartbeat.
+    fn deficit_order<'b>(
+        &self,
+        view: &'b SchedView,
+        phase: Phase,
+        extra: &HashMap<JobId, usize>,
+    ) -> Vec<&'b Job> {
+        let mut jobs: Vec<&Job> = view
+            .active_jobs()
+            .filter(|j| {
+                let eligible = phase == Phase::Map || j.map_phase_done();
+                eligible && j.pending_tasks(phase) > 0
+            })
+            .collect();
+        jobs.sort_by(|a, b| {
+            let ra = (a.running_tasks(phase) + extra.get(&a.id()).copied().unwrap_or(0)) as f64
+                / self.weight(a.id());
+            let rb = (b.running_tasks(phase) + extra.get(&b.id()).copied().unwrap_or(0)) as f64
+                / self.weight(b.id());
+            ra.partial_cmp(&rb)
+                .unwrap()
+                .then_with(|| a.id().cmp(&b.id()))
+        });
+        jobs
+    }
+
+    fn assign_maps(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        actions: &mut Vec<Action>,
+        picked: &mut HashSet<TaskRef>,
+    ) {
+        let mut free = view.cluster.node(node).free_slots(Phase::Map);
+        let mut extra: HashMap<JobId, usize> = HashMap::new();
+        while free > 0 {
+            // Re-sort after each pick so shares stay balanced.
+            let order = self.deficit_order(view, Phase::Map, &extra);
+            let mut launched = false;
+            for job in order {
+                // Delay scheduling: prefer a local task; allow non-local
+                // only after the job has been skipped past the timeout.
+                if let Some(task) = self.index.pick_local(job, node, picked) {
+                    self.delay.clear(job.id());
+                    picked.insert(task);
+                    actions.push(Action::Launch {
+                        task,
+                        node,
+                        local: true,
+                    });
+                    *extra.entry(job.id()).or_insert(0) += 1;
+                    free -= 1;
+                    launched = true;
+                    break;
+                }
+                if self.delay.skip_and_check(job.id(), view.now) {
+                    if let Some(task) = self.index.pick_any(job, picked) {
+                        self.delay.clear(job.id());
+                        picked.insert(task);
+                        actions.push(Action::Launch {
+                            task,
+                            node,
+                            local: false,
+                        });
+                        *extra.entry(job.id()).or_insert(0) += 1;
+                        free -= 1;
+                        launched = true;
+                        break;
+                    }
+                }
+            }
+            if !launched {
+                break;
+            }
+        }
+    }
+
+    fn assign_reduces(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        actions: &mut Vec<Action>,
+        picked: &mut HashSet<TaskRef>,
+    ) {
+        let mut free = view.cluster.node(node).free_slots(Phase::Reduce);
+        let mut extra: HashMap<JobId, usize> = HashMap::new();
+        while free > 0 {
+            let order = self.deficit_order(view, Phase::Reduce, &extra);
+            let Some(task) = order.iter().find_map(|job| pick_reduce(job, picked)) else {
+                break;
+            };
+            picked.insert(task);
+            actions.push(Action::Launch {
+                task,
+                node,
+                local: true,
+            });
+            *extra.entry(task.job).or_insert(0) += 1;
+            free -= 1;
+        }
+    }
+}
+
+impl Scheduler for FairScheduler {
+    fn name(&self) -> &'static str {
+        "FAIR"
+    }
+
+    fn on_job_arrival(&mut self, view: &SchedView, job: JobId) {
+        self.index.add_job(&view.jobs[&job], view.hdfs);
+        self.weights.insert(job, self.cfg.default_weight);
+    }
+
+    fn on_task_completed(&mut self, _view: &SchedView, _task: TaskRef, _observed: f64) {}
+
+    fn on_job_finished(&mut self, _view: &SchedView, job: JobId) {
+        self.index.remove_job(job);
+        self.delay.remove_job(job);
+        self.weights.remove(&job);
+    }
+
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let mut picked = HashSet::new();
+        self.assign_maps(view, node, &mut actions, &mut picked);
+        self.assign_reduces(view, node, &mut actions, &mut picked);
+        actions
+    }
+}

@@ -1,0 +1,109 @@
+//! Hadoop's default FIFO scheduler (§2.2 of the paper).
+//!
+//! Task assignment on each heartbeat scans jobs in (priority, submission
+//! time) order — we model a single priority level, so submission (= job
+//! id) order — and hands every free slot to the first job with a pending
+//! task of the required type. For MAP tasks, the scheduler "selects
+//! greedily the more suitable task to achieve data locality": a local
+//! pending task if one exists, otherwise any pending task immediately
+//! (FIFO does **not** use delay scheduling).
+
+use super::delay::{pick_reduce, LocalityIndex};
+use super::{Action, SchedView, Scheduler};
+use crate::job::task::NodeId;
+use crate::job::{JobId, Phase, TaskRef};
+use std::collections::HashSet;
+
+pub struct FifoScheduler {
+    index: LocalityIndex,
+}
+
+impl FifoScheduler {
+    pub fn new() -> Self {
+        Self {
+            index: LocalityIndex::new(),
+        }
+    }
+
+    fn assign_phase(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        phase: Phase,
+        actions: &mut Vec<Action>,
+        picked: &mut HashSet<TaskRef>,
+    ) {
+        let mut free = view.cluster.node(node).free_slots(phase);
+        if free == 0 {
+            return;
+        }
+        // Jobs in submission order (ids are assigned in arrival order).
+        for job in view.active_jobs() {
+            if free == 0 {
+                break;
+            }
+            match phase {
+                Phase::Map => {
+                    while free > 0 {
+                        let local = self.index.pick_local(job, node, picked);
+                        let task = match local {
+                            Some(t) => Some((t, true)),
+                            None => self.index.pick_any(job, picked).map(|t| (t, false)),
+                        };
+                        let Some((task, local)) = task else { break };
+                        picked.insert(task);
+                        actions.push(Action::Launch { task, node, local });
+                        free -= 1;
+                    }
+                }
+                Phase::Reduce => {
+                    if !job.map_phase_done() {
+                        continue;
+                    }
+                    while free > 0 {
+                        let Some(task) = pick_reduce(job, picked) else {
+                            break;
+                        };
+                        picked.insert(task);
+                        actions.push(Action::Launch {
+                            task,
+                            node,
+                            local: true,
+                        });
+                        free -= 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Default for FifoScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn on_job_arrival(&mut self, view: &SchedView, job: JobId) {
+        self.index.add_job(&view.jobs[&job], view.hdfs);
+    }
+
+    fn on_task_completed(&mut self, _view: &SchedView, _task: TaskRef, _observed: f64) {}
+
+    fn on_job_finished(&mut self, _view: &SchedView, job: JobId) {
+        self.index.remove_job(job);
+    }
+
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let mut picked = HashSet::new();
+        self.assign_phase(view, node, Phase::Map, &mut actions, &mut picked);
+        self.assign_phase(view, node, Phase::Reduce, &mut actions, &mut picked);
+        actions
+    }
+}

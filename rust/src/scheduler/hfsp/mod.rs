@@ -1,0 +1,636 @@
+//! HFSP — the Hadoop Fair Sojourn Protocol (§3 of the paper).
+//!
+//! A hierarchical, size-based preemptive scheduler:
+//!
+//! * the **top-level scheduler** (this module's [`HfspScheduler`]) splits
+//!   cluster resources between the [`training`] module (job size
+//!   estimation) and the job scheduler (§3.1.1);
+//! * the **job scheduler** orders jobs by their projected finish time in
+//!   the [`virtual_cluster`] (a max-min-fair PS fluid simulation — that
+//!   ordering *is* the Fair Sojourn Protocol) and focuses real slots on
+//!   the earliest-finishing job;
+//! * **preemption** takes running slots from jobs that project to finish
+//!   later and gives them to jobs that project to finish earlier, using
+//!   SUSPEND/RESUME (or WAIT/KILL, [`preemption`]), with resume pinned to
+//!   the node holding the suspended context (§3.3);
+//! * MAP placement uses **delay scheduling** for data locality (§3.1).
+//!
+//! The MAP and REDUCE phases are scheduled independently (separate
+//! virtual clusters over the separate slot pools), per §3.1.
+
+pub mod estimator;
+pub mod preemption;
+pub mod training;
+pub mod virtual_cluster;
+pub mod xla_estimator;
+
+pub use preemption::{PreemptionPrimitive, SuspensionGuard};
+
+use self::estimator::{MeanEstimator, NativeEstimator, SizeEstimator};
+use self::training::{ErrorInjector, TrainingModule, TrainingUpdate};
+use self::virtual_cluster::{MaxMinBackend, NativeMaxMin, VirtualCluster};
+use super::delay::{pick_reduce, DelayTimer, LocalityIndex};
+use super::{Action, SchedView, Scheduler};
+use crate::job::task::NodeId;
+use crate::job::{Job, JobId, Phase, TaskRef};
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+/// Which size-estimator implementation the Training module uses.
+#[derive(Clone, Debug, Default)]
+pub enum EstimatorKind {
+    /// Pure-rust least-squares quantile estimator (reference).
+    #[default]
+    Native,
+    /// First-order statistics only (ablation baseline).
+    Mean,
+    /// The AOT-compiled JAX/Pallas estimator, executed via PJRT.
+    /// Panics at construction if the artifact is missing — run
+    /// `make artifacts` first.
+    Xla { artifact_dir: PathBuf },
+}
+
+/// Which max-min backend the virtual cluster uses.
+#[derive(Clone, Debug, Default)]
+pub enum MaxMinKind {
+    #[default]
+    Native,
+    /// AOT-compiled water-filling kernel via PJRT.
+    Xla { artifact_dir: PathBuf },
+}
+
+/// HFSP configuration (defaults = the paper's experimental setup, §4.1).
+#[derive(Clone, Debug)]
+pub struct HfspConfig {
+    /// Sample-set size for MAP and REDUCE estimation (paper: 5).
+    pub sample_set: usize,
+    /// Confidence parameter ξ ∈ [1, ∞) weighting initial estimates
+    /// (paper: 1).
+    pub xi: f64,
+    /// Delay-scheduling locality timeout, seconds.
+    pub locality_timeout_s: f64,
+    /// Preemption primitive (paper default: eager suspension).
+    pub preemption: PreemptionPrimitive,
+    /// Cluster-wide suspended-task hysteresis thresholds (§3.3 "Finite
+    /// machine resources").
+    pub suspend_hi: usize,
+    pub suspend_lo: usize,
+    /// Cap on slots the top-level scheduler grants the Training module
+    /// (paper: all slots).
+    pub max_training_slots: usize,
+    /// Minimum projected-finish-time gap (seconds) between the preempting
+    /// job and its victim before preemption fires. Guards against
+    /// mutual-preemption thrash when two jobs' size estimates are nearly
+    /// equal (their PS finish order flips on every estimate update).
+    pub preempt_threshold_s: f64,
+    /// Fig. 6 artificial estimation error α (0 disables).
+    pub error_alpha: f64,
+    pub error_seed: u64,
+    pub estimator: EstimatorKind,
+    pub maxmin: MaxMinKind,
+}
+
+impl Default for HfspConfig {
+    fn default() -> Self {
+        Self {
+            sample_set: 5,
+            xi: 1.0,
+            locality_timeout_s: 5.0,
+            preemption: PreemptionPrimitive::Suspend,
+            suspend_hi: 600,
+            suspend_lo: 300,
+            max_training_slots: usize::MAX,
+            preempt_threshold_s: 20.0,
+            error_alpha: 0.0,
+            error_seed: 0,
+            estimator: EstimatorKind::Native,
+            maxmin: MaxMinKind::Native,
+        }
+    }
+}
+
+impl HfspConfig {
+    fn build_estimator(&self) -> Box<dyn SizeEstimator> {
+        match &self.estimator {
+            EstimatorKind::Native => Box::new(NativeEstimator::new()),
+            EstimatorKind::Mean => Box::new(MeanEstimator),
+            EstimatorKind::Xla { artifact_dir } => Box::new(
+                xla_estimator::XlaSizeEstimator::load(artifact_dir)
+                    .expect("loading XLA estimator artifact (run `make artifacts`)"),
+            ),
+        }
+    }
+
+    fn build_maxmin(&self) -> Box<dyn MaxMinBackend> {
+        match &self.maxmin {
+            MaxMinKind::Native => Box::new(NativeMaxMin),
+            MaxMinKind::Xla { artifact_dir } => Box::new(
+                xla_estimator::XlaMaxMin::load(artifact_dir)
+                    .expect("loading XLA maxmin artifact (run `make artifacts`)"),
+            ),
+        }
+    }
+}
+
+/// Cached FSP priority view derived from a virtual cluster projection,
+/// keyed by the VC's generation counter (recomputing rank/finish maps on
+/// every heartbeat dominated the hot path — §Perf iteration 2).
+#[derive(Default)]
+struct OrderCache {
+    generation: u64,
+    valid: bool,
+    order: Vec<JobId>,
+    rank: HashMap<JobId, usize>,
+    finish: HashMap<JobId, f64>,
+}
+
+impl OrderCache {
+    fn refresh(&mut self, vc: &mut VirtualCluster) {
+        if self.valid && self.generation == vc.generation() {
+            return;
+        }
+        let projected = vc.projected_finish_order();
+        self.order.clear();
+        self.rank.clear();
+        self.finish.clear();
+        for (r, &(id, t)) in projected.iter().enumerate() {
+            self.order.push(id);
+            self.rank.insert(id, r);
+            self.finish.insert(id, t);
+        }
+        self.generation = vc.generation();
+        self.valid = true;
+    }
+}
+
+/// The HFSP scheduler.
+pub struct HfspScheduler {
+    cfg: HfspConfig,
+    vc_map: VirtualCluster,
+    vc_reduce: VirtualCluster,
+    training: TrainingModule,
+    index: LocalityIndex,
+    delay: DelayTimer,
+    guard: SuspensionGuard,
+    /// Jobs whose reduce phase has been registered in `vc_reduce`.
+    reduce_started: HashSet<JobId>,
+    order_map: OrderCache,
+    order_reduce: OrderCache,
+    /// Lazily sized from the first view (cluster capacity per phase).
+    sized: bool,
+}
+
+impl HfspScheduler {
+    pub fn new(cfg: HfspConfig) -> Self {
+        let error = if cfg.error_alpha > 0.0 {
+            Some(ErrorInjector::new(cfg.error_alpha, cfg.error_seed))
+        } else {
+            None
+        };
+        let training =
+            TrainingModule::new(cfg.sample_set, cfg.xi, cfg.build_estimator(), error);
+        let guard = SuspensionGuard::new(cfg.suspend_hi, cfg.suspend_lo);
+        let delay = DelayTimer::new(cfg.locality_timeout_s);
+        // Placeholder capacities; resized on first view.
+        let vc_map = VirtualCluster::with_backend(1, cfg.build_maxmin());
+        let vc_reduce = VirtualCluster::with_backend(1, cfg.build_maxmin());
+        Self {
+            cfg,
+            vc_map,
+            vc_reduce,
+            training,
+            index: LocalityIndex::new(),
+            delay,
+            guard,
+            reduce_started: HashSet::new(),
+            order_map: OrderCache::default(),
+            order_reduce: OrderCache::default(),
+            sized: false,
+        }
+    }
+
+    fn ensure_sized(&mut self, view: &SchedView) {
+        if !self.sized {
+            let map_slots = view.cluster.total_slots(Phase::Map).max(1);
+            let red_slots = view.cluster.total_slots(Phase::Reduce).max(1);
+            self.vc_map = VirtualCluster::with_backend(map_slots, self.cfg.build_maxmin());
+            self.vc_reduce = VirtualCluster::with_backend(red_slots, self.cfg.build_maxmin());
+            self.sized = true;
+        }
+    }
+
+    fn vc(&mut self, phase: Phase) -> &mut VirtualCluster {
+        match phase {
+            Phase::Map => &mut self.vc_map,
+            Phase::Reduce => &mut self.vc_reduce,
+        }
+    }
+
+    /// Register a job's reduce phase in the reduce virtual cluster (at
+    /// arrival for map-less jobs, else when the map phase completes).
+    fn start_reduce_phase(&mut self, view: &SchedView, id: JobId) {
+        if !self.reduce_started.insert(id) {
+            return;
+        }
+        let n = view.jobs[&id].spec.n_reduces();
+        if n == 0 {
+            return;
+        }
+        let initial = self.training.start_phase(id, Phase::Reduce, n);
+        self.vc_reduce.add_job(id, initial, n, view.now);
+    }
+
+    /// Pick a map task for `job` on `node` under delay scheduling.
+    fn pick_map(
+        &mut self,
+        view: &SchedView,
+        job: &Job,
+        node: NodeId,
+        picked: &HashSet<TaskRef>,
+    ) -> Option<(TaskRef, bool)> {
+        if let Some(t) = self.index.pick_local(job, node, picked) {
+            self.delay.clear(job.id());
+            return Some((t, true));
+        }
+        if job.pending_tasks(Phase::Map) == 0 {
+            return None;
+        }
+        if self.delay.skip_and_check(job.id(), view.now) {
+            if let Some(t) = self.index.pick_any(job, picked) {
+                self.delay.clear(job.id());
+                return Some((t, false));
+            }
+        }
+        None
+    }
+
+    /// Pick any schedulable task of `job`/`phase` for `node`.
+    fn pick_task(
+        &mut self,
+        view: &SchedView,
+        job: &Job,
+        phase: Phase,
+        node: NodeId,
+        picked: &HashSet<TaskRef>,
+    ) -> Option<(TaskRef, bool)> {
+        match phase {
+            Phase::Map => self.pick_map(view, job, node, picked),
+            Phase::Reduce => pick_reduce(job, picked).map(|t| (t, true)),
+        }
+    }
+
+    /// A suspended task of `job` parked on `node` not yet resumed in this
+    /// batch.
+    fn suspended_here(
+        view: &SchedView,
+        job: JobId,
+        phase: Phase,
+        node: NodeId,
+        resumed: &HashSet<TaskRef>,
+    ) -> Option<TaskRef> {
+        view.cluster
+            .node(node)
+            .suspended_tasks()
+            .find(|t| t.job == job && t.phase == phase && !resumed.contains(t))
+    }
+
+    /// Assignment + preemption for one phase on one heartbeat.
+    fn assign_phase(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        phase: Phase,
+        actions: &mut Vec<Action>,
+        ctx_budget: &mut usize,
+    ) {
+        // FSP priority order: projected PS finish times, ascending
+        // (cached across heartbeats until the projection changes); taken
+        // out of `self` for the duration of the call so the borrow
+        // checker allows `&mut self` pickers (§Perf iteration 3: cloning
+        // the rank/finish maps per heartbeat was measurable).
+        match phase {
+            Phase::Map => self.order_map.refresh(&mut self.vc_map),
+            Phase::Reduce => self.order_reduce.refresh(&mut self.vc_reduce),
+        }
+        let cache = match phase {
+            Phase::Map => std::mem::take(&mut self.order_map),
+            Phase::Reduce => std::mem::take(&mut self.order_reduce),
+        };
+        self.assign_phase_inner(view, node, phase, actions, ctx_budget, &cache);
+        match phase {
+            Phase::Map => self.order_map = cache,
+            Phase::Reduce => self.order_reduce = cache,
+        }
+    }
+
+    #[allow(clippy::too_many_lines)]
+    fn assign_phase_inner(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        phase: Phase,
+        actions: &mut Vec<Action>,
+        ctx_budget: &mut usize,
+        cache: &OrderCache,
+    ) {
+        let mut free = view.cluster.node(node).free_slots(phase);
+        let mut picked: HashSet<TaskRef> = HashSet::new();
+        let mut resumed: HashSet<TaskRef> = HashSet::new();
+        let order = &cache.order;
+        let rank = &cache.rank;
+        let finish = &cache.finish;
+        if node == 0 && phase == Phase::Map && log::log_enabled!(log::Level::Trace) {
+            let head: Vec<String> = order
+                .iter()
+                .take(4)
+                .map(|id| {
+                    let j = &view.jobs[id];
+                    format!(
+                        "j{id}(fin={:.0},rem_vc={:.0},pend={},run={})",
+                        finish.get(id).copied().unwrap_or(-1.0),
+                        self.vc_map.remaining(*id).unwrap_or(-1.0),
+                        j.pending_tasks(Phase::Map),
+                        j.running_tasks(Phase::Map)
+                    )
+                })
+                .collect();
+            log::trace!("t={:.0} map order: {}", view.now, head.join(" "));
+        }
+
+        // -- Stage 0: training-priority assignments (§3.1.1) ------------
+        // Jobs still collecting samples get their sample set scheduled
+        // with priority, ordered by fewer remaining tasks, subject to the
+        // global training-slot cap.
+        let mut training_jobs: Vec<&Job> = view
+            .active_jobs()
+            .filter(|j| {
+                self.training.is_training(j.id(), phase)
+                    && (phase == Phase::Map || j.map_phase_done())
+                    && j.pending_tasks(phase) > 0
+            })
+            .collect();
+        training_jobs.sort_by_key(|j| (j.remaining_tasks(phase), j.id()));
+        let mut training_running: usize = view
+            .active_jobs()
+            .filter(|j| self.training.is_training(j.id(), phase))
+            .map(|j| j.running_tasks(phase))
+            .sum();
+        for job in training_jobs {
+            if free == 0 || training_running >= self.cfg.max_training_slots {
+                break;
+            }
+            let mut want = self.training.wanted_training_slots(
+                job.id(),
+                phase,
+                job.running_tasks(phase),
+            );
+            while want > 0
+                && free > 0
+                && *ctx_budget > 0
+                && training_running < self.cfg.max_training_slots
+            {
+                let Some((task, local)) = self.pick_task(view, job, phase, node, &picked)
+                else {
+                    break;
+                };
+                picked.insert(task);
+                actions.push(Action::Launch { task, node, local });
+                free -= 1;
+                want -= 1;
+                *ctx_budget -= 1;
+                training_running += 1;
+            }
+        }
+
+        // -- Stage 1: fill free slots in FSP order ------------------------
+        for &id in order {
+            if free == 0 {
+                break;
+            }
+            let job = &view.jobs[&id];
+            if phase == Phase::Reduce && !job.map_phase_done() {
+                continue;
+            }
+            // Resume-first: suspended tasks parked on this node (§3.3
+            // "Impact on data locality": resume on the same machine).
+            while free > 0 {
+                let Some(t) = Self::suspended_here(view, id, phase, node, &resumed) else {
+                    break;
+                };
+                resumed.insert(t);
+                actions.push(Action::Resume { task: t });
+                free -= 1;
+            }
+            // Then pending launches.
+            while free > 0 && *ctx_budget > 0 {
+                let Some((task, local)) = self.pick_task(view, job, phase, node, &picked)
+                else {
+                    break;
+                };
+                picked.insert(task);
+                actions.push(Action::Launch { task, node, local });
+                free -= 1;
+                *ctx_budget -= 1;
+            }
+        }
+
+        // -- Stage 2: preemption (§3.3) -----------------------------------
+        if self.cfg.preemption == PreemptionPrimitive::Wait {
+            return;
+        }
+        // Preemption is a last resort: the paper suspends running tasks so
+        // that an earlier-finishing job "obtains resources" (§3.3). Count
+        // the cluster-wide free slots once: a job whose unmet demand fits
+        // in them will be served by those nodes' next heartbeats without
+        // taking busy slots.
+        let cluster_free = view.cluster.free_slots(phase);
+        // Victims: running tasks on this node, worst priority first ("the
+        // scheduler selects for suspension the tasks of jobs sorted in
+        // decreasing order of their size").
+        let mut victims: Vec<TaskRef> = view
+            .cluster
+            .node(node)
+            .running(phase)
+            .to_vec();
+        victims.sort_by_key(|t| std::cmp::Reverse(rank.get(&t.job).copied().unwrap_or(0)));
+        let mut victim_iter = victims.into_iter().peekable();
+        let mut suspended_total = view.cluster.suspended_count();
+
+        for &id in order {
+            let job = &view.jobs[&id];
+            if phase == Phase::Reduce && !job.map_phase_done() {
+                continue;
+            }
+            let my_rank = rank[&id];
+            let my_finish = finish.get(&id).copied().unwrap_or(0.0);
+            // Pending tasks can be absorbed by free slots anywhere in the
+            // cluster; contexts suspended on THIS node can only resume
+            // here, so they always justify preemption.
+            let suspended_here_cnt = view
+                .cluster
+                .node(node)
+                .suspended_tasks()
+                .filter(|t| t.job == id && t.phase == phase)
+                .count();
+            let pending_unmet = job.pending_tasks(phase) > cluster_free;
+            if suspended_here_cnt == 0 && !pending_unmet {
+                continue; // free slots elsewhere will serve this job
+            }
+            loop {
+                // Is there a victim strictly lower-priority than us, with a
+                // projected finish far enough after ours to justify the
+                // preemption (thrash guard)?
+                let Some(&victim) = victim_iter.peek() else {
+                    return;
+                };
+                let victim_rank = rank.get(&victim.job).copied().unwrap_or(usize::MAX);
+                if victim_rank <= my_rank {
+                    break; // no victim is worse than this job; next job
+                }
+                let victim_finish = finish
+                    .get(&victim.job)
+                    .copied()
+                    .unwrap_or(f64::INFINITY);
+                if victim_finish - my_finish < self.cfg.preempt_threshold_s {
+                    break; // near-tie: let the victim run (avoid flapping)
+                }
+                // Check primitive availability BEFORE picking a placement:
+                // `pick_task` consumes locality-index entries, so it must
+                // only run when the launch will actually be emitted.
+                let resume_cand = Self::suspended_here(view, id, phase, node, &resumed);
+                if resume_cand.is_none() && !pending_unmet {
+                    break; // remaining pending demand fits in free slots
+                }
+                let preempt_action = match self.cfg.preemption {
+                    PreemptionPrimitive::Kill => Some(Action::Kill { task: victim }),
+                    PreemptionPrimitive::Suspend => {
+                        // A resume-backfill is context-neutral; a
+                        // launch-backfill needs context budget.
+                        let have_ctx = resume_cand.is_some() || *ctx_budget >= 1;
+                        if have_ctx && self.guard.allow_suspend(suspended_total) {
+                            Some(Action::Suspend { task: victim })
+                        } else {
+                            None // out of context memory: WAIT instead
+                        }
+                    }
+                    PreemptionPrimitive::Wait => unreachable!(),
+                };
+                let Some(preempt_action) = preempt_action else {
+                    return; // suspension pressure: stop preempting entirely
+                };
+                let placement: Option<Action> = match resume_cand {
+                    Some(t) => Some(Action::Resume { task: t }),
+                    None => self
+                        .pick_task(view, job, phase, node, &picked)
+                        .map(|(task, local)| Action::Launch { task, node, local }),
+                };
+                let Some(placement) = placement else {
+                    break; // nothing to place; next job
+                };
+                let _ = victim_iter.next();
+                if matches!(preempt_action, Action::Suspend { .. }) {
+                    suspended_total += 1;
+                }
+                actions.push(preempt_action);
+                match placement {
+                    Action::Resume { task } => {
+                        resumed.insert(task);
+                    }
+                    Action::Launch { task, .. } => {
+                        picked.insert(task);
+                        *ctx_budget = ctx_budget.saturating_sub(1);
+                    }
+                    _ => {}
+                }
+                actions.push(placement);
+            }
+        }
+    }
+}
+
+impl Scheduler for HfspScheduler {
+    fn name(&self) -> &'static str {
+        "HFSP"
+    }
+
+    fn on_job_arrival(&mut self, view: &SchedView, id: JobId) {
+        self.ensure_sized(view);
+        let job = &view.jobs[&id];
+        self.index.add_job(job, view.hdfs);
+        let n_maps = job.spec.n_maps();
+        if n_maps > 0 {
+            let initial = self.training.start_phase(id, Phase::Map, n_maps);
+            self.vc_map.add_job(id, initial, n_maps, view.now);
+        } else {
+            // Map-less job: the reduce phase is immediately eligible.
+            self.start_reduce_phase(view, id);
+        }
+    }
+
+    fn on_task_completed(&mut self, view: &SchedView, task: TaskRef, observed: f64) {
+        let id = task.job;
+        let job = &view.jobs[&id];
+        let phase = task.phase;
+        let tasks_done = match phase {
+            Phase::Map => job.maps_done,
+            Phase::Reduce => job.reduces_done,
+        };
+        // Feed the estimator.
+        match self
+            .training
+            .observe_completion(id, phase, observed, tasks_done)
+        {
+            TrainingUpdate::Estimated { total } => {
+                self.vc(phase).set_total(id, total, view.now);
+            }
+            TrainingUpdate::Pending | TrainingUpdate::NotTraining => {}
+        }
+        // Real phase completion retires the job from the PS reference;
+        // virtual progress in between is the reference's own business
+        // (the PS world is deliberately decoupled from real progress).
+        if job.remaining_tasks(phase) == 0 {
+            let now = view.now;
+            self.vc(phase).remove_job(id, now);
+        }
+        // Map phase completion opens the reduce phase (§2.2: reducers are
+        // scheduled once intermediate data is available).
+        if phase == Phase::Map && job.map_phase_done() {
+            self.start_reduce_phase(view, id);
+        }
+    }
+
+    fn on_reduce_progress(&mut self, view: &SchedView, task: TaskRef, delta: f64, progress: f64) {
+        if progress <= 0.0 {
+            return;
+        }
+        if let TrainingUpdate::Estimated { total } =
+            self.training.observe_progress(task.job, delta, progress)
+        {
+            self.vc_reduce.set_total(task.job, total, view.now);
+        }
+    }
+
+    fn on_job_finished(&mut self, view: &SchedView, id: JobId) {
+        self.vc_map.remove_job(id, view.now);
+        self.vc_reduce.remove_job(id, view.now);
+        self.training.remove_job(id);
+        self.index.remove_job(id);
+        self.delay.remove_job(id);
+        self.reduce_started.remove(&id);
+    }
+
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
+        self.ensure_sized(view);
+        // Job aging: advance the PS reference simulation to now (§3.1).
+        self.vc_map.age_to(view.now);
+        self.vc_reduce.age_to(view.now);
+        let mut actions = Vec::new();
+        // Context-memory budget shared by both phases: every launch adds a
+        // JVM context on the node; suspensions park one. The budget keeps
+        // a heartbeat batch within RAM + swap capacity (§3.3).
+        let mut ctx_budget = view.cluster.node(node).context_headroom();
+        self.assign_phase(view, node, Phase::Map, &mut actions, &mut ctx_budget);
+        self.assign_phase(view, node, Phase::Reduce, &mut actions, &mut ctx_budget);
+        actions
+    }
+}

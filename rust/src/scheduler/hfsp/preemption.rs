@@ -1,0 +1,133 @@
+//! Preemption primitives and the suspension-pressure hysteresis guard
+//! (§3.3 of the paper).
+//!
+//! HFSP prefers **eager preemption** (SUSPEND/RESUME via SIGSTOP/SIGCONT
+//! on the child JVM): no work is lost, at the price of memory held by the
+//! parked context. The alternatives are **WAIT** (let running tasks
+//! finish; fine when task runtimes are short) and **KILL** (classic
+//! Hadoop preemption; wastes all work done).
+//!
+//! Because suspended contexts consume RAM/swap, HFSP bounds them with "a
+//! set of thresholds (with hysteresis) on the number of tasks that can be
+//! suspended. When too many tasks are suspended, HFSP switches to the
+//! WAIT-based preemption technique, until conditions are met for
+//! reverting to eager preemption." [`SuspensionGuard`] implements that
+//! state machine over the cluster-wide suspended-task count.
+
+/// Which primitive the scheduler uses to take slots from running jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptionPrimitive {
+    /// SIGSTOP / SIGCONT: suspend tasks, resume them later on the same
+    /// node (eager preemption; the paper's default).
+    Suspend,
+    /// Never take a busy slot; wait for tasks to complete.
+    Wait,
+    /// Kill victim tasks (work is lost; they re-queue as pending).
+    Kill,
+}
+
+impl PreemptionPrimitive {
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "suspend" | "eager" => Ok(Self::Suspend),
+            "wait" => Ok(Self::Wait),
+            "kill" => Ok(Self::Kill),
+            other => anyhow::bail!("unknown preemption primitive {other:?} (suspend|wait|kill)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Suspend => "suspend",
+            Self::Wait => "wait",
+            Self::Kill => "kill",
+        }
+    }
+}
+
+/// Hysteresis over the cluster-wide suspended-task count: above `hi`
+/// suspensions are disallowed (fall back to WAIT) until the count drains
+/// below `lo`.
+#[derive(Clone, Debug)]
+pub struct SuspensionGuard {
+    hi: usize,
+    lo: usize,
+    in_fallback: bool,
+}
+
+impl SuspensionGuard {
+    pub fn new(hi: usize, lo: usize) -> Self {
+        assert!(lo <= hi, "hysteresis requires lo <= hi");
+        Self {
+            hi,
+            lo,
+            in_fallback: false,
+        }
+    }
+
+    /// May the scheduler suspend another task, given the current
+    /// cluster-wide suspended count? Updates the hysteresis state.
+    pub fn allow_suspend(&mut self, suspended_now: usize) -> bool {
+        if self.in_fallback {
+            if suspended_now <= self.lo {
+                self.in_fallback = false;
+            }
+        } else if suspended_now >= self.hi {
+            self.in_fallback = true;
+        }
+        !self.in_fallback
+    }
+
+    pub fn in_fallback(&self) -> bool {
+        self.in_fallback
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_parsing() {
+        assert_eq!(
+            PreemptionPrimitive::from_name("suspend").unwrap(),
+            PreemptionPrimitive::Suspend
+        );
+        assert_eq!(
+            PreemptionPrimitive::from_name("EAGER").unwrap(),
+            PreemptionPrimitive::Suspend
+        );
+        assert_eq!(
+            PreemptionPrimitive::from_name("wait").unwrap(),
+            PreemptionPrimitive::Wait
+        );
+        assert_eq!(
+            PreemptionPrimitive::from_name("kill").unwrap(),
+            PreemptionPrimitive::Kill
+        );
+        assert!(PreemptionPrimitive::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn hysteresis_cycle() {
+        let mut g = SuspensionGuard::new(10, 4);
+        assert!(g.allow_suspend(0));
+        assert!(g.allow_suspend(9));
+        // Trip at hi.
+        assert!(!g.allow_suspend(10));
+        assert!(g.in_fallback());
+        // Still tripped while draining above lo.
+        assert!(!g.allow_suspend(7));
+        assert!(!g.allow_suspend(5));
+        // Recover at/below lo.
+        assert!(g.allow_suspend(4));
+        assert!(!g.in_fallback());
+        assert!(g.allow_suspend(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "lo <= hi")]
+    fn bad_thresholds_panic() {
+        let _ = SuspensionGuard::new(4, 10);
+    }
+}

@@ -1,0 +1,432 @@
+//! The Training module (§3.1.1, §3.2): on-line job size estimation.
+//!
+//! When a job arrives its size is unknown. HFSP immediately gives the
+//! job scheduler an **initial estimate** — task count × the average
+//! duration of recently executed tasks of other jobs, weighted by the
+//! confidence parameter ξ ∈ [1, ∞) (ξ = 1: trust history; ξ → ∞: treat
+//! the job as infinitely large until trained) — and in parallel schedules
+//! a **sample set** of the job's tasks (default 5, §4.1) with priority.
+//! As samples complete (map tasks) or report Δ-progress (reduce tasks,
+//! σ̃ = Δ/p, §3.2.1), the pluggable estimator fits the task-time
+//! distribution and produces the final size; the job scheduler then
+//! updates the job's remaining virtual work, discounted by the work the
+//! sampled tasks already did.
+
+use super::estimator::SizeEstimator;
+use crate::job::{JobId, Phase};
+use crate::util::rng::{Pcg64, Rng, SeedableRng};
+use std::collections::{HashMap, VecDeque};
+
+/// Rolling mean of the last `cap` observations (the "recently executed
+/// tasks of other jobs" statistic behind initial estimates).
+#[derive(Debug)]
+pub struct RollingMean {
+    window: VecDeque<f64>,
+    cap: usize,
+    sum: f64,
+}
+
+impl RollingMean {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            window: VecDeque::with_capacity(cap),
+            cap,
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.window.len() == self.cap {
+            self.sum -= self.window.pop_front().unwrap();
+        }
+        self.window.push_back(x);
+        self.sum += x;
+    }
+
+    /// Mean of the window, or `default` when empty.
+    pub fn mean_or(&self, default: f64) -> f64 {
+        if self.window.is_empty() {
+            default
+        } else {
+            self.sum / self.window.len() as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+}
+
+/// Per-(job, phase) training state.
+#[derive(Debug)]
+enum PhaseState {
+    /// Collecting the sample set.
+    Collecting {
+        samples: Vec<f64>,
+        /// Serialized work already completed in this phase (discounted
+        /// from the final estimate).
+        completed_work: f64,
+        n_tasks: usize,
+    },
+    /// Final estimate delivered.
+    Done,
+}
+
+/// Artificial estimation-error injector (Fig. 6): the delivered estimate
+/// is `θ · (1 + U[-α, α])`.
+#[derive(Debug)]
+pub struct ErrorInjector {
+    pub alpha: f64,
+    rng: Pcg64,
+}
+
+impl ErrorInjector {
+    pub fn new(alpha: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self {
+            alpha,
+            rng: Pcg64::seed_from_u64(seed),
+        }
+    }
+
+    pub fn perturb(&mut self, size: f64) -> f64 {
+        let factor = 1.0 + self.rng.gen_range_f64(-self.alpha, self.alpha);
+        (size * factor).max(0.0)
+    }
+}
+
+/// The Training module.
+pub struct TrainingModule {
+    states: HashMap<(JobId, Phase), PhaseState>,
+    recent_map: RollingMean,
+    recent_reduce: RollingMean,
+    sample_set: usize,
+    xi: f64,
+    /// Prior task duration when no history exists yet (first jobs).
+    prior_task_s: f64,
+    estimator: Box<dyn SizeEstimator>,
+    error: Option<ErrorInjector>,
+}
+
+/// Outcome of feeding an observation into the module.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrainingUpdate {
+    /// Still collecting samples.
+    Pending,
+    /// Training completed: the estimated **total** serialized phase size
+    /// (error-injected when configured). The virtual cluster applies its
+    /// own virtual-progress discount (§3.1.1).
+    Estimated { total: f64 },
+    /// Not in training (already estimated, or unknown phase).
+    NotTraining,
+}
+
+impl TrainingModule {
+    pub fn new(
+        sample_set: usize,
+        xi: f64,
+        estimator: Box<dyn SizeEstimator>,
+        error: Option<ErrorInjector>,
+    ) -> Self {
+        assert!(sample_set >= 1);
+        assert!(xi >= 1.0, "confidence parameter ξ ranges over [1, ∞)");
+        Self {
+            states: HashMap::new(),
+            recent_map: RollingMean::new(100),
+            recent_reduce: RollingMean::new(100),
+            sample_set,
+            xi,
+            prior_task_s: 1.0,
+            estimator,
+            error,
+        }
+    }
+
+    fn recent(&self, phase: Phase) -> &RollingMean {
+        match phase {
+            Phase::Map => &self.recent_map,
+            Phase::Reduce => &self.recent_reduce,
+        }
+    }
+
+    fn recent_mut(&mut self, phase: Phase) -> &mut RollingMean {
+        match phase {
+            Phase::Map => &mut self.recent_map,
+            Phase::Reduce => &mut self.recent_reduce,
+        }
+    }
+
+    /// Begin training a phase; returns the **initial estimate** of the
+    /// phase's serialized size for the virtual cluster (task count ×
+    /// recent average × ξ). With ξ = ∞ semantics the caller can use
+    /// `f64::INFINITY`; we keep ξ finite and large instead.
+    pub fn start_phase(&mut self, job: JobId, phase: Phase, n_tasks: usize) -> f64 {
+        if n_tasks == 0 {
+            self.states.insert((job, phase), PhaseState::Done);
+            return 0.0;
+        }
+        self.states.insert(
+            (job, phase),
+            PhaseState::Collecting {
+                samples: Vec::with_capacity(self.sample_set),
+                completed_work: 0.0,
+                n_tasks,
+            },
+        );
+        let avg = self.recent(phase).mean_or(self.prior_task_s);
+        n_tasks as f64 * avg * self.xi
+    }
+
+    /// Whether the phase is still collecting samples (→ the job is granted
+    /// training-priority slots).
+    pub fn is_training(&self, job: JobId, phase: Phase) -> bool {
+        matches!(
+            self.states.get(&(job, phase)),
+            Some(PhaseState::Collecting { .. })
+        )
+    }
+
+    /// How many additional outstanding tasks the Training module wants for
+    /// this phase, given how many samples it has and how many of the
+    /// job's tasks are currently running. (The "minimum share required by
+    /// the estimator", §3.2.)
+    pub fn wanted_training_slots(&self, job: JobId, phase: Phase, running: usize) -> usize {
+        match self.states.get(&(job, phase)) {
+            Some(PhaseState::Collecting { samples, n_tasks, .. }) => {
+                let outstanding = samples.len() + running;
+                self.sample_set.min(*n_tasks).saturating_sub(outstanding)
+            }
+            _ => 0,
+        }
+    }
+
+    /// A task of the phase completed with the given measured duration.
+    pub fn observe_completion(
+        &mut self,
+        job: JobId,
+        phase: Phase,
+        duration: f64,
+        tasks_done: usize,
+    ) -> TrainingUpdate {
+        self.recent_mut(phase).push(duration);
+        let Some(state) = self.states.get_mut(&(job, phase)) else {
+            return TrainingUpdate::NotTraining;
+        };
+        match state {
+            PhaseState::Done => TrainingUpdate::NotTraining,
+            PhaseState::Collecting {
+                samples,
+                completed_work,
+                n_tasks,
+            } => {
+                samples.push(duration);
+                *completed_work += duration;
+                let n_tasks = *n_tasks;
+                let enough = samples.len() >= self.sample_set.min(n_tasks)
+                    || tasks_done >= n_tasks;
+                if enough {
+                    let samples = samples.clone();
+                    let completed = *completed_work;
+                    self.finalize(job, phase, &samples, n_tasks, completed)
+                } else {
+                    TrainingUpdate::Pending
+                }
+            }
+        }
+    }
+
+    /// A reduce task reported progress `p` after Δ seconds: the estimated
+    /// task duration is σ̃ = Δ/p (§3.2.1). Map phases never call this.
+    pub fn observe_progress(
+        &mut self,
+        job: JobId,
+        delta: f64,
+        progress: f64,
+    ) -> TrainingUpdate {
+        debug_assert!(progress > 0.0 && progress <= 1.0);
+        let sigma = delta / progress;
+        let Some(state) = self.states.get_mut(&(job, Phase::Reduce)) else {
+            return TrainingUpdate::NotTraining;
+        };
+        match state {
+            PhaseState::Done => TrainingUpdate::NotTraining,
+            PhaseState::Collecting {
+                samples, n_tasks, completed_work,
+            } => {
+                samples.push(sigma);
+                let n_tasks = *n_tasks;
+                if samples.len() >= self.sample_set.min(n_tasks) {
+                    let samples = samples.clone();
+                    let completed = *completed_work;
+                    self.finalize(job, Phase::Reduce, &samples, n_tasks, completed)
+                } else {
+                    TrainingUpdate::Pending
+                }
+            }
+        }
+    }
+
+    fn finalize(
+        &mut self,
+        job: JobId,
+        phase: Phase,
+        samples: &[f64],
+        n_tasks: usize,
+        completed_work: f64,
+    ) -> TrainingUpdate {
+        let _ = completed_work;
+        let total = self.estimator.estimate_phase(samples, n_tasks);
+        let total = match &mut self.error {
+            Some(inj) if inj.alpha > 0.0 => inj.perturb(total),
+            _ => total,
+        };
+        self.states.insert((job, phase), PhaseState::Done);
+        TrainingUpdate::Estimated { total }
+    }
+
+    /// Drop all state for a finished job.
+    pub fn remove_job(&mut self, job: JobId) {
+        self.states.remove(&(job, Phase::Map));
+        self.states.remove(&(job, Phase::Reduce));
+    }
+
+    pub fn estimator_name(&self) -> &'static str {
+        self.estimator.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::hfsp::estimator::NativeEstimator;
+
+    fn module(sample_set: usize, xi: f64) -> TrainingModule {
+        TrainingModule::new(sample_set, xi, Box::new(NativeEstimator::new()), None)
+    }
+
+    #[test]
+    fn rolling_mean_window() {
+        let mut r = RollingMean::new(3);
+        assert_eq!(r.mean_or(9.0), 9.0);
+        r.push(1.0);
+        r.push(2.0);
+        r.push(3.0);
+        assert!((r.mean_or(0.0) - 2.0).abs() < 1e-12);
+        r.push(10.0); // evicts 1.0
+        assert!((r.mean_or(0.0) - 5.0).abs() < 1e-12);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn initial_estimate_uses_history_and_xi() {
+        let mut m = module(5, 2.0);
+        // Seed history via completions of another job's phase.
+        let _ = m.start_phase(1, Phase::Map, 10);
+        for _ in 0..5 {
+            let _ = m.observe_completion(1, Phase::Map, 20.0, 0);
+        }
+        let est = m.start_phase(2, Phase::Map, 10);
+        assert!((est - 10.0 * 20.0 * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn initial_estimate_prior_when_no_history() {
+        let mut m = module(5, 1.0);
+        let est = m.start_phase(1, Phase::Map, 7);
+        assert!((est - 7.0).abs() < 1e-12, "prior is 1 s/task");
+    }
+
+    #[test]
+    fn estimates_after_sample_set() {
+        let mut m = module(3, 1.0);
+        let _ = m.start_phase(1, Phase::Map, 100);
+        assert!(m.is_training(1, Phase::Map));
+        assert_eq!(m.observe_completion(1, Phase::Map, 10.0, 1), TrainingUpdate::Pending);
+        assert_eq!(m.observe_completion(1, Phase::Map, 10.0, 2), TrainingUpdate::Pending);
+        match m.observe_completion(1, Phase::Map, 10.0, 3) {
+            TrainingUpdate::Estimated { total } => {
+                assert!((total - 1000.0).abs() < 1e-9, "total={total}");
+            }
+            other => panic!("expected estimate, got {other:?}"),
+        }
+        assert!(!m.is_training(1, Phase::Map));
+        assert_eq!(
+            m.observe_completion(1, Phase::Map, 10.0, 4),
+            TrainingUpdate::NotTraining
+        );
+    }
+
+    #[test]
+    fn small_jobs_finish_training_early() {
+        // Job with 2 tasks and sample set 5: training ends at 2 samples.
+        let mut m = module(5, 1.0);
+        let _ = m.start_phase(1, Phase::Map, 2);
+        assert_eq!(m.observe_completion(1, Phase::Map, 5.0, 1), TrainingUpdate::Pending);
+        match m.observe_completion(1, Phase::Map, 5.0, 2) {
+            TrainingUpdate::Estimated { total } => assert!((total - 10.0).abs() < 1e-9),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduce_progress_reports_estimate() {
+        let mut m = module(2, 1.0);
+        let _ = m.start_phase(1, Phase::Reduce, 10);
+        // Two reduce tasks of true duration 120 s report after Δ=60 s:
+        // p = 0.5 → σ̃ = 120.
+        assert_eq!(m.observe_progress(1, 60.0, 0.5), TrainingUpdate::Pending);
+        match m.observe_progress(1, 60.0, 0.5) {
+            TrainingUpdate::Estimated { total } => {
+                assert!((total - 1200.0).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wanted_training_slots_decreases() {
+        let mut m = module(5, 1.0);
+        let _ = m.start_phase(1, Phase::Map, 100);
+        assert_eq!(m.wanted_training_slots(1, Phase::Map, 0), 5);
+        assert_eq!(m.wanted_training_slots(1, Phase::Map, 3), 2);
+        let _ = m.observe_completion(1, Phase::Map, 1.0, 1);
+        assert_eq!(m.wanted_training_slots(1, Phase::Map, 3), 1);
+        assert_eq!(m.wanted_training_slots(1, Phase::Map, 9), 0);
+    }
+
+    #[test]
+    fn wanted_capped_by_job_width() {
+        let mut m = module(5, 1.0);
+        let _ = m.start_phase(1, Phase::Map, 2);
+        assert_eq!(m.wanted_training_slots(1, Phase::Map, 0), 2);
+    }
+
+    #[test]
+    fn zero_task_phase_is_immediately_done() {
+        let mut m = module(5, 1.0);
+        let est = m.start_phase(1, Phase::Reduce, 0);
+        assert_eq!(est, 0.0);
+        assert!(!m.is_training(1, Phase::Reduce));
+    }
+
+    #[test]
+    fn error_injection_bounds() {
+        for seed in 0..20 {
+            let inj = ErrorInjector::new(0.5, seed);
+            let mut m = TrainingModule::new(
+                1,
+                1.0,
+                Box::new(NativeEstimator::new()),
+                Some(inj),
+            );
+            let _ = m.start_phase(1, Phase::Map, 100);
+            match m.observe_completion(1, Phase::Map, 10.0, 1) {
+                TrainingUpdate::Estimated { total } => {
+                    // θ = 1000, α = 0.5: total in [500, 1500].
+                    assert!((500.0..=1500.0).contains(&total), "total={total}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,526 @@
+//! The virtual cluster: HFSP's processor-sharing reference simulation
+//! (§3.1 of the paper).
+//!
+//! HFSP keeps, per phase, a *fluid* simulation of what a max-min-fair
+//! processor-sharing scheduler would do with the same jobs on the same
+//! slots. Each job is represented by its **serialized work** (sum of task
+//! runtimes, slot-independent — §3.1 "the size of a job is expressed in a
+//! serialized form") progressing **virtually**:
+//!
+//! * **Job aging** (§3.1 "Job aging"): on every real event, the elapsed
+//!   time since the previous event is distributed to jobs in proportion
+//!   to their current max-min fair slot allocation and accumulated as
+//!   virtual progress.
+//! * **Max-min fairness** (§3.1 "Resource allocation"): slots are
+//!   allocated by water-filling — the analytic fixed point of the paper's
+//!   "round-robin mechanism that starts allocating virtual cluster
+//!   resources to small jobs".
+//! * **Virtual width**: a job's parallelism bound is the number of tasks
+//!   it still has *in the virtual simulation* — `ceil(remaining / τ)`
+//!   with τ the estimated mean task duration, capped by the phase's task
+//!   count. The reference system is **independent of real progress**:
+//!   coupling the width to real remaining tasks would corrupt the PS
+//!   reference (a job the real cluster serves fast would look narrow,
+//!   projecting a *later* PS finish and losing its priority — breaking
+//!   FSP's dominance property).
+//! * **Projected finish order**: a fluid-forward simulation computes the
+//!   PS completion times; the *real* cluster schedules jobs in that order
+//!   (that is FSP).
+//!
+//! The only couplings to the real world are: job arrival, size
+//! (re-)estimation from the Training module, and removal on real
+//! completion.
+//!
+//! The max-min allocation is pluggable ([`MaxMinBackend`]): the native
+//! rust water-filling below, or the AOT-compiled XLA kernel
+//! ([`crate::runtime`]) — they are cross-checked by integration tests.
+
+use crate::job::JobId;
+use crate::sim::Time;
+use std::collections::HashMap;
+
+/// Computes a max-min fair allocation of `capacity` slots over per-job
+/// demands. Implementations must satisfy (tested by `testkit` properties):
+///
+/// 1. `0 ≤ alloc_i ≤ demand_i`;
+/// 2. `Σ alloc = min(capacity, Σ demand)`;
+/// 3. bottleneck fairness: if `alloc_i < demand_i` then `alloc_i ≥ alloc_j`
+///    for every j (unsatisfied jobs all sit at the common water level).
+pub trait MaxMinBackend {
+    fn allocate(&mut self, demands: &[f64], capacity: f64) -> Vec<f64>;
+}
+
+/// Native water-filling max-min allocation.
+pub struct NativeMaxMin;
+
+impl MaxMinBackend for NativeMaxMin {
+    fn allocate(&mut self, demands: &[f64], capacity: f64) -> Vec<f64> {
+        maxmin_waterfill(demands, capacity)
+    }
+}
+
+/// Water-filling in O(n log n).
+pub fn maxmin_waterfill(demands: &[f64], capacity: f64) -> Vec<f64> {
+    let n = demands.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    debug_assert!(demands.iter().all(|d| *d >= 0.0 && d.is_finite()));
+    let total: f64 = demands.iter().sum();
+    if total <= capacity {
+        // Everyone satisfied.
+        return demands.to_vec();
+    }
+    // Sort indices by demand ascending; fill the water level.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    let mut alloc = vec![0.0; n];
+    let mut remaining = capacity;
+    for (rank, &i) in order.iter().enumerate() {
+        let claim = remaining / (n - rank) as f64;
+        let a = demands[i].min(claim);
+        alloc[i] = a;
+        remaining -= a;
+    }
+    alloc
+}
+
+/// One job inside the virtual cluster.
+#[derive(Clone, Debug)]
+struct VJob {
+    /// Estimated total serialized work of the phase, seconds.
+    total: f64,
+    /// Virtual progress accumulated by aging, seconds.
+    aged: f64,
+    /// Estimated mean task duration (τ = total / task count), seconds.
+    tau: f64,
+    /// Task count of the phase (upper bound on parallelism).
+    width_cap: f64,
+}
+
+impl VJob {
+    fn remaining(&self) -> f64 {
+        (self.total - self.aged).max(0.0)
+    }
+
+    /// Virtual parallelism: tasks still present in the PS reference.
+    fn width(&self) -> f64 {
+        if self.tau <= 0.0 {
+            return 0.0;
+        }
+        (self.remaining() / self.tau).ceil().min(self.width_cap)
+    }
+}
+
+/// The per-phase virtual cluster.
+pub struct VirtualCluster {
+    slots: f64,
+    jobs: HashMap<JobId, VJob>,
+    last_event: Time,
+    backend: Box<dyn MaxMinBackend>,
+    /// Cached projected finish order (invalidated by any state change).
+    cached_order: Option<Vec<(JobId, Time)>>,
+    /// Bumped whenever the projection is invalidated; consumers key their
+    /// own derived caches (rank maps etc.) off this.
+    generation: u64,
+}
+
+impl VirtualCluster {
+    pub fn new(slots: usize) -> Self {
+        Self::with_backend(slots, Box::new(NativeMaxMin))
+    }
+
+    pub fn with_backend(slots: usize, backend: Box<dyn MaxMinBackend>) -> Self {
+        assert!(slots > 0, "virtual cluster needs capacity");
+        Self {
+            slots: slots as f64,
+            jobs: HashMap::new(),
+            last_event: 0.0,
+            backend,
+            cached_order: None,
+            generation: 0,
+        }
+    }
+
+    /// Monotone counter identifying the current projection (changes when
+    /// the projected order may have changed).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn contains(&self, id: JobId) -> bool {
+        self.jobs.contains_key(&id)
+    }
+
+    /// Virtual remaining work of a job.
+    pub fn remaining(&self, id: JobId) -> Option<f64> {
+        self.jobs.get(&id).map(|j| j.remaining())
+    }
+
+    /// Total remaining virtual work (diagnostics / invariant tests).
+    pub fn total_remaining(&self) -> f64 {
+        self.jobs.values().map(|j| j.remaining()).sum()
+    }
+
+    /// Advance the PS fluid simulation to `now`, distributing progress
+    /// among jobs per the max-min allocation (job aging, §3.1).
+    pub fn age_to(&mut self, now: Time) {
+        let dt = now - self.last_event;
+        if dt < 0.0 {
+            debug_assert!(dt > -1e-9, "aging backwards by {dt}");
+            return;
+        }
+        self.last_event = now;
+        if dt == 0.0 || self.jobs.is_empty() {
+            return;
+        }
+        let ids: Vec<JobId> = self.jobs.keys().copied().collect();
+        let demands: Vec<f64> = ids
+            .iter()
+            .map(|id| self.jobs[id].width().min(self.slots))
+            .collect();
+        let alloc = self.backend.allocate(&demands, self.slots);
+        for (id, a) in ids.iter().zip(alloc) {
+            let j = self.jobs.get_mut(id).unwrap();
+            // Progress is capped at the job's remaining work; the PS
+            // fluid would reallocate its slots after its virtual finish,
+            // which the next event's allocation captures.
+            j.aged = (j.aged + a * dt).min(j.total);
+        }
+        // Aging advances the system ALONG the cached fluid trajectory:
+        // the projected completion order and absolute finish times remain
+        // valid, so the cache survives (a 5x end-to-end win — §Perf).
+        // Only structural changes (add/remove/set_total) invalidate.
+    }
+
+    /// Register a job's phase (ages the system first). `total` is the
+    /// (initially estimated) serialized phase size; `n_tasks` its task
+    /// count.
+    pub fn add_job(&mut self, id: JobId, total: f64, n_tasks: usize, now: Time) {
+        self.age_to(now);
+        debug_assert!(total >= 0.0 && total.is_finite());
+        let width_cap = n_tasks.max(1) as f64;
+        self.jobs.insert(
+            id,
+            VJob {
+                total,
+                aged: 0.0,
+                tau: (total / width_cap).max(f64::MIN_POSITIVE),
+                width_cap,
+            },
+        );
+        self.cached_order = None;
+        self.generation += 1;
+    }
+
+    pub fn remove_job(&mut self, id: JobId, now: Time) {
+        self.age_to(now);
+        self.jobs.remove(&id);
+        self.cached_order = None;
+        self.generation += 1;
+    }
+
+    /// Replace the job's total-size estimate ("the job scheduler *updates*
+    /// the remaining amount of work to be done for the job", §3.1.1).
+    /// Virtual progress made so far is preserved; τ is refreshed.
+    pub fn set_total(&mut self, id: JobId, new_total: f64, now: Time) {
+        self.age_to(now);
+        if let Some(j) = self.jobs.get_mut(&id) {
+            j.total = new_total.max(0.0);
+            j.tau = (j.total / j.width_cap).max(f64::MIN_POSITIVE);
+            self.cached_order = None;
+            self.generation += 1;
+        }
+    }
+
+    /// Projected PS finish times, ascending — the FSP schedule. Jobs with
+    /// zero virtual remaining work sort first (they are "virtually
+    /// finished": the real cluster owes them service).
+    pub fn projected_finish_order(&mut self) -> Vec<(JobId, Time)> {
+        if let Some(cached) = &self.cached_order {
+            return cached.clone();
+        }
+        let order = self.fluid_forward();
+        self.cached_order = Some(order.clone());
+        order
+    }
+
+    /// Fluid-forward simulation from `last_event`: repeatedly allocate,
+    /// jump to the next virtual completion (or width change), repeat.
+    /// O(n² log n) worst case with n = active jobs.
+    fn fluid_forward(&mut self) -> Vec<(JobId, Time)> {
+        let mut live: Vec<(JobId, VJob)> = self
+            .jobs
+            .iter()
+            .map(|(&id, j)| (id, j.clone()))
+            .collect();
+        // Deterministic processing order.
+        live.sort_by_key(|&(id, _)| id);
+        let mut finished: Vec<(JobId, Time)> = Vec::with_capacity(live.len());
+        let mut t = self.last_event;
+        // Jobs already at zero remaining finish "now".
+        live.retain(|(id, j)| {
+            if j.remaining() <= 0.0 {
+                finished.push((*id, t));
+                false
+            } else {
+                true
+            }
+        });
+        let mut guard = 0usize;
+        while !live.is_empty() {
+            guard += 1;
+            if guard > 100_000 {
+                // Numerical stall: declare the rest finished at +inf.
+                for (id, _) in &live {
+                    finished.push((*id, f64::INFINITY));
+                }
+                break;
+            }
+            let demands: Vec<f64> =
+                live.iter().map(|(_, j)| j.width().min(self.slots)).collect();
+            // The projection is an L3-internal fixed-point search that
+            // re-solves the allocation O(n) times per call; it always uses
+            // the native water-filling. The pluggable (XLA) backend serves
+            // the actual PS allocation used for job aging in `age_to` —
+            // one call per real event.
+            let alloc = maxmin_waterfill(&demands, self.slots);
+            // Advance until the earliest fluid completion. Widths are
+            // piecewise-constant per step (re-evaluated after every
+            // completion): stepping on every integer width boundary would
+            // make the projection O(total task count) — measured 40x
+            // slower end-to-end for a negligible accuracy gain.
+            let mut dt = f64::INFINITY;
+            for ((_, j), &a) in live.iter().zip(&alloc) {
+                if a <= 0.0 {
+                    continue;
+                }
+                dt = dt.min(j.remaining() / a);
+            }
+            if !dt.is_finite() || dt <= 0.0 {
+                // No progress possible (all allocations zero) — cannot
+                // happen with positive widths, but guard against a stuck
+                // loop.
+                for (id, _) in &live {
+                    finished.push((*id, f64::INFINITY));
+                }
+                break;
+            }
+            t += dt;
+            let mut next: Vec<(JobId, VJob)> = Vec::with_capacity(live.len());
+            for ((id, mut j), &a) in live.into_iter().zip(&alloc) {
+                j.aged = (j.aged + a * dt).min(j.total);
+                if j.remaining() <= 1e-9 {
+                    finished.push((id, t));
+                } else {
+                    next.push((id, j));
+                }
+            }
+            live = next;
+        }
+        // Ascending by projected finish; stable by job id for ties
+        // (earlier submission wins, as in the paper's examples).
+        finished.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- water-filling ----------------------------------------------------
+
+    #[test]
+    fn waterfill_all_satisfied_under_capacity() {
+        let a = maxmin_waterfill(&[1.0, 2.0, 3.0], 10.0);
+        assert_eq!(a, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn waterfill_even_split_when_equal_demands() {
+        let a = maxmin_waterfill(&[5.0, 5.0, 5.0], 6.0);
+        for x in &a {
+            assert!((x - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn waterfill_small_jobs_fully_served_first() {
+        // Demands 1, 10, 10 with capacity 9: small job gets its 1, the two
+        // big ones split the rest 4/4.
+        let a = maxmin_waterfill(&[1.0, 10.0, 10.0], 9.0);
+        assert!((a[0] - 1.0).abs() < 1e-12);
+        assert!((a[1] - 4.0).abs() < 1e-12);
+        assert!((a[2] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waterfill_conserves_capacity() {
+        let d = [3.0, 0.5, 7.0, 2.0, 9.0];
+        let a = maxmin_waterfill(&d, 10.0);
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 10.0).abs() < 1e-9);
+        for (x, dem) in a.iter().zip(&d) {
+            assert!(*x <= dem + 1e-12);
+            assert!(*x >= 0.0);
+        }
+    }
+
+    #[test]
+    fn waterfill_empty_and_zero() {
+        assert!(maxmin_waterfill(&[], 5.0).is_empty());
+        let a = maxmin_waterfill(&[0.0, 4.0], 2.0);
+        assert_eq!(a[0], 0.0);
+        assert!((a[1] - 2.0).abs() < 1e-12);
+    }
+
+    // -- virtual cluster ---------------------------------------------------
+
+    /// The paper's Fig. 1 scenario on a single-slot server: serialized
+    /// sizes 30/10/10, arrivals 0/10/15. Under PS, completion order is
+    /// j2, j3, j1.
+    #[test]
+    fn fig1_ps_order() {
+        let mut vc = VirtualCluster::new(1);
+        vc.add_job(1, 30.0, 10, 0.0);
+        vc.add_job(2, 10.0, 10, 10.0);
+        // After 10 s alone, j1 has 20 left.
+        assert!((vc.remaining(1).unwrap() - 20.0).abs() < 1e-9);
+        vc.add_job(3, 10.0, 10, 15.0);
+        // j1 and j2 shared [10,15]: j1 = 17.5, j2 = 7.5.
+        assert!((vc.remaining(1).unwrap() - 17.5).abs() < 1e-9);
+        assert!((vc.remaining(2).unwrap() - 7.5).abs() < 1e-9);
+        let order = vc.projected_finish_order();
+        let ids: Vec<JobId> = order.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![2, 3, 1], "PS completion order of Fig. 1");
+        assert!(order[0].1 <= order[1].1 && order[1].1 <= order[2].1);
+    }
+
+    #[test]
+    fn narrow_job_progresses_at_its_width() {
+        // One job with a single 10 s task on a 4-slot virtual cluster:
+        // progresses at 1 slot-rate even though capacity is 4.
+        let mut vc = VirtualCluster::new(4);
+        vc.add_job(1, 10.0, 1, 0.0);
+        vc.age_to(5.0);
+        assert!((vc.remaining(1).unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wide_job_uses_full_capacity() {
+        let mut vc = VirtualCluster::new(4);
+        vc.add_job(1, 40.0, 100, 0.0);
+        vc.age_to(5.0);
+        assert!((vc.remaining(1).unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn maxmin_prioritizes_small_width_jobs() {
+        // Widths 1 and 10, capacity 4 => allocations 1 and 3.
+        let mut vc = VirtualCluster::new(4);
+        vc.add_job(1, 100.0, 1, 0.0);
+        vc.add_job(2, 100.0, 10, 0.0);
+        vc.age_to(10.0);
+        assert!((vc.remaining(1).unwrap() - 90.0).abs() < 1e-9);
+        assert!((vc.remaining(2).unwrap() - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_width_shrinks_with_progress_only() {
+        // 10 tasks x 10 s on a 100-slot cluster: width starts at 10;
+        // after aging most of the work away the virtual width drops.
+        let mut vc = VirtualCluster::new(100);
+        vc.add_job(1, 100.0, 10, 0.0);
+        // Alone, the job gets its full width 10 -> rate 10/s.
+        vc.age_to(9.5);
+        let rem = vc.remaining(1).unwrap();
+        assert!(rem < 10.0, "rem {rem}");
+        // The projected finish accounts for the final narrow wave.
+        let order = vc.projected_finish_order();
+        assert_eq!(order[0].0, 1);
+    }
+
+    #[test]
+    fn set_total_preserves_virtual_progress() {
+        let mut vc = VirtualCluster::new(2);
+        vc.add_job(1, 100.0, 2, 0.0);
+        vc.age_to(5.0); // aged 10 (width 2)
+        vc.set_total(1, 50.0, 5.0);
+        assert!((vc.remaining(1).unwrap() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_remaining_sorts_first() {
+        let mut vc = VirtualCluster::new(1);
+        vc.add_job(1, 5.0, 1, 0.0);
+        vc.add_job(2, 100.0, 1, 0.0);
+        vc.age_to(11.0); // j1's share (1/2 slot * 11 s) exceeds its size
+        let order = vc.projected_finish_order();
+        assert_eq!(order[0].0, 1);
+        assert!(vc.remaining(1).unwrap() <= 1e-9);
+    }
+
+    #[test]
+    fn remove_job_drops_it() {
+        let mut vc = VirtualCluster::new(1);
+        vc.add_job(1, 5.0, 1, 0.0);
+        vc.add_job(2, 5.0, 1, 0.0);
+        vc.remove_job(1, 1.0);
+        assert!(!vc.contains(1));
+        let order = vc.projected_finish_order();
+        assert_eq!(order.len(), 1);
+        assert_eq!(order[0].0, 2);
+    }
+
+    #[test]
+    fn projected_order_cache_invalidation() {
+        let mut vc = VirtualCluster::new(1);
+        vc.add_job(1, 10.0, 1, 0.0);
+        vc.add_job(2, 20.0, 1, 0.0);
+        assert_eq!(vc.projected_finish_order()[0].0, 1);
+        // Shrink job 2's estimate drastically: order must flip.
+        vc.set_total(2, 1.0, 0.0);
+        assert_eq!(vc.projected_finish_order()[0].0, 2);
+    }
+
+    #[test]
+    fn real_progress_does_not_affect_the_reference() {
+        // The PS reference only changes through aging and estimates: two
+        // clusters with identical inputs stay identical regardless of
+        // what the real cluster does (there is no width coupling to real
+        // task completions — by design).
+        let mut a = VirtualCluster::new(3);
+        let mut b = VirtualCluster::new(3);
+        for vc in [&mut a, &mut b] {
+            vc.add_job(1, 50.0, 2, 0.0);
+            vc.add_job(2, 30.0, 5, 0.0);
+        }
+        a.age_to(4.0);
+        a.age_to(10.0);
+        b.age_to(10.0);
+        assert!((a.remaining(1).unwrap() - b.remaining(1).unwrap()).abs() < 1e-9);
+        assert!((a.remaining(2).unwrap() - b.remaining(2).unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wide_fresh_job_does_not_leapfrog_served_job() {
+        // Regression test for the width-coupling bug: job 1 (small) is
+        // being served fast by the real cluster; job 2 (large, wide)
+        // arrives later. In the PS reference job 1 still finishes first.
+        let mut vc = VirtualCluster::new(400);
+        vc.add_job(1, 5_700.0, 164, 0.0); // ~35 s tasks
+        vc.age_to(35.0);
+        vc.add_job(2, 13_000.0, 381, 35.0);
+        let order = vc.projected_finish_order();
+        assert_eq!(order[0].0, 1, "smaller earlier job keeps PS priority");
+    }
+}

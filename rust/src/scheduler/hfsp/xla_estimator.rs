@@ -1,0 +1,90 @@
+//! XLA-backed estimator and max-min backend.
+//!
+//! These adapters plug the AOT-compiled JAX/Pallas artifacts
+//! ([`crate::runtime`]) into HFSP's pluggable interfaces: the paper's
+//! "pluggable estimator" (§3.2.1) becomes an XLA computation compiled
+//! once at build time and executed through PJRT on the scheduler hot
+//! path. Both fall back to the native implementation when the request
+//! exceeds the artifact's static shapes (rare; logged).
+
+use super::estimator::{lsq_quantile_phase_size, SizeEstimator};
+use super::virtual_cluster::{maxmin_waterfill, MaxMinBackend};
+use crate::runtime::{ArtifactSet, EstimatorExec, MaxMinExec};
+use std::path::Path;
+use std::rc::Rc;
+
+/// [`SizeEstimator`] implemented by the `estimator.hlo.txt` artifact.
+pub struct XlaSizeEstimator {
+    exec: EstimatorExec,
+}
+
+impl XlaSizeEstimator {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        Ok(Self {
+            exec: EstimatorExec::load(dir)?,
+        })
+    }
+
+    pub fn from_set(set: Rc<ArtifactSet>) -> Self {
+        Self {
+            exec: EstimatorExec::new(set),
+        }
+    }
+}
+
+impl SizeEstimator for XlaSizeEstimator {
+    fn estimate_phase(&mut self, samples: &[f64], n_tasks: usize) -> f64 {
+        match self.exec.estimate_one(samples, n_tasks) {
+            Ok(size) => size,
+            Err(e) => {
+                // Execution failure is unexpected after successful load;
+                // keep the system alive with the native path.
+                log::error!("XLA estimator failed ({e}); using native fallback");
+                lsq_quantile_phase_size(samples, n_tasks)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-lsq"
+    }
+}
+
+/// [`MaxMinBackend`] implemented by the `maxmin.hlo.txt` artifact.
+pub struct XlaMaxMin {
+    exec: MaxMinExec,
+}
+
+impl XlaMaxMin {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        Ok(Self {
+            exec: MaxMinExec::load(dir)?,
+        })
+    }
+
+    pub fn from_set(set: Rc<ArtifactSet>) -> Self {
+        Self {
+            exec: MaxMinExec::new(set),
+        }
+    }
+}
+
+impl MaxMinBackend for XlaMaxMin {
+    fn allocate(&mut self, demands: &[f64], capacity: f64) -> Vec<f64> {
+        if demands.len() > self.exec.max_jobs() {
+            log::warn!(
+                "maxmin demand vector {} exceeds artifact capacity {}; native fallback",
+                demands.len(),
+                self.exec.max_jobs()
+            );
+            return maxmin_waterfill(demands, capacity);
+        }
+        match self.exec.allocate(demands, capacity) {
+            Ok(alloc) => alloc,
+            Err(e) => {
+                log::error!("XLA maxmin failed ({e}); using native fallback");
+                maxmin_waterfill(demands, capacity)
+            }
+        }
+    }
+}

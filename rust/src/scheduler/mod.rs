@@ -1,0 +1,129 @@
+//! Job schedulers: the `Scheduler` trait plus the three disciplines the
+//! paper evaluates — FIFO (Hadoop's default), FAIR (the Hadoop Fair
+//! Scheduler with delay scheduling) and HFSP (the paper's contribution).
+//!
+//! ## Contract
+//!
+//! Schedulers are **heartbeat-driven**, exactly like Hadoop's JobTracker
+//! (§2.2): all task placement and preemption decisions are emitted from
+//! [`Scheduler::on_heartbeat`] in response to a single TaskTracker's
+//! heartbeat, as an ordered list of [`Action`]s. The driver applies the
+//! actions in order, validating each against live cluster state (a
+//! `Suspend` earlier in the batch frees the slot a later `Launch` in the
+//! same batch uses).
+//!
+//! Schedulers never see ground-truth task durations — only completion
+//! observations ([`Scheduler::on_task_completed`]) and the Δ-progress
+//! reports used by the reduce estimator
+//! ([`Scheduler::on_reduce_progress`], §3.2.1 of the paper).
+
+pub mod delay;
+pub mod fair;
+pub mod fifo;
+pub mod hfsp;
+
+use crate::cluster::{Cluster, Hdfs};
+use crate::job::{Job, JobId, TaskRef};
+use crate::job::task::NodeId;
+use crate::sim::Time;
+use std::collections::BTreeMap;
+
+/// Read-only view of the world handed to schedulers.
+pub struct SchedView<'a> {
+    pub jobs: &'a BTreeMap<JobId, Job>,
+    pub cluster: &'a Cluster,
+    pub hdfs: &'a Hdfs,
+    pub now: Time,
+}
+
+impl<'a> SchedView<'a> {
+    /// Jobs still in the system (arrived, not finished), in id
+    /// (= submission) order.
+    pub fn active_jobs(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values().filter(|j| !j.is_finished())
+    }
+
+    /// Whether a map task would read local data on `node`.
+    pub fn is_local(&self, node: NodeId, task: TaskRef) -> bool {
+        self.hdfs.is_local(node, task)
+    }
+}
+
+/// A scheduling decision applied by the driver.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Launch a pending task on a node (occupies one slot of the task's
+    /// phase). `local` is the scheduler's locality determination — recorded
+    /// in metrics; the driver asserts it matches HDFS for map tasks.
+    Launch { task: TaskRef, node: NodeId, local: bool },
+    /// SIGSTOP a running task (frees its slot, parks the context).
+    Suspend { task: TaskRef },
+    /// SIGCONT a suspended task on the node holding its context.
+    Resume { task: TaskRef },
+    /// Kill a running or suspended task: all its work is lost and it
+    /// returns to the pending queue.
+    Kill { task: TaskRef },
+}
+
+/// Scheduler interface implemented by FIFO, FAIR and HFSP.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// A job was submitted.
+    fn on_job_arrival(&mut self, view: &SchedView, job: JobId);
+
+    /// A task attempt completed. `observed_duration` is the measured task
+    /// runtime (serialized work — what Hadoop's counters report).
+    fn on_task_completed(&mut self, view: &SchedView, task: TaskRef, observed_duration: f64);
+
+    /// Progress report from a reduce task that has executed for Δ seconds:
+    /// `progress` is the fraction of its input processed (available once
+    /// all maps finished, §3.2.1). Default: ignored.
+    fn on_reduce_progress(&mut self, view: &SchedView, task: TaskRef, delta: f64, progress: f64) {
+        let _ = (view, task, delta, progress);
+    }
+
+    /// A job's last task completed.
+    fn on_job_finished(&mut self, view: &SchedView, job: JobId) {
+        let _ = (view, job);
+    }
+
+    /// Heartbeat from `node`: return actions to apply, in order.
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action>;
+}
+
+/// Factory enum used by the CLI, benches and examples.
+#[derive(Clone, Debug)]
+pub enum SchedulerKind {
+    Fifo,
+    Fair(fair::FairConfig),
+    Hfsp(hfsp::HfspConfig),
+}
+
+impl SchedulerKind {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(fifo::FifoScheduler::new()),
+            SchedulerKind::Fair(cfg) => Box::new(fair::FairScheduler::new(cfg.clone())),
+            SchedulerKind::Hfsp(cfg) => Box::new(hfsp::HfspScheduler::new(cfg.clone())),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "FIFO",
+            SchedulerKind::Fair(_) => "FAIR",
+            SchedulerKind::Hfsp(_) => "HFSP",
+        }
+    }
+
+    /// Parse from a CLI string (`fifo`, `fair`, `hfsp`).
+    pub fn from_name(name: &str) -> anyhow::Result<SchedulerKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(SchedulerKind::Fifo),
+            "fair" => Ok(SchedulerKind::Fair(fair::FairConfig::default())),
+            "hfsp" => Ok(SchedulerKind::Hfsp(hfsp::HfspConfig::default())),
+            other => anyhow::bail!("unknown scheduler {other:?} (fifo|fair|hfsp)"),
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! The simulation engine: event loop + virtual clock.
+//!
+//! Generic over the event type; the cluster driver supplies a handler that
+//! may schedule further events through [`Engine::schedule_in`] /
+//! [`Engine::schedule_at`]. The engine enforces the monotonic-time
+//! invariant and supports a hard event-count limit as a runaway guard.
+
+use super::queue::EventQueue;
+use super::Time;
+
+/// Why the run loop returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// No pending events remain.
+    Drained,
+    /// The handler requested an early stop.
+    Halted,
+    /// The event-count guard tripped (indicates a livelock/bug).
+    EventLimit,
+}
+
+/// Event loop over an [`EventQueue`].
+pub struct Engine<E> {
+    queue: EventQueue<E>,
+    now: Time,
+    processed: u64,
+    event_limit: u64,
+    halt: bool,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Self {
+            queue: EventQueue::new(),
+            now: 0.0,
+            processed: 0,
+            // Generous default: the FB-dataset macro run is ~1e6 events.
+            event_limit: 500_000_000,
+            halt: false,
+        }
+    }
+
+    /// Override the runaway guard.
+    pub fn with_event_limit(mut self, limit: u64) -> Self {
+        self.event_limit = limit;
+        self
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule at an absolute time; must not be in the past.
+    pub fn schedule_at(&mut self, time: Time, event: E) {
+        assert!(
+            time >= self.now,
+            "cannot schedule into the past: now={} requested={}",
+            self.now,
+            time
+        );
+        self.queue.push(time, event);
+    }
+
+    /// Schedule after a non-negative delay.
+    pub fn schedule_in(&mut self, delay: Time, event: E) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.queue.push(self.now + delay, event);
+    }
+
+    /// Ask the run loop to stop after the current event.
+    pub fn halt(&mut self) {
+        self.halt = true;
+    }
+
+    /// Run until the queue drains, the handler halts, or the guard trips.
+    ///
+    /// The handler receives `(engine, time, event)` — it can freely
+    /// schedule new events on `engine`.
+    pub fn run<F>(&mut self, mut handler: F) -> StopReason
+    where
+        F: FnMut(&mut Engine<E>, Time, E),
+    {
+        loop {
+            if self.halt {
+                self.halt = false;
+                return StopReason::Halted;
+            }
+            let Some(ev) = self.queue.pop() else {
+                return StopReason::Drained;
+            };
+            debug_assert!(
+                ev.time >= self.now,
+                "time went backwards: {} -> {}",
+                self.now,
+                ev.time
+            );
+            self.now = ev.time;
+            self.processed += 1;
+            if self.processed > self.event_limit {
+                return StopReason::EventLimit;
+            }
+            handler(self, ev.time, ev.event);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Ping(u32),
+        Stop,
+    }
+
+    #[test]
+    fn processes_in_order_and_advances_clock() {
+        let mut eng = Engine::new();
+        eng.schedule_at(2.0, Ev::Ping(2));
+        eng.schedule_at(1.0, Ev::Ping(1));
+        let mut seen = Vec::new();
+        let reason = eng.run(|e, t, ev| {
+            seen.push((t, format!("{ev:?}")));
+            if let Ev::Ping(1) = ev {
+                e.schedule_in(0.5, Ev::Ping(15));
+            }
+        });
+        assert_eq!(reason, StopReason::Drained);
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0].0, 1.0);
+        assert_eq!(seen[1].0, 1.5);
+        assert_eq!(seen[2].0, 2.0);
+        assert_eq!(eng.now(), 2.0);
+        assert_eq!(eng.processed(), 3);
+    }
+
+    #[test]
+    fn halt_stops_early() {
+        let mut eng = Engine::new();
+        eng.schedule_at(1.0, Ev::Stop);
+        eng.schedule_at(2.0, Ev::Ping(9));
+        let reason = eng.run(|e, _, ev| {
+            if let Ev::Stop = ev {
+                e.halt();
+            }
+        });
+        assert_eq!(reason, StopReason::Halted);
+        assert_eq!(eng.pending(), 1);
+    }
+
+    #[test]
+    fn event_limit_guard() {
+        let mut eng = Engine::new().with_event_limit(10);
+        eng.schedule_at(0.0, Ev::Ping(0));
+        let reason = eng.run(|e, _, _| {
+            // Livelock: every event schedules another at the same time.
+            e.schedule_in(0.0, Ev::Ping(0));
+        });
+        assert_eq!(reason, StopReason::EventLimit);
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    fn cannot_schedule_into_past() {
+        let mut eng = Engine::new();
+        eng.schedule_at(5.0, Ev::Ping(0));
+        eng.run(|e, _, _| {
+            e.schedule_at(1.0, Ev::Ping(1));
+        });
+    }
+
+    #[test]
+    fn same_time_events_fifo() {
+        let mut eng = Engine::new();
+        for i in 0..10 {
+            eng.schedule_at(1.0, Ev::Ping(i));
+        }
+        let mut seen = Vec::new();
+        eng.run(|_, _, ev| {
+            if let Ev::Ping(i) = ev {
+                seen.push(i)
+            }
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper evaluates HFSP on a 100-node EC2 cluster and on **Mumak**,
+//! Hadoop's own discrete-event emulator. This module is our
+//! Mumak-equivalent substrate: a deterministic event queue + virtual clock
+//! over which the cluster model ([`crate::cluster`]) is built.
+//!
+//! Determinism notes:
+//! * events at equal timestamps are delivered in insertion (FIFO) order —
+//!   the queue carries a monotonically increasing sequence number;
+//! * simulated time is `f64` seconds; the engine asserts time never flows
+//!   backwards.
+
+pub mod engine;
+pub mod queue;
+
+pub use engine::{Engine, StopReason};
+pub use queue::{EventQueue, ScheduledEvent};
+
+/// Simulated time, in seconds since simulation start.
+pub type Time = f64;

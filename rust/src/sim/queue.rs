@@ -1,0 +1,163 @@
+//! Deterministic pending-event queue.
+//!
+//! A binary min-heap ordered by `(time, seq)` where `seq` is a global
+//! insertion counter: events scheduled for the same instant are delivered
+//! in the order they were scheduled. This stable tie-break is what makes
+//! whole simulation runs bit-reproducible across platforms.
+
+use super::Time;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event with its scheduled delivery time.
+#[derive(Clone, Debug)]
+pub struct ScheduledEvent<E> {
+    pub time: Time,
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E> PartialEq for ScheduledEvent<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for ScheduledEvent<E> {}
+
+impl<E> PartialOrd for ScheduledEvent<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for ScheduledEvent<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want the earliest event on
+        // top. Total order on (time, seq); times are finite by invariant.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("non-finite event time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Pending-event set.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<ScheduledEvent<E>>,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// Schedule `event` at absolute time `time`. Panics on NaN/negative
+    /// time — both indicate a simulator bug upstream.
+    pub fn push(&mut self, time: Time, event: E) -> u64 {
+        assert!(
+            time.is_finite() && time >= 0.0,
+            "event time must be finite and non-negative, got {time}"
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(ScheduledEvent { time, seq, event });
+        seq
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        self.heap.pop()
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total number of events ever scheduled (diagnostics).
+    pub fn scheduled_count(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_tie_break_at_equal_times() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 'x');
+        q.push(1.0, 'y');
+        assert_eq!(q.pop().unwrap().event, 'y');
+        q.push(5.0, 'z');
+        assert_eq!(q.pop().unwrap().event, 'z');
+        assert_eq!(q.pop().unwrap().event, 'x');
+        assert!(q.pop().is_none());
+        assert_eq!(q.scheduled_count(), 3);
+    }
+
+    #[test]
+    fn peek_time_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(2.5, ());
+        q.push(1.5, ());
+        assert_eq!(q.peek_time(), Some(1.5));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_time() {
+        let mut q = EventQueue::new();
+        q.push(-1.0, ());
+    }
+}

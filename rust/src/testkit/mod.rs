@@ -1,0 +1,306 @@
+//! Property-based testing mini-framework.
+//!
+//! The offline registry does not carry `proptest`, so this module
+//! provides the slice of it the test suite needs: composable random
+//! generators ([`Gen`]), a seeded runner that reports the failing seed,
+//! and greedy input shrinking for a minimal counterexample.
+//!
+//! ```no_run
+//! use hfsp::testkit::{self, Gen};
+//! testkit::check("sum is commutative", 100, Gen::f64_range(-1e3, 1e3)
+//!     .pair(Gen::f64_range(-1e3, 1e3)), |(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::rng::{Pcg64, Rng, SeedableRng};
+
+/// A random value generator with an attached shrinker.
+pub struct Gen<T> {
+    #[allow(clippy::type_complexity)]
+    gen: Box<dyn Fn(&mut Pcg64) -> T>,
+    #[allow(clippy::type_complexity)]
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Pcg64) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self {
+            gen: Box::new(gen),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (no shrinking through the map).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| f(self.sample(rng)), |_| Vec::new())
+    }
+
+    /// Pair two generators; shrinks component-wise.
+    pub fn pair<U: Clone + 'static>(self, other: Gen<U>) -> Gen<(T, U)> {
+        let (g1, s1) = (self.gen, self.shrink);
+        let (g2, s2) = (other.gen, other.shrink);
+        Gen::new(
+            move |rng| (g1(rng), g2(rng)),
+            move |(a, b)| {
+                let mut out: Vec<(T, U)> = Vec::new();
+                for a2 in s1(a) {
+                    out.push((a2, b.clone()));
+                }
+                for b2 in s2(b) {
+                    out.push((a.clone(), b2));
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in `[lo, hi]`, shrinking toward `lo`.
+    pub fn usize_range(lo: usize, hi: usize) -> Gen<usize> {
+        assert!(lo <= hi);
+        Gen::new(
+            move |rng| lo + rng.gen_index(hi - lo + 1),
+            move |&v| {
+                let mut out = Vec::new();
+                if v > lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2);
+                    out.push(v - 1);
+                }
+                out.sort_unstable();
+                out.dedup();
+                out.retain(|&x| x < v);
+                out
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform f64 in `[lo, hi)`, shrinking toward `lo` (then 0 if in
+    /// range).
+    pub fn f64_range(lo: f64, hi: f64) -> Gen<f64> {
+        assert!(hi > lo);
+        Gen::new(
+            move |rng| rng.gen_range_f64(lo, hi),
+            move |&v| {
+                let mut out = Vec::new();
+                if (lo..hi).contains(&0.0) && v != 0.0 {
+                    out.push(0.0);
+                }
+                if v != lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2.0);
+                }
+                out.retain(|x| (x - v).abs() > 1e-12);
+                out
+            },
+        )
+    }
+}
+
+/// Vector generator with length in `[0, max_len]`, shrinking by halving
+/// length and shrinking elements.
+pub fn vec_of<T: Clone + 'static>(elem: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let elem2 = elem.clone();
+    Gen::new(
+        move |rng| {
+            let len = rng.gen_index(max_len + 1);
+            (0..len).map(|_| elem.sample(rng)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out: Vec<Vec<T>> = Vec::new();
+            if !v.is_empty() {
+                out.push(Vec::new());
+                out.push(v[..v.len() / 2].to_vec());
+                let mut minus_last = v.clone();
+                minus_last.pop();
+                out.push(minus_last);
+                // Shrink one element at a time (first element only, to
+                // bound the candidate set).
+                for (i, x) in v.iter().enumerate().take(3) {
+                    for x2 in elem2.shrinks(x) {
+                        let mut v2 = v.clone();
+                        v2[i] = x2;
+                        out.push(v2);
+                    }
+                }
+            }
+            out.retain(|c| c.len() < v.len() || c.iter().zip(v).any(|(a, b)| !ptr_eq(a, b)));
+            out
+        },
+    )
+}
+
+fn ptr_eq<T>(a: &T, b: &T) -> bool {
+    std::ptr::eq(a, b)
+}
+
+/// Non-empty vector variant.
+pub fn vec1_of<T: Clone + 'static>(elem: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+    assert!(max_len >= 1);
+    let inner = vec_of(elem, max_len - 1);
+    let head = std::rc::Rc::new(inner);
+    let head2 = head.clone();
+    Gen::new(
+        move |rng| {
+            let mut v = head.sample(rng);
+            if v.is_empty() {
+                // Regenerate a singleton deterministically from the rng.
+                v = loop {
+                    let c = head.sample(rng);
+                    if !c.is_empty() {
+                        break c;
+                    }
+                    // Extremely unlikely to loop long; max_len >= 1 means
+                    // p(empty) = 1/max_len.
+                };
+            }
+            v
+        },
+        move |v| {
+            head2
+                .shrinks(v)
+                .into_iter()
+                .filter(|c| !c.is_empty())
+                .collect()
+        },
+    )
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure<T> {
+    pub seed: u64,
+    pub case: u64,
+    pub minimal: T,
+    pub shrink_steps: usize,
+}
+
+/// Run `prop` on `cases` random inputs; on failure, shrink greedily and
+/// panic with the minimal counterexample. The base seed comes from
+/// `HFSP_PROPTEST_SEED` (default 0xC0FFEE) so failures are reproducible.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: u64,
+    gen: Gen<T>,
+    prop: impl Fn(T) -> bool,
+) {
+    if let Some(f) = check_quiet(cases, &gen, &prop) {
+        panic!(
+            "property {name:?} failed (seed={}, case={}, {} shrink steps)\n\
+             minimal counterexample: {:#?}",
+            f.seed, f.case, f.shrink_steps, f.minimal
+        );
+    }
+}
+
+/// Non-panicking runner (used by the framework's own tests).
+pub fn check_quiet<T: Clone + 'static>(
+    cases: u64,
+    gen: &Gen<T>,
+    prop: &impl Fn(T) -> bool,
+) -> Option<Failure<T>> {
+    let seed = std::env::var("HFSP_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut rng = Pcg64::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if prop(input.clone()) {
+            continue;
+        }
+        // Shrink greedily: repeatedly take the first failing candidate.
+        let mut minimal = input;
+        let mut steps = 0;
+        'outer: loop {
+            for candidate in gen.shrinks(&minimal) {
+                if !prop(candidate.clone()) {
+                    minimal = candidate;
+                    steps += 1;
+                    if steps > 1000 {
+                        break 'outer;
+                    }
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        return Some(Failure {
+            seed,
+            case,
+            minimal,
+            shrink_steps: steps,
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 200, Gen::f64_range(-100.0, 100.0), |x| {
+            x.abs() >= 0.0
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // "all values < 50" fails; minimal counterexample should be close
+        // to 50 after shrinking from the lo side.
+        let gen = Gen::usize_range(0, 1000);
+        let f = check_quiet(500, &gen, &|x| x < 50).expect("property must fail");
+        assert!(f.minimal >= 50, "counterexample {}", f.minimal);
+        // Greedy shrink drives it to a boundary-ish value.
+        assert!(f.minimal <= 1000);
+    }
+
+    #[test]
+    fn pair_generator_shrinks_componentwise() {
+        let gen = Gen::usize_range(0, 100).pair(Gen::usize_range(0, 100));
+        let f = check_quiet(500, &gen, &|(a, b)| a + b < 120).expect("must fail");
+        assert!(f.minimal.0 + f.minimal.1 >= 120);
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = vec_of(Gen::f64_range(0.0, 1.0), 10);
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..100 {
+            let v = gen.sample(&mut rng);
+            assert!(v.len() <= 10);
+            assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn vec1_never_empty() {
+        let gen = vec1_of(Gen::usize_range(0, 5), 8);
+        let mut rng = Pcg64::seed_from_u64(2);
+        for _ in 0..200 {
+            assert!(!gen.sample(&mut rng).is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn check_panics_with_context() {
+        check("always false", 10, Gen::usize_range(0, 10), |_| false);
+    }
+}

@@ -1,0 +1,304 @@
+//! Command-line argument parsing (subcommands + flags).
+//!
+//! A small, dependency-free substitute for `clap`: the offline environment
+//! only carries the `xla` crate closure. Supports `--flag value`,
+//! `--flag=value`, boolean `--flag`, repeated flags, positional arguments
+//! and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative flag specification.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(default) => valued flag with default
+    /// (empty string means "required").
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    /// Valued flag with a required parse; error mentions the flag name.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T> {
+        self.get_parsed(name)?
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A subcommand with its flag specs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// Valued flag with default.
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default),
+        });
+        self
+    }
+
+    /// Boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse `argv` (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                if !d.is_empty() {
+                    args.values
+                        .entry(f.name.to_string())
+                        .or_default()
+                        .push(d.to_string());
+                }
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n{}", self.usage()))?;
+                match spec.default {
+                    None => {
+                        if inline_val.is_some() {
+                            anyhow::bail!("flag --{name} does not take a value");
+                        }
+                        args.bools.insert(name.to_string(), true);
+                    }
+                    Some(_) => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?
+                            }
+                        };
+                        let entry = args.values.entry(name.to_string()).or_default();
+                        // Replace the default on first explicit occurrence;
+                        // append on repeats.
+                        if entry.len() == 1
+                            && spec.default.map(|d| !d.is_empty()).unwrap_or(false)
+                            && entry[0] == spec.default.unwrap()
+                        {
+                            entry.clear();
+                        }
+                        entry.push(val);
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: hfsp {} [flags]\n  {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = match f.default {
+                None => "".to_string(),
+                Some("") => " <value> (required)".to_string(),
+                Some(d) => format!(" <value> (default: {d})"),
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nsubcommands:\n", self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        s.push_str("\nrun `hfsp <subcommand> --help` for flags\n");
+        s
+    }
+
+    /// Dispatch: returns the matched command name and parsed args, or the
+    /// usage/help text to print.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Parsed> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+            return Ok(Parsed::Help(self.usage()));
+        }
+        let name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == name.as_str())
+            .ok_or_else(|| anyhow::anyhow!("unknown subcommand {name:?}\n{}", self.usage()))?;
+        let rest = &argv[1..];
+        if rest.iter().any(|a| a == "--help") {
+            return Ok(Parsed::Help(cmd.usage()));
+        }
+        Ok(Parsed::Command(cmd.name, cmd.parse(rest)?))
+    }
+}
+
+/// Result of CLI dispatch.
+pub enum Parsed {
+    Help(String),
+    Command(&'static str, Args),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("simulate", "run a simulation")
+            .flag("nodes", "100", "cluster size")
+            .flag("seed", "42", "rng seed")
+            .flag("out", "", "output path (required)")
+            .switch("verbose", "chatty output")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.get("nodes"), Some("100"));
+        assert_eq!(a.require::<u64>("seed").unwrap(), 42);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn explicit_overrides_default() {
+        let a = cmd()
+            .parse(&argv(&["--nodes=10", "--out", "x", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.require::<usize>("nodes").unwrap(), 10);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = cmd().parse(&argv(&["--seed=7", "--out", "o"])).unwrap();
+        assert_eq!(a.require::<u64>("seed").unwrap(), 7);
+        let b = cmd().parse(&argv(&["--seed", "7", "--out=o"])).unwrap();
+        assert_eq!(b.require::<u64>("seed").unwrap(), 7);
+        assert_eq!(b.get("out"), Some("o"));
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert!(a.require::<String>("out").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cmd().parse(&argv(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn bool_flag_rejects_value() {
+        assert!(cmd().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["trace.jsonl", "--out", "x"])).unwrap();
+        assert_eq!(a.positional(), &["trace.jsonl".to_string()]);
+    }
+
+    #[test]
+    fn repeated_flag_collects() {
+        let a = cmd()
+            .parse(&argv(&["--out", "a", "--out", "b"]))
+            .unwrap();
+        assert_eq!(a.get_all("out"), &["a".to_string(), "b".to_string()]);
+        assert_eq!(a.get("out"), Some("b"));
+    }
+
+    #[test]
+    fn cli_dispatch() {
+        let cli = Cli {
+            about: "hfsp",
+            commands: vec![cmd()],
+        };
+        match cli.parse(&argv(&["simulate", "--out", "x"])).unwrap() {
+            Parsed::Command("simulate", a) => assert_eq!(a.get("out"), Some("x")),
+            _ => panic!("expected command"),
+        }
+        assert!(matches!(cli.parse(&argv(&["--help"])).unwrap(), Parsed::Help(_)));
+        assert!(cli.parse(&argv(&["nope"])).is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! Key-value configuration files with typed access and CLI overrides.
+//!
+//! A small TOML-subset loader (sections, `key = value`, comments, strings,
+//! numbers, booleans, homogeneous inline arrays) standing in for the
+//! unavailable `toml`/`serde` crates. The launcher reads a config file,
+//! applies `--set section.key=value` overrides from the command line, and
+//! hands typed views to each subsystem.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed configuration: flat map of `section.key` → raw value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+/// Configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Num(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Arr(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error at line {line}: {message}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ConfigError {
+                        line: lineno + 1,
+                        message: "empty section name".into(),
+                    });
+                }
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(ConfigError {
+                line: lineno + 1,
+                message: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: lineno + 1,
+                    message: "empty key".into(),
+                });
+            }
+            let value = parse_value(val.trim()).map_err(|m| ConfigError {
+                line: lineno + 1,
+                message: m,
+            })?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.entries.insert(full, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {path:?}: {e}"))?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Apply a `section.key=value` override (from `--set`).
+    pub fn apply_override(&mut self, spec: &str) -> anyhow::Result<()> {
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override must be key=value, got {spec:?}"))?;
+        let value = parse_value(val.trim()).map_err(|m| anyhow::anyhow!("{m}"))?;
+        self.entries.insert(key.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) => *x,
+            _ => default,
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) if *x >= 0.0 => *x as usize,
+            _ => default,
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) if *x >= 0.0 => *x as u64,
+            _ => default,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.entries.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.entries.get(key) {
+            Some(Value::Str(s)) => s.as_str(),
+            _ => default,
+        }
+    }
+
+    /// All keys under a section prefix (`"hfsp"` matches `hfsp.*`).
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|k| k.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value {s:?} (string values need quotes)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster shape
+[cluster]
+nodes = 100
+map_slots = 4      # per node
+reduce_slots = 2
+block_mb = 128.0
+
+[hfsp]
+enabled = true
+preemption = "suspend"
+sample_set = 5
+xi = 1.0
+thresholds = [8, 16]
+
+[workload]
+name = "fb-dataset"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("cluster.nodes", 0), 100);
+        assert_eq!(c.get_usize("cluster.map_slots", 0), 4);
+        assert_eq!(c.get_f64("cluster.block_mb", 0.0), 128.0);
+        assert!(c.get_bool("hfsp.enabled", false));
+        assert_eq!(c.get_str("hfsp.preemption", ""), "suspend");
+        assert_eq!(c.get_str("workload.name", ""), "fb-dataset");
+        match c.get("hfsp.thresholds") {
+            Some(Value::Arr(v)) => assert_eq!(v.len(), 2),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("cluster.nodes", 7), 7);
+        assert_eq!(c.get_str("x.y", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.apply_override("cluster.nodes=10").unwrap();
+        c.apply_override(r#"hfsp.preemption="wait""#).unwrap();
+        assert_eq!(c.get_usize("cluster.nodes", 0), 10);
+        assert_eq!(c.get_str("hfsp.preemption", ""), "wait");
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(c.get_str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Config::parse("[s]\nk = \n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn unquoted_string_rejected() {
+        assert!(Config::parse("k = hello").is_err());
+    }
+
+    #[test]
+    fn section_keys_lists_prefix() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys = c.section_keys("hfsp");
+        assert!(keys.contains(&"hfsp.enabled"));
+        assert!(keys.contains(&"hfsp.sample_set"));
+        assert!(!keys.iter().any(|k| k.starts_with("cluster.")));
+    }
+}

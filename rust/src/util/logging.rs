@@ -1,0 +1,100 @@
+//! Leveled logger implementing the `log` facade.
+//!
+//! Writes to stderr with a monotonic-ish timestamp and module path; level
+//! is controlled by `HFSP_LOG` (error|warn|info|debug|trace) or
+//! programmatically. Substitute for the unavailable `tracing-subscriber`.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.3}s {lvl} {}] {}",
+            record.module_path().unwrap_or("?"),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+/// Parse a level name; defaults to `Info` on unknown input.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger once; later calls only adjust the level.
+pub fn init(level: LevelFilter) {
+    if !INSTALLED.swap(true, Ordering::SeqCst) {
+        // The logger lives for the program duration.
+        let _ = log::set_boxed_logger(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+    }
+    log::set_max_level(level);
+}
+
+/// Initialize from the `HFSP_LOG` environment variable (default `warn`,
+/// so tests and benches stay quiet unless asked).
+pub fn init_from_env() {
+    let level = std::env::var("HFSP_LOG")
+        .map(|s| parse_level(&s))
+        .unwrap_or(LevelFilter::Warn);
+    init(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_known_and_unknown() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init(LevelFilter::Warn);
+        init(LevelFilter::Info);
+        assert_eq!(log::max_level(), LevelFilter::Info);
+        log::info!("logger smoke test");
+    }
+}

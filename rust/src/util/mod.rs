@@ -1,0 +1,15 @@
+//! Infrastructure substrates: PRNG, statistics, JSON, CLI, config, logging
+//! and slot timelines.
+//!
+//! The offline build environment only carries the `xla` crate's dependency
+//! closure, so functionality usually imported from `rand`, `serde_json`,
+//! `clap`, `toml` and `tracing-subscriber` is implemented here (see
+//! DESIGN.md §2 for the substitution table).
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timeline;

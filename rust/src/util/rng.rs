@@ -1,0 +1,407 @@
+//! Deterministic pseudo-random number generation and distribution sampling.
+//!
+//! The offline build environment does not ship the `rand` crate, so this
+//! module provides the small subset the simulator needs: a fast, seedable,
+//! high-quality generator ([`Pcg64`], the PCG-XSL-RR 128/64 variant) plus
+//! the samplers used by the workload generator (exponential, uniform,
+//! log-normal, Zipf, Pareto, categorical choice).
+//!
+//! Determinism is a hard requirement: every experiment in the paper
+//! reproduction is seeded, and two runs with the same seed must produce
+//! bit-identical event traces (this is asserted by integration tests).
+
+/// Minimal trait mirroring `rand::RngCore` for the operations we need.
+pub trait Rng {
+    /// Next 64 uniformly distributed bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits: mantissa precision of an f64.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift
+    /// rejection method (unbiased).
+    fn gen_range_u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "gen_range_u64: bound must be positive");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let low = m as u64;
+            if low >= bound || low >= (bound.wrapping_neg() % bound) {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform `usize` in `[0, bound)`.
+    #[inline]
+    fn gen_index(&mut self, bound: usize) -> usize {
+        self.gen_range_u64(bound as u64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi >= lo);
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+/// Seeding constructor, mirroring `rand::SeedableRng::seed_from_u64`.
+pub trait SeedableRng: Sized {
+    fn seed_from_u64(seed: u64) -> Self;
+}
+
+/// SplitMix64: used to expand a 64-bit seed into generator state.
+///
+/// Reference: Steele, Lea, Flood, "Fast splittable pseudorandom number
+/// generators" (OOPSLA 2014). Passes BigCrush when used directly; here it
+/// only seeds PCG state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl SeedableRng for SplitMix64 {
+    fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed)
+    }
+}
+
+/// PCG-XSL-RR 128/64 ("pcg64"): 128-bit LCG state, 64-bit xor-shift-low +
+/// random-rotate output. Period 2^128, passes PractRand/BigCrush.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Construct from explicit state/stream. The stream selector is forced
+    /// odd, as PCG requires.
+    pub fn new(state: u128, stream: u128) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        // Standard PCG seeding dance.
+        let _ = rng.step();
+        rng.state = rng.state.wrapping_add(state);
+        let _ = rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) -> u128 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        self.state
+    }
+
+    /// Derive an independent child generator; used to give each simulation
+    /// component (workload gen, HDFS placement, task-time sampling, ...) its
+    /// own stream so adding draws in one component does not perturb others.
+    pub fn split(&mut self) -> Pcg64 {
+        let s = ((self.next_u64() as u128) << 64) | self.next_u64() as u128;
+        let inc = ((self.next_u64() as u128) << 64) | self.next_u64() as u128;
+        Pcg64::new(s, inc)
+    }
+}
+
+impl Rng for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let state = self.step();
+        // XSL-RR output function.
+        let xored = ((state >> 64) as u64) ^ (state as u64);
+        let rot = (state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}
+
+impl SeedableRng for Pcg64 {
+    fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let stream = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        Pcg64::new(state, stream)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Distribution samplers
+// ---------------------------------------------------------------------------
+
+/// Exponential variate with the given mean (= 1/rate), by inversion.
+pub fn exponential<R: Rng>(rng: &mut R, mean: f64) -> f64 {
+    debug_assert!(mean > 0.0);
+    // 1 - U in (0, 1] avoids ln(0).
+    -mean * (1.0 - rng.next_f64()).ln()
+}
+
+/// Standard normal via Box–Muller (polar-free variant; uses two uniforms).
+pub fn std_normal<R: Rng>(rng: &mut R) -> f64 {
+    let u1 = 1.0 - rng.next_f64(); // (0, 1]
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Normal with mean/stddev.
+pub fn normal<R: Rng>(rng: &mut R, mean: f64, std: f64) -> f64 {
+    mean + std * std_normal(rng)
+}
+
+/// Log-normal parameterised by the mean/std of the *underlying* normal.
+pub fn log_normal<R: Rng>(rng: &mut R, mu: f64, sigma: f64) -> f64 {
+    normal(rng, mu, sigma).exp()
+}
+
+/// Pareto (Lomax-free classic form): `x_m * U^(-1/alpha)`.
+pub fn pareto<R: Rng>(rng: &mut R, x_min: f64, alpha: f64) -> f64 {
+    debug_assert!(x_min > 0.0 && alpha > 0.0);
+    x_min * (1.0 - rng.next_f64()).powf(-1.0 / alpha)
+}
+
+/// Zipf-distributed rank in `[1, n]` with exponent `s`, by inverse-CDF over
+/// the precomputed harmonic weights. O(log n) per draw.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf: n must be positive");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Draw a rank in `[1, n]`.
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> usize {
+        let u = rng.next_f64();
+        match self
+            .cdf
+            .binary_search_by(|probe| probe.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i + 1,
+            Err(i) => i + 1,
+        }
+    }
+}
+
+/// Weighted categorical choice: returns an index sampled proportionally to
+/// `weights`. Panics on empty or all-zero weights.
+pub fn weighted_choice<R: Rng>(rng: &mut R, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weighted_choice: weights must sum to > 0");
+    let mut u = rng.next_f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Fisher–Yates shuffle.
+pub fn shuffle<R: Rng, T>(rng: &mut R, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.gen_index(i + 1);
+        xs.swap(i, j);
+    }
+}
+
+/// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+pub fn sample_indices<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "sample_indices: k must be <= n");
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.gen_index(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg64_is_deterministic() {
+        let mut a = Pcg64::seed_from_u64(7);
+        let mut b = Pcg64::seed_from_u64(7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg64_differs_across_seeds() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_u64_unbiased_small_bound() {
+        let mut r = Pcg64::seed_from_u64(11);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.gen_range_u64(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.2).abs() < 0.01, "bucket fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean_converges() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let n = 200_000;
+        let mean = 13.0;
+        let sum: f64 = (0..n).map(|_| exponential(&mut r, mean)).sum();
+        let emp = sum / n as f64;
+        assert!((emp - mean).abs() / mean < 0.02, "empirical mean {emp}");
+    }
+
+    #[test]
+    fn normal_moments_converge() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| normal(&mut r, 3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn pareto_respects_min() {
+        let mut r = Pcg64::seed_from_u64(8);
+        for _ in 0..10_000 {
+            assert!(pareto(&mut r, 2.0, 1.5) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn zipf_rank_one_most_frequent() {
+        let mut r = Pcg64::seed_from_u64(9);
+        let z = Zipf::new(50, 1.1);
+        let mut counts = vec![0usize; 51];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[1] > counts[2]);
+        assert!(counts[2] > counts[10]);
+        assert_eq!(counts[0], 0);
+    }
+
+    #[test]
+    fn weighted_choice_proportions() {
+        let mut r = Pcg64::seed_from_u64(10);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[weighted_choice(&mut r, &w)] += 1;
+        }
+        assert!((counts[0] as f64 / n as f64 - 0.1).abs() < 0.01);
+        assert!((counts[2] as f64 / n as f64 - 0.6).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(12);
+        let mut xs: Vec<u32> = (0..100).collect();
+        shuffle(&mut r, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::seed_from_u64(13);
+        for _ in 0..100 {
+            let s = sample_indices(&mut r, 20, 7);
+            assert_eq!(s.len(), 7);
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 7, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_consumption() {
+        // Splitting then drawing from the parent must not change the child.
+        let mut p1 = Pcg64::seed_from_u64(99);
+        let mut c1 = p1.split();
+        let a: Vec<u64> = (0..16).map(|_| c1.next_u64()).collect();
+
+        let mut p2 = Pcg64::seed_from_u64(99);
+        let mut c2 = p2.split();
+        for _ in 0..1000 {
+            let _ = p2.next_u64();
+        }
+        let b: Vec<u64> = (0..16).map(|_| c2.next_u64()).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,400 @@
+//! Descriptive statistics, empirical CDFs and least-squares fitting.
+//!
+//! These are the numeric primitives behind the metrics pipeline (sojourn
+//! statistics, per-class ECDFs — Fig. 3 of the paper) and the native job
+//! size estimator (first-order statistics + least-squares quantile fit,
+//! §3.2.1 of the paper).
+
+/// Running mean/variance accumulator (Welford's algorithm) — numerically
+/// stable one-pass moments.
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Mean of a slice; NaN on empty.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile with linear interpolation between order statistics
+/// (the "linear" / type-7 method used by numpy). `q` in `[0, 100]`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let q = q.clamp(0.0, 100.0);
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median convenience wrapper.
+pub fn median(sorted: &[f64]) -> f64 {
+    percentile(sorted, 50.0)
+}
+
+/// Empirical cumulative distribution function over a sample.
+///
+/// Stored as the sorted sample; `eval(x)` returns `P(X <= x)` and
+/// `quantile(p)` the inverse. This is the CDF representation the paper's
+/// estimator constructs from the sample set of task runtimes (§3.2).
+#[derive(Clone, Debug)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    pub fn new(mut xs: Vec<f64>) -> Self {
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in ECDF sample"));
+        Self { sorted: xs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// P(X <= x).
+    pub fn eval(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        // Number of samples <= x, via binary search for the upper bound.
+        let mut lo = 0usize;
+        let mut hi = self.sorted.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.sorted[mid] <= x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as f64 / self.sorted.len() as f64
+    }
+
+    /// Inverse CDF with linear interpolation; `p` in `[0, 1]`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!(!self.sorted.is_empty());
+        percentile(&self.sorted, p.clamp(0.0, 1.0) * 100.0)
+    }
+
+    /// The sorted sample (the paper's "vector of task durations").
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// Evaluate the ECDF on a grid of `n` points spanning `[min, max]`,
+    /// returning `(x, P(X<=x))` pairs — the series plotted in Fig. 3.
+    pub fn series(&self, n: usize) -> Vec<(f64, f64)> {
+        assert!(n >= 2 && !self.sorted.is_empty());
+        let lo = self.sorted[0];
+        let hi = *self.sorted.last().unwrap();
+        (0..n)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+                (x, self.eval(x))
+            })
+            .collect()
+    }
+}
+
+/// Ordinary least squares fit `y = a + b x`. Returns `(a, b)`.
+///
+/// Used by the native estimator to fit the task-time quantile function from
+/// the sample set (the paper uses "simple regression analysis ... such that
+/// least squares error is minimized", §3.2.1).
+pub fn linear_least_squares(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty(), "least squares on empty data");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        // Degenerate (all x equal): flat line through the mean.
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Coefficient of determination R² for a linear fit.
+pub fn r_squared(xs: &[f64], ys: &[f64], a: f64, b: f64) -> f64 {
+    let my = mean(ys);
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (a + b * x)).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
+/// the range are clamped into the edge buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Bucket midpoints.
+    pub fn midpoints(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_direct_computation() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut m = Moments::new();
+        for &x in &xs {
+            m.push(x);
+        }
+        assert_eq!(m.count(), 8);
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        assert!((m.variance() - 4.0).abs() < 1e-12);
+        assert!((m.std() - 2.0).abs() < 1e-12);
+        assert_eq!(m.min(), 2.0);
+        assert_eq!(m.max(), 9.0);
+    }
+
+    #[test]
+    fn moments_merge_equals_single_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Moments::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Moments::new();
+        let mut b = Moments::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_eval_and_quantile_roundtrip() {
+        let e = Ecdf::new(vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(e.len(), 5);
+        assert!((e.eval(0.5) - 0.0).abs() < 1e-12);
+        assert!((e.eval(3.0) - 0.6).abs() < 1e-12);
+        assert!((e.eval(10.0) - 1.0).abs() < 1e-12);
+        assert!((e.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((e.quantile(1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_series_monotone() {
+        let e = Ecdf::new((0..50).map(|i| (i as f64 * 37.0) % 13.0).collect());
+        let s = e.series(20);
+        assert_eq!(s.len(), 20);
+        for w in s.windows(2) {
+            assert!(w[1].1 >= w[0].1, "ECDF must be nondecreasing");
+        }
+        assert!((s.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_exact_on_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let (a, b) = linear_least_squares(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+        assert!((r_squared(&xs, &ys, a, b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_degenerate_x() {
+        let xs = [2.0, 2.0, 2.0];
+        let ys = [1.0, 2.0, 3.0];
+        let (a, b) = linear_least_squares(&xs, &ys);
+        assert_eq!(b, 0.0);
+        assert!((a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_and_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        for x in [-1.0, 0.5, 3.0, 9.9, 42.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts()[0], 2); // -1 clamped + 0.5
+        assert_eq!(h.counts()[4], 2); // 9.9 + 42 clamped
+        assert_eq!(h.midpoints().len(), 5);
+        assert!((h.midpoints()[0] - 1.0).abs() < 1e-12);
+    }
+}

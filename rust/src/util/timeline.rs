@@ -1,0 +1,200 @@
+//! Per-job slot-occupancy timelines.
+//!
+//! Records, for each job, the intervals during which it held task slots.
+//! This is the data behind the paper's Fig. 7 "resource allocation graphs"
+//! (cumulative slot utilization per job over time) and is also used by
+//! tests to assert slot conservation.
+
+use std::collections::BTreeMap;
+
+/// One recorded slot-holding interval.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Step-function of concurrent slots held by one job.
+#[derive(Clone, Debug, Default)]
+pub struct JobTimeline {
+    /// (time, delta) events: +1 slot acquired, -1 slot released.
+    deltas: Vec<(f64, i64)>,
+}
+
+impl JobTimeline {
+    pub fn acquire(&mut self, t: f64) {
+        self.deltas.push((t, 1));
+    }
+
+    pub fn release(&mut self, t: f64) {
+        self.deltas.push((t, -1));
+    }
+
+    /// Evaluate concurrent slot count just after time `t`.
+    pub fn slots_at(&self, t: f64) -> i64 {
+        self.deltas
+            .iter()
+            .filter(|(dt, _)| *dt <= t)
+            .map(|(_, d)| d)
+            .sum()
+    }
+
+    /// Collapse to a sorted step series `(time, slots)`; consecutive equal
+    /// values are merged.
+    pub fn step_series(&self) -> Vec<(f64, i64)> {
+        let mut events = self.deltas.clone();
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out: Vec<(f64, i64)> = Vec::new();
+        let mut level = 0i64;
+        let mut i = 0;
+        while i < events.len() {
+            let t = events[i].0;
+            while i < events.len() && events[i].0 == t {
+                level += events[i].1;
+                i += 1;
+            }
+            if out.last().map(|&(_, l)| l) != Some(level) {
+                out.push((t, level));
+            }
+        }
+        out
+    }
+
+    /// Total slot-seconds consumed (integral of the step function). The
+    /// series must be balanced (every acquire has a release).
+    pub fn slot_seconds(&self) -> f64 {
+        let series = self.step_series();
+        let mut total = 0.0;
+        for w in series.windows(2) {
+            total += w[0].1 as f64 * (w[1].0 - w[0].0);
+        }
+        // Any trailing level must be zero for a finished job.
+        total
+    }
+
+    /// Maximum concurrency.
+    pub fn peak_slots(&self) -> i64 {
+        self.step_series().iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+
+    pub fn is_balanced(&self) -> bool {
+        self.deltas.iter().map(|(_, d)| d).sum::<i64>() == 0
+    }
+}
+
+/// Timelines for a set of jobs, keyed by an opaque id.
+#[derive(Clone, Debug, Default)]
+pub struct TimelineSet {
+    jobs: BTreeMap<u64, JobTimeline>,
+}
+
+impl TimelineSet {
+    pub fn acquire(&mut self, job: u64, t: f64) {
+        self.jobs.entry(job).or_default().acquire(t);
+    }
+
+    pub fn release(&mut self, job: u64, t: f64) {
+        self.jobs.entry(job).or_default().release(t);
+    }
+
+    pub fn job(&self, job: u64) -> Option<&JobTimeline> {
+        self.jobs.get(&job)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = (&u64, &JobTimeline)> {
+        self.jobs.iter()
+    }
+
+    /// Total concurrent slots across all jobs at time `t` — used to assert
+    /// cluster capacity is never exceeded.
+    pub fn total_slots_at(&self, t: f64) -> i64 {
+        self.jobs.values().map(|j| j.slots_at(t)).sum()
+    }
+
+    /// Render an ASCII stacked allocation chart (one row per job), sampling
+    /// `cols` time points in `[t0, t1]`. Each cell shows the job's slot
+    /// count (0 -> '.', 1-9 -> digit, >9 -> '#'): the textual analogue of
+    /// the paper's Fig. 7.
+    pub fn ascii_chart(&self, t0: f64, t1: f64, cols: usize) -> String {
+        let mut out = String::new();
+        for (id, tl) in &self.jobs {
+            out.push_str(&format!("job {id:>3} |"));
+            for c in 0..cols {
+                let t = t0 + (t1 - t0) * c as f64 / (cols.max(2) - 1) as f64;
+                let s = tl.slots_at(t);
+                let ch = match s {
+                    0 => '.',
+                    1..=9 => char::from_digit(s as u32, 10).unwrap(),
+                    _ => '#',
+                };
+                out.push(ch);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_series_merges_and_orders() {
+        let mut tl = JobTimeline::default();
+        tl.acquire(0.0);
+        tl.acquire(0.0);
+        tl.release(5.0);
+        tl.acquire(2.0);
+        tl.release(5.0);
+        tl.release(8.0);
+        let s = tl.step_series();
+        assert_eq!(s, vec![(0.0, 2), (2.0, 3), (5.0, 1), (8.0, 0)]);
+        assert!(tl.is_balanced());
+    }
+
+    #[test]
+    fn slots_at_evaluates_step() {
+        let mut tl = JobTimeline::default();
+        tl.acquire(1.0);
+        tl.release(4.0);
+        assert_eq!(tl.slots_at(0.5), 0);
+        assert_eq!(tl.slots_at(1.0), 1);
+        assert_eq!(tl.slots_at(3.9), 1);
+        assert_eq!(tl.slots_at(4.0), 0);
+    }
+
+    #[test]
+    fn slot_seconds_integrates() {
+        let mut tl = JobTimeline::default();
+        tl.acquire(0.0); // 1 slot on [0, 10)
+        tl.acquire(5.0); // 2 slots on [5, 10)
+        tl.release(10.0);
+        tl.release(10.0);
+        assert!((tl.slot_seconds() - 15.0).abs() < 1e-12);
+        assert_eq!(tl.peak_slots(), 2);
+    }
+
+    #[test]
+    fn total_slots_sums_jobs() {
+        let mut ts = TimelineSet::default();
+        ts.acquire(1, 0.0);
+        ts.acquire(2, 0.0);
+        ts.release(1, 2.0);
+        ts.release(2, 3.0);
+        assert_eq!(ts.total_slots_at(1.0), 2);
+        assert_eq!(ts.total_slots_at(2.5), 1);
+        assert_eq!(ts.total_slots_at(3.5), 0);
+    }
+
+    #[test]
+    fn ascii_chart_shape() {
+        let mut ts = TimelineSet::default();
+        ts.acquire(7, 0.0);
+        ts.release(7, 10.0);
+        let chart = ts.ascii_chart(0.0, 10.0, 20);
+        assert!(chart.starts_with("job   7 |"));
+        assert!(chart.contains('1'));
+        assert_eq!(chart.lines().count(), 1);
+    }
+}

@@ -1,0 +1,130 @@
+//! Workload generation and trace I/O.
+//!
+//! The paper drives its evaluation with SWIM-generated workloads
+//! synthesized from Facebook production traces ("FB-dataset", §4.1). The
+//! raw traces are not public; what the paper discloses is the class mix
+//! and shape statistics, which [`swim::FbWorkload`] reproduces exactly
+//! (see DESIGN.md §2 for the substitution note). Pathological and
+//! illustrative workloads used by the micro-benchmarks live in
+//! [`synthetic`]; [`trace`] reads/writes replayable JSONL traces.
+
+pub mod swim;
+pub mod synthetic;
+pub mod trace;
+
+use crate::job::JobSpec;
+
+/// A workload: jobs sorted by submission time.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, mut jobs: Vec<JobSpec>) -> Self {
+        jobs.sort_by(|a, b| {
+            a.submit_time
+                .partial_cmp(&b.submit_time)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        // Re-check ids are unique — duplicate ids would corrupt the
+        // driver's job table.
+        let mut ids: Vec<_> = jobs.iter().map(|j| j.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), jobs.len(), "duplicate job ids in workload");
+        Self {
+            name: name.into(),
+            jobs,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Total serialized work (map + reduce), seconds.
+    pub fn total_work(&self) -> f64 {
+        self.jobs.iter().map(|j| j.true_size()).sum()
+    }
+
+    /// Total task count over both phases.
+    pub fn total_tasks(&self) -> usize {
+        self.jobs.iter().map(|j| j.n_maps() + j.n_reduces()).sum()
+    }
+
+    /// Submission window (last arrival − first arrival), seconds.
+    pub fn span(&self) -> f64 {
+        match (self.jobs.first(), self.jobs.last()) {
+            (Some(a), Some(b)) => b.submit_time - a.submit_time,
+            _ => 0.0,
+        }
+    }
+
+    /// Keep only the MAP phase of every job (used by the paper's Fig. 6
+    /// robustness experiment, which runs a "modified, MAP only version of
+    /// the FB-dataset").
+    pub fn map_only(&self) -> Workload {
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut j = j.clone();
+                j.reduce_durations.clear();
+                j
+            })
+            .collect();
+        Workload::new(format!("{}-map-only", self.name), jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobClass;
+
+    fn spec(id: u64, submit: f64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            class: JobClass::Small,
+            submit_time: submit,
+            map_durations: vec![10.0],
+            reduce_durations: vec![5.0],
+        }
+    }
+
+    #[test]
+    fn sorts_by_submission() {
+        let w = Workload::new("t", vec![spec(1, 5.0), spec(2, 1.0)]);
+        assert_eq!(w.jobs[0].id, 2);
+        assert!((w.span() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn rejects_duplicate_ids() {
+        let _ = Workload::new("t", vec![spec(1, 0.0), spec(1, 1.0)]);
+    }
+
+    #[test]
+    fn totals() {
+        let w = Workload::new("t", vec![spec(1, 0.0), spec(2, 1.0)]);
+        assert_eq!(w.total_tasks(), 4);
+        assert!((w.total_work() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn map_only_strips_reduces() {
+        let w = Workload::new("t", vec![spec(1, 0.0)]).map_only();
+        assert_eq!(w.jobs[0].n_reduces(), 0);
+        assert_eq!(w.jobs[0].n_maps(), 1);
+        assert!(w.name.ends_with("map-only"));
+    }
+}

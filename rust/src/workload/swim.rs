@@ -1,0 +1,313 @@
+//! SWIM-like synthesis of the paper's FB-dataset workload (§4.1).
+//!
+//! The paper's workload is 100 unique jobs synthesized (with SWIM, Chen et
+//! al. MASCOTS'11) from Facebook production traces, clustered as:
+//!
+//! * **small** — 53 jobs; 75 % have a single MAP task, 25 % have 2;
+//! * **medium** — 41 jobs; 5–500 MAP tasks; half have no REDUCE tasks,
+//!   the rest have 2–100;
+//! * **large** — 6 jobs; 2 with ~3000 MAP tasks and no reduces, 3 with
+//!   700–1500 maps and 150–250 reduces, and 1 with 200 maps and 1000
+//!   reduces;
+//!
+//! with exponential inter-arrival times of mean 13 s (≈ 22-minute
+//! submission schedule). Jobs are I/O-intensive; task times within a job
+//! have no skew (§4.1 "Individual jobs" + §3.2.1: the shipped estimator
+//! assumes uniformly distributed task sizes), with residual variability
+//! below 5 % (§5).
+//!
+//! Counts within a class are drawn log-uniformly over the published
+//! ranges; per-job mean task durations are log-normal around I/O-bound
+//! processing of one 128 MB block (maps) and of a reducer partition
+//! (reduces). These are the only free parameters the paper does not pin
+//! down; EXPERIMENTS.md records the values used.
+
+use super::Workload;
+use crate::job::{JobClass, JobSpec};
+use crate::util::rng::{exponential, log_normal, shuffle, Pcg64, Rng};
+
+/// FB-dataset generator parameters.
+#[derive(Clone, Debug)]
+pub struct FbWorkload {
+    pub n_small: usize,
+    pub n_medium: usize,
+    pub n_large: usize,
+    /// Mean of the exponential inter-arrival distribution, seconds.
+    pub mean_interarrival_s: f64,
+    /// Median map-task duration, seconds (I/O time of one 128 MB block).
+    pub map_task_median_s: f64,
+    /// Log-normal sigma of per-job mean map-task duration.
+    pub map_task_sigma: f64,
+    /// Median reduce-task duration, seconds.
+    pub reduce_task_median_s: f64,
+    /// Log-normal sigma of per-job mean reduce-task duration.
+    pub reduce_task_sigma: f64,
+    /// Relative within-job task-time jitter (uniform ±jitter; the paper
+    /// reports < 5 % task-time variability on EC2).
+    pub task_jitter: f64,
+}
+
+impl Default for FbWorkload {
+    fn default() -> Self {
+        Self {
+            n_small: 53,
+            n_medium: 41,
+            n_large: 6,
+            mean_interarrival_s: 13.0,
+            map_task_median_s: 45.0,
+            map_task_sigma: 0.35,
+            reduce_task_median_s: 220.0,
+            reduce_task_sigma: 0.45,
+            task_jitter: 0.04,
+        }
+    }
+}
+
+impl FbWorkload {
+    /// Scale the workload keeping class proportions (utility for stress
+    /// experiments beyond the paper's 100 jobs).
+    pub fn scaled(factor: f64) -> Self {
+        let d = Self::default();
+        Self {
+            n_small: (d.n_small as f64 * factor).round().max(1.0) as usize,
+            n_medium: (d.n_medium as f64 * factor).round().max(1.0) as usize,
+            n_large: (d.n_large as f64 * factor).round().max(1.0) as usize,
+            ..d
+        }
+    }
+
+    /// Generate the workload.
+    pub fn generate(&self, rng: &mut Pcg64) -> Workload {
+        let mut classes = Vec::with_capacity(self.n_small + self.n_medium + self.n_large);
+        classes.extend(std::iter::repeat(JobClass::Small).take(self.n_small));
+        classes.extend(std::iter::repeat(JobClass::Medium).take(self.n_medium));
+        classes.extend(std::iter::repeat(JobClass::Large).take(self.n_large));
+        // Interleave classes randomly in the arrival sequence.
+        shuffle(rng, &mut classes);
+
+        // Pre-assign the six large-job shapes of §4.1, in random order.
+        let mut large_shapes = self.large_shapes(rng);
+        shuffle(rng, &mut large_shapes);
+        let mut next_large = 0;
+
+        let mut jobs = Vec::with_capacity(classes.len());
+        let mut t = 0.0;
+        for (i, class) in classes.iter().enumerate() {
+            t += exponential(rng, self.mean_interarrival_s);
+            let (n_maps, n_reduces) = match class {
+                JobClass::Small => {
+                    // 75% single map, 25% two maps; no reduces.
+                    let maps = if rng.gen_bool(0.25) { 2 } else { 1 };
+                    (maps, 0)
+                }
+                JobClass::Medium => {
+                    let maps = log_uniform_usize(rng, 5, 500);
+                    // Half the medium jobs have no reduce phase.
+                    let reduces = if rng.gen_bool(0.5) {
+                        0
+                    } else {
+                        log_uniform_usize(rng, 2, 100)
+                    };
+                    (maps, reduces)
+                }
+                JobClass::Large => {
+                    let shape = large_shapes[next_large % large_shapes.len()];
+                    next_large += 1;
+                    shape
+                }
+            };
+            jobs.push(self.make_job(rng, i as u64, *class, t, n_maps, n_reduces));
+        }
+        Workload::new("fb-dataset", jobs)
+    }
+
+    /// The six large-job shapes from §4.1.
+    fn large_shapes(&self, rng: &mut Pcg64) -> Vec<(usize, usize)> {
+        let mut shapes = Vec::with_capacity(6);
+        // 2 jobs with about 3000 map tasks, no reduces.
+        for _ in 0..2 {
+            shapes.push((2800 + rng.gen_index(400), 0));
+        }
+        // 3 jobs with 700–1500 maps and 150–250 reduces.
+        for _ in 0..3 {
+            shapes.push((
+                700 + rng.gen_index(801),
+                150 + rng.gen_index(101),
+            ));
+        }
+        // 1 job with 200 maps and 1000 reduces.
+        shapes.push((200, 1000));
+        shapes
+    }
+
+    fn make_job(
+        &self,
+        rng: &mut Pcg64,
+        id: u64,
+        class: JobClass,
+        submit: f64,
+        n_maps: usize,
+        n_reduces: usize,
+    ) -> JobSpec {
+        // Per-job mean task durations; no within-job skew (§4.1), just
+        // sub-5% jitter.
+        let map_mu = self.map_task_median_s.ln();
+        let red_mu = self.reduce_task_median_s.ln();
+        let job_map_mean = log_normal(rng, map_mu, self.map_task_sigma);
+        let job_red_mean = log_normal(rng, red_mu, self.reduce_task_sigma);
+        let jitter = |rng: &mut Pcg64, mean: f64| {
+            mean * (1.0 + rng.gen_range_f64(-self.task_jitter, self.task_jitter))
+        };
+        let map_durations = (0..n_maps).map(|_| jitter(rng, job_map_mean)).collect();
+        let reduce_durations = (0..n_reduces).map(|_| jitter(rng, job_red_mean)).collect();
+        JobSpec {
+            id,
+            name: format!("fb-{}-{id}", class.name()),
+            class,
+            submit_time: submit,
+            map_durations,
+            reduce_durations,
+        }
+    }
+}
+
+/// Integer drawn log-uniformly from `[lo, hi]` — heavy toward small values,
+/// matching the long-tailed job-size mix of production traces.
+fn log_uniform_usize(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo >= 1 && hi >= lo);
+    let x = rng.gen_range_f64((lo as f64).ln(), (hi as f64 + 1.0).ln());
+    (x.exp().floor() as usize).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SeedableRng;
+
+    fn gen(seed: u64) -> Workload {
+        FbWorkload::default().generate(&mut Pcg64::seed_from_u64(seed))
+    }
+
+    #[test]
+    fn class_counts_match_paper() {
+        let w = gen(1);
+        assert_eq!(w.len(), 100);
+        let count = |c: JobClass| w.jobs.iter().filter(|j| j.class == c).count();
+        assert_eq!(count(JobClass::Small), 53);
+        assert_eq!(count(JobClass::Medium), 41);
+        assert_eq!(count(JobClass::Large), 6);
+    }
+
+    #[test]
+    fn small_jobs_have_one_or_two_maps() {
+        let w = gen(2);
+        for j in w.jobs.iter().filter(|j| j.class == JobClass::Small) {
+            assert!(j.n_maps() == 1 || j.n_maps() == 2, "got {}", j.n_maps());
+            assert_eq!(j.n_reduces(), 0);
+        }
+    }
+
+    #[test]
+    fn medium_jobs_in_range() {
+        let w = gen(3);
+        for j in w.jobs.iter().filter(|j| j.class == JobClass::Medium) {
+            assert!((5..=500).contains(&j.n_maps()));
+            assert!(j.n_reduces() == 0 || (2..=100).contains(&j.n_reduces()));
+        }
+    }
+
+    #[test]
+    fn large_shapes_present() {
+        let w = gen(4);
+        let large: Vec<_> = w.jobs.iter().filter(|j| j.class == JobClass::Large).collect();
+        assert_eq!(large.len(), 6);
+        let huge_maps = large
+            .iter()
+            .filter(|j| j.n_maps() >= 2800 && j.n_reduces() == 0)
+            .count();
+        assert_eq!(huge_maps, 2, "two ~3000-map jobs");
+        let mid = large
+            .iter()
+            .filter(|j| (700..=1500).contains(&j.n_maps()) && (150..=250).contains(&j.n_reduces()))
+            .count();
+        assert_eq!(mid, 3);
+        let reducer_heavy = large
+            .iter()
+            .filter(|j| j.n_maps() == 200 && j.n_reduces() == 1000)
+            .count();
+        assert_eq!(reducer_heavy, 1);
+    }
+
+    #[test]
+    fn interarrival_mean_is_about_13s() {
+        // Average the span over several seeds: 100 jobs * 13 s ≈ 1300 s.
+        let mut spans = 0.0;
+        for seed in 0..10 {
+            spans += gen(seed).span();
+        }
+        let mean_span = spans / 10.0;
+        assert!(
+            (mean_span - 13.0 * 99.0).abs() < 250.0,
+            "mean span {mean_span}"
+        );
+    }
+
+    #[test]
+    fn task_times_have_low_within_job_skew() {
+        let w = gen(5);
+        for j in &w.jobs {
+            if j.n_maps() >= 2 {
+                let mean = j.true_phase_size(crate::job::Phase::Map) / j.n_maps() as f64;
+                for &d in &j.map_durations {
+                    assert!(
+                        (d - mean).abs() / mean < 0.1,
+                        "within-job skew too high: {d} vs mean {mean}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = gen(42);
+        let b = gen(42);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.submit_time, y.submit_time);
+            assert_eq!(x.map_durations, y.map_durations);
+        }
+    }
+
+    #[test]
+    fn total_tasks_matches_paper_scale() {
+        // The paper reports >14,000 map tasks across experiments; one
+        // workload instance lands in the same ballpark.
+        let mut totals = 0usize;
+        for seed in 0..5 {
+            totals += gen(seed).total_tasks();
+        }
+        let mean = totals / 5;
+        assert!(
+            (9_000..30_000).contains(&mean),
+            "mean total tasks {mean} out of expected ballpark"
+        );
+    }
+
+    #[test]
+    fn log_uniform_respects_bounds() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        for _ in 0..10_000 {
+            let x = log_uniform_usize(&mut rng, 5, 500);
+            assert!((5..=500).contains(&x));
+        }
+    }
+
+    #[test]
+    fn scaled_keeps_proportions() {
+        let half = FbWorkload::scaled(0.5);
+        assert_eq!(half.n_small, 27);
+        assert_eq!(half.n_medium, 21);
+        assert_eq!(half.n_large, 3);
+    }
+}

@@ -1,0 +1,181 @@
+//! Synthetic workloads for the paper's micro-benchmarks and illustrations.
+
+use super::Workload;
+use crate::job::{JobClass, JobSpec};
+
+/// The Fig. 7 preemption workload (§4.3 "Job preemption disciplines"):
+/// a small cluster of 4 machines × 2 reduce slots; five reduce-only jobs.
+///
+/// * `j1`: 11 reduce tasks of ~500 s each, arriving at t = 2 min 20 s;
+/// * `j2`: 2 reduce tasks, arriving at t = 2 min 30 s;
+/// * `j3..j5`: 1 reduce task each, arriving at t = 2 min 30 s;
+/// * reduce task times of `j2..j5` are smaller than `j1`'s (we use 60 s).
+pub fn fig7_workload() -> Workload {
+    let mut jobs = Vec::new();
+    jobs.push(JobSpec {
+        id: 1,
+        name: "fig7-j1".into(),
+        class: JobClass::Large,
+        submit_time: 140.0,
+        map_durations: vec![],
+        reduce_durations: vec![500.0; 11],
+    });
+    for (i, n_red) in [(2u64, 2usize), (3, 1), (4, 1), (5, 1)] {
+        jobs.push(JobSpec {
+            id: i,
+            name: format!("fig7-j{i}"),
+            class: JobClass::Small,
+            submit_time: 150.0,
+            map_durations: vec![],
+            reduce_durations: vec![60.0; n_red],
+        });
+    }
+    Workload::new("fig7-preemption", jobs)
+}
+
+/// Pathological arrival pattern discussed in §3.3 ("Finite machine
+/// resources"): a sequence of jobs sorted in decreasing size arriving
+/// back-to-back, each preempting its predecessor under eager preemption —
+/// the stressor for the suspension-threshold hysteresis.
+pub fn decreasing_size_workload(n_jobs: usize, slots_worth: usize, base_task_s: f64) -> Workload {
+    let jobs = (0..n_jobs)
+        .map(|i| {
+            // Sizes decrease geometrically so each arrival preempts.
+            let task_s = base_task_s * 0.7f64.powi(i as i32);
+            JobSpec {
+                id: i as u64 + 1,
+                name: format!("dec-{i}"),
+                class: JobClass::Medium,
+                submit_time: 5.0 * i as f64,
+                map_durations: vec![],
+                reduce_durations: vec![task_s.max(10.0); slots_worth],
+            }
+        })
+        .collect();
+    Workload::new("decreasing-size", jobs)
+}
+
+/// The three-job single-server example of Fig. 1 (§2.1): jobs requiring
+/// the full system, sizes 30/10/10 s (time to completion when holding
+/// *all* resources), arrivals 0/10/15 s.
+///
+/// Jobs are split into `waves` waves of `server_slots` tasks each so the
+/// slot-granular simulator can approximate fluid processor sharing (with
+/// a single wave, a job monopolizes the slots for its entire life and
+/// neither PS nor FSP behaviour is observable).
+pub fn fig1_workload(server_slots: usize, waves: usize) -> Workload {
+    assert!(waves >= 1);
+    let mk = |id: u64, submit: f64, size_s: f64| JobSpec {
+        id,
+        name: format!("fig1-j{id}"),
+        class: JobClass::Small,
+        submit_time: submit,
+        map_durations: vec![size_s / waves as f64; server_slots * waves],
+        reduce_durations: vec![],
+    };
+    Workload::new(
+        "fig1-fsp-intuition",
+        vec![mk(1, 0.0, 30.0), mk(2, 10.0, 10.0), mk(3, 15.0, 10.0)],
+    )
+}
+
+/// The multi-processor example of Fig. 2 (§2.1): jobs needing 100 %, 55 %
+/// and 35 % of the cluster, processing times 30/10/10 s, arrivals
+/// 0/10/13 s. Split into `waves` waves like [`fig1_workload`].
+pub fn fig2_workload(total_slots: usize, waves: usize) -> Workload {
+    assert!(waves >= 1);
+    let mk = |id: u64, submit: f64, frac: f64, size_s: f64| {
+        let width = ((total_slots as f64 * frac).round() as usize).max(1);
+        JobSpec {
+            id,
+            name: format!("fig2-j{id}"),
+            class: JobClass::Small,
+            submit_time: submit,
+            map_durations: vec![size_s / waves as f64; width * waves],
+            reduce_durations: vec![],
+        }
+    };
+    Workload::new(
+        "fig2-fsp-multiproc",
+        vec![
+            mk(1, 0.0, 1.0, 30.0),
+            mk(2, 10.0, 0.55, 10.0),
+            mk(3, 13.0, 0.35, 10.0),
+        ],
+    )
+}
+
+/// A uniform batch: `n` identical jobs arriving together — useful for
+/// fairness tests (under FAIR each should get an equal share; under HFSP
+/// they run in series in arrival order).
+pub fn uniform_batch(n: usize, maps_per_job: usize, task_s: f64) -> Workload {
+    let jobs = (0..n)
+        .map(|i| JobSpec {
+            id: i as u64 + 1,
+            name: format!("uni-{i}"),
+            class: JobClass::Medium,
+            submit_time: 0.0,
+            map_durations: vec![task_s; maps_per_job],
+            reduce_durations: vec![],
+        })
+        .collect();
+    Workload::new("uniform-batch", jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Phase;
+
+    #[test]
+    fn fig7_matches_paper_description() {
+        let w = fig7_workload();
+        assert_eq!(w.len(), 5);
+        let j1 = &w.jobs[0];
+        assert_eq!(j1.id, 1);
+        assert_eq!(j1.n_reduces(), 11);
+        assert!((j1.submit_time - 140.0).abs() < 1e-12);
+        assert!((j1.reduce_durations[0] - 500.0).abs() < 1e-12);
+        let j2 = w.jobs.iter().find(|j| j.id == 2).unwrap();
+        assert_eq!(j2.n_reduces(), 2);
+        for id in 3..=5 {
+            let j = w.jobs.iter().find(|j| j.id == id).unwrap();
+            assert_eq!(j.n_reduces(), 1);
+            assert!(j.reduce_durations[0] < 500.0);
+        }
+    }
+
+    #[test]
+    fn decreasing_sizes_decrease() {
+        let w = decreasing_size_workload(5, 8, 400.0);
+        let sizes: Vec<f64> = w.jobs.iter().map(|j| j.true_phase_size(Phase::Reduce)).collect();
+        for pair in sizes.windows(2) {
+            assert!(pair[0] > pair[1]);
+        }
+    }
+
+    #[test]
+    fn fig1_sizes() {
+        let w = fig1_workload(4, 6);
+        // Serialized work = hold-all-slots time x slots.
+        assert!((w.jobs[0].true_size() - 120.0).abs() < 1e-9);
+        assert!((w.jobs[1].true_size() - 40.0).abs() < 1e-9);
+        assert_eq!(w.jobs[0].n_maps(), 24);
+    }
+
+    #[test]
+    fn fig2_fractions() {
+        let w = fig2_workload(20, 1);
+        assert_eq!(w.jobs[0].n_maps(), 20);
+        assert_eq!(w.jobs[1].n_maps(), 11);
+        assert_eq!(w.jobs[2].n_maps(), 7);
+    }
+
+    #[test]
+    fn uniform_batch_shape() {
+        let w = uniform_batch(3, 4, 10.0);
+        assert_eq!(w.len(), 3);
+        assert!(w.jobs.iter().all(|j| j.n_maps() == 4));
+        assert!(w.jobs.iter().all(|j| j.submit_time == 0.0));
+    }
+}

@@ -1,0 +1,196 @@
+//! Replayable workload traces (JSON-lines).
+//!
+//! One job per line:
+//!
+//! ```json
+//! {"id": 3, "name": "fb-medium-3", "class": "medium", "submit": 41.2,
+//!  "maps": [24.8, 25.1], "reduces": []}
+//! ```
+//!
+//! Traces make experiments portable: `hfsp workload-gen` emits one, and
+//! `hfsp simulate --trace <file>` replays it under any scheduler, so a
+//! FAIR run and an HFSP run see the *identical* job sequence (as in the
+//! paper's macro benchmarks).
+
+use super::Workload;
+use crate::job::{JobClass, JobSpec};
+use crate::util::json::{self, Json};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+fn class_name(c: JobClass) -> &'static str {
+    c.name()
+}
+
+fn class_from_name(s: &str) -> anyhow::Result<JobClass> {
+    match s {
+        "small" => Ok(JobClass::Small),
+        "medium" => Ok(JobClass::Medium),
+        "large" => Ok(JobClass::Large),
+        other => anyhow::bail!("unknown job class {other:?}"),
+    }
+}
+
+/// Encode one job as a JSON object.
+pub fn job_to_json(job: &JobSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("id", job.id.into());
+    o.set("name", job.name.as_str().into());
+    o.set("class", class_name(job.class).into());
+    o.set("submit", job.submit_time.into());
+    o.set("maps", job.map_durations.clone().into());
+    o.set("reduces", job.reduce_durations.clone().into());
+    o
+}
+
+/// Decode one job from a JSON object.
+pub fn job_from_json(v: &Json) -> anyhow::Result<JobSpec> {
+    let get = |key: &str| {
+        v.get(key)
+            .ok_or_else(|| anyhow::anyhow!("trace job missing field {key:?}"))
+    };
+    let durations = |key: &str| -> anyhow::Result<Vec<f64>> {
+        get(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("field {key:?} must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .filter(|d| *d > 0.0)
+                    .ok_or_else(|| anyhow::anyhow!("task duration must be a positive number"))
+            })
+            .collect()
+    };
+    Ok(JobSpec {
+        id: get("id")?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("id must be a non-negative integer"))?,
+        name: get("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("name must be a string"))?
+            .to_string(),
+        class: class_from_name(
+            get("class")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("class must be a string"))?,
+        )?,
+        submit_time: get("submit")?
+            .as_f64()
+            .filter(|t| *t >= 0.0)
+            .ok_or_else(|| anyhow::anyhow!("submit must be a non-negative number"))?,
+        map_durations: durations("maps")?,
+        reduce_durations: durations("reduces")?,
+    })
+}
+
+/// Serialize a workload to JSONL text.
+pub fn to_jsonl(workload: &Workload) -> String {
+    let mut s = String::new();
+    for job in &workload.jobs {
+        s.push_str(&job_to_json(job).to_string_compact());
+        s.push('\n');
+    }
+    s
+}
+
+/// Parse a workload from JSONL text.
+pub fn from_jsonl(name: &str, text: &str) -> anyhow::Result<Workload> {
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+        jobs.push(
+            job_from_json(&v).map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?,
+        );
+    }
+    anyhow::ensure!(!jobs.is_empty(), "trace contains no jobs");
+    Ok(Workload::new(name, jobs))
+}
+
+/// Write a trace file.
+pub fn write_trace(workload: &Workload, path: &Path) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("cannot create trace {path:?}: {e}"))?;
+    f.write_all(to_jsonl(workload).as_bytes())?;
+    Ok(())
+}
+
+/// Read a trace file.
+pub fn read_trace(path: &Path) -> anyhow::Result<Workload> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open trace {path:?}: {e}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut text = String::new();
+    for line in reader.lines() {
+        text.push_str(&line?);
+        text.push('\n');
+    }
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("trace")
+        .to_string();
+    from_jsonl(&name, &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, SeedableRng};
+    use crate::workload::swim::FbWorkload;
+
+    #[test]
+    fn roundtrip_preserves_jobs() {
+        let w = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(17));
+        let text = to_jsonl(&w);
+        let w2 = from_jsonl("fb-dataset", &text).unwrap();
+        assert_eq!(w.len(), w2.len());
+        for (a, b) in w.jobs.iter().zip(&w2.jobs) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.name, b.name);
+            assert!((a.submit_time - b.submit_time).abs() < 1e-9);
+            assert_eq!(a.map_durations.len(), b.map_durations.len());
+            for (x, y) in a.map_durations.iter().zip(&b.map_durations) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(from_jsonl("t", "not json\n").is_err());
+        assert!(from_jsonl("t", "{}\n").is_err());
+        assert!(from_jsonl("t", "").is_err());
+        // Negative duration.
+        let bad = r#"{"id":1,"name":"x","class":"small","submit":0,"maps":[-5],"reduces":[]}"#;
+        assert!(from_jsonl("t", bad).is_err());
+        // Unknown class.
+        let bad = r#"{"id":1,"name":"x","class":"huge","submit":0,"maps":[5],"reduces":[]}"#;
+        assert!(from_jsonl("t", bad).is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let line = r#"{"id":1,"name":"x","class":"small","submit":0,"maps":[5],"reduces":[]}"#;
+        let w = from_jsonl("t", &format!("\n{line}\n\n")).unwrap();
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let w = crate::workload::synthetic::fig7_workload();
+        let dir = std::env::temp_dir().join("hfsp-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fig7.jsonl");
+        write_trace(&w, &path).unwrap();
+        let w2 = read_trace(&path).unwrap();
+        assert_eq!(w2.len(), 5);
+        assert_eq!(w2.name, "fig7");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,246 @@
+//! HFSP-specific integration: virtual-cluster behaviour across events,
+//! training dynamics, estimation-error robustness, hysteresis.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, PreemptionPrimitive};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use hfsp::workload::synthetic::{decreasing_size_workload, fig1_workload};
+
+fn cfg(nodes: usize) -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        record_timelines: true,
+        ..Default::default()
+    }
+}
+
+fn small_fb(seed: u64) -> hfsp::workload::Workload {
+    FbWorkload {
+        n_small: 12,
+        n_medium: 8,
+        n_large: 1,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(seed))
+}
+
+#[test]
+fn fig1_completion_order_is_fsp() {
+    // Paper Fig. 1: jobs (30s@0, 10s@10, 10s@15) — FSP completes j2, j3,
+    // then j1.
+    let wl = fig1_workload(4, 6);
+    let mut c = cfg(1);
+    c.cluster.map_slots = 4;
+    c.cluster.heartbeat_s = 0.5;
+    let o = run_simulation(&c, SchedulerKind::Hfsp(Default::default()), &wl);
+    let f = o.sojourn.by_job();
+    let finish = |id: u64| f[&id] + wl.jobs.iter().find(|j| j.id == id).unwrap().submit_time;
+    assert!(
+        finish(2) < finish(3) && finish(3) < finish(1),
+        "FSP completion order j2 < j3 < j1, got {} {} {}",
+        finish(2),
+        finish(3),
+        finish(1)
+    );
+}
+
+#[test]
+fn estimation_error_injection_is_tolerated() {
+    // Paper Fig. 6: HFSP is resilient even to alpha = 1.0.
+    let wl = small_fb(5).map_only();
+    let exact = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let noisy = run_simulation(
+        &cfg(10),
+        SchedulerKind::Hfsp(HfspConfig {
+            error_alpha: 1.0,
+            error_seed: 3,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert_eq!(noisy.sojourn.len(), wl.len());
+    assert!(
+        noisy.sojourn.mean() < exact.sojourn.mean() * 2.0,
+        "extreme errors degrade gracefully: exact {} vs noisy {}",
+        exact.sojourn.mean(),
+        noisy.sojourn.mean()
+    );
+}
+
+#[test]
+fn mean_estimator_close_to_lsq_on_skewless_tasks() {
+    // §4.1: no within-job skew, so first-order statistics suffice — the
+    // two estimators must produce near-identical schedules.
+    let wl = small_fb(9);
+    let lsq = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let mean = run_simulation(
+        &cfg(10),
+        SchedulerKind::Hfsp(HfspConfig {
+            estimator: EstimatorKind::Mean,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    let rel = (lsq.sojourn.mean() - mean.sojourn.mean()).abs() / lsq.sojourn.mean();
+    assert!(rel < 0.15, "estimators should agree on skewless tasks ({rel})");
+}
+
+#[test]
+fn hysteresis_bounds_suspended_contexts() {
+    let wl = decreasing_size_workload(10, 8, 600.0);
+    let mut c = cfg(4);
+    c.cluster.map_slots = 1;
+    c.cluster.reduce_slots = 2;
+    let tight = run_simulation(
+        &c,
+        SchedulerKind::Hfsp(HfspConfig {
+            suspend_hi: 6,
+            suspend_lo: 2,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    let loose = run_simulation(
+        &c,
+        SchedulerKind::Hfsp(HfspConfig {
+            suspend_hi: 1_000_000,
+            suspend_lo: 500_000,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert!(
+        tight.counters.suspends <= loose.counters.suspends,
+        "tight thresholds must not suspend more (tight {} vs loose {})",
+        tight.counters.suspends,
+        loose.counters.suspends
+    );
+    assert_eq!(tight.sojourn.len(), wl.len());
+    assert_eq!(loose.sojourn.len(), wl.len());
+}
+
+#[test]
+fn suspended_work_is_never_lost() {
+    // Under eager preemption, total executed slot-seconds equals the
+    // serialized work (no re-execution) — unlike KILL.
+    let wl = hfsp::workload::synthetic::fig7_workload();
+    let mut c = cfg(4);
+    c.cluster.map_slots = 1;
+    c.cluster.reduce_slots = 2;
+    let o = run_simulation(&c, SchedulerKind::Hfsp(Default::default()), &wl);
+    assert!(o.counters.suspends > 0, "scenario must trigger suspensions");
+    let measured: f64 = o.timelines.jobs().map(|(_, tl)| tl.slot_seconds()).sum();
+    let expected = wl.total_work();
+    // Swap-in delays add a little work; allow a small overhead margin.
+    assert!(
+        measured >= expected - 1e-6 && measured < expected * 1.1,
+        "slot-seconds {measured} vs serialized work {expected}"
+    );
+}
+
+#[test]
+fn kill_preemption_wastes_work() {
+    let wl = hfsp::workload::synthetic::fig7_workload();
+    let mut c = cfg(4);
+    c.cluster.map_slots = 1;
+    c.cluster.reduce_slots = 2;
+    let o = run_simulation(
+        &c,
+        SchedulerKind::Hfsp(HfspConfig {
+            preemption: PreemptionPrimitive::Kill,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert!(o.counters.kills > 0);
+    let measured: f64 = o.timelines.jobs().map(|(_, tl)| tl.slot_seconds()).sum();
+    assert!(
+        measured > wl.total_work() + 1.0,
+        "killed attempts must show up as extra slot-seconds ({measured} vs {})",
+        wl.total_work()
+    );
+}
+
+#[test]
+fn training_slot_cap_is_respected_at_arrival_burst() {
+    // With a tiny training cap the system still completes (the cap only
+    // throttles sampling priority, §3.2).
+    let wl = small_fb(21);
+    let o = run_simulation(
+        &cfg(10),
+        SchedulerKind::Hfsp(HfspConfig {
+            max_training_slots: 2,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert_eq!(o.sojourn.len(), wl.len());
+}
+
+#[test]
+fn xi_large_delays_new_jobs() {
+    // ξ ≫ 1 treats fresh jobs as huge: under load their sojourns stretch
+    // relative to ξ = 1.
+    let wl = small_fb(33);
+    let xi1 = run_simulation(&cfg(6), SchedulerKind::Hfsp(Default::default()), &wl);
+    let xi_large = run_simulation(
+        &cfg(6),
+        SchedulerKind::Hfsp(HfspConfig {
+            xi: 50.0,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert_eq!(xi_large.sojourn.len(), wl.len());
+    // The paper predicts slightly larger sojourn times from training
+    // delays; direction-only check with slack for scheduling noise.
+    assert!(
+        xi_large.sojourn.mean() > xi1.sojourn.mean() * 0.9,
+        "xi=50 should not dramatically beat xi=1 (xi1 {}, xi50 {})",
+        xi1.sojourn.mean(),
+        xi_large.sojourn.mean()
+    );
+}
+
+#[test]
+fn preempt_threshold_zero_still_terminates() {
+    // Thrash guard off: near-tie flapping costs time but must not hang
+    // or lose jobs.
+    let wl = small_fb(40);
+    let o = run_simulation(
+        &cfg(6),
+        SchedulerKind::Hfsp(HfspConfig {
+            preempt_threshold_s: 0.0,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert_eq!(o.sojourn.len(), wl.len());
+}
+
+#[test]
+fn delay_timeout_zero_reduces_locality() {
+    // With no delay-scheduling patience, non-local launches happen freely.
+    let wl = small_fb(44);
+    let patient = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let impatient = run_simulation(
+        &cfg(10),
+        SchedulerKind::Hfsp(HfspConfig {
+            locality_timeout_s: 0.0,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert!(
+        impatient.locality.fraction_local() <= patient.locality.fraction_local() + 1e-9,
+        "patience should not hurt locality (patient {}, impatient {})",
+        patient.locality.fraction_local(),
+        impatient.locality.fraction_local()
+    );
+}

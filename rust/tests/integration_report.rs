@@ -1,0 +1,69 @@
+//! Report/figure pipeline integration: series generation end-to-end.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::job::JobClass;
+use hfsp::report::{ascii_chart, to_csv, Series};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+
+fn outcome() -> hfsp::cluster::driver::SimOutcome {
+    let wl = FbWorkload {
+        n_small: 10,
+        n_medium: 5,
+        n_large: 1,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(2));
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl)
+}
+
+#[test]
+fn ecdf_series_render_to_chart_and_csv() {
+    let o = outcome();
+    let mut series = Vec::new();
+    for class in JobClass::ALL {
+        let e = o.sojourn.ecdf(Some(class));
+        if !e.is_empty() {
+            series.push(Series::new(class.name(), e.series(32)));
+        }
+    }
+    assert!(series.len() >= 2, "at least two classes present");
+    let chart = ascii_chart("test ecdf", &series, 60, 12, true);
+    assert!(chart.contains("[A]"));
+    let csv = to_csv(&series);
+    assert!(csv.lines().count() > 10);
+    assert!(csv.starts_with("x,"));
+}
+
+#[test]
+fn ecdf_values_are_probabilities() {
+    let o = outcome();
+    let e = o.sojourn.ecdf(None);
+    for (x, p) in e.series(50) {
+        assert!(x.is_finite());
+        assert!((0.0..=1.0).contains(&p));
+    }
+}
+
+#[test]
+fn per_job_series_sorted_like_fig4() {
+    let o = outcome();
+    let by_job = o.sojourn.by_job();
+    let mut diffs: Vec<f64> = by_job.values().map(|v| *v).collect();
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let series = Series::new(
+        "sorted sojourns",
+        diffs.iter().enumerate().map(|(i, &d)| (i as f64, d)).collect(),
+    );
+    let csv = to_csv(std::slice::from_ref(&series));
+    assert_eq!(csv.lines().count(), diffs.len() + 1);
+}

@@ -1,0 +1,154 @@
+//! Runtime integration: load the AOT artifacts through PJRT and
+//! cross-check their numerics against the native rust implementations.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+
+use hfsp::runtime::{ArtifactSet, EstimatorExec, MaxMinExec};
+use hfsp::scheduler::hfsp::estimator::{lsq_quantile_phase_size, NativeEstimator, SizeEstimator};
+use hfsp::scheduler::hfsp::virtual_cluster::{maxmin_waterfill, MaxMinBackend};
+use hfsp::scheduler::hfsp::xla_estimator::{XlaMaxMin, XlaSizeEstimator};
+use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("HFSP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`); dir = {dir:?}");
+        None
+    }
+}
+
+#[test]
+fn artifact_set_loads_and_manifest_matches() {
+    let Some(dir) = artifact_dir() else { return };
+    let set = ArtifactSet::load(&dir).expect("artifact set loads");
+    assert!(set.manifest.est_batch >= 1);
+    assert!(set.manifest.est_samples >= 5, "sample set of 5 must fit");
+    assert!(set.manifest.maxmin_jobs >= 64);
+}
+
+#[test]
+fn estimator_artifact_matches_native_rust() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = EstimatorExec::load(&dir).expect("estimator loads");
+    let cases: Vec<(Vec<f64>, usize)> = vec![
+        (vec![10.0, 10.0, 10.0, 10.0, 10.0], 100),
+        (vec![2.0, 4.0, 6.0, 8.0, 10.0], 50),
+        (vec![7.0], 3),
+        (vec![1.0, 100.0], 10),
+        (vec![35.2, 34.8, 36.1, 35.0, 34.9], 481),
+    ];
+    for (samples, n) in &cases {
+        let xla = exec.estimate_one(samples, *n).expect("execute");
+        let native = lsq_quantile_phase_size(samples, *n);
+        let tol = (native.abs() * 1e-4).max(1e-2);
+        assert!(
+            (xla - native).abs() < tol,
+            "samples {samples:?} n {n}: xla {xla} vs native {native}"
+        );
+    }
+}
+
+#[test]
+fn estimator_artifact_batched_matches_singles() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = EstimatorExec::load(&dir).expect("estimator loads");
+    let a: &[f64] = &[10.0, 12.0, 14.0];
+    let b: &[f64] = &[5.0];
+    let batch = exec.estimate_batch(&[(a, 30), (b, 7)]).unwrap();
+    let one_a = exec.estimate_one(a, 30).unwrap();
+    let one_b = exec.estimate_one(b, 7).unwrap();
+    assert!((batch[0] - one_a).abs() < 1e-3);
+    assert!((batch[1] - one_b).abs() < 1e-3);
+}
+
+#[test]
+fn maxmin_artifact_matches_native_waterfill() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = MaxMinExec::load(&dir).expect("maxmin loads");
+    let cases: Vec<(Vec<f64>, f64)> = vec![
+        (vec![1.0, 2.0, 3.0], 10.0),
+        (vec![5.0, 5.0, 5.0], 6.0),
+        (vec![1.0, 10.0, 10.0], 9.0),
+        (vec![400.0, 62.0, 381.0, 3.0], 400.0),
+        (vec![0.0, 4.0], 2.0),
+    ];
+    for (demands, cap) in &cases {
+        let xla = exec.allocate(demands, *cap).expect("execute");
+        let native = maxmin_waterfill(demands, *cap);
+        for (i, (x, n)) in xla.iter().zip(&native).enumerate() {
+            assert!(
+                (x - n).abs() < 0.02 * n.max(1.0),
+                "demands {demands:?} cap {cap} idx {i}: xla {x} vs native {n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn maxmin_artifact_randomized_invariants() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = MaxMinExec::load(&dir).expect("maxmin loads");
+    let mut rng = Pcg64::seed_from_u64(99);
+    for _ in 0..20 {
+        let n = 1 + rng.gen_index(64);
+        let demands: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(0.0, 500.0)).collect();
+        let cap = rng.gen_range_f64(1.0, 600.0);
+        let alloc = exec.allocate(&demands, cap).unwrap();
+        let total_d: f64 = demands.iter().sum();
+        let total_a: f64 = alloc.iter().sum();
+        let target = cap.min(total_d);
+        assert!(
+            (total_a - target).abs() < 0.02 * target.max(1.0),
+            "sum {total_a} vs target {target}"
+        );
+        for (a, d) in alloc.iter().zip(&demands) {
+            assert!(*a >= -1e-3 && *a <= d + 0.01 + d * 1e-3);
+        }
+    }
+}
+
+#[test]
+fn xla_size_estimator_trait_adapter() {
+    let Some(dir) = artifact_dir() else { return };
+    let set = Rc::new(ArtifactSet::load(&dir).unwrap());
+    let mut xla = XlaSizeEstimator::from_set(set.clone());
+    let mut native = NativeEstimator::new();
+    let samples = [20.0, 21.0, 19.5, 20.5, 20.0];
+    let a = xla.estimate_phase(&samples, 200);
+    let b = native.estimate_phase(&samples, 200);
+    assert!((a - b).abs() < b * 1e-3, "xla {a} vs native {b}");
+    assert_eq!(xla.name(), "xla-lsq");
+}
+
+#[test]
+fn xla_maxmin_backend_adapter_with_fallback() {
+    let Some(dir) = artifact_dir() else { return };
+    let set = Rc::new(ArtifactSet::load(&dir).unwrap());
+    let mut backend = XlaMaxMin::from_set(set.clone());
+    let alloc = backend.allocate(&[5.0, 5.0, 5.0], 6.0);
+    for x in &alloc {
+        assert!((x - 2.0).abs() < 0.05, "alloc {alloc:?}");
+    }
+    // Oversized demand vector falls back to native waterfill.
+    let big: Vec<f64> = vec![1.0; set.manifest.maxmin_jobs + 1];
+    let alloc = backend.allocate(&big, 10.0);
+    assert_eq!(alloc.len(), big.len());
+    let sum: f64 = alloc.iter().sum();
+    assert!((sum - 10.0).abs() < 1e-6);
+}
+
+#[test]
+fn truncating_estimator_samples_is_tolerated() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = EstimatorExec::load(&dir).expect("estimator loads");
+    // More samples than the artifact's S: truncated, still sane.
+    let samples: Vec<f64> = (0..20).map(|i| 10.0 + i as f64 * 0.01).collect();
+    let est = exec.estimate_one(&samples, 100).unwrap();
+    assert!(est > 900.0 && est < 1200.0, "est {est}");
+}

@@ -1,0 +1,204 @@
+//! Scheduler-behaviour integration: FIFO ordering, FAIR sharing, and the
+//! cross-scheduler relationships the paper reports.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::job::JobClass;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use hfsp::workload::synthetic::uniform_batch;
+use hfsp::workload::Workload;
+use hfsp::job::JobSpec;
+
+fn cfg(nodes: usize) -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        record_timelines: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fifo_serves_jobs_in_submission_order() {
+    // Two equal jobs, second submitted later: FIFO must finish the first
+    // job first.
+    let jobs = vec![
+        JobSpec {
+            id: 1,
+            name: "a".into(),
+            class: JobClass::Medium,
+            submit_time: 0.0,
+            map_durations: vec![30.0; 8],
+            reduce_durations: vec![],
+        },
+        JobSpec {
+            id: 2,
+            name: "b".into(),
+            class: JobClass::Medium,
+            submit_time: 1.0,
+            map_durations: vec![30.0; 8],
+            reduce_durations: vec![],
+        },
+    ];
+    let wl = Workload::new("fifo-order", jobs);
+    let o = run_simulation(&cfg(1), SchedulerKind::Fifo, &wl);
+    let by_job = o.sojourn.by_job();
+    let finish1 = by_job[&1] + 0.0;
+    let finish2 = by_job[&2] + 1.0;
+    assert!(finish1 < finish2, "FIFO: job 1 must finish first");
+}
+
+#[test]
+fn fair_shares_slots_equally_between_equal_jobs() {
+    // Two identical wide jobs submitted together on a small cluster:
+    // under FAIR both should hold about half the slots mid-run.
+    let wl = uniform_batch(2, 40, 30.0);
+    let o = run_simulation(&cfg(2), SchedulerKind::Fair(Default::default()), &wl);
+    // Mid-run probe (makespan/2): both jobs active with similar shares.
+    let t = o.makespan / 3.0;
+    let a = o.timelines.job(1).unwrap().slots_at(t);
+    let b = o.timelines.job(2).unwrap().slots_at(t);
+    assert!(a > 0 && b > 0, "both jobs served concurrently (got {a}, {b})");
+    assert!((a - b).abs() <= 2, "shares roughly equal (got {a}, {b})");
+    // And their finish times are close.
+    let f = o.sojourn.by_job();
+    assert!((f[&1] - f[&2]).abs() < 0.2 * f[&1].max(f[&2]));
+}
+
+#[test]
+fn hfsp_runs_equal_jobs_in_series() {
+    // Same workload under HFSP: jobs finish in arrival (id) order, with
+    // the first finishing well before the second (serial focus).
+    let wl = uniform_batch(2, 40, 30.0);
+    let o = run_simulation(&cfg(2), SchedulerKind::Hfsp(Default::default()), &wl);
+    let f = o.sojourn.by_job();
+    assert!(
+        f[&1] < f[&2] * 0.8,
+        "HFSP should finish job 1 much earlier (got {} vs {})",
+        f[&1],
+        f[&2]
+    );
+}
+
+#[test]
+fn hfsp_beats_fair_on_mean_sojourn_under_load() {
+    let wl = FbWorkload {
+        n_small: 15,
+        n_medium: 10,
+        n_large: 2,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(5));
+    let fair = run_simulation(&cfg(10), SchedulerKind::Fair(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    assert!(
+        hfsp.sojourn.mean() < fair.sojourn.mean() * 1.05,
+        "HFSP {} should not lose to FAIR {}",
+        hfsp.sojourn.mean(),
+        fair.sojourn.mean()
+    );
+}
+
+#[test]
+fn fifo_worst_for_small_jobs_under_load() {
+    let wl = FbWorkload {
+        n_small: 15,
+        n_medium: 10,
+        n_large: 2,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(6));
+    let fifo = run_simulation(&cfg(10), SchedulerKind::Fifo, &wl);
+    let hfsp = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    assert!(
+        fifo.sojourn.mean_class(JobClass::Small)
+            > hfsp.sojourn.mean_class(JobClass::Small) * 2.0,
+        "head-of-line blocking must hurt small jobs under FIFO (fifo {} vs hfsp {})",
+        fifo.sojourn.mean_class(JobClass::Small),
+        hfsp.sojourn.mean_class(JobClass::Small)
+    );
+}
+
+#[test]
+fn schedulers_agree_on_single_job_runtime() {
+    // With one job there is nothing to schedule: all disciplines give the
+    // same sojourn (modulo heartbeat alignment).
+    let wl = uniform_batch(1, 16, 20.0);
+    let mut results = Vec::new();
+    for kind in [
+        SchedulerKind::Fifo,
+        SchedulerKind::Fair(Default::default()),
+        SchedulerKind::Hfsp(Default::default()),
+    ] {
+        let o = run_simulation(&cfg(2), kind, &wl);
+        results.push(o.sojourn.mean());
+    }
+    for w in results.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() < 7.0,
+            "single-job sojourns should agree within heartbeat jitter: {results:?}"
+        );
+    }
+}
+
+#[test]
+fn wait_preemption_never_suspends() {
+    use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    let wl = hfsp::workload::synthetic::fig7_workload();
+    let o = run_simulation(
+        &cfg(4),
+        SchedulerKind::Hfsp(HfspConfig {
+            preemption: PreemptionPrimitive::Wait,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert_eq!(o.counters.suspends, 0);
+    assert_eq!(o.counters.kills, 0);
+    assert_eq!(o.sojourn.len(), 5);
+}
+
+#[test]
+fn kill_preemption_reruns_tasks() {
+    use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    let wl = hfsp::workload::synthetic::fig7_workload();
+    let o = run_simulation(
+        &cfg(4),
+        SchedulerKind::Hfsp(HfspConfig {
+            preemption: PreemptionPrimitive::Kill,
+            ..Default::default()
+        }),
+        &wl,
+    );
+    assert!(o.counters.kills > 0, "the fig7 scenario must trigger kills");
+    assert_eq!(o.counters.suspends, 0);
+    assert_eq!(o.sojourn.len(), 5);
+}
+
+#[test]
+fn eager_preemption_beats_wait_on_fig7() {
+    use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    let wl = hfsp::workload::synthetic::fig7_workload();
+    let run_with = |prim| {
+        run_simulation(
+            &cfg(4),
+            SchedulerKind::Hfsp(HfspConfig {
+                preemption: prim,
+                ..Default::default()
+            }),
+            &wl,
+        )
+        .sojourn
+        .mean()
+    };
+    let eager = run_with(PreemptionPrimitive::Suspend);
+    let wait = run_with(PreemptionPrimitive::Wait);
+    assert!(
+        wait > eager * 1.3,
+        "paper: WAIT ≈ 40% worse than eager on this workload (eager {eager}, wait {wait})"
+    );
+}

@@ -1,0 +1,173 @@
+//! Simulator-level integration: determinism, conservation, termination.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use hfsp::cluster::ClusterConfig;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use hfsp::workload::synthetic::uniform_batch;
+use hfsp::workload::Workload;
+
+fn small_cfg(nodes: usize) -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        record_timelines: true,
+        ..Default::default()
+    }
+}
+
+fn small_workload(seed: u64) -> Workload {
+    FbWorkload {
+        n_small: 10,
+        n_medium: 6,
+        n_large: 1,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(seed))
+}
+
+fn run(kind: SchedulerKind, nodes: usize, seed: u64) -> SimOutcome {
+    run_simulation(&small_cfg(nodes), kind, &small_workload(seed))
+}
+
+#[test]
+fn all_jobs_finish_under_every_scheduler() {
+    for kind in [
+        SchedulerKind::Fifo,
+        SchedulerKind::Fair(Default::default()),
+        SchedulerKind::Hfsp(Default::default()),
+    ] {
+        let o = run(kind, 10, 3);
+        assert_eq!(o.sojourn.len(), 17, "{}: all jobs must finish", o.scheduler);
+        assert_eq!(o.counters.rejected_actions, 0, "{}: no rejected actions", o.scheduler);
+    }
+}
+
+#[test]
+fn identical_seeds_are_bit_reproducible() {
+    for kind in [
+        SchedulerKind::Fifo,
+        SchedulerKind::Fair(Default::default()),
+        SchedulerKind::Hfsp(Default::default()),
+    ] {
+        let a = run(kind.clone(), 10, 7);
+        let b = run(kind, 10, 7);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.makespan, b.makespan);
+        let aj = a.sojourn.by_job();
+        let bj = b.sojourn.by_job();
+        for (id, s) in &aj {
+            assert_eq!(s, &bj[id], "job {id} sojourn must be identical");
+        }
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let a = run(SchedulerKind::Hfsp(Default::default()), 10, 1);
+    let b = run(SchedulerKind::Hfsp(Default::default()), 10, 2);
+    assert_ne!(a.makespan, b.makespan);
+}
+
+#[test]
+fn sojourn_not_less_than_ideal_service_time() {
+    let o = run(SchedulerKind::Hfsp(Default::default()), 10, 5);
+    let wl = small_workload(5);
+    let slots_map = 10.0 * 4.0;
+    for rec in o.sojourn.records() {
+        let spec = wl.jobs.iter().find(|j| j.id == rec.job).unwrap();
+        // A job cannot finish faster than its critical path: the longest
+        // single task, nor faster than total work / cluster capacity.
+        let longest = spec
+            .map_durations
+            .iter()
+            .chain(&spec.reduce_durations)
+            .fold(0.0f64, |a, &b| a.max(b));
+        assert!(
+            rec.sojourn() + 1e-6 >= longest,
+            "job {} sojourn {} < longest task {}",
+            rec.job,
+            rec.sojourn(),
+            longest
+        );
+        let map_lb = spec.true_phase_size(hfsp::job::Phase::Map) / slots_map;
+        assert!(rec.sojourn() + 1e-6 >= map_lb);
+    }
+}
+
+#[test]
+fn timelines_balance_and_respect_capacity() {
+    let o = run(SchedulerKind::Hfsp(Default::default()), 5, 11);
+    let total_slots = (5 * (4 + 2)) as i64;
+    for (_, tl) in o.timelines.jobs() {
+        assert!(tl.is_balanced(), "every acquire must have a release");
+    }
+    // Probe concurrency at many instants.
+    for i in 0..200 {
+        let t = o.makespan * i as f64 / 200.0;
+        let used = o.timelines.total_slots_at(t);
+        assert!(
+            used <= total_slots,
+            "slot overcommit at t={t}: {used} > {total_slots}"
+        );
+        assert!(used >= 0);
+    }
+}
+
+#[test]
+fn slot_seconds_equals_work_done_without_preemption() {
+    // FIFO never suspends/kills: total slot-seconds == serialized work.
+    let wl = uniform_batch(4, 8, 12.0);
+    let o = run_simulation(&small_cfg(4), SchedulerKind::Fifo, &wl);
+    let measured: f64 = o.timelines.jobs().map(|(_, tl)| tl.slot_seconds()).sum();
+    let expected = wl.total_work();
+    assert!(
+        (measured - expected).abs() < 1e-6 * expected.max(1.0),
+        "slot-seconds {measured} vs work {expected}"
+    );
+}
+
+#[test]
+fn makespan_bounded_by_serial_and_ideal() {
+    let o = run(SchedulerKind::Fifo, 10, 13);
+    let wl = small_workload(13);
+    let ideal = wl.total_work() / (10.0 * 4.0); // crude lower bound
+    assert!(o.makespan >= ideal * 0.5);
+    assert!(o.makespan <= wl.total_work() + wl.span() + 1000.0);
+}
+
+#[test]
+fn locality_fraction_high_with_replication_three() {
+    let o = run(SchedulerKind::Fair(Default::default()), 10, 17);
+    assert!(
+        o.locality.fraction_local() > 0.9,
+        "delay scheduling should keep locality high, got {}",
+        o.locality.fraction_local()
+    );
+}
+
+#[test]
+fn single_node_cluster_works() {
+    let wl = uniform_batch(3, 2, 5.0);
+    let o = run_simulation(&small_cfg(1), SchedulerKind::Hfsp(Default::default()), &wl);
+    assert_eq!(o.sojourn.len(), 3);
+}
+
+#[test]
+fn empty_reduce_phase_jobs_complete() {
+    // Map-only workload exercises the no-reduce path.
+    let wl = small_workload(19).map_only();
+    let o = run_simulation(&small_cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    assert_eq!(o.sojourn.len(), wl.len());
+}
+
+#[test]
+fn map_less_jobs_complete() {
+    // Reduce-only jobs (fig7-style) exercise the zero-map path.
+    let wl = hfsp::workload::synthetic::fig7_workload();
+    let o = run_simulation(&small_cfg(4), SchedulerKind::Hfsp(Default::default()), &wl);
+    assert_eq!(o.sojourn.len(), 5);
+}

@@ -1,0 +1,86 @@
+//! Workload generation + trace replay integration.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::scheduler::SchedulerKind;
+use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::workload::swim::FbWorkload;
+use hfsp::workload::trace;
+
+#[test]
+fn trace_roundtrip_preserves_simulation_results() {
+    // Writing a trace and replaying it must give identical outcomes.
+    let wl = FbWorkload {
+        n_small: 8,
+        n_medium: 4,
+        n_large: 1,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(3));
+    let text = trace::to_jsonl(&wl);
+    let wl2 = trace::from_jsonl(&wl.name, &text).unwrap();
+
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 5,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let a = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+    let b = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl2);
+    assert_eq!(a.events_processed, b.events_processed);
+    let aj = a.sojourn.by_job();
+    let bj = b.sojourn.by_job();
+    for (id, s) in &aj {
+        assert!(
+            (s - bj[id]).abs() < 1e-6,
+            "job {id}: trace replay changed sojourn {s} -> {}",
+            bj[id]
+        );
+    }
+}
+
+#[test]
+fn same_trace_different_schedulers_see_same_jobs() {
+    // The whole point of traces: FAIR and HFSP compare on identical input.
+    let wl = FbWorkload {
+        n_small: 6,
+        n_medium: 3,
+        n_large: 0,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::seed_from_u64(8));
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+    let f = fair.sojourn.by_job();
+    let h = hfsp.sojourn.by_job();
+    assert_eq!(f.len(), h.len());
+    for id in f.keys() {
+        assert!(h.contains_key(id));
+    }
+}
+
+#[test]
+fn map_only_workload_strips_reduce_everywhere() {
+    let wl = FbWorkload::default()
+        .generate(&mut Pcg64::seed_from_u64(4))
+        .map_only();
+    assert!(wl.jobs.iter().all(|j| j.n_reduces() == 0));
+    assert!(wl.total_tasks() > 0);
+}
+
+#[test]
+fn workload_scaling_changes_job_count_only() {
+    let full = FbWorkload::default();
+    let half = FbWorkload::scaled(0.5);
+    assert_eq!(half.mean_interarrival_s, full.mean_interarrival_s);
+    assert!(half.n_small < full.n_small);
+}

@@ -1,0 +1,253 @@
+//! Property-based tests over coordinator invariants (testkit-driven —
+//! the offline registry carries no `proptest`; see DESIGN.md §2).
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::job::{JobClass, JobSpec};
+use hfsp::scheduler::hfsp::estimator::lsq_quantile_phase_size;
+use hfsp::scheduler::hfsp::virtual_cluster::{maxmin_waterfill, VirtualCluster};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::testkit::{self, vec1_of, Gen};
+use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
+use hfsp::workload::Workload;
+
+// -- max-min allocation invariants -------------------------------------
+
+#[test]
+fn prop_maxmin_bounded_by_demand() {
+    testkit::check(
+        "0 <= alloc_i <= demand_i",
+        300,
+        vec1_of(Gen::f64_range(0.0, 1000.0), 40).pair(Gen::f64_range(0.5, 500.0)),
+        |(demands, cap)| {
+            maxmin_waterfill(&demands, cap)
+                .iter()
+                .zip(&demands)
+                .all(|(a, d)| *a >= -1e-12 && *a <= d + 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_maxmin_conserves_capacity() {
+    testkit::check(
+        "sum(alloc) == min(cap, sum(demand))",
+        300,
+        vec1_of(Gen::f64_range(0.0, 1000.0), 40).pair(Gen::f64_range(0.5, 500.0)),
+        |(demands, cap)| {
+            let alloc = maxmin_waterfill(&demands, cap);
+            let total: f64 = alloc.iter().sum();
+            let target = cap.min(demands.iter().sum());
+            (total - target).abs() < 1e-6 * target.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_maxmin_bottleneck_fairness() {
+    testkit::check(
+        "unsatisfied jobs sit at the common water level",
+        300,
+        vec1_of(Gen::f64_range(0.0, 1000.0), 40).pair(Gen::f64_range(0.5, 500.0)),
+        |(demands, cap)| {
+            let alloc = maxmin_waterfill(&demands, cap);
+            let level = alloc
+                .iter()
+                .zip(&demands)
+                .filter(|(a, d)| **a < **d - 1e-9)
+                .map(|(a, _)| *a)
+                .fold(f64::INFINITY, f64::min);
+            // Every allocation is <= the level of any unsatisfied job.
+            alloc.iter().all(|a| *a <= level + 1e-6)
+        },
+    );
+}
+
+// -- estimator invariants ----------------------------------------------
+
+#[test]
+fn prop_estimator_scales_linearly_with_n_tasks() {
+    testkit::check(
+        "size(n) is linear in n",
+        200,
+        vec1_of(Gen::f64_range(0.1, 1e4), 8),
+        |samples| {
+            let s10 = lsq_quantile_phase_size(&samples, 10);
+            let s20 = lsq_quantile_phase_size(&samples, 20);
+            (s20 - 2.0 * s10).abs() < 1e-6 * s20.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_nonnegative_and_bounded() {
+    testkit::check(
+        "0 <= size <= n * max(sample)",
+        300,
+        vec1_of(Gen::f64_range(0.1, 1e4), 8).pair(Gen::usize_range(1, 5000)),
+        |(samples, n)| {
+            let size = lsq_quantile_phase_size(&samples, n);
+            let max = samples.iter().fold(0.0f64, |a, &b| a.max(b));
+            // The LSQ extrapolation can exceed mean*n slightly but never
+            // n*max*1.5 (slope bounded by the sample spread).
+            size >= 0.0 && size <= n as f64 * max * 1.5 + 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_exact_on_constant_samples() {
+    testkit::check(
+        "constant samples give exactly n * duration",
+        200,
+        Gen::f64_range(0.5, 500.0).pair(Gen::usize_range(1, 1000)),
+        |(d, n)| {
+            let size = lsq_quantile_phase_size(&[d; 5], n);
+            (size - d * n as f64).abs() < 1e-6 * size.max(1.0)
+        },
+    );
+}
+
+// -- virtual cluster invariants ------------------------------------------
+
+#[test]
+fn prop_vc_total_progress_bounded_by_capacity() {
+    testkit::check(
+        "aggregate virtual progress rate <= slots",
+        100,
+        vec1_of(
+            Gen::f64_range(10.0, 2000.0).pair(Gen::usize_range(1, 200)),
+            20,
+        )
+        .pair(Gen::f64_range(1.0, 50.0)),
+        |(jobs, dt)| {
+            let mut vc = VirtualCluster::new(16);
+            for (i, (size, width)) in jobs.iter().enumerate() {
+                vc.add_job(i as u64, *size, *width, 0.0);
+            }
+            let before = vc.total_remaining();
+            vc.age_to(dt);
+            let after = vc.total_remaining();
+            let progress = before - after;
+            progress >= -1e-9 && progress <= 16.0 * dt + 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_vc_projected_order_is_sorted_and_complete() {
+    testkit::check(
+        "projection returns every job, sorted by finish",
+        100,
+        vec1_of(
+            Gen::f64_range(1.0, 5000.0).pair(Gen::usize_range(1, 300)),
+            25,
+        ),
+        |jobs| {
+            let mut vc = VirtualCluster::new(32);
+            for (i, (size, width)) in jobs.iter().enumerate() {
+                vc.add_job(i as u64, *size, *width, 0.0);
+            }
+            let order = vc.projected_finish_order();
+            order.len() == jobs.len()
+                && order.windows(2).all(|w| w[0].1 <= w[1].1 + 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_vc_smaller_same_width_job_finishes_first() {
+    testkit::check(
+        "PS: of two same-width jobs, the smaller finishes first",
+        150,
+        Gen::f64_range(10.0, 1000.0)
+            .pair(Gen::f64_range(1.01, 4.0))
+            .pair(Gen::usize_range(1, 50)),
+        |((size, factor), width)| {
+            let mut vc = VirtualCluster::new(8);
+            vc.add_job(1, size * factor, width, 0.0);
+            vc.add_job(2, size, width, 0.0);
+            let order = vc.projected_finish_order();
+            order[0].0 == 2
+        },
+    );
+}
+
+// -- whole-simulation properties ------------------------------------------
+
+fn random_workload(rng: &mut Pcg64, n_jobs: usize) -> Workload {
+    let jobs = (0..n_jobs)
+        .map(|i| {
+            let n_maps = 1 + rng.gen_index(30);
+            let n_reduces = rng.gen_index(6);
+            let map_d = rng.gen_range_f64(2.0, 60.0);
+            let red_d = rng.gen_range_f64(5.0, 120.0);
+            JobSpec {
+                id: i as u64 + 1,
+                name: format!("p{i}"),
+                class: JobClass::Medium,
+                submit_time: rng.gen_range_f64(0.0, 120.0),
+                map_durations: vec![map_d; n_maps],
+                reduce_durations: vec![red_d; n_reduces],
+            }
+        })
+        .collect();
+    Workload::new("prop", jobs)
+}
+
+#[test]
+fn prop_simulation_completes_all_jobs_any_scheduler() {
+    testkit::check(
+        "every generated workload completes under every scheduler",
+        12,
+        Gen::usize_range(1, 12).pair(Gen::usize_range(0, 10_000)),
+        |(n_jobs, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed as u64);
+            let wl = random_workload(&mut rng, n_jobs);
+            let cfg = SimConfig {
+                cluster: ClusterConfig {
+                    nodes: 4,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            [
+                SchedulerKind::Fifo,
+                SchedulerKind::Fair(Default::default()),
+                SchedulerKind::Hfsp(Default::default()),
+            ]
+            .into_iter()
+            .all(|k| {
+                let o = run_simulation(&cfg, k, &wl);
+                o.sojourn.len() == wl.len() && o.counters.rejected_actions == 0
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_sojourn_at_least_critical_path() {
+    testkit::check(
+        "sojourn >= longest map + longest reduce of the job",
+        8,
+        Gen::usize_range(2, 10).pair(Gen::usize_range(0, 1000)),
+        |(n_jobs, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed as u64 + 77);
+            let wl = random_workload(&mut rng, n_jobs);
+            let cfg = SimConfig {
+                cluster: ClusterConfig {
+                    nodes: 4,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let o = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+            o.sojourn.records().iter().all(|r| {
+                let spec = wl.jobs.iter().find(|j| j.id == r.job).unwrap();
+                let lm = spec.map_durations.iter().cloned().fold(0.0, f64::max);
+                let lr = spec.reduce_durations.iter().cloned().fold(0.0, f64::max);
+                r.sojourn() + 1e-6 >= lm + lr
+            })
+        },
+    );
+}
