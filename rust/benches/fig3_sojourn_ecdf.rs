@@ -4,34 +4,29 @@
 //!
 //! Paper shape to reproduce: HFSP ≈ FAIR for small jobs; sojourn times
 //! significantly shorter under HFSP for medium and large jobs.
+//!
+//! Thin declaration over the sweep engine: the grid runs the three
+//! schedulers (in parallel) on the same seed-42 FB-dataset; this file
+//! only renders the per-class ECDF series.
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::job::JobClass;
 use hfsp::report::{ascii_chart, write_csv, Series};
-use hfsp::scheduler::SchedulerKind;
-use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::sweep::{run_grid, ExperimentGrid, WorkloadSpec};
 use hfsp::workload::swim::FbWorkload;
 use std::path::Path;
 
 fn main() {
     hfsp::util::logging::init_from_env();
-    let cfg = SimConfig::default();
-    let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
-
-    let kinds = [
-        SchedulerKind::Fifo,
-        SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(Default::default()),
-    ];
-    let outcomes: Vec<_> = kinds
-        .into_iter()
-        .map(|k| run_simulation(&cfg, k, &wl))
-        .collect();
+    let grid = ExperimentGrid::new("fig3")
+        .workload(WorkloadSpec::Fb(FbWorkload::default()))
+        .nodes(&[100])
+        .seeds(&[42]);
+    let results = run_grid(&grid);
 
     println!("=== Fig. 3: ECDFs of sojourn times (FB-dataset, 100 nodes) ===\n");
     for class in JobClass::ALL {
-        let series: Vec<Series> = outcomes
-            .iter()
+        let series: Vec<Series> = results
+            .outcomes()
             .map(|o| {
                 let ecdf = o.sojourn.ecdf(Some(class));
                 Series::new(o.scheduler, ecdf.series(64))
@@ -52,7 +47,7 @@ fn main() {
             &series,
         )
         .expect("write csv");
-        for o in &outcomes {
+        for o in results.outcomes() {
             println!(
                 "  {:<5} mean sojourn ({:<6}) = {:>8.1} s",
                 o.scheduler,
@@ -62,8 +57,8 @@ fn main() {
         }
         println!();
     }
-    let fair = &outcomes[1];
-    let hfsp = &outcomes[2];
+    let fair = results.outcome("FAIR", 100, 42).expect("FAIR cell");
+    let hfsp = results.outcome("HFSP", 100, 42).expect("HFSP cell");
     println!("paper-shape checks:");
     let small_ratio =
         hfsp.sojourn.mean_class(JobClass::Small) / fair.sojourn.mean_class(JobClass::Small);

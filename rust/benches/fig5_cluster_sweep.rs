@@ -5,40 +5,48 @@
 //! Paper shape: HFSP's advantage grows as resources become scarce; "for
 //! equivalent sojourn times, the workload requires a smaller cluster
 //! when HFSP is used".
+//!
+//! Thin declaration over the sweep engine: FAIR and HFSP × ten cluster
+//! sizes is a 20-cell grid run across the thread pool; this file only
+//! renders the series and the scarcity-ratio table.
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
-use hfsp::cluster::ClusterConfig;
 use hfsp::report::{ascii_chart, table, write_csv, Series};
 use hfsp::scheduler::SchedulerKind;
-use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::sweep::{run_grid, ExperimentGrid, WorkloadSpec};
 use hfsp::workload::swim::FbWorkload;
 use std::path::Path;
 
 fn main() {
     hfsp::util::logging::init_from_env();
-    let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
     let sizes = [10usize, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+    let grid = ExperimentGrid::new("fig5")
+        .scheduler(SchedulerKind::Fair(Default::default()))
+        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .workload(WorkloadSpec::Fb(FbWorkload::default()))
+        .nodes(&sizes)
+        .seeds(&[42]);
+    let results = run_grid(&grid);
 
+    let mean_of = |label: &str, nodes: usize| {
+        results
+            .outcome(label, nodes, 42)
+            .expect("cell ran")
+            .sojourn
+            .mean()
+    };
     let mut fair_pts = Vec::new();
     let mut hfsp_pts = Vec::new();
     let mut rows = Vec::new();
     for &nodes in &sizes {
-        let cfg = SimConfig {
-            cluster: ClusterConfig {
-                nodes,
-                ..Default::default()
-            },
-            ..Default::default()
-        };
-        let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
-        let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
-        fair_pts.push((nodes as f64, fair.sojourn.mean()));
-        hfsp_pts.push((nodes as f64, hfsp.sojourn.mean()));
+        let fair = mean_of("FAIR", nodes);
+        let hfsp = mean_of("HFSP", nodes);
+        fair_pts.push((nodes as f64, fair));
+        hfsp_pts.push((nodes as f64, hfsp));
         rows.push(vec![
             nodes.to_string(),
-            format!("{:.0}", fair.sojourn.mean()),
-            format!("{:.0}", hfsp.sojourn.mean()),
-            format!("{:.2}", fair.sojourn.mean() / hfsp.sojourn.mean()),
+            format!("{fair:.0}"),
+            format!("{hfsp:.0}"),
+            format!("{:.2}", fair / hfsp),
         ]);
     }
     let series = vec![

@@ -6,17 +6,20 @@
 //! enough of j1's tasks and the average sojourn is ~9 min; with **WAIT**
 //! they queue behind j1's 500 s tasks and the average is ~15 min (~40 %
 //! worse); **KILL** additionally wastes j1's work.
+//!
+//! Thin declaration over the sweep engine: one labelled HFSP scheduler
+//! per preemption primitive; this file only renders the timelines.
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::driver::SimConfig;
 use hfsp::cluster::ClusterConfig;
 use hfsp::report::table;
 use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
 use hfsp::scheduler::SchedulerKind;
-use hfsp::workload::synthetic::fig7_workload;
+use hfsp::sweep::{run_grid, ExperimentGrid, WorkloadSpec};
 
 fn main() {
     hfsp::util::logging::init_from_env();
-    let cfg = SimConfig {
+    let base = SimConfig {
         cluster: ClusterConfig {
             nodes: 4,
             map_slots: 1,
@@ -26,20 +29,31 @@ fn main() {
         record_timelines: true,
         ..Default::default()
     };
-    let wl = fig7_workload();
-
-    let mut rows = Vec::new();
-    let mut sojourns = Vec::new();
-    for prim in [
+    let primitives = [
         PreemptionPrimitive::Suspend,
         PreemptionPrimitive::Wait,
         PreemptionPrimitive::Kill,
-    ] {
-        let hcfg = HfspConfig {
-            preemption: prim,
-            ..Default::default()
-        };
-        let o = run_simulation(&cfg, SchedulerKind::Hfsp(hcfg), &wl);
+    ];
+    let mut grid = ExperimentGrid::new("fig7")
+        .base_config(base)
+        .workload(WorkloadSpec::Fig7)
+        .nodes(&[4])
+        .seeds(&[42]);
+    for prim in primitives {
+        grid = grid.scheduler_labeled(
+            prim.name(),
+            SchedulerKind::Hfsp(HfspConfig {
+                preemption: prim,
+                ..Default::default()
+            }),
+        );
+    }
+    let results = run_grid(&grid);
+
+    let mut rows = Vec::new();
+    let mut sojourns = Vec::new();
+    for prim in primitives {
+        let o = results.outcome(prim.name(), 4, 42).expect("cell ran");
         println!(
             "--- HFSP with {} (mean sojourn {:.1} s = {:.1} min) ---",
             prim.name(),

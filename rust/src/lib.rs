@@ -30,7 +30,14 @@
 //! * **runtime** — loads the artifacts through PJRT and executes them from
 //!   the scheduler hot path ([`runtime`]).
 //!
+//! Experiment grids (scheduler × workload × cluster size × seed) are
+//! declared and executed through the [`sweep`] subsystem, which fans the
+//! independent cells out over a thread pool and folds the outcomes into
+//! across-seed statistics.
+//!
 //! ## Quickstart
+//!
+//! Run a single simulation:
 //!
 //! ```no_run
 //! use hfsp::prelude::*;
@@ -39,6 +46,22 @@
 //! let workload = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
 //! let outcome = run_simulation(&cfg, SchedulerKind::Hfsp(HfspConfig::default()), &workload);
 //! println!("mean sojourn: {:.1}s", outcome.sojourn.mean());
+//! ```
+//!
+//! Or declare a whole experiment grid and let the sweep engine run it in
+//! parallel with across-seed confidence intervals:
+//!
+//! ```no_run
+//! use hfsp::prelude::*;
+//!
+//! let grid = ExperimentGrid::new("fifo-vs-hfsp")
+//!     .scheduler(SchedulerKind::Fifo)
+//!     .scheduler(SchedulerKind::Hfsp(HfspConfig::default()))
+//!     .workload(WorkloadSpec::Fb(FbWorkload::default()))
+//!     .nodes(&[100, 50])
+//!     .seeds(&[42, 7, 1234]);
+//! let results = run_grid(&grid);
+//! println!("{}", results.aggregate().table());
 //! ```
 
 pub mod bench;
@@ -49,6 +72,7 @@ pub mod report;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod sweep;
 pub mod testkit;
 pub mod util;
 pub mod workload;
@@ -61,6 +85,9 @@ pub mod prelude {
     pub use crate::metrics::sojourn::SojournStats;
     pub use crate::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
     pub use crate::scheduler::SchedulerKind;
+    pub use crate::sweep::{
+        run_grid, run_grid_threads, ExperimentGrid, SweepReport, SweepResults, WorkloadSpec,
+    };
     pub use crate::util::rng::{Pcg64, Rng, SeedableRng};
     pub use crate::workload::swim::FbWorkload;
     pub use crate::workload::Workload;

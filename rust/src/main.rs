@@ -5,8 +5,12 @@
 //! * `workload-gen` — synthesize an FB-dataset trace (SWIM-like, §4.1);
 //! * `simulate` — run one scheduler over a workload and report sojourn
 //!   statistics;
-//! * `compare` — run FIFO, FAIR and HFSP on the *same* workload and print
-//!   the paper-style comparison table;
+//! * `compare` — run FIFO, FAIR and HFSP on the *same* workload (in
+//!   parallel, via the sweep engine) and print the paper-style
+//!   comparison table;
+//! * `sweep` — run a declarative scheduler × nodes × seed experiment
+//!   grid across a thread pool and emit the aggregated table + JSON
+//!   report;
 //! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
 
 use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
@@ -15,6 +19,7 @@ use hfsp::job::JobClass;
 use hfsp::report;
 use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
 use hfsp::scheduler::SchedulerKind;
+use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::util::cli::{Cli, Command, Parsed};
 use hfsp::util::json::Json;
 use hfsp::util::rng::{Pcg64, SeedableRng};
@@ -49,6 +54,15 @@ fn cli() -> Cli {
                 .flag("seed", "42", "rng seed")
                 .flag("trace", "", "replay this JSONL trace instead of generating")
                 .flag("out", "", "write JSON outcome summary here"),
+            Command::new("sweep", "run a scheduler x nodes x seed experiment grid")
+                .flag("schedulers", "fifo,fair,hfsp", "comma-separated scheduler list")
+                .flag("nodes", "100", "comma-separated cluster sizes")
+                .flag("seeds", "42,7,1234", "comma-separated seeds")
+                .flag("workload", "fb", "fb | fb-map-only | fig7")
+                .flag("scale", "1.0", "scale FB-dataset job counts by this factor")
+                .flag("threads", "0", "worker threads (0 = all cores)")
+                .flag("name", "cli-sweep", "sweep name recorded in the report")
+                .flag("out", "reports/sweep.json", "aggregated JSON report path"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
                 .flag("slots", "4", "single-node slot count"),
         ],
@@ -98,17 +112,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         Parsed::Command("compare", args) => {
+            // A compare is a 1-workload, 1-seed scheduler sweep: declare
+            // the grid and let the engine run the three cells in
+            // parallel.
             let (cfg, wl) = sim_setup(&args)?;
-            let outcomes: Vec<SimOutcome> = [
-                SchedulerKind::Fifo,
-                SchedulerKind::Fair(Default::default()),
-                SchedulerKind::Hfsp(HfspConfig::default()),
-            ]
-            .into_iter()
-            .map(|kind| run_simulation(&cfg, kind, &wl))
-            .collect();
-            let rows: Vec<Vec<String>> = outcomes
-                .iter()
+            let grid = ExperimentGrid::new("compare")
+                .base_config(cfg)
+                .workload(WorkloadSpec::Fixed(wl));
+            let results = run_grid(&grid);
+            let rows: Vec<Vec<String>> = results
+                .outcomes()
                 .map(|o| {
                     vec![
                         o.scheduler.to_string(),
@@ -136,10 +149,11 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     &rows
                 )
             );
-            let refs: Vec<&SimOutcome> = outcomes.iter().collect();
+            let refs: Vec<&SimOutcome> = results.outcomes().collect();
             maybe_write_json(args.get("out"), &refs)?;
             Ok(())
         }
+        Parsed::Command("sweep", args) => run_sweep(&args),
         Parsed::Command("fsp-demo", args) => {
             let slots: usize = args.require("slots")?;
             fsp_demo(slots);
@@ -225,6 +239,79 @@ fn print_outcome(o: &SimOutcome, per_class: bool) {
             c.launches, c.suspends, c.resumes, c.kills, c.swap_ins
         );
     }
+}
+
+/// The `sweep` subcommand: declarative grid → parallel run → aggregated
+/// table + deterministic JSON report.
+fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
+    let scheduler_list: String = args.require("schedulers")?;
+    let schedulers: Vec<SchedulerKind> = csv_items(&scheduler_list)
+        .into_iter()
+        .map(SchedulerKind::from_name)
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(
+        !schedulers.is_empty(),
+        "--schedulers must list at least one scheduler"
+    );
+    let nodes = parse_csv::<usize>(&args.require::<String>("nodes")?, "nodes")?;
+    let seeds = parse_csv::<u64>(&args.require::<String>("seeds")?, "seeds")?;
+    let scale: f64 = args.require("scale")?;
+    let threads: usize = args.require("threads")?;
+    let name: String = args.require("name")?;
+    let out: PathBuf = args.require("out")?;
+    let workload_name: String = args.require("workload")?;
+    let workload = match workload_name.as_str() {
+        "fb" => WorkloadSpec::Fb(FbWorkload::scaled(scale)),
+        "fb-map-only" => WorkloadSpec::FbMapOnly(FbWorkload::scaled(scale)),
+        "fig7" => WorkloadSpec::Fig7,
+        other => anyhow::bail!("unknown workload {other:?} (fb|fb-map-only|fig7)"),
+    };
+
+    let mut grid = ExperimentGrid::new(name)
+        .workload(workload)
+        .nodes(&nodes)
+        .seeds(&seeds);
+    for kind in schedulers {
+        grid = grid.scheduler(kind);
+    }
+
+    let results = run_grid_threads(&grid, threads);
+    let report = results.aggregate();
+    println!("{}", report.table());
+    println!(
+        "{} cells on {} threads in {:.0} ms ({} simulated events)",
+        results.len(),
+        results.threads,
+        results.wall_ms,
+        results.total_events()
+    );
+
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out, report.to_json().to_string_pretty())?;
+    println!("wrote aggregated sweep report to {}", out.display());
+    Ok(())
+}
+
+/// Split a comma-separated flag value into trimmed, non-empty items.
+fn csv_items(s: &str) -> Vec<&str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty()).collect()
+}
+
+/// Parse a comma-separated flag value into typed items.
+fn parse_csv<T: std::str::FromStr>(s: &str, flag: &str) -> anyhow::Result<Vec<T>> {
+    let items = csv_items(s);
+    anyhow::ensure!(!items.is_empty(), "--{flag} must list at least one value");
+    items
+        .into_iter()
+        .map(|item| {
+            item.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value {item:?} for --{flag}"))
+        })
+        .collect()
 }
 
 fn maybe_write_json(path: Option<&str>, outcomes: &[&SimOutcome]) -> anyhow::Result<()> {

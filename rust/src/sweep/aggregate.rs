@@ -1,0 +1,326 @@
+//! Across-seed aggregation of sweep cells into report-ready statistics.
+//!
+//! Cells are grouped by (workload, nodes, scheduler); the seed axis is
+//! folded into the statistics. Two kinds of aggregates are kept:
+//!
+//! * **across-seed moments** of per-seed scalars (mean sojourn, mean
+//!   slowdown, locality fraction, makespan), from which a normal-
+//!   approximation 95 % confidence interval is derived
+//!   (`1.96 · s / √n`);
+//! * **pooled per-job sojourns** across all seeds in the group, from
+//!   which p50/p95/p99 are read (the distribution view behind the
+//!   paper's ECDF figures).
+//!
+//! Everything is deterministic: groups are sorted by key, per-seed
+//! values are folded in cell-index order, and wall-clock measurements
+//! are excluded — so the JSON rendering of a report is byte-identical
+//! across reruns and thread counts.
+
+use super::executor::CellResult;
+use crate::job::JobClass;
+use crate::report;
+use crate::util::json::Json;
+use crate::util::stats::{percentile, Moments};
+use std::collections::BTreeMap;
+
+/// Grouping key: everything but the seed axis.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GroupKey {
+    pub workload: String,
+    pub nodes: usize,
+    pub scheduler: String,
+}
+
+/// Aggregated statistics for one (workload, nodes, scheduler) group.
+#[derive(Clone, Debug)]
+pub struct GroupStats {
+    pub key: GroupKey,
+    /// Seeds folded into this group, in cell order.
+    pub seeds: Vec<u64>,
+    /// Total finished jobs pooled over all seeds.
+    pub jobs: usize,
+    /// Across-seed moments of the per-seed mean sojourn (seconds).
+    pub mean_sojourn: Moments,
+    /// Across-seed moments of per-seed mean slowdown
+    /// (sojourn / serialized job size; ≥ 1 up to scheduling overlap).
+    pub mean_slowdown: Moments,
+    /// Across-seed moments of the per-seed map-locality fraction
+    /// (seeds with no map tasks are skipped).
+    pub locality: Moments,
+    /// Across-seed moments of the makespan (seconds).
+    pub makespan: Moments,
+    /// Across-seed moments of the per-seed per-class mean sojourn.
+    pub class_means: BTreeMap<&'static str, Moments>,
+    /// All per-job sojourns in the group, sorted ascending.
+    pooled_sojourns: Vec<f64>,
+}
+
+impl GroupStats {
+    fn new(key: GroupKey) -> Self {
+        Self {
+            key,
+            seeds: Vec::new(),
+            jobs: 0,
+            mean_sojourn: Moments::new(),
+            mean_slowdown: Moments::new(),
+            locality: Moments::new(),
+            makespan: Moments::new(),
+            class_means: BTreeMap::new(),
+            pooled_sojourns: Vec::new(),
+        }
+    }
+
+    fn fold(&mut self, cell: &CellResult) {
+        let o = &cell.outcome;
+        self.seeds.push(cell.spec.seed);
+        self.jobs += o.sojourn.len();
+        if !o.sojourn.is_empty() {
+            self.mean_sojourn.push(o.sojourn.mean());
+        }
+        let mut slowdown = Moments::new();
+        for rec in o.sojourn.records() {
+            slowdown.push(rec.sojourn() / rec.true_size.max(1e-9));
+        }
+        if slowdown.count() > 0 {
+            self.mean_slowdown.push(slowdown.mean());
+        }
+        let local = o.locality.fraction_local();
+        if !local.is_nan() {
+            self.locality.push(local);
+        }
+        self.makespan.push(o.makespan);
+        for class in JobClass::ALL {
+            let m = o.sojourn.mean_class(class);
+            if !m.is_nan() {
+                self.class_means
+                    .entry(class.name())
+                    .or_insert_with(Moments::new)
+                    .push(m);
+            }
+        }
+        self.pooled_sojourns.extend(o.sojourn.sojourns());
+    }
+
+    fn finalize(&mut self) {
+        self.pooled_sojourns
+            .sort_by(|a, b| a.partial_cmp(b).expect("NaN sojourn"));
+    }
+
+    /// Half-width of the normal-approximation 95 % confidence interval
+    /// on the across-seed mean sojourn; 0 with fewer than two seeds.
+    pub fn ci95_mean_sojourn(&self) -> f64 {
+        let n = self.mean_sojourn.count();
+        if n < 2 {
+            0.0
+        } else {
+            1.96 * (self.mean_sojourn.sample_variance() / n as f64).sqrt()
+        }
+    }
+
+    /// Percentile of the pooled per-job sojourns (`q` in `[0, 100]`);
+    /// NaN for an empty group.
+    pub fn sojourn_percentile(&self, q: f64) -> f64 {
+        if self.pooled_sojourns.is_empty() {
+            f64::NAN
+        } else {
+            percentile(&self.pooled_sojourns, q)
+        }
+    }
+
+    /// The pooled, sorted per-job sojourns.
+    pub fn pooled_sojourns(&self) -> &[f64] {
+        &self.pooled_sojourns
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("workload", self.key.workload.as_str().into());
+        o.set("nodes", self.key.nodes.into());
+        o.set("scheduler", self.key.scheduler.as_str().into());
+        o.set("seeds", self.seeds.clone().into());
+        o.set("jobs", self.jobs.into());
+        o.set("mean_sojourn_s", self.mean_sojourn.mean().into());
+        o.set("ci95_sojourn_s", self.ci95_mean_sojourn().into());
+        o.set("p50_sojourn_s", self.sojourn_percentile(50.0).into());
+        o.set("p95_sojourn_s", self.sojourn_percentile(95.0).into());
+        o.set("p99_sojourn_s", self.sojourn_percentile(99.0).into());
+        o.set("mean_slowdown", self.mean_slowdown.mean().into());
+        o.set("map_locality", self.locality.mean().into());
+        o.set("makespan_s", self.makespan.mean().into());
+        let mut classes = Json::obj();
+        for (name, m) in &self.class_means {
+            classes.set(name, m.mean().into());
+        }
+        o.set("mean_sojourn_by_class_s", classes);
+        o
+    }
+}
+
+/// A full aggregated sweep: one [`GroupStats`] per (workload, nodes,
+/// scheduler), sorted by key.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    pub groups: Vec<GroupStats>,
+}
+
+impl SweepReport {
+    /// Group and fold `cells` (in the given order, which the executor
+    /// guarantees is grid order).
+    pub fn from_cells(name: &str, cells: &[CellResult]) -> Self {
+        let mut groups: BTreeMap<GroupKey, GroupStats> = BTreeMap::new();
+        for cell in cells {
+            let key = GroupKey {
+                workload: cell.spec.workload.label(),
+                nodes: cell.spec.nodes,
+                scheduler: cell.spec.scheduler_label.clone(),
+            };
+            groups
+                .entry(key.clone())
+                .or_insert_with(|| GroupStats::new(key))
+                .fold(cell);
+        }
+        let mut groups: Vec<GroupStats> = groups.into_values().collect();
+        for g in &mut groups {
+            g.finalize();
+        }
+        Self {
+            name: name.to_string(),
+            groups,
+        }
+    }
+
+    /// Find a group by its axes.
+    pub fn group(&self, workload: &str, nodes: usize, scheduler: &str) -> Option<&GroupStats> {
+        self.groups.iter().find(|g| {
+            g.key.workload == workload && g.key.nodes == nodes && g.key.scheduler == scheduler
+        })
+    }
+
+    /// Render the paper-style aligned comparison table.
+    pub fn table(&self) -> String {
+        // Every stat can be absent (a group where no job finished, no
+        // map task ran, ...): render those cells as "-" instead of NaN.
+        let fmt_or_dash = |x: f64, f: &dyn Fn(f64) -> String| {
+            if x.is_nan() {
+                "-".to_string()
+            } else {
+                f(x)
+            }
+        };
+        let rows: Vec<Vec<String>> = self
+            .groups
+            .iter()
+            .map(|g| {
+                vec![
+                    g.key.workload.clone(),
+                    g.key.nodes.to_string(),
+                    g.key.scheduler.clone(),
+                    g.seeds.len().to_string(),
+                    g.jobs.to_string(),
+                    fmt_or_dash(g.mean_sojourn.mean(), &|x| format!("{x:.1}")),
+                    fmt_or_dash(g.ci95_mean_sojourn(), &|x| format!("{x:.1}")),
+                    fmt_or_dash(g.sojourn_percentile(50.0), &|x| format!("{x:.1}")),
+                    fmt_or_dash(g.sojourn_percentile(99.0), &|x| format!("{x:.1}")),
+                    fmt_or_dash(g.mean_slowdown.mean(), &|x| format!("{x:.2}")),
+                    fmt_or_dash(g.locality.mean(), &|x| format!("{:.1}%", x * 100.0)),
+                    fmt_or_dash(g.makespan.mean(), &|x| format!("{x:.0}")),
+                ]
+            })
+            .collect();
+        report::table(
+            &[
+                "workload",
+                "nodes",
+                "scheduler",
+                "seeds",
+                "jobs",
+                "mean sojourn (s)",
+                "ci95 (s)",
+                "p50 (s)",
+                "p99 (s)",
+                "slowdown",
+                "locality",
+                "makespan (s)",
+            ],
+            &rows,
+        )
+    }
+
+    /// Deterministic JSON rendering (stable key and group order;
+    /// wall-clock excluded), suitable for golden-file comparison.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("sweep", self.name.as_str().into());
+        o.set(
+            "groups",
+            Json::Arr(self.groups.iter().map(GroupStats::to_json).collect()),
+        );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SchedulerKind;
+    use crate::sweep::executor::run_grid_threads;
+    use crate::sweep::grid::{ExperimentGrid, WorkloadSpec};
+
+    fn small_results() -> crate::sweep::executor::SweepResults {
+        let grid = ExperimentGrid::new("agg-test")
+            .scheduler(SchedulerKind::Fifo)
+            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .workload(WorkloadSpec::UniformBatch {
+                jobs: 3,
+                maps_per_job: 2,
+                task_s: 4.0,
+            })
+            .nodes(&[2])
+            .seeds(&[1, 2, 3]);
+        run_grid_threads(&grid, 2)
+    }
+
+    #[test]
+    fn groups_fold_seeds() {
+        let report = small_results().aggregate();
+        assert_eq!(report.groups.len(), 2, "one group per scheduler");
+        for g in &report.groups {
+            assert_eq!(g.seeds, vec![1, 2, 3]);
+            assert_eq!(g.jobs, 9, "3 jobs x 3 seeds");
+            assert_eq!(g.mean_sojourn.count(), 3);
+            assert!(g.mean_sojourn.mean() > 0.0);
+            assert!(g.sojourn_percentile(50.0) <= g.sojourn_percentile(99.0));
+            assert!(g.mean_slowdown.mean() > 0.0);
+        }
+        assert!(report.group("uniform-3x2", 2, "FIFO").is_some());
+        assert!(report.group("uniform-3x2", 2, "FAIR").is_none());
+    }
+
+    #[test]
+    fn ci_is_zero_for_single_seed() {
+        let grid = ExperimentGrid::new("one-seed")
+            .scheduler(SchedulerKind::Fifo)
+            .workload(WorkloadSpec::UniformBatch {
+                jobs: 2,
+                maps_per_job: 2,
+                task_s: 3.0,
+            })
+            .nodes(&[2])
+            .seeds(&[5]);
+        let report = run_grid_threads(&grid, 1).aggregate();
+        assert_eq!(report.groups[0].ci95_mean_sojourn(), 0.0);
+    }
+
+    #[test]
+    fn json_and_table_render() {
+        let report = small_results().aggregate();
+        let json = report.to_json().to_string_pretty();
+        assert!(json.contains("\"sweep\""));
+        assert!(json.contains("\"mean_sojourn_s\""));
+        let table = report.table();
+        assert!(table.contains("FIFO"));
+        assert!(table.contains("HFSP"));
+        assert!(table.contains("mean sojourn (s)"));
+    }
+}

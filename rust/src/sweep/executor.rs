@@ -1,0 +1,236 @@
+//! Parallel grid execution: a work-stealing thread-pool fan-out over
+//! independent cells.
+//!
+//! Cells are claimed from a shared atomic cursor (longest cells do not
+//! stall a static partition) and each runs a full
+//! [`run_simulation`](crate::cluster::driver::run_simulation) on its own
+//! OS thread. Results are written into a slot vector indexed by
+//! [`CellSpec::index`], so [`SweepResults::cells`] is always in grid
+//! order and every downstream aggregate is independent of thread count
+//! and completion timing (asserted by `tests/integration_sweep.rs`).
+
+use super::aggregate::SweepReport;
+use super::grid::{CellSpec, ExperimentGrid};
+use crate::cluster::driver::SimOutcome;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One completed cell: its spec and the simulation outcome.
+#[derive(Debug)]
+pub struct CellResult {
+    pub spec: CellSpec,
+    pub outcome: SimOutcome,
+}
+
+/// All cells of one grid run, in grid (cell-index) order.
+#[derive(Debug)]
+pub struct SweepResults {
+    pub name: String,
+    pub cells: Vec<CellResult>,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Host wall-clock for the whole sweep, milliseconds.
+    pub wall_ms: f64,
+}
+
+impl SweepResults {
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Outcomes in grid order.
+    pub fn outcomes(&self) -> impl Iterator<Item = &SimOutcome> {
+        self.cells.iter().map(|c| &c.outcome)
+    }
+
+    /// Look up one cell's outcome by its axes. Intended for
+    /// single-workload grids (every fig/table bench); with several
+    /// workload axis values the lookup is ambiguous — use
+    /// [`SweepResults::outcome_in`] instead (debug builds assert).
+    pub fn outcome(&self, scheduler_label: &str, nodes: usize, seed: u64) -> Option<&SimOutcome> {
+        let mut matches = self.cells.iter().filter(|c| {
+            c.spec.scheduler_label == scheduler_label
+                && c.spec.nodes == nodes
+                && c.spec.seed == seed
+        });
+        let first = matches.next()?;
+        debug_assert!(
+            matches.all(|c| c.spec.workload.label() == first.spec.workload.label()),
+            "ambiguous outcome({scheduler_label}, {nodes}, {seed}): \
+             multiple workloads match; use outcome_in()"
+        );
+        Some(&first.outcome)
+    }
+
+    /// Look up one cell's outcome by all four axes (multi-workload
+    /// grids).
+    pub fn outcome_in(
+        &self,
+        workload_label: &str,
+        scheduler_label: &str,
+        nodes: usize,
+        seed: u64,
+    ) -> Option<&SimOutcome> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.spec.workload.label() == workload_label
+                    && c.spec.scheduler_label == scheduler_label
+                    && c.spec.nodes == nodes
+                    && c.spec.seed == seed
+            })
+            .map(|c| &c.outcome)
+    }
+
+    /// Fold the per-cell outcomes into across-seed group statistics.
+    pub fn aggregate(&self) -> SweepReport {
+        SweepReport::from_cells(&self.name, &self.cells)
+    }
+
+    /// Total simulated events across all cells.
+    pub fn total_events(&self) -> u64 {
+        self.cells.iter().map(|c| c.outcome.events_processed).sum()
+    }
+}
+
+/// Run a grid with one worker per available CPU (see
+/// [`run_grid_threads`]).
+pub fn run_grid(grid: &ExperimentGrid) -> SweepResults {
+    run_grid_threads(grid, 0)
+}
+
+/// Run a grid on `threads` workers (`0` = available parallelism,
+/// clamped to the cell count). Deterministic: the result vector and
+/// every aggregate derived from it are identical for any thread count.
+pub fn run_grid_threads(grid: &ExperimentGrid, threads: usize) -> SweepResults {
+    let t0 = std::time::Instant::now();
+    let cells = grid.cells();
+    let n_cells = cells.len();
+    let threads = effective_threads(threads, n_cells);
+    log::info!(
+        "sweep {:?}: {} cells on {} threads",
+        grid.name(),
+        n_cells,
+        threads
+    );
+
+    let cells = if threads <= 1 {
+        // Serial fallback (also the n_cells <= 1 path): no pool needed.
+        cells
+            .into_iter()
+            .map(|spec| {
+                let outcome = spec.run(grid.base());
+                CellResult { spec, outcome }
+            })
+            .collect()
+    } else {
+        run_pool(grid, cells, threads)
+    };
+
+    SweepResults {
+        name: grid.name().to_string(),
+        cells,
+        threads,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+fn effective_threads(requested: usize, n_cells: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let t = if requested == 0 { hw } else { requested };
+    t.clamp(1, n_cells.max(1))
+}
+
+fn run_pool(grid: &ExperimentGrid, cells: Vec<CellSpec>, threads: usize) -> Vec<CellResult> {
+    let slots: Vec<Mutex<Option<CellResult>>> =
+        (0..cells.len()).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    {
+        let cells = &cells;
+        let slots = &slots;
+        let cursor = &cursor;
+        let base = grid.base();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let spec = cells[i].clone();
+                    let outcome = spec.run(base);
+                    *slots[i].lock().unwrap() = Some(CellResult { spec, outcome });
+                });
+            }
+        });
+    }
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("worker panicked while holding a result slot")
+                .expect("every cell index was claimed and completed")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SchedulerKind;
+    use crate::sweep::grid::WorkloadSpec;
+
+    fn tiny_grid() -> ExperimentGrid {
+        ExperimentGrid::new("executor-test")
+            .scheduler(SchedulerKind::Fifo)
+            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .workload(WorkloadSpec::UniformBatch {
+                jobs: 2,
+                maps_per_job: 3,
+                task_s: 5.0,
+            })
+            .nodes(&[2])
+            .seeds(&[1, 2])
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let grid = tiny_grid();
+        let serial = run_grid_threads(&grid, 1);
+        let parallel = run_grid_threads(&grid, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.spec.index, b.spec.index);
+            assert_eq!(a.spec.scheduler_label, b.spec.scheduler_label);
+            assert_eq!(a.outcome.makespan, b.outcome.makespan);
+            assert_eq!(a.outcome.events_processed, b.outcome.events_processed);
+        }
+    }
+
+    #[test]
+    fn results_are_in_grid_order() {
+        let grid = tiny_grid();
+        let results = run_grid_threads(&grid, 3);
+        for (i, c) in results.cells.iter().enumerate() {
+            assert_eq!(c.spec.index, i);
+        }
+        assert!(results.threads >= 1);
+        assert!(results.total_events() > 0);
+    }
+
+    #[test]
+    fn outcome_lookup_by_axes() {
+        let grid = tiny_grid();
+        let results = run_grid_threads(&grid, 2);
+        assert!(results.outcome("FIFO", 2, 1).is_some());
+        assert!(results.outcome("HFSP", 2, 2).is_some());
+        assert!(results.outcome("FAIR", 2, 1).is_none());
+        assert!(results.outcome("FIFO", 3, 1).is_none());
+    }
+}

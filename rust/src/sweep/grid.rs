@@ -1,0 +1,356 @@
+//! Experiment grid declaration: the cartesian product of scheduler,
+//! workload, cluster size and seed, expanded into runnable cells.
+//!
+//! A cell's outcome is a pure function of its [`CellSpec`] plus the
+//! grid's base [`SimConfig`]: the cell seed is used both to synthesize
+//! seed-dependent workloads ([`WorkloadSpec::realize`]) and as the
+//! simulation master seed (HDFS placement), so re-running a grid with
+//! the same seeds reproduces identical outcomes cell by cell.
+
+use crate::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use crate::scheduler::SchedulerKind;
+use crate::util::rng::{Pcg64, SeedableRng};
+use crate::workload::swim::FbWorkload;
+use crate::workload::{synthetic, Workload};
+
+/// A workload axis value: how to obtain the job trace for one cell.
+///
+/// Seed-dependent specs (`Fb`, `FbMapOnly`) synthesize a fresh workload
+/// from the cell seed, so different seeds compare schedulers on
+/// different (but per-seed identical) job sequences. Fixed specs ignore
+/// the seed and present the exact same jobs to every cell.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    /// SWIM-like FB-dataset synthesis (§4.1), generated from the cell
+    /// seed.
+    Fb(FbWorkload),
+    /// FB-dataset with the reduce phase stripped (the paper's Fig. 6
+    /// map-only variant), generated from the cell seed.
+    FbMapOnly(FbWorkload),
+    /// The Fig. 7 preemption micro-benchmark (5 reduce-only jobs);
+    /// seed-independent.
+    Fig7,
+    /// `jobs` identical map-only jobs arriving together;
+    /// seed-independent.
+    UniformBatch {
+        jobs: usize,
+        maps_per_job: usize,
+        task_s: f64,
+    },
+    /// Back-to-back jobs of geometrically decreasing size (§3.3
+    /// hysteresis stressor); seed-independent.
+    DecreasingSize {
+        jobs: usize,
+        width: usize,
+        base_task_s: f64,
+    },
+    /// A pre-built workload (e.g. a replayed JSONL trace), presented
+    /// as-is to every cell regardless of seed.
+    Fixed(Workload),
+}
+
+impl WorkloadSpec {
+    /// Stable label used in reports and group keys.
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSpec::Fb(_) => "fb-dataset".to_string(),
+            WorkloadSpec::FbMapOnly(_) => "fb-dataset-map-only".to_string(),
+            WorkloadSpec::Fig7 => "fig7-preemption".to_string(),
+            WorkloadSpec::UniformBatch {
+                jobs, maps_per_job, ..
+            } => format!("uniform-{jobs}x{maps_per_job}"),
+            WorkloadSpec::DecreasingSize { jobs, .. } => format!("decreasing-{jobs}"),
+            WorkloadSpec::Fixed(wl) => wl.name.clone(),
+        }
+    }
+
+    /// Materialize the workload for one cell.
+    pub fn realize(&self, seed: u64) -> Workload {
+        match self {
+            WorkloadSpec::Fb(params) => params.generate(&mut Pcg64::seed_from_u64(seed)),
+            WorkloadSpec::FbMapOnly(params) => {
+                params.generate(&mut Pcg64::seed_from_u64(seed)).map_only()
+            }
+            WorkloadSpec::Fig7 => synthetic::fig7_workload(),
+            WorkloadSpec::UniformBatch {
+                jobs,
+                maps_per_job,
+                task_s,
+            } => synthetic::uniform_batch(*jobs, *maps_per_job, *task_s),
+            WorkloadSpec::DecreasingSize {
+                jobs,
+                width,
+                base_task_s,
+            } => synthetic::decreasing_size_workload(*jobs, *width, *base_task_s),
+            WorkloadSpec::Fixed(wl) => wl.clone(),
+        }
+    }
+}
+
+/// One element of the cartesian product: a fully specified simulation.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    /// Position in the grid's deterministic cell order.
+    pub index: usize,
+    /// Display label of the scheduler axis value (distinguishes e.g.
+    /// three HFSP preemption variants that all report `HFSP`).
+    pub scheduler_label: String,
+    pub scheduler: SchedulerKind,
+    pub workload: WorkloadSpec,
+    /// Cluster size for this cell (overrides the base config's).
+    pub nodes: usize,
+    /// Master seed: workload synthesis + HDFS placement.
+    pub seed: u64,
+}
+
+impl CellSpec {
+    /// The cell's effective simulation config.
+    pub fn config(&self, base: &SimConfig) -> SimConfig {
+        let mut cfg = base.clone();
+        cfg.cluster.nodes = self.nodes;
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    /// Run this cell to completion (deterministic given `base`).
+    pub fn run(&self, base: &SimConfig) -> SimOutcome {
+        let workload = self.workload.realize(self.seed);
+        run_simulation(&self.config(base), self.scheduler.clone(), &workload)
+    }
+}
+
+/// Builder for an experiment grid.
+///
+/// Empty axes fall back to sensible defaults when the grid is expanded
+/// (see [`ExperimentGrid::cells`]): all three schedulers, the default
+/// FB-dataset workload, the base config's cluster size, and the base
+/// config's seed. A full paper table is therefore expressible as
+/// `ExperimentGrid::new("t").nodes(&[100, 50, 30]).seeds(&[42, 7, 1234])`.
+#[derive(Clone, Debug)]
+pub struct ExperimentGrid {
+    name: String,
+    schedulers: Vec<(String, SchedulerKind)>,
+    workloads: Vec<WorkloadSpec>,
+    nodes: Vec<usize>,
+    seeds: Vec<u64>,
+    base: SimConfig,
+}
+
+impl ExperimentGrid {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            schedulers: Vec::new(),
+            workloads: Vec::new(),
+            nodes: Vec::new(),
+            seeds: Vec::new(),
+            base: SimConfig::default(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The config template cells are derived from.
+    pub fn base(&self) -> &SimConfig {
+        &self.base
+    }
+
+    /// Replace the base config (cluster shape, Δ, timeline recording…).
+    /// Per-cell `nodes` and `seed` still override it.
+    pub fn base_config(mut self, base: SimConfig) -> Self {
+        self.base = base;
+        self
+    }
+
+    /// Add a scheduler axis value labelled with [`SchedulerKind::label`].
+    pub fn scheduler(self, kind: SchedulerKind) -> Self {
+        let label = kind.label().to_string();
+        self.scheduler_labeled(label, kind)
+    }
+
+    /// Add a scheduler axis value with an explicit label (needed when
+    /// several configurations of the same scheduler are compared).
+    pub fn scheduler_labeled(mut self, label: impl Into<String>, kind: SchedulerKind) -> Self {
+        self.schedulers.push((label.into(), kind));
+        self
+    }
+
+    /// Add a workload axis value.
+    pub fn workload(mut self, spec: WorkloadSpec) -> Self {
+        self.workloads.push(spec);
+        self
+    }
+
+    /// Add cluster sizes to the nodes axis.
+    pub fn nodes(mut self, sizes: &[usize]) -> Self {
+        self.nodes.extend_from_slice(sizes);
+        self
+    }
+
+    /// Add seeds to the seed axis.
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds.extend_from_slice(seeds);
+        self
+    }
+
+    fn effective_schedulers(&self) -> Vec<(String, SchedulerKind)> {
+        if self.schedulers.is_empty() {
+            [
+                SchedulerKind::Fifo,
+                SchedulerKind::Fair(Default::default()),
+                SchedulerKind::Hfsp(Default::default()),
+            ]
+            .into_iter()
+            .map(|k| (k.label().to_string(), k))
+            .collect()
+        } else {
+            self.schedulers.clone()
+        }
+    }
+
+    fn effective_workloads(&self) -> Vec<WorkloadSpec> {
+        if self.workloads.is_empty() {
+            vec![WorkloadSpec::Fb(FbWorkload::default())]
+        } else {
+            self.workloads.clone()
+        }
+    }
+
+    fn effective_nodes(&self) -> Vec<usize> {
+        if self.nodes.is_empty() {
+            vec![self.base.cluster.nodes]
+        } else {
+            self.nodes.clone()
+        }
+    }
+
+    fn effective_seeds(&self) -> Vec<u64> {
+        if self.seeds.is_empty() {
+            vec![self.base.seed]
+        } else {
+            self.seeds.clone()
+        }
+    }
+
+    /// Number of cells the grid expands to (the cartesian product size).
+    pub fn len(&self) -> usize {
+        self.effective_workloads().len()
+            * self.effective_nodes().len()
+            * self.effective_seeds().len()
+            * self.effective_schedulers().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian product into cells, in deterministic order:
+    /// workload (outer) × nodes × seed × scheduler (inner).
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let schedulers = self.effective_schedulers();
+        let workloads = self.effective_workloads();
+        let nodes = self.effective_nodes();
+        let seeds = self.effective_seeds();
+        let mut cells = Vec::with_capacity(self.len());
+        for workload in &workloads {
+            for &n in &nodes {
+                for &seed in &seeds {
+                    for (label, kind) in &schedulers {
+                        cells.push(CellSpec {
+                            index: cells.len(),
+                            scheduler_label: label.clone(),
+                            scheduler: kind.clone(),
+                            workload: workload.clone(),
+                            nodes: n,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_count_is_cartesian_product() {
+        let grid = ExperimentGrid::new("t")
+            .scheduler(SchedulerKind::Fifo)
+            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .workload(WorkloadSpec::Fig7)
+            .nodes(&[2, 4, 8])
+            .seeds(&[1, 2]);
+        assert_eq!(grid.len(), 12); // 1 workload x 3 nodes x 2 seeds x 2 schedulers
+        let cells = grid.cells();
+        assert_eq!(cells.len(), grid.len());
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn empty_axes_fall_back_to_defaults() {
+        let grid = ExperimentGrid::new("defaults");
+        // 3 schedulers x 1 workload x 1 nodes x 1 seed.
+        assert_eq!(grid.len(), 3);
+        let cells = grid.cells();
+        assert_eq!(cells[0].nodes, grid.base().cluster.nodes);
+        assert_eq!(cells[0].seed, grid.base().seed);
+        assert_eq!(cells[0].scheduler_label, "FIFO");
+        assert_eq!(cells[2].scheduler_label, "HFSP");
+    }
+
+    #[test]
+    fn scheduler_varies_fastest() {
+        let grid = ExperimentGrid::new("order")
+            .scheduler(SchedulerKind::Fifo)
+            .scheduler(SchedulerKind::Fair(Default::default()))
+            .workload(WorkloadSpec::Fig7)
+            .nodes(&[2, 4])
+            .seeds(&[9]);
+        let cells = grid.cells();
+        assert_eq!(cells[0].scheduler_label, "FIFO");
+        assert_eq!(cells[1].scheduler_label, "FAIR");
+        assert_eq!(cells[0].nodes, 2);
+        assert_eq!(cells[2].nodes, 4);
+    }
+
+    #[test]
+    fn fb_realization_is_seed_deterministic() {
+        let spec = WorkloadSpec::Fb(FbWorkload {
+            n_small: 4,
+            n_medium: 2,
+            n_large: 0,
+            ..Default::default()
+        });
+        let a = spec.realize(11);
+        let b = spec.realize(11);
+        let c = spec.realize(12);
+        assert_eq!(a.len(), b.len());
+        for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(ja.submit_time, jb.submit_time);
+            assert_eq!(ja.map_durations, jb.map_durations);
+        }
+        // A different seed must change the arrival pattern.
+        assert!(a
+            .jobs
+            .iter()
+            .zip(&c.jobs)
+            .any(|(x, y)| x.submit_time != y.submit_time));
+    }
+
+    #[test]
+    fn cell_config_overrides_nodes_and_seed() {
+        let grid = ExperimentGrid::new("cfg").nodes(&[7]).seeds(&[99]);
+        let cells = grid.cells();
+        let cfg = cells[0].config(grid.base());
+        assert_eq!(cfg.cluster.nodes, 7);
+        assert_eq!(cfg.seed, 99);
+    }
+}

@@ -1,0 +1,48 @@
+//! Experiment sweep engine: declarative, parallel experiment grids.
+//!
+//! The paper's evidence is a *grid* of experiments — scheduler ×
+//! workload × cluster size × preemption strategy — summarized as
+//! sojourn-time statistics (Figs. 3–7, Tables). Before this module,
+//! every figure was its own bench binary re-implementing the same run
+//! loops serially; now a figure is a ~20-line **grid declaration**:
+//!
+//! ```no_run
+//! use hfsp::prelude::*;
+//!
+//! let grid = ExperimentGrid::new("demo")
+//!     .scheduler(SchedulerKind::Fifo)
+//!     .scheduler(SchedulerKind::Hfsp(HfspConfig::default()))
+//!     .workload(WorkloadSpec::Fb(FbWorkload::default()))
+//!     .nodes(&[20, 100])
+//!     .seeds(&[1, 2, 3]);
+//! let results = run_grid(&grid);
+//! println!("{}", results.aggregate().table());
+//! ```
+//!
+//! Three layers:
+//!
+//! * [`grid`] — [`ExperimentGrid`], a builder over the cartesian product
+//!   of scheduler kinds, [`WorkloadSpec`]s, cluster sizes and seeds;
+//!   each product element is a [`CellSpec`] with deterministic RNG
+//!   seeding (the cell seed drives both workload synthesis and HDFS
+//!   placement, so a cell's outcome is a pure function of its spec);
+//! * [`executor`] — [`run_grid`]/[`run_grid_threads`], a work-stealing
+//!   thread-pool fan-out that runs independent cells concurrently.
+//!   Results are stored by cell index, so the output order — and every
+//!   aggregate derived from it — is **independent of thread timing**;
+//! * [`aggregate`] — [`SweepReport`], folding per-cell
+//!   [`SimOutcome`](crate::cluster::driver::SimOutcome)s into per-group
+//!   (workload × nodes × scheduler) statistics across seeds: mean
+//!   sojourn with a 95 % confidence interval, pooled sojourn
+//!   percentiles, per-class means, mean slowdown, map locality and
+//!   makespan — rendered through [`crate::report`] as an aligned table
+//!   and as deterministic JSON (stable key order, byte-identical across
+//!   reruns with the same grid).
+
+pub mod aggregate;
+pub mod executor;
+pub mod grid;
+
+pub use aggregate::{GroupStats, SweepReport};
+pub use executor::{run_grid, run_grid_threads, CellResult, SweepResults};
+pub use grid::{CellSpec, ExperimentGrid, WorkloadSpec};

@@ -45,12 +45,19 @@ impl fmt::Display for Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config error at line {line}: {message}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub message: String,
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     pub fn new() -> Self {

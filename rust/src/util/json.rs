@@ -199,12 +199,23 @@ fn write_escaped(out: &mut String, s: &str) {
 // ---------------------------------------------------------------------------
 
 /// Parse error with byte offset context.
-#[derive(Debug, thiserror::Error)]
-#[error("JSON parse error at byte {offset}: {message}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub message: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "JSON parse error at byte {}: {}",
+            self.offset, self.message
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

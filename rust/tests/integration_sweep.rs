@@ -1,0 +1,153 @@
+//! Sweep-engine integration: cartesian expansion, parallel execution,
+//! and byte-identical aggregate determinism.
+
+use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::sweep::{run_grid_threads, ExperimentGrid, WorkloadSpec};
+use hfsp::workload::swim::FbWorkload;
+
+fn small_fb_spec() -> WorkloadSpec {
+    WorkloadSpec::Fb(FbWorkload {
+        n_small: 8,
+        n_medium: 4,
+        n_large: 0,
+        ..Default::default()
+    })
+}
+
+fn two_by_two_by_two() -> ExperimentGrid {
+    ExperimentGrid::new("2x2x2")
+        .scheduler(SchedulerKind::Fifo)
+        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .workload(small_fb_spec())
+        .nodes(&[4, 8])
+        .seeds(&[3, 5])
+}
+
+#[test]
+fn cell_count_equals_cartesian_product() {
+    let grid = two_by_two_by_two();
+    assert_eq!(grid.len(), 8, "2 schedulers x 1 workload x 2 nodes x 2 seeds");
+    let results = run_grid_threads(&grid, 2);
+    assert_eq!(results.len(), 8);
+    // Every (scheduler, nodes, seed) combination is present exactly once.
+    for label in ["FIFO", "HFSP"] {
+        for nodes in [4, 8] {
+            for seed in [3, 5] {
+                let found = results
+                    .cells
+                    .iter()
+                    .filter(|c| {
+                        c.spec.scheduler_label == label
+                            && c.spec.nodes == nodes
+                            && c.spec.seed == seed
+                    })
+                    .count();
+                assert_eq!(found, 1, "{label}/{nodes}/{seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_2x2x2_smoke_completes_all_jobs() {
+    let grid = two_by_two_by_two();
+    let results = run_grid_threads(&grid, 4);
+    assert!(results.threads >= 1);
+    for cell in &results.cells {
+        let expected = cell.spec.workload.realize(cell.spec.seed).len();
+        assert_eq!(
+            cell.outcome.sojourn.len(),
+            expected,
+            "cell {} ({}/{} nodes/seed {}) must finish every job",
+            cell.spec.index,
+            cell.spec.scheduler_label,
+            cell.spec.nodes,
+            cell.spec.seed
+        );
+        assert_eq!(cell.outcome.counters.rejected_actions, 0);
+    }
+}
+
+#[test]
+fn same_grid_and_seeds_give_byte_identical_aggregates() {
+    let grid = two_by_two_by_two();
+    // Different thread counts must not change a single output byte.
+    let a = run_grid_threads(&grid, 1).aggregate();
+    let b = run_grid_threads(&grid, 4).aggregate();
+    let ja = a.to_json().to_string_pretty();
+    let jb = b.to_json().to_string_pretty();
+    assert_eq!(ja, jb, "aggregate JSON must be byte-identical");
+    assert_eq!(a.table(), b.table(), "aggregate table must be identical");
+    assert!(ja.contains("\"mean_sojourn_s\""));
+}
+
+#[test]
+fn different_seeds_change_the_aggregate() {
+    let base = ExperimentGrid::new("seeded")
+        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .workload(small_fb_spec())
+        .nodes(&[4]);
+    let a = run_grid_threads(&base.clone().seeds(&[1]), 1).aggregate();
+    let b = run_grid_threads(&base.seeds(&[2]), 1).aggregate();
+    assert_ne!(
+        a.to_json().to_string_compact(),
+        b.to_json().to_string_compact(),
+        "a different seed must produce a different workload and report"
+    );
+}
+
+#[test]
+fn labeled_schedulers_group_separately() {
+    // Three HFSP preemption variants all report scheduler name "HFSP";
+    // labels keep their groups distinct.
+    let mut grid = ExperimentGrid::new("labels").workload(WorkloadSpec::Fig7).nodes(&[4]);
+    for prim in [
+        PreemptionPrimitive::Suspend,
+        PreemptionPrimitive::Wait,
+        PreemptionPrimitive::Kill,
+    ] {
+        grid = grid.scheduler_labeled(
+            prim.name(),
+            SchedulerKind::Hfsp(HfspConfig {
+                preemption: prim,
+                ..Default::default()
+            }),
+        );
+    }
+    let report = run_grid_threads(&grid, 3).aggregate();
+    assert_eq!(report.groups.len(), 3);
+    assert!(report.group("fig7-preemption", 4, "suspend").is_some());
+    assert!(report.group("fig7-preemption", 4, "wait").is_some());
+    assert!(report.group("fig7-preemption", 4, "kill").is_some());
+    // The paper's Fig. 7 relationship survives aggregation: WAIT is
+    // clearly worse than eager suspension on this workload.
+    let eager = report.group("fig7-preemption", 4, "suspend").unwrap();
+    let wait = report.group("fig7-preemption", 4, "wait").unwrap();
+    assert!(wait.mean_sojourn.mean() > eager.mean_sojourn.mean() * 1.3);
+}
+
+#[test]
+fn aggregate_json_is_loadable_and_complete() {
+    let grid = ExperimentGrid::new("json")
+        .scheduler(SchedulerKind::Fifo)
+        .workload(WorkloadSpec::UniformBatch {
+            jobs: 3,
+            maps_per_job: 2,
+            task_s: 5.0,
+        })
+        .nodes(&[2])
+        .seeds(&[1, 2]);
+    let report = run_grid_threads(&grid, 2).aggregate();
+    let parsed = hfsp::util::json::parse(&report.to_json().to_string_pretty()).unwrap();
+    let groups = parsed.get("groups").unwrap().as_arr().unwrap();
+    assert_eq!(groups.len(), 1);
+    let g = &groups[0];
+    assert_eq!(g.get("scheduler").unwrap().as_str(), Some("FIFO"));
+    assert_eq!(g.get("nodes").unwrap().as_u64(), Some(2));
+    assert_eq!(g.get("jobs").unwrap().as_u64(), Some(6));
+    assert!(g.get("mean_sojourn_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(g.get("ci95_sojourn_s").is_some());
+    assert!(g.get("p99_sojourn_s").is_some());
+    assert_eq!(g.get("seeds").unwrap().as_arr().unwrap().len(), 2);
+}

@@ -1,0 +1,144 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The build environment is fully offline, so this vendored crate
+//! provides exactly the slice of the `anyhow` API the workspace uses:
+//! [`Error`], [`Result`], and the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros. Semantics match upstream for that slice:
+//!
+//! * `Error` is a type-erased error that any `std::error::Error` value
+//!   converts into via `?` (the source chain is flattened into the
+//!   message eagerly);
+//! * like upstream, `Error` deliberately does **not** implement
+//!   `std::error::Error` itself — that is what makes the blanket
+//!   `From<E: std::error::Error>` impl coherent;
+//! * `{:#}` (alternate `Display`) prints the full `cause: cause: ...`
+//!   chain, `{}` prints the top-level message only.
+
+use std::fmt;
+
+/// Type-erased error with an eagerly rendered message chain.
+pub struct Error {
+    /// Top-level message.
+    msg: String,
+    /// Full chain rendered as `msg: cause: cause`.
+    chain: String,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` expands
+    /// to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        let msg = message.to_string();
+        let chain = msg.clone();
+        Self { msg, chain }
+    }
+
+    /// The full rendered chain (`message: cause: cause`).
+    pub fn chain_string(&self) -> &str {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain)
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let msg = e.to_string();
+        let mut chain = msg.clone();
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push_str(": ");
+            chain.push_str(&s.to_string());
+            source = s.source();
+        }
+        Self { msg, chain }
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn helper(fail: bool) -> Result<u32> {
+        ensure!(!fail, "helper asked to fail");
+        Ok(7)
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 3);
+        assert_eq!(e.to_string(), "bad value 3");
+        assert_eq!(format!("{e:#}"), "bad value 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = read().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(helper(false).unwrap(), 7);
+        assert!(helper(true).is_err());
+        fn fail() -> Result<()> {
+            bail!("always {}", "fails");
+        }
+        assert_eq!(fail().unwrap_err().to_string(), "always fails");
+    }
+}
