@@ -10,19 +10,30 @@
 //!   (SUSPEND/RESUME/KILL) and its memory/swap consequences;
 //! * emit the Δ-progress reports the reduce-size estimator consumes
 //!   (§3.2.1);
-//! * collect metrics: sojourn times, data locality, slot timelines.
+//! * apply the fault plan ([`crate::faults`]): node crashes kill their
+//!   running and suspended tasks back into the pending queue, straggler
+//!   nodes stretch service times, and speculative task clones race their
+//!   originals (first finish wins);
+//! * collect metrics: sojourn times, data locality, slot timelines,
+//!   fault statistics.
 //!
 //! Completion events are guarded by per-task **epochs**: every task state
 //! transition bumps the epoch, so a completion scheduled before a
-//! suspension (now stale) is recognized and dropped.
+//! suspension, kill or crash (now stale) is recognized and dropped.
+//! Heartbeat chains carry a per-node **heartbeat epoch** for the same
+//! reason: a crash/recover cycle invalidates the in-flight chain so a
+//! node never heartbeats twice per period.
 
 use crate::cluster::{Cluster, ClusterConfig, Hdfs};
+use crate::faults::{pick_speculation_candidate, FaultConfig, FaultPlan, FaultStats};
+use crate::faults::plan::FaultEventKind;
 use crate::job::task::NodeId;
 use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
 use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
 use crate::sim::{Engine, StopReason, Time};
-use crate::util::rng::{Pcg64, SeedableRng};
+use crate::util::config::Config;
+use crate::util::rng::{RngStreams, StreamId};
 use crate::util::timeline::TimelineSet;
 use crate::workload::Workload;
 use std::collections::BTreeMap;
@@ -31,8 +42,8 @@ use std::collections::BTreeMap;
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub cluster: ClusterConfig,
-    /// Master seed (HDFS placement and any scheduler randomness derive
-    /// from it).
+    /// Master seed (HDFS placement, the fault plan and any scheduler
+    /// randomness derive from it, through independent named substreams).
     pub seed: u64,
     /// The paper's Δ parameter: a reduce task reports its progress after
     /// Δ seconds of execution, bounding estimator training time (§3.2.1;
@@ -43,6 +54,12 @@ pub struct SimConfig {
     pub record_timelines: bool,
     /// Safety valve: abort the run if simulated time exceeds this.
     pub max_sim_time_s: f64,
+    /// Runaway guard: abort the run after this many processed events
+    /// (surfaced as [`StopReason::EventLimit`] in [`SimOutcome::stop`]).
+    pub event_limit: u64,
+    /// Fault & perturbation scenario (disabled by default; when disabled
+    /// the run is bit-identical to a build without the subsystem).
+    pub faults: FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -53,7 +70,36 @@ impl Default for SimConfig {
             reduce_progress_delta_s: 60.0,
             record_timelines: false,
             max_sim_time_s: 30.0 * 24.0 * 3600.0,
+            // Generous default: the FB-dataset macro run is ~1e6 events.
+            event_limit: 500_000_000,
+            faults: FaultConfig::disabled(),
         }
+    }
+}
+
+impl SimConfig {
+    /// Apply `[sim]` and `[faults]` keys from a parsed config file
+    /// (`--config`), leaving unlisted keys at their current values.
+    pub fn apply_config(&mut self, c: &Config) {
+        self.seed = c.get_u64("sim.seed", self.seed);
+        self.event_limit = c.get_u64("sim.event_limit", self.event_limit);
+        self.max_sim_time_s = c.get_f64("sim.max_sim_time_s", self.max_sim_time_s);
+        self.reduce_progress_delta_s =
+            c.get_f64("sim.reduce_progress_delta_s", self.reduce_progress_delta_s);
+        self.cluster.nodes = c.get_usize("cluster.nodes", self.cluster.nodes);
+        self.cluster.map_slots = c.get_usize("cluster.map_slots", self.cluster.map_slots);
+        self.cluster.reduce_slots =
+            c.get_usize("cluster.reduce_slots", self.cluster.reduce_slots);
+        let f = &mut self.faults;
+        f.enabled = c.get_bool("faults.enabled", f.enabled);
+        f.mtbf_s = c.get_f64("faults.mtbf_s", f.mtbf_s);
+        f.repair_s = c.get_f64("faults.repair_s", f.repair_s);
+        f.permanent_fraction = c.get_f64("faults.permanent_fraction", f.permanent_fraction);
+        f.straggler_fraction = c.get_f64("faults.straggler_fraction", f.straggler_fraction);
+        f.straggler_mu = c.get_f64("faults.straggler_mu", f.straggler_mu);
+        f.straggler_sigma = c.get_f64("faults.straggler_sigma", f.straggler_sigma);
+        f.speculation.enabled = c.get_bool("faults.speculation", f.speculation.enabled);
+        f.size_error_sigma = c.get_f64("faults.size_error_sigma", f.size_error_sigma);
     }
 }
 
@@ -68,6 +114,10 @@ pub struct ActionCounters {
     pub heartbeats: u64,
     pub stale_completions: u64,
     pub rejected_actions: u64,
+    /// Speculative task clones launched (fault subsystem).
+    pub speculative_launches: u64,
+    /// Speculative races won by the clone (original discarded).
+    pub speculative_wins: u64,
 }
 
 /// Everything a simulation run produces.
@@ -79,20 +129,57 @@ pub struct SimOutcome {
     pub locality: LocalityStats,
     pub timelines: TimelineSet,
     pub counters: ActionCounters,
+    /// Fault & robustness statistics. `wasted_work_s` and
+    /// `re_executed_tasks` also count scheduler-issued KILL-preemption
+    /// losses, so they can be non-zero even with faults disabled; the
+    /// crash/recovery/straggler/speculation counters are fault-only.
+    pub faults: FaultStats,
     /// Completion time of the last job (simulated seconds).
     pub makespan: Time,
     pub events_processed: u64,
+    /// Why the event loop stopped. [`StopReason::EventLimit`] means the
+    /// results are truncated — callers should treat it as an error.
+    pub stop: StopReason,
     /// Host wall-clock spent simulating, milliseconds.
     pub wall_ms: f64,
+}
+
+impl SimOutcome {
+    /// Whether the run was cut short by the event-count guard.
+    pub fn truncated(&self) -> bool {
+        self.stop == StopReason::EventLimit
+    }
 }
 
 /// Simulator events.
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrival(usize),
-    Heartbeat(NodeId),
+    Heartbeat { node: NodeId, epoch: u32 },
     TaskDone { task: TaskRef, epoch: u64 },
     ReduceProgress { task: TaskRef, epoch: u64, delta: f64 },
+    /// Fault plan: the node goes down (`permanent`: never recovers).
+    NodeCrash { node: NodeId, permanent: bool },
+    /// Fault plan: the node comes back.
+    NodeRecover(NodeId),
+    /// A speculative clone would finish now (`id` guards staleness).
+    SpecDone { task: TaskRef, id: u64 },
+}
+
+/// One in-flight speculative task clone (driver-private; invisible to
+/// schedulers except through the slot it occupies).
+#[derive(Clone, Copy, Debug)]
+struct SpecAttempt {
+    /// Monotonic id carried by the `SpecDone` event (staleness guard).
+    id: u64,
+    /// Node hosting the clone.
+    node: NodeId,
+    started: Time,
+    /// Epoch of the original attempt when the clone launched; any
+    /// original transition invalidates the race.
+    primary_epoch: u64,
+    /// Work rate of the clone's node.
+    speed: f64,
 }
 
 struct Driver<'a> {
@@ -109,15 +196,53 @@ struct Driver<'a> {
     delta: f64,
     record_timelines: bool,
     max_sim_time: f64,
+    // -- fault subsystem state ------------------------------------------
+    faults_cfg: FaultConfig,
+    fstats: FaultStats,
+    /// Per-node work rate (1.0 = nominal); all ones without faults.
+    speeds: Vec<f64>,
+    /// Any node slower than nominal (gates the speculation scan).
+    has_stragglers: bool,
+    /// Per-node heartbeat-chain epoch (bumped on crash/recover).
+    hb_epoch: Vec<u32>,
+    /// In-flight speculative clones by original task (BTreeMap: crash
+    /// handling iterates it, and f64 accumulation order must be
+    /// deterministic for byte-identical reruns).
+    spec: BTreeMap<TaskRef, SpecAttempt>,
+    spec_seq: u64,
 }
 
 /// Run `workload` under `kind` on the cluster described by `cfg`.
 pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload) -> SimOutcome {
     let t0 = std::time::Instant::now();
-    let mut master = Pcg64::seed_from_u64(cfg.seed);
-    let hdfs_rng = master.split();
+    // Named substreams, derived eagerly in fixed order: enabling faults
+    // (stream 1) can never shift HDFS placement (stream 0) draws.
+    let streams = RngStreams::new(cfg.seed);
+    let hdfs_rng = streams.stream(StreamId::Placement);
     let scheduler = kind.build();
     let scheduler_name = scheduler.name();
+
+    // Compile the fault plan before the run: the whole perturbation
+    // schedule is a pure function of (config, nodes, horizon, seed).
+    let mut speeds = vec![1.0; cfg.cluster.nodes];
+    let mut fstats = FaultStats::default();
+    let mut fault_events = Vec::new();
+    if cfg.faults.enabled {
+        let mut fault_rng = streams.stream(StreamId::Faults);
+        let plan = FaultPlan::compile(
+            &cfg.faults,
+            cfg.cluster.nodes,
+            cfg.max_sim_time_s,
+            &mut fault_rng,
+        );
+        for (node, &slowdown) in plan.slowdowns.iter().enumerate() {
+            speeds[node] = 1.0 / slowdown;
+        }
+        fstats.straggler_nodes = plan.n_stragglers();
+        // `permanent_losses` is counted when crashes are *applied*, not
+        // from the plan: the run usually halts long before the horizon.
+        fault_events = plan.events;
+    }
 
     let mut driver = Driver {
         workload,
@@ -133,9 +258,16 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
         delta: cfg.reduce_progress_delta_s,
         record_timelines: cfg.record_timelines,
         max_sim_time: cfg.max_sim_time_s,
+        faults_cfg: cfg.faults.clone(),
+        fstats,
+        has_stragglers: speeds.iter().any(|&s| s < 1.0),
+        speeds,
+        hb_epoch: vec![0; cfg.cluster.nodes],
+        spec: BTreeMap::new(),
+        spec_seq: 0,
     };
 
-    let mut engine: Engine<Ev> = Engine::new();
+    let mut engine: Engine<Ev> = Engine::new().with_event_limit(cfg.event_limit);
     // Job arrivals.
     for (i, job) in workload.jobs.iter().enumerate() {
         engine.schedule_at(job.submit_time, Ev::Arrival(i));
@@ -146,12 +278,26 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
     let hb = cfg.cluster.heartbeat_s;
     for node in 0..cfg.cluster.nodes {
         let offset = hb * (node as f64 + 1.0) / cfg.cluster.nodes as f64;
-        engine.schedule_at(offset, Ev::Heartbeat(node));
+        engine.schedule_at(offset, Ev::Heartbeat { node, epoch: 0 });
+    }
+    // Fault-plan injection.
+    for ev in &fault_events {
+        let event = match ev.kind {
+            FaultEventKind::Crash => Ev::NodeCrash {
+                node: ev.node,
+                permanent: ev.permanent,
+            },
+            FaultEventKind::Recover => Ev::NodeRecover(ev.node),
+        };
+        engine.schedule_at(ev.time, event);
     }
 
     let reason = engine.run(|eng, now, ev| driver.handle(eng, now, ev));
     if reason == StopReason::EventLimit {
-        log::error!("simulation hit the event-limit guard; results are partial");
+        log::error!(
+            "simulation hit the event-limit guard ({} events); results are truncated",
+            cfg.event_limit
+        );
     }
     if driver.finished_jobs != workload.len() {
         log::warn!(
@@ -169,8 +315,10 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
         locality: driver.locality,
         timelines: driver.timelines,
         counters: driver.counters,
+        faults: driver.fstats,
         makespan: engine.now(),
         events_processed: engine.processed(),
+        stop: reason,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     }
 }
@@ -179,11 +327,14 @@ impl<'a> Driver<'a> {
     fn handle(&mut self, eng: &mut Engine<Ev>, now: Time, ev: Ev) {
         match ev {
             Ev::Arrival(i) => self.on_arrival(now, i),
-            Ev::Heartbeat(node) => self.on_heartbeat(eng, now, node),
+            Ev::Heartbeat { node, epoch } => self.on_heartbeat(eng, now, node, epoch),
             Ev::TaskDone { task, epoch } => self.on_task_done(eng, now, task, epoch),
             Ev::ReduceProgress { task, epoch, delta } => {
                 self.on_reduce_progress(now, task, epoch, delta)
             }
+            Ev::NodeCrash { node, permanent } => self.on_node_crash(now, node, permanent),
+            Ev::NodeRecover(node) => self.on_node_recover(eng, now, node),
+            Ev::SpecDone { task, id } => self.on_spec_done(now, task, id),
         }
         if self.finished_jobs == self.workload.len() {
             eng.halt();
@@ -214,7 +365,12 @@ impl<'a> Driver<'a> {
         self.scheduler.on_job_arrival(&view, id);
     }
 
-    fn on_heartbeat(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId) {
+    fn on_heartbeat(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId, epoch: u32) {
+        // A crash/recover cycle invalidates the in-flight chain; a down
+        // node's chain simply ends (recovery starts a fresh one).
+        if epoch != self.hb_epoch[node] || self.cluster.node(node).is_down() {
+            return;
+        }
         self.counters.heartbeats += 1;
         if now > self.max_sim_time {
             log::error!("simulated time exceeded max_sim_time_s; halting");
@@ -234,9 +390,19 @@ impl<'a> Driver<'a> {
             log::trace!("t={now:.2} node={node} apply {action:?}");
             self.apply(eng, now, action);
         }
+        // Leftover slots may host a speculative clone of a straggling
+        // task (fault subsystem; off by default, and inert without speed
+        // diversity — a clone restarted from scratch at the same speed
+        // can never beat its original).
+        if self.faults_cfg.speculation_active() && self.has_stragglers {
+            self.maybe_speculate(eng, now, node);
+        }
         // Keep heartbeating while work remains.
         if self.finished_jobs != self.workload.len() {
-            eng.schedule_in(self.cluster.config().heartbeat_s, Ev::Heartbeat(node));
+            eng.schedule_in(
+                self.cluster.config().heartbeat_s,
+                Ev::Heartbeat { node, epoch },
+            );
         }
     }
 
@@ -271,8 +437,12 @@ impl<'a> Driver<'a> {
         let local = task.phase == Phase::Map && self.hdfs.is_local(node, task);
         let swapped = self.cluster.node_mut(node).start_task(task);
         self.mark_swapped(&swapped);
+        let speed = self.speeds[node];
         let job = self.jobs.get_mut(&task.job).unwrap();
-        let delay = job.task_mut(task).launch(node, now, local);
+        if job.task(task).attempts > 0 {
+            self.fstats.re_executed_tasks += 1;
+        }
+        let delay = job.task_mut(task).launch(node, now, local, speed);
         job.counts_mut(task.phase).on_launch();
         let epoch = job.task(task).epoch;
         eng.schedule_in(delay, Ev::TaskDone { task, epoch });
@@ -295,6 +465,8 @@ impl<'a> Driver<'a> {
     }
 
     fn do_suspend(&mut self, now: Time, task: TaskRef) {
+        // Suspending the original ends any speculative race.
+        self.cancel_spec(task, now);
         let Some(job) = self.jobs.get(&task.job) else {
             self.reject(task, "suspend of unknown job");
             return;
@@ -344,8 +516,9 @@ impl<'a> Driver<'a> {
         } else {
             0.0
         };
+        let speed = self.speeds[node];
         let job = self.jobs.get_mut(&task.job).unwrap();
-        let delay = job.task_mut(task).resume(now, swap_delay);
+        let delay = job.task_mut(task).resume(now, swap_delay, speed);
         job.counts_mut(task.phase).on_resume();
         let epoch = job.task(task).epoch;
         eng.schedule_in(delay, Ev::TaskDone { task, epoch });
@@ -356,6 +529,8 @@ impl<'a> Driver<'a> {
     }
 
     fn do_kill(&mut self, now: Time, task: TaskRef) {
+        // Killing the original ends any speculative race.
+        self.cancel_spec(task, now);
         let Some(job) = self.jobs.get_mut(&task.job) else {
             self.reject(task, "kill of unknown job");
             return;
@@ -363,17 +538,21 @@ impl<'a> Driver<'a> {
         let state = job.task(task).state;
         if state.is_running() {
             let node = state.node().unwrap();
+            let lost = job.task(task).work_done(now);
             self.cluster.node_mut(node).finish_task(task);
             job.task_mut(task).kill(now);
             job.counts_mut(task.phase).on_kill_running();
+            self.fstats.wasted_work_s += lost;
             if self.record_timelines {
                 self.timelines.release(task.job, now);
             }
         } else if state.is_suspended() {
             let node = state.node().unwrap();
+            let lost = job.task(task).work_done(now);
             self.cluster.node_mut(node).drop_suspended(task);
             job.task_mut(task).kill(now);
             job.counts_mut(task.phase).on_kill_suspended();
+            self.fstats.wasted_work_s += lost;
             // Slot already released at suspension time.
         } else {
             self.reject(task, "kill of non-active task");
@@ -410,10 +589,23 @@ impl<'a> Driver<'a> {
                 return;
             }
         }
+        // The original finished first: any speculative clone loses.
+        self.cancel_spec(task, now);
+        let job = self.jobs.get_mut(&task.job).unwrap();
         let node = job.task(task).state.node().unwrap();
+        let observed = job.task(task).observed_duration();
         job.task_mut(task).complete(now);
         job.counts_mut(task.phase).on_complete();
         self.cluster.node_mut(node).finish_task(task);
+        self.finish_common(now, task, observed);
+    }
+
+    /// Post-completion bookkeeping shared by ordinary completions and
+    /// speculative-clone wins: job progress, metrics, scheduler
+    /// callbacks, job-finish accounting. The task is already `Done` and
+    /// its slot released.
+    fn finish_common(&mut self, now: Time, task: TaskRef, observed: f64) {
+        let job = self.jobs.get_mut(&task.job).unwrap();
         match task.phase {
             Phase::Map => job.maps_done += 1,
             Phase::Reduce => job.reduces_done += 1,
@@ -424,7 +616,6 @@ impl<'a> Driver<'a> {
         if self.record_timelines {
             self.timelines.release(task.job, now);
         }
-        let observed = job.task(task).total_work;
         let finished = job.is_finished();
         if finished {
             job.finish_time = Some(now);
@@ -461,8 +652,10 @@ impl<'a> Driver<'a> {
             }
             // Fraction of input processed after Δ seconds: for the
             // I/O-bound jobs of the FB-dataset this is Δ / total work
-            // (§3.2.1 — the progress embeds any input-size skew).
-            (delta / rt.total_work).clamp(0.0, 1.0)
+            // (§3.2.1 — the progress embeds any input-size skew). On a
+            // straggler node the same Δ covers proportionally less work,
+            // so the estimator sees the stretched service time.
+            (delta * rt.attempt_speed / rt.total_work).clamp(0.0, 1.0)
         };
         let view = SchedView {
             jobs: &self.jobs,
@@ -471,6 +664,182 @@ impl<'a> Driver<'a> {
             now,
         };
         self.scheduler.on_reduce_progress(&view, task, delta, progress);
+    }
+
+    // -- fault subsystem ------------------------------------------------
+
+    /// Apply a planned node crash: the node goes down, its running and
+    /// suspended task attempts lose their work and re-enter the pending
+    /// queue, and every speculative race it participates in is resolved.
+    fn on_node_crash(&mut self, now: Time, node: NodeId, permanent: bool) {
+        if self.cluster.node(node).is_down() {
+            return; // defensive: plan never crashes a down node
+        }
+        log::debug!("t={now:.1} node {node} crashes (permanent: {permanent})");
+        self.hb_epoch[node] = self.hb_epoch[node].wrapping_add(1);
+        let (running, suspended) = self.cluster.node_mut(node).crash();
+        self.fstats.crashes += 1;
+        if permanent {
+            self.fstats.permanent_losses += 1;
+        }
+        // Clones hosted on the crashed node die with it (their slot
+        // accounting was reset by `crash()`).
+        let hosted: Vec<TaskRef> = self
+            .spec
+            .iter()
+            .filter(|(_, a)| a.node == node)
+            .map(|(&t, _)| t)
+            .collect();
+        for t in hosted {
+            let att = self.spec.remove(&t).unwrap();
+            self.fstats.wasted_work_s += (now - att.started) * att.speed;
+        }
+        for t in running {
+            // The original of a race dies: the clone elsewhere is
+            // cancelled too (Hadoop restarts the task attempt cleanly).
+            self.cancel_spec(t, now);
+            let job = self.jobs.get_mut(&t.job).expect("running task has a job");
+            let lost = job.task(t).work_done(now);
+            job.task_mut(t).kill(now);
+            job.counts_mut(t.phase).on_kill_running();
+            self.fstats.wasted_work_s += lost;
+            self.fstats.crash_task_kills += 1;
+            if self.record_timelines {
+                self.timelines.release(t.job, now);
+            }
+        }
+        for t in suspended {
+            let job = self.jobs.get_mut(&t.job).expect("suspended task has a job");
+            let lost = job.task(t).work_done(now);
+            job.task_mut(t).kill(now);
+            job.counts_mut(t.phase).on_kill_suspended();
+            self.fstats.wasted_work_s += lost;
+            self.fstats.crash_task_kills += 1;
+        }
+    }
+
+    /// Apply a planned node recovery: the node comes back empty and
+    /// restarts its heartbeat chain.
+    fn on_node_recover(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId) {
+        if !self.cluster.node(node).is_down() {
+            return; // defensive
+        }
+        log::debug!("t={now:.1} node {node} recovers");
+        self.cluster.node_mut(node).restore();
+        self.fstats.recoveries += 1;
+        self.hb_epoch[node] = self.hb_epoch[node].wrapping_add(1);
+        if self.finished_jobs != self.workload.len() {
+            eng.schedule_in(
+                self.cluster.config().heartbeat_s,
+                Ev::Heartbeat {
+                    node,
+                    epoch: self.hb_epoch[node],
+                },
+            );
+        }
+    }
+
+    /// Offer this node's leftover slots (at most one per phase per
+    /// heartbeat, Hadoop-style) to clones of straggling tasks.
+    fn maybe_speculate(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId) {
+        for phase in [Phase::Map, Phase::Reduce] {
+            if !self.cluster.node(node).has_free_slot(phase) {
+                continue;
+            }
+            let spec = &self.spec;
+            let Some(task) = pick_speculation_candidate(
+                &self.faults_cfg.speculation,
+                &self.jobs,
+                &self.cluster,
+                &self.speeds,
+                node,
+                phase,
+                now,
+                |t| spec.contains_key(&t),
+            ) else {
+                continue;
+            };
+            let (work, primary_epoch) = {
+                let rt = self.jobs[&task.job].task(task);
+                (rt.total_work, rt.epoch)
+            };
+            let speed = self.speeds[node];
+            let swapped = self.cluster.node_mut(node).reserve_speculative(phase);
+            self.mark_swapped(&swapped);
+            self.spec_seq += 1;
+            let id = self.spec_seq;
+            self.spec.insert(
+                task,
+                SpecAttempt {
+                    id,
+                    node,
+                    started: now,
+                    primary_epoch,
+                    speed,
+                },
+            );
+            eng.schedule_in(work / speed, Ev::SpecDone { task, id });
+            self.counters.speculative_launches += 1;
+            log::debug!("t={now:.1} speculating {task} on node {node}");
+        }
+    }
+
+    /// A speculative clone crossed the finish line. If the race is still
+    /// live, the clone wins: the original is discarded (its progress is
+    /// wasted work) and the task completes here and now.
+    fn on_spec_done(&mut self, now: Time, task: TaskRef, id: u64) {
+        let Some(att) = self.spec.get(&task) else {
+            return; // race already resolved (cancelled or won elsewhere)
+        };
+        if att.id != id {
+            return; // stale event from a superseded clone
+        }
+        let att = self.spec.remove(&task).unwrap();
+        self.cluster
+            .node_mut(att.node)
+            .release_speculative(task.phase);
+        let Some(job) = self.jobs.get_mut(&task.job) else {
+            return;
+        };
+        {
+            let rt = job.task(task);
+            if !rt.state.is_running() || rt.epoch != att.primary_epoch {
+                // The original transitioned without cancelling the race
+                // (defensive — cancellation is eager); clone is wasted.
+                self.fstats.wasted_work_s += (now - att.started) * att.speed;
+                return;
+            }
+        }
+        let pnode = job.task(task).state.node().unwrap();
+        let lost = job.task(task).work_done(now);
+        // The clone ran start-to-finish on its node: that is what the
+        // scheduler observes as the task's runtime.
+        let observed = job.task(task).total_work / att.speed;
+        // Locality stats must describe the attempt that actually produced
+        // the output — the clone's node, not the original's.
+        if task.phase == Phase::Map {
+            let clone_local = self.hdfs.is_local(att.node, task);
+            job.task_mut(task).local = clone_local;
+        }
+        job.task_mut(task).complete(now);
+        job.counts_mut(task.phase).on_complete();
+        self.cluster.node_mut(pnode).finish_task(task);
+        self.fstats.wasted_work_s += lost;
+        self.counters.speculative_wins += 1;
+        log::debug!("t={now:.1} speculative clone of {task} wins");
+        self.finish_common(now, task, observed);
+    }
+
+    /// Discard the speculative clone racing `task`, if any (the original
+    /// completed, was suspended, was killed, or lost its node).
+    fn cancel_spec(&mut self, task: TaskRef, now: Time) {
+        let Some(att) = self.spec.remove(&task) else {
+            return;
+        };
+        self.fstats.wasted_work_s += (now - att.started) * att.speed;
+        self.cluster
+            .node_mut(att.node)
+            .release_speculative(task.phase);
     }
 
     fn record_finish(&mut self, job: &Job) {
@@ -483,5 +852,60 @@ impl<'a> Driver<'a> {
             n_reduces: job.spec.n_reduces(),
             true_size: job.spec.true_size(),
         });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_config_reads_sim_and_fault_keys() {
+        let text = r#"
+[sim]
+event_limit = 1234
+max_sim_time_s = 500.0
+seed = 9
+
+[cluster]
+nodes = 7
+
+[faults]
+enabled = true
+mtbf_s = 3600.0
+straggler_fraction = 0.2
+speculation = true
+size_error_sigma = 0.4
+"#;
+        let c = Config::parse(text).unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.apply_config(&c);
+        assert_eq!(cfg.event_limit, 1234);
+        assert_eq!(cfg.max_sim_time_s, 500.0);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.cluster.nodes, 7);
+        assert!(cfg.faults.enabled);
+        assert_eq!(cfg.faults.mtbf_s, 3600.0);
+        assert_eq!(cfg.faults.straggler_fraction, 0.2);
+        assert!(cfg.faults.speculation.enabled);
+        assert_eq!(cfg.faults.size_error_sigma, 0.4);
+    }
+
+    #[test]
+    fn apply_config_keeps_defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.apply_config(&c);
+        let dflt = SimConfig::default();
+        assert_eq!(cfg.event_limit, dflt.event_limit);
+        assert_eq!(cfg.seed, dflt.seed);
+        assert!(!cfg.faults.enabled);
+    }
+
+    #[test]
+    fn default_config_has_faults_disabled_and_legacy_event_limit() {
+        let cfg = SimConfig::default();
+        assert!(!cfg.faults.enabled);
+        assert_eq!(cfg.event_limit, 500_000_000);
     }
 }

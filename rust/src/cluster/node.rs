@@ -45,6 +45,14 @@ pub struct Node {
     running_maps: Vec<TaskRef>,
     running_reduces: Vec<TaskRef>,
     suspended: Vec<SuspendedCtx>,
+    /// Crashed (fault subsystem): no slots, no contexts, no heartbeats.
+    down: bool,
+    /// Slots reserved by speculative task clones (fault subsystem). The
+    /// clones are driver-private — they never appear in `running()`, so
+    /// schedulers cannot suspend/kill them — but they do consume slots
+    /// and RAM contexts.
+    spec_maps: usize,
+    spec_reduces: usize,
 }
 
 impl Node {
@@ -55,6 +63,9 @@ impl Node {
             running_maps: Vec::with_capacity(cfg.map_slots),
             running_reduces: Vec::with_capacity(cfg.reduce_slots),
             suspended: Vec::new(),
+            down: false,
+            spec_maps: 0,
+            spec_reduces: 0,
         }
     }
 
@@ -76,12 +87,89 @@ impl Node {
         }
     }
 
+    fn speculative(&self, phase: Phase) -> usize {
+        match phase {
+            Phase::Map => self.spec_maps,
+            Phase::Reduce => self.spec_reduces,
+        }
+    }
+
     pub fn free_slots(&self, phase: Phase) -> usize {
-        self.slots(phase) - self.running(phase).len()
+        if self.down {
+            return 0;
+        }
+        self.slots(phase)
+            .saturating_sub(self.running(phase).len() + self.speculative(phase))
     }
 
     pub fn has_free_slot(&self, phase: Phase) -> bool {
         self.free_slots(phase) > 0
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    // -- fault transitions ---------------------------------------------
+
+    /// Crash: the node goes down, every running task and suspended
+    /// context is lost. Returns `(running, suspended)` task refs so the
+    /// driver can re-queue them; speculative reservations are silently
+    /// discarded (the driver drops their attempts separately).
+    pub fn crash(&mut self) -> (Vec<TaskRef>, Vec<TaskRef>) {
+        assert!(!self.down, "crash of a node that is already down");
+        self.down = true;
+        let mut running = std::mem::take(&mut self.running_maps);
+        running.append(&mut self.running_reduces);
+        let suspended = std::mem::take(&mut self.suspended)
+            .into_iter()
+            .map(|c| c.task)
+            .collect();
+        self.spec_maps = 0;
+        self.spec_reduces = 0;
+        (running, suspended)
+    }
+
+    /// Recover: the node comes back up, empty.
+    pub fn restore(&mut self) {
+        assert!(self.down, "restore of a node that is not down");
+        self.down = false;
+    }
+
+    /// Reserve one slot for a speculative task clone. Like
+    /// [`Node::start_task`], the added context may push RAM over
+    /// capacity and page out suspended contexts; the returned tasks were
+    /// newly swapped and must be marked by the driver.
+    pub fn reserve_speculative(&mut self, phase: Phase) -> Vec<TaskRef> {
+        assert!(
+            self.has_free_slot(phase),
+            "speculative reservation without free {} slot on node {}",
+            phase.name(),
+            self.id
+        );
+        match phase {
+            Phase::Map => self.spec_maps += 1,
+            Phase::Reduce => self.spec_reduces += 1,
+        }
+        self.page_out_if_needed()
+    }
+
+    /// Release a speculative reservation (clone finished or cancelled).
+    /// A no-op on a down node — the crash already reset the accounting.
+    pub fn release_speculative(&mut self, phase: Phase) {
+        if self.down {
+            return;
+        }
+        match phase {
+            Phase::Map => {
+                assert!(self.spec_maps > 0, "speculative release underflow");
+                self.spec_maps -= 1;
+            }
+            Phase::Reduce => {
+                assert!(self.spec_reduces > 0, "speculative release underflow");
+                self.spec_reduces -= 1;
+            }
+        }
     }
 
     /// Tasks suspended on this node (any phase).
@@ -99,10 +187,13 @@ impl Node {
 
     // -- memory accounting ---------------------------------------------
 
-    /// MB of RAM used by task contexts (running + suspended-in-RAM).
+    /// MB of RAM used by task contexts (running + speculative clones +
+    /// suspended-in-RAM).
     pub fn ram_used_mb(&self) -> f64 {
         let contexts = self.running_maps.len()
             + self.running_reduces.len()
+            + self.spec_maps
+            + self.spec_reduces
             + self.suspended.iter().filter(|c| !c.swapped).count();
         contexts as f64 * self.cfg.ram_per_slot_mb
     }
@@ -116,10 +207,16 @@ impl Node {
     /// followed by a backfill launch, so one eager preemption consumes one
     /// unit of headroom.
     pub fn context_headroom(&self) -> usize {
+        if self.down {
+            return 0;
+        }
         let ram_slots = (self.cfg.ram_mb / self.cfg.ram_per_slot_mb).floor() as usize;
         let swap_slots = (self.cfg.swap_mb / self.cfg.ram_per_slot_mb).floor() as usize;
-        let used =
-            self.running_maps.len() + self.running_reduces.len() + self.suspended.len();
+        let used = self.running_maps.len()
+            + self.running_reduces.len()
+            + self.spec_maps
+            + self.spec_reduces
+            + self.suspended.len();
         (ram_slots + swap_slots).saturating_sub(used)
     }
 
@@ -154,7 +251,16 @@ impl Node {
     }
 
     /// Release the slot held by `task` (completion or kill).
+    ///
+    /// On a **down** node this is a guarded no-op: the crash already
+    /// released every slot, so a late `finish_task` (e.g. a completion
+    /// racing the crash) must not double-free. Task epochs make that
+    /// race unreachable from the driver, but the guard keeps the slot
+    /// accounting safe regardless.
     pub fn finish_task(&mut self, task: TaskRef) {
+        if self.down {
+            return;
+        }
         let list = match task.phase {
             Phase::Map => &mut self.running_maps,
             Phase::Reduce => &mut self.running_reduces,
@@ -349,5 +455,123 @@ mod tests {
         n.suspend_task(a, 0.0);
         n.drop_suspended(a);
         assert_eq!(n.suspended_count(), 0);
+    }
+
+    #[test]
+    fn ram_swap_ledger_across_suspend_resume_drop() {
+        // RAM fits 3 contexts (6000/1900); force a page-out and track the
+        // ledger across every suspended-context transition.
+        let per = cfg().ram_per_slot_mb;
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Map, 0);
+        let b = t(2, Phase::Map, 0);
+        n.start_task(a);
+        n.start_task(b);
+        n.suspend_task(a, 1.0);
+        n.suspend_task(b, 2.0);
+        assert_eq!(n.swap_used_mb(), 0.0, "2 contexts fit in RAM");
+        assert_eq!(n.ram_used_mb(), 2.0 * per);
+        // Refill both map slots: 4 contexts > 3 → oldest (a) pages out.
+        n.start_task(t(3, Phase::Map, 0));
+        let swapped = n.start_task(t(4, Phase::Map, 0));
+        assert_eq!(swapped, vec![a]);
+        assert_eq!(n.swap_used_mb(), per);
+        assert_eq!(n.ram_used_mb(), 3.0 * per);
+        // Dropping the swapped context frees swap, not RAM.
+        n.drop_suspended(a);
+        assert_eq!(n.swap_used_mb(), 0.0);
+        assert_eq!(n.ram_used_mb(), 3.0 * per);
+        // Resuming the in-RAM context converts suspended → running: the
+        // finished task's context left, so 2 contexts remain.
+        n.finish_task(t(3, Phase::Map, 0));
+        let (was_swapped, others) = n.resume_task(b);
+        assert!(!was_swapped);
+        assert!(others.is_empty());
+        assert_eq!(n.ram_used_mb(), 2.0 * per);
+        assert_eq!(n.suspended_count(), 0);
+    }
+
+    #[test]
+    fn crash_releases_everything_and_reports_losses() {
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Map, 0);
+        let b = t(2, Phase::Map, 0);
+        let r = t(3, Phase::Reduce, 0);
+        n.start_task(a);
+        n.start_task(b);
+        n.suspend_task(a, 1.0);
+        n.start_task(r);
+        let (running, suspended) = n.crash();
+        assert!(n.is_down());
+        assert_eq!(running.len(), 2, "b and r were running");
+        assert!(running.contains(&b) && running.contains(&r));
+        assert_eq!(suspended, vec![a]);
+        assert_eq!(n.free_slots(Phase::Map), 0, "down node offers no slots");
+        assert_eq!(n.free_slots(Phase::Reduce), 0);
+        assert_eq!(n.context_headroom(), 0);
+        assert!(!n.can_suspend());
+        n.restore();
+        assert!(!n.is_down());
+        assert_eq!(n.free_slots(Phase::Map), 2, "restored node is empty");
+        assert_eq!(n.suspended_count(), 0);
+    }
+
+    #[test]
+    fn finish_task_on_crashed_node_cannot_double_free() {
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Map, 0);
+        n.start_task(a);
+        let _ = n.crash();
+        // A completion racing the crash must not panic or corrupt slots.
+        n.finish_task(a);
+        assert_eq!(n.free_slots(Phase::Map), 0);
+        n.restore();
+        assert_eq!(n.free_slots(Phase::Map), 2);
+        // And the slot can be re-occupied normally afterwards.
+        n.start_task(a);
+        assert_eq!(n.free_slots(Phase::Map), 1);
+    }
+
+    #[test]
+    fn speculative_reservations_consume_slots_and_contexts() {
+        let mut n = Node::new(0, cfg());
+        let headroom = n.context_headroom();
+        n.reserve_speculative(Phase::Map);
+        assert_eq!(n.free_slots(Phase::Map), 1);
+        assert_eq!(n.context_headroom(), headroom - 1);
+        n.reserve_speculative(Phase::Map);
+        assert!(!n.has_free_slot(Phase::Map));
+        n.release_speculative(Phase::Map);
+        n.release_speculative(Phase::Map);
+        assert_eq!(n.free_slots(Phase::Map), 2);
+        assert_eq!(n.context_headroom(), headroom);
+    }
+
+    #[test]
+    fn speculative_reservation_pages_out_under_memory_pressure() {
+        // RAM fits 3 contexts; the clone's context is the 4th and must
+        // push the suspended one to swap, exactly like a launch would.
+        let mut n = Node::new(0, cfg());
+        let a = t(1, Phase::Map, 0);
+        n.start_task(a);
+        n.start_task(t(2, Phase::Map, 0));
+        n.suspend_task(a, 1.0);
+        n.start_task(t(3, Phase::Map, 0)); // 2 running + 1 suspended = 3 ctx
+        assert_eq!(n.swap_used_mb(), 0.0);
+        let swapped = n.reserve_speculative(Phase::Reduce);
+        assert_eq!(swapped, vec![a], "4th context evicts the parked one");
+        assert!(n.swap_used_mb() > 0.0);
+    }
+
+    #[test]
+    fn release_speculative_after_crash_is_noop() {
+        let mut n = Node::new(0, cfg());
+        n.reserve_speculative(Phase::Reduce);
+        let _ = n.crash();
+        // The crash reset the reservation; a late release must not
+        // underflow.
+        n.release_speculative(Phase::Reduce);
+        n.restore();
+        assert_eq!(n.free_slots(Phase::Reduce), 1);
     }
 }

@@ -1,0 +1,112 @@
+//! Multiplicative size-estimation error models.
+//!
+//! The paper's Fig. 6 perturbs HFSP's estimates with a uniform relative
+//! error (`θ · (1 + U[-α, α])`); the follow-up robustness literature
+//! (Dell'Amico, Carra, Michiardi — "Revisiting Size-Based Scheduling
+//! with Estimated Job Sizes") models estimation error as a **log-normal
+//! multiplicative factor** `θ · exp(N(0, σ))`, whose median is the exact
+//! size and whose tails produce the order-inversions that break naive
+//! SRPT-like disciplines. [`ErrorModel`] implements both behind one
+//! seeded interface; the HFSP training module applies it to every final
+//! estimate it delivers.
+
+use crate::util::rng::{log_normal, Pcg64, Rng, SeedableRng};
+
+/// Which multiplicative error distribution is applied.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ErrorKind {
+    /// `factor = 1 + U[-α, α]` — the paper's Fig. 6 model.
+    Uniform { alpha: f64 },
+    /// `factor = exp(N(0, σ))` — median-1 log-normal error.
+    LogNormal { sigma: f64 },
+}
+
+/// Seeded multiplicative error injector for job-size estimates.
+#[derive(Clone, Debug)]
+pub struct ErrorModel {
+    kind: ErrorKind,
+    rng: Pcg64,
+}
+
+impl ErrorModel {
+    /// The Fig. 6 uniform model. Draw-compatible with the historical
+    /// `ErrorInjector`: same seed + α ⇒ identical perturbation sequence.
+    pub fn uniform(alpha: f64, seed: u64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&alpha),
+            "uniform error alpha must be in [0, 1]"
+        );
+        Self {
+            kind: ErrorKind::Uniform { alpha },
+            rng: Pcg64::seed_from_u64(seed),
+        }
+    }
+
+    /// Median-1 log-normal model with the given σ of the underlying
+    /// normal.
+    pub fn log_normal(sigma: f64, seed: u64) -> Self {
+        assert!(sigma >= 0.0, "log-normal error sigma must be non-negative");
+        Self {
+            kind: ErrorKind::LogNormal { sigma },
+            rng: Pcg64::seed_from_u64(seed),
+        }
+    }
+
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Apply one multiplicative perturbation (consumes RNG state).
+    pub fn perturb(&mut self, size: f64) -> f64 {
+        let factor = match self.kind {
+            ErrorKind::Uniform { alpha } => 1.0 + self.rng.gen_range_f64(-alpha, alpha),
+            ErrorKind::LogNormal { sigma } => log_normal(&mut self.rng, 0.0, sigma),
+        };
+        (size * factor).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_stays_in_bounds() {
+        for seed in 0..20 {
+            let mut m = ErrorModel::uniform(0.5, seed);
+            for _ in 0..100 {
+                let x = m.perturb(1000.0);
+                assert!((500.0..=1500.0).contains(&x), "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn log_normal_is_positive_and_spreads() {
+        let mut m = ErrorModel::log_normal(0.5, 3);
+        let xs: Vec<f64> = (0..10_000).map(|_| m.perturb(100.0)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let above = xs.iter().filter(|&&x| x > 100.0).count();
+        // Median-1 factor: about half the draws land above the true size.
+        let frac = above as f64 / xs.len() as f64;
+        assert!((0.45..0.55).contains(&frac), "frac above = {frac}");
+        assert!(xs.iter().any(|&x| x > 150.0), "σ=0.5 must produce tails");
+    }
+
+    #[test]
+    fn zero_sigma_is_exact() {
+        let mut m = ErrorModel::log_normal(0.0, 1);
+        for _ in 0..10 {
+            assert_eq!(m.perturb(42.0), 42.0);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_sequence() {
+        let mut a = ErrorModel::log_normal(0.7, 9);
+        let mut b = ErrorModel::log_normal(0.7, 9);
+        for _ in 0..64 {
+            assert_eq!(a.perturb(10.0), b.perturb(10.0));
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Fault & perturbation subsystem: node churn, stragglers, speculative
+//! execution, and size-estimation error injection.
+//!
+//! HFSP's core claim is that size-based scheduling stays *practical* when
+//! reality diverges from its size estimates. This module supplies the
+//! divergence, deterministically:
+//!
+//! * [`FaultPlan`] compiles a [`FaultConfig`] into a node crash/recover
+//!   schedule (exponential MTBF, optionally permanent losses) plus
+//!   per-node straggler slowdown multipliers, drawn from the dedicated
+//!   `Faults` RNG substream ([`crate::util::rng::RngStreams`]) — so
+//!   enabling faults never shifts workload or placement draws, and two
+//!   runs with the same seed produce byte-identical outcomes;
+//! * [`ErrorModel`] perturbs the HFSP estimator's output with a
+//!   configurable multiplicative error (the paper's uniform Fig. 6 model
+//!   or the log-normal model from Dell'Amico et al.'s robustness
+//!   analysis);
+//! * [`SpeculationConfig`]/[`pick_speculation_candidate`] implement
+//!   Hadoop-style speculative execution: clone the slowest running task
+//!   onto a free slot when the clone projects to finish first;
+//!   first-finish wins, the loser's work is counted as wasted;
+//! * [`FaultStats`] carries the run-level robustness metrics (wasted
+//!   work, re-executed tasks, crash counts) into
+//!   [`SimOutcome`](crate::cluster::driver::SimOutcome) and the sweep
+//!   aggregates.
+//!
+//! The driver integration lives in [`crate::cluster::driver`]; the sweep
+//! axis ([`FaultSpec`] per cell) in [`crate::sweep::grid`].
+
+pub mod error_model;
+pub mod plan;
+pub mod speculation;
+
+pub use error_model::{ErrorKind, ErrorModel};
+pub use plan::{FaultEvent, FaultEventKind, FaultPlan};
+pub use speculation::{pick_speculation_candidate, SpeculationConfig};
+
+/// Perturbation-subsystem configuration. Disabled by default — a default
+/// config leaves every simulation bit-identical to a fault-free run.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Master switch; `false` disables the whole subsystem regardless of
+    /// the other fields.
+    pub enabled: bool,
+    /// Per-node mean time between crashes, seconds (exponential);
+    /// `0` disables churn.
+    pub mtbf_s: f64,
+    /// Mean node repair time, seconds (exponential).
+    pub repair_s: f64,
+    /// Probability that a crash is permanent (the node never recovers).
+    pub permanent_fraction: f64,
+    /// Fraction of nodes that are stragglers.
+    pub straggler_fraction: f64,
+    /// Straggler slowdown multiplier: log-normal with this underlying
+    /// normal mean/std, clamped to ≥ 1.
+    pub straggler_mu: f64,
+    pub straggler_sigma: f64,
+    /// Speculative-execution policy.
+    pub speculation: SpeculationConfig,
+    /// σ of the log-normal (median-1) multiplicative error injected into
+    /// HFSP's size estimates; `0` disables. Applied per HFSP cell by the
+    /// sweep (the model lives inside the scheduler's training module).
+    pub size_error_sigma: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl FaultConfig {
+    /// All perturbations off (the default).
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            mtbf_s: 0.0,
+            repair_s: 300.0,
+            permanent_fraction: 0.0,
+            straggler_fraction: 0.0,
+            straggler_mu: std::f64::consts::LN_2, // median 2x slowdown
+            straggler_sigma: 0.5,
+            speculation: SpeculationConfig::default(),
+            size_error_sigma: 0.0,
+        }
+    }
+
+    /// Node churn only: crashes every ~8 h per node, 5 min mean repair,
+    /// 5 % of crashes permanent.
+    pub fn churn() -> Self {
+        Self {
+            enabled: true,
+            mtbf_s: 8.0 * 3600.0,
+            permanent_fraction: 0.05,
+            ..Self::disabled()
+        }
+    }
+
+    /// Straggler nodes (10 %, median 2× slowdown) with speculative
+    /// execution enabled as the mitigation.
+    pub fn stragglers() -> Self {
+        Self {
+            enabled: true,
+            straggler_fraction: 0.1,
+            speculation: SpeculationConfig {
+                enabled: true,
+                ..SpeculationConfig::default()
+            },
+            ..Self::disabled()
+        }
+    }
+
+    /// Log-normal size-estimation error only (σ = 0.5).
+    pub fn estimation_error() -> Self {
+        Self {
+            enabled: true,
+            size_error_sigma: 0.5,
+            ..Self::disabled()
+        }
+    }
+
+    /// Whether speculative execution is active (the master switch gates
+    /// every sub-feature, per the `enabled` contract).
+    pub fn speculation_active(&self) -> bool {
+        self.enabled && self.speculation.enabled
+    }
+
+    /// The size-estimation error σ actually in force (0 unless the
+    /// subsystem as a whole is enabled).
+    pub fn effective_error_sigma(&self) -> f64 {
+        if self.enabled {
+            self.size_error_sigma
+        } else {
+            0.0
+        }
+    }
+
+    /// Everything at once: churn + stragglers + speculation + a milder
+    /// estimation error (σ = 0.3). The default "faulted" scenario.
+    pub fn full() -> Self {
+        Self {
+            enabled: true,
+            mtbf_s: 8.0 * 3600.0,
+            permanent_fraction: 0.05,
+            straggler_fraction: 0.1,
+            speculation: SpeculationConfig {
+                enabled: true,
+                ..SpeculationConfig::default()
+            },
+            size_error_sigma: 0.3,
+            ..Self::disabled()
+        }
+    }
+}
+
+/// A labelled fault scenario — one value of the sweep's faults axis.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Stable label used in group keys, reports and CLI (`"none"` means
+    /// fault-free and suppresses all fault columns/keys in reports).
+    pub label: String,
+    pub config: FaultConfig,
+}
+
+impl FaultSpec {
+    pub fn new(label: impl Into<String>, config: FaultConfig) -> Self {
+        Self {
+            label: label.into(),
+            config,
+        }
+    }
+
+    /// The fault-free scenario (the implicit default axis value).
+    pub fn none() -> Self {
+        Self::new("none", FaultConfig::disabled())
+    }
+
+    pub fn churn() -> Self {
+        Self::new("churn", FaultConfig::churn())
+    }
+
+    pub fn stragglers() -> Self {
+        Self::new("stragglers", FaultConfig::stragglers())
+    }
+
+    pub fn estimation_error() -> Self {
+        Self::new("error", FaultConfig::estimation_error())
+    }
+
+    pub fn full() -> Self {
+        Self::new("full", FaultConfig::full())
+    }
+
+    /// Parse a scenario name (CLI `--faults` / `--grid faults` values).
+    pub fn from_name(name: &str) -> anyhow::Result<FaultSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "none" => Ok(Self::none()),
+            "churn" => Ok(Self::churn()),
+            "stragglers" => Ok(Self::stragglers()),
+            "error" => Ok(Self::estimation_error()),
+            "full" => Ok(Self::full()),
+            other => anyhow::bail!(
+                "unknown fault scenario {other:?} (none|churn|stragglers|error|full)"
+            ),
+        }
+    }
+
+    /// The standard robustness grid: fault-free baseline plus every
+    /// built-in scenario (`hfsp sweep --grid faults`, `fig_faults`).
+    pub fn grid() -> Vec<FaultSpec> {
+        vec![
+            Self::none(),
+            Self::churn(),
+            Self::stragglers(),
+            Self::estimation_error(),
+            Self::full(),
+        ]
+    }
+}
+
+/// Run-level fault & robustness statistics, collected by the driver.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Node crash events applied.
+    pub crashes: u64,
+    /// Node recoveries applied.
+    pub recoveries: u64,
+    /// Crashes that were permanent (node lost for the rest of the run).
+    pub permanent_losses: u64,
+    /// Nodes with a slowdown multiplier > 1.
+    pub straggler_nodes: u64,
+    /// Running or suspended task attempts killed by node crashes.
+    pub crash_task_kills: u64,
+    /// Task launches that were re-executions (attempt ≥ 2, whatever the
+    /// cause: crash kill or KILL preemption).
+    pub re_executed_tasks: u64,
+    /// Serialized work thrown away, seconds: progress of crash-killed and
+    /// preemption-killed attempts plus the losing side of every
+    /// speculative race.
+    pub wasted_work_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inert() {
+        let c = FaultConfig::default();
+        assert!(!c.enabled);
+        assert_eq!(c.mtbf_s, 0.0);
+        assert_eq!(c.straggler_fraction, 0.0);
+        assert!(!c.speculation.enabled);
+        assert_eq!(c.size_error_sigma, 0.0);
+    }
+
+    #[test]
+    fn scenarios_parse_by_name() {
+        for name in ["none", "churn", "stragglers", "error", "full"] {
+            let spec = FaultSpec::from_name(name).unwrap();
+            assert_eq!(spec.label, name);
+        }
+        assert!(FaultSpec::from_name("bogus").is_err());
+        assert!(FaultSpec::from_name("Churn").unwrap().config.enabled);
+    }
+
+    #[test]
+    fn grid_leads_with_fault_free_baseline() {
+        let grid = FaultSpec::grid();
+        assert_eq!(grid[0].label, "none");
+        assert!(!grid[0].config.enabled);
+        assert!(grid.len() >= 4);
+        assert!(grid[1..].iter().all(|s| s.config.enabled));
+    }
+
+    #[test]
+    fn full_scenario_enables_everything() {
+        let c = FaultConfig::full();
+        assert!(c.enabled);
+        assert!(c.mtbf_s > 0.0);
+        assert!(c.straggler_fraction > 0.0);
+        assert!(c.speculation.enabled);
+        assert!(c.size_error_sigma > 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Deterministic fault-plan compilation.
+//!
+//! A [`FaultPlan`] is the fully materialized perturbation schedule for
+//! one simulation run: every node crash/recover instant plus the per-node
+//! straggler slowdown multipliers. It is compiled **up front** from the
+//! dedicated `Faults` RNG substream, in a fixed per-node draw order, so
+//! the plan — and therefore the whole faulted run — is a pure function of
+//! `(FaultConfig, node count, horizon, seed)`. The driver injects the
+//! events through [`sim::Engine`](crate::sim::Engine) before the run
+//! starts.
+
+use super::FaultConfig;
+use crate::util::rng::{exponential, log_normal, Pcg64, Rng};
+
+/// What happens to a node at a [`FaultEvent`]'s instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEventKind {
+    /// The node goes down: running and suspended tasks are killed and
+    /// re-enter the pending queue; the node stops heartbeating.
+    Crash,
+    /// The node comes back empty and resumes heartbeating.
+    Recover,
+}
+
+/// One scheduled node-state transition.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultEvent {
+    pub time: f64,
+    pub node: usize,
+    pub kind: FaultEventKind,
+    /// For a crash: the node never recovers. Always `false` for recovers.
+    pub permanent: bool,
+}
+
+/// The compiled perturbation schedule for one run.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Crash/recover events, sorted by (time, node).
+    pub events: Vec<FaultEvent>,
+    /// Per-node slowdown multiplier (≥ 1; 1 = nominal speed).
+    pub slowdowns: Vec<f64>,
+    /// Crashes in `events` that are permanent (no matching recover).
+    pub permanent_losses: u64,
+}
+
+impl FaultPlan {
+    /// Compile the schedule for `nodes` nodes over `[0, horizon_s)`.
+    ///
+    /// Draw order is fixed (per node: straggler Bernoulli, then slowdown
+    /// if straggling, then the crash/repair sequence) so the plan is
+    /// reproducible and insensitive to which features are consumed later.
+    pub fn compile(cfg: &FaultConfig, nodes: usize, horizon_s: f64, rng: &mut Pcg64) -> FaultPlan {
+        let mut events = Vec::new();
+        let mut slowdowns = vec![1.0; nodes];
+        let mut permanent_losses = 0u64;
+        for node in 0..nodes {
+            if cfg.straggler_fraction > 0.0 && rng.gen_bool(cfg.straggler_fraction) {
+                slowdowns[node] =
+                    log_normal(rng, cfg.straggler_mu, cfg.straggler_sigma).max(1.0);
+            }
+            if cfg.mtbf_s > 0.0 {
+                let mut t = exponential(rng, cfg.mtbf_s);
+                while t < horizon_s {
+                    let crash_index = events.len();
+                    events.push(FaultEvent {
+                        time: t,
+                        node,
+                        kind: FaultEventKind::Crash,
+                        permanent: false,
+                    });
+                    if cfg.permanent_fraction > 0.0 && rng.gen_bool(cfg.permanent_fraction) {
+                        events[crash_index].permanent = true;
+                        permanent_losses += 1;
+                        break;
+                    }
+                    let up = t + exponential(rng, cfg.repair_s.max(1.0));
+                    if up >= horizon_s {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        time: up,
+                        node,
+                        kind: FaultEventKind::Recover,
+                        permanent: false,
+                    });
+                    t = up + exponential(rng, cfg.mtbf_s);
+                }
+            }
+        }
+        events.sort_by(|a, b| {
+            a.time
+                .partial_cmp(&b.time)
+                .expect("fault event times are finite")
+                .then(a.node.cmp(&b.node))
+        });
+        FaultPlan {
+            events,
+            slowdowns,
+            permanent_losses,
+        }
+    }
+
+    /// Work rate of `node` (1 = nominal, < 1 for stragglers).
+    pub fn speed(&self, node: usize) -> f64 {
+        1.0 / self.slowdowns[node]
+    }
+
+    pub fn n_stragglers(&self) -> u64 {
+        self.slowdowns.iter().filter(|&&s| s > 1.0).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SeedableRng;
+
+    fn rng(seed: u64) -> Pcg64 {
+        Pcg64::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn disabled_config_compiles_to_empty_plan() {
+        let plan = FaultPlan::compile(&FaultConfig::disabled(), 10, 1e6, &mut rng(1));
+        assert!(plan.events.is_empty());
+        assert!(plan.slowdowns.iter().all(|&s| s == 1.0));
+        assert_eq!(plan.permanent_losses, 0);
+        assert_eq!(plan.n_stragglers(), 0);
+    }
+
+    #[test]
+    fn compilation_is_deterministic() {
+        let cfg = FaultConfig::full();
+        let a = FaultPlan::compile(&cfg, 50, 1e5, &mut rng(7));
+        let b = FaultPlan::compile(&cfg, 50, 1e5, &mut rng(7));
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.time, y.time);
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.kind, y.kind);
+        }
+        assert_eq!(a.slowdowns, b.slowdowns);
+        assert_eq!(a.permanent_losses, b.permanent_losses);
+    }
+
+    #[test]
+    fn events_are_time_sorted_and_alternating_per_node() {
+        let cfg = FaultConfig {
+            enabled: true,
+            mtbf_s: 1000.0,
+            repair_s: 100.0,
+            ..FaultConfig::disabled()
+        };
+        let plan = FaultPlan::compile(&cfg, 20, 50_000.0, &mut rng(3));
+        assert!(!plan.events.is_empty(), "20 nodes x ~50 MTBFs must crash");
+        for w in plan.events.windows(2) {
+            assert!(w[0].time <= w[1].time, "events sorted by time");
+        }
+        // Per node the kinds strictly alternate, starting with Crash.
+        for node in 0..20 {
+            let kinds: Vec<FaultEventKind> = plan
+                .events
+                .iter()
+                .filter(|e| e.node == node)
+                .map(|e| e.kind)
+                .collect();
+            for (i, k) in kinds.iter().enumerate() {
+                let expect = if i % 2 == 0 {
+                    FaultEventKind::Crash
+                } else {
+                    FaultEventKind::Recover
+                };
+                assert_eq!(*k, expect, "node {node} event {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn permanent_crash_ends_a_node_sequence() {
+        let cfg = FaultConfig {
+            enabled: true,
+            mtbf_s: 500.0,
+            repair_s: 50.0,
+            permanent_fraction: 1.0, // every crash is final
+            ..FaultConfig::disabled()
+        };
+        let plan = FaultPlan::compile(&cfg, 10, 1e6, &mut rng(5));
+        // Exactly one crash per node, no recoveries.
+        assert_eq!(plan.events.len(), 10);
+        assert!(plan
+            .events
+            .iter()
+            .all(|e| e.kind == FaultEventKind::Crash && e.permanent));
+        assert_eq!(plan.permanent_losses, 10);
+    }
+
+    #[test]
+    fn straggler_sampling_respects_fraction_and_floor() {
+        let cfg = FaultConfig {
+            enabled: true,
+            straggler_fraction: 0.5,
+            ..FaultConfig::disabled()
+        };
+        let plan = FaultPlan::compile(&cfg, 1000, 0.0, &mut rng(9));
+        let n = plan.n_stragglers();
+        assert!((300..700).contains(&(n as usize)), "got {n} stragglers");
+        for (i, &s) in plan.slowdowns.iter().enumerate() {
+            assert!(s >= 1.0, "node {i} slowdown {s} below 1");
+            assert!((plan.speed(i) - 1.0 / s).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn horizon_bounds_the_schedule() {
+        let cfg = FaultConfig {
+            enabled: true,
+            mtbf_s: 100.0,
+            repair_s: 10.0,
+            ..FaultConfig::disabled()
+        };
+        let plan = FaultPlan::compile(&cfg, 5, 1_000.0, &mut rng(11));
+        assert!(plan.events.iter().all(|e| e.time < 1_000.0));
+    }
+}

@@ -1,0 +1,268 @@
+//! Speculative execution: straggler mitigation by task cloning.
+//!
+//! Hadoop's speculative execution launches a second attempt of a task
+//! whose progress lags its peers; the first attempt to finish wins and
+//! the other is discarded. The simulator models it as a scheduling-level
+//! policy driven from node heartbeats: after the scheduler's own actions
+//! are applied, a node with a spare slot may offer it to a clone of the
+//! currently slowest-projecting running task — but only when the clone,
+//! restarted from scratch at the offering node's speed, would beat the
+//! original's projected finish by a configurable margin.
+//!
+//! The decision logic lives here (pure function over the job table and
+//! the per-node speed vector, so it is unit-testable); the mechanics —
+//! slot reservation, the `SpecDone` race, first-finish-wins resolution,
+//! wasted-work accounting — live in [`crate::cluster::driver`].
+
+use crate::cluster::Cluster;
+use crate::job::task::TaskState;
+use crate::job::{Job, JobId, Phase, TaskRef};
+use crate::sim::Time;
+use std::collections::BTreeMap;
+
+/// Speculative-execution policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SpeculationConfig {
+    pub enabled: bool,
+    /// Minimum wall-clock age of an attempt before it may be cloned
+    /// (Hadoop waits for tasks to establish a progress rate).
+    pub min_elapsed_s: f64,
+    /// Clone only when `clone_time × margin < projected remaining time`
+    /// of the original — guards against cloning near-finished tasks and
+    /// against clone/original flapping between similar-speed nodes.
+    pub margin: f64,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            min_elapsed_s: 60.0,
+            margin: 1.2,
+        }
+    }
+}
+
+/// Pick the task to clone onto one free `phase` slot of `offer_node`.
+///
+/// Returns the running task with the **largest projected remaining wall
+/// time** among those the clone would beat, or `None`. The scan walks
+/// the cluster's per-node running lists — O(occupied slots), not
+/// O(jobs × tasks) — and is deterministic: nodes are visited in id
+/// order, running lists in their (deterministic) slot order, and ties
+/// keep the first candidate.
+#[allow(clippy::too_many_arguments)]
+pub fn pick_speculation_candidate(
+    cfg: &SpeculationConfig,
+    jobs: &BTreeMap<JobId, Job>,
+    cluster: &Cluster,
+    speeds: &[f64],
+    offer_node: usize,
+    phase: Phase,
+    now: Time,
+    already_speculated: impl Fn(TaskRef) -> bool,
+) -> Option<TaskRef> {
+    let offer_speed = speeds[offer_node];
+    let mut best: Option<(f64, TaskRef)> = None;
+    for node in cluster.nodes() {
+        if node.id == offer_node {
+            continue;
+        }
+        for &task in node.running(phase) {
+            if already_speculated(task) {
+                continue;
+            }
+            let rt = jobs[&task.job].task(task);
+            let TaskState::Running { started, .. } = rt.state else {
+                debug_assert!(false, "cluster running list out of sync for {task}");
+                continue;
+            };
+            if now - started < cfg.min_elapsed_s {
+                continue;
+            }
+            let remaining_wall = rt.remaining(now) / speeds[node.id];
+            let clone_wall = rt.total_work / offer_speed;
+            if clone_wall * cfg.margin >= remaining_wall {
+                continue; // the clone would not clearly win the race
+            }
+            if best.map(|(w, _)| remaining_wall > w).unwrap_or(true) {
+                best = Some((remaining_wall, task));
+            }
+        }
+    }
+    best.map(|(_, t)| t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::job::{JobClass, JobSpec};
+
+    /// Build one map-only job plus a cluster with its launches applied.
+    fn setup(
+        n_nodes: usize,
+        durations: &[f64],
+        launches: &[(u32, usize, Time, f64)], // (index, node, started, speed)
+    ) -> (BTreeMap<JobId, Job>, Cluster) {
+        let mut job = Job::new(JobSpec {
+            id: 1,
+            name: "j1".into(),
+            class: JobClass::Medium,
+            submit_time: 0.0,
+            map_durations: durations.to_vec(),
+            reduce_durations: vec![],
+        });
+        let mut cluster = Cluster::new(ClusterConfig {
+            nodes: n_nodes,
+            map_slots: 2,
+            reduce_slots: 1,
+            ..Default::default()
+        });
+        for &(index, node, started, speed) in launches {
+            let t = TaskRef {
+                job: 1,
+                phase: Phase::Map,
+                index,
+            };
+            job.task_mut(t).launch(node, started, false, speed);
+            job.counts_mut(Phase::Map).on_launch();
+            cluster.node_mut(node).start_task(t);
+        }
+        let mut jobs = BTreeMap::new();
+        jobs.insert(1, job);
+        (jobs, cluster)
+    }
+
+    fn cfg() -> SpeculationConfig {
+        SpeculationConfig {
+            enabled: true,
+            min_elapsed_s: 10.0,
+            margin: 1.2,
+        }
+    }
+
+    #[test]
+    fn clones_the_straggling_task() {
+        // Node 1 runs at 1/4 speed; task 0 started at t=0 with 100 s of
+        // work. At t=50 it has 87.5 work left => 350 s of wall remaining.
+        // A clone on nominal node 0 takes 100 s: clear win.
+        let speeds = [1.0, 0.25];
+        let (jobs, cluster) = setup(2, &[100.0, 100.0], &[(0, 1, 0.0, 0.25)]);
+        let pick = pick_speculation_candidate(
+            &cfg(),
+            &jobs,
+            &cluster,
+            &speeds,
+            0,
+            Phase::Map,
+            50.0,
+            |_| false,
+        );
+        assert_eq!(
+            pick,
+            Some(TaskRef {
+                job: 1,
+                phase: Phase::Map,
+                index: 0
+            })
+        );
+    }
+
+    #[test]
+    fn respects_min_elapsed() {
+        let speeds = [1.0, 0.25];
+        let (jobs, cluster) = setup(2, &[100.0], &[(0, 1, 0.0, 0.25)]);
+        let pick = pick_speculation_candidate(
+            &cfg(),
+            &jobs,
+            &cluster,
+            &speeds,
+            0,
+            Phase::Map,
+            5.0,
+            |_| false,
+        );
+        assert_eq!(pick, None, "attempt younger than min_elapsed_s");
+    }
+
+    #[test]
+    fn no_clone_when_original_would_win() {
+        // Nominal-speed original with 100 s work, 80 s already done: 20 s
+        // remaining; a clone restarts from scratch (100 s) and loses.
+        let speeds = [1.0, 1.0];
+        let (jobs, cluster) = setup(2, &[100.0], &[(0, 1, 0.0, 1.0)]);
+        let pick = pick_speculation_candidate(
+            &cfg(),
+            &jobs,
+            &cluster,
+            &speeds,
+            0,
+            Phase::Map,
+            80.0,
+            |_| false,
+        );
+        assert_eq!(pick, None);
+    }
+
+    #[test]
+    fn skips_already_speculated_and_same_node() {
+        let speeds = [1.0, 0.25];
+        let straggler = TaskRef {
+            job: 1,
+            phase: Phase::Map,
+            index: 0,
+        };
+        let (jobs, cluster) = setup(2, &[100.0], &[(0, 1, 0.0, 0.25)]);
+        let pick = pick_speculation_candidate(
+            &cfg(),
+            &jobs,
+            &cluster,
+            &speeds,
+            0,
+            Phase::Map,
+            50.0,
+            |t| t == straggler,
+        );
+        assert_eq!(pick, None, "existing clone suppresses another");
+        // Offering a slot on the straggler's own node never clones there.
+        let pick = pick_speculation_candidate(
+            &cfg(),
+            &jobs,
+            &cluster,
+            &speeds,
+            1,
+            Phase::Map,
+            50.0,
+            |_| false,
+        );
+        assert_eq!(pick, None);
+    }
+
+    #[test]
+    fn picks_the_slowest_of_several() {
+        // Two stragglers at different severities: the slower one (node 2,
+        // speed 0.1) projects the longer remaining time and is picked.
+        let speeds = [1.0, 0.5, 0.1];
+        let (jobs, cluster) =
+            setup(3, &[100.0, 100.0], &[(0, 1, 0.0, 0.5), (1, 2, 0.0, 0.1)]);
+        let pick = pick_speculation_candidate(
+            &cfg(),
+            &jobs,
+            &cluster,
+            &speeds,
+            0,
+            Phase::Map,
+            50.0,
+            |_| false,
+        );
+        assert_eq!(
+            pick,
+            Some(TaskRef {
+                job: 1,
+                phase: Phase::Map,
+                index: 1
+            })
+        );
+    }
+}

@@ -42,11 +42,14 @@ pub enum TaskState {
     /// Not yet launched (or re-queued after a KILL).
     Pending,
     /// Occupying a slot on `node`; `started` is this attempt's launch (or
-    /// resume) instant, `remaining_at_start` the work left at that instant.
+    /// resume) instant, `remaining_at_start` the work left at that instant,
+    /// and `speed` the node's work rate (1 = nominal; straggler nodes run
+    /// below 1, stretching the attempt's wall-clock service time).
     Running {
         node: NodeId,
         started: Time,
         remaining_at_start: f64,
+        speed: f64,
     },
     /// SIGSTOPped on `node` with `remaining` seconds of work left;
     /// `swapped` records whether the OS paged the context out (resume will
@@ -105,6 +108,9 @@ pub struct TaskRuntime {
     pub suspended_secs: f64,
     /// Instant of the last suspension (to integrate `suspended_secs`).
     pub suspended_since: Option<Time>,
+    /// Work rate of the current/last attempt's node (resume is pinned to
+    /// the launch node, so one attempt runs at a single speed).
+    pub attempt_speed: f64,
 }
 
 impl TaskRuntime {
@@ -119,38 +125,46 @@ impl TaskRuntime {
             finished_at: None,
             suspended_secs: 0.0,
             suspended_since: None,
+            attempt_speed: 1.0,
         }
     }
 
-    /// Work remaining at time `now` given the current state.
+    /// Work remaining at time `now` given the current state (work units,
+    /// i.e. nominal-node seconds — a straggler burns them at `speed` < 1
+    /// per wall second).
     pub fn remaining(&self, now: Time) -> f64 {
         match self.state {
             TaskState::Pending => self.total_work,
             TaskState::Running {
                 started,
                 remaining_at_start,
+                speed,
                 ..
-            } => (remaining_at_start - (now - started)).max(0.0),
+            } => (remaining_at_start - (now - started) * speed).max(0.0),
             TaskState::Suspended { remaining, .. } => remaining,
             TaskState::Done => 0.0,
         }
     }
 
-    /// Transition Pending → Running. Returns the completion delay.
-    pub fn launch(&mut self, node: NodeId, now: Time, local: bool) -> f64 {
+    /// Transition Pending → Running at the node's work rate `speed`
+    /// (1 = nominal). Returns the wall-clock completion delay.
+    pub fn launch(&mut self, node: NodeId, now: Time, local: bool, speed: f64) -> f64 {
         assert!(self.state.is_pending(), "launch of non-pending task");
+        assert!(speed > 0.0, "node speed must be positive");
         self.state = TaskState::Running {
             node,
             started: now,
             remaining_at_start: self.total_work,
+            speed,
         };
         self.epoch += 1;
         self.attempts += 1;
         self.local = local;
+        self.attempt_speed = speed;
         if self.first_launch.is_none() {
             self.first_launch = Some(now);
         }
-        self.total_work
+        self.total_work / speed
     }
 
     /// Transition Running → Suspended (SIGSTOP).
@@ -177,10 +191,11 @@ impl TaskRuntime {
         }
     }
 
-    /// Transition Suspended → Running (SIGCONT) on the same node. Returns
-    /// the completion delay **including** `swap_in_delay` if the context
-    /// was paged out.
-    pub fn resume(&mut self, now: Time, swap_in_delay: f64) -> f64 {
+    /// Transition Suspended → Running (SIGCONT) on the same node at work
+    /// rate `speed`. Returns the wall-clock completion delay **including**
+    /// `swap_in_delay` (wall seconds of swap-in I/O, rate-independent) if
+    /// the context was paged out.
+    pub fn resume(&mut self, now: Time, swap_in_delay: f64, speed: f64) -> f64 {
         let TaskState::Suspended {
             node,
             remaining,
@@ -189,17 +204,22 @@ impl TaskRuntime {
         else {
             panic!("resume of non-suspended task");
         };
-        let delay = if swapped { swap_in_delay } else { 0.0 };
+        assert!(speed > 0.0, "node speed must be positive");
+        // Swap-in is disk I/O: its wall cost is speed-independent, so it
+        // enters the work ledger pre-scaled by the rate.
+        let delay_work = if swapped { swap_in_delay * speed } else { 0.0 };
         self.state = TaskState::Running {
             node,
             started: now,
-            remaining_at_start: remaining + delay,
+            remaining_at_start: remaining + delay_work,
+            speed,
         };
         self.epoch += 1;
+        self.attempt_speed = speed;
         if let Some(since) = self.suspended_since.take() {
             self.suspended_secs += now - since;
         }
-        remaining + delay
+        (remaining + delay_work) / speed
     }
 
     /// Transition Running|Suspended → Pending, losing all work (KILL).
@@ -222,6 +242,23 @@ impl TaskRuntime {
         self.epoch += 1;
         self.finished_at = Some(now);
     }
+
+    /// The task runtime a TaskTracker would report for the current/last
+    /// attempt: the serialized work stretched by the attempt node's
+    /// slowdown (what schedulers observe — straggler-stretched, swap
+    /// delays excluded, exactly `total_work` at nominal speed).
+    pub fn observed_duration(&self) -> f64 {
+        self.total_work / self.attempt_speed
+    }
+
+    /// Work units completed by the current attempt at `now` — the amount
+    /// thrown away if the attempt is killed or loses a speculative race.
+    /// Clamped at 0: a freshly swap-in-resumed attempt's work ledger
+    /// (`remaining_at_start = remaining + swap_delay·speed`) can briefly
+    /// exceed `total_work`, and swap-in replay is not completed work.
+    pub fn work_done(&self, now: Time) -> f64 {
+        (self.total_work - self.remaining(now)).max(0.0)
+    }
 }
 
 #[cfg(test)]
@@ -231,7 +268,7 @@ mod tests {
     #[test]
     fn launch_run_complete() {
         let mut t = TaskRuntime::new(10.0);
-        let d = t.launch(3, 100.0, true);
+        let d = t.launch(3, 100.0, true, 1.0);
         assert_eq!(d, 10.0);
         assert!(t.state.is_running());
         assert_eq!(t.state.node(), Some(3));
@@ -245,11 +282,11 @@ mod tests {
     #[test]
     fn suspend_preserves_remaining_work() {
         let mut t = TaskRuntime::new(10.0);
-        t.launch(0, 0.0, false);
+        t.launch(0, 0.0, false, 1.0);
         t.suspend(4.0);
         assert!(t.state.is_suspended());
         assert_eq!(t.remaining(99.0), 6.0); // frozen while suspended
-        let d = t.resume(50.0, 2.5);
+        let d = t.resume(50.0, 2.5, 1.0);
         assert_eq!(d, 6.0); // not swapped: no delay
         assert_eq!(t.remaining(53.0), 3.0);
         assert!((t.suspended_secs - 46.0).abs() < 1e-12);
@@ -258,21 +295,21 @@ mod tests {
     #[test]
     fn swapped_resume_pays_delay() {
         let mut t = TaskRuntime::new(10.0);
-        t.launch(0, 0.0, false);
+        t.launch(0, 0.0, false, 1.0);
         t.suspend(4.0);
         t.mark_swapped();
-        let d = t.resume(8.0, 2.5);
+        let d = t.resume(8.0, 2.5, 1.0);
         assert!((d - 8.5).abs() < 1e-12);
     }
 
     #[test]
     fn kill_resets_work() {
         let mut t = TaskRuntime::new(10.0);
-        t.launch(0, 0.0, true);
+        t.launch(0, 0.0, true, 1.0);
         t.kill(7.0);
         assert!(t.state.is_pending());
         assert_eq!(t.remaining(7.0), 10.0);
-        t.launch(1, 8.0, false);
+        t.launch(1, 8.0, false, 1.0);
         assert_eq!(t.attempts, 2);
     }
 
@@ -280,11 +317,11 @@ mod tests {
     fn epochs_increment_on_every_transition() {
         let mut t = TaskRuntime::new(10.0);
         assert_eq!(t.epoch, 0);
-        t.launch(0, 0.0, false);
+        t.launch(0, 0.0, false, 1.0);
         assert_eq!(t.epoch, 1);
         t.suspend(1.0);
         assert_eq!(t.epoch, 2);
-        t.resume(2.0, 0.0);
+        t.resume(2.0, 0.0, 1.0);
         assert_eq!(t.epoch, 3);
         t.complete(20.0);
         assert_eq!(t.epoch, 4);
@@ -294,14 +331,59 @@ mod tests {
     #[should_panic(expected = "non-pending")]
     fn double_launch_panics() {
         let mut t = TaskRuntime::new(1.0);
-        t.launch(0, 0.0, false);
-        t.launch(0, 0.0, false);
+        t.launch(0, 0.0, false, 1.0);
+        t.launch(0, 0.0, false, 1.0);
     }
 
     #[test]
     fn remaining_clamps_at_zero() {
         let mut t = TaskRuntime::new(5.0);
-        t.launch(0, 0.0, false);
+        t.launch(0, 0.0, false, 1.0);
         assert_eq!(t.remaining(100.0), 0.0);
+    }
+
+    #[test]
+    fn straggler_speed_stretches_wall_clock() {
+        // 10 s of work at quarter speed: 40 s of wall time.
+        let mut t = TaskRuntime::new(10.0);
+        let d = t.launch(0, 0.0, false, 0.25);
+        assert!((d - 40.0).abs() < 1e-12);
+        // After 8 wall seconds only 2 work units are burned.
+        assert!((t.remaining(8.0) - 8.0).abs() < 1e-12);
+        // The scheduler observes the stretched duration.
+        assert!((t.observed_duration() - 40.0).abs() < 1e-12);
+        t.complete(40.0);
+        assert!((t.observed_duration() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suspend_resume_preserves_work_units_under_slowdown() {
+        let mut t = TaskRuntime::new(10.0);
+        t.launch(0, 0.0, false, 0.5);
+        t.suspend(4.0); // 2 work units done, 8 left
+        assert!((t.remaining(99.0) - 8.0).abs() < 1e-12);
+        let d = t.resume(50.0, 0.0, 0.5);
+        assert!((d - 16.0).abs() < 1e-12, "8 work units at half speed");
+    }
+
+    #[test]
+    fn swapped_resume_swap_delay_is_wall_clock() {
+        // Swap-in I/O costs the same wall time regardless of CPU slowdown.
+        let mut t = TaskRuntime::new(10.0);
+        t.launch(0, 0.0, false, 0.5);
+        t.suspend(4.0); // 8 work units left
+        t.mark_swapped();
+        let d = t.resume(8.0, 3.0, 0.5);
+        assert!((d - (16.0 + 3.0)).abs() < 1e-12, "16 s work + 3 s swap-in");
+    }
+
+    #[test]
+    fn nominal_speed_is_bit_identical_to_legacy() {
+        let mut t = TaskRuntime::new(13.25);
+        assert_eq!(t.launch(1, 7.5, true, 1.0), 13.25);
+        assert_eq!(t.remaining(10.0), 13.25 - 2.5);
+        t.suspend(10.0);
+        assert_eq!(t.resume(20.0, 4.75, 1.0), 13.25 - 2.5);
+        assert_eq!(t.observed_duration(), 13.25);
     }
 }

@@ -24,6 +24,8 @@
 //! * **L3 (this crate)** — the coordinator: a discrete-event Hadoop cluster
 //!   simulator ([`sim`], [`cluster`]), the schedulers ([`scheduler`]:
 //!   FIFO, FAIR and HFSP), the SWIM-like workload generator ([`workload`]),
+//!   the fault & perturbation subsystem ([`faults`]: node churn,
+//!   stragglers, speculative execution, estimation-error injection),
 //!   metrics and report generation ([`metrics`], [`report`]).
 //! * **L2/L1 (python, build time only)** — the estimator compute graph and
 //!   its Pallas kernels, AOT-lowered to HLO text artifacts.
@@ -66,6 +68,7 @@
 
 pub mod bench;
 pub mod cluster;
+pub mod faults;
 pub mod job;
 pub mod metrics;
 pub mod report;
@@ -81,6 +84,7 @@ pub mod workload;
 pub mod prelude {
     pub use crate::cluster::driver::{run_simulation, SimConfig, SimOutcome};
     pub use crate::cluster::ClusterConfig;
+    pub use crate::faults::{FaultConfig, FaultSpec, FaultStats, SpeculationConfig};
     pub use crate::job::{JobClass, JobId, JobSpec, Phase};
     pub use crate::metrics::sojourn::SojournStats;
     pub use crate::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};

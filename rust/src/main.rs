@@ -8,21 +8,24 @@
 //! * `compare` — run FIFO, FAIR and HFSP on the *same* workload (in
 //!   parallel, via the sweep engine) and print the paper-style
 //!   comparison table;
-//! * `sweep` — run a declarative scheduler × nodes × seed experiment
-//!   grid across a thread pool and emit the aggregated table + JSON
-//!   report;
+//! * `sweep` — run a declarative scheduler × nodes × faults × seed
+//!   experiment grid across a thread pool and emit the aggregated table
+//!   + JSON report (`--grid faults` adds the robustness scenarios);
 //! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
 
 use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
 use hfsp::cluster::ClusterConfig;
+use hfsp::faults::FaultSpec;
 use hfsp::job::JobClass;
 use hfsp::report;
 use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
 use hfsp::scheduler::SchedulerKind;
+use hfsp::sim::StopReason;
 use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::util::cli::{Cli, Command, Parsed};
+use hfsp::util::config::Config as FileConfig;
 use hfsp::util::json::Json;
-use hfsp::util::rng::{Pcg64, SeedableRng};
+use hfsp::util::rng::RngStreams;
 use hfsp::workload::swim::FbWorkload;
 use hfsp::workload::{synthetic, trace, Workload};
 use std::path::{Path, PathBuf};
@@ -40,12 +43,15 @@ fn cli() -> Cli {
                 .flag("nodes", "100", "cluster size")
                 .flag("map-slots", "4", "map slots per node")
                 .flag("reduce-slots", "2", "reduce slots per node")
-                .flag("seed", "42", "rng seed (workload + placement)")
+                .flag("seed", "42", "rng seed (workload + placement + faults)")
                 .flag("trace", "", "replay this JSONL trace instead of generating")
                 .flag("preemption", "suspend", "hfsp preemption: suspend | wait | kill")
                 .flag("estimator", "native", "hfsp estimator: native | mean | xla")
                 .flag("maxmin", "native", "hfsp max-min backend: native | xla")
                 .flag("artifacts", "artifacts", "artifact dir for xla backends")
+                .flag("faults", "", "fault scenario: none | churn | stragglers | error | full (default: from --config, else none)")
+                .flag("event-limit", "0", "override the event-count guard (0 = default)")
+                .flag("config", "", "TOML-subset config file; its [sim]/[cluster] keys override --seed/--nodes/--map-slots/--reduce-slots")
                 .flag("out", "", "write JSON outcome summary here")
                 .switch("timelines", "record per-job slot timelines")
                 .switch("per-class", "print per-class sojourn breakdown"),
@@ -54,13 +60,16 @@ fn cli() -> Cli {
                 .flag("seed", "42", "rng seed")
                 .flag("trace", "", "replay this JSONL trace instead of generating")
                 .flag("out", "", "write JSON outcome summary here"),
-            Command::new("sweep", "run a scheduler x nodes x seed experiment grid")
+            Command::new("sweep", "run a scheduler x nodes x faults x seed experiment grid")
                 .flag("schedulers", "fifo,fair,hfsp", "comma-separated scheduler list")
                 .flag("nodes", "100", "comma-separated cluster sizes")
                 .flag("seeds", "42,7,1234", "comma-separated seeds")
                 .flag("workload", "fb", "fb | fb-map-only | fig7")
                 .flag("scale", "1.0", "scale FB-dataset job counts by this factor")
+                .flag("grid", "none", "extra axis preset: none | faults (the robustness grid)")
+                .flag("faults", "", "explicit comma-separated fault scenarios (overrides --grid)")
                 .flag("threads", "0", "worker threads (0 = all cores)")
+                .flag("event-limit", "0", "override the event-count guard (0 = default)")
                 .flag("name", "cli-sweep", "sweep name recorded in the report")
                 .flag("out", "reports/sweep.json", "aggregated JSON report path"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
@@ -92,7 +101,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             let seed: u64 = args.require("seed")?;
             let scale: f64 = args.require("scale")?;
             let out: PathBuf = args.require("out")?;
-            let wl = FbWorkload::scaled(scale).generate(&mut Pcg64::seed_from_u64(seed));
+            let wl = FbWorkload::scaled(scale).generate(&mut RngStreams::workload(seed));
             trace::write_trace(&wl, &out)?;
             println!(
                 "wrote {} jobs ({} tasks, {:.0} s serialized work) to {}",
@@ -104,11 +113,21 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         Parsed::Command("simulate", args) => {
-            let kind = scheduler_from_args(&args)?;
+            let mut kind = scheduler_from_args(&args)?;
             let (cfg, wl) = sim_setup(&args)?;
+            // The fault scenario's estimation error lives inside HFSP's
+            // training module (same wiring as sweep cells; gated by the
+            // `enabled` master switch).
+            kind.apply_fault_error(cfg.faults.effective_error_sigma(), cfg.seed);
             let outcome = run_simulation(&cfg, kind, &wl);
             print_outcome(&outcome, args.get_bool("per-class"));
             maybe_write_json(args.get("out"), &[&outcome])?;
+            anyhow::ensure!(
+                !outcome.truncated(),
+                "simulation truncated by the event-count guard ({} events) — \
+                 raise --event-limit or sim.event_limit",
+                cfg.event_limit
+            );
             Ok(())
         }
         Parsed::Command("compare", args) => {
@@ -201,15 +220,34 @@ fn sim_setup(args: &hfsp::util::cli::Args) -> anyhow::Result<(SimConfig, Workloa
     if let Some(rs) = args.get_parsed::<usize>("reduce-slots")? {
         cluster.reduce_slots = rs;
     }
-    let cfg = SimConfig {
+    let mut cfg = SimConfig {
         cluster,
         seed,
         record_timelines: args.get_bool("timelines"),
         ..Default::default()
     };
+    // The config file is applied on top of the flag-derived base: its
+    // `[sim]`/`[cluster]` keys override --seed/--nodes/--map-slots/
+    // --reduce-slots (the flag parser cannot distinguish explicit flags
+    // from their defaults, so the file wins — documented in the flag
+    // help). `--faults`/`--event-limit` have no seeded defaults and are
+    // re-applied after the file, so they always win when given.
+    if let Some(path) = args.get("config") {
+        cfg.apply_config(&FileConfig::load(Path::new(path))?);
+    }
+    if let Some(name) = args.get("faults") {
+        cfg.faults = FaultSpec::from_name(name)?.config;
+    }
+    if let Some(limit) = args.get_parsed::<u64>("event-limit")? {
+        if limit > 0 {
+            cfg.event_limit = limit;
+        }
+    }
+    // The workload derives from the *effective* seed, so a config-file
+    // `sim.seed` governs the whole run, not just placement and faults.
     let wl = match args.get("trace") {
         Some(path) => trace::read_trace(Path::new(path))?,
-        None => FbWorkload::default().generate(&mut Pcg64::seed_from_u64(seed)),
+        None => FbWorkload::default().generate(&mut RngStreams::workload(cfg.seed)),
     };
     Ok((cfg, wl))
 }
@@ -237,6 +275,21 @@ fn print_outcome(o: &SimOutcome, per_class: bool) {
         println!(
             "  launches {} suspends {} resumes {} kills {} swap-ins {}",
             c.launches, c.suspends, c.resumes, c.kills, c.swap_ins
+        );
+    }
+    let f = o.faults;
+    if f.crashes > 0 || f.straggler_nodes > 0 || o.counters.speculative_launches > 0 {
+        println!(
+            "  faults: {} crashes ({} permanent) | {} stragglers | {} task kills | \
+             {} re-executions | {:.0} s wasted | speculation {}/{} won",
+            f.crashes,
+            f.permanent_losses,
+            f.straggler_nodes,
+            f.crash_task_kills,
+            f.re_executed_tasks,
+            f.wasted_work_s,
+            o.counters.speculative_wins,
+            o.counters.speculative_launches
         );
     }
 }
@@ -267,10 +320,32 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown workload {other:?} (fb|fb-map-only|fig7)"),
     };
 
+    // Faults axis: an explicit --faults list wins over the --grid preset.
+    let fault_specs: Vec<FaultSpec> = match args.get("faults") {
+        Some(list) if !list.trim().is_empty() => csv_items(list)
+            .into_iter()
+            .map(FaultSpec::from_name)
+            .collect::<anyhow::Result<_>>()?,
+        _ => match args.get("grid").unwrap_or("none") {
+            "none" => Vec::new(),
+            "faults" => FaultSpec::grid(),
+            other => anyhow::bail!("unknown grid preset {other:?} (none|faults)"),
+        },
+    };
+
+    let mut base = SimConfig::default();
+    if let Some(limit) = args.get_parsed::<u64>("event-limit")? {
+        if limit > 0 {
+            base.event_limit = limit;
+        }
+    }
+
     let mut grid = ExperimentGrid::new(name)
+        .base_config(base)
         .workload(workload)
         .nodes(&nodes)
-        .seeds(&seeds);
+        .seeds(&seeds)
+        .fault_scenarios(&fault_specs);
     for kind in schedulers {
         grid = grid.scheduler(kind);
     }
@@ -293,6 +368,21 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     }
     std::fs::write(&out, report.to_json().to_string_pretty())?;
     println!("wrote aggregated sweep report to {}", out.display());
+
+    // Truncated cells invalidate the aggregates: surface a hard error
+    // (after writing the report, so the partial data remains inspectable).
+    let truncated: Vec<usize> = results
+        .cells
+        .iter()
+        .filter(|c| c.outcome.stop == StopReason::EventLimit)
+        .map(|c| c.spec.index)
+        .collect();
+    anyhow::ensure!(
+        truncated.is_empty(),
+        "{} cell(s) hit the event-count guard (indices {:?}) — raise --event-limit",
+        truncated.len(),
+        truncated
+    );
     Ok(())
 }
 

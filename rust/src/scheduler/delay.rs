@@ -222,7 +222,7 @@ mod tests {
                 phase: Phase::Map,
                 index: i,
             };
-            job.task_mut(t).launch(0, 0.0, hdfs.is_local(0, t));
+            job.task_mut(t).launch(0, 0.0, hdfs.is_local(0, t), 1.0);
         }
         let picked = HashSet::new();
         for node in 0..4 {
@@ -251,7 +251,7 @@ mod tests {
         // Advance the cursor past all tasks.
         for _ in 0..3 {
             let t = idx.pick_any(&job, &picked).unwrap();
-            job.task_mut(t).launch(0, 0.0, false);
+            job.task_mut(t).launch(0, 0.0, false, 1.0);
         }
         assert!(idx.pick_any(&job, &picked).is_none());
         // Kill task 0: it becomes pending again, behind the cursor.

@@ -27,7 +27,8 @@ pub mod xla_estimator;
 pub use preemption::{PreemptionPrimitive, SuspensionGuard};
 
 use self::estimator::{MeanEstimator, NativeEstimator, SizeEstimator};
-use self::training::{ErrorInjector, TrainingModule, TrainingUpdate};
+use self::training::{TrainingModule, TrainingUpdate};
+use crate::faults::ErrorModel;
 use self::virtual_cluster::{MaxMinBackend, NativeMaxMin, VirtualCluster};
 use super::delay::{pick_reduce, DelayTimer, LocalityIndex};
 use super::{Action, SchedView, Scheduler};
@@ -85,6 +86,10 @@ pub struct HfspConfig {
     pub preempt_threshold_s: f64,
     /// Fig. 6 artificial estimation error α (0 disables).
     pub error_alpha: f64,
+    /// Log-normal (median-1) estimation-error σ from the fault
+    /// subsystem's robustness model (0 disables; takes precedence over
+    /// `error_alpha` when both are set).
+    pub error_sigma: f64,
     pub error_seed: u64,
     pub estimator: EstimatorKind,
     pub maxmin: MaxMinKind,
@@ -102,6 +107,7 @@ impl Default for HfspConfig {
             max_training_slots: usize::MAX,
             preempt_threshold_s: 20.0,
             error_alpha: 0.0,
+            error_sigma: 0.0,
             error_seed: 0,
             estimator: EstimatorKind::Native,
             maxmin: MaxMinKind::Native,
@@ -182,8 +188,10 @@ pub struct HfspScheduler {
 
 impl HfspScheduler {
     pub fn new(cfg: HfspConfig) -> Self {
-        let error = if cfg.error_alpha > 0.0 {
-            Some(ErrorInjector::new(cfg.error_alpha, cfg.error_seed))
+        let error = if cfg.error_sigma > 0.0 {
+            Some(ErrorModel::log_normal(cfg.error_sigma, cfg.error_seed))
+        } else if cfg.error_alpha > 0.0 {
+            Some(ErrorModel::uniform(cfg.error_alpha, cfg.error_seed))
         } else {
             None
         };

@@ -13,8 +13,8 @@
 //! sampled tasks already did.
 
 use super::estimator::SizeEstimator;
+use crate::faults::ErrorModel;
 use crate::job::{JobId, Phase};
-use crate::util::rng::{Pcg64, Rng, SeedableRng};
 use std::collections::{HashMap, VecDeque};
 
 /// Rolling mean of the last `cap` observations (the "recently executed
@@ -72,29 +72,6 @@ enum PhaseState {
     Done,
 }
 
-/// Artificial estimation-error injector (Fig. 6): the delivered estimate
-/// is `θ · (1 + U[-α, α])`.
-#[derive(Debug)]
-pub struct ErrorInjector {
-    pub alpha: f64,
-    rng: Pcg64,
-}
-
-impl ErrorInjector {
-    pub fn new(alpha: f64, seed: u64) -> Self {
-        assert!((0.0..=1.0).contains(&alpha));
-        Self {
-            alpha,
-            rng: Pcg64::seed_from_u64(seed),
-        }
-    }
-
-    pub fn perturb(&mut self, size: f64) -> f64 {
-        let factor = 1.0 + self.rng.gen_range_f64(-self.alpha, self.alpha);
-        (size * factor).max(0.0)
-    }
-}
-
 /// The Training module.
 pub struct TrainingModule {
     states: HashMap<(JobId, Phase), PhaseState>,
@@ -105,7 +82,10 @@ pub struct TrainingModule {
     /// Prior task duration when no history exists yet (first jobs).
     prior_task_s: f64,
     estimator: Box<dyn SizeEstimator>,
-    error: Option<ErrorInjector>,
+    /// Artificial estimation-error injection (Fig. 6 uniform model or the
+    /// fault subsystem's log-normal model); `None` delivers exact
+    /// estimator output.
+    error: Option<ErrorModel>,
 }
 
 /// Outcome of feeding an observation into the module.
@@ -126,7 +106,7 @@ impl TrainingModule {
         sample_set: usize,
         xi: f64,
         estimator: Box<dyn SizeEstimator>,
-        error: Option<ErrorInjector>,
+        error: Option<ErrorModel>,
     ) -> Self {
         assert!(sample_set >= 1);
         assert!(xi >= 1.0, "confidence parameter ξ ranges over [1, ∞)");
@@ -277,8 +257,8 @@ impl TrainingModule {
         let _ = completed_work;
         let total = self.estimator.estimate_phase(samples, n_tasks);
         let total = match &mut self.error {
-            Some(inj) if inj.alpha > 0.0 => inj.perturb(total),
-            _ => total,
+            Some(model) => model.perturb(total),
+            None => total,
         };
         self.states.insert((job, phase), PhaseState::Done);
         TrainingUpdate::Estimated { total }
@@ -412,7 +392,7 @@ mod tests {
     #[test]
     fn error_injection_bounds() {
         for seed in 0..20 {
-            let inj = ErrorInjector::new(0.5, seed);
+            let inj = ErrorModel::uniform(0.5, seed);
             let mut m = TrainingModule::new(
                 1,
                 1.0,
@@ -427,6 +407,27 @@ mod tests {
                 }
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn log_normal_error_injection_perturbs_estimates() {
+        let mut m = TrainingModule::new(
+            1,
+            1.0,
+            Box::new(NativeEstimator::new()),
+            Some(ErrorModel::log_normal(0.5, 7)),
+        );
+        let _ = m.start_phase(1, Phase::Map, 100);
+        match m.observe_completion(1, Phase::Map, 10.0, 1) {
+            TrainingUpdate::Estimated { total } => {
+                assert!(total > 0.0);
+                assert!(
+                    (total - 1000.0).abs() > 1e-9,
+                    "σ=0.5 should virtually never deliver the exact size"
+                );
+            }
+            other => panic!("{other:?}"),
         }
     }
 }

@@ -117,6 +117,24 @@ impl SchedulerKind {
         }
     }
 
+    /// Wire a fault scenario's size-estimation error (log-normal σ) into
+    /// an HFSP kind, seeded deterministically from the run seed. No-op
+    /// for other schedulers, for σ = 0, and when the config already
+    /// carries an explicit error setting (e.g. the Fig. 6 bench).
+    pub fn apply_fault_error(&mut self, sigma: f64, seed: u64) {
+        if sigma <= 0.0 {
+            return;
+        }
+        if let SchedulerKind::Hfsp(cfg) = self {
+            if cfg.error_alpha == 0.0 && cfg.error_sigma == 0.0 {
+                cfg.error_sigma = sigma;
+                // Fixed tweak decorrelates the error stream from the
+                // workload/placement streams derived from the same seed.
+                cfg.error_seed = seed ^ 0xE57A_11FE;
+            }
+        }
+    }
+
     /// Parse from a CLI string (`fifo`, `fair`, `hfsp`).
     pub fn from_name(name: &str) -> anyhow::Result<SchedulerKind> {
         match name.to_ascii_lowercase().as_str() {

@@ -40,7 +40,10 @@ impl<E> Engine<E> {
             queue: EventQueue::new(),
             now: 0.0,
             processed: 0,
-            // Generous default: the FB-dataset macro run is ~1e6 events.
+            // Generous fallback: the FB-dataset macro run is ~1e6 events.
+            // Simulation runs configure this through `SimConfig::event_limit`
+            // (CLI `--event-limit` / config key `sim.event_limit`); a trip is
+            // surfaced as `StopReason::EventLimit` in `SimOutcome::stop`.
             event_limit: 500_000_000,
             halt: false,
         }

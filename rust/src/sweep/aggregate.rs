@@ -1,7 +1,7 @@
 //! Across-seed aggregation of sweep cells into report-ready statistics.
 //!
-//! Cells are grouped by (workload, nodes, scheduler); the seed axis is
-//! folded into the statistics. Two kinds of aggregates are kept:
+//! Cells are grouped by (workload, nodes, faults, scheduler); the seed
+//! axis is folded into the statistics. Two kinds of aggregates are kept:
 //!
 //! * **across-seed moments** of per-seed scalars (mean sojourn, mean
 //!   slowdown, locality fraction, makespan), from which a normal-
@@ -23,11 +23,14 @@ use crate::util::json::Json;
 use crate::util::stats::{percentile, Moments};
 use std::collections::BTreeMap;
 
-/// Grouping key: everything but the seed axis.
+/// Grouping key: everything but the seed axis. Field order is the sort
+/// order; `faults` is `"none"` for fault-free groups, so grids without a
+/// faults axis sort (and render) exactly as before.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct GroupKey {
     pub workload: String,
     pub nodes: usize,
+    pub faults: String,
     pub scheduler: String,
 }
 
@@ -51,6 +54,20 @@ pub struct GroupStats {
     pub makespan: Moments,
     /// Across-seed moments of the per-seed per-class mean sojourn.
     pub class_means: BTreeMap<&'static str, Moments>,
+    /// Across-seed moments of wasted work (seconds of discarded task
+    /// progress — crash kills, preemption kills, speculative losers).
+    pub wasted_work: Moments,
+    /// Total re-executed task launches pooled over all seeds.
+    pub re_executed: u64,
+    /// Total node crashes pooled over all seeds.
+    pub crashes: u64,
+    /// Total speculative clone launches / wins pooled over all seeds.
+    pub spec_launches: u64,
+    pub spec_wins: u64,
+    /// Mean-sojourn ratio vs the fault-free group with the same
+    /// workload/nodes/scheduler (1.0 = no degradation); `None` for
+    /// fault-free groups or when no baseline exists in the sweep.
+    pub vs_fault_free: Option<f64>,
     /// All per-job sojourns in the group, sorted ascending.
     pooled_sojourns: Vec<f64>,
 }
@@ -66,8 +83,19 @@ impl GroupStats {
             locality: Moments::new(),
             makespan: Moments::new(),
             class_means: BTreeMap::new(),
+            wasted_work: Moments::new(),
+            re_executed: 0,
+            crashes: 0,
+            spec_launches: 0,
+            spec_wins: 0,
+            vs_fault_free: None,
             pooled_sojourns: Vec::new(),
         }
+    }
+
+    /// Whether this group ran under a fault scenario.
+    pub fn is_faulted(&self) -> bool {
+        self.key.faults != "none"
     }
 
     fn fold(&mut self, cell: &CellResult) {
@@ -89,6 +117,11 @@ impl GroupStats {
             self.locality.push(local);
         }
         self.makespan.push(o.makespan);
+        self.wasted_work.push(o.faults.wasted_work_s);
+        self.re_executed += o.faults.re_executed_tasks;
+        self.crashes += o.faults.crashes;
+        self.spec_launches += o.counters.speculative_launches;
+        self.spec_wins += o.counters.speculative_wins;
         for class in JobClass::ALL {
             let m = o.sojourn.mean_class(class);
             if !m.is_nan() {
@@ -152,6 +185,20 @@ impl GroupStats {
             classes.set(name, m.mean().into());
         }
         o.set("mean_sojourn_by_class_s", classes);
+        // Fault metrics are emitted only for faulted groups, so grids
+        // without a faults axis keep their historical byte-identical
+        // JSON rendering.
+        if self.is_faulted() {
+            o.set("faults", self.key.faults.as_str().into());
+            o.set("wasted_work_s", self.wasted_work.mean().into());
+            o.set("re_executed_tasks", self.re_executed.into());
+            o.set("crashes", self.crashes.into());
+            o.set("speculative_launches", self.spec_launches.into());
+            o.set("speculative_wins", self.spec_wins.into());
+            if let Some(r) = self.vs_fault_free {
+                o.set("sojourn_vs_fault_free", r.into());
+            }
+        }
         o
     }
 }
@@ -173,6 +220,7 @@ impl SweepReport {
             let key = GroupKey {
                 workload: cell.spec.workload.label(),
                 nodes: cell.spec.nodes,
+                faults: cell.spec.faults.label.clone(),
                 scheduler: cell.spec.scheduler_label.clone(),
             };
             groups
@@ -184,20 +232,67 @@ impl SweepReport {
         for g in &mut groups {
             g.finalize();
         }
+        // Faulted groups report their sojourn degradation against the
+        // fault-free group sharing the other axes, when the sweep ran one.
+        let baselines: BTreeMap<(String, usize, String), f64> = groups
+            .iter()
+            .filter(|g| !g.is_faulted() && g.mean_sojourn.count() > 0)
+            .map(|g| {
+                (
+                    (
+                        g.key.workload.clone(),
+                        g.key.nodes,
+                        g.key.scheduler.clone(),
+                    ),
+                    g.mean_sojourn.mean(),
+                )
+            })
+            .collect();
+        for g in &mut groups {
+            if g.is_faulted() && g.mean_sojourn.count() > 0 {
+                let key = (
+                    g.key.workload.clone(),
+                    g.key.nodes,
+                    g.key.scheduler.clone(),
+                );
+                if let Some(&base) = baselines.get(&key) {
+                    if base > 0.0 {
+                        g.vs_fault_free = Some(g.mean_sojourn.mean() / base);
+                    }
+                }
+            }
+        }
         Self {
             name: name.to_string(),
             groups,
         }
     }
 
-    /// Find a group by its axes.
+    /// Find a group by its axes (fault-free groups only — the historical
+    /// lookup; use [`SweepReport::group_faulted`] on faulted grids).
     pub fn group(&self, workload: &str, nodes: usize, scheduler: &str) -> Option<&GroupStats> {
+        self.group_faulted(workload, nodes, "none", scheduler)
+    }
+
+    /// Find a group by all four axes.
+    pub fn group_faulted(
+        &self,
+        workload: &str,
+        nodes: usize,
+        faults: &str,
+        scheduler: &str,
+    ) -> Option<&GroupStats> {
         self.groups.iter().find(|g| {
-            g.key.workload == workload && g.key.nodes == nodes && g.key.scheduler == scheduler
+            g.key.workload == workload
+                && g.key.nodes == nodes
+                && g.key.faults == faults
+                && g.key.scheduler == scheduler
         })
     }
 
-    /// Render the paper-style aligned comparison table.
+    /// Render the paper-style aligned comparison table. Fault columns
+    /// appear only when the sweep actually ran a fault scenario, keeping
+    /// fault-free output identical to the historical rendering.
     pub fn table(&self) -> String {
         // Every stat can be absent (a group where no job finished, no
         // map task ran, ...): render those cells as "-" instead of NaN.
@@ -208,13 +303,35 @@ impl SweepReport {
                 f(x)
             }
         };
+        let faulted = self.groups.iter().any(GroupStats::is_faulted);
+        let mut headers = vec!["workload", "nodes"];
+        if faulted {
+            headers.push("faults");
+        }
+        headers.extend_from_slice(&[
+            "scheduler",
+            "seeds",
+            "jobs",
+            "mean sojourn (s)",
+            "ci95 (s)",
+            "p50 (s)",
+            "p99 (s)",
+            "slowdown",
+            "locality",
+            "makespan (s)",
+        ]);
+        if faulted {
+            headers.extend_from_slice(&["wasted (s)", "re-exec", "spec w/l", "vs none"]);
+        }
         let rows: Vec<Vec<String>> = self
             .groups
             .iter()
             .map(|g| {
-                vec![
-                    g.key.workload.clone(),
-                    g.key.nodes.to_string(),
+                let mut row = vec![g.key.workload.clone(), g.key.nodes.to_string()];
+                if faulted {
+                    row.push(g.key.faults.clone());
+                }
+                row.extend_from_slice(&[
                     g.key.scheduler.clone(),
                     g.seeds.len().to_string(),
                     g.jobs.to_string(),
@@ -225,26 +342,32 @@ impl SweepReport {
                     fmt_or_dash(g.mean_slowdown.mean(), &|x| format!("{x:.2}")),
                     fmt_or_dash(g.locality.mean(), &|x| format!("{:.1}%", x * 100.0)),
                     fmt_or_dash(g.makespan.mean(), &|x| format!("{x:.0}")),
-                ]
+                ]);
+                if faulted {
+                    row.push(if g.is_faulted() {
+                        fmt_or_dash(g.wasted_work.mean(), &|x| format!("{x:.0}"))
+                    } else {
+                        "-".to_string()
+                    });
+                    row.push(if g.is_faulted() {
+                        g.re_executed.to_string()
+                    } else {
+                        "-".to_string()
+                    });
+                    row.push(if g.is_faulted() {
+                        format!("{}/{}", g.spec_wins, g.spec_launches)
+                    } else {
+                        "-".to_string()
+                    });
+                    row.push(match g.vs_fault_free {
+                        Some(r) => format!("{r:.2}x"),
+                        None => "-".to_string(),
+                    });
+                }
+                row
             })
             .collect();
-        report::table(
-            &[
-                "workload",
-                "nodes",
-                "scheduler",
-                "seeds",
-                "jobs",
-                "mean sojourn (s)",
-                "ci95 (s)",
-                "p50 (s)",
-                "p99 (s)",
-                "slowdown",
-                "locality",
-                "makespan (s)",
-            ],
-            &rows,
-        )
+        report::table(&headers, &rows)
     }
 
     /// Deterministic JSON rendering (stable key and group order;
@@ -322,5 +445,57 @@ mod tests {
         assert!(table.contains("FIFO"));
         assert!(table.contains("HFSP"));
         assert!(table.contains("mean sojourn (s)"));
+    }
+
+    #[test]
+    fn fault_free_reports_carry_no_fault_keys_or_columns() {
+        let report = small_results().aggregate();
+        let json = report.to_json().to_string_pretty();
+        assert!(!json.contains("\"faults\""));
+        assert!(!json.contains("wasted_work_s"));
+        assert!(!json.contains("sojourn_vs_fault_free"));
+        let table = report.table();
+        assert!(!table.contains("vs none"));
+        assert!(!table.contains("wasted (s)"));
+    }
+
+    #[test]
+    fn faulted_groups_report_metrics_and_degradation() {
+        use crate::faults::FaultSpec;
+        let grid = ExperimentGrid::new("faulted-agg")
+            .scheduler(SchedulerKind::Fifo)
+            .workload(WorkloadSpec::UniformBatch {
+                jobs: 4,
+                maps_per_job: 3,
+                task_s: 30.0,
+            })
+            .nodes(&[3])
+            .seeds(&[1, 2])
+            .fault_scenario(FaultSpec::none())
+            .fault_scenario(FaultSpec::stragglers());
+        let report = run_grid_threads(&grid, 2).aggregate();
+        assert_eq!(report.groups.len(), 2);
+        let base = report
+            .group_faulted("uniform-4x3", 3, "none", "FIFO")
+            .expect("fault-free group");
+        let faulted = report
+            .group_faulted("uniform-4x3", 3, "stragglers", "FIFO")
+            .expect("straggler group");
+        assert!(!base.is_faulted());
+        assert!(faulted.is_faulted());
+        assert_eq!(base.vs_fault_free, None);
+        let ratio = faulted.vs_fault_free.expect("baseline present");
+        assert!(ratio > 0.0);
+        // group() keeps finding the fault-free group.
+        assert_eq!(
+            report.group("uniform-4x3", 3, "FIFO").unwrap().key.faults,
+            "none"
+        );
+        let json = report.to_json().to_string_pretty();
+        assert!(json.contains("\"faults\""));
+        assert!(json.contains("sojourn_vs_fault_free"));
+        let table = report.table();
+        assert!(table.contains("vs none"));
+        assert!(table.contains("stragglers"));
     }
 }

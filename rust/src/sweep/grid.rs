@@ -1,5 +1,6 @@
 //! Experiment grid declaration: the cartesian product of scheduler,
-//! workload, cluster size and seed, expanded into runnable cells.
+//! workload, cluster size, fault scenario and seed, expanded into
+//! runnable cells.
 //!
 //! A cell's outcome is a pure function of its [`CellSpec`] plus the
 //! grid's base [`SimConfig`]: the cell seed is used both to synthesize
@@ -8,8 +9,9 @@
 //! the same seeds reproduces identical outcomes cell by cell.
 
 use crate::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use crate::faults::FaultSpec;
 use crate::scheduler::SchedulerKind;
-use crate::util::rng::{Pcg64, SeedableRng};
+use crate::util::rng::RngStreams;
 use crate::workload::swim::FbWorkload;
 use crate::workload::{synthetic, Workload};
 
@@ -64,12 +66,15 @@ impl WorkloadSpec {
         }
     }
 
-    /// Materialize the workload for one cell.
+    /// Materialize the workload for one cell. Draws from the workload
+    /// RNG stream ([`RngStreams::workload`] — the root generator, kept
+    /// bit-compatible with the original derivation), which is independent
+    /// of the placement and fault substreams.
     pub fn realize(&self, seed: u64) -> Workload {
         match self {
-            WorkloadSpec::Fb(params) => params.generate(&mut Pcg64::seed_from_u64(seed)),
+            WorkloadSpec::Fb(params) => params.generate(&mut RngStreams::workload(seed)),
             WorkloadSpec::FbMapOnly(params) => {
-                params.generate(&mut Pcg64::seed_from_u64(seed)).map_only()
+                params.generate(&mut RngStreams::workload(seed)).map_only()
             }
             WorkloadSpec::Fig7 => synthetic::fig7_workload(),
             WorkloadSpec::UniformBatch {
@@ -99,8 +104,11 @@ pub struct CellSpec {
     pub workload: WorkloadSpec,
     /// Cluster size for this cell (overrides the base config's).
     pub nodes: usize,
-    /// Master seed: workload synthesis + HDFS placement.
+    /// Master seed: workload synthesis + HDFS placement + fault plan.
     pub seed: u64,
+    /// Fault scenario for this cell (overrides the base config's;
+    /// [`FaultSpec::none`] on grids without a faults axis).
+    pub faults: FaultSpec,
 }
 
 impl CellSpec {
@@ -109,13 +117,21 @@ impl CellSpec {
         let mut cfg = base.clone();
         cfg.cluster.nodes = self.nodes;
         cfg.seed = self.seed;
+        cfg.faults = self.faults.config.clone();
         cfg
     }
 
     /// Run this cell to completion (deterministic given `base`).
     pub fn run(&self, base: &SimConfig) -> SimOutcome {
         let workload = self.workload.realize(self.seed);
-        run_simulation(&self.config(base), self.scheduler.clone(), &workload)
+        let mut scheduler = self.scheduler.clone();
+        // The scenario's estimation error lives inside HFSP's training
+        // module: wire it into the scheduler config, seeded from the cell
+        // seed so it is reproducible but independent across seeds.
+        // Explicit per-scheduler error settings (e.g. the Fig. 6 bench)
+        // win over the scenario; the `enabled` master switch gates it.
+        scheduler.apply_fault_error(self.faults.config.effective_error_sigma(), self.seed);
+        run_simulation(&self.config(base), scheduler, &workload)
     }
 }
 
@@ -133,6 +149,7 @@ pub struct ExperimentGrid {
     workloads: Vec<WorkloadSpec>,
     nodes: Vec<usize>,
     seeds: Vec<u64>,
+    faults: Vec<FaultSpec>,
     base: SimConfig,
 }
 
@@ -144,6 +161,7 @@ impl ExperimentGrid {
             workloads: Vec::new(),
             nodes: Vec::new(),
             seeds: Vec::new(),
+            faults: Vec::new(),
             base: SimConfig::default(),
         }
     }
@@ -195,6 +213,20 @@ impl ExperimentGrid {
         self
     }
 
+    /// Add one fault scenario to the faults axis. An empty axis defaults
+    /// to the single fault-free scenario ([`FaultSpec::none`]), which
+    /// expands to exactly the cells a pre-faults grid produced.
+    pub fn fault_scenario(mut self, spec: FaultSpec) -> Self {
+        self.faults.push(spec);
+        self
+    }
+
+    /// Add several fault scenarios (e.g. [`FaultSpec::grid`]).
+    pub fn fault_scenarios(mut self, specs: &[FaultSpec]) -> Self {
+        self.faults.extend_from_slice(specs);
+        self
+    }
+
     fn effective_schedulers(&self) -> Vec<(String, SchedulerKind)> {
         if self.schedulers.is_empty() {
             [
@@ -234,10 +266,19 @@ impl ExperimentGrid {
         }
     }
 
+    fn effective_faults(&self) -> Vec<FaultSpec> {
+        if self.faults.is_empty() {
+            vec![FaultSpec::none()]
+        } else {
+            self.faults.clone()
+        }
+    }
+
     /// Number of cells the grid expands to (the cartesian product size).
     pub fn len(&self) -> usize {
         self.effective_workloads().len()
             * self.effective_nodes().len()
+            * self.effective_faults().len()
             * self.effective_seeds().len()
             * self.effective_schedulers().len()
     }
@@ -247,25 +288,29 @@ impl ExperimentGrid {
     }
 
     /// Expand the cartesian product into cells, in deterministic order:
-    /// workload (outer) × nodes × seed × scheduler (inner).
+    /// workload (outer) × nodes × faults × seed × scheduler (inner).
     pub fn cells(&self) -> Vec<CellSpec> {
         let schedulers = self.effective_schedulers();
         let workloads = self.effective_workloads();
         let nodes = self.effective_nodes();
         let seeds = self.effective_seeds();
+        let faults = self.effective_faults();
         let mut cells = Vec::with_capacity(self.len());
         for workload in &workloads {
             for &n in &nodes {
-                for &seed in &seeds {
-                    for (label, kind) in &schedulers {
-                        cells.push(CellSpec {
-                            index: cells.len(),
-                            scheduler_label: label.clone(),
-                            scheduler: kind.clone(),
-                            workload: workload.clone(),
-                            nodes: n,
-                            seed,
-                        });
+                for fault in &faults {
+                    for &seed in &seeds {
+                        for (label, kind) in &schedulers {
+                            cells.push(CellSpec {
+                                index: cells.len(),
+                                scheduler_label: label.clone(),
+                                scheduler: kind.clone(),
+                                workload: workload.clone(),
+                                nodes: n,
+                                seed,
+                                faults: fault.clone(),
+                            });
+                        }
                     }
                 }
             }
@@ -352,5 +397,44 @@ mod tests {
         let cfg = cells[0].config(grid.base());
         assert_eq!(cfg.cluster.nodes, 7);
         assert_eq!(cfg.seed, 99);
+        assert!(!cfg.faults.enabled, "default faults axis is fault-free");
+        assert_eq!(cells[0].faults.label, "none");
+    }
+
+    #[test]
+    fn faults_axis_multiplies_the_grid() {
+        let grid = ExperimentGrid::new("faulted")
+            .scheduler(SchedulerKind::Fifo)
+            .workload(WorkloadSpec::Fig7)
+            .nodes(&[2])
+            .seeds(&[1, 2])
+            .fault_scenario(FaultSpec::none())
+            .fault_scenario(FaultSpec::churn());
+        assert_eq!(grid.len(), 4, "1 wl x 1 nodes x 2 faults x 2 seeds x 1 sched");
+        let cells = grid.cells();
+        // Faults vary slower than seeds: none/none then churn/churn.
+        assert_eq!(cells[0].faults.label, "none");
+        assert_eq!(cells[1].faults.label, "none");
+        assert_eq!(cells[2].faults.label, "churn");
+        assert_eq!(cells[3].faults.label, "churn");
+        assert!(cells[2].config(grid.base()).faults.enabled);
+    }
+
+    #[test]
+    fn error_scenario_wires_sigma_into_hfsp_cells() {
+        let grid = ExperimentGrid::new("err")
+            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .workload(WorkloadSpec::UniformBatch {
+                jobs: 2,
+                maps_per_job: 2,
+                task_s: 3.0,
+            })
+            .nodes(&[2])
+            .seeds(&[4])
+            .fault_scenario(FaultSpec::estimation_error());
+        let cells = grid.cells();
+        // The wiring happens inside run(); just exercise it end-to-end.
+        let outcome = cells[0].run(grid.base());
+        assert_eq!(outcome.sojourn.len(), 2, "jobs still finish under error");
     }
 }

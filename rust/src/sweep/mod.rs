@@ -22,10 +22,12 @@
 //! Three layers:
 //!
 //! * [`grid`] — [`ExperimentGrid`], a builder over the cartesian product
-//!   of scheduler kinds, [`WorkloadSpec`]s, cluster sizes and seeds;
-//!   each product element is a [`CellSpec`] with deterministic RNG
-//!   seeding (the cell seed drives both workload synthesis and HDFS
-//!   placement, so a cell's outcome is a pure function of its spec);
+//!   of scheduler kinds, [`WorkloadSpec`]s, cluster sizes, fault
+//!   scenarios ([`crate::faults::FaultSpec`]) and seeds; each product
+//!   element is a [`CellSpec`] with deterministic RNG seeding (the cell
+//!   seed drives workload synthesis, HDFS placement and the fault plan
+//!   through independent substreams, so a cell's outcome is a pure
+//!   function of its spec);
 //! * [`executor`] — [`run_grid`]/[`run_grid_threads`], a work-stealing
 //!   thread-pool fan-out that runs independent cells concurrently.
 //!   Results are stored by cell index, so the output order — and every
