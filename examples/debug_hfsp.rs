@@ -19,7 +19,7 @@ fn main() {
     };
     let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
     let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
-    let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(HfspConfig::default()), &wl);
+    let hfsp = run_simulation(&cfg, SchedulerKind::SizeBased(HfspConfig::default()), &wl);
     println!(
         "FAIR mean {:.1}  HFSP mean {:.1}; hfsp counters: suspends {} resumes {} swap-ins {} stale {}",
         fair.sojourn.mean(),

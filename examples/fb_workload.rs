@@ -62,7 +62,7 @@ fn main() {
     let kinds = [
         ("FIFO", SchedulerKind::Fifo),
         ("FAIR", SchedulerKind::Fair(Default::default())),
-        ("HFSP", SchedulerKind::Hfsp(hfsp_cfg)),
+        ("HFSP", SchedulerKind::SizeBased(hfsp_cfg)),
     ];
     let mut rows = Vec::new();
     let mut hfsp_mean = f64::NAN;

@@ -38,7 +38,7 @@ fn main() {
         println!("=== {label} ===");
         for kind in [
             SchedulerKind::Fair(Default::default()),
-            SchedulerKind::Hfsp(HfspConfig::default()),
+            SchedulerKind::SizeBased(HfspConfig::default()),
         ] {
             let o = run_simulation(&cfg, kind, &wl);
             println!(

@@ -38,7 +38,7 @@ fn main() {
     ] {
         let o = run_simulation(
             &cfg,
-            SchedulerKind::Hfsp(HfspConfig {
+            SchedulerKind::SizeBased(HfspConfig {
                 preemption: prim,
                 ..Default::default()
             }),

@@ -31,7 +31,7 @@ fn main() {
     for kind in [
         SchedulerKind::Fifo,
         SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(HfspConfig::default()),
+        SchedulerKind::SizeBased(HfspConfig::default()),
     ] {
         let outcome = run_simulation(&cfg, kind, &workload);
         println!(

@@ -8,7 +8,7 @@
 use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::cluster::ClusterConfig;
 use hfsp::report::table;
-use hfsp::scheduler::hfsp::HfspConfig;
+use hfsp::scheduler::core::HfspConfig;
 use hfsp::scheduler::SchedulerKind;
 use hfsp::workload::synthetic::decreasing_size_workload;
 
@@ -37,7 +37,7 @@ fn main() {
             suspend_lo: lo,
             ..Default::default()
         };
-        let o = run_simulation(&cfg, SchedulerKind::Hfsp(hcfg), &wl);
+        let o = run_simulation(&cfg, SchedulerKind::SizeBased(hcfg), &wl);
         rows.push(vec![
             label.to_string(),
             format!("{:.1}", o.sojourn.mean()),

@@ -7,7 +7,7 @@
 
 use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::report::table;
-use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig};
+use hfsp::scheduler::core::{EstimatorKind, HfspConfig};
 use hfsp::scheduler::SchedulerKind;
 use hfsp::util::rng::{Pcg64, SeedableRng};
 use hfsp::workload::swim::FbWorkload;
@@ -28,7 +28,7 @@ fn main() {
                 estimator: est,
                 ..Default::default()
             };
-            let o = run_simulation(&cfg, SchedulerKind::Hfsp(hcfg), &wl);
+            let o = run_simulation(&cfg, SchedulerKind::SizeBased(hcfg), &wl);
             rows.push(vec![
                 sample_set.to_string(),
                 est_name.to_string(),

@@ -17,7 +17,7 @@ fn main() {
     let cfg = SimConfig::default();
     let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
     let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
-    let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl);
 
     let f = fair.sojourn.by_job();
     let h = hfsp.sojourn.by_job();

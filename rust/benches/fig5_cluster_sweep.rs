@@ -21,7 +21,7 @@ fn main() {
     let sizes = [10usize, 20, 30, 40, 50, 60, 70, 80, 90, 100];
     let grid = ExperimentGrid::new("fig5")
         .scheduler(SchedulerKind::Fair(Default::default()))
-        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .scheduler(SchedulerKind::SizeBased(Default::default()))
         .workload(WorkloadSpec::Fb(FbWorkload::default()))
         .nodes(&sizes)
         .seeds(&[42]);

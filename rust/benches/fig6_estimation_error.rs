@@ -10,7 +10,7 @@
 
 use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::report::{ascii_chart, table, write_csv, Series};
-use hfsp::scheduler::hfsp::HfspConfig;
+use hfsp::scheduler::core::HfspConfig;
 use hfsp::scheduler::SchedulerKind;
 use hfsp::util::rng::{Pcg64, SeedableRng};
 use hfsp::util::stats::Moments;
@@ -29,7 +29,7 @@ fn main() {
         .unwrap_or(10);
 
     let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
-    let exact = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+    let exact = run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl);
     println!(
         "references: FAIR mean {:.1} s | error-free HFSP mean {:.1} s | {} repeats/alpha",
         fair.sojourn.mean(),
@@ -48,7 +48,7 @@ fn main() {
                 error_seed: 1000 + rep,
                 ..Default::default()
             };
-            let o = run_simulation(&cfg, SchedulerKind::Hfsp(hcfg), &wl);
+            let o = run_simulation(&cfg, SchedulerKind::SizeBased(hcfg), &wl);
             m.push(o.sojourn.mean());
         }
         pts.push((alpha, m.mean()));

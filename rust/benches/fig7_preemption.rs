@@ -13,7 +13,7 @@
 use hfsp::cluster::driver::SimConfig;
 use hfsp::cluster::ClusterConfig;
 use hfsp::report::table;
-use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+use hfsp::scheduler::core::{HfspConfig, PreemptionPrimitive};
 use hfsp::scheduler::SchedulerKind;
 use hfsp::sweep::{run_grid, ExperimentGrid, WorkloadSpec};
 
@@ -42,7 +42,7 @@ fn main() {
     for prim in primitives {
         grid = grid.scheduler_labeled(
             prim.name(),
-            SchedulerKind::Hfsp(HfspConfig {
+            SchedulerKind::SizeBased(HfspConfig {
                 preemption: prim,
                 ..Default::default()
             }),

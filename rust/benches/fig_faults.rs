@@ -25,7 +25,7 @@ fn main() {
     let grid = ExperimentGrid::new("fig-faults")
         .scheduler(SchedulerKind::Fifo)
         .scheduler(SchedulerKind::Fair(Default::default()))
-        .scheduler(SchedulerKind::Hfsp(HfspConfig::default()))
+        .scheduler(SchedulerKind::SizeBased(HfspConfig::default()))
         .workload(WorkloadSpec::Fb(FbWorkload::scaled(scale)))
         .nodes(&[20])
         .seeds(&[1, 2, 3])

@@ -12,7 +12,7 @@
 use hfsp::bench::Bench;
 use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::runtime::{ArtifactSet, EstimatorExec, MaxMinExec};
-use hfsp::scheduler::hfsp::virtual_cluster::{maxmin_waterfill, VirtualCluster};
+use hfsp::scheduler::core::virtual_cluster::{maxmin_waterfill, VirtualCluster};
 use hfsp::scheduler::SchedulerKind;
 use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
 use hfsp::workload::swim::FbWorkload;
@@ -54,7 +54,7 @@ fn main() {
     for kind in [
         SchedulerKind::Fifo,
         SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(Default::default()),
+        SchedulerKind::SizeBased(Default::default()),
     ] {
         let label = kind.label();
         let events = std::cell::Cell::new(0u64);

@@ -27,7 +27,7 @@ fn main() {
             &run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl).locality,
         );
         hfsp_total.merge(
-            &run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl).locality,
+            &run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl).locality,
         );
     }
     let rows = vec![

@@ -22,7 +22,10 @@
 //! suspension, kill or crash (now stale) is recognized and dropped.
 //! Heartbeat chains carry a per-node **heartbeat epoch** for the same
 //! reason: a crash/recover cycle invalidates the in-flight chain so a
-//! node never heartbeats twice per period.
+//! node never heartbeats twice per period. The epoch table lives in the
+//! engine ([`Engine::bump_chain`]), which lazily deletes stale chain
+//! events at pop time instead of dispatching dead events into this
+//! driver; skips are counted in [`SimOutcome::events_skipped`].
 
 use crate::cluster::{Cluster, ClusterConfig, Hdfs};
 use crate::faults::{pick_speculation_candidate, FaultConfig, FaultPlan, FaultStats};
@@ -137,6 +140,9 @@ pub struct SimOutcome {
     /// Completion time of the last job (simulated seconds).
     pub makespan: Time,
     pub events_processed: u64,
+    /// Stale heartbeat-chain events dropped by the engine's lazy
+    /// deletion (never dispatched into the driver); 0 on fault-free runs.
+    pub events_skipped: u64,
     /// Why the event loop stopped. [`StopReason::EventLimit`] means the
     /// results are truncated — callers should treat it as an error.
     pub stop: StopReason,
@@ -148,6 +154,16 @@ impl SimOutcome {
     /// Whether the run was cut short by the event-count guard.
     pub fn truncated(&self) -> bool {
         self.stop == StopReason::EventLimit
+    }
+
+    /// Simulation throughput: events processed per host-wall-clock
+    /// second (the bench trajectory metric behind `BENCH_sim.json`).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            0.0
+        } else {
+            self.events_processed as f64 / (self.wall_ms / 1e3)
+        }
     }
 }
 
@@ -203,8 +219,6 @@ struct Driver<'a> {
     speeds: Vec<f64>,
     /// Any node slower than nominal (gates the speculation scan).
     has_stragglers: bool,
-    /// Per-node heartbeat-chain epoch (bumped on crash/recover).
-    hb_epoch: Vec<u32>,
     /// In-flight speculative clones by original task (BTreeMap: crash
     /// handling iterates it, and f64 accumulation order must be
     /// deterministic for byte-identical reruns).
@@ -262,12 +276,13 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
         fstats,
         has_stragglers: speeds.iter().any(|&s| s < 1.0),
         speeds,
-        hb_epoch: vec![0; cfg.cluster.nodes],
         spec: BTreeMap::new(),
         spec_seq: 0,
     };
 
     let mut engine: Engine<Ev> = Engine::new().with_event_limit(cfg.event_limit);
+    // One heartbeat epoch chain per node (lazy deletion of stale chains).
+    engine.init_chains(cfg.cluster.nodes);
     // Job arrivals.
     for (i, job) in workload.jobs.iter().enumerate() {
         engine.schedule_at(job.submit_time, Ev::Arrival(i));
@@ -292,7 +307,7 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
         engine.schedule_at(ev.time, event);
     }
 
-    let reason = engine.run(|eng, now, ev| driver.handle(eng, now, ev));
+    let reason = engine.run_filtered(heartbeat_chain, |eng, now, ev| driver.handle(eng, now, ev));
     if reason == StopReason::EventLimit {
         log::error!(
             "simulation hit the event-limit guard ({} events); results are truncated",
@@ -318,8 +333,18 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
         faults: driver.fstats,
         makespan: engine.now(),
         events_processed: engine.processed(),
+        events_skipped: engine.skipped(),
         stop: reason,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Classify events for the engine's lazy deletion: heartbeats belong to
+/// their node's epoch chain; everything else is unconditional.
+fn heartbeat_chain(ev: &Ev) -> Option<(usize, u32)> {
+    match ev {
+        Ev::Heartbeat { node, epoch } => Some((*node, *epoch)),
+        _ => None,
     }
 }
 
@@ -332,7 +357,7 @@ impl<'a> Driver<'a> {
             Ev::ReduceProgress { task, epoch, delta } => {
                 self.on_reduce_progress(now, task, epoch, delta)
             }
-            Ev::NodeCrash { node, permanent } => self.on_node_crash(now, node, permanent),
+            Ev::NodeCrash { node, permanent } => self.on_node_crash(eng, now, node, permanent),
             Ev::NodeRecover(node) => self.on_node_recover(eng, now, node),
             Ev::SpecDone { task, id } => self.on_spec_done(now, task, id),
         }
@@ -366,9 +391,12 @@ impl<'a> Driver<'a> {
     }
 
     fn on_heartbeat(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId, epoch: u32) {
-        // A crash/recover cycle invalidates the in-flight chain; a down
-        // node's chain simply ends (recovery starts a fresh one).
-        if epoch != self.hb_epoch[node] || self.cluster.node(node).is_down() {
+        // Stale epochs were already dropped by the engine's lazy
+        // deletion (`heartbeat_chain`); a down node with a *current*
+        // epoch is unreachable by construction, but guard defensively —
+        // a crash/recover cycle must never double-heartbeat a node.
+        debug_assert_eq!(epoch, eng.chain_epoch(node));
+        if self.cluster.node(node).is_down() {
             return;
         }
         self.counters.heartbeats += 1;
@@ -671,12 +699,14 @@ impl<'a> Driver<'a> {
     /// Apply a planned node crash: the node goes down, its running and
     /// suspended task attempts lose their work and re-enter the pending
     /// queue, and every speculative race it participates in is resolved.
-    fn on_node_crash(&mut self, now: Time, node: NodeId, permanent: bool) {
+    fn on_node_crash(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId, permanent: bool) {
         if self.cluster.node(node).is_down() {
             return; // defensive: plan never crashes a down node
         }
         log::debug!("t={now:.1} node {node} crashes (permanent: {permanent})");
-        self.hb_epoch[node] = self.hb_epoch[node].wrapping_add(1);
+        // Invalidate the in-flight heartbeat chain: its queued events are
+        // now dead and will be skipped at pop time.
+        eng.bump_chain(node);
         let (running, suspended) = self.cluster.node_mut(node).crash();
         self.fstats.crashes += 1;
         if permanent {
@@ -727,14 +757,11 @@ impl<'a> Driver<'a> {
         log::debug!("t={now:.1} node {node} recovers");
         self.cluster.node_mut(node).restore();
         self.fstats.recoveries += 1;
-        self.hb_epoch[node] = self.hb_epoch[node].wrapping_add(1);
+        let epoch = eng.bump_chain(node);
         if self.finished_jobs != self.workload.len() {
             eng.schedule_in(
                 self.cluster.config().heartbeat_s,
-                Ev::Heartbeat {
-                    node,
-                    epoch: self.hb_epoch[node],
-                },
+                Ev::Heartbeat { node, epoch },
             );
         }
     }

@@ -6,24 +6,30 @@
 //!
 //! HFSP is a size-based, preemptive job scheduler for Hadoop MapReduce.
 //! It extends the Fair Sojourn Protocol (FSP) of Friedman & Henderson to a
-//! multi-processor, two-phase (MAP/REDUCE) slotted cluster:
+//! multi-processor, two-phase (MAP/REDUCE) slotted cluster. The paper
+//! notes that "the architecture underlying HFSP is suitable for any
+//! size-based scheduling discipline" — this crate takes that literally
+//! and splits the scheduler layer into **mechanism** and **policy**:
 //!
-//! * a **virtual cluster** simulates max-min-fair processor sharing to
-//!   obtain a projected PS completion order ([`scheduler::hfsp::virtual_cluster`]);
-//! * the **real cluster** is scheduled in that order, focusing resources on
-//!   the job that would finish first under PS ([`scheduler::hfsp`]);
-//! * job sizes are **estimated on-line** by a Training module that samples
-//!   task runtimes and fits a task-time distribution
-//!   ([`scheduler::hfsp::training`], [`scheduler::hfsp::estimator`]);
-//! * **preemption** is implemented with SUSPEND/RESUME primitives (with
-//!   WAIT and KILL fallbacks and a hysteresis guard on suspended-task
-//!   memory pressure) ([`scheduler::hfsp::preemption`]).
+//! * the shared **mechanism** ([`scheduler::core`]): on-line job-size
+//!   estimation (Training module + pluggable estimator,
+//!   [`scheduler::core::training`], [`scheduler::core::estimator`]), the
+//!   max-min-fair **virtual cluster** PS reference
+//!   ([`scheduler::core::virtual_cluster`]), and SUSPEND/RESUME/KILL
+//!   **preemption** with a hysteresis guard on suspended-task memory
+//!   pressure ([`scheduler::core::preemption`]);
+//! * pluggable ordering **disciplines** ([`scheduler::disciplines`]):
+//!   FSP (= the paper's HFSP), SRPT, size-oblivious LAS, and a
+//!   PSBS-style late-binding virtual-time variant — all served by the
+//!   one mechanism and selectable by name through the scheduler
+//!   registry ([`scheduler::REGISTRY`]).
 //!
 //! The crate is organised as a three-layer system:
 //!
 //! * **L3 (this crate)** — the coordinator: a discrete-event Hadoop cluster
 //!   simulator ([`sim`], [`cluster`]), the schedulers ([`scheduler`]:
-//!   FIFO, FAIR and HFSP), the SWIM-like workload generator ([`workload`]),
+//!   FIFO, FAIR and the size-based discipline family), the SWIM-like
+//!   workload generator ([`workload`]),
 //!   the fault & perturbation subsystem ([`faults`]: node churn,
 //!   stragglers, speculative execution, estimation-error injection),
 //!   metrics and report generation ([`metrics`], [`report`]).
@@ -46,8 +52,20 @@
 //!
 //! let cfg = SimConfig::default();
 //! let workload = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
-//! let outcome = run_simulation(&cfg, SchedulerKind::Hfsp(HfspConfig::default()), &workload);
+//! let outcome = run_simulation(&cfg, SchedulerKind::SizeBased(HfspConfig::default()), &workload);
 //! println!("mean sojourn: {:.1}s", outcome.sojourn.mean());
+//! ```
+//!
+//! Any registered discipline is one `from_name` away (`"fifo"`,
+//! `"fair"`, `"hfsp"`, `"srpt"`, `"las"`, `"psbs"`):
+//!
+//! ```no_run
+//! use hfsp::prelude::*;
+//!
+//! let workload = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+//! let srpt = SchedulerKind::from_name("srpt").unwrap();
+//! let outcome = run_simulation(&SimConfig::default(), srpt, &workload);
+//! assert_eq!(outcome.scheduler, "SRPT");
 //! ```
 //!
 //! Or declare a whole experiment grid and let the sweep engine run it in
@@ -58,7 +76,7 @@
 //!
 //! let grid = ExperimentGrid::new("fifo-vs-hfsp")
 //!     .scheduler(SchedulerKind::Fifo)
-//!     .scheduler(SchedulerKind::Hfsp(HfspConfig::default()))
+//!     .scheduler(SchedulerKind::SizeBased(HfspConfig::default()))
 //!     .workload(WorkloadSpec::Fb(FbWorkload::default()))
 //!     .nodes(&[100, 50])
 //!     .seeds(&[42, 7, 1234]);
@@ -87,7 +105,10 @@ pub mod prelude {
     pub use crate::faults::{FaultConfig, FaultSpec, FaultStats, SpeculationConfig};
     pub use crate::job::{JobClass, JobId, JobSpec, Phase};
     pub use crate::metrics::sojourn::SojournStats;
-    pub use crate::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    pub use crate::scheduler::core::{
+        HfspConfig, PreemptionPrimitive, SizeBasedConfig,
+    };
+    pub use crate::scheduler::disciplines::DisciplineKind;
     pub use crate::scheduler::SchedulerKind;
     pub use crate::sweep::{
         run_grid, run_grid_threads, ExperimentGrid, SweepReport, SweepResults, WorkloadSpec,

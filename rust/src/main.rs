@@ -4,13 +4,16 @@
 //!
 //! * `workload-gen` — synthesize an FB-dataset trace (SWIM-like, §4.1);
 //! * `simulate` — run one scheduler over a workload and report sojourn
-//!   statistics;
+//!   statistics (any registered discipline: fifo, fair, hfsp, srpt,
+//!   las, psbs);
 //! * `compare` — run FIFO, FAIR and HFSP on the *same* workload (in
 //!   parallel, via the sweep engine) and print the paper-style
 //!   comparison table;
 //! * `sweep` — run a declarative scheduler × nodes × faults × seed
 //!   experiment grid across a thread pool and emit the aggregated table
 //!   + JSON report (`--grid faults` adds the robustness scenarios);
+//! * `bench` — time the standard scenarios and emit `BENCH_sim.json`
+//!   (events/sec + wall-clock per scenario, the perf trajectory file);
 //! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
 
 use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
@@ -18,8 +21,8 @@ use hfsp::cluster::ClusterConfig;
 use hfsp::faults::FaultSpec;
 use hfsp::job::JobClass;
 use hfsp::report;
-use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
-use hfsp::scheduler::SchedulerKind;
+use hfsp::scheduler::core::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
+use hfsp::scheduler::{SchedulerKind, REGISTRY};
 use hfsp::sim::StopReason;
 use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::util::cli::{Cli, Command, Parsed};
@@ -39,7 +42,7 @@ fn cli() -> Cli {
                 .flag("scale", "1.0", "scale job counts by this factor")
                 .flag("out", "", "output trace path (JSONL, required)"),
             Command::new("simulate", "run one scheduler over a workload")
-                .flag("scheduler", "hfsp", "fifo | fair | hfsp")
+                .flag("scheduler", "hfsp", SchedulerKind::cli_help())
                 .flag("nodes", "100", "cluster size")
                 .flag("map-slots", "4", "map slots per node")
                 .flag("reduce-slots", "2", "reduce slots per node")
@@ -61,7 +64,7 @@ fn cli() -> Cli {
                 .flag("trace", "", "replay this JSONL trace instead of generating")
                 .flag("out", "", "write JSON outcome summary here"),
             Command::new("sweep", "run a scheduler x nodes x faults x seed experiment grid")
-                .flag("schedulers", "fifo,fair,hfsp", "comma-separated scheduler list")
+                .flag("schedulers", "fifo,fair,hfsp", SchedulerKind::cli_help_list())
                 .flag("nodes", "100", "comma-separated cluster sizes")
                 .flag("seeds", "42,7,1234", "comma-separated seeds")
                 .flag("workload", "fb", "fb | fb-map-only | fig7")
@@ -72,6 +75,11 @@ fn cli() -> Cli {
                 .flag("event-limit", "0", "override the event-count guard (0 = default)")
                 .flag("name", "cli-sweep", "sweep name recorded in the report")
                 .flag("out", "reports/sweep.json", "aggregated JSON report path"),
+            Command::new("bench", "time the standard scenarios; emit BENCH_sim.json")
+                .flag("scale", "0.3", "scale FB-dataset job counts by this factor")
+                .flag("nodes", "20", "cluster size")
+                .flag("seed", "42", "rng seed")
+                .flag("out", "BENCH_sim.json", "benchmark JSON output path"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
                 .flag("slots", "4", "single-node slot count"),
         ],
@@ -173,6 +181,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         Parsed::Command("sweep", args) => run_sweep(&args),
+        Parsed::Command("bench", args) => run_bench(&args),
         Parsed::Command("fsp-demo", args) => {
             let slots: usize = args.require("slots")?;
             fsp_demo(slots);
@@ -185,7 +194,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
 fn scheduler_from_args(args: &hfsp::util::cli::Args) -> anyhow::Result<SchedulerKind> {
     let name = args.get("scheduler").unwrap_or("hfsp");
     let mut kind = SchedulerKind::from_name(name)?;
-    if let SchedulerKind::Hfsp(cfg) = &mut kind {
+    // The mechanism flags apply to every size-based discipline, not just
+    // HFSP: `--preemption kill` SRPT or `--estimator mean` PSBS are
+    // legitimate configurations.
+    if let SchedulerKind::SizeBased(cfg) = &mut kind {
         cfg.preemption = PreemptionPrimitive::from_name(args.get("preemption").unwrap_or("suspend"))?;
         let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
         cfg.estimator = match args.get("estimator").unwrap_or("native") {
@@ -276,6 +288,9 @@ fn print_outcome(o: &SimOutcome, per_class: bool) {
             "  launches {} suspends {} resumes {} kills {} swap-ins {}",
             c.launches, c.suspends, c.resumes, c.kills, c.swap_ins
         );
+    }
+    if o.events_skipped > 0 {
+        println!("  {} stale heartbeat events skipped (lazy deletion)", o.events_skipped);
     }
     let f = o.faults;
     if f.crashes > 0 || f.straggler_nodes > 0 || o.counters.speculative_launches > 0 {
@@ -386,6 +401,92 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The `bench` subcommand: one timed simulation per registered
+/// scheduler on the standard FB-dataset scenario (plus the Fig. 7
+/// preemption microbenchmark on HFSP), emitting the perf-trajectory
+/// record `BENCH_sim.json` (schema: scenario → events/sec, wall_ms).
+fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
+    let scale: f64 = args.require("scale")?;
+    let nodes: usize = args.require("nodes")?;
+    let seed: u64 = args.require("seed")?;
+    let out: PathBuf = args.require("out")?;
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    };
+    let fb = FbWorkload::scaled(scale).generate(&mut RngStreams::workload(seed));
+    let fig7 = synthetic::fig7_workload();
+
+    struct BenchRun {
+        scenario: String,
+        outcome: SimOutcome,
+    }
+    let mut runs: Vec<BenchRun> = Vec::new();
+    for entry in REGISTRY {
+        let outcome = run_simulation(&cfg, entry.make(), &fb);
+        runs.push(BenchRun {
+            scenario: format!("fb-{scale}x{nodes}"),
+            outcome,
+        });
+    }
+    runs.push(BenchRun {
+        scenario: "fig7-preemption".to_string(),
+        outcome: run_simulation(&cfg, SchedulerKind::hfsp(), &fig7),
+    });
+
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.scenario.clone(),
+                r.outcome.scheduler.to_string(),
+                r.outcome.events_processed.to_string(),
+                format!("{:.1}", r.outcome.wall_ms),
+                format!("{:.0}", r.outcome.events_per_sec()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["scenario", "scheduler", "events", "wall (ms)", "events/sec"],
+            &rows
+        )
+    );
+
+    let mut j = Json::obj();
+    j.set("schema", "hfsp-bench/v1".into());
+    j.set(
+        "runs",
+        Json::Arr(
+            runs.iter()
+                .map(|r| {
+                    let mut o = Json::obj();
+                    o.set("scenario", r.scenario.as_str().into());
+                    o.set("scheduler", r.outcome.scheduler.into());
+                    o.set("events", r.outcome.events_processed.into());
+                    o.set("wall_ms", r.outcome.wall_ms.into());
+                    o.set("events_per_sec", r.outcome.events_per_sec().into());
+                    o.set("makespan_s", r.outcome.makespan.into());
+                    o
+                })
+                .collect(),
+        ),
+    );
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out, j.to_string_pretty())?;
+    println!("wrote benchmark record to {}", out.display());
+    Ok(())
+}
+
 /// Split a comma-separated flag value into trimmed, non-empty items.
 fn csv_items(s: &str) -> Vec<&str> {
     s.split(',').map(str::trim).filter(|x| !x.is_empty()).collect()
@@ -445,7 +546,7 @@ fn fsp_demo(slots: usize) {
         println!("=== {label} ===");
         for kind in [
             SchedulerKind::Fair(Default::default()),
-            SchedulerKind::Hfsp(HfspConfig::default()),
+            SchedulerKind::SizeBased(HfspConfig::default()),
         ] {
             let o = run_simulation(&cfg, kind, &wl);
             println!(

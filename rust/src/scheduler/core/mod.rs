@@ -1,22 +1,29 @@
-//! HFSP — the Hadoop Fair Sojourn Protocol (§3 of the paper).
+//! The size-based scheduling **mechanism** (the paper's §3 machinery,
+//! made policy-agnostic).
 //!
-//! A hierarchical, size-based preemptive scheduler:
+//! The paper observes that "the architecture underlying HFSP is suitable
+//! for any size-based scheduling discipline". This module is that
+//! architecture, extracted from the original HFSP implementation into a
+//! reusable core:
 //!
-//! * the **top-level scheduler** (this module's [`HfspScheduler`]) splits
-//!   cluster resources between the [`training`] module (job size
-//!   estimation) and the job scheduler (§3.1.1);
-//! * the **job scheduler** orders jobs by their projected finish time in
-//!   the [`virtual_cluster`] (a max-min-fair PS fluid simulation — that
-//!   ordering *is* the Fair Sojourn Protocol) and focuses real slots on
-//!   the earliest-finishing job;
-//! * **preemption** takes running slots from jobs that project to finish
-//!   later and gives them to jobs that project to finish earlier, using
-//!   SUSPEND/RESUME (or WAIT/KILL, [`preemption`]), with resume pinned to
-//!   the node holding the suspended context (§3.3);
-//! * MAP placement uses **delay scheduling** for data locality (§3.1).
+//! * **job-size estimation** — the [`training`] module samples task
+//!   runtimes and fits the task-time distribution with a pluggable
+//!   [`estimator`] (§3.1.1, §3.2);
+//! * **virtual-time / virtual-cluster accounting** — the
+//!   [`virtual_cluster`] fluid PS reference simulation used by the FSP
+//!   discipline (§3.1);
+//! * **preemption machinery** — SUSPEND/RESUME/KILL primitives with the
+//!   suspension-pressure hysteresis guard ([`preemption`], §3.3) plus
+//!   delay scheduling for map locality (§3.1);
+//! * the **heartbeat assignment loop** ([`SizeBasedScheduler`]):
+//!   training-priority slots, fill-in-priority-order, preempt-the-worst.
 //!
-//! The MAP and REDUCE phases are scheduled independently (separate
-//! virtual clusters over the separate slot pools), per §3.1.
+//! The **policy** — in which order jobs are served — is supplied by a
+//! [`Discipline`] implementation ([`crate::scheduler::disciplines`]):
+//! FSP (= HFSP), SRPT, LAS and a PSBS-style virtual-time variant all run
+//! on this one mechanism. A discipline that does not consume size
+//! estimates (LAS) simply reports [`DisciplineKind::uses_estimates`] =
+//! `false` and the mechanism skips the training module entirely.
 
 pub mod estimator;
 pub mod preemption;
@@ -28,12 +35,14 @@ pub use preemption::{PreemptionPrimitive, SuspensionGuard};
 
 use self::estimator::{MeanEstimator, NativeEstimator, SizeEstimator};
 use self::training::{TrainingModule, TrainingUpdate};
-use crate::faults::ErrorModel;
-use self::virtual_cluster::{MaxMinBackend, NativeMaxMin, VirtualCluster};
+use self::virtual_cluster::{MaxMinBackend, NativeMaxMin};
 use super::delay::{pick_reduce, DelayTimer, LocalityIndex};
+use super::disciplines::{self, DisciplineKind};
 use super::{Action, SchedView, Scheduler};
+use crate::faults::ErrorModel;
 use crate::job::task::NodeId;
 use crate::job::{Job, JobId, Phase, TaskRef};
+use crate::sim::Time;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 
@@ -51,6 +60,19 @@ pub enum EstimatorKind {
     Xla { artifact_dir: PathBuf },
 }
 
+impl EstimatorKind {
+    pub fn build(&self) -> Box<dyn SizeEstimator> {
+        match self {
+            EstimatorKind::Native => Box::new(NativeEstimator::new()),
+            EstimatorKind::Mean => Box::new(MeanEstimator),
+            EstimatorKind::Xla { artifact_dir } => Box::new(
+                xla_estimator::XlaSizeEstimator::load(artifact_dir)
+                    .expect("loading XLA estimator artifact (run `make artifacts`)"),
+            ),
+        }
+    }
+}
+
 /// Which max-min backend the virtual cluster uses.
 #[derive(Clone, Debug, Default)]
 pub enum MaxMinKind {
@@ -60,9 +82,28 @@ pub enum MaxMinKind {
     Xla { artifact_dir: PathBuf },
 }
 
-/// HFSP configuration (defaults = the paper's experimental setup, §4.1).
+impl MaxMinKind {
+    pub fn build(&self) -> Box<dyn MaxMinBackend> {
+        match self {
+            MaxMinKind::Native => Box::new(NativeMaxMin),
+            MaxMinKind::Xla { artifact_dir } => Box::new(
+                xla_estimator::XlaMaxMin::load(artifact_dir)
+                    .expect("loading XLA maxmin artifact (run `make artifacts`)"),
+            ),
+        }
+    }
+}
+
+/// Configuration of the size-based core (defaults = the paper's
+/// experimental setup, §4.1). The `discipline` field selects the
+/// ordering policy; everything else parameterizes the shared mechanism.
+///
+/// [`HfspConfig`] is an alias of this type: HFSP is exactly this core
+/// driven by the FSP discipline.
 #[derive(Clone, Debug)]
-pub struct HfspConfig {
+pub struct SizeBasedConfig {
+    /// The ordering policy run on top of the mechanism.
+    pub discipline: DisciplineKind,
     /// Sample-set size for MAP and REDUCE estimation (paper: 5).
     pub sample_set: usize,
     /// Confidence parameter ξ ∈ [1, ∞) weighting initial estimates
@@ -79,10 +120,12 @@ pub struct HfspConfig {
     /// Cap on slots the top-level scheduler grants the Training module
     /// (paper: all slots).
     pub max_training_slots: usize,
-    /// Minimum projected-finish-time gap (seconds) between the preempting
-    /// job and its victim before preemption fires. Guards against
-    /// mutual-preemption thrash when two jobs' size estimates are nearly
-    /// equal (their PS finish order flips on every estimate update).
+    /// Minimum priority-key gap between the preempting job and its
+    /// victim before preemption fires (in the discipline's key units —
+    /// projected finish seconds for FSP, remaining serialized seconds
+    /// for SRPT, attained seconds for LAS, virtual seconds for PSBS).
+    /// Guards against mutual-preemption thrash when two jobs' keys are
+    /// nearly equal.
     pub preempt_threshold_s: f64,
     /// Fig. 6 artificial estimation error α (0 disables).
     pub error_alpha: f64,
@@ -95,9 +138,10 @@ pub struct HfspConfig {
     pub maxmin: MaxMinKind,
 }
 
-impl Default for HfspConfig {
+impl Default for SizeBasedConfig {
     fn default() -> Self {
         Self {
+            discipline: DisciplineKind::Fsp,
             sample_set: 5,
             xi: 1.0,
             locality_timeout_s: 5.0,
@@ -115,31 +159,85 @@ impl Default for HfspConfig {
     }
 }
 
-impl HfspConfig {
-    fn build_estimator(&self) -> Box<dyn SizeEstimator> {
-        match &self.estimator {
-            EstimatorKind::Native => Box::new(NativeEstimator::new()),
-            EstimatorKind::Mean => Box::new(MeanEstimator),
-            EstimatorKind::Xla { artifact_dir } => Box::new(
-                xla_estimator::XlaSizeEstimator::load(artifact_dir)
-                    .expect("loading XLA estimator artifact (run `make artifacts`)"),
-            ),
-        }
-    }
+/// HFSP's historical configuration type: the size-based core with the
+/// FSP discipline (the default).
+pub type HfspConfig = SizeBasedConfig;
 
-    fn build_maxmin(&self) -> Box<dyn MaxMinBackend> {
-        match &self.maxmin {
-            MaxMinKind::Native => Box::new(NativeMaxMin),
-            MaxMinKind::Xla { artifact_dir } => Box::new(
-                xla_estimator::XlaMaxMin::load(artifact_dir)
-                    .expect("loading XLA maxmin artifact (run `make artifacts`)"),
-            ),
-        }
+impl SizeBasedConfig {
+    fn build_estimator(&self) -> Box<dyn SizeEstimator> {
+        self.estimator.build()
     }
 }
 
-/// Cached FSP priority view derived from a virtual cluster projection,
-/// keyed by the VC's generation counter (recomputing rank/finish maps on
+/// The ordering **policy** plugged into [`SizeBasedScheduler`].
+///
+/// The mechanism notifies the discipline of every job-lifecycle event it
+/// needs to maintain a total job order per phase; the discipline answers
+/// [`Discipline::order`] queries with `(job, priority key)` pairs sorted
+/// ascending (earlier = served first). Key units are
+/// discipline-specific; the mechanism only compares key *gaps* against
+/// [`SizeBasedConfig::preempt_threshold_s`].
+///
+/// Contract (asserted by `scheduler::disciplines` unit tests and the
+/// cross-discipline property harness in `tests/properties.rs`):
+///
+/// 1. `order(phase)` contains exactly the jobs whose phase has started
+///    and not yet completed/been removed;
+/// 2. the order is deterministic (ties broken by job id);
+/// 3. [`Discipline::generation`] changes whenever `order` may have —
+///    the mechanism caches rank lookups keyed on it.
+pub trait Discipline {
+    /// Cluster capacity became known (total slots per phase). Called
+    /// once, before any other hook.
+    fn bind_capacity(&mut self, map_slots: usize, reduce_slots: usize);
+
+    /// A job's phase entered the system. `initial_size` is the training
+    /// module's initial serialized-size estimate (0 when the discipline
+    /// does not use estimates); `n_tasks` the phase's task count.
+    fn phase_started(
+        &mut self,
+        id: JobId,
+        phase: Phase,
+        initial_size: f64,
+        n_tasks: usize,
+        now: Time,
+    );
+
+    /// The training module delivered or revised the phase-size estimate
+    /// (total serialized seconds). Never called for disciplines with
+    /// [`DisciplineKind::uses_estimates`] = `false`.
+    fn size_estimated(&mut self, id: JobId, phase: Phase, total: f64, now: Time);
+
+    /// A task attempt of the phase completed `observed` seconds of
+    /// serialized work (attained service).
+    fn service_observed(&mut self, id: JobId, phase: Phase, observed: f64, now: Time);
+
+    /// The phase really completed on the cluster.
+    fn phase_completed(&mut self, id: JobId, phase: Phase, now: Time);
+
+    /// The job left the system: drop all of its state.
+    fn job_removed(&mut self, id: JobId, now: Time);
+
+    /// Advance internal clocks to `now` (called once per heartbeat,
+    /// before any `order` query).
+    fn advance(&mut self, now: Time);
+
+    /// Cache version for `phase`: the mechanism re-derives its rank maps
+    /// only when this changes.
+    fn generation(&self, phase: Phase) -> u64;
+
+    /// Total job order for `phase`: ascending priority key.
+    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)>;
+
+    /// Diagnostic remaining-work figure (trace logging only).
+    fn remaining(&self, id: JobId, phase: Phase) -> Option<f64> {
+        let _ = (id, phase);
+        None
+    }
+}
+
+/// Cached priority view derived from the discipline's job order, keyed
+/// by the discipline's generation counter (recomputing rank/key maps on
 /// every heartbeat dominated the hot path — §Perf iteration 2).
 #[derive(Default)]
 struct OrderCache {
@@ -151,11 +249,11 @@ struct OrderCache {
 }
 
 impl OrderCache {
-    fn refresh(&mut self, vc: &mut VirtualCluster) {
-        if self.valid && self.generation == vc.generation() {
+    fn refresh(&mut self, discipline: &mut dyn Discipline, phase: Phase) {
+        if self.valid && self.generation == discipline.generation(phase) {
             return;
         }
-        let projected = vc.projected_finish_order();
+        let projected = discipline.order(phase);
         self.order.clear();
         self.rank.clear();
         self.finish.clear();
@@ -164,21 +262,25 @@ impl OrderCache {
             self.rank.insert(id, r);
             self.finish.insert(id, t);
         }
-        self.generation = vc.generation();
+        self.generation = discipline.generation(phase);
         self.valid = true;
     }
 }
 
-/// The HFSP scheduler.
-pub struct HfspScheduler {
-    cfg: HfspConfig,
-    vc_map: VirtualCluster,
-    vc_reduce: VirtualCluster,
-    training: TrainingModule,
+/// The size-based scheduler: mechanism core + pluggable ordering
+/// discipline. With [`DisciplineKind::Fsp`] this is exactly the paper's
+/// HFSP (and produces byte-identical schedules to the pre-split
+/// implementation).
+pub struct SizeBasedScheduler {
+    cfg: SizeBasedConfig,
+    discipline: Box<dyn Discipline>,
+    /// `None` for size-oblivious disciplines (LAS): no sample sets, no
+    /// training-priority slots, no estimator.
+    training: Option<TrainingModule>,
     index: LocalityIndex,
     delay: DelayTimer,
     guard: SuspensionGuard,
-    /// Jobs whose reduce phase has been registered in `vc_reduce`.
+    /// Jobs whose reduce phase has been registered with the discipline.
     reduce_started: HashSet<JobId>,
     order_map: OrderCache,
     order_reduce: OrderCache,
@@ -186,26 +288,31 @@ pub struct HfspScheduler {
     sized: bool,
 }
 
-impl HfspScheduler {
-    pub fn new(cfg: HfspConfig) -> Self {
-        let error = if cfg.error_sigma > 0.0 {
-            Some(ErrorModel::log_normal(cfg.error_sigma, cfg.error_seed))
-        } else if cfg.error_alpha > 0.0 {
-            Some(ErrorModel::uniform(cfg.error_alpha, cfg.error_seed))
+impl SizeBasedScheduler {
+    pub fn new(cfg: SizeBasedConfig) -> Self {
+        let discipline = disciplines::build(&cfg);
+        let training = if cfg.discipline.uses_estimates() {
+            let error = if cfg.error_sigma > 0.0 {
+                Some(ErrorModel::log_normal(cfg.error_sigma, cfg.error_seed))
+            } else if cfg.error_alpha > 0.0 {
+                Some(ErrorModel::uniform(cfg.error_alpha, cfg.error_seed))
+            } else {
+                None
+            };
+            Some(TrainingModule::new(
+                cfg.sample_set,
+                cfg.xi,
+                cfg.build_estimator(),
+                error,
+            ))
         } else {
             None
         };
-        let training =
-            TrainingModule::new(cfg.sample_set, cfg.xi, cfg.build_estimator(), error);
         let guard = SuspensionGuard::new(cfg.suspend_hi, cfg.suspend_lo);
         let delay = DelayTimer::new(cfg.locality_timeout_s);
-        // Placeholder capacities; resized on first view.
-        let vc_map = VirtualCluster::with_backend(1, cfg.build_maxmin());
-        let vc_reduce = VirtualCluster::with_backend(1, cfg.build_maxmin());
         Self {
             cfg,
-            vc_map,
-            vc_reduce,
+            discipline,
             training,
             index: LocalityIndex::new(),
             delay,
@@ -221,21 +328,22 @@ impl HfspScheduler {
         if !self.sized {
             let map_slots = view.cluster.total_slots(Phase::Map).max(1);
             let red_slots = view.cluster.total_slots(Phase::Reduce).max(1);
-            self.vc_map = VirtualCluster::with_backend(map_slots, self.cfg.build_maxmin());
-            self.vc_reduce = VirtualCluster::with_backend(red_slots, self.cfg.build_maxmin());
+            self.discipline.bind_capacity(map_slots, red_slots);
             self.sized = true;
         }
     }
 
-    fn vc(&mut self, phase: Phase) -> &mut VirtualCluster {
-        match phase {
-            Phase::Map => &mut self.vc_map,
-            Phase::Reduce => &mut self.vc_reduce,
+    /// Initial size estimate for a starting phase: the training module's
+    /// history-based guess, or 0 for size-oblivious disciplines.
+    fn initial_estimate(&mut self, id: JobId, phase: Phase, n_tasks: usize) -> f64 {
+        match &mut self.training {
+            Some(t) => t.start_phase(id, phase, n_tasks),
+            None => 0.0,
         }
     }
 
-    /// Register a job's reduce phase in the reduce virtual cluster (at
-    /// arrival for map-less jobs, else when the map phase completes).
+    /// Register a job's reduce phase with the discipline (at arrival for
+    /// map-less jobs, else when the map phase completes).
     fn start_reduce_phase(&mut self, view: &SchedView, id: JobId) {
         if !self.reduce_started.insert(id) {
             return;
@@ -244,8 +352,9 @@ impl HfspScheduler {
         if n == 0 {
             return;
         }
-        let initial = self.training.start_phase(id, Phase::Reduce, n);
-        self.vc_reduce.add_job(id, initial, n, view.now);
+        let initial = self.initial_estimate(id, Phase::Reduce, n);
+        self.discipline
+            .phase_started(id, Phase::Reduce, initial, n, view.now);
     }
 
     /// Pick a map task for `job` on `node` under delay scheduling.
@@ -311,14 +420,14 @@ impl HfspScheduler {
         actions: &mut Vec<Action>,
         ctx_budget: &mut usize,
     ) {
-        // FSP priority order: projected PS finish times, ascending
-        // (cached across heartbeats until the projection changes); taken
-        // out of `self` for the duration of the call so the borrow
-        // checker allows `&mut self` pickers (§Perf iteration 3: cloning
-        // the rank/finish maps per heartbeat was measurable).
+        // Priority order from the discipline (cached across heartbeats
+        // until the discipline's generation changes); taken out of `self`
+        // for the duration of the call so the borrow checker allows
+        // `&mut self` pickers (§Perf iteration 3: cloning the rank/key
+        // maps per heartbeat was measurable).
         match phase {
-            Phase::Map => self.order_map.refresh(&mut self.vc_map),
-            Phase::Reduce => self.order_reduce.refresh(&mut self.vc_reduce),
+            Phase::Map => self.order_map.refresh(self.discipline.as_mut(), phase),
+            Phase::Reduce => self.order_reduce.refresh(self.discipline.as_mut(), phase),
         }
         let cache = match phase {
             Phase::Map => std::mem::take(&mut self.order_map),
@@ -354,9 +463,9 @@ impl HfspScheduler {
                 .map(|id| {
                     let j = &view.jobs[id];
                     format!(
-                        "j{id}(fin={:.0},rem_vc={:.0},pend={},run={})",
+                        "j{id}(key={:.0},rem={:.0},pend={},run={})",
                         finish.get(id).copied().unwrap_or(-1.0),
-                        self.vc_map.remaining(*id).unwrap_or(-1.0),
+                        self.discipline.remaining(*id, phase).unwrap_or(-1.0),
                         j.pending_tasks(Phase::Map),
                         j.running_tasks(Phase::Map)
                     )
@@ -368,49 +477,56 @@ impl HfspScheduler {
         // -- Stage 0: training-priority assignments (§3.1.1) ------------
         // Jobs still collecting samples get their sample set scheduled
         // with priority, ordered by fewer remaining tasks, subject to the
-        // global training-slot cap.
-        let mut training_jobs: Vec<&Job> = view
-            .active_jobs()
-            .filter(|j| {
-                self.training.is_training(j.id(), phase)
-                    && (phase == Phase::Map || j.map_phase_done())
-                    && j.pending_tasks(phase) > 0
-            })
-            .collect();
-        training_jobs.sort_by_key(|j| (j.remaining_tasks(phase), j.id()));
-        let mut training_running: usize = view
-            .active_jobs()
-            .filter(|j| self.training.is_training(j.id(), phase))
-            .map(|j| j.running_tasks(phase))
-            .sum();
-        for job in training_jobs {
-            if free == 0 || training_running >= self.cfg.max_training_slots {
-                break;
-            }
-            let mut want = self.training.wanted_training_slots(
-                job.id(),
-                phase,
-                job.running_tasks(phase),
-            );
-            while want > 0
-                && free > 0
-                && *ctx_budget > 0
-                && training_running < self.cfg.max_training_slots
-            {
-                let Some((task, local)) = self.pick_task(view, job, phase, node, &picked)
-                else {
+        // global training-slot cap. Size-oblivious disciplines carry no
+        // training module and skip the stage. The module is taken out of
+        // `self` for the duration (the pickers need `&mut self`; Stage 0
+        // itself never touches it mutably).
+        let training = self.training.take();
+        if let Some(training) = &training {
+            let mut training_jobs: Vec<&Job> = view
+                .active_jobs()
+                .filter(|j| {
+                    training.is_training(j.id(), phase)
+                        && (phase == Phase::Map || j.map_phase_done())
+                        && j.pending_tasks(phase) > 0
+                })
+                .collect();
+            training_jobs.sort_by_key(|j| (j.remaining_tasks(phase), j.id()));
+            let mut training_running: usize = view
+                .active_jobs()
+                .filter(|j| training.is_training(j.id(), phase))
+                .map(|j| j.running_tasks(phase))
+                .sum();
+            for job in training_jobs {
+                if free == 0 || training_running >= self.cfg.max_training_slots {
                     break;
-                };
-                picked.insert(task);
-                actions.push(Action::Launch { task, node, local });
-                free -= 1;
-                want -= 1;
-                *ctx_budget -= 1;
-                training_running += 1;
+                }
+                let mut want = training.wanted_training_slots(
+                    job.id(),
+                    phase,
+                    job.running_tasks(phase),
+                );
+                while want > 0
+                    && free > 0
+                    && *ctx_budget > 0
+                    && training_running < self.cfg.max_training_slots
+                {
+                    let Some((task, local)) = self.pick_task(view, job, phase, node, &picked)
+                    else {
+                        break;
+                    };
+                    picked.insert(task);
+                    actions.push(Action::Launch { task, node, local });
+                    free -= 1;
+                    want -= 1;
+                    *ctx_budget -= 1;
+                    training_running += 1;
+                }
             }
         }
+        self.training = training;
 
-        // -- Stage 1: fill free slots in FSP order ------------------------
+        // -- Stage 1: fill free slots in priority order -------------------
         for &id in order {
             if free == 0 {
                 break;
@@ -486,7 +602,7 @@ impl HfspScheduler {
             }
             loop {
                 // Is there a victim strictly lower-priority than us, with a
-                // projected finish far enough after ours to justify the
+                // priority key far enough behind ours to justify the
                 // preemption (thrash guard)?
                 let Some(&victim) = victim_iter.peek() else {
                     return;
@@ -556,9 +672,9 @@ impl HfspScheduler {
     }
 }
 
-impl Scheduler for HfspScheduler {
+impl Scheduler for SizeBasedScheduler {
     fn name(&self) -> &'static str {
-        "HFSP"
+        self.cfg.discipline.label()
     }
 
     fn on_job_arrival(&mut self, view: &SchedView, id: JobId) {
@@ -567,8 +683,9 @@ impl Scheduler for HfspScheduler {
         self.index.add_job(job, view.hdfs);
         let n_maps = job.spec.n_maps();
         if n_maps > 0 {
-            let initial = self.training.start_phase(id, Phase::Map, n_maps);
-            self.vc_map.add_job(id, initial, n_maps, view.now);
+            let initial = self.initial_estimate(id, Phase::Map, n_maps);
+            self.discipline
+                .phase_started(id, Phase::Map, initial, n_maps, view.now);
         } else {
             // Map-less job: the reduce phase is immediately eligible.
             self.start_reduce_phase(view, id);
@@ -583,22 +700,22 @@ impl Scheduler for HfspScheduler {
             Phase::Map => job.maps_done,
             Phase::Reduce => job.reduces_done,
         };
+        // Attained service (LAS/SRPT ordering input; FSP ignores it).
+        self.discipline.service_observed(id, phase, observed, view.now);
         // Feed the estimator.
-        match self
-            .training
-            .observe_completion(id, phase, observed, tasks_done)
-        {
-            TrainingUpdate::Estimated { total } => {
-                self.vc(phase).set_total(id, total, view.now);
+        if let Some(training) = &mut self.training {
+            if let TrainingUpdate::Estimated { total } =
+                training.observe_completion(id, phase, observed, tasks_done)
+            {
+                self.discipline.size_estimated(id, phase, total, view.now);
             }
-            TrainingUpdate::Pending | TrainingUpdate::NotTraining => {}
         }
-        // Real phase completion retires the job from the PS reference;
-        // virtual progress in between is the reference's own business
-        // (the PS world is deliberately decoupled from real progress).
+        // Real phase completion retires the job from the discipline's
+        // reference; virtual progress in between is the discipline's own
+        // business (the reference world is deliberately decoupled from
+        // real progress).
         if job.remaining_tasks(phase) == 0 {
-            let now = view.now;
-            self.vc(phase).remove_job(id, now);
+            self.discipline.phase_completed(id, phase, view.now);
         }
         // Map phase completion opens the reduce phase (§2.2: reducers are
         // scheduled once intermediate data is available).
@@ -611,17 +728,21 @@ impl Scheduler for HfspScheduler {
         if progress <= 0.0 {
             return;
         }
-        if let TrainingUpdate::Estimated { total } =
-            self.training.observe_progress(task.job, delta, progress)
-        {
-            self.vc_reduce.set_total(task.job, total, view.now);
+        if let Some(training) = &mut self.training {
+            if let TrainingUpdate::Estimated { total } =
+                training.observe_progress(task.job, delta, progress)
+            {
+                self.discipline
+                    .size_estimated(task.job, Phase::Reduce, total, view.now);
+            }
         }
     }
 
     fn on_job_finished(&mut self, view: &SchedView, id: JobId) {
-        self.vc_map.remove_job(id, view.now);
-        self.vc_reduce.remove_job(id, view.now);
-        self.training.remove_job(id);
+        self.discipline.job_removed(id, view.now);
+        if let Some(training) = &mut self.training {
+            training.remove_job(id);
+        }
         self.index.remove_job(id);
         self.delay.remove_job(id);
         self.reduce_started.remove(&id);
@@ -629,9 +750,8 @@ impl Scheduler for HfspScheduler {
 
     fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
         self.ensure_sized(view);
-        // Job aging: advance the PS reference simulation to now (§3.1).
-        self.vc_map.age_to(view.now);
-        self.vc_reduce.age_to(view.now);
+        // Job aging / virtual-clock advance (§3.1).
+        self.discipline.advance(view.now);
         let mut actions = Vec::new();
         // Context-memory budget shared by both phases: every launch adds a
         // JVM context on the node; suspensions park one. The budget keeps

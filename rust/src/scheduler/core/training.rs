@@ -278,7 +278,7 @@ impl TrainingModule {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::hfsp::estimator::NativeEstimator;
+    use crate::scheduler::core::estimator::NativeEstimator;
 
     fn module(sample_set: usize, xi: f64) -> TrainingModule {
         TrainingModule::new(sample_set, xi, Box::new(NativeEstimator::new()), None)

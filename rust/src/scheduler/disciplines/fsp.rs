@@ -1,0 +1,130 @@
+//! FSP — the Fair Sojourn Protocol ordering (HFSP's policy, §3.1).
+//!
+//! Jobs are ordered by their **projected completion time in a max-min-
+//! fair processor-sharing reference simulation** (one
+//! [`VirtualCluster`] per phase, over that phase's slot pool). The
+//! priority key handed to the mechanism is the projected PS finish time
+//! in simulated seconds, so the preemption threshold compares absolute
+//! finish-time gaps — exactly the pre-split HFSP behaviour, bit for bit.
+
+use crate::job::{JobId, Phase};
+use crate::scheduler::core::virtual_cluster::VirtualCluster;
+use crate::scheduler::core::{Discipline, MaxMinKind};
+use crate::sim::Time;
+
+/// The FSP discipline: two fluid PS reference simulations (map and
+/// reduce slot pools), aged on every heartbeat.
+pub struct FspDiscipline {
+    maxmin: MaxMinKind,
+    vc_map: VirtualCluster,
+    vc_reduce: VirtualCluster,
+}
+
+impl FspDiscipline {
+    pub fn new(maxmin: MaxMinKind) -> Self {
+        // Placeholder capacities; replaced by `bind_capacity`.
+        let vc_map = VirtualCluster::with_backend(1, maxmin.build());
+        let vc_reduce = VirtualCluster::with_backend(1, maxmin.build());
+        Self {
+            maxmin,
+            vc_map,
+            vc_reduce,
+        }
+    }
+
+    fn vc(&mut self, phase: Phase) -> &mut VirtualCluster {
+        match phase {
+            Phase::Map => &mut self.vc_map,
+            Phase::Reduce => &mut self.vc_reduce,
+        }
+    }
+}
+
+impl Discipline for FspDiscipline {
+    fn bind_capacity(&mut self, map_slots: usize, reduce_slots: usize) {
+        self.vc_map = VirtualCluster::with_backend(map_slots, self.maxmin.build());
+        self.vc_reduce = VirtualCluster::with_backend(reduce_slots, self.maxmin.build());
+    }
+
+    fn phase_started(
+        &mut self,
+        id: JobId,
+        phase: Phase,
+        initial_size: f64,
+        n_tasks: usize,
+        now: Time,
+    ) {
+        self.vc(phase).add_job(id, initial_size, n_tasks, now);
+    }
+
+    fn size_estimated(&mut self, id: JobId, phase: Phase, total: f64, now: Time) {
+        self.vc(phase).set_total(id, total, now);
+    }
+
+    fn service_observed(&mut self, _id: JobId, _phase: Phase, _observed: f64, _now: Time) {
+        // The PS reference is deliberately decoupled from real progress
+        // (§3.1 "Virtual width"): attained service does not feed it.
+    }
+
+    fn phase_completed(&mut self, id: JobId, phase: Phase, now: Time) {
+        self.vc(phase).remove_job(id, now);
+    }
+
+    fn job_removed(&mut self, id: JobId, now: Time) {
+        self.vc_map.remove_job(id, now);
+        self.vc_reduce.remove_job(id, now);
+    }
+
+    fn advance(&mut self, now: Time) {
+        // Job aging: advance the PS reference simulations to now (§3.1).
+        self.vc_map.age_to(now);
+        self.vc_reduce.age_to(now);
+    }
+
+    fn generation(&self, phase: Phase) -> u64 {
+        match phase {
+            Phase::Map => self.vc_map.generation(),
+            Phase::Reduce => self.vc_reduce.generation(),
+        }
+    }
+
+    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
+        self.vc(phase).projected_finish_order()
+    }
+
+    fn remaining(&self, id: JobId, phase: Phase) -> Option<f64> {
+        match phase {
+            Phase::Map => self.vc_map.remaining(id),
+            Phase::Reduce => self.vc_reduce.remaining(id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsp_orders_by_projected_ps_finish() {
+        let mut d = FspDiscipline::new(MaxMinKind::Native);
+        d.bind_capacity(1, 1);
+        // Fig. 1 scenario: sizes 30/10/10 on one slot, arrivals 0/10/15
+        // → PS completion order j2, j3, j1.
+        d.phase_started(1, Phase::Map, 30.0, 10, 0.0);
+        d.phase_started(2, Phase::Map, 10.0, 10, 10.0);
+        d.phase_started(3, Phase::Map, 10.0, 10, 15.0);
+        let ids: Vec<JobId> = d.order(Phase::Map).iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn estimate_updates_reorder() {
+        let mut d = FspDiscipline::new(MaxMinKind::Native);
+        d.bind_capacity(1, 1);
+        d.phase_started(1, Phase::Map, 10.0, 1, 0.0);
+        d.phase_started(2, Phase::Map, 20.0, 1, 0.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 1);
+        d.size_estimated(2, Phase::Map, 1.0, 0.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 2);
+    }
+}

@@ -1,0 +1,106 @@
+//! LAS/FB — least attained service (foreground/background).
+//!
+//! The size-*oblivious* member of the discipline family: jobs are
+//! ordered by the serialized work they have **already received**,
+//! ascending — fresh jobs run first, long-running jobs fall to the
+//! background. Under the heavy-tailed job-size distributions of
+//! MapReduce traces LAS approximates SRPT without ever knowing a size,
+//! which makes it the natural baseline for the estimation-error
+//! sensitivity study (arXiv 1403.5996): its curve is flat in σ by
+//! construction.
+//!
+//! LAS reports [`DisciplineKind::uses_estimates`]
+//! (crate::scheduler::disciplines::DisciplineKind::uses_estimates) =
+//! `false`, so the mechanism runs **without a training module** — no
+//! sample sets, no training-priority slots, no estimator — exercising
+//! the core's optional-training path.
+//!
+//! The priority key is attained serialized seconds; ties (e.g. a batch
+//! of fresh jobs at 0) break by job id, i.e. FIFO, and the preemption
+//! threshold doubles as the scheduler's quantum: a fresh job only
+//! preempts a victim that has attained at least
+//! `preempt_threshold_s` more service.
+
+use crate::job::{JobId, Phase};
+use crate::scheduler::core::Discipline;
+use crate::sim::Time;
+use std::collections::HashMap;
+
+use super::srpt::phase_idx;
+
+/// The LAS discipline.
+#[derive(Default)]
+pub struct LasDiscipline {
+    attained: HashMap<(JobId, Phase), f64>,
+    /// Per-phase order version ([map, reduce]).
+    generation: [u64; 2],
+}
+
+impl LasDiscipline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(&mut self, phase: Phase) {
+        self.generation[phase_idx(phase)] += 1;
+    }
+}
+
+impl Discipline for LasDiscipline {
+    fn bind_capacity(&mut self, _map_slots: usize, _reduce_slots: usize) {}
+
+    fn phase_started(
+        &mut self,
+        id: JobId,
+        phase: Phase,
+        _initial_size: f64,
+        _n_tasks: usize,
+        _now: Time,
+    ) {
+        self.attained.insert((id, phase), 0.0);
+        self.bump(phase);
+    }
+
+    fn size_estimated(&mut self, _id: JobId, _phase: Phase, _total: f64, _now: Time) {
+        // Size-oblivious: never called (no training module), and inert
+        // by contract if it ever were.
+    }
+
+    fn service_observed(&mut self, id: JobId, phase: Phase, observed: f64, _now: Time) {
+        if let Some(a) = self.attained.get_mut(&(id, phase)) {
+            *a += observed;
+            self.bump(phase);
+        }
+    }
+
+    fn phase_completed(&mut self, id: JobId, phase: Phase, _now: Time) {
+        if self.attained.remove(&(id, phase)).is_some() {
+            self.bump(phase);
+        }
+    }
+
+    fn job_removed(&mut self, id: JobId, _now: Time) {
+        for phase in [Phase::Map, Phase::Reduce] {
+            if self.attained.remove(&(id, phase)).is_some() {
+                self.bump(phase);
+            }
+        }
+    }
+
+    fn advance(&mut self, _now: Time) {}
+
+    fn generation(&self, phase: Phase) -> u64 {
+        self.generation[phase_idx(phase)]
+    }
+
+    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
+        let mut out: Vec<(JobId, f64)> = self
+            .attained
+            .iter()
+            .filter(|((_, p), _)| *p == phase)
+            .map(|(&(id, _), &a)| (id, a))
+            .collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN key").then(a.0.cmp(&b.0)));
+        out
+    }
+}

@@ -1,0 +1,218 @@
+//! Size-based ordering **policies** plugged into the shared mechanism
+//! ([`crate::scheduler::core::SizeBasedScheduler`]).
+//!
+//! Each discipline answers one question — *in which order should jobs be
+//! served?* — through the [`Discipline`](crate::scheduler::core::Discipline)
+//! trait; everything else (estimation, training slots, preemption,
+//! locality) is the mechanism's job. Four disciplines ship:
+//!
+//! | kind | label | orders by | estimates? |
+//! |------|-------|-----------|------------|
+//! | [`Fsp`](DisciplineKind::Fsp) | `HFSP` | projected finish in the max-min-fair PS reference (§3.1) | yes |
+//! | [`Srpt`](DisciplineKind::Srpt) | `SRPT` | shortest remaining estimated size | yes |
+//! | [`Las`](DisciplineKind::Las) | `LAS` | least attained service (size-oblivious FB scheduling) | no |
+//! | [`Psbs`](DisciplineKind::Psbs) | `PSBS` | late-binding virtual-time finish tags (à la PSBS, arXiv 1410.6122) | yes |
+//!
+//! This is the scenario space of *PSBS: Practical Size-Based Scheduling*
+//! and of the estimation-error sensitivity study in *Revisiting
+//! Size-Based Scheduling with Estimated Job Sizes* (arXiv 1403.5996) —
+//! see `benches/fig_disciplines.rs`.
+
+pub mod fsp;
+pub mod las;
+pub mod psbs;
+pub mod srpt;
+
+pub use fsp::FspDiscipline;
+pub use las::LasDiscipline;
+pub use psbs::PsbsDiscipline;
+pub use srpt::SrptDiscipline;
+
+use super::core::{Discipline, SizeBasedConfig};
+
+/// Which ordering policy a [`SizeBasedConfig`] selects.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DisciplineKind {
+    /// Fair Sojourn Protocol: HFSP's ordering (the default).
+    #[default]
+    Fsp,
+    /// Preemptive shortest-remaining-estimated-size.
+    Srpt,
+    /// Least attained service (foreground/background); size-oblivious.
+    Las,
+    /// PSBS-style late-binding virtual-time ordering.
+    Psbs,
+}
+
+impl DisciplineKind {
+    /// Report/table label ([`SimOutcome::scheduler`]
+    /// (crate::cluster::driver::SimOutcome) and sweep group keys).
+    pub const fn label(self) -> &'static str {
+        match self {
+            DisciplineKind::Fsp => "HFSP",
+            DisciplineKind::Srpt => "SRPT",
+            DisciplineKind::Las => "LAS",
+            DisciplineKind::Psbs => "PSBS",
+        }
+    }
+
+    /// Canonical CLI token (`--scheduler` / sweep axis value).
+    pub const fn cli_name(self) -> &'static str {
+        match self {
+            DisciplineKind::Fsp => "hfsp",
+            DisciplineKind::Srpt => "srpt",
+            DisciplineKind::Las => "las",
+            DisciplineKind::Psbs => "psbs",
+        }
+    }
+
+    /// Whether the discipline consumes size estimates. `false` disables
+    /// the training module entirely (no sample sets, no estimator, no
+    /// training-priority slots) — the mechanism's optional-training
+    /// path, exercised by LAS.
+    pub const fn uses_estimates(self) -> bool {
+        !matches!(self, DisciplineKind::Las)
+    }
+
+    pub const ALL: [DisciplineKind; 4] = [
+        DisciplineKind::Fsp,
+        DisciplineKind::Srpt,
+        DisciplineKind::Las,
+        DisciplineKind::Psbs,
+    ];
+}
+
+/// Instantiate the discipline a config selects.
+pub fn build(cfg: &SizeBasedConfig) -> Box<dyn Discipline> {
+    match cfg.discipline {
+        DisciplineKind::Fsp => Box::new(FspDiscipline::new(cfg.maxmin.clone())),
+        DisciplineKind::Srpt => Box::new(SrptDiscipline::new()),
+        DisciplineKind::Las => Box::new(LasDiscipline::new()),
+        DisciplineKind::Psbs => Box::new(PsbsDiscipline::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Phase;
+    use crate::scheduler::core::Discipline;
+
+    /// Exercise the shared Discipline contract on every non-FSP
+    /// implementation (FSP's ordering is covered by the virtual-cluster
+    /// suite): membership tracks phase_started/phase_completed/
+    /// job_removed, order is deterministic, generation moves with it.
+    fn contract(mut d: Box<dyn Discipline>) {
+        d.bind_capacity(4, 2);
+        d.phase_started(1, Phase::Map, 100.0, 10, 0.0);
+        d.phase_started(2, Phase::Map, 10.0, 2, 1.0);
+        d.advance(2.0);
+        let order = d.order(Phase::Map);
+        assert_eq!(order.len(), 2, "both registered jobs present");
+        assert!(order.windows(2).all(|w| w[0].1 <= w[1].1), "keys ascending");
+        let again = d.order(Phase::Map);
+        assert_eq!(
+            order.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+            again.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+            "deterministic"
+        );
+        assert!(d.order(Phase::Reduce).is_empty(), "phases are independent");
+        let g = d.generation(Phase::Map);
+        let gr = d.generation(Phase::Reduce);
+        d.phase_completed(1, Phase::Map, 3.0);
+        assert_ne!(d.generation(Phase::Map), g, "removal bumps generation");
+        assert_eq!(
+            d.generation(Phase::Reduce),
+            gr,
+            "a map-phase event must not invalidate the reduce order cache"
+        );
+        assert_eq!(d.order(Phase::Map).len(), 1);
+        d.job_removed(2, 4.0);
+        assert!(d.order(Phase::Map).is_empty());
+    }
+
+    #[test]
+    fn srpt_las_psbs_honour_the_contract() {
+        contract(Box::new(SrptDiscipline::new()));
+        contract(Box::new(LasDiscipline::new()));
+        contract(Box::new(PsbsDiscipline::new()));
+    }
+
+    #[test]
+    fn srpt_prefers_smaller_remaining() {
+        let mut d = SrptDiscipline::new();
+        d.phase_started(1, Phase::Map, 100.0, 10, 0.0);
+        d.phase_started(2, Phase::Map, 50.0, 5, 0.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 2);
+        // Job 1 attains 80 s of service: remaining 20 < 50 flips the order.
+        d.service_observed(1, Phase::Map, 80.0, 1.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 1);
+        // A revised (larger) estimate flips it back.
+        d.size_estimated(1, Phase::Map, 500.0, 2.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 2);
+    }
+
+    #[test]
+    fn las_prefers_least_attained_and_ignores_estimates() {
+        let mut d = LasDiscipline::new();
+        d.phase_started(1, Phase::Map, 0.0, 10, 0.0);
+        d.phase_started(2, Phase::Map, 0.0, 10, 0.0);
+        // Tie at zero attained: job-id order.
+        assert_eq!(d.order(Phase::Map)[0].0, 1);
+        d.service_observed(1, Phase::Map, 30.0, 1.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 2, "fresh job first under LAS");
+        // Estimates must not perturb the order (size-oblivious).
+        let before = d.order(Phase::Map);
+        d.size_estimated(2, Phase::Map, 1e6, 2.0);
+        assert_eq!(before, d.order(Phase::Map));
+    }
+
+    #[test]
+    fn psbs_late_binding_rebinds_against_current_virtual_time() {
+        let mut d = PsbsDiscipline::new();
+        d.phase_started(1, Phase::Map, 100.0, 10, 0.0);
+        // Virtual time advances while job 1 is alone (rate 1/1).
+        d.advance(50.0);
+        // Job 2 arrives with a small initial estimate: tag = vnow + 10,
+        // well before job 1's tag of 100... but only because binding
+        // happens against the *current* virtual time.
+        d.phase_started(2, Phase::Map, 10.0, 1, 50.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 2);
+        // Job 2's estimate is revised upward at a later virtual instant:
+        // the tag re-binds and job 1 regains priority.
+        d.advance(60.0);
+        d.size_estimated(2, Phase::Map, 200.0, 60.0);
+        assert_eq!(d.order(Phase::Map)[0].0, 1);
+    }
+
+    #[test]
+    fn kind_metadata_is_consistent() {
+        for kind in DisciplineKind::ALL {
+            assert!(!kind.label().is_empty());
+            assert!(!kind.cli_name().is_empty());
+            assert_eq!(kind.cli_name(), kind.cli_name().to_ascii_lowercase());
+        }
+        assert!(DisciplineKind::Fsp.uses_estimates());
+        assert!(DisciplineKind::Srpt.uses_estimates());
+        assert!(DisciplineKind::Psbs.uses_estimates());
+        assert!(!DisciplineKind::Las.uses_estimates());
+        assert_eq!(DisciplineKind::default(), DisciplineKind::Fsp);
+    }
+
+    #[test]
+    fn build_respects_the_kind() {
+        for kind in DisciplineKind::ALL {
+            let cfg = SizeBasedConfig {
+                discipline: kind,
+                ..Default::default()
+            };
+            // Smoke: a built discipline accepts the basic lifecycle.
+            let mut d = build(&cfg);
+            d.bind_capacity(2, 2);
+            d.phase_started(7, Phase::Map, 5.0, 1, 0.0);
+            assert_eq!(d.order(Phase::Map).len(), 1);
+            d.job_removed(7, 1.0);
+            assert!(d.order(Phase::Map).is_empty());
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! PSBS-style late-binding virtual-time ordering.
+//!
+//! A practical simplification of FSP in the spirit of *PSBS: Practical
+//! Size-Based Scheduling* (arXiv 1410.6122): instead of running a full
+//! fluid PS reference simulation per phase, keep one **virtual clock**
+//! per phase that advances at rate `1 / active jobs` (the per-job
+//! processor-sharing service rate) and give every job a **finish tag**
+//!
+//! ```text
+//! tag = v(t_bind) + remaining estimated size at t_bind
+//! ```
+//!
+//! Jobs are served in ascending tag order. The defining *late-binding*
+//! property: the tag is (re-)bound against the **current** virtual time
+//! whenever the size estimate changes — a job that trains late, or whose
+//! estimate is revised, is queued where a job of that size arriving *at
+//! the revision instant* would be, rather than inheriting priority from
+//! a stale guess. This keeps ordinal order largely correct under
+//! estimation error (the property the PSBS paper's robustness results
+//! rest on) at O(1) bookkeeping per event, versus the fluid projection's
+//! O(n² log n) worst case.
+//!
+//! The priority key is a virtual timestamp; the preemption threshold
+//! therefore compares virtual-time gaps.
+
+use crate::job::{JobId, Phase};
+use crate::scheduler::core::Discipline;
+use crate::sim::Time;
+use std::collections::HashMap;
+
+struct TaggedJob {
+    /// Virtual finish tag (bound at arrival, re-bound on estimates).
+    tag: f64,
+    /// Attained serialized service (discounts re-binds).
+    attained: f64,
+}
+
+/// Virtual clock + tagged jobs of one phase.
+#[derive(Default)]
+struct PhaseQueue {
+    vnow: f64,
+    last: Time,
+    jobs: HashMap<JobId, TaggedJob>,
+}
+
+impl PhaseQueue {
+    /// Advance the virtual clock to `now` at the PS per-job rate.
+    fn tick(&mut self, now: Time) {
+        let dt = now - self.last;
+        if dt > 0.0 {
+            if !self.jobs.is_empty() {
+                self.vnow += dt / self.jobs.len() as f64;
+            }
+            self.last = now;
+        }
+    }
+}
+
+use super::srpt::phase_idx;
+
+/// The PSBS-style discipline.
+#[derive(Default)]
+pub struct PsbsDiscipline {
+    map: PhaseQueue,
+    reduce: PhaseQueue,
+    /// Per-phase order version ([map, reduce]).
+    generation: [u64; 2],
+}
+
+impl PsbsDiscipline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn queue(&mut self, phase: Phase) -> &mut PhaseQueue {
+        match phase {
+            Phase::Map => &mut self.map,
+            Phase::Reduce => &mut self.reduce,
+        }
+    }
+
+    fn bump(&mut self, phase: Phase) {
+        self.generation[phase_idx(phase)] += 1;
+    }
+}
+
+impl Discipline for PsbsDiscipline {
+    fn bind_capacity(&mut self, _map_slots: usize, _reduce_slots: usize) {}
+
+    fn phase_started(
+        &mut self,
+        id: JobId,
+        phase: Phase,
+        initial_size: f64,
+        _n_tasks: usize,
+        now: Time,
+    ) {
+        let q = self.queue(phase);
+        // Tick with the pre-arrival job count, then bind the tag.
+        q.tick(now);
+        let tag = q.vnow + initial_size.max(0.0);
+        q.jobs.insert(
+            id,
+            TaggedJob {
+                tag,
+                attained: 0.0,
+            },
+        );
+        self.bump(phase);
+    }
+
+    fn size_estimated(&mut self, id: JobId, phase: Phase, total: f64, now: Time) {
+        let q = self.queue(phase);
+        q.tick(now);
+        let vnow = q.vnow;
+        let rebound = if let Some(j) = q.jobs.get_mut(&id) {
+            // Late binding: re-queue at the position a job with this
+            // remaining size would get if it arrived right now.
+            j.tag = vnow + (total - j.attained).max(0.0);
+            true
+        } else {
+            false
+        };
+        if rebound {
+            self.bump(phase);
+        }
+    }
+
+    fn service_observed(&mut self, id: JobId, phase: Phase, observed: f64, _now: Time) {
+        // Attained service only discounts future re-binds; the current
+        // tag (and hence the order) is unchanged.
+        if let Some(j) = self.queue(phase).jobs.get_mut(&id) {
+            j.attained += observed;
+        }
+    }
+
+    fn phase_completed(&mut self, id: JobId, phase: Phase, now: Time) {
+        let q = self.queue(phase);
+        q.tick(now);
+        if q.jobs.remove(&id).is_some() {
+            self.bump(phase);
+        }
+    }
+
+    fn job_removed(&mut self, id: JobId, now: Time) {
+        for phase in [Phase::Map, Phase::Reduce] {
+            let q = self.queue(phase);
+            q.tick(now);
+            if q.jobs.remove(&id).is_some() {
+                self.bump(phase);
+            }
+        }
+    }
+
+    fn advance(&mut self, now: Time) {
+        self.map.tick(now);
+        self.reduce.tick(now);
+    }
+
+    fn generation(&self, phase: Phase) -> u64 {
+        self.generation[phase_idx(phase)]
+    }
+
+    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
+        let q = self.queue(phase);
+        let mut out: Vec<(JobId, f64)> =
+            q.jobs.iter().map(|(&id, j)| (id, j.tag)).collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN tag").then(a.0.cmp(&b.0)));
+        out
+    }
+
+    fn remaining(&self, id: JobId, phase: Phase) -> Option<f64> {
+        let q = match phase {
+            Phase::Map => &self.map,
+            Phase::Reduce => &self.reduce,
+        };
+        q.jobs.get(&id).map(|j| (j.tag - q.vnow).max(0.0))
+    }
+}

@@ -1,6 +1,5 @@
-//! Job schedulers: the `Scheduler` trait plus the three disciplines the
-//! paper evaluates — FIFO (Hadoop's default), FAIR (the Hadoop Fair
-//! Scheduler with delay scheduling) and HFSP (the paper's contribution).
+//! Job schedulers: the `Scheduler` trait, the size-based
+//! mechanism/policy split, and the discipline registry.
 //!
 //! ## Contract
 //!
@@ -16,17 +15,49 @@
 //! observations ([`Scheduler::on_task_completed`]) and the Δ-progress
 //! reports used by the reduce estimator
 //! ([`Scheduler::on_reduce_progress`], §3.2.1 of the paper).
+//!
+//! ## Mechanism vs policy
+//!
+//! Two schedulers are self-contained ([`fifo`], [`fair`]); every
+//! size-based discipline instead runs on the shared **mechanism** in
+//! [`core`] (estimation, training, virtual time, preemption) with a
+//! pluggable ordering **policy** from [`disciplines`] (FSP = HFSP,
+//! SRPT, LAS, PSBS). The [`REGISTRY`] table is the single source of
+//! truth for scheduler names, labels and construction — the CLI help,
+//! `from_name` parsing and the "unknown scheduler" error are all derived
+//! from it.
 
+pub mod core;
 pub mod delay;
+pub mod disciplines;
 pub mod fair;
 pub mod fifo;
-pub mod hfsp;
+
+/// Back-compat facade: HFSP is the size-based [`core`] driven by the
+/// FSP discipline. Historical import paths (`scheduler::hfsp::training`,
+/// `scheduler::hfsp::HfspConfig`, …) resolve here.
+pub mod hfsp {
+    //! HFSP — the Hadoop Fair Sojourn Protocol (§3 of the paper), as a
+    //! facade over [`super::core`] + [`super::disciplines::fsp`].
+    pub use super::core::{estimator, preemption, training, virtual_cluster, xla_estimator};
+    pub use super::core::{
+        EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive, SizeBasedConfig,
+        SuspensionGuard,
+    };
+
+    /// HFSP = the size-based mechanism with [`FspDiscipline`]
+    /// (`SizeBasedConfig::default()` selects it).
+    pub type HfspScheduler = super::core::SizeBasedScheduler;
+    pub use super::disciplines::FspDiscipline;
+}
 
 use crate::cluster::{Cluster, Hdfs};
-use crate::job::{Job, JobId, TaskRef};
 use crate::job::task::NodeId;
+use crate::job::{Job, JobId, TaskRef};
 use crate::sim::Time;
+use self::disciplines::DisciplineKind;
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 /// Read-only view of the world handed to schedulers.
 pub struct SchedView<'a> {
@@ -65,7 +96,8 @@ pub enum Action {
     Kill { task: TaskRef },
 }
 
-/// Scheduler interface implemented by FIFO, FAIR and HFSP.
+/// Scheduler interface implemented by FIFO, FAIR and the size-based
+/// core.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
@@ -97,15 +129,114 @@ pub trait Scheduler {
 pub enum SchedulerKind {
     Fifo,
     Fair(fair::FairConfig),
-    Hfsp(hfsp::HfspConfig),
+    /// Any size-based discipline on the shared mechanism
+    /// ([`core::SizeBasedScheduler`]); `cfg.discipline` selects which.
+    SizeBased(core::SizeBasedConfig),
 }
 
+/// One row of the scheduler [`REGISTRY`].
+pub struct SchedulerEntry {
+    /// Canonical CLI token (`--scheduler`, sweep axis values).
+    pub name: &'static str,
+    /// Report/table label (sweep group keys, `SimOutcome::scheduler`).
+    pub label: &'static str,
+    /// One-line description (CLI help).
+    pub about: &'static str,
+    make: fn() -> SchedulerKind,
+}
+
+impl SchedulerEntry {
+    /// Build the scheduler kind with its default configuration.
+    pub fn make(&self) -> SchedulerKind {
+        (self.make)()
+    }
+}
+
+fn make_fifo() -> SchedulerKind {
+    SchedulerKind::Fifo
+}
+fn make_fair() -> SchedulerKind {
+    SchedulerKind::Fair(fair::FairConfig::default())
+}
+fn make_hfsp() -> SchedulerKind {
+    SchedulerKind::size_based(DisciplineKind::Fsp)
+}
+fn make_srpt() -> SchedulerKind {
+    SchedulerKind::size_based(DisciplineKind::Srpt)
+}
+fn make_las() -> SchedulerKind {
+    SchedulerKind::size_based(DisciplineKind::Las)
+}
+fn make_psbs() -> SchedulerKind {
+    SchedulerKind::size_based(DisciplineKind::Psbs)
+}
+
+/// The single source of truth for registered schedulers: drives
+/// [`SchedulerKind::from_name`], the CLI help ([`SchedulerKind::cli_help`])
+/// and the "unknown scheduler" error message. Adding a discipline means
+/// adding one row here (plus its `disciplines` implementation) — no
+/// hand-maintained name/label/error triplication.
+pub static REGISTRY: &[SchedulerEntry] = &[
+    SchedulerEntry {
+        name: "fifo",
+        label: "FIFO",
+        about: "Hadoop's default FIFO queue (no preemption)",
+        make: make_fifo,
+    },
+    SchedulerEntry {
+        name: "fair",
+        label: "FAIR",
+        about: "Hadoop Fair Scheduler with delay scheduling",
+        make: make_fair,
+    },
+    SchedulerEntry {
+        name: DisciplineKind::Fsp.cli_name(),
+        label: DisciplineKind::Fsp.label(),
+        about: "size-based core + FSP ordering (the paper's HFSP)",
+        make: make_hfsp,
+    },
+    SchedulerEntry {
+        name: DisciplineKind::Srpt.cli_name(),
+        label: DisciplineKind::Srpt.label(),
+        about: "size-based core + shortest-remaining-estimated-size",
+        make: make_srpt,
+    },
+    SchedulerEntry {
+        name: DisciplineKind::Las.cli_name(),
+        label: DisciplineKind::Las.label(),
+        about: "size-based core + least attained service (size-oblivious)",
+        make: make_las,
+    },
+    SchedulerEntry {
+        name: DisciplineKind::Psbs.cli_name(),
+        label: DisciplineKind::Psbs.label(),
+        about: "size-based core + PSBS-style late-binding virtual time",
+        make: make_psbs,
+    },
+];
+
 impl SchedulerKind {
+    /// A size-based kind with default mechanism parameters and the given
+    /// ordering discipline.
+    pub fn size_based(discipline: DisciplineKind) -> SchedulerKind {
+        SchedulerKind::SizeBased(core::SizeBasedConfig {
+            discipline,
+            ..Default::default()
+        })
+    }
+
+    /// HFSP with default configuration (= `size_based(Fsp)`).
+    pub fn hfsp() -> SchedulerKind {
+        Self::size_based(DisciplineKind::Fsp)
+    }
+
     pub fn build(&self) -> Box<dyn Scheduler> {
         match self {
             SchedulerKind::Fifo => Box::new(fifo::FifoScheduler::new()),
             SchedulerKind::Fair(cfg) => Box::new(fair::FairScheduler::new(cfg.clone())),
-            SchedulerKind::Hfsp(cfg) => Box::new(hfsp::HfspScheduler::new(cfg.clone())),
+            SchedulerKind::SizeBased(cfg) => {
+                Box::new(core::SizeBasedScheduler::new(cfg.clone()))
+            }
         }
     }
 
@@ -113,19 +244,22 @@ impl SchedulerKind {
         match self {
             SchedulerKind::Fifo => "FIFO",
             SchedulerKind::Fair(_) => "FAIR",
-            SchedulerKind::Hfsp(_) => "HFSP",
+            SchedulerKind::SizeBased(cfg) => cfg.discipline.label(),
         }
     }
 
     /// Wire a fault scenario's size-estimation error (log-normal σ) into
-    /// an HFSP kind, seeded deterministically from the run seed. No-op
-    /// for other schedulers, for σ = 0, and when the config already
-    /// carries an explicit error setting (e.g. the Fig. 6 bench).
+    /// a size-based kind, seeded deterministically from the run seed —
+    /// the error model applies to *every* size-based discipline, not
+    /// just HFSP (size-oblivious LAS carries no estimator, so the
+    /// setting is inert there). No-op for FIFO/FAIR, for σ = 0, and when
+    /// the config already carries an explicit error setting (e.g. the
+    /// Fig. 6 bench).
     pub fn apply_fault_error(&mut self, sigma: f64, seed: u64) {
         if sigma <= 0.0 {
             return;
         }
-        if let SchedulerKind::Hfsp(cfg) = self {
+        if let SchedulerKind::SizeBased(cfg) = self {
             if cfg.error_alpha == 0.0 && cfg.error_sigma == 0.0 {
                 cfg.error_sigma = sigma;
                 // Fixed tweak decorrelates the error stream from the
@@ -135,13 +269,117 @@ impl SchedulerKind {
         }
     }
 
-    /// Parse from a CLI string (`fifo`, `fair`, `hfsp`).
+    /// Registered CLI names, in registry order.
+    pub fn names() -> impl Iterator<Item = &'static str> {
+        REGISTRY.iter().map(|e| e.name)
+    }
+
+    /// `"fifo | fair | hfsp | srpt | las | psbs"` — registry-derived CLI
+    /// help fragment, built once into a process-lifetime static (flag
+    /// specs need `&'static str`).
+    pub fn cli_help() -> &'static str {
+        static HELP: OnceLock<String> = OnceLock::new();
+        HELP.get_or_init(|| Self::names().collect::<Vec<_>>().join(" | "))
+            .as_str()
+    }
+
+    /// `"comma-separated scheduler list: fifo,fair,hfsp,srpt,las,psbs"`
+    /// — help text for list-valued flags (sweep `--schedulers`).
+    pub fn cli_help_list() -> &'static str {
+        static HELP: OnceLock<String> = OnceLock::new();
+        HELP.get_or_init(|| {
+            format!(
+                "comma-separated scheduler list: {}",
+                Self::names().collect::<Vec<_>>().join(",")
+            )
+        })
+        .as_str()
+    }
+
+    /// Parse from a CLI string. The error lists every registered
+    /// scheduler, straight from [`REGISTRY`].
     pub fn from_name(name: &str) -> anyhow::Result<SchedulerKind> {
-        match name.to_ascii_lowercase().as_str() {
-            "fifo" => Ok(SchedulerKind::Fifo),
-            "fair" => Ok(SchedulerKind::Fair(fair::FairConfig::default())),
-            "hfsp" => Ok(SchedulerKind::Hfsp(hfsp::HfspConfig::default())),
-            other => anyhow::bail!("unknown scheduler {other:?} (fifo|fair|hfsp)"),
+        let lower = name.to_ascii_lowercase();
+        for entry in REGISTRY {
+            if entry.name == lower {
+                return Ok(entry.make());
+            }
         }
+        anyhow::bail!(
+            "unknown scheduler {name:?} (expected one of: {})",
+            Self::names().collect::<Vec<_>>().join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_parse_to_matching_labels() {
+        // The registry is the single source of truth: every row's name
+        // must parse, and the built kind's label must equal the row's.
+        for entry in REGISTRY {
+            let kind = SchedulerKind::from_name(entry.name).expect("registered name parses");
+            assert_eq!(kind.label(), entry.label, "label mismatch for {}", entry.name);
+            assert_eq!(entry.make().label(), entry.label);
+            assert!(!entry.about.is_empty());
+        }
+    }
+
+    #[test]
+    fn from_name_is_case_insensitive_and_lists_all_on_error() {
+        assert_eq!(SchedulerKind::from_name("HFSP").unwrap().label(), "HFSP");
+        assert_eq!(SchedulerKind::from_name("Srpt").unwrap().label(), "SRPT");
+        let err = SchedulerKind::from_name("bogus").unwrap_err().to_string();
+        for entry in REGISTRY {
+            assert!(
+                err.contains(entry.name),
+                "error message must list {:?}: {err}",
+                entry.name
+            );
+        }
+    }
+
+    #[test]
+    fn cli_help_covers_the_registry() {
+        for help in [SchedulerKind::cli_help(), SchedulerKind::cli_help_list()] {
+            for entry in REGISTRY {
+                assert!(help.contains(entry.name), "{help:?} misses {}", entry.name);
+            }
+        }
+        assert!(SchedulerKind::cli_help_list().starts_with("comma-separated"));
+    }
+
+    #[test]
+    fn hfsp_default_is_the_fsp_discipline() {
+        let SchedulerKind::SizeBased(cfg) = SchedulerKind::from_name("hfsp").unwrap() else {
+            panic!("hfsp must be size-based");
+        };
+        assert_eq!(cfg.discipline, DisciplineKind::Fsp);
+        assert_eq!(SchedulerKind::hfsp().label(), "HFSP");
+    }
+
+    #[test]
+    fn fault_error_applies_to_every_size_based_discipline() {
+        for kind in DisciplineKind::ALL {
+            let mut k = SchedulerKind::size_based(kind);
+            k.apply_fault_error(0.5, 42);
+            let SchedulerKind::SizeBased(cfg) = &k else { unreachable!() };
+            assert_eq!(cfg.error_sigma, 0.5, "{kind:?}");
+            assert_eq!(cfg.error_seed, 42 ^ 0xE57A_11FE);
+        }
+        // Explicit settings win; FIFO/FAIR are no-ops.
+        let mut k = SchedulerKind::SizeBased(core::SizeBasedConfig {
+            error_alpha: 0.3,
+            ..Default::default()
+        });
+        k.apply_fault_error(0.5, 1);
+        let SchedulerKind::SizeBased(cfg) = &k else { unreachable!() };
+        assert_eq!(cfg.error_sigma, 0.0);
+        let mut f = SchedulerKind::Fifo;
+        f.apply_fault_error(0.5, 1);
+        assert_eq!(f.label(), "FIFO");
     }
 }

@@ -4,6 +4,16 @@
 //! may schedule further events through [`Engine::schedule_in`] /
 //! [`Engine::schedule_at`]. The engine enforces the monotonic-time
 //! invariant and supports a hard event-count limit as a runaway guard.
+//!
+//! ## Epoch chains & lazy deletion
+//!
+//! Periodic event chains (per-node heartbeats) cannot be deleted from
+//! the queue when they are invalidated (a node crash/recover cycle);
+//! instead each chain carries an **epoch** and the engine performs *lazy
+//! deletion*: [`Engine::run_filtered`] drops events whose epoch no
+//! longer matches the chain's current epoch ([`Engine::bump_chain`]) at
+//! pop time, without dispatching them into the handler. Skips are
+//! counted ([`Engine::skipped`]) and surfaced as a run diagnostic.
 
 use super::queue::EventQueue;
 use super::Time;
@@ -24,8 +34,12 @@ pub struct Engine<E> {
     queue: EventQueue<E>,
     now: Time,
     processed: u64,
+    /// Stale chain events dropped at pop time (lazy deletion).
+    skipped: u64,
     event_limit: u64,
     halt: bool,
+    /// Current epoch per registered event chain (see module docs).
+    chain_epochs: Vec<u32>,
 }
 
 impl<E> Default for Engine<E> {
@@ -40,13 +54,35 @@ impl<E> Engine<E> {
             queue: EventQueue::new(),
             now: 0.0,
             processed: 0,
+            skipped: 0,
             // Generous fallback: the FB-dataset macro run is ~1e6 events.
             // Simulation runs configure this through `SimConfig::event_limit`
             // (CLI `--event-limit` / config key `sim.event_limit`); a trip is
             // surfaced as `StopReason::EventLimit` in `SimOutcome::stop`.
             event_limit: 500_000_000,
             halt: false,
+            chain_epochs: Vec::new(),
         }
+    }
+
+    /// Register `n` epoch chains (e.g. one per cluster node), all
+    /// starting at epoch 0.
+    pub fn init_chains(&mut self, n: usize) {
+        self.chain_epochs = vec![0; n];
+    }
+
+    /// Current epoch of a chain.
+    pub fn chain_epoch(&self, chain: usize) -> u32 {
+        self.chain_epochs[chain]
+    }
+
+    /// Invalidate a chain's in-flight events: every queued event stamped
+    /// with an older epoch is dropped at pop time. Returns the new epoch
+    /// to stamp on the chain's next event.
+    pub fn bump_chain(&mut self, chain: usize) -> u32 {
+        let e = self.chain_epochs[chain].wrapping_add(1);
+        self.chain_epochs[chain] = e;
+        e
     }
 
     /// Override the runaway guard.
@@ -62,6 +98,11 @@ impl<E> Engine<E> {
 
     pub fn processed(&self) -> u64 {
         self.processed
+    }
+
+    /// Stale chain events dropped at pop time without dispatch.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
     }
 
     pub fn pending(&self) -> usize {
@@ -94,8 +135,25 @@ impl<E> Engine<E> {
     ///
     /// The handler receives `(engine, time, event)` — it can freely
     /// schedule new events on `engine`.
-    pub fn run<F>(&mut self, mut handler: F) -> StopReason
+    pub fn run<F>(&mut self, handler: F) -> StopReason
     where
+        F: FnMut(&mut Engine<E>, Time, E),
+    {
+        self.run_filtered(|_| None, handler)
+    }
+
+    /// [`Engine::run`] with lazy deletion of stale chain events.
+    ///
+    /// `chain_of` classifies an event: `Some((chain, epoch))` for events
+    /// that belong to an epoch chain, `None` for everything else. A
+    /// chain event whose epoch no longer matches the chain's current
+    /// epoch (see [`Engine::bump_chain`]) is dropped at pop time — it
+    /// advances the clock but is neither counted as processed nor
+    /// dispatched into the handler; it increments [`Engine::skipped`]
+    /// instead.
+    pub fn run_filtered<C, F>(&mut self, chain_of: C, mut handler: F) -> StopReason
+    where
+        C: Fn(&E) -> Option<(usize, u32)>,
         F: FnMut(&mut Engine<E>, Time, E),
     {
         loop {
@@ -113,6 +171,16 @@ impl<E> Engine<E> {
                 ev.time
             );
             self.now = ev.time;
+            if let Some((chain, epoch)) = chain_of(&ev.event) {
+                let stale = match self.chain_epochs.get(chain) {
+                    Some(&cur) => cur != epoch,
+                    None => false,
+                };
+                if stale {
+                    self.skipped += 1;
+                    continue;
+                }
+            }
             self.processed += 1;
             if self.processed > self.event_limit {
                 return StopReason::EventLimit;
@@ -186,6 +254,50 @@ mod tests {
         eng.run(|e, _, _| {
             e.schedule_at(1.0, Ev::Ping(1));
         });
+    }
+
+    #[test]
+    fn stale_chain_events_are_lazily_deleted() {
+        #[derive(Debug)]
+        enum Cev {
+            Tick { chain: usize, epoch: u32 },
+            Plain,
+        }
+        let chain_of = |ev: &Cev| match ev {
+            Cev::Tick { chain, epoch } => Some((*chain, *epoch)),
+            Cev::Plain => None,
+        };
+        let mut eng: Engine<Cev> = Engine::new();
+        eng.init_chains(2);
+        eng.schedule_at(1.0, Cev::Tick { chain: 0, epoch: 0 });
+        eng.schedule_at(2.0, Cev::Tick { chain: 1, epoch: 0 });
+        eng.schedule_at(3.0, Cev::Plain);
+        // Invalidate chain 1 before running: its queued event is stale.
+        assert_eq!(eng.bump_chain(1), 1);
+        assert_eq!(eng.chain_epoch(1), 1);
+        let mut seen = Vec::new();
+        let reason = eng.run_filtered(chain_of, |_, t, ev| seen.push((t, format!("{ev:?}"))));
+        assert_eq!(reason, StopReason::Drained);
+        // The stale tick was dropped without dispatch; the clock still
+        // advanced past it.
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].0, 1.0);
+        assert_eq!(seen[1].0, 3.0);
+        assert_eq!(eng.skipped(), 1);
+        assert_eq!(eng.processed(), 2);
+        assert_eq!(eng.now(), 3.0);
+    }
+
+    #[test]
+    fn unregistered_chains_are_never_stale() {
+        // Events pointing at chains the engine does not track (e.g.
+        // before init_chains) dispatch normally.
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule_at(1.0, 7);
+        let mut n = 0;
+        eng.run_filtered(|_| Some((99, 3)), |_, _, _| n += 1);
+        assert_eq!(n, 1);
+        assert_eq!(eng.skipped(), 0);
     }
 
     #[test]

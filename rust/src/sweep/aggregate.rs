@@ -393,7 +393,7 @@ mod tests {
     fn small_results() -> crate::sweep::executor::SweepResults {
         let grid = ExperimentGrid::new("agg-test")
             .scheduler(SchedulerKind::Fifo)
-            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .scheduler(SchedulerKind::SizeBased(Default::default()))
             .workload(WorkloadSpec::UniformBatch {
                 jobs: 3,
                 maps_per_job: 2,

@@ -189,7 +189,7 @@ mod tests {
     fn tiny_grid() -> ExperimentGrid {
         ExperimentGrid::new("executor-test")
             .scheduler(SchedulerKind::Fifo)
-            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .scheduler(SchedulerKind::SizeBased(Default::default()))
             .workload(WorkloadSpec::UniformBatch {
                 jobs: 2,
                 maps_per_job: 3,

@@ -232,7 +232,7 @@ impl ExperimentGrid {
             [
                 SchedulerKind::Fifo,
                 SchedulerKind::Fair(Default::default()),
-                SchedulerKind::Hfsp(Default::default()),
+                SchedulerKind::SizeBased(Default::default()),
             ]
             .into_iter()
             .map(|k| (k.label().to_string(), k))
@@ -327,7 +327,7 @@ mod tests {
     fn cell_count_is_cartesian_product() {
         let grid = ExperimentGrid::new("t")
             .scheduler(SchedulerKind::Fifo)
-            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .scheduler(SchedulerKind::SizeBased(Default::default()))
             .workload(WorkloadSpec::Fig7)
             .nodes(&[2, 4, 8])
             .seeds(&[1, 2]);
@@ -423,7 +423,7 @@ mod tests {
     #[test]
     fn error_scenario_wires_sigma_into_hfsp_cells() {
         let grid = ExperimentGrid::new("err")
-            .scheduler(SchedulerKind::Hfsp(Default::default()))
+            .scheduler(SchedulerKind::SizeBased(Default::default()))
             .workload(WorkloadSpec::UniformBatch {
                 jobs: 2,
                 maps_per_job: 2,

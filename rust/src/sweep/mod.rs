@@ -11,7 +11,7 @@
 //!
 //! let grid = ExperimentGrid::new("demo")
 //!     .scheduler(SchedulerKind::Fifo)
-//!     .scheduler(SchedulerKind::Hfsp(HfspConfig::default()))
+//!     .scheduler(SchedulerKind::SizeBased(HfspConfig::default()))
 //!     .workload(WorkloadSpec::Fb(FbWorkload::default()))
 //!     .nodes(&[20, 100])
 //!     .seeds(&[1, 2, 3]);

@@ -11,6 +11,8 @@
 //!     .pair(Gen::f64_range(-1e3, 1e3)), |(a, b)| a + b == b + a);
 //! ```
 
+pub mod scenarios;
+
 use crate::util::rng::{Pcg64, Rng, SeedableRng};
 
 /// A random value generator with an attached shrinker.

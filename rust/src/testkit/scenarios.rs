@@ -1,0 +1,143 @@
+//! Seeded scenario matrix for cross-discipline property tests.
+//!
+//! Every scheduling discipline must emit only **valid action sequences**
+//! whatever the workload and fault environment: no launch on a full
+//! slot, no suspend/kill of a non-running task, no resume off the node
+//! holding the suspended context. The driver validates every action it
+//! applies ([`crate::cluster::driver`]) and counts violations in
+//! `counters.rejected_actions` (debug builds additionally
+//! `debug_assert!`), so the harness reduces to: run the matrix, assert
+//! zero rejections and full completion.
+//!
+//! Used by `tests/properties.rs` across every entry of
+//! [`crate::scheduler::REGISTRY`].
+
+use crate::cluster::driver::{SimConfig, SimOutcome};
+use crate::cluster::ClusterConfig;
+use crate::faults::{FaultConfig, SpeculationConfig};
+use crate::sim::StopReason;
+use crate::sweep::WorkloadSpec;
+use crate::workload::swim::FbWorkload;
+use crate::workload::Workload;
+
+/// One fully specified simulation scenario (workload × faults × seed).
+pub struct Scenario {
+    /// Human-readable id, printed on failure.
+    pub label: String,
+    pub workload: Workload,
+    pub cfg: SimConfig,
+}
+
+/// Fault environments of the matrix. Every scenario must be *completable*:
+/// churn has no permanent losses (a permanently shrinking cluster can
+/// legitimately strand work), and stragglers race speculative clones.
+fn fault_axis() -> Vec<(&'static str, FaultConfig)> {
+    vec![
+        ("none", FaultConfig::disabled()),
+        (
+            "hot-churn",
+            FaultConfig {
+                enabled: true,
+                mtbf_s: 600.0,
+                repair_s: 60.0,
+                permanent_fraction: 0.0,
+                ..FaultConfig::disabled()
+            },
+        ),
+        (
+            "stragglers",
+            FaultConfig {
+                enabled: true,
+                straggler_fraction: 0.3,
+                speculation: SpeculationConfig {
+                    enabled: true,
+                    ..SpeculationConfig::default()
+                },
+                ..FaultConfig::disabled()
+            },
+        ),
+        (
+            "error",
+            FaultConfig {
+                enabled: true,
+                size_error_sigma: 0.5,
+                ..FaultConfig::disabled()
+            },
+        ),
+    ]
+}
+
+/// Workload shapes of the matrix (kept tiny — the matrix is run for
+/// every registered scheduler).
+fn workload_axis() -> Vec<(&'static str, WorkloadSpec)> {
+    vec![
+        (
+            "fb-small",
+            WorkloadSpec::Fb(FbWorkload {
+                n_small: 6,
+                n_medium: 3,
+                n_large: 0,
+                ..Default::default()
+            }),
+        ),
+        ("fig7", WorkloadSpec::Fig7),
+        (
+            "uniform",
+            WorkloadSpec::UniformBatch {
+                jobs: 5,
+                maps_per_job: 4,
+                task_s: 12.0,
+            },
+        ),
+    ]
+}
+
+/// Expand the seeded scenario matrix: workload × fault environment ×
+/// seed, on a small cluster.
+pub fn matrix(seeds: &[u64]) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for (wname, wspec) in workload_axis() {
+        for (fname, faults) in fault_axis() {
+            for &seed in seeds {
+                let workload = wspec.realize(seed);
+                let cfg = SimConfig {
+                    cluster: ClusterConfig {
+                        nodes: 4,
+                        ..Default::default()
+                    },
+                    seed,
+                    faults: faults.clone(),
+                    ..Default::default()
+                };
+                out.push(Scenario {
+                    label: format!("{wname}/{fname}/seed{seed}"),
+                    workload,
+                    cfg,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Assert the action-validity property on one scenario outcome:
+/// no rejected actions, no truncation, every job finished.
+pub fn assert_valid_outcome(outcome: &SimOutcome, expected_jobs: usize, label: &str) {
+    assert_eq!(
+        outcome.counters.rejected_actions, 0,
+        "[{label}] {}: scheduler emitted invalid actions",
+        outcome.scheduler
+    );
+    assert_ne!(
+        outcome.stop,
+        StopReason::EventLimit,
+        "[{label}] {}: run truncated by the event guard",
+        outcome.scheduler
+    );
+    assert_eq!(
+        outcome.sojourn.len(),
+        expected_jobs,
+        "[{label}] {}: not every job finished",
+        outcome.scheduler
+    );
+}

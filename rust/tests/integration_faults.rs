@@ -56,7 +56,7 @@ fn disabled_faults_change_nothing() {
     };
     for kind in [
         SchedulerKind::Fifo,
-        SchedulerKind::Hfsp(Default::default()),
+        SchedulerKind::SizeBased(Default::default()),
     ] {
         let a = run_simulation(&cfg_plain, kind.clone(), &wl);
         let b = run_simulation(&cfg_faultless, kind, &wl);
@@ -76,7 +76,7 @@ fn fault_free_grid_json_is_identical_with_explicit_none_axis() {
     // the "byte-identical when disabled" guarantee.
     let plain = ExperimentGrid::new("axis")
         .scheduler(SchedulerKind::Fifo)
-        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .scheduler(SchedulerKind::SizeBased(Default::default()))
         .workload(small_fb_spec())
         .nodes(&[4])
         .seeds(&[3, 5]);
@@ -95,7 +95,7 @@ fn fault_free_grid_json_is_identical_with_explicit_none_axis() {
 fn faulted_runs_are_deterministic_across_threads() {
     let grid = ExperimentGrid::new("faulted-determinism")
         .scheduler(SchedulerKind::Fifo)
-        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .scheduler(SchedulerKind::SizeBased(Default::default()))
         .workload(small_fb_spec())
         .nodes(&[4])
         .seeds(&[3, 5])
@@ -124,7 +124,7 @@ fn crashes_requeue_tasks_and_jobs_still_finish() {
     for kind in [
         SchedulerKind::Fifo,
         SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(Default::default()),
+        SchedulerKind::SizeBased(Default::default()),
     ] {
         let o = run_simulation(&cfg, kind, &wl);
         assert_eq!(
@@ -210,7 +210,7 @@ fn hfsp_beats_fifo_under_the_default_fault_scenario() {
     // error), across seeds.
     let grid = ExperimentGrid::new("robustness")
         .scheduler(SchedulerKind::Fifo)
-        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .scheduler(SchedulerKind::SizeBased(Default::default()))
         .workload(WorkloadSpec::Fb(FbWorkload {
             n_small: 20,
             n_medium: 8,

@@ -3,7 +3,7 @@
 
 use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::cluster::ClusterConfig;
-use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, PreemptionPrimitive};
+use hfsp::scheduler::core::{EstimatorKind, HfspConfig, PreemptionPrimitive};
 use hfsp::scheduler::SchedulerKind;
 use hfsp::util::rng::{Pcg64, SeedableRng};
 use hfsp::workload::swim::FbWorkload;
@@ -38,7 +38,7 @@ fn fig1_completion_order_is_fsp() {
     let mut c = cfg(1);
     c.cluster.map_slots = 4;
     c.cluster.heartbeat_s = 0.5;
-    let o = run_simulation(&c, SchedulerKind::Hfsp(Default::default()), &wl);
+    let o = run_simulation(&c, SchedulerKind::SizeBased(Default::default()), &wl);
     let f = o.sojourn.by_job();
     let finish = |id: u64| f[&id] + wl.jobs.iter().find(|j| j.id == id).unwrap().submit_time;
     assert!(
@@ -54,10 +54,10 @@ fn fig1_completion_order_is_fsp() {
 fn estimation_error_injection_is_tolerated() {
     // Paper Fig. 6: HFSP is resilient even to alpha = 1.0.
     let wl = small_fb(5).map_only();
-    let exact = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let exact = run_simulation(&cfg(10), SchedulerKind::SizeBased(Default::default()), &wl);
     let noisy = run_simulation(
         &cfg(10),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             error_alpha: 1.0,
             error_seed: 3,
             ..Default::default()
@@ -78,10 +78,10 @@ fn mean_estimator_close_to_lsq_on_skewless_tasks() {
     // §4.1: no within-job skew, so first-order statistics suffice — the
     // two estimators must produce near-identical schedules.
     let wl = small_fb(9);
-    let lsq = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let lsq = run_simulation(&cfg(10), SchedulerKind::SizeBased(Default::default()), &wl);
     let mean = run_simulation(
         &cfg(10),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             estimator: EstimatorKind::Mean,
             ..Default::default()
         }),
@@ -99,7 +99,7 @@ fn hysteresis_bounds_suspended_contexts() {
     c.cluster.reduce_slots = 2;
     let tight = run_simulation(
         &c,
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             suspend_hi: 6,
             suspend_lo: 2,
             ..Default::default()
@@ -108,7 +108,7 @@ fn hysteresis_bounds_suspended_contexts() {
     );
     let loose = run_simulation(
         &c,
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             suspend_hi: 1_000_000,
             suspend_lo: 500_000,
             ..Default::default()
@@ -133,7 +133,7 @@ fn suspended_work_is_never_lost() {
     let mut c = cfg(4);
     c.cluster.map_slots = 1;
     c.cluster.reduce_slots = 2;
-    let o = run_simulation(&c, SchedulerKind::Hfsp(Default::default()), &wl);
+    let o = run_simulation(&c, SchedulerKind::SizeBased(Default::default()), &wl);
     assert!(o.counters.suspends > 0, "scenario must trigger suspensions");
     let measured: f64 = o.timelines.jobs().map(|(_, tl)| tl.slot_seconds()).sum();
     let expected = wl.total_work();
@@ -152,7 +152,7 @@ fn kill_preemption_wastes_work() {
     c.cluster.reduce_slots = 2;
     let o = run_simulation(
         &c,
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             preemption: PreemptionPrimitive::Kill,
             ..Default::default()
         }),
@@ -174,7 +174,7 @@ fn training_slot_cap_is_respected_at_arrival_burst() {
     let wl = small_fb(21);
     let o = run_simulation(
         &cfg(10),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             max_training_slots: 2,
             ..Default::default()
         }),
@@ -188,10 +188,10 @@ fn xi_large_delays_new_jobs() {
     // ξ ≫ 1 treats fresh jobs as huge: under load their sojourns stretch
     // relative to ξ = 1.
     let wl = small_fb(33);
-    let xi1 = run_simulation(&cfg(6), SchedulerKind::Hfsp(Default::default()), &wl);
+    let xi1 = run_simulation(&cfg(6), SchedulerKind::SizeBased(Default::default()), &wl);
     let xi_large = run_simulation(
         &cfg(6),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             xi: 50.0,
             ..Default::default()
         }),
@@ -215,7 +215,7 @@ fn preempt_threshold_zero_still_terminates() {
     let wl = small_fb(40);
     let o = run_simulation(
         &cfg(6),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             preempt_threshold_s: 0.0,
             ..Default::default()
         }),
@@ -228,10 +228,10 @@ fn preempt_threshold_zero_still_terminates() {
 fn delay_timeout_zero_reduces_locality() {
     // With no delay-scheduling patience, non-local launches happen freely.
     let wl = small_fb(44);
-    let patient = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let patient = run_simulation(&cfg(10), SchedulerKind::SizeBased(Default::default()), &wl);
     let impatient = run_simulation(
         &cfg(10),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             locality_timeout_s: 0.0,
             ..Default::default()
         }),

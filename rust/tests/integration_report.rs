@@ -23,7 +23,7 @@ fn outcome() -> hfsp::cluster::driver::SimOutcome {
         },
         ..Default::default()
     };
-    run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl)
+    run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl)
 }
 
 #[test]

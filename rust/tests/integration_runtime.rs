@@ -4,9 +4,9 @@
 //! Requires `make artifacts` (skipped with a loud message otherwise).
 
 use hfsp::runtime::{ArtifactSet, EstimatorExec, MaxMinExec};
-use hfsp::scheduler::hfsp::estimator::{lsq_quantile_phase_size, NativeEstimator, SizeEstimator};
-use hfsp::scheduler::hfsp::virtual_cluster::{maxmin_waterfill, MaxMinBackend};
-use hfsp::scheduler::hfsp::xla_estimator::{XlaMaxMin, XlaSizeEstimator};
+use hfsp::scheduler::core::estimator::{lsq_quantile_phase_size, NativeEstimator, SizeEstimator};
+use hfsp::scheduler::core::virtual_cluster::{maxmin_waterfill, MaxMinBackend};
+use hfsp::scheduler::core::xla_estimator::{XlaMaxMin, XlaSizeEstimator};
 use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;

@@ -74,7 +74,7 @@ fn hfsp_runs_equal_jobs_in_series() {
     // Same workload under HFSP: jobs finish in arrival (id) order, with
     // the first finishing well before the second (serial focus).
     let wl = uniform_batch(2, 40, 30.0);
-    let o = run_simulation(&cfg(2), SchedulerKind::Hfsp(Default::default()), &wl);
+    let o = run_simulation(&cfg(2), SchedulerKind::SizeBased(Default::default()), &wl);
     let f = o.sojourn.by_job();
     assert!(
         f[&1] < f[&2] * 0.8,
@@ -94,7 +94,7 @@ fn hfsp_beats_fair_on_mean_sojourn_under_load() {
     }
     .generate(&mut Pcg64::seed_from_u64(5));
     let fair = run_simulation(&cfg(10), SchedulerKind::Fair(Default::default()), &wl);
-    let hfsp = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg(10), SchedulerKind::SizeBased(Default::default()), &wl);
     assert!(
         hfsp.sojourn.mean() < fair.sojourn.mean() * 1.05,
         "HFSP {} should not lose to FAIR {}",
@@ -113,7 +113,7 @@ fn fifo_worst_for_small_jobs_under_load() {
     }
     .generate(&mut Pcg64::seed_from_u64(6));
     let fifo = run_simulation(&cfg(10), SchedulerKind::Fifo, &wl);
-    let hfsp = run_simulation(&cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg(10), SchedulerKind::SizeBased(Default::default()), &wl);
     assert!(
         fifo.sojourn.mean_class(JobClass::Small)
             > hfsp.sojourn.mean_class(JobClass::Small) * 2.0,
@@ -132,7 +132,7 @@ fn schedulers_agree_on_single_job_runtime() {
     for kind in [
         SchedulerKind::Fifo,
         SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(Default::default()),
+        SchedulerKind::SizeBased(Default::default()),
     ] {
         let o = run_simulation(&cfg(2), kind, &wl);
         results.push(o.sojourn.mean());
@@ -147,11 +147,11 @@ fn schedulers_agree_on_single_job_runtime() {
 
 #[test]
 fn wait_preemption_never_suspends() {
-    use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    use hfsp::scheduler::core::{HfspConfig, PreemptionPrimitive};
     let wl = hfsp::workload::synthetic::fig7_workload();
     let o = run_simulation(
         &cfg(4),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             preemption: PreemptionPrimitive::Wait,
             ..Default::default()
         }),
@@ -164,11 +164,11 @@ fn wait_preemption_never_suspends() {
 
 #[test]
 fn kill_preemption_reruns_tasks() {
-    use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    use hfsp::scheduler::core::{HfspConfig, PreemptionPrimitive};
     let wl = hfsp::workload::synthetic::fig7_workload();
     let o = run_simulation(
         &cfg(4),
-        SchedulerKind::Hfsp(HfspConfig {
+        SchedulerKind::SizeBased(HfspConfig {
             preemption: PreemptionPrimitive::Kill,
             ..Default::default()
         }),
@@ -181,12 +181,12 @@ fn kill_preemption_reruns_tasks() {
 
 #[test]
 fn eager_preemption_beats_wait_on_fig7() {
-    use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+    use hfsp::scheduler::core::{HfspConfig, PreemptionPrimitive};
     let wl = hfsp::workload::synthetic::fig7_workload();
     let run_with = |prim| {
         run_simulation(
             &cfg(4),
-            SchedulerKind::Hfsp(HfspConfig {
+            SchedulerKind::SizeBased(HfspConfig {
                 preemption: prim,
                 ..Default::default()
             }),

@@ -38,7 +38,7 @@ fn all_jobs_finish_under_every_scheduler() {
     for kind in [
         SchedulerKind::Fifo,
         SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(Default::default()),
+        SchedulerKind::SizeBased(Default::default()),
     ] {
         let o = run(kind, 10, 3);
         assert_eq!(o.sojourn.len(), 17, "{}: all jobs must finish", o.scheduler);
@@ -51,7 +51,7 @@ fn identical_seeds_are_bit_reproducible() {
     for kind in [
         SchedulerKind::Fifo,
         SchedulerKind::Fair(Default::default()),
-        SchedulerKind::Hfsp(Default::default()),
+        SchedulerKind::SizeBased(Default::default()),
     ] {
         let a = run(kind.clone(), 10, 7);
         let b = run(kind, 10, 7);
@@ -67,14 +67,14 @@ fn identical_seeds_are_bit_reproducible() {
 
 #[test]
 fn different_seeds_differ() {
-    let a = run(SchedulerKind::Hfsp(Default::default()), 10, 1);
-    let b = run(SchedulerKind::Hfsp(Default::default()), 10, 2);
+    let a = run(SchedulerKind::SizeBased(Default::default()), 10, 1);
+    let b = run(SchedulerKind::SizeBased(Default::default()), 10, 2);
     assert_ne!(a.makespan, b.makespan);
 }
 
 #[test]
 fn sojourn_not_less_than_ideal_service_time() {
-    let o = run(SchedulerKind::Hfsp(Default::default()), 10, 5);
+    let o = run(SchedulerKind::SizeBased(Default::default()), 10, 5);
     let wl = small_workload(5);
     let slots_map = 10.0 * 4.0;
     for rec in o.sojourn.records() {
@@ -100,7 +100,7 @@ fn sojourn_not_less_than_ideal_service_time() {
 
 #[test]
 fn timelines_balance_and_respect_capacity() {
-    let o = run(SchedulerKind::Hfsp(Default::default()), 5, 11);
+    let o = run(SchedulerKind::SizeBased(Default::default()), 5, 11);
     let total_slots = (5 * (4 + 2)) as i64;
     for (_, tl) in o.timelines.jobs() {
         assert!(tl.is_balanced(), "every acquire must have a release");
@@ -152,7 +152,7 @@ fn locality_fraction_high_with_replication_three() {
 #[test]
 fn single_node_cluster_works() {
     let wl = uniform_batch(3, 2, 5.0);
-    let o = run_simulation(&small_cfg(1), SchedulerKind::Hfsp(Default::default()), &wl);
+    let o = run_simulation(&small_cfg(1), SchedulerKind::SizeBased(Default::default()), &wl);
     assert_eq!(o.sojourn.len(), 3);
 }
 
@@ -160,7 +160,7 @@ fn single_node_cluster_works() {
 fn empty_reduce_phase_jobs_complete() {
     // Map-only workload exercises the no-reduce path.
     let wl = small_workload(19).map_only();
-    let o = run_simulation(&small_cfg(10), SchedulerKind::Hfsp(Default::default()), &wl);
+    let o = run_simulation(&small_cfg(10), SchedulerKind::SizeBased(Default::default()), &wl);
     assert_eq!(o.sojourn.len(), wl.len());
 }
 
@@ -168,6 +168,6 @@ fn empty_reduce_phase_jobs_complete() {
 fn map_less_jobs_complete() {
     // Reduce-only jobs (fig7-style) exercise the zero-map path.
     let wl = hfsp::workload::synthetic::fig7_workload();
-    let o = run_simulation(&small_cfg(4), SchedulerKind::Hfsp(Default::default()), &wl);
+    let o = run_simulation(&small_cfg(4), SchedulerKind::SizeBased(Default::default()), &wl);
     assert_eq!(o.sojourn.len(), 5);
 }

@@ -1,7 +1,7 @@
 //! Sweep-engine integration: cartesian expansion, parallel execution,
 //! and byte-identical aggregate determinism.
 
-use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
+use hfsp::scheduler::core::{HfspConfig, PreemptionPrimitive};
 use hfsp::scheduler::SchedulerKind;
 use hfsp::sweep::{run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::workload::swim::FbWorkload;
@@ -18,7 +18,7 @@ fn small_fb_spec() -> WorkloadSpec {
 fn two_by_two_by_two() -> ExperimentGrid {
     ExperimentGrid::new("2x2x2")
         .scheduler(SchedulerKind::Fifo)
-        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .scheduler(SchedulerKind::SizeBased(Default::default()))
         .workload(small_fb_spec())
         .nodes(&[4, 8])
         .seeds(&[3, 5])
@@ -85,7 +85,7 @@ fn same_grid_and_seeds_give_byte_identical_aggregates() {
 #[test]
 fn different_seeds_change_the_aggregate() {
     let base = ExperimentGrid::new("seeded")
-        .scheduler(SchedulerKind::Hfsp(Default::default()))
+        .scheduler(SchedulerKind::SizeBased(Default::default()))
         .workload(small_fb_spec())
         .nodes(&[4]);
     let a = run_grid_threads(&base.clone().seeds(&[1]), 1).aggregate();
@@ -109,7 +109,7 @@ fn labeled_schedulers_group_separately() {
     ] {
         grid = grid.scheduler_labeled(
             prim.name(),
-            SchedulerKind::Hfsp(HfspConfig {
+            SchedulerKind::SizeBased(HfspConfig {
                 preemption: prim,
                 ..Default::default()
             }),

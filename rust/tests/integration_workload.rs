@@ -27,8 +27,8 @@ fn trace_roundtrip_preserves_simulation_results() {
         },
         ..Default::default()
     };
-    let a = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
-    let b = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl2);
+    let a = run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl);
+    let b = run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl2);
     assert_eq!(a.events_processed, b.events_processed);
     let aj = a.sojourn.by_job();
     let bj = b.sojourn.by_job();
@@ -59,7 +59,7 @@ fn same_trace_different_schedulers_see_same_jobs() {
         ..Default::default()
     };
     let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
-    let hfsp = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+    let hfsp = run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl);
     let f = fair.sojourn.by_job();
     let h = hfsp.sojourn.by_job();
     assert_eq!(f.len(), h.len());

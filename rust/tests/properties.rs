@@ -4,8 +4,8 @@
 use hfsp::cluster::driver::{run_simulation, SimConfig};
 use hfsp::cluster::ClusterConfig;
 use hfsp::job::{JobClass, JobSpec};
-use hfsp::scheduler::hfsp::estimator::lsq_quantile_phase_size;
-use hfsp::scheduler::hfsp::virtual_cluster::{maxmin_waterfill, VirtualCluster};
+use hfsp::scheduler::core::estimator::lsq_quantile_phase_size;
+use hfsp::scheduler::core::virtual_cluster::{maxmin_waterfill, VirtualCluster};
 use hfsp::scheduler::SchedulerKind;
 use hfsp::testkit::{self, vec1_of, Gen};
 use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
@@ -214,7 +214,7 @@ fn prop_simulation_completes_all_jobs_any_scheduler() {
             [
                 SchedulerKind::Fifo,
                 SchedulerKind::Fair(Default::default()),
-                SchedulerKind::Hfsp(Default::default()),
+                SchedulerKind::SizeBased(Default::default()),
             ]
             .into_iter()
             .all(|k| {
@@ -241,7 +241,7 @@ fn prop_sojourn_at_least_critical_path() {
                 },
                 ..Default::default()
             };
-            let o = run_simulation(&cfg, SchedulerKind::Hfsp(Default::default()), &wl);
+            let o = run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &wl);
             o.sojourn.records().iter().all(|r| {
                 let spec = wl.jobs.iter().find(|j| j.id == r.job).unwrap();
                 let lm = spec.map_durations.iter().cloned().fold(0.0, f64::max);
@@ -250,4 +250,29 @@ fn prop_sojourn_at_least_critical_path() {
             })
         },
     );
+}
+
+// -- cross-discipline action validity ----------------------------------
+
+/// Every registered discipline — FIFO, FAIR and the whole size-based
+/// family — must emit only valid action sequences (no launch on a full
+/// slot, no suspend/kill of a non-running task, no resume off the
+/// context node) across the seeded scenario matrix, faults included.
+/// The driver counts violations in `rejected_actions` (and
+/// `debug_assert!`s in debug builds, so a violation also aborts here).
+#[test]
+fn prop_every_discipline_emits_valid_actions_across_scenario_matrix() {
+    use hfsp::scheduler::REGISTRY;
+    use hfsp::testkit::scenarios::{assert_valid_outcome, matrix};
+    for entry in REGISTRY {
+        for sc in matrix(&[1, 2]) {
+            let mut kind = entry.make();
+            // Same wiring as sweep cells: the scenario's estimation error
+            // lives inside the size-based training module.
+            kind.apply_fault_error(sc.cfg.faults.effective_error_sigma(), sc.cfg.seed);
+            let o = run_simulation(&sc.cfg, kind, &sc.workload);
+            assert_eq!(o.scheduler, entry.label, "label/registry mismatch");
+            assert_valid_outcome(&o, sc.workload.len(), &sc.label);
+        }
+    }
 }
