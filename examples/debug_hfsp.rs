@@ -1,12 +1,7 @@
 //! Scratch diagnostics for HFSP scheduling behaviour (not part of the
 //! documented example set; kept because it is a handy tracing harness).
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
-use hfsp::cluster::ClusterConfig;
-use hfsp::scheduler::hfsp::HfspConfig;
-use hfsp::scheduler::SchedulerKind;
-use hfsp::util::rng::{Pcg64, SeedableRng};
-use hfsp::workload::swim::FbWorkload;
+use hfsp::prelude::*;
 
 fn main() {
     hfsp::util::logging::init_from_env();
@@ -18,8 +13,14 @@ fn main() {
         ..Default::default()
     };
     let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
-    let fair = run_simulation(&cfg, SchedulerKind::Fair(Default::default()), &wl);
-    let hfsp = run_simulation(&cfg, SchedulerKind::SizeBased(HfspConfig::default()), &wl);
+    let run = |kind: SchedulerKind| {
+        Simulation::new(cfg.clone())
+            .scheduler(kind)
+            .workload(wl.as_source())
+            .run()
+    };
+    let fair = run(SchedulerKind::Fair(Default::default()));
+    let hfsp = run(SchedulerKind::SizeBased(HfspConfig::default()));
     println!(
         "FAIR mean {:.1}  HFSP mean {:.1}; hfsp counters: suspends {} resumes {} swap-ins {} stale {}",
         fair.sojourn.mean(),

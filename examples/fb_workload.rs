@@ -14,13 +14,9 @@
 //!
 //! The run is recorded in EXPERIMENTS.md ("End-to-end validation").
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
-use hfsp::job::JobClass;
+use hfsp::prelude::*;
 use hfsp::report::table;
-use hfsp::scheduler::hfsp::{EstimatorKind, HfspConfig, MaxMinKind};
-use hfsp::scheduler::SchedulerKind;
-use hfsp::util::rng::{Pcg64, SeedableRng};
-use hfsp::workload::swim::FbWorkload;
+use hfsp::scheduler::core::{EstimatorKind, MaxMinKind};
 use std::path::PathBuf;
 
 fn main() {
@@ -68,7 +64,10 @@ fn main() {
     let mut hfsp_mean = f64::NAN;
     let mut fifo_mean = f64::NAN;
     for (label, kind) in kinds {
-        let o = run_simulation(&cfg, kind, &wl);
+        let o = Simulation::new(cfg.clone())
+            .scheduler(kind)
+            .workload(wl.as_source())
+            .run();
         if label == "HFSP" {
             hfsp_mean = o.sojourn.mean();
         }

@@ -5,10 +5,7 @@
 //! cargo run --release --example fsp_intuition
 //! ```
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
-use hfsp::cluster::ClusterConfig;
-use hfsp::scheduler::hfsp::HfspConfig;
-use hfsp::scheduler::SchedulerKind;
+use hfsp::prelude::*;
 use hfsp::workload::synthetic::{fig1_workload, fig2_workload};
 
 fn main() {
@@ -40,7 +37,10 @@ fn main() {
             SchedulerKind::Fair(Default::default()),
             SchedulerKind::SizeBased(HfspConfig::default()),
         ] {
-            let o = run_simulation(&cfg, kind, &wl);
+            let o = Simulation::new(cfg.clone())
+                .scheduler(kind)
+                .workload(wl.as_source())
+                .run();
             println!(
                 "--- {} (mean sojourn {:.1} s; completion order by finish time) ---",
                 o.scheduler,

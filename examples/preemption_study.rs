@@ -9,10 +9,7 @@
 //! cargo run --release --example preemption_study
 //! ```
 
-use hfsp::cluster::driver::{run_simulation, SimConfig};
-use hfsp::cluster::ClusterConfig;
-use hfsp::scheduler::hfsp::{HfspConfig, PreemptionPrimitive};
-use hfsp::scheduler::SchedulerKind;
+use hfsp::prelude::*;
 use hfsp::workload::synthetic::fig7_workload;
 
 fn main() {
@@ -36,14 +33,13 @@ fn main() {
         PreemptionPrimitive::Wait,
         PreemptionPrimitive::Kill,
     ] {
-        let o = run_simulation(
-            &cfg,
-            SchedulerKind::SizeBased(HfspConfig {
+        let o = Simulation::new(cfg.clone())
+            .scheduler(SchedulerKind::SizeBased(HfspConfig {
                 preemption: prim,
                 ..Default::default()
-            }),
-            &wl,
-        );
+            }))
+            .workload(wl.as_source())
+            .run();
         println!(
             "=== {} — mean sojourn {:.1} min ===",
             prim.name(),

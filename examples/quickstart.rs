@@ -1,5 +1,5 @@
 //! Quickstart: simulate a small FB-like workload under HFSP and print
-//! sojourn statistics.
+//! sojourn statistics, using the `Simulation` session builder.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -33,7 +33,11 @@ fn main() {
         SchedulerKind::Fair(Default::default()),
         SchedulerKind::SizeBased(HfspConfig::default()),
     ] {
-        let outcome = run_simulation(&cfg, kind, &workload);
+        // One session per scheduler: same config, same workload stream.
+        let outcome = Simulation::new(cfg.clone())
+            .scheduler(kind)
+            .workload(workload.as_source())
+            .run();
         println!(
             "{:<5} mean sojourn {:>8.1} s | locality {:>5.1}% | makespan {:>7.0} s | {:>6} events in {:>5.0} ms",
             outcome.scheduler,

@@ -1,9 +1,15 @@
 //! The JobTracker: event-loop glue between the DES engine, the cluster
-//! model and the pluggable scheduler.
+//! model, the pluggable scheduler — and, since the session redesign, a
+//! pull-based workload source and a stack of streaming probes.
 //!
 //! Responsibilities (mirroring Hadoop's JobTracker, §2.2 of the paper):
 //!
-//! * deliver job arrivals from the workload;
+//! * pull job arrivals from the [`WorkloadSource`], keeping only the
+//!   current same-instant arrival batch plus one look-ahead job in
+//!   memory — open sessions never materialize their workload, so
+//!   working state (job table, event queue) is O(active jobs); what
+//!   grows with the total job count is only the built-in sojourn
+//!   statistic, one compact record (~100 B) per finished job;
 //! * drive per-node heartbeats (period [`ClusterConfig::heartbeat_s`],
 //!   staggered across nodes) and apply the scheduler's [`Action`]s;
 //! * track task attempts, including the extended preemption state machine
@@ -14,8 +20,14 @@
 //!   running and suspended tasks back into the pending queue, straggler
 //!   nodes stretch service times, and speculative task clones race their
 //!   originals (first finish wins);
-//! * collect metrics: sojourn times, data locality, slot timelines,
-//!   fault statistics.
+//! * push every observable transition into the [`ProbeStack`] — the
+//!   built-in probes collect the classic metrics (sojourn, locality,
+//!   timelines, action counters, fault stats) and user probes get the
+//!   same stream; a probe can end the session early
+//!   ([`Probe::halt_requested`](crate::metrics::Probe::halt_requested));
+//! * evict finished jobs from the job table (schedulers drop their own
+//!   per-job state in `on_job_finished`, so the table only ever holds
+//!   *active* jobs — the other half of the O(active) memory story).
 //!
 //! Completion events are guarded by per-task **epochs**: every task state
 //! transition bumps the epoch, so a completion scheduled before a
@@ -26,27 +38,41 @@
 //! engine ([`Engine::bump_chain`]), which lazily deletes stale chain
 //! events at pop time instead of dispatching dead events into this
 //! driver; skips are counted in [`SimOutcome::events_skipped`].
+//!
+//! ## Entry points
+//!
+//! [`run_session`] is the primitive: config + scheduler + source +
+//! probes. The ergonomic spelling is the
+//! [`Simulation`](crate::session::Simulation) builder. [`run_simulation`]
+//! survives as the closed-workload compat shim — it streams the given
+//! [`Workload`] through a [`ClosedSource`] and produces outcomes
+//! byte-identical to the historical batch path (same event order, same
+//! event count, same statistics).
 
 use crate::cluster::{Cluster, ClusterConfig, Hdfs};
-use crate::faults::{pick_speculation_candidate, FaultConfig, FaultPlan, FaultStats};
 use crate::faults::plan::FaultEventKind;
+use crate::faults::{pick_speculation_candidate, FaultConfig, FaultPlan, FaultStats};
 use crate::job::task::NodeId;
-use crate::job::{Job, JobId, Phase, TaskRef};
+use crate::job::{Job, JobId, JobSpec, Phase, TaskRef};
+use crate::metrics::probe::{KillCause, Probe, ProbeEvent, ProbeStack};
 use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
 use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
 use crate::sim::{Engine, StopReason, Time};
 use crate::util::config::Config;
-use crate::util::rng::{RngStreams, StreamId};
+use crate::util::rng::{Pcg64, RngStreams, StreamId};
 use crate::util::timeline::TimelineSet;
-use crate::workload::Workload;
-use std::collections::BTreeMap;
+use crate::workload::{ClosedSource, Workload, WorkloadSource};
+use std::collections::{BTreeMap, VecDeque};
+
+pub use crate::metrics::probe::ActionCounters;
 
 /// Simulation-level configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub cluster: ClusterConfig,
-    /// Master seed (HDFS placement, the fault plan and any scheduler
-    /// randomness derive from it, through independent named substreams).
+    /// Master seed (HDFS placement, the fault plan, open-arrival
+    /// generation and any scheduler randomness derive from it, through
+    /// independent named substreams).
     pub seed: u64,
     /// The paper's Δ parameter: a reduce task reports its progress after
     /// Δ seconds of execution, bounding estimator training time (§3.2.1;
@@ -106,27 +132,12 @@ impl SimConfig {
     }
 }
 
-/// Counters over preemption primitives and scheduling activity.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ActionCounters {
-    pub launches: u64,
-    pub suspends: u64,
-    pub resumes: u64,
-    pub kills: u64,
-    pub swap_ins: u64,
-    pub heartbeats: u64,
-    pub stale_completions: u64,
-    pub rejected_actions: u64,
-    /// Speculative task clones launched (fault subsystem).
-    pub speculative_launches: u64,
-    /// Speculative races won by the clone (original discarded).
-    pub speculative_wins: u64,
-}
-
-/// Everything a simulation run produces.
+/// Everything a simulation run produces. Assembled from the session's
+/// built-in probes; attach custom [`Probe`]s for anything beyond these.
 #[derive(Debug)]
 pub struct SimOutcome {
     pub scheduler: &'static str,
+    /// The workload source's display name.
     pub workload: String,
     pub sojourn: SojournStats,
     pub locality: LocalityStats,
@@ -143,6 +154,23 @@ pub struct SimOutcome {
     /// Stale heartbeat-chain events dropped by the engine's lazy
     /// deletion (never dispatched into the driver); 0 on fault-free runs.
     pub events_skipped: u64,
+    /// Jobs that entered the system (== `sojourn.len()` when the run
+    /// drained; larger on probe-halted or truncated sessions).
+    pub jobs_arrived: usize,
+    /// High-water mark of concurrently tracked (arrived, unfinished)
+    /// jobs. The session's *working* state (job table with per-task
+    /// runtimes, event queue) scales with this rather than with the
+    /// total job count; the per-finished-job sojourn records in
+    /// [`SimOutcome::sojourn`] are the one component that grows with
+    /// the job count (compactly — no task vectors).
+    pub peak_live_jobs: usize,
+    /// A probe requested the early stop (steady-state detection etc.).
+    pub halted_by_probe: bool,
+    /// The workload stream was invalid (e.g. a duplicate job id from a
+    /// source that cannot pre-validate, like a streamed trace): the
+    /// session halted immediately and the results are partial. Callers
+    /// should treat `Some` as an error.
+    pub stream_error: Option<String>,
     /// Why the event loop stopped. [`StopReason::EventLimit`] means the
     /// results are truncated — callers should treat it as an error.
     pub stop: StopReason,
@@ -170,7 +198,9 @@ impl SimOutcome {
 /// Simulator events.
 #[derive(Clone, Copy, Debug)]
 enum Ev {
-    Arrival(usize),
+    /// The next queued arrival fires; its spec sits at the head of the
+    /// driver's pending-arrival batch.
+    Arrival,
     Heartbeat { node: NodeId, epoch: u32 },
     TaskDone { task: TaskRef, epoch: u64 },
     ReduceProgress { task: TaskRef, epoch: u64, delta: f64 },
@@ -198,23 +228,33 @@ struct SpecAttempt {
     speed: f64,
 }
 
-struct Driver<'a> {
-    workload: &'a Workload,
+struct Driver<'s, 'w, 'p> {
+    // -- arrival feed ---------------------------------------------------
+    source: &'s mut (dyn WorkloadSource + 'w),
+    arrival_rng: Pcg64,
+    /// Specs whose `Ev::Arrival` events are queued, in firing order —
+    /// always one same-instant batch.
+    pending_arrivals: VecDeque<JobSpec>,
+    /// First job of the *next* batch, pulled while delimiting the
+    /// current one.
+    lookahead: Option<JobSpec>,
+    /// The source returned `None`; no further arrivals exist.
+    source_done: bool,
+    arrived_jobs: usize,
+    // -- cluster & scheduler --------------------------------------------
     jobs: BTreeMap<JobId, Job>,
     cluster: Cluster,
     hdfs: Hdfs,
     scheduler: Box<dyn Scheduler>,
-    sojourn: SojournStats,
-    locality: LocalityStats,
-    timelines: TimelineSet,
-    counters: ActionCounters,
+    probes: ProbeStack<'p>,
     finished_jobs: usize,
+    peak_live_jobs: usize,
+    halted_by_probe: bool,
+    stream_error: Option<String>,
     delta: f64,
-    record_timelines: bool,
     max_sim_time: f64,
     // -- fault subsystem state ------------------------------------------
     faults_cfg: FaultConfig,
-    fstats: FaultStats,
     /// Per-node work rate (1.0 = nominal); all ones without faults.
     speeds: Vec<f64>,
     /// Any node slower than nominal (gates the speculation scan).
@@ -227,12 +267,33 @@ struct Driver<'a> {
 }
 
 /// Run `workload` under `kind` on the cluster described by `cfg`.
+///
+/// Compat shim over [`run_session`]: streams the closed workload
+/// through a [`ClosedSource`] with no user probes. Outcomes are
+/// byte-identical to the historical batch entry point.
 pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload) -> SimOutcome {
+    let mut source = ClosedSource::of(workload);
+    run_session(cfg, kind, &mut source, Vec::new())
+}
+
+/// Run one simulation session: pull jobs from `source`, schedule them
+/// under `kind`, stream observations through the built-in probes plus
+/// `user_probes`. The primitive behind both [`run_simulation`] and the
+/// [`Simulation`](crate::session::Simulation) builder.
+pub fn run_session<'s, 'w, 'p>(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    source: &'s mut (dyn WorkloadSource + 'w),
+    user_probes: Vec<&'p mut dyn Probe>,
+) -> SimOutcome {
     let t0 = std::time::Instant::now();
+    let workload_name = source.name().to_string();
     // Named substreams, derived eagerly in fixed order: enabling faults
-    // (stream 1) can never shift HDFS placement (stream 0) draws.
+    // (stream 1) or pulling open arrivals (stream 3) can never shift
+    // HDFS placement (stream 0) draws.
     let streams = RngStreams::new(cfg.seed);
     let hdfs_rng = streams.stream(StreamId::Placement);
+    let arrival_rng = streams.stream(StreamId::Arrivals);
     let scheduler = kind.build();
     let scheduler_name = scheduler.name();
 
@@ -259,21 +320,24 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
     }
 
     let mut driver = Driver {
-        workload,
+        source,
+        arrival_rng,
+        pending_arrivals: VecDeque::new(),
+        lookahead: None,
+        source_done: false,
+        arrived_jobs: 0,
         jobs: BTreeMap::new(),
         cluster: Cluster::new(cfg.cluster),
         hdfs: Hdfs::new(cfg.cluster.nodes, cfg.cluster.replication, hdfs_rng),
         scheduler,
-        sojourn: SojournStats::new(),
-        locality: LocalityStats::default(),
-        timelines: TimelineSet::default(),
-        counters: ActionCounters::default(),
+        probes: ProbeStack::new(cfg.record_timelines, fstats, user_probes),
         finished_jobs: 0,
+        peak_live_jobs: 0,
+        halted_by_probe: false,
+        stream_error: None,
         delta: cfg.reduce_progress_delta_s,
-        record_timelines: cfg.record_timelines,
         max_sim_time: cfg.max_sim_time_s,
         faults_cfg: cfg.faults.clone(),
-        fstats,
         has_stragglers: speeds.iter().any(|&s| s < 1.0),
         speeds,
         spec: BTreeMap::new(),
@@ -283,10 +347,9 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
     let mut engine: Engine<Ev> = Engine::new().with_event_limit(cfg.event_limit);
     // One heartbeat epoch chain per node (lazy deletion of stale chains).
     engine.init_chains(cfg.cluster.nodes);
-    // Job arrivals.
-    for (i, job) in workload.jobs.iter().enumerate() {
-        engine.schedule_at(job.submit_time, Ev::Arrival(i));
-    }
+    // The first arrival batch (scheduled before the heartbeats so the
+    // initial event sequence matches the historical batch path).
+    driver.schedule_next_batch(&mut engine);
     // Staggered heartbeats: node i phase-shifted by i/n of a period, so
     // a 100-node cluster probes the scheduler ~every 30 ms of simulated
     // time instead of in 3 s bursts.
@@ -314,26 +377,37 @@ pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, workload: &Workload)
             cfg.event_limit
         );
     }
-    if driver.finished_jobs != workload.len() {
+    if !driver.drained() && !driver.halted_by_probe && driver.stream_error.is_none() {
         log::warn!(
-            "simulation ended with {}/{} jobs finished (scheduler={})",
+            "simulation ended with {}/{} arrived jobs finished (scheduler={})",
             driver.finished_jobs,
-            workload.len(),
+            driver.arrived_jobs,
             scheduler_name
         );
     }
 
+    let halted_by_probe = driver.halted_by_probe;
+    let stream_error = driver.stream_error.take();
+    let jobs_arrived = driver.arrived_jobs;
+    let peak_live_jobs = driver.peak_live_jobs;
+    let (sojourn, locality, timelines, counters, faults) =
+        driver.probes.into_parts(engine.now());
+
     SimOutcome {
         scheduler: scheduler_name,
-        workload: workload.name.clone(),
-        sojourn: driver.sojourn,
-        locality: driver.locality,
-        timelines: driver.timelines,
-        counters: driver.counters,
-        faults: driver.fstats,
+        workload: workload_name,
+        sojourn,
+        locality,
+        timelines,
+        counters,
+        faults,
         makespan: engine.now(),
         events_processed: engine.processed(),
         events_skipped: engine.skipped(),
+        jobs_arrived,
+        peak_live_jobs,
+        halted_by_probe,
+        stream_error,
         stop: reason,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     }
@@ -348,10 +422,10 @@ fn heartbeat_chain(ev: &Ev) -> Option<(usize, u32)> {
     }
 }
 
-impl<'a> Driver<'a> {
+impl Driver<'_, '_, '_> {
     fn handle(&mut self, eng: &mut Engine<Ev>, now: Time, ev: Ev) {
         match ev {
-            Ev::Arrival(i) => self.on_arrival(now, i),
+            Ev::Arrival => self.on_arrival(eng, now),
             Ev::Heartbeat { node, epoch } => self.on_heartbeat(eng, now, node, epoch),
             Ev::TaskDone { task, epoch } => self.on_task_done(eng, now, task, epoch),
             Ev::ReduceProgress { task, epoch, delta } => {
@@ -361,33 +435,150 @@ impl<'a> Driver<'a> {
             Ev::NodeRecover(node) => self.on_node_recover(eng, now, node),
             Ev::SpecDone { task, id } => self.on_spec_done(now, task, id),
         }
-        if self.finished_jobs == self.workload.len() {
+        if self.drained() {
+            eng.halt();
+        } else if self.probes.take_halt() {
+            self.halted_by_probe = true;
             eng.halt();
         }
     }
 
-    fn on_arrival(&mut self, now: Time, index: usize) {
-        let spec = self.workload.jobs[index].clone();
+    /// No arrivals remain (source exhausted, none queued) and every
+    /// arrived job finished — the session is complete.
+    fn drained(&self) -> bool {
+        self.source_done
+            && self.lookahead.is_none()
+            && self.pending_arrivals.is_empty()
+            && self.finished_jobs == self.arrived_jobs
+    }
+
+    /// The source reported exhaustion: record it, and pick up any
+    /// error that truncated the stream (a partial trace replay must
+    /// not masquerade as a clean run — it surfaces in
+    /// [`SimOutcome::stream_error`], which the CLI treats as fatal).
+    fn finish_source(&mut self) {
+        self.source_done = true;
+        if self.stream_error.is_none() {
+            self.stream_error = self.source.take_error();
+        }
+    }
+
+    /// Pull the next same-instant arrival batch from the source and
+    /// schedule one `Ev::Arrival` per job. Pulling runs one job past
+    /// the batch to find its end; that look-ahead seeds the next call.
+    /// Scheduling whole instant-batches (rather than strictly one
+    /// arrival) preserves the historical event order for workloads with
+    /// simultaneous submissions, at O(batch + 1) memory.
+    fn schedule_next_batch(&mut self, eng: &mut Engine<Ev>) {
+        if self.source_done {
+            return;
+        }
+        let first = match self.lookahead.take() {
+            Some(job) => job,
+            None => match self.source.next_job(&mut self.arrival_rng) {
+                Some(job) => job,
+                None => {
+                    self.finish_source();
+                    return;
+                }
+            },
+        };
+        let clamp = |job: JobSpec, t: Time| -> JobSpec {
+            if job.submit_time < t {
+                log::warn!(
+                    "workload source emitted job {} out of order ({} < {}); clamping",
+                    job.id,
+                    job.submit_time,
+                    t
+                );
+                let mut job = job;
+                job.submit_time = t;
+                job
+            } else {
+                job
+            }
+        };
+        let first = clamp(first, eng.now());
+        let batch_time = first.submit_time;
+        // Priority scheduling: the batch driver scheduled all arrivals
+        // up front with the lowest sequence numbers, so an arrival won
+        // every same-instant tie (e.g. against a node's heartbeat at
+        // exactly the submit time). A lazily pulled arrival must keep
+        // winning those ties for the compat shim to stay byte-identical.
+        eng.schedule_at_priority(batch_time, Ev::Arrival);
+        self.pending_arrivals.push_back(first);
+        loop {
+            match self.source.next_job(&mut self.arrival_rng) {
+                None => {
+                    self.finish_source();
+                    break;
+                }
+                Some(job) if job.submit_time <= batch_time => {
+                    let job = clamp(job, batch_time);
+                    eng.schedule_at_priority(batch_time, Ev::Arrival);
+                    self.pending_arrivals.push_back(job);
+                }
+                Some(job) => {
+                    self.lookahead = Some(job);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, eng: &mut Engine<Ev>, now: Time) {
+        let spec = self
+            .pending_arrivals
+            .pop_front()
+            .expect("arrival event without a queued spec");
         let id = spec.id;
+        // A colliding id would clobber a live job's state and leave the
+        // session unable to drain (finished can never catch up with
+        // arrived): fail fast instead. Closed sources pre-validate in
+        // `Workload::new`; this guards streamed sources (e.g. a
+        // `TraceSource`, which cannot check ids in O(1) memory).
+        // Collisions with an already-*finished* (evicted) id are not
+        // detectable here — the uniqueness contract still covers them.
+        if self.jobs.contains_key(&id) {
+            let msg = format!("duplicate job id {id} in workload stream");
+            log::error!("{msg}; halting the session");
+            self.stream_error = Some(msg);
+            eng.halt();
+            return;
+        }
+        self.arrived_jobs += 1;
         self.hdfs.place_job(id, spec.n_maps());
+        self.probes.emit(
+            now,
+            &ProbeEvent::JobArrived {
+                job: id,
+                n_maps: spec.n_maps(),
+                n_reduces: spec.n_reduces(),
+            },
+        );
         let job = Job::new(spec);
-        // Degenerate zero-task job: finishes instantly.
+        // Degenerate zero-task job: finishes instantly, never enters the
+        // job table or the scheduler.
         if job.is_finished() {
             let mut job = job;
             job.finish_time = Some(now);
-            self.record_finish(&job);
-            self.jobs.insert(id, job);
+            self.record_finish(now, &job);
             self.finished_jobs += 1;
-            return;
+        } else {
+            self.jobs.insert(id, job);
+            self.peak_live_jobs = self.peak_live_jobs.max(self.jobs.len());
+            let view = SchedView {
+                jobs: &self.jobs,
+                cluster: &self.cluster,
+                hdfs: &self.hdfs,
+                now,
+            };
+            self.scheduler.on_job_arrival(&view, id);
         }
-        self.jobs.insert(id, job);
-        let view = SchedView {
-            jobs: &self.jobs,
-            cluster: &self.cluster,
-            hdfs: &self.hdfs,
-            now,
-        };
-        self.scheduler.on_job_arrival(&view, id);
+        // The batch is exhausted: fetch and schedule the next one.
+        if self.pending_arrivals.is_empty() {
+            self.schedule_next_batch(eng);
+        }
     }
 
     fn on_heartbeat(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId, epoch: u32) {
@@ -399,7 +590,7 @@ impl<'a> Driver<'a> {
         if self.cluster.node(node).is_down() {
             return;
         }
-        self.counters.heartbeats += 1;
+        self.probes.emit(now, &ProbeEvent::Heartbeat { node });
         if now > self.max_sim_time {
             log::error!("simulated time exceeded max_sim_time_s; halting");
             eng.halt();
@@ -425,8 +616,8 @@ impl<'a> Driver<'a> {
         if self.faults_cfg.speculation_active() && self.has_stragglers {
             self.maybe_speculate(eng, now, node);
         }
-        // Keep heartbeating while work remains.
-        if self.finished_jobs != self.workload.len() {
+        // Keep heartbeating while work remains (or may still arrive).
+        if !self.drained() {
             eng.schedule_in(
                 self.cluster.config().heartbeat_s,
                 Ev::Heartbeat { node, epoch },
@@ -445,19 +636,19 @@ impl<'a> Driver<'a> {
 
     fn do_launch(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef, node: NodeId) {
         let Some(job) = self.jobs.get(&task.job) else {
-            self.reject(task, "launch of unknown job");
+            self.reject(now, task, "launch of unknown job");
             return;
         };
         if !job.task(task).state.is_pending() {
-            self.reject(task, "launch of non-pending task");
+            self.reject(now, task, "launch of non-pending task");
             return;
         }
         if task.phase == Phase::Reduce && !job.map_phase_done() {
-            self.reject(task, "launch of reduce before map phase done");
+            self.reject(now, task, "launch of reduce before map phase done");
             return;
         }
         if !self.cluster.node(node).has_free_slot(task.phase) {
-            self.reject(task, "launch without free slot");
+            self.reject(now, task, "launch without free slot");
             return;
         }
         // Ground-truth locality (map tasks only; reduces are always
@@ -467,9 +658,7 @@ impl<'a> Driver<'a> {
         self.mark_swapped(&swapped);
         let speed = self.speeds[node];
         let job = self.jobs.get_mut(&task.job).unwrap();
-        if job.task(task).attempts > 0 {
-            self.fstats.re_executed_tasks += 1;
-        }
+        let re_execution = job.task(task).attempts > 0;
         let delay = job.task_mut(task).launch(node, now, local, speed);
         job.counts_mut(task.phase).on_launch();
         let epoch = job.task(task).epoch;
@@ -486,22 +675,27 @@ impl<'a> Driver<'a> {
                 },
             );
         }
-        if self.record_timelines {
-            self.timelines.acquire(task.job, now);
-        }
-        self.counters.launches += 1;
+        self.probes.emit(
+            now,
+            &ProbeEvent::TaskLaunched {
+                task,
+                node,
+                local,
+                re_execution,
+            },
+        );
     }
 
     fn do_suspend(&mut self, now: Time, task: TaskRef) {
         // Suspending the original ends any speculative race.
         self.cancel_spec(task, now);
         let Some(job) = self.jobs.get(&task.job) else {
-            self.reject(task, "suspend of unknown job");
+            self.reject(now, task, "suspend of unknown job");
             return;
         };
         let Some(node) = job.task(task).state.node().filter(|_| job.task(task).state.is_running())
         else {
-            self.reject(task, "suspend of non-running task");
+            self.reject(now, task, "suspend of non-running task");
             return;
         };
         // Suspension itself is context-count neutral (running → parked);
@@ -516,30 +710,27 @@ impl<'a> Driver<'a> {
         let job = self.jobs.get_mut(&task.job).unwrap();
         job.task_mut(task).suspend(now);
         job.counts_mut(task.phase).on_suspend();
-        if self.record_timelines {
-            self.timelines.release(task.job, now);
-        }
-        self.counters.suspends += 1;
+        self.probes
+            .emit(now, &ProbeEvent::TaskSuspended { task, node });
     }
 
     fn do_resume(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef) {
         let Some(job) = self.jobs.get(&task.job) else {
-            self.reject(task, "resume of unknown job");
+            self.reject(now, task, "resume of unknown job");
             return;
         };
         if !job.task(task).state.is_suspended() {
-            self.reject(task, "resume of non-suspended task");
+            self.reject(now, task, "resume of non-suspended task");
             return;
         }
         let node = job.task(task).state.node().unwrap();
         if !self.cluster.node(node).has_free_slot(task.phase) {
-            self.reject(task, "resume without free slot on context node");
+            self.reject(now, task, "resume without free slot on context node");
             return;
         }
         let (was_swapped, swapped_others) = self.cluster.node_mut(node).resume_task(task);
         self.mark_swapped(&swapped_others);
         let swap_delay = if was_swapped {
-            self.counters.swap_ins += 1;
             self.cluster.node(node).swap_in_delay()
         } else {
             0.0
@@ -550,17 +741,21 @@ impl<'a> Driver<'a> {
         job.counts_mut(task.phase).on_resume();
         let epoch = job.task(task).epoch;
         eng.schedule_in(delay, Ev::TaskDone { task, epoch });
-        if self.record_timelines {
-            self.timelines.acquire(task.job, now);
-        }
-        self.counters.resumes += 1;
+        self.probes.emit(
+            now,
+            &ProbeEvent::TaskResumed {
+                task,
+                node,
+                from_swap: was_swapped,
+            },
+        );
     }
 
     fn do_kill(&mut self, now: Time, task: TaskRef) {
         // Killing the original ends any speculative race.
         self.cancel_spec(task, now);
         let Some(job) = self.jobs.get_mut(&task.job) else {
-            self.reject(task, "kill of unknown job");
+            self.reject(now, task, "kill of unknown job");
             return;
         };
         let state = job.task(task).state;
@@ -570,23 +765,34 @@ impl<'a> Driver<'a> {
             self.cluster.node_mut(node).finish_task(task);
             job.task_mut(task).kill(now);
             job.counts_mut(task.phase).on_kill_running();
-            self.fstats.wasted_work_s += lost;
-            if self.record_timelines {
-                self.timelines.release(task.job, now);
-            }
+            self.probes.emit(now, &ProbeEvent::WorkWasted { seconds: lost });
+            self.probes.emit(
+                now,
+                &ProbeEvent::TaskKilled {
+                    task,
+                    running: true,
+                    cause: KillCause::Preemption,
+                },
+            );
         } else if state.is_suspended() {
             let node = state.node().unwrap();
             let lost = job.task(task).work_done(now);
             self.cluster.node_mut(node).drop_suspended(task);
             job.task_mut(task).kill(now);
             job.counts_mut(task.phase).on_kill_suspended();
-            self.fstats.wasted_work_s += lost;
+            self.probes.emit(now, &ProbeEvent::WorkWasted { seconds: lost });
+            self.probes.emit(
+                now,
+                &ProbeEvent::TaskKilled {
+                    task,
+                    running: false,
+                    cause: KillCause::Preemption,
+                },
+            );
             // Slot already released at suspension time.
         } else {
-            self.reject(task, "kill of non-active task");
-            return;
+            self.reject(now, task, "kill of non-active task");
         }
-        self.counters.kills += 1;
     }
 
     fn mark_swapped(&mut self, tasks: &[TaskRef]) {
@@ -597,23 +803,26 @@ impl<'a> Driver<'a> {
         }
     }
 
-    fn reject(&mut self, task: TaskRef, why: &str) {
+    fn reject(&mut self, now: Time, task: TaskRef, why: &str) {
         // A rejected action is a scheduler bug in tests, but production
         // behaviour is to drop it and continue.
         log::warn!("rejected action on {task}: {why}");
-        self.counters.rejected_actions += 1;
+        self.probes.emit(now, &ProbeEvent::ActionRejected { task });
         debug_assert!(false, "rejected action on {task}: {why}");
     }
 
     fn on_task_done(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef, epoch: u64) {
         let _ = eng;
         let Some(job) = self.jobs.get_mut(&task.job) else {
+            // The job finished (and was evicted) while this completion
+            // was in flight — a killed attempt's stale event.
+            self.probes.emit(now, &ProbeEvent::StaleCompletion { task });
             return;
         };
         {
             let rt = job.task(task);
             if !rt.state.is_running() || rt.epoch != epoch {
-                self.counters.stale_completions += 1;
+                self.probes.emit(now, &ProbeEvent::StaleCompletion { task });
                 return;
             }
         }
@@ -625,30 +834,45 @@ impl<'a> Driver<'a> {
         job.task_mut(task).complete(now);
         job.counts_mut(task.phase).on_complete();
         self.cluster.node_mut(node).finish_task(task);
-        self.finish_common(now, task, observed);
+        self.finish_common(now, task, node, observed, false);
     }
 
     /// Post-completion bookkeeping shared by ordinary completions and
-    /// speculative-clone wins: job progress, metrics, scheduler
-    /// callbacks, job-finish accounting. The task is already `Done` and
-    /// its slot released.
-    fn finish_common(&mut self, now: Time, task: TaskRef, observed: f64) {
+    /// speculative-clone wins: job progress, probe events, scheduler
+    /// callbacks, job-finish accounting (including eviction from the
+    /// job table). The task is already `Done` and its slot released;
+    /// `node` is the node that produced the output.
+    fn finish_common(
+        &mut self,
+        now: Time,
+        task: TaskRef,
+        node: NodeId,
+        observed: f64,
+        speculative: bool,
+    ) {
         let job = self.jobs.get_mut(&task.job).unwrap();
         match task.phase {
             Phase::Map => job.maps_done += 1,
             Phase::Reduce => job.reduces_done += 1,
         }
-        if task.phase == Phase::Map {
-            self.locality.record(job.task(task).local);
-        }
-        if self.record_timelines {
-            self.timelines.release(task.job, now);
-        }
+        let local = job.task(task).local;
         let finished = job.is_finished();
         if finished {
             job.finish_time = Some(now);
         }
-        // Scheduler callbacks observe post-completion state.
+        self.probes.emit(
+            now,
+            &ProbeEvent::TaskCompleted {
+                task,
+                node,
+                local,
+                observed_s: observed,
+                speculative,
+            },
+        );
+        // Scheduler callbacks observe post-completion state (the
+        // finished job is still in the table here; schedulers drop their
+        // per-job state in `on_job_finished`).
         {
             let view = SchedView {
                 jobs: &self.jobs,
@@ -662,8 +886,12 @@ impl<'a> Driver<'a> {
             }
         }
         if finished {
-            let job = self.jobs[&task.job].clone();
-            self.record_finish(&job);
+            // Evict: the table holds active jobs only (O(active) memory
+            // on streaming sessions). Schedulers were just notified and
+            // never look a finished job up again; a late stale
+            // completion event is recognized by the missing entry.
+            let job = self.jobs.remove(&task.job).expect("finished job in table");
+            self.record_finish(now, &job);
             self.finished_jobs += 1;
             self.hdfs.evict_job(task.job, job.spec.n_maps());
         }
@@ -708,10 +936,8 @@ impl<'a> Driver<'a> {
         // now dead and will be skipped at pop time.
         eng.bump_chain(node);
         let (running, suspended) = self.cluster.node_mut(node).crash();
-        self.fstats.crashes += 1;
-        if permanent {
-            self.fstats.permanent_losses += 1;
-        }
+        self.probes
+            .emit(now, &ProbeEvent::NodeCrashed { node, permanent });
         // Clones hosted on the crashed node die with it (their slot
         // accounting was reset by `crash()`).
         let hosted: Vec<TaskRef> = self
@@ -722,7 +948,12 @@ impl<'a> Driver<'a> {
             .collect();
         for t in hosted {
             let att = self.spec.remove(&t).unwrap();
-            self.fstats.wasted_work_s += (now - att.started) * att.speed;
+            self.probes.emit(
+                now,
+                &ProbeEvent::WorkWasted {
+                    seconds: (now - att.started) * att.speed,
+                },
+            );
         }
         for t in running {
             // The original of a race dies: the clone elsewhere is
@@ -732,19 +963,30 @@ impl<'a> Driver<'a> {
             let lost = job.task(t).work_done(now);
             job.task_mut(t).kill(now);
             job.counts_mut(t.phase).on_kill_running();
-            self.fstats.wasted_work_s += lost;
-            self.fstats.crash_task_kills += 1;
-            if self.record_timelines {
-                self.timelines.release(t.job, now);
-            }
+            self.probes.emit(now, &ProbeEvent::WorkWasted { seconds: lost });
+            self.probes.emit(
+                now,
+                &ProbeEvent::TaskKilled {
+                    task: t,
+                    running: true,
+                    cause: KillCause::Crash,
+                },
+            );
         }
         for t in suspended {
             let job = self.jobs.get_mut(&t.job).expect("suspended task has a job");
             let lost = job.task(t).work_done(now);
             job.task_mut(t).kill(now);
             job.counts_mut(t.phase).on_kill_suspended();
-            self.fstats.wasted_work_s += lost;
-            self.fstats.crash_task_kills += 1;
+            self.probes.emit(now, &ProbeEvent::WorkWasted { seconds: lost });
+            self.probes.emit(
+                now,
+                &ProbeEvent::TaskKilled {
+                    task: t,
+                    running: false,
+                    cause: KillCause::Crash,
+                },
+            );
         }
     }
 
@@ -756,9 +998,9 @@ impl<'a> Driver<'a> {
         }
         log::debug!("t={now:.1} node {node} recovers");
         self.cluster.node_mut(node).restore();
-        self.fstats.recoveries += 1;
+        self.probes.emit(now, &ProbeEvent::NodeRecovered { node });
         let epoch = eng.bump_chain(node);
-        if self.finished_jobs != self.workload.len() {
+        if !self.drained() {
             eng.schedule_in(
                 self.cluster.config().heartbeat_s,
                 Ev::Heartbeat { node, epoch },
@@ -806,7 +1048,8 @@ impl<'a> Driver<'a> {
                 },
             );
             eng.schedule_in(work / speed, Ev::SpecDone { task, id });
-            self.counters.speculative_launches += 1;
+            self.probes
+                .emit(now, &ProbeEvent::SpeculativeLaunched { task, node });
             log::debug!("t={now:.1} speculating {task} on node {node}");
         }
     }
@@ -833,7 +1076,12 @@ impl<'a> Driver<'a> {
             if !rt.state.is_running() || rt.epoch != att.primary_epoch {
                 // The original transitioned without cancelling the race
                 // (defensive — cancellation is eager); clone is wasted.
-                self.fstats.wasted_work_s += (now - att.started) * att.speed;
+                self.probes.emit(
+                    now,
+                    &ProbeEvent::WorkWasted {
+                        seconds: (now - att.started) * att.speed,
+                    },
+                );
                 return;
             }
         }
@@ -851,10 +1099,10 @@ impl<'a> Driver<'a> {
         job.task_mut(task).complete(now);
         job.counts_mut(task.phase).on_complete();
         self.cluster.node_mut(pnode).finish_task(task);
-        self.fstats.wasted_work_s += lost;
-        self.counters.speculative_wins += 1;
+        self.probes.emit(now, &ProbeEvent::WorkWasted { seconds: lost });
+        self.probes.emit(now, &ProbeEvent::SpeculativeWon { task });
         log::debug!("t={now:.1} speculative clone of {task} wins");
-        self.finish_common(now, task, observed);
+        self.finish_common(now, task, att.node, observed, true);
     }
 
     /// Discard the speculative clone racing `task`, if any (the original
@@ -863,22 +1111,30 @@ impl<'a> Driver<'a> {
         let Some(att) = self.spec.remove(&task) else {
             return;
         };
-        self.fstats.wasted_work_s += (now - att.started) * att.speed;
+        self.probes.emit(
+            now,
+            &ProbeEvent::WorkWasted {
+                seconds: (now - att.started) * att.speed,
+            },
+        );
         self.cluster
             .node_mut(att.node)
             .release_speculative(task.phase);
     }
 
-    fn record_finish(&mut self, job: &Job) {
-        self.sojourn.push(PerJobRecord {
-            job: job.id(),
-            class: job.spec.class,
-            submit: job.spec.submit_time,
-            finish: job.finish_time.expect("finished job has finish_time"),
-            n_maps: job.spec.n_maps(),
-            n_reduces: job.spec.n_reduces(),
-            true_size: job.spec.true_size(),
-        });
+    fn record_finish(&mut self, now: Time, job: &Job) {
+        self.probes.job_done(
+            now,
+            &PerJobRecord {
+                job: job.id(),
+                class: job.spec.class,
+                submit: job.spec.submit_time,
+                finish: job.finish_time.expect("finished job has finish_time"),
+                n_maps: job.spec.n_maps(),
+                n_reduces: job.spec.n_reduces(),
+                true_size: job.spec.true_size(),
+            },
+        );
     }
 }
 
@@ -934,5 +1190,24 @@ size_error_sigma = 0.4
         let cfg = SimConfig::default();
         assert!(!cfg.faults.enabled);
         assert_eq!(cfg.event_limit, 500_000_000);
+    }
+
+    #[test]
+    fn closed_session_evicts_finished_jobs_and_counts_arrivals() {
+        let wl = crate::workload::synthetic::uniform_batch(4, 2, 5.0);
+        let cfg = SimConfig {
+            cluster: ClusterConfig {
+                nodes: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let o = run_simulation(&cfg, SchedulerKind::Fifo, &wl);
+        assert_eq!(o.stop, StopReason::Halted);
+        assert_eq!(o.jobs_arrived, 4);
+        assert_eq!(o.sojourn.len(), 4);
+        assert!(o.peak_live_jobs <= 4 && o.peak_live_jobs >= 1);
+        assert!(!o.halted_by_probe);
+        assert_eq!(o.workload, "uniform-batch");
     }
 }

@@ -24,6 +24,16 @@
 //!   one mechanism and selectable by name through the scheduler
 //!   registry ([`scheduler::REGISTRY`]).
 //!
+//! Experiments run as **sessions** ([`session::Simulation`]): a pull-based
+//! [`workload::WorkloadSource`] feeds jobs to the driver one arrival at a
+//! time — a closed [`workload::Workload`] replay, an open Poisson/diurnal
+//! generator ([`workload::OpenArrivals`]), or a streaming JSONL trace —
+//! while [`metrics::Probe`]s observe the run incrementally and may stop
+//! it early. Working memory scales with *concurrently active* jobs —
+//! the workload's per-task duration vectors are never materialized, and
+//! only a compact per-finished-job sojourn record accumulates — so open
+//! runs of millions of jobs are first-class.
+//!
 //! The crate is organised as a three-layer system:
 //!
 //! * **L3 (this crate)** — the coordinator: a discrete-event Hadoop cluster
@@ -45,19 +55,39 @@
 //!
 //! ## Quickstart
 //!
-//! Run a single simulation:
+//! Run one session through the builder:
 //!
 //! ```no_run
 //! use hfsp::prelude::*;
 //!
-//! let cfg = SimConfig::default();
 //! let workload = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
-//! let outcome = run_simulation(&cfg, SchedulerKind::SizeBased(HfspConfig::default()), &workload);
+//! let outcome = Simulation::new(SimConfig::default())
+//!     .scheduler(SchedulerKind::SizeBased(HfspConfig::default()))
+//!     .workload(workload.into_source())
+//!     .run();
 //! println!("mean sojourn: {:.1}s", outcome.sojourn.mean());
 //! ```
 //!
+//! Open, rate-controlled arrivals (the PSBS/Dell'Amico scenario axis)
+//! stream with O(active jobs) working state; a probe can stop at
+//! steady state:
+//!
+//! ```no_run
+//! use hfsp::prelude::*;
+//!
+//! let mut halt = JobLimitProbe::new(100_000);
+//! let outcome = Simulation::new(SimConfig::default())
+//!     .scheduler(SchedulerKind::hfsp())
+//!     .workload(OpenArrivals::poisson(0.08, 1e9).max_jobs(1_000_000))
+//!     .probe(&mut halt)
+//!     .run();
+//! println!("{} jobs, peak {} live", outcome.sojourn.len(), outcome.peak_live_jobs);
+//! ```
+//!
 //! Any registered discipline is one `from_name` away (`"fifo"`,
-//! `"fair"`, `"hfsp"`, `"srpt"`, `"las"`, `"psbs"`):
+//! `"fair"`, `"hfsp"`, `"srpt"`, `"las"`, `"psbs"`), and the closed-path
+//! compat shim [`run_simulation`](cluster::driver::run_simulation) still
+//! exists:
 //!
 //! ```no_run
 //! use hfsp::prelude::*;
@@ -92,6 +122,7 @@ pub mod metrics;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod session;
 pub mod sim;
 pub mod sweep;
 pub mod testkit;
@@ -100,20 +131,22 @@ pub mod workload;
 
 /// Convenient re-exports of the most frequently used types.
 pub mod prelude {
-    pub use crate::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+    pub use crate::cluster::driver::{run_session, run_simulation, SimConfig, SimOutcome};
     pub use crate::cluster::ClusterConfig;
     pub use crate::faults::{FaultConfig, FaultSpec, FaultStats, SpeculationConfig};
     pub use crate::job::{JobClass, JobId, JobSpec, Phase};
     pub use crate::metrics::sojourn::SojournStats;
+    pub use crate::metrics::{JobLimitProbe, Probe, ProbeEvent};
     pub use crate::scheduler::core::{
         HfspConfig, PreemptionPrimitive, SizeBasedConfig,
     };
     pub use crate::scheduler::disciplines::DisciplineKind;
     pub use crate::scheduler::SchedulerKind;
+    pub use crate::session::Simulation;
     pub use crate::sweep::{
         run_grid, run_grid_threads, ExperimentGrid, SweepReport, SweepResults, WorkloadSpec,
     };
     pub use crate::util::rng::{Pcg64, Rng, SeedableRng};
     pub use crate::workload::swim::FbWorkload;
-    pub use crate::workload::Workload;
+    pub use crate::workload::{ClosedSource, JobMix, OpenArrivals, Workload, WorkloadSource};
 }

@@ -16,7 +16,7 @@
 //!   (events/sec + wall-clock per scenario, the perf trajectory file);
 //! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
 
-use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use hfsp::cluster::driver::{run_session, run_simulation, SimConfig, SimOutcome};
 use hfsp::cluster::ClusterConfig;
 use hfsp::faults::FaultSpec;
 use hfsp::job::JobClass;
@@ -30,7 +30,7 @@ use hfsp::util::config::Config as FileConfig;
 use hfsp::util::json::Json;
 use hfsp::util::rng::RngStreams;
 use hfsp::workload::swim::FbWorkload;
-use hfsp::workload::{synthetic, trace, Workload};
+use hfsp::workload::{synthetic, trace, JobMix, OpenArrivals, Workload};
 use std::path::{Path, PathBuf};
 
 fn cli() -> Cli {
@@ -46,8 +46,12 @@ fn cli() -> Cli {
                 .flag("nodes", "100", "cluster size")
                 .flag("map-slots", "4", "map slots per node")
                 .flag("reduce-slots", "2", "reduce slots per node")
-                .flag("seed", "42", "rng seed (workload + placement + faults)")
+                .flag("seed", "42", "rng seed (workload + placement + faults + arrivals)")
                 .flag("trace", "", "replay this JSONL trace instead of generating")
+                .flag("arrivals", "closed", "closed (job list) | open (Poisson arrival session)")
+                .flag("rate", "0.08", "open arrivals: mean jobs per second (FB mix; paper load ≈ 0.08)")
+                .flag("duration", "3600", "open arrivals: submission horizon, seconds")
+                .flag("max-jobs", "0", "open arrivals: stop after this many submissions (0 = horizon only)")
                 .flag("preemption", "suspend", "hfsp preemption: suspend | wait | kill")
                 .flag("estimator", "native", "hfsp estimator: native | mean | xla")
                 .flag("maxmin", "native", "hfsp max-min backend: native | xla")
@@ -56,6 +60,7 @@ fn cli() -> Cli {
                 .flag("event-limit", "0", "override the event-count guard (0 = default)")
                 .flag("config", "", "TOML-subset config file; its [sim]/[cluster] keys override --seed/--nodes/--map-slots/--reduce-slots")
                 .flag("out", "", "write JSON outcome summary here")
+                .switch("stream", "replay --trace through the streaming TraceSource (constant memory)")
                 .switch("timelines", "record per-job slot timelines")
                 .switch("per-class", "print per-class sojourn breakdown"),
             Command::new("compare", "run FIFO, FAIR and HFSP on the same workload")
@@ -67,8 +72,10 @@ fn cli() -> Cli {
                 .flag("schedulers", "fifo,fair,hfsp", SchedulerKind::cli_help_list())
                 .flag("nodes", "100", "comma-separated cluster sizes")
                 .flag("seeds", "42,7,1234", "comma-separated seeds")
-                .flag("workload", "fb", "fb | fb-map-only | fig7")
+                .flag("workload", "fb", "fb | fb-map-only | fig7 | open (streaming Poisson arrivals)")
                 .flag("scale", "1.0", "scale FB-dataset job counts by this factor")
+                .flag("rates", "0.08", "open workload: comma-separated arrival rates (jobs/s) — one load point each")
+                .flag("duration", "3600", "open workload: submission horizon, seconds")
                 .flag("grid", "none", "extra axis preset: none | faults (the robustness grid)")
                 .flag("faults", "", "explicit comma-separated fault scenarios (overrides --grid)")
                 .flag("threads", "0", "worker threads (0 = all cores)")
@@ -122,14 +129,76 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         }
         Parsed::Command("simulate", args) => {
             let mut kind = scheduler_from_args(&args)?;
-            let (cfg, wl) = sim_setup(&args)?;
+            let cfg = sim_config(&args)?;
             // The fault scenario's estimation error lives inside HFSP's
             // training module (same wiring as sweep cells; gated by the
             // `enabled` master switch).
             kind.apply_fault_error(cfg.faults.effective_error_sigma(), cfg.seed);
-            let outcome = run_simulation(&cfg, kind, &wl);
+            let outcome = match args.get("arrivals").unwrap_or("closed") {
+                "closed" if args.get_bool("stream") => {
+                    let Some(path) = args.get("trace") else {
+                        anyhow::bail!("--stream requires --trace <file>");
+                    };
+                    let mut src = trace::TraceSource::open(Path::new(path))?;
+                    // A truncated stream surfaces via outcome.stream_error
+                    // (checked below for every arrival mode).
+                    run_session(&cfg, kind, &mut src, Vec::new())
+                }
+                "closed" => {
+                    let wl = closed_workload(&args, &cfg)?;
+                    run_simulation(&cfg, kind, &wl)
+                }
+                "open" => {
+                    anyhow::ensure!(
+                        args.get("trace").is_none(),
+                        "--arrivals open generates its own jobs; replay traces with \
+                         --arrivals closed [--stream]"
+                    );
+                    anyhow::ensure!(
+                        !args.get_bool("stream"),
+                        "--stream applies to trace replay; it does nothing with --arrivals open"
+                    );
+                    let rate: f64 = args.require("rate")?;
+                    let duration: f64 = args.require("duration")?;
+                    anyhow::ensure!(rate > 0.0 && rate.is_finite(), "--rate must be positive and finite");
+                    let max_jobs: u64 = args.require("max-jobs")?;
+                    anyhow::ensure!(
+                        (duration > 0.0 && duration.is_finite()) || max_jobs > 0,
+                        "--duration must be positive and finite (or pass --max-jobs to bound the session)"
+                    );
+                    // With a job cap, a non-positive/infinite --duration
+                    // means "no horizon" rather than "no jobs".
+                    let horizon = if duration > 0.0 && duration.is_finite() {
+                        duration
+                    } else {
+                        f64::INFINITY
+                    };
+                    let mut src = OpenArrivals::poisson(rate, horizon);
+                    if max_jobs > 0 {
+                        src = src.max_jobs(max_jobs);
+                    }
+                    let slots = cfg.cluster.nodes * cfg.cluster.map_slots;
+                    println!(
+                        "open session: {rate} jobs/s for {duration} s (offered load ≈ {:.2} on {} map slots)",
+                        src.load_factor(slots),
+                        slots
+                    );
+                    let outcome = run_session(&cfg, kind, &mut src, Vec::new());
+                    println!(
+                        "  {} jobs arrived, {} finished, peak {} live jobs",
+                        outcome.jobs_arrived,
+                        outcome.sojourn.len(),
+                        outcome.peak_live_jobs
+                    );
+                    outcome
+                }
+                other => anyhow::bail!("unknown --arrivals mode {other:?} (closed|open)"),
+            };
             print_outcome(&outcome, args.get_bool("per-class"));
             maybe_write_json(args.get("out"), &[&outcome])?;
+            if let Some(err) = &outcome.stream_error {
+                anyhow::bail!("invalid workload stream: {err}");
+            }
             anyhow::ensure!(
                 !outcome.truncated(),
                 "simulation truncated by the event-count guard ({} events) — \
@@ -219,7 +288,7 @@ fn scheduler_from_args(args: &hfsp::util::cli::Args) -> anyhow::Result<Scheduler
     Ok(kind)
 }
 
-fn sim_setup(args: &hfsp::util::cli::Args) -> anyhow::Result<(SimConfig, Workload)> {
+fn sim_config(args: &hfsp::util::cli::Args) -> anyhow::Result<SimConfig> {
     let seed: u64 = args.require("seed")?;
     let nodes: usize = args.require("nodes")?;
     let mut cluster = ClusterConfig {
@@ -255,12 +324,22 @@ fn sim_setup(args: &hfsp::util::cli::Args) -> anyhow::Result<(SimConfig, Workloa
             cfg.event_limit = limit;
         }
     }
-    // The workload derives from the *effective* seed, so a config-file
-    // `sim.seed` governs the whole run, not just placement and faults.
-    let wl = match args.get("trace") {
-        Some(path) => trace::read_trace(Path::new(path))?,
-        None => FbWorkload::default().generate(&mut RngStreams::workload(cfg.seed)),
-    };
+    Ok(cfg)
+}
+
+/// The closed job list for one run: a replayed trace, or the FB-dataset
+/// synthesized from the *effective* seed (so a config-file `sim.seed`
+/// governs the whole run, not just placement and faults).
+fn closed_workload(args: &hfsp::util::cli::Args, cfg: &SimConfig) -> anyhow::Result<Workload> {
+    match args.get("trace") {
+        Some(path) => trace::read_trace(Path::new(path)),
+        None => Ok(FbWorkload::default().generate(&mut RngStreams::workload(cfg.seed))),
+    }
+}
+
+fn sim_setup(args: &hfsp::util::cli::Args) -> anyhow::Result<(SimConfig, Workload)> {
+    let cfg = sim_config(args)?;
+    let wl = closed_workload(args, &cfg)?;
     Ok((cfg, wl))
 }
 
@@ -328,11 +407,29 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     let name: String = args.require("name")?;
     let out: PathBuf = args.require("out")?;
     let workload_name: String = args.require("workload")?;
-    let workload = match workload_name.as_str() {
-        "fb" => WorkloadSpec::Fb(FbWorkload::scaled(scale)),
-        "fb-map-only" => WorkloadSpec::FbMapOnly(FbWorkload::scaled(scale)),
-        "fig7" => WorkloadSpec::Fig7,
-        other => anyhow::bail!("unknown workload {other:?} (fb|fb-map-only|fig7)"),
+    let workloads: Vec<WorkloadSpec> = match workload_name.as_str() {
+        "fb" => vec![WorkloadSpec::Fb(FbWorkload::scaled(scale))],
+        "fb-map-only" => vec![WorkloadSpec::FbMapOnly(FbWorkload::scaled(scale))],
+        "fig7" => vec![WorkloadSpec::Fig7],
+        // A load-factor sweep: one open-arrival workload axis value per
+        // rate, each streamed (never materialized) by its cells.
+        "open" => {
+            let rates = parse_csv::<f64>(&args.require::<String>("rates")?, "rates")?;
+            let duration: f64 = args.require("duration")?;
+            anyhow::ensure!(
+                duration > 0.0 && duration.is_finite(),
+                "--duration must be positive and finite"
+            );
+            anyhow::ensure!(
+                rates.iter().all(|r| *r > 0.0 && r.is_finite()),
+                "--rates must all be positive and finite"
+            );
+            rates
+                .into_iter()
+                .map(|rate| WorkloadSpec::Open(OpenArrivals::poisson(rate, duration)))
+                .collect()
+        }
+        other => anyhow::bail!("unknown workload {other:?} (fb|fb-map-only|fig7|open)"),
     };
 
     // Faults axis: an explicit --faults list wins over the --grid preset.
@@ -357,10 +454,12 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
 
     let mut grid = ExperimentGrid::new(name)
         .base_config(base)
-        .workload(workload)
         .nodes(&nodes)
         .seeds(&seeds)
         .fault_scenarios(&fault_specs);
+    for workload in workloads {
+        grid = grid.workload(workload);
+    }
     for kind in schedulers {
         grid = grid.scheduler(kind);
     }
@@ -384,8 +483,9 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     std::fs::write(&out, report.to_json().to_string_pretty())?;
     println!("wrote aggregated sweep report to {}", out.display());
 
-    // Truncated cells invalidate the aggregates: surface a hard error
-    // (after writing the report, so the partial data remains inspectable).
+    // Truncated or stream-errored cells invalidate the aggregates:
+    // surface a hard error (after writing the report, so the partial
+    // data remains inspectable).
     let truncated: Vec<usize> = results
         .cells
         .iter()
@@ -398,6 +498,13 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
         truncated.len(),
         truncated
     );
+    if let Some(c) = results.cells.iter().find(|c| c.outcome.stream_error.is_some()) {
+        anyhow::bail!(
+            "cell {} had an invalid workload stream: {}",
+            c.spec.index,
+            c.outcome.stream_error.as_deref().unwrap_or("unknown")
+        );
+    }
     Ok(())
 }
 
@@ -437,6 +544,22 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
         scenario: "fig7-preemption".to_string(),
         outcome: run_simulation(&cfg, SchedulerKind::hfsp(), &fig7),
     });
+    // Streaming coverage: 100k tiny jobs through an open HFSP session,
+    // sized to ≈60 % utilization of this bench cluster. events/sec on
+    // this row tracks the WorkloadSource + probe path specifically.
+    {
+        let task_s = 4.0;
+        let slots = (nodes * cfg.cluster.map_slots).max(1) as f64;
+        let rate = 0.6 * slots / task_s;
+        let mut open = OpenArrivals::poisson(rate, f64::INFINITY)
+            .mix(JobMix::Uniform { maps: 1, task_s })
+            .max_jobs(100_000)
+            .named("open-1e5");
+        runs.push(BenchRun {
+            scenario: "open-1e5".to_string(),
+            outcome: run_session(&cfg, SchedulerKind::hfsp(), &mut open, Vec::new()),
+        });
+    }
 
     let rows: Vec<Vec<String>> = runs
         .iter()

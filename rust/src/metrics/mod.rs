@@ -1,8 +1,14 @@
 //! Measurement pipeline: sojourn statistics, locality counters, slot
-//! timelines and their JSON export.
+//! timelines, their JSON export — and the streaming [`Probe`] layer
+//! that collects them incrementally during a session.
 
 pub mod locality;
+pub mod probe;
 pub mod sojourn;
 
 pub use locality::LocalityStats;
+pub use probe::{
+    ActionCounters, CounterProbe, FaultProbe, JobLimitProbe, KillCause, LocalityProbe, Probe,
+    ProbeEvent, ProbeStack, SojournProbe, TimelineProbe,
+};
 pub use sojourn::{PerJobRecord, SojournStats};

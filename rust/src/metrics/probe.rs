@@ -1,0 +1,646 @@
+//! Incremental measurement probes.
+//!
+//! A [`Probe`] is a streaming observer attached to a simulation session:
+//! the driver pushes fine-grained [`ProbeEvent`]s and per-job completion
+//! records into it *as they happen*, instead of folding everything into
+//! one batch result after the run. A probe keeps whatever summary it
+//! wants — O(1) for counters and moments; the built-in [`SojournProbe`]
+//! keeps one compact record per finished job, the one session component
+//! that grows with total job count — and the layer is the hook for custom
+//! instrumentation: attach any number of user probes through
+//! [`Simulation::probe`](crate::session::Simulation::probe).
+//!
+//! The classic batch metrics are themselves implemented as the built-in
+//! probes of every session ([`SojournProbe`], [`LocalityProbe`],
+//! [`TimelineProbe`], [`CounterProbe`], [`FaultProbe`]); their final
+//! states are what [`SimOutcome`](crate::cluster::driver::SimOutcome)
+//! carries, so the probe refactor is invisible to batch callers.
+//!
+//! Probes can also **end** a session: [`Probe::halt_requested`] is
+//! polled after every dispatched event, and a `true` stops the event
+//! loop (surfaced as `SimOutcome::halted_by_probe`). [`JobLimitProbe`]
+//! is the built-in example — steady-state detectors follow the same
+//! shape.
+//!
+//! ## Contract
+//!
+//! * Events arrive in simulation order; `now` is nondecreasing.
+//! * [`Probe::on_job_done`] is called exactly once per finished job,
+//!   *after* the `TaskCompleted` event of its last task.
+//! * [`Probe::on_finish`] is called exactly once, after the event loop
+//!   stops (drained, halted, or event-limit), with the final clock.
+//! * Probes must not assume every job finishes: a probe-halted or
+//!   truncated session ends with jobs still in flight.
+
+use crate::faults::FaultStats;
+use crate::job::task::NodeId;
+use crate::job::{JobId, Phase, TaskRef};
+use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
+use crate::sim::Time;
+use crate::util::timeline::TimelineSet;
+
+/// Why a task attempt was killed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillCause {
+    /// Scheduler-issued KILL preemption.
+    Preemption,
+    /// The hosting node crashed.
+    Crash,
+}
+
+/// One fine-grained simulation observation, pushed to every probe.
+///
+/// Variants mirror the driver's state transitions one-to-one; the
+/// built-in probes below document which variant feeds which classic
+/// metric.
+#[derive(Clone, Copy, Debug)]
+pub enum ProbeEvent {
+    /// A job entered the system.
+    JobArrived {
+        job: JobId,
+        n_maps: usize,
+        n_reduces: usize,
+    },
+    /// A pending task attempt started on `node`. `re_execution` marks
+    /// attempt ≥ 2 (the task was crash-killed or KILL-preempted before).
+    TaskLaunched {
+        task: TaskRef,
+        node: NodeId,
+        local: bool,
+        re_execution: bool,
+    },
+    /// A running task was SIGSTOPped (slot freed, context parked).
+    TaskSuspended { task: TaskRef, node: NodeId },
+    /// A suspended task resumed on its context node; `from_swap` means
+    /// its context had been pushed to swap meanwhile.
+    TaskResumed {
+        task: TaskRef,
+        node: NodeId,
+        from_swap: bool,
+    },
+    /// A task attempt was killed. `running` distinguishes a running
+    /// attempt (slot held) from a parked suspended context.
+    TaskKilled {
+        task: TaskRef,
+        running: bool,
+        cause: KillCause,
+    },
+    /// A task attempt completed. `local` is meaningful for map tasks;
+    /// `speculative` marks completions produced by a winning clone.
+    TaskCompleted {
+        task: TaskRef,
+        node: NodeId,
+        local: bool,
+        observed_s: f64,
+        speculative: bool,
+    },
+    /// Serialized seconds of task progress thrown away (kills, crashes,
+    /// the losing side of speculative races).
+    WorkWasted { seconds: f64 },
+    /// A node heartbeat was processed by the scheduler.
+    Heartbeat { node: NodeId },
+    /// A completion event was recognized as stale and dropped.
+    StaleCompletion { task: TaskRef },
+    /// The scheduler issued an invalid action (dropped; scheduler bug).
+    ActionRejected { task: TaskRef },
+    /// Fault plan: the node went down.
+    NodeCrashed { node: NodeId, permanent: bool },
+    /// Fault plan: the node came back.
+    NodeRecovered { node: NodeId },
+    /// A speculative clone was launched on `node`.
+    SpeculativeLaunched { task: TaskRef, node: NodeId },
+    /// A speculative clone beat its original.
+    SpeculativeWon { task: TaskRef },
+}
+
+/// A streaming simulation observer. All methods have no-op defaults —
+/// implement only what the probe measures.
+pub trait Probe {
+    /// Short label for diagnostics.
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    /// A simulation event happened at time `now`.
+    fn on_event(&mut self, now: Time, event: &ProbeEvent) {
+        let _ = (now, event);
+    }
+
+    /// A job finished; `record` is its complete sojourn record.
+    fn on_job_done(&mut self, now: Time, record: &PerJobRecord) {
+        let _ = (now, record);
+    }
+
+    /// The event loop stopped; `now` is the final simulated clock.
+    fn on_finish(&mut self, now: Time) {
+        let _ = now;
+    }
+
+    /// Polled after every dispatched event; returning `true` ends the
+    /// session early (e.g. steady-state reached).
+    fn halt_requested(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in probes
+// ---------------------------------------------------------------------------
+
+/// Counters over preemption primitives and scheduling activity.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActionCounters {
+    pub launches: u64,
+    pub suspends: u64,
+    pub resumes: u64,
+    pub kills: u64,
+    pub swap_ins: u64,
+    pub heartbeats: u64,
+    pub stale_completions: u64,
+    pub rejected_actions: u64,
+    /// Speculative task clones launched (fault subsystem).
+    pub speculative_launches: u64,
+    /// Speculative races won by the clone (original discarded).
+    pub speculative_wins: u64,
+}
+
+/// Built-in probe: per-job sojourn records ([`SojournStats`]).
+#[derive(Clone, Debug, Default)]
+pub struct SojournProbe {
+    pub stats: SojournStats,
+}
+
+impl Probe for SojournProbe {
+    fn name(&self) -> &'static str {
+        "sojourn"
+    }
+
+    fn on_job_done(&mut self, _now: Time, record: &PerJobRecord) {
+        self.stats.push(record.clone());
+    }
+}
+
+/// Built-in probe: map-task data locality ([`LocalityStats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocalityProbe {
+    pub stats: LocalityStats,
+}
+
+impl Probe for LocalityProbe {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &ProbeEvent) {
+        if let ProbeEvent::TaskCompleted { task, local, .. } = event {
+            // Reduces are "local" by convention and excluded (§4.3).
+            if task.phase == Phase::Map {
+                self.stats.record(*local);
+            }
+        }
+    }
+}
+
+/// Built-in probe: per-job slot timelines ([`TimelineSet`]); inert
+/// unless enabled (`SimConfig::record_timelines` — it costs memory on
+/// large runs).
+#[derive(Clone, Debug, Default)]
+pub struct TimelineProbe {
+    pub enabled: bool,
+    pub set: TimelineSet,
+}
+
+impl TimelineProbe {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            set: TimelineSet::default(),
+        }
+    }
+}
+
+impl Probe for TimelineProbe {
+    fn name(&self) -> &'static str {
+        "timelines"
+    }
+
+    fn on_event(&mut self, now: Time, event: &ProbeEvent) {
+        if !self.enabled {
+            return;
+        }
+        match event {
+            ProbeEvent::TaskLaunched { task, .. } | ProbeEvent::TaskResumed { task, .. } => {
+                self.set.acquire(task.job, now)
+            }
+            ProbeEvent::TaskSuspended { task, .. }
+            | ProbeEvent::TaskCompleted { task, .. }
+            | ProbeEvent::TaskKilled {
+                task,
+                running: true,
+                ..
+            } => self.set.release(task.job, now),
+            _ => {}
+        }
+    }
+}
+
+/// Built-in probe: scheduling-activity counters ([`ActionCounters`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CounterProbe {
+    pub counters: ActionCounters,
+}
+
+impl Probe for CounterProbe {
+    fn name(&self) -> &'static str {
+        "counters"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &ProbeEvent) {
+        let c = &mut self.counters;
+        match event {
+            ProbeEvent::TaskLaunched { .. } => c.launches += 1,
+            ProbeEvent::TaskSuspended { .. } => c.suspends += 1,
+            ProbeEvent::TaskResumed { from_swap, .. } => {
+                c.resumes += 1;
+                if *from_swap {
+                    c.swap_ins += 1;
+                }
+            }
+            ProbeEvent::TaskKilled {
+                cause: KillCause::Preemption,
+                ..
+            } => c.kills += 1,
+            ProbeEvent::Heartbeat { .. } => c.heartbeats += 1,
+            ProbeEvent::StaleCompletion { .. } => c.stale_completions += 1,
+            ProbeEvent::ActionRejected { .. } => c.rejected_actions += 1,
+            ProbeEvent::SpeculativeLaunched { .. } => c.speculative_launches += 1,
+            ProbeEvent::SpeculativeWon { .. } => c.speculative_wins += 1,
+            _ => {}
+        }
+    }
+}
+
+/// Built-in probe: fault & robustness statistics ([`FaultStats`]).
+/// Seeded with the pre-run plan facts (straggler node count).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultProbe {
+    pub stats: FaultStats,
+}
+
+impl FaultProbe {
+    pub fn new(initial: FaultStats) -> Self {
+        Self { stats: initial }
+    }
+}
+
+impl Probe for FaultProbe {
+    fn name(&self) -> &'static str {
+        "faults"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &ProbeEvent) {
+        let f = &mut self.stats;
+        match event {
+            ProbeEvent::WorkWasted { seconds } => f.wasted_work_s += seconds,
+            ProbeEvent::TaskLaunched {
+                re_execution: true, ..
+            } => f.re_executed_tasks += 1,
+            ProbeEvent::TaskKilled {
+                cause: KillCause::Crash,
+                ..
+            } => f.crash_task_kills += 1,
+            ProbeEvent::NodeCrashed { permanent, .. } => {
+                f.crashes += 1;
+                if *permanent {
+                    f.permanent_losses += 1;
+                }
+            }
+            ProbeEvent::NodeRecovered { .. } => f.recoveries += 1,
+            _ => {}
+        }
+    }
+}
+
+/// A probe that requests an early halt after `limit` finished jobs —
+/// the template for steady-state detectors (measure a warm-up window,
+/// then stop the open arrival session).
+#[derive(Clone, Copy, Debug)]
+pub struct JobLimitProbe {
+    limit: usize,
+    seen: usize,
+}
+
+impl JobLimitProbe {
+    pub fn new(limit: usize) -> Self {
+        Self { limit, seen: 0 }
+    }
+
+    /// Jobs observed so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+}
+
+impl Probe for JobLimitProbe {
+    fn name(&self) -> &'static str {
+        "job-limit"
+    }
+
+    fn on_job_done(&mut self, _now: Time, _record: &PerJobRecord) {
+        self.seen += 1;
+    }
+
+    fn halt_requested(&self) -> bool {
+        self.seen >= self.limit
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probe stack: built-ins + user probes, driven by the driver
+// ---------------------------------------------------------------------------
+
+/// The full probe complement of one session: the five built-ins plus
+/// any user probes. The driver pushes every event through [`emit`] /
+/// [`job_done`]; at session end [`ProbeStack::into_parts`] yields the
+/// built-in results for `SimOutcome` assembly.
+///
+/// [`emit`]: ProbeStack::emit
+/// [`job_done`]: ProbeStack::job_done
+pub struct ProbeStack<'a> {
+    pub sojourn: SojournProbe,
+    pub locality: LocalityProbe,
+    pub timelines: TimelineProbe,
+    pub counters: CounterProbe,
+    pub faults: FaultProbe,
+    user: Vec<&'a mut dyn Probe>,
+    halt: bool,
+}
+
+impl<'a> ProbeStack<'a> {
+    pub fn new(
+        record_timelines: bool,
+        initial_faults: FaultStats,
+        user: Vec<&'a mut dyn Probe>,
+    ) -> Self {
+        Self {
+            sojourn: SojournProbe::default(),
+            locality: LocalityProbe::default(),
+            timelines: TimelineProbe::new(record_timelines),
+            counters: CounterProbe::default(),
+            faults: FaultProbe::new(initial_faults),
+            user,
+            halt: false,
+        }
+    }
+
+    /// Dispatch one event to every probe.
+    pub fn emit(&mut self, now: Time, event: &ProbeEvent) {
+        self.locality.on_event(now, event);
+        self.timelines.on_event(now, event);
+        self.counters.on_event(now, event);
+        self.faults.on_event(now, event);
+        for p in &mut self.user {
+            p.on_event(now, event);
+            self.halt |= p.halt_requested();
+        }
+    }
+
+    /// Dispatch one finished-job record to every probe.
+    pub fn job_done(&mut self, now: Time, record: &PerJobRecord) {
+        self.sojourn.on_job_done(now, record);
+        for p in &mut self.user {
+            p.on_job_done(now, record);
+            self.halt |= p.halt_requested();
+        }
+    }
+
+    /// Whether any user probe has requested an early halt since the
+    /// last poll; resets the latch.
+    pub fn take_halt(&mut self) -> bool {
+        std::mem::take(&mut self.halt)
+    }
+
+    /// Final callback fan-out, then the built-in results.
+    #[allow(clippy::type_complexity)]
+    pub fn into_parts(
+        mut self,
+        now: Time,
+    ) -> (
+        SojournStats,
+        LocalityStats,
+        TimelineSet,
+        ActionCounters,
+        FaultStats,
+    ) {
+        for p in &mut self.user {
+            p.on_finish(now);
+        }
+        (
+            self.sojourn.stats,
+            self.locality.stats,
+            self.timelines.set,
+            self.counters.counters,
+            self.faults.stats,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobClass;
+
+    fn task(job: JobId) -> TaskRef {
+        TaskRef {
+            job,
+            phase: Phase::Map,
+            index: 0,
+        }
+    }
+
+    fn rec(job: JobId) -> PerJobRecord {
+        PerJobRecord {
+            job,
+            class: JobClass::Small,
+            submit: 0.0,
+            finish: 5.0,
+            n_maps: 1,
+            n_reduces: 0,
+            true_size: 5.0,
+        }
+    }
+
+    #[test]
+    fn counter_probe_mirrors_events() {
+        let mut p = CounterProbe::default();
+        p.on_event(
+            0.0,
+            &ProbeEvent::TaskLaunched {
+                task: task(1),
+                node: 0,
+                local: true,
+                re_execution: false,
+            },
+        );
+        p.on_event(
+            1.0,
+            &ProbeEvent::TaskResumed {
+                task: task(1),
+                node: 0,
+                from_swap: true,
+            },
+        );
+        p.on_event(
+            2.0,
+            &ProbeEvent::TaskKilled {
+                task: task(1),
+                running: true,
+                cause: KillCause::Preemption,
+            },
+        );
+        p.on_event(
+            2.0,
+            &ProbeEvent::TaskKilled {
+                task: task(1),
+                running: true,
+                cause: KillCause::Crash,
+            },
+        );
+        p.on_event(3.0, &ProbeEvent::Heartbeat { node: 0 });
+        assert_eq!(p.counters.launches, 1);
+        assert_eq!(p.counters.resumes, 1);
+        assert_eq!(p.counters.swap_ins, 1);
+        assert_eq!(p.counters.kills, 1, "crash kills are not scheduler kills");
+        assert_eq!(p.counters.heartbeats, 1);
+    }
+
+    #[test]
+    fn fault_probe_accumulates_wasted_work_and_crashes() {
+        let mut p = FaultProbe::new(FaultStats {
+            straggler_nodes: 3,
+            ..Default::default()
+        });
+        p.on_event(0.0, &ProbeEvent::WorkWasted { seconds: 2.5 });
+        p.on_event(0.0, &ProbeEvent::WorkWasted { seconds: 1.5 });
+        p.on_event(
+            1.0,
+            &ProbeEvent::NodeCrashed {
+                node: 2,
+                permanent: true,
+            },
+        );
+        p.on_event(2.0, &ProbeEvent::NodeRecovered { node: 2 });
+        p.on_event(
+            3.0,
+            &ProbeEvent::TaskKilled {
+                task: task(1),
+                running: false,
+                cause: KillCause::Crash,
+            },
+        );
+        p.on_event(
+            4.0,
+            &ProbeEvent::TaskLaunched {
+                task: task(1),
+                node: 0,
+                local: false,
+                re_execution: true,
+            },
+        );
+        assert_eq!(p.stats.straggler_nodes, 3);
+        assert!((p.stats.wasted_work_s - 4.0).abs() < 1e-12);
+        assert_eq!(p.stats.crashes, 1);
+        assert_eq!(p.stats.permanent_losses, 1);
+        assert_eq!(p.stats.recoveries, 1);
+        assert_eq!(p.stats.crash_task_kills, 1);
+        assert_eq!(p.stats.re_executed_tasks, 1);
+    }
+
+    #[test]
+    fn locality_probe_counts_map_completions_only() {
+        let mut p = LocalityProbe::default();
+        p.on_event(
+            0.0,
+            &ProbeEvent::TaskCompleted {
+                task: task(1),
+                node: 0,
+                local: true,
+                observed_s: 1.0,
+                speculative: false,
+            },
+        );
+        let reduce = TaskRef {
+            job: 1,
+            phase: Phase::Reduce,
+            index: 0,
+        };
+        p.on_event(
+            1.0,
+            &ProbeEvent::TaskCompleted {
+                task: reduce,
+                node: 0,
+                local: true,
+                observed_s: 1.0,
+                speculative: false,
+            },
+        );
+        assert_eq!(p.stats.total(), 1);
+        assert_eq!(p.stats.local, 1);
+    }
+
+    #[test]
+    fn timeline_probe_is_inert_when_disabled() {
+        let mut off = TimelineProbe::new(false);
+        let mut on = TimelineProbe::new(true);
+        for p in [&mut off, &mut on] {
+            p.on_event(
+                1.0,
+                &ProbeEvent::TaskLaunched {
+                    task: task(7),
+                    node: 0,
+                    local: true,
+                    re_execution: false,
+                },
+            );
+            p.on_event(
+                3.0,
+                &ProbeEvent::TaskCompleted {
+                    task: task(7),
+                    node: 0,
+                    local: true,
+                    observed_s: 2.0,
+                    speculative: false,
+                },
+            );
+        }
+        assert!(off.set.job(7).is_none());
+        let tl = on.set.job(7).expect("timeline recorded");
+        assert!(tl.is_balanced());
+        assert!((tl.slot_seconds() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_limit_probe_requests_halt_at_limit() {
+        let mut p = JobLimitProbe::new(2);
+        assert!(!p.halt_requested());
+        p.on_job_done(1.0, &rec(1));
+        assert!(!p.halt_requested());
+        p.on_job_done(2.0, &rec(2));
+        assert!(p.halt_requested());
+        assert_eq!(p.seen(), 2);
+    }
+
+    #[test]
+    fn stack_latches_user_halt_and_yields_parts() {
+        let mut limit = JobLimitProbe::new(1);
+        let mut stack = ProbeStack::new(false, FaultStats::default(), vec![&mut limit]);
+        stack.emit(0.0, &ProbeEvent::Heartbeat { node: 0 });
+        assert!(!stack.take_halt());
+        stack.job_done(1.0, &rec(1));
+        assert!(stack.take_halt());
+        assert!(!stack.take_halt(), "halt latch resets");
+        let (sojourn, _, _, counters, _) = stack.into_parts(1.0);
+        assert_eq!(sojourn.len(), 1);
+        assert_eq!(counters.heartbeats, 1);
+    }
+}

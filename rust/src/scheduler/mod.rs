@@ -36,6 +36,14 @@ pub mod fifo;
 /// Back-compat facade: HFSP is the size-based [`core`] driven by the
 /// FSP discipline. Historical import paths (`scheduler::hfsp::training`,
 /// `scheduler::hfsp::HfspConfig`, …) resolve here.
+///
+/// Deprecated: import from [`core`] / [`disciplines`] directly, and
+/// drive runs through the [`Simulation`](crate::session::Simulation)
+/// builder.
+#[deprecated(
+    since = "0.1.0",
+    note = "use scheduler::core / scheduler::disciplines (and the session::Simulation builder) instead"
+)]
 pub mod hfsp {
     //! HFSP — the Hadoop Fair Sojourn Protocol (§3 of the paper), as a
     //! facade over [`super::core`] + [`super::disciplines::fsp`].

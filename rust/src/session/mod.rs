@@ -1,0 +1,170 @@
+//! Simulation sessions: the builder entry point of the simulator.
+//!
+//! A **session** wires four things together and runs the event loop:
+//!
+//! ```text
+//!   SimConfig ──┐
+//!   SchedulerKind ──┤
+//!   WorkloadSource ─┼──▶ Simulation::run() ──▶ SimOutcome
+//!   Probe* ────────┘         (run_session)
+//! ```
+//!
+//! * the [`WorkloadSource`] supplies jobs *on pull* — a closed
+//!   [`Workload`](crate::workload::Workload) vector, an open Poisson /
+//!   diurnal generator ([`OpenArrivals`](crate::workload::OpenArrivals)),
+//!   or a streaming JSONL trace
+//!   ([`TraceSource`](crate::workload::trace::TraceSource));
+//! * [`Probe`]s observe the run incrementally and can stop it early.
+//!
+//! ```no_run
+//! use hfsp::prelude::*;
+//!
+//! // Closed replay, builder style:
+//! let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(42));
+//! let outcome = Simulation::new(SimConfig::default())
+//!     .scheduler(SchedulerKind::hfsp())
+//!     .workload(wl.into_source())
+//!     .run();
+//! println!("mean sojourn {:.1}s", outcome.sojourn.mean());
+//!
+//! // Open Poisson arrivals with an early-halt probe:
+//! let mut halt = JobLimitProbe::new(10_000);
+//! let outcome = Simulation::new(SimConfig::default())
+//!     .scheduler(SchedulerKind::from_name("psbs").unwrap())
+//!     .workload(OpenArrivals::poisson(0.08, 1e6))
+//!     .probe(&mut halt)
+//!     .run();
+//! assert!(outcome.halted_by_probe || outcome.jobs_arrived <= 10_000);
+//! ```
+
+use crate::cluster::driver::{run_session, SimConfig, SimOutcome};
+use crate::metrics::Probe;
+use crate::scheduler::SchedulerKind;
+use crate::workload::WorkloadSource;
+
+/// Builder for one simulation session. See the [module docs](self).
+pub struct Simulation<'a> {
+    cfg: SimConfig,
+    kind: SchedulerKind,
+    source: Option<Box<dyn WorkloadSource + 'a>>,
+    probes: Vec<&'a mut dyn Probe>,
+}
+
+impl<'a> Simulation<'a> {
+    /// Start a session on the given configuration. The scheduler
+    /// defaults to HFSP; a workload source must be supplied before
+    /// [`run`](Simulation::run).
+    pub fn new(cfg: SimConfig) -> Self {
+        Self {
+            cfg,
+            kind: SchedulerKind::hfsp(),
+            source: None,
+            probes: Vec::new(),
+        }
+    }
+
+    /// Select the scheduler.
+    pub fn scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Attach the workload source (closed replay, open generator, or
+    /// streaming trace).
+    pub fn workload(mut self, source: impl WorkloadSource + 'a) -> Self {
+        self.source = Some(Box::new(source));
+        self
+    }
+
+    /// Attach a custom probe (may be called repeatedly). The probe is
+    /// borrowed, so its final state is readable after the run:
+    ///
+    /// ```no_run
+    /// # use hfsp::prelude::*;
+    /// # let wl = FbWorkload::default().generate(&mut Pcg64::seed_from_u64(1));
+    /// let mut limit = JobLimitProbe::new(50);
+    /// let outcome = Simulation::new(SimConfig::default())
+    ///     .workload(wl.into_source())
+    ///     .probe(&mut limit)
+    ///     .run();
+    /// assert_eq!(limit.seen(), outcome.sojourn.len());
+    /// ```
+    pub fn probe(mut self, probe: &'a mut dyn Probe) -> Self {
+        self.probes.push(probe);
+        self
+    }
+
+    /// Run the session to completion (source drained and cluster empty,
+    /// probe halt, or the event-limit guard).
+    ///
+    /// # Panics
+    ///
+    /// If no workload source was attached.
+    pub fn run(self) -> SimOutcome {
+        let mut source = self
+            .source
+            .expect("Simulation::run called without a workload source — call .workload(...)");
+        run_session(&self.cfg, self.kind, source.as_mut(), self.probes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::JobLimitProbe;
+    use crate::workload::synthetic;
+
+    #[test]
+    fn builder_runs_a_closed_session() {
+        let wl = synthetic::uniform_batch(3, 2, 4.0);
+        let mut cfg = SimConfig::default();
+        cfg.cluster.nodes = 2;
+        let outcome = Simulation::new(cfg)
+            .scheduler(SchedulerKind::Fifo)
+            .workload(wl.as_source())
+            .run();
+        assert_eq!(outcome.sojourn.len(), 3);
+        assert_eq!(outcome.scheduler, "FIFO");
+        assert_eq!(outcome.workload, "uniform-batch");
+    }
+
+    #[test]
+    fn builder_matches_run_simulation_exactly() {
+        let wl = synthetic::fig7_workload();
+        let mut cfg = SimConfig::default();
+        cfg.cluster.nodes = 4;
+        cfg.cluster.map_slots = 1;
+        cfg.cluster.reduce_slots = 2;
+        let a = crate::cluster::driver::run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+        let b = Simulation::new(cfg)
+            .scheduler(SchedulerKind::hfsp())
+            .workload(wl.as_source())
+            .run();
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.sojourn.mean(), b.sojourn.mean());
+        assert_eq!(a.counters.suspends, b.counters.suspends);
+    }
+
+    #[test]
+    fn probe_state_is_readable_after_the_run() {
+        let wl = synthetic::uniform_batch(5, 1, 2.0);
+        let mut cfg = SimConfig::default();
+        cfg.cluster.nodes = 2;
+        let mut limit = JobLimitProbe::new(2);
+        let outcome = Simulation::new(cfg)
+            .scheduler(SchedulerKind::Fifo)
+            .workload(wl.as_source())
+            .probe(&mut limit)
+            .run();
+        assert!(outcome.halted_by_probe);
+        assert_eq!(limit.seen(), 2);
+        assert_eq!(outcome.sojourn.len(), 2, "stopped after the second job");
+    }
+
+    #[test]
+    #[should_panic(expected = "without a workload source")]
+    fn run_without_source_panics_with_guidance() {
+        let _ = Simulation::new(SimConfig::default()).run();
+    }
+}

@@ -5,6 +5,14 @@
 //! [`Engine::schedule_at`]. The engine enforces the monotonic-time
 //! invariant and supports a hard event-count limit as a runaway guard.
 //!
+//! The queue is *demand-driven* by design: it holds only what handlers
+//! have scheduled so far, so a streaming session that feeds arrivals one
+//! batch at a time (see [`crate::cluster::driver::run_session`]) keeps
+//! the pending set proportional to in-flight work — there is no upfront
+//! arrival flood, and a million-job open run never materializes its
+//! future in the heap. [`Engine::halt`] is the cooperative stop used
+//! both for natural completion and for probe-requested early halts.
+//!
 //! ## Epoch chains & lazy deletion
 //!
 //! Periodic event chains (per-node heartbeats) cannot be deleted from
@@ -118,6 +126,23 @@ impl<E> Engine<E> {
             time
         );
         self.queue.push(time, event);
+    }
+
+    /// Schedule at an absolute time with same-instant priority: the
+    /// event is delivered before every ordinary event at that instant,
+    /// regardless of when either was scheduled. Sessions use this for
+    /// job arrivals, reproducing the batch driver's all-arrivals-first
+    /// tie-breaking (see [`EventQueue::push_priority`]).
+    ///
+    /// [`EventQueue::push_priority`]: super::queue::EventQueue::push_priority
+    pub fn schedule_at_priority(&mut self, time: Time, event: E) {
+        assert!(
+            time >= self.now,
+            "cannot schedule into the past: now={} requested={}",
+            self.now,
+            time
+        );
+        self.queue.push_priority(time, event);
     }
 
     /// Schedule after a non-negative delay.

@@ -1,9 +1,19 @@
 //! Deterministic pending-event queue.
 //!
-//! A binary min-heap ordered by `(time, seq)` where `seq` is a global
-//! insertion counter: events scheduled for the same instant are delivered
-//! in the order they were scheduled. This stable tie-break is what makes
-//! whole simulation runs bit-reproducible across platforms.
+//! A binary min-heap ordered by `(time, class, seq)` where `seq` is a
+//! global insertion counter: events scheduled for the same instant are
+//! delivered in the order they were scheduled. This stable tie-break is
+//! what makes whole simulation runs bit-reproducible across platforms.
+//!
+//! The **class** is a two-level priority within an instant:
+//! [`EventQueue::push_priority`] events (class 0) are delivered before
+//! ordinary [`EventQueue::push`] events (class 1) at the same time,
+//! regardless of insertion order. Streaming sessions use it for job
+//! arrivals: the historical batch driver scheduled every arrival up
+//! front, giving them the lowest sequence numbers in the run, so an
+//! arrival always won any same-instant tie — a lazily pulled arrival
+//! would otherwise lose ties to events scheduled before it was pulled.
+//! The priority class reproduces the batch ordering exactly.
 
 use super::Time;
 use std::cmp::Ordering;
@@ -13,13 +23,15 @@ use std::collections::BinaryHeap;
 #[derive(Clone, Debug)]
 pub struct ScheduledEvent<E> {
     pub time: Time,
+    /// Same-instant priority: 0 before 1 (see module docs).
+    pub class: u8,
     pub seq: u64,
     pub event: E,
 }
 
 impl<E> PartialEq for ScheduledEvent<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.class == other.class && self.seq == other.seq
     }
 }
 impl<E> Eq for ScheduledEvent<E> {}
@@ -33,11 +45,13 @@ impl<E> PartialOrd for ScheduledEvent<E> {
 impl<E> Ord for ScheduledEvent<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse: BinaryHeap is a max-heap, we want the earliest event on
-        // top. Total order on (time, seq); times are finite by invariant.
+        // top. Total order on (time, class, seq); times are finite by
+        // invariant.
         other
             .time
             .partial_cmp(&self.time)
             .expect("non-finite event time")
+            .then_with(|| other.class.cmp(&self.class))
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -66,13 +80,28 @@ impl<E> EventQueue<E> {
     /// Schedule `event` at absolute time `time`. Panics on NaN/negative
     /// time — both indicate a simulator bug upstream.
     pub fn push(&mut self, time: Time, event: E) -> u64 {
+        self.push_class(time, 1, event)
+    }
+
+    /// Schedule `event` to be delivered **before** any ordinary event at
+    /// the same instant (class 0; see module docs).
+    pub fn push_priority(&mut self, time: Time, event: E) -> u64 {
+        self.push_class(time, 0, event)
+    }
+
+    fn push_class(&mut self, time: Time, class: u8, event: E) -> u64 {
         assert!(
             time.is_finite() && time >= 0.0,
             "event time must be finite and non-negative, got {time}"
         );
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(ScheduledEvent { time, seq, event });
+        self.heap.push(ScheduledEvent {
+            time,
+            class,
+            seq,
+            event,
+        });
         seq
     }
 
@@ -145,6 +174,27 @@ mod tests {
         assert_eq!(q.peek_time(), Some(1.5));
         q.pop();
         assert_eq!(q.peek_time(), Some(2.5));
+    }
+
+    #[test]
+    fn priority_class_wins_same_instant_ties_regardless_of_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, "normal-early");
+        q.push_priority(5.0, "prio-late");
+        q.push(5.0, "normal-late");
+        q.push_priority(5.0, "prio-later");
+        q.push(4.0, "earlier-time");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(
+            order,
+            vec![
+                "earlier-time",
+                "prio-late",
+                "prio-later",
+                "normal-early",
+                "normal-late"
+            ]
+        );
     }
 
     #[test]

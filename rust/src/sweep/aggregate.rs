@@ -15,6 +15,11 @@
 //! values are folded in cell-index order, and wall-clock measurements
 //! are excluded — so the JSON rendering of a report is byte-identical
 //! across reruns and thread counts.
+//!
+//! Open-arrival cells ([`WorkloadSpec::Open`](super::grid::WorkloadSpec))
+//! fold exactly like closed ones — their workload label (`open-r…`)
+//! is the group key's workload axis, so sweeping several rates yields
+//! one group per load point (the PSBS-style load-factor table).
 
 use super::executor::CellResult;
 use crate::job::JobClass;

@@ -2,9 +2,12 @@
 //! independent cells.
 //!
 //! Cells are claimed from a shared atomic cursor (longest cells do not
-//! stall a static partition) and each runs a full
-//! [`run_simulation`](crate::cluster::driver::run_simulation) on its own
-//! OS thread. Results are written into a slot vector indexed by
+//! stall a static partition) and each runs a full streaming session
+//! ([`run_session`](crate::cluster::driver::run_session) over the
+//! cell's [`WorkloadSpec::source`](crate::sweep::grid::WorkloadSpec))
+//! on its own OS thread — open-arrival cells therefore never
+//! materialize their job lists, even under full fan-out. Results are
+//! written into a slot vector indexed by
 //! [`CellSpec::index`], so [`SweepResults::cells`] is always in grid
 //! order and every downstream aggregate is independent of thread count
 //! and completion timing (asserted by `tests/integration_sweep.rs`).

@@ -8,12 +8,12 @@
 //! simulation master seed (HDFS placement), so re-running a grid with
 //! the same seeds reproduces identical outcomes cell by cell.
 
-use crate::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use crate::cluster::driver::{run_session, SimConfig, SimOutcome};
 use crate::faults::FaultSpec;
 use crate::scheduler::SchedulerKind;
-use crate::util::rng::RngStreams;
+use crate::util::rng::{RngStreams, StreamId};
 use crate::workload::swim::FbWorkload;
-use crate::workload::{synthetic, Workload};
+use crate::workload::{synthetic, ClosedSource, OpenArrivals, Workload, WorkloadSource};
 
 /// A workload axis value: how to obtain the job trace for one cell.
 ///
@@ -49,6 +49,11 @@ pub enum WorkloadSpec {
     /// A pre-built workload (e.g. a replayed JSONL trace), presented
     /// as-is to every cell regardless of seed.
     Fixed(Workload),
+    /// An open arrival-process template ([`OpenArrivals`]): each cell
+    /// streams a fresh generator seeded from the cell seed's dedicated
+    /// arrival substream. Several `Open` axis values with different
+    /// rates express a PSBS-style load-factor sweep.
+    Open(OpenArrivals),
 }
 
 impl WorkloadSpec {
@@ -63,13 +68,17 @@ impl WorkloadSpec {
             } => format!("uniform-{jobs}x{maps_per_job}"),
             WorkloadSpec::DecreasingSize { jobs, .. } => format!("decreasing-{jobs}"),
             WorkloadSpec::Fixed(wl) => wl.name.clone(),
+            WorkloadSpec::Open(template) => template.name().to_string(),
         }
     }
 
     /// Materialize the workload for one cell. Draws from the workload
     /// RNG stream ([`RngStreams::workload`] — the root generator, kept
     /// bit-compatible with the original derivation), which is independent
-    /// of the placement and fault substreams.
+    /// of the placement and fault substreams. `Open` specs materialize
+    /// by draining a fresh generator on the cell's arrival substream —
+    /// the exact jobs a session for this cell would see (inspection
+    /// only; [`CellSpec::run`] streams instead of materializing).
     pub fn realize(&self, seed: u64) -> Workload {
         match self {
             WorkloadSpec::Fb(params) => params.generate(&mut RngStreams::workload(seed)),
@@ -88,6 +97,36 @@ impl WorkloadSpec {
                 base_task_s,
             } => synthetic::decreasing_size_workload(*jobs, *width, *base_task_s),
             WorkloadSpec::Fixed(wl) => wl.clone(),
+            WorkloadSpec::Open(template) => {
+                assert!(
+                    template.is_bounded(),
+                    "open workload {:?} has no horizon or job cap — it would \
+                     generate forever (sweep cells attach no halting probe)",
+                    template.name()
+                );
+                let mut src = template.clone();
+                let mut rng = RngStreams::new(seed).stream(StreamId::Arrivals);
+                let jobs = std::iter::from_fn(|| src.next_job(&mut rng)).collect();
+                Workload::new(src.name(), jobs).expect("open generator assigns unique ids")
+            }
+        }
+    }
+
+    /// The streaming source a session for one cell consumes: closed
+    /// specs replay their materialized job vector, `Open` specs hand
+    /// out a fresh generator clone.
+    pub fn source(&self, seed: u64) -> Box<dyn WorkloadSource> {
+        match self {
+            WorkloadSpec::Open(template) => {
+                assert!(
+                    template.is_bounded(),
+                    "open workload {:?} has no horizon or job cap — a sweep \
+                     cell could never drain it (no halting probe attached)",
+                    template.name()
+                );
+                Box::new(template.clone())
+            }
+            closed => Box::new(ClosedSource::from(closed.realize(seed))),
         }
     }
 }
@@ -121,9 +160,11 @@ impl CellSpec {
         cfg
     }
 
-    /// Run this cell to completion (deterministic given `base`).
+    /// Run this cell to completion (deterministic given `base`): the
+    /// workload streams through its [`WorkloadSpec::source`], so open
+    /// cells never materialize their job list.
     pub fn run(&self, base: &SimConfig) -> SimOutcome {
-        let workload = self.workload.realize(self.seed);
+        let mut source = self.workload.source(self.seed);
         let mut scheduler = self.scheduler.clone();
         // The scenario's estimation error lives inside HFSP's training
         // module: wire it into the scheduler config, seeded from the cell
@@ -131,7 +172,7 @@ impl CellSpec {
         // Explicit per-scheduler error settings (e.g. the Fig. 6 bench)
         // win over the scenario; the `enabled` master switch gates it.
         scheduler.apply_fault_error(self.faults.config.effective_error_sigma(), self.seed);
-        run_simulation(&self.config(base), scheduler, &workload)
+        run_session(&self.config(base), scheduler, source.as_mut(), Vec::new())
     }
 }
 
@@ -418,6 +459,30 @@ mod tests {
         assert_eq!(cells[2].faults.label, "churn");
         assert_eq!(cells[3].faults.label, "churn");
         assert!(cells[2].config(grid.base()).faults.enabled);
+    }
+
+    #[test]
+    fn open_spec_streams_the_jobs_realize_materializes() {
+        use crate::workload::JobMix;
+        let template = OpenArrivals::poisson(1.0, 50.0).mix(JobMix::Uniform {
+            maps: 1,
+            task_s: 2.0,
+        });
+        let spec = WorkloadSpec::Open(template);
+        assert_eq!(spec.label(), "open-r1");
+        let materialized = spec.realize(9);
+        assert!(!materialized.is_empty());
+        let grid = ExperimentGrid::new("open")
+            .scheduler(SchedulerKind::Fifo)
+            .workload(spec)
+            .nodes(&[2])
+            .seeds(&[9]);
+        let outcome = grid.cells()[0].run(grid.base());
+        // The streamed session sees exactly the jobs realize() lists.
+        assert_eq!(outcome.jobs_arrived, materialized.len());
+        assert_eq!(outcome.sojourn.len(), materialized.len());
+        assert_eq!(outcome.workload, "open-r1");
+        assert!(outcome.peak_live_jobs <= materialized.len());
     }
 
     #[test]

@@ -181,10 +181,15 @@ pub enum StreamId {
     Faults = 1,
     /// Reserved for scheduler-internal randomness.
     Scheduler = 2,
+    /// Open arrival-process generation (workload sources pulling from
+    /// [`crate::workload::OpenArrivals`]). Appended for the session
+    /// API; closed sources never draw from it, so batch replays keep
+    /// their historical byte-identical outcomes.
+    Arrivals = 3,
 }
 
 /// Number of named substreams derived by [`RngStreams::new`].
-pub const STREAM_COUNT: usize = 3;
+pub const STREAM_COUNT: usize = 4;
 
 /// Per-subsystem RNG substreams, all derived **eagerly and in a fixed
 /// order** from one master seed.
@@ -494,14 +499,18 @@ mod tests {
         let mut a = streams.stream(StreamId::Placement);
         let mut b = streams.stream(StreamId::Faults);
         let mut c = streams.stream(StreamId::Scheduler);
+        let mut d = streams.stream(StreamId::Arrivals);
         let mut w = RngStreams::workload(5);
         let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
         let zs: Vec<u64> = (0..64).map(|_| c.next_u64()).collect();
+        let ds: Vec<u64> = (0..64).map(|_| d.next_u64()).collect();
         let ws: Vec<u64> = (0..64).map(|_| w.next_u64()).collect();
         assert_ne!(xs, ys);
         assert_ne!(ys, zs);
         assert_ne!(xs, zs);
+        assert_ne!(zs, ds);
+        assert_ne!(xs, ds);
         assert_ne!(xs, ws);
     }
 

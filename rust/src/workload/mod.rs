@@ -7,10 +7,21 @@
 //! (see DESIGN.md §2 for the substitution note). Pathological and
 //! illustrative workloads used by the micro-benchmarks live in
 //! [`synthetic`]; [`trace`] reads/writes replayable JSONL traces.
+//!
+//! Simulation sessions consume jobs through the pull-based
+//! [`WorkloadSource`] abstraction ([`source`]): closed [`Workload`]
+//! vectors stream through [`ClosedSource`], open rate-controlled
+//! arrival processes through [`open::OpenArrivals`], and JSONL traces
+//! replay lazily through [`trace::TraceSource`].
 
+pub mod open;
+pub mod source;
 pub mod swim;
 pub mod synthetic;
 pub mod trace;
+
+pub use open::{JobMix, OpenArrivals};
+pub use source::{ClosedSource, WorkloadSource};
 
 use crate::job::JobSpec;
 
@@ -22,23 +33,27 @@ pub struct Workload {
 }
 
 impl Workload {
-    pub fn new(name: impl Into<String>, mut jobs: Vec<JobSpec>) -> Self {
+    /// Build a workload: sorts jobs by submission time and rejects
+    /// duplicate job ids (they would corrupt the driver's job table).
+    /// Generators that assign ids themselves can `expect` the result;
+    /// anything ingesting external data (trace replay, the CLI) must
+    /// propagate the error.
+    pub fn new(name: impl Into<String>, mut jobs: Vec<JobSpec>) -> anyhow::Result<Self> {
         jobs.sort_by(|a, b| {
             a.submit_time
                 .partial_cmp(&b.submit_time)
                 .unwrap()
                 .then(a.id.cmp(&b.id))
         });
-        // Re-check ids are unique — duplicate ids would corrupt the
-        // driver's job table.
         let mut ids: Vec<_> = jobs.iter().map(|j| j.id).collect();
         ids.sort_unstable();
-        ids.dedup();
-        assert_eq!(ids.len(), jobs.len(), "duplicate job ids in workload");
-        Self {
+        if let Some(dup) = ids.windows(2).find(|w| w[0] == w[1]) {
+            anyhow::bail!("duplicate job id {} in workload", dup[0]);
+        }
+        Ok(Self {
             name: name.into(),
             jobs,
-        }
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -81,6 +96,7 @@ impl Workload {
             })
             .collect();
         Workload::new(format!("{}-map-only", self.name), jobs)
+            .expect("source workload ids are unique")
     }
 }
 
@@ -102,27 +118,27 @@ mod tests {
 
     #[test]
     fn sorts_by_submission() {
-        let w = Workload::new("t", vec![spec(1, 5.0), spec(2, 1.0)]);
+        let w = Workload::new("t", vec![spec(1, 5.0), spec(2, 1.0)]).unwrap();
         assert_eq!(w.jobs[0].id, 2);
         assert!((w.span() - 4.0).abs() < 1e-12);
     }
 
     #[test]
-    #[should_panic(expected = "duplicate")]
-    fn rejects_duplicate_ids() {
-        let _ = Workload::new("t", vec![spec(1, 0.0), spec(1, 1.0)]);
+    fn rejects_duplicate_ids_with_an_error() {
+        let err = Workload::new("t", vec![spec(1, 0.0), spec(1, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("duplicate job id 1"), "{err}");
     }
 
     #[test]
     fn totals() {
-        let w = Workload::new("t", vec![spec(1, 0.0), spec(2, 1.0)]);
+        let w = Workload::new("t", vec![spec(1, 0.0), spec(2, 1.0)]).unwrap();
         assert_eq!(w.total_tasks(), 4);
         assert!((w.total_work() - 30.0).abs() < 1e-12);
     }
 
     #[test]
     fn map_only_strips_reduces() {
-        let w = Workload::new("t", vec![spec(1, 0.0)]).map_only();
+        let w = Workload::new("t", vec![spec(1, 0.0)]).unwrap().map_only();
         assert_eq!(w.jobs[0].n_reduces(), 0);
         assert_eq!(w.jobs[0].n_maps(), 1);
         assert!(w.name.ends_with("map-only"));

@@ -1,0 +1,349 @@
+//! Open arrival-process workload generation.
+//!
+//! The paper's evaluation (and the FB-dataset) is *closed*: a fixed job
+//! list with recorded submission times. The size-based scheduling
+//! literature it builds on — Dell'Amico et al.'s simulator study and
+//! PSBS — instead evaluates disciplines under **open, rate-controlled
+//! arrivals**: jobs arrive as a Poisson process of configurable
+//! intensity and the metric of interest is steady-state behaviour as a
+//! function of load. [`OpenArrivals`] supplies that scenario axis as a
+//! [`WorkloadSource`]: jobs are *generated on pull*, one at a time, so
+//! a 10⁶-job run never holds more than the active jobs in memory.
+//!
+//! Intensity can be constant or diurnally modulated (a sinusoid around
+//! the base rate, sampled by Lewis–Shedler thinning), which reproduces
+//! the day/night load swings of production traces.
+//!
+//! Job *shapes* are drawn by a [`JobMix`]: either the §4.1 FB class mix
+//! (small/medium/large with the published shape statistics, reusing the
+//! [`FbWorkload`] duration parameters) or a fixed uniform shape for
+//! micro-benchmarks.
+
+use super::source::WorkloadSource;
+use super::swim::FbWorkload;
+use crate::job::{JobClass, JobSpec};
+use crate::util::rng::{exponential, weighted_choice, Pcg64, Rng};
+
+/// Per-job shape sampler for open generators.
+#[derive(Clone, Debug)]
+pub enum JobMix {
+    /// The §4.1 FB-dataset class mix (53/41/6 small/medium/large), with
+    /// shapes and durations drawn by the same rules as
+    /// [`FbWorkload::generate`].
+    Fb(FbWorkload),
+    /// Identical map-only jobs (micro-benchmarks, bounded-memory smoke
+    /// tests): `maps` tasks of `task_s` seconds each.
+    Uniform { maps: usize, task_s: f64 },
+}
+
+impl JobMix {
+    /// The default FB mix.
+    pub fn fb() -> Self {
+        JobMix::Fb(FbWorkload::default())
+    }
+
+    /// Mean serialized work per job, seconds — used to express a rate
+    /// as a load factor. For the FB mix this is a coarse analytic
+    /// estimate of the class-weighted mean (log-uniform map counts,
+    /// log-normal task durations).
+    pub fn mean_job_size_s(&self) -> f64 {
+        match self {
+            JobMix::Uniform { maps, task_s } => *maps as f64 * task_s,
+            JobMix::Fb(p) => {
+                let n = (p.n_small + p.n_medium + p.n_large) as f64;
+                let mean_map = p.map_task_median_s * (p.map_task_sigma.powi(2) / 2.0).exp();
+                let mean_red = p.reduce_task_median_s * (p.reduce_task_sigma.powi(2) / 2.0).exp();
+                // Log-uniform mean counts: (hi - lo) / ln(hi / lo).
+                let lu = |lo: f64, hi: f64| (hi - lo) / (hi / lo).ln();
+                let small = 1.25 * mean_map;
+                let medium = lu(5.0, 500.0) * mean_map + 0.5 * lu(2.0, 100.0) * mean_red;
+                let large = (2.0 * 3000.0 * mean_map
+                    + 3.0 * (1100.0 * mean_map + 200.0 * mean_red)
+                    + (200.0 * mean_map + 1000.0 * mean_red))
+                    / 6.0;
+                (p.n_small as f64 * small + p.n_medium as f64 * medium + p.n_large as f64 * large)
+                    / n
+            }
+        }
+    }
+
+    /// Draw one job spec.
+    pub fn sample(&self, rng: &mut Pcg64, id: u64, submit: f64) -> JobSpec {
+        match self {
+            JobMix::Uniform { maps, task_s } => JobSpec {
+                id,
+                name: format!("open-uni-{id}"),
+                class: JobClass::Small,
+                submit_time: submit,
+                map_durations: vec![*task_s; *maps],
+                reduce_durations: vec![],
+            },
+            // Class drawn by the configured frequencies; shapes and
+            // durations come from the shared §4.1 samplers in
+            // [`FbWorkload`] — one implementation for the closed
+            // generator and this open path.
+            JobMix::Fb(p) => {
+                let class = match weighted_choice(
+                    rng,
+                    &[p.n_small as f64, p.n_medium as f64, p.n_large as f64],
+                ) {
+                    0 => JobClass::Small,
+                    1 => JobClass::Medium,
+                    _ => JobClass::Large,
+                };
+                let (n_maps, n_reduces) = match class {
+                    JobClass::Small => FbWorkload::sample_small_shape(rng),
+                    JobClass::Medium => FbWorkload::sample_medium_shape(rng),
+                    JobClass::Large => FbWorkload::sample_large_archetype(rng),
+                };
+                p.make_job(rng, id, class, submit, n_maps, n_reduces)
+            }
+        }
+    }
+}
+
+/// Poisson (optionally diurnally modulated) open arrival generator.
+///
+/// Jobs arrive at mean rate [`rate`](OpenArrivals::rate) until the
+/// submission horizon or the job cap is reached; shapes come from the
+/// [`JobMix`]. The struct is a *template*: cloning it yields a fresh
+/// generator positioned at t = 0, which is how the sweep engine gives
+/// every cell its own stream.
+#[derive(Clone, Debug)]
+pub struct OpenArrivals {
+    name: String,
+    /// Mean arrival rate, jobs per simulated second.
+    pub rate: f64,
+    /// Stop submitting after this simulated time (the cluster then
+    /// drains). `f64::INFINITY` leaves only the job cap.
+    pub horizon_s: f64,
+    /// Hard cap on submitted jobs (`u64::MAX` = uncapped).
+    pub max_jobs: u64,
+    /// Shape sampler.
+    pub mix: JobMix,
+    /// Relative amplitude of the diurnal rate modulation in `[0, 1]`;
+    /// 0 = homogeneous Poisson.
+    pub diurnal_amplitude: f64,
+    /// Period of the modulation, seconds (default 24 h).
+    pub diurnal_period_s: f64,
+    clock: f64,
+    emitted: u64,
+}
+
+impl OpenArrivals {
+    /// Homogeneous Poisson arrivals of the FB job mix at `rate` jobs/s
+    /// until `horizon_s`.
+    pub fn poisson(rate: f64, horizon_s: f64) -> Self {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        Self {
+            name: format!("open-r{rate}"),
+            rate,
+            horizon_s,
+            max_jobs: u64::MAX,
+            mix: JobMix::fb(),
+            diurnal_amplitude: 0.0,
+            diurnal_period_s: 24.0 * 3600.0,
+            clock: 0.0,
+            emitted: 0,
+        }
+    }
+
+    /// Replace the job mix (builder style).
+    pub fn mix(mut self, mix: JobMix) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    /// Cap the number of submitted jobs (builder style).
+    pub fn max_jobs(mut self, max: u64) -> Self {
+        self.max_jobs = max;
+        self
+    }
+
+    /// Enable diurnal rate modulation (builder style). `amplitude` is
+    /// clamped into `[0, 1]`.
+    pub fn diurnal(mut self, amplitude: f64, period_s: f64) -> Self {
+        assert!(period_s > 0.0, "diurnal period must be positive");
+        self.diurnal_amplitude = amplitude.clamp(0.0, 1.0);
+        self.diurnal_period_s = period_s;
+        self.name = format!("{}-diurnal", self.name);
+        self
+    }
+
+    /// Override the display name (sweep labels).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Jobs emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// The offered load factor on a cluster with `slots` task slots:
+    /// `rate · E[job size] / slots`. Values ≥ 1 mean the queue grows
+    /// without bound until the horizon.
+    pub fn load_factor(&self, slots: usize) -> f64 {
+        self.rate * self.mix.mean_job_size_s() / slots.max(1) as f64
+    }
+
+    /// Whether the stream terminates on its own: a finite submission
+    /// horizon or a job cap. An unbounded generator is only usable
+    /// under an external stop (a halting [`Probe`]); contexts without
+    /// one — the sweep engine, [`WorkloadSpec::realize`] — must reject
+    /// it up front instead of hanging.
+    ///
+    /// [`Probe`]: crate::metrics::Probe
+    /// [`WorkloadSpec::realize`]: crate::sweep::grid::WorkloadSpec::realize
+    pub fn is_bounded(&self) -> bool {
+        self.horizon_s.is_finite() || self.max_jobs < u64::MAX
+    }
+}
+
+impl WorkloadSource for OpenArrivals {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn next_job(&mut self, rng: &mut Pcg64) -> Option<JobSpec> {
+        if self.emitted >= self.max_jobs {
+            return None;
+        }
+        // Lewis–Shedler thinning against the peak rate; with zero
+        // amplitude every proposal is accepted (plain inversion).
+        let peak = self.rate * (1.0 + self.diurnal_amplitude);
+        loop {
+            self.clock += exponential(rng, 1.0 / peak);
+            if self.clock > self.horizon_s {
+                return None;
+            }
+            if self.diurnal_amplitude == 0.0 {
+                break;
+            }
+            let phase = std::f64::consts::TAU * self.clock / self.diurnal_period_s;
+            let lambda = self.rate * (1.0 + self.diurnal_amplitude * phase.sin());
+            if rng.next_f64() * peak < lambda {
+                break;
+            }
+        }
+        let id = self.emitted;
+        self.emitted += 1;
+        Some(self.mix.sample(rng, id, self.clock))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SeedableRng;
+
+    fn drain(src: &mut OpenArrivals, seed: u64) -> Vec<JobSpec> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        std::iter::from_fn(|| src.next_job(&mut rng)).collect()
+    }
+
+    #[test]
+    fn arrivals_are_ordered_unique_and_rate_controlled() {
+        let mut src = OpenArrivals::poisson(2.0, 5_000.0).mix(JobMix::Uniform {
+            maps: 1,
+            task_s: 1.0,
+        });
+        let jobs = drain(&mut src, 7);
+        let n = jobs.len() as f64;
+        assert!(
+            (n - 10_000.0).abs() < 500.0,
+            "≈ rate × horizon arrivals, got {n}"
+        );
+        let mut last = 0.0;
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i as u64, "dense unique ids");
+            assert!(j.submit_time >= last);
+            assert!(j.submit_time <= 5_000.0);
+            last = j.submit_time;
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let tpl = OpenArrivals::poisson(1.0, 500.0);
+        let a = drain(&mut tpl.clone(), 42);
+        let b = drain(&mut tpl.clone(), 42);
+        let c = drain(&mut tpl.clone(), 43);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.submit_time, y.submit_time);
+            assert_eq!(x.map_durations, y.map_durations);
+        }
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.submit_time != y.submit_time),
+            "different seeds differ"
+        );
+    }
+
+    #[test]
+    fn max_jobs_caps_the_stream() {
+        let mut src = OpenArrivals::poisson(10.0, f64::INFINITY).max_jobs(100);
+        let jobs = drain(&mut src, 1);
+        assert_eq!(jobs.len(), 100);
+        assert_eq!(src.emitted(), 100);
+    }
+
+    #[test]
+    fn fb_mix_respects_class_shapes() {
+        let mut src = OpenArrivals::poisson(5.0, 1_000.0);
+        let jobs = drain(&mut src, 3);
+        assert!(jobs.len() > 1_000, "enough samples");
+        for j in &jobs {
+            match j.class {
+                JobClass::Small => {
+                    assert!(j.n_maps() == 1 || j.n_maps() == 2);
+                    assert_eq!(j.n_reduces(), 0);
+                }
+                JobClass::Medium => {
+                    assert!((5..=500).contains(&j.n_maps()));
+                    assert!(j.n_reduces() == 0 || (2..=100).contains(&j.n_reduces()));
+                }
+                JobClass::Large => {
+                    let huge = j.n_maps() >= 2800 && j.n_reduces() == 0;
+                    let mid = (700..=1500).contains(&j.n_maps())
+                        && (150..=250).contains(&j.n_reduces());
+                    let wide = j.n_maps() == 200 && j.n_reduces() == 1000;
+                    assert!(huge || mid || wide, "unknown large shape");
+                }
+            }
+        }
+        let small = jobs.iter().filter(|j| j.class == JobClass::Small).count();
+        let frac = small as f64 / jobs.len() as f64;
+        assert!((frac - 0.53).abs() < 0.07, "small fraction {frac}");
+    }
+
+    #[test]
+    fn diurnal_modulation_shifts_mass_toward_the_peak() {
+        let period = 1_000.0;
+        let mut src = OpenArrivals::poisson(2.0, 10_000.0)
+            .mix(JobMix::Uniform { maps: 1, task_s: 1.0 })
+            .diurnal(0.9, period);
+        assert!(src.name().contains("diurnal"));
+        let jobs = drain(&mut src, 11);
+        // First half-period of each cycle (sin > 0) should hold well
+        // over half the arrivals.
+        let peak_half = jobs
+            .iter()
+            .filter(|j| (j.submit_time % period) < period / 2.0)
+            .count();
+        let frac = peak_half as f64 / jobs.len() as f64;
+        assert!(frac > 0.6, "peak-half fraction {frac}");
+    }
+
+    #[test]
+    fn load_factor_is_rate_times_size_over_slots() {
+        let src = OpenArrivals::poisson(2.0, 100.0).mix(JobMix::Uniform {
+            maps: 4,
+            task_s: 5.0,
+        });
+        // 2 jobs/s × 20 s work / 80 slots = 0.5.
+        assert!((src.load_factor(80) - 0.5).abs() < 1e-12);
+        assert!(src.load_factor(0).is_finite(), "slot clamp");
+    }
+}

@@ -24,7 +24,7 @@
 
 use super::Workload;
 use crate::job::{JobClass, JobSpec};
-use crate::util::rng::{exponential, log_normal, shuffle, Pcg64, Rng};
+use crate::util::rng::{exponential, log_normal, shuffle, weighted_choice, Pcg64, Rng};
 
 /// FB-dataset generator parameters.
 #[derive(Clone, Debug)]
@@ -95,21 +95,8 @@ impl FbWorkload {
         for (i, class) in classes.iter().enumerate() {
             t += exponential(rng, self.mean_interarrival_s);
             let (n_maps, n_reduces) = match class {
-                JobClass::Small => {
-                    // 75% single map, 25% two maps; no reduces.
-                    let maps = if rng.gen_bool(0.25) { 2 } else { 1 };
-                    (maps, 0)
-                }
-                JobClass::Medium => {
-                    let maps = log_uniform_usize(rng, 5, 500);
-                    // Half the medium jobs have no reduce phase.
-                    let reduces = if rng.gen_bool(0.5) {
-                        0
-                    } else {
-                        log_uniform_usize(rng, 2, 100)
-                    };
-                    (maps, reduces)
-                }
+                JobClass::Small => Self::sample_small_shape(rng),
+                JobClass::Medium => Self::sample_medium_shape(rng),
                 JobClass::Large => {
                     let shape = large_shapes[next_large % large_shapes.len()];
                     next_large += 1;
@@ -118,7 +105,39 @@ impl FbWorkload {
             };
             jobs.push(self.make_job(rng, i as u64, *class, t, n_maps, n_reduces));
         }
-        Workload::new("fb-dataset", jobs)
+        Workload::new("fb-dataset", jobs).expect("generator assigns sequential ids")
+    }
+
+    /// §4.1 small-job shape: 75 % single map, 25 % two maps; no
+    /// reduces. Shared by the closed generator and the open-arrival
+    /// sampler ([`crate::workload::JobMix`]).
+    pub fn sample_small_shape(rng: &mut Pcg64) -> (usize, usize) {
+        (if rng.gen_bool(0.25) { 2 } else { 1 }, 0)
+    }
+
+    /// §4.1 medium-job shape: 5–500 maps (log-uniform); half the jobs
+    /// have no reduce phase, the rest 2–100 reduces (log-uniform).
+    pub fn sample_medium_shape(rng: &mut Pcg64) -> (usize, usize) {
+        let maps = log_uniform_usize(rng, 5, 500);
+        // Half the medium jobs have no reduce phase.
+        let reduces = if rng.gen_bool(0.5) {
+            0
+        } else {
+            log_uniform_usize(rng, 2, 100)
+        };
+        (maps, reduces)
+    }
+
+    /// One of the three §4.1 large archetypes, drawn i.i.d. with the
+    /// published 2:3:1 frequencies — the *open-arrival* large sampler.
+    /// (The closed generator instead pre-assigns the exact six-shape
+    /// multiset via [`FbWorkload::generate`]'s `large_shapes`.)
+    pub fn sample_large_archetype(rng: &mut Pcg64) -> (usize, usize) {
+        match weighted_choice(rng, &[2.0, 3.0, 1.0]) {
+            0 => (2800 + rng.gen_index(400), 0),
+            1 => (700 + rng.gen_index(801), 150 + rng.gen_index(101)),
+            _ => (200, 1000),
+        }
     }
 
     /// The six large-job shapes from §4.1.
@@ -140,7 +159,10 @@ impl FbWorkload {
         shapes
     }
 
-    fn make_job(
+    /// Materialize one job: per-job mean task durations drawn from the
+    /// configured log-normals, with sub-5 % within-job jitter (§4.1).
+    /// Shared by the closed generator and the open-arrival sampler.
+    pub fn make_job(
         &self,
         rng: &mut Pcg64,
         id: u64,

@@ -30,7 +30,7 @@ pub fn fig7_workload() -> Workload {
             reduce_durations: vec![60.0; n_red],
         });
     }
-    Workload::new("fig7-preemption", jobs)
+    Workload::new("fig7-preemption", jobs).expect("fig7 ids are unique")
 }
 
 /// Pathological arrival pattern discussed in §3.3 ("Finite machine
@@ -52,7 +52,7 @@ pub fn decreasing_size_workload(n_jobs: usize, slots_worth: usize, base_task_s: 
             }
         })
         .collect();
-    Workload::new("decreasing-size", jobs)
+    Workload::new("decreasing-size", jobs).expect("sequential ids are unique")
 }
 
 /// The three-job single-server example of Fig. 1 (§2.1): jobs requiring
@@ -77,6 +77,7 @@ pub fn fig1_workload(server_slots: usize, waves: usize) -> Workload {
         "fig1-fsp-intuition",
         vec![mk(1, 0.0, 30.0), mk(2, 10.0, 10.0), mk(3, 15.0, 10.0)],
     )
+    .expect("fig1 ids are unique")
 }
 
 /// The multi-processor example of Fig. 2 (§2.1): jobs needing 100 %, 55 %
@@ -103,6 +104,7 @@ pub fn fig2_workload(total_slots: usize, waves: usize) -> Workload {
             mk(3, 13.0, 0.35, 10.0),
         ],
     )
+    .expect("fig2 ids are unique")
 }
 
 /// A uniform batch: `n` identical jobs arriving together — useful for
@@ -119,7 +121,7 @@ pub fn uniform_batch(n: usize, maps_per_job: usize, task_s: f64) -> Workload {
             reduce_durations: vec![],
         })
         .collect();
-    Workload::new("uniform-batch", jobs)
+    Workload::new("uniform-batch", jobs).expect("sequential ids are unique")
 }
 
 #[cfg(test)]

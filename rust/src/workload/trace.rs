@@ -11,10 +11,18 @@
 //! `hfsp simulate --trace <file>` replays it under any scheduler, so a
 //! FAIR run and an HFSP run see the *identical* job sequence (as in the
 //! paper's macro benchmarks).
+//!
+//! Two replay paths exist: [`read_trace`] materializes the whole file
+//! into a [`Workload`] (validating ids up front), while [`TraceSource`]
+//! streams it line by line as a
+//! [`WorkloadSource`](crate::workload::WorkloadSource) — constant
+//! memory regardless of trace length, for million-job replays.
 
+use super::source::WorkloadSource;
 use super::Workload;
 use crate::job::{JobClass, JobSpec};
 use crate::util::json::{self, Json};
+use crate::util::rng::Pcg64;
 use std::io::{BufRead, Write};
 use std::path::Path;
 
@@ -108,7 +116,7 @@ pub fn from_jsonl(name: &str, text: &str) -> anyhow::Result<Workload> {
         );
     }
     anyhow::ensure!(!jobs.is_empty(), "trace contains no jobs");
-    Ok(Workload::new(name, jobs))
+    Workload::new(name, jobs)
 }
 
 /// Write a trace file.
@@ -135,6 +143,104 @@ pub fn read_trace(path: &Path) -> anyhow::Result<Workload> {
         .unwrap_or("trace")
         .to_string();
     from_jsonl(&name, &text)
+}
+
+/// Streaming JSONL trace replay: a [`WorkloadSource`] that parses one
+/// line per pulled job, holding O(1) trace state regardless of length.
+///
+/// The trace must be sorted by submission time (which [`write_trace`]
+/// guarantees) and carry unique job ids — unlike [`read_trace`], the
+/// streaming path cannot validate ids without O(jobs) memory, so it
+/// trusts the file. A malformed or out-of-order line ends the stream
+/// early and parks the error for [`WorkloadSource::take_error`], which
+/// the driver polls at exhaustion and surfaces as
+/// `SimOutcome::stream_error` (a hard error in the CLI).
+pub struct TraceSource {
+    name: String,
+    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
+    lineno: usize,
+    last_submit: f64,
+    yielded: usize,
+    error: Option<anyhow::Error>,
+}
+
+impl TraceSource {
+    /// Open a trace file for streaming replay.
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot open trace {path:?}: {e}"))?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("trace")
+            .to_string();
+        Ok(Self {
+            name,
+            lines: std::io::BufReader::new(file).lines(),
+            lineno: 0,
+            last_submit: 0.0,
+            yielded: 0,
+            error: None,
+        })
+    }
+
+    /// Jobs yielded so far.
+    pub fn yielded(&self) -> usize {
+        self.yielded
+    }
+
+    fn fail(&mut self, err: anyhow::Error) -> Option<JobSpec> {
+        log::error!("trace {:?} line {}: {err:#}", self.name, self.lineno);
+        self.error = Some(anyhow::anyhow!("trace line {}: {err:#}", self.lineno));
+        None
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The parked parse/order error, if the stream was truncated.
+    fn take_error(&mut self) -> Option<String> {
+        self.error.take().map(|e| format!("{e:#}"))
+    }
+
+    fn next_job(&mut self, _rng: &mut Pcg64) -> Option<JobSpec> {
+        if self.error.is_some() {
+            return None;
+        }
+        loop {
+            self.lineno += 1;
+            let line = match self.lines.next()? {
+                Ok(line) => line,
+                Err(e) => return self.fail(anyhow::anyhow!("read error: {e}")),
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = match json::parse(line) {
+                Ok(v) => v,
+                Err(e) => return self.fail(anyhow::anyhow!("{e}")),
+            };
+            let job = match job_from_json(&v) {
+                Ok(job) => job,
+                Err(e) => return self.fail(e),
+            };
+            if job.submit_time < self.last_submit {
+                return self.fail(anyhow::anyhow!(
+                    "jobs out of order: submit {} after {} — streaming replay \
+                     requires a submission-sorted trace",
+                    job.submit_time,
+                    self.last_submit
+                ));
+            }
+            self.last_submit = job.submit_time;
+            self.yielded += 1;
+            return Some(job);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +297,79 @@ mod tests {
         let w2 = read_trace(&path).unwrap();
         assert_eq!(w2.len(), 5);
         assert_eq!(w2.name, "fig7");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_duplicate_ids_as_error_not_panic() {
+        let line = r#"{"id":1,"name":"x","class":"small","submit":0,"maps":[5],"reduces":[]}"#;
+        let err = from_jsonl("t", &format!("{line}\n{line}\n")).unwrap_err();
+        assert!(err.to_string().contains("duplicate job id"), "{err}");
+    }
+
+    #[test]
+    fn trace_source_streams_the_same_jobs_as_read_trace() {
+        let w = FbWorkload {
+            n_small: 6,
+            n_medium: 3,
+            n_large: 1,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::seed_from_u64(5));
+        let dir = std::env::temp_dir().join("hfsp-trace-stream-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.jsonl");
+        write_trace(&w, &path).unwrap();
+
+        let mut src = TraceSource::open(&path).unwrap();
+        assert_eq!(src.name(), "stream");
+        let mut rng = Pcg64::seed_from_u64(0);
+        let mut streamed = Vec::new();
+        while let Some(job) = src.next_job(&mut rng) {
+            streamed.push(job);
+        }
+        assert!(src.take_error().is_none());
+        assert_eq!(src.yielded(), w.len());
+        assert_eq!(streamed.len(), w.len());
+        for (a, b) in w.jobs.iter().zip(&streamed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.map_durations.len(), b.map_durations.len());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trace_source_parks_errors_and_ends_the_stream() {
+        let dir = std::env::temp_dir().join("hfsp-trace-stream-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        let good = r#"{"id":1,"name":"x","class":"small","submit":0,"maps":[5],"reduces":[]}"#;
+        std::fs::write(&path, format!("{good}\nnot json\n{good}\n")).unwrap();
+        let mut src = TraceSource::open(&path).unwrap();
+        let mut rng = Pcg64::seed_from_u64(0);
+        assert!(src.next_job(&mut rng).is_some());
+        assert!(src.next_job(&mut rng).is_none(), "bad line ends the stream");
+        assert!(src.next_job(&mut rng).is_none(), "stream stays ended");
+        let err = src.take_error().expect("error parked");
+        assert!(err.to_string().contains("line 2"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trace_source_rejects_out_of_order_arrivals() {
+        let dir = std::env::temp_dir().join("hfsp-trace-stream-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unsorted.jsonl");
+        let a = r#"{"id":1,"name":"x","class":"small","submit":10,"maps":[5],"reduces":[]}"#;
+        let b = r#"{"id":2,"name":"y","class":"small","submit":3,"maps":[5],"reduces":[]}"#;
+        std::fs::write(&path, format!("{a}\n{b}\n")).unwrap();
+        let mut src = TraceSource::open(&path).unwrap();
+        let mut rng = Pcg64::seed_from_u64(0);
+        assert!(src.next_job(&mut rng).is_some());
+        assert!(src.next_job(&mut rng).is_none());
+        let err = src.take_error().expect("error parked");
+        assert!(err.to_string().contains("out of order"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 }

@@ -44,7 +44,7 @@ fn fifo_serves_jobs_in_submission_order() {
             reduce_durations: vec![],
         },
     ];
-    let wl = Workload::new("fifo-order", jobs);
+    let wl = Workload::new("fifo-order", jobs).expect("unique ids");
     let o = run_simulation(&cfg(1), SchedulerKind::Fifo, &wl);
     let by_job = o.sojourn.by_job();
     let finish1 = by_job[&1] + 0.0;

@@ -1,0 +1,329 @@
+//! Streaming-session integration: the `WorkloadSource`/`Probe` API.
+//!
+//! Pins the three acceptance properties of the session redesign:
+//!
+//! 1. **compat** — a closed workload streamed through the session path
+//!    (the `run_simulation` shim, the `Simulation` builder, sweep cells)
+//!    produces byte-identical statistics and sweep JSON/table output to
+//!    the historical batch path;
+//! 2. **scale** — an open Poisson session completes 100k jobs with a
+//!    live-job high-water mark orders of magnitude below the job count
+//!    (O(active) memory, not O(workload));
+//! 3. **control** — probes observe the stream incrementally and can
+//!    halt a session that would otherwise run indefinitely.
+
+use hfsp::prelude::*;
+use hfsp::sweep::{CellResult, SweepReport};
+use hfsp::workload::trace::{self, TraceSource};
+
+fn small_fb() -> FbWorkload {
+    FbWorkload {
+        n_small: 8,
+        n_medium: 3,
+        n_large: 1,
+        ..Default::default()
+    }
+}
+
+fn cfg(nodes: usize, seed: u64) -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Exact-equality comparison of everything deterministic in an outcome.
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
+    assert_eq!(a.scheduler, b.scheduler);
+    assert_eq!(a.events_processed, b.events_processed, "event counts");
+    assert_eq!(a.events_skipped, b.events_skipped);
+    assert_eq!(a.makespan, b.makespan, "makespan (bitwise)");
+    assert_eq!(a.sojourn.len(), b.sojourn.len());
+    for (x, y) in a.sojourn.records().iter().zip(b.sojourn.records()) {
+        assert_eq!(x.job, y.job);
+        assert_eq!(x.finish, y.finish, "job {} finish (bitwise)", x.job);
+    }
+    assert_eq!(a.locality.local, b.locality.local);
+    assert_eq!(a.locality.remote, b.locality.remote);
+    let (ca, cb) = (a.counters, b.counters);
+    assert_eq!(ca.launches, cb.launches);
+    assert_eq!(ca.suspends, cb.suspends);
+    assert_eq!(ca.resumes, cb.resumes);
+    assert_eq!(ca.kills, cb.kills);
+    assert_eq!(ca.swap_ins, cb.swap_ins);
+    assert_eq!(ca.heartbeats, cb.heartbeats);
+    assert_eq!(ca.stale_completions, cb.stale_completions);
+    assert_eq!(a.faults.wasted_work_s, b.faults.wasted_work_s, "wasted (bitwise)");
+    assert_eq!(a.faults.re_executed_tasks, b.faults.re_executed_tasks);
+    assert_eq!(a.jobs_arrived, b.jobs_arrived);
+    assert_eq!(a.stream_error, b.stream_error);
+}
+
+#[test]
+fn shim_builder_and_session_agree_on_closed_workloads() {
+    let wl = small_fb().generate(&mut Pcg64::seed_from_u64(11));
+    let c = cfg(8, 11);
+    for name in ["fifo", "fair", "hfsp"] {
+        let kind = SchedulerKind::from_name(name).unwrap();
+        let shim = run_simulation(&c, kind.clone(), &wl);
+        let built = Simulation::new(c.clone())
+            .scheduler(kind.clone())
+            .workload(wl.as_source())
+            .run();
+        let mut src = wl.clone().into_source();
+        let session = run_session(&c, kind, &mut src, Vec::new());
+        assert_outcomes_identical(&shim, &built);
+        assert_outcomes_identical(&shim, &session);
+        assert_eq!(shim.sojourn.len(), wl.len(), "all jobs finish ({name})");
+    }
+}
+
+#[test]
+fn simultaneous_arrivals_stream_in_batch_order() {
+    // All jobs submit at t = 0: the arrival feed must deliver the whole
+    // instant-batch before any heartbeat, exactly like the batch path.
+    let wl = hfsp::workload::synthetic::uniform_batch(6, 2, 4.0);
+    let c = cfg(2, 3);
+    let batch = run_simulation(&c, SchedulerKind::Fifo, &wl);
+    let streamed = Simulation::new(c)
+        .scheduler(SchedulerKind::Fifo)
+        .workload(wl.as_source())
+        .run();
+    assert_outcomes_identical(&batch, &streamed);
+}
+
+#[test]
+fn sweep_json_and_table_identical_when_cells_stream_through_sessions() {
+    // The sweep engine itself now streams every cell; re-run each cell
+    // by hand through the Simulation builder over the materialized
+    // workload and pin byte-identical aggregated JSON + table output.
+    let grid = ExperimentGrid::new("session-compat")
+        .scheduler(SchedulerKind::Fifo)
+        .scheduler(SchedulerKind::SizeBased(HfspConfig::default()))
+        .workload(WorkloadSpec::Fb(small_fb()))
+        .workload(WorkloadSpec::UniformBatch {
+            jobs: 3,
+            maps_per_job: 2,
+            task_s: 5.0,
+        })
+        .nodes(&[4])
+        .seeds(&[1, 2]);
+
+    let engine_run = run_grid_threads(&grid, 3);
+    let manual: Vec<CellResult> = grid
+        .cells()
+        .into_iter()
+        .map(|spec| {
+            let workload = spec.workload.realize(spec.seed);
+            let mut scheduler = spec.scheduler.clone();
+            scheduler.apply_fault_error(
+                spec.faults.config.effective_error_sigma(),
+                spec.seed,
+            );
+            let outcome = Simulation::new(spec.config(grid.base()))
+                .scheduler(scheduler)
+                .workload(workload.into_source())
+                .run();
+            CellResult { spec, outcome }
+        })
+        .collect();
+    let manual_report = SweepReport::from_cells(grid.name(), &manual);
+
+    let a = engine_run.aggregate();
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        manual_report.to_json().to_string_pretty(),
+        "aggregated sweep JSON must be byte-identical"
+    );
+    assert_eq!(
+        a.table(),
+        manual_report.table(),
+        "aggregated sweep table must be byte-identical"
+    );
+}
+
+#[test]
+fn open_session_completes_100k_jobs_in_bounded_memory() {
+    // 20 nodes × 4 map slots at ~25 % offered load: the submission
+    // horizon is unbounded, the job cap is 100k. Memory (proxied by the
+    // live-job high-water mark) must scale with concurrency, not with
+    // the 100k-job workload length.
+    let source = OpenArrivals::poisson(20.0, f64::INFINITY)
+        .mix(JobMix::Uniform {
+            maps: 1,
+            task_s: 1.0,
+        })
+        .max_jobs(100_000);
+    assert!(source.load_factor(80) < 0.5, "smoke run must be stable");
+    let outcome = Simulation::new(cfg(20, 5))
+        .scheduler(SchedulerKind::Fifo)
+        .workload(source)
+        .run();
+    assert!(!outcome.truncated());
+    assert_eq!(outcome.jobs_arrived, 100_000);
+    assert_eq!(outcome.sojourn.len(), 100_000, "every job finishes");
+    assert!(
+        outcome.peak_live_jobs <= 1_000,
+        "live jobs must stay bounded (peak {} of 100k)",
+        outcome.peak_live_jobs
+    );
+    assert!(!outcome.halted_by_probe);
+    assert!(outcome.events_processed > 200_000);
+}
+
+#[test]
+fn open_sessions_are_seed_deterministic() {
+    let template = OpenArrivals::poisson(2.0, 500.0).mix(JobMix::Uniform {
+        maps: 2,
+        task_s: 3.0,
+    });
+    let run = |seed: u64| {
+        Simulation::new(cfg(8, seed))
+            .scheduler(SchedulerKind::hfsp())
+            .workload(template.clone())
+            .run()
+    };
+    let a = run(7);
+    let b = run(7);
+    let c = run(8);
+    assert_outcomes_identical(&a, &b);
+    assert!(
+        a.events_processed != c.events_processed || a.makespan != c.makespan,
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn probe_halts_an_unbounded_open_session() {
+    // No horizon, no job cap: without the probe this session would not
+    // end. The JobLimitProbe stops it after 200 finished jobs.
+    let source = OpenArrivals::poisson(5.0, f64::INFINITY).mix(JobMix::Uniform {
+        maps: 1,
+        task_s: 1.0,
+    });
+    let mut limit = JobLimitProbe::new(200);
+    let outcome = Simulation::new(cfg(8, 1))
+        .scheduler(SchedulerKind::Fifo)
+        .workload(source)
+        .probe(&mut limit)
+        .run();
+    assert!(outcome.halted_by_probe, "probe must end the session");
+    assert_eq!(outcome.sojourn.len(), 200);
+    assert_eq!(limit.seen(), 200);
+    assert!(outcome.jobs_arrived >= 200);
+    assert!(outcome.makespan.is_finite());
+}
+
+#[test]
+fn streaming_trace_replay_matches_materialized_replay() {
+    let wl = small_fb().generate(&mut Pcg64::seed_from_u64(23));
+    let dir = std::env::temp_dir().join("hfsp-session-trace-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("session.jsonl");
+    trace::write_trace(&wl, &path).unwrap();
+
+    // Both runs parse the same file, so the f64 round-trip is shared
+    // and the outcomes must match bitwise.
+    let materialized = trace::read_trace(&path).unwrap();
+    let c = cfg(8, 23);
+    let batch = run_simulation(&c, SchedulerKind::hfsp(), &materialized);
+    let mut src = TraceSource::open(&path).unwrap();
+    let streamed = run_session(&c, SchedulerKind::hfsp(), &mut src, Vec::new());
+    assert!(src.take_error().is_none());
+    assert_outcomes_identical(&batch, &streamed);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn duplicate_ids_surface_as_errors_not_panics() {
+    let line = r#"{"id":9,"name":"x","class":"small","submit":0,"maps":[5],"reduces":[]}"#;
+    let err = trace::from_jsonl("dup", &format!("{line}\n{line}\n")).unwrap_err();
+    assert!(err.to_string().contains("duplicate job id"), "{err}");
+}
+
+#[test]
+fn corrupt_trace_line_surfaces_as_a_stream_error_through_the_builder() {
+    // The builder consumes the source, so the driver itself must poll
+    // the source's error at exhaustion — a partial replay is flagged in
+    // the outcome, never mistaken for a clean run.
+    let dir = std::env::temp_dir().join("hfsp-session-corrupt-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corrupt.jsonl");
+    let good = r#"{"id":1,"name":"a","class":"small","submit":0,"maps":[2],"reduces":[]}"#;
+    std::fs::write(&path, format!("{good}\nnot json\n")).unwrap();
+    let src = TraceSource::open(&path).unwrap();
+    let outcome = Simulation::new(cfg(2, 1))
+        .scheduler(SchedulerKind::Fifo)
+        .workload(src)
+        .run();
+    let err = outcome.stream_error.expect("corrupt line must be reported");
+    assert!(err.contains("line 2"), "{err}");
+    assert_eq!(outcome.sojourn.len(), 1, "the good job still ran");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn duplicate_id_in_a_stream_halts_with_a_stream_error() {
+    // A streamed trace cannot pre-validate ids; the driver must fail
+    // fast (stream_error + halt) instead of clobbering the live job and
+    // spinning to the event limit.
+    let dir = std::env::temp_dir().join("hfsp-session-dup-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("dup.jsonl");
+    let a = r#"{"id":1,"name":"a","class":"small","submit":0,"maps":[50],"reduces":[]}"#;
+    let b = r#"{"id":1,"name":"b","class":"small","submit":0,"maps":[50],"reduces":[]}"#;
+    std::fs::write(&path, format!("{a}\n{b}\n")).unwrap();
+    let mut src = TraceSource::open(&path).unwrap();
+    let outcome = run_session(&cfg(2, 1), SchedulerKind::Fifo, &mut src, Vec::new());
+    let err = outcome.stream_error.expect("duplicate id must be reported");
+    assert!(err.contains("duplicate job id 1"), "{err}");
+    assert!(!outcome.truncated(), "must halt immediately, not spin");
+    assert!(outcome.events_processed < 100, "halted at the collision");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn arrivals_win_exact_time_ties_against_heartbeats() {
+    // Job 2 submits at exactly the single node's first heartbeat
+    // instant (t = 3.0 = heartbeat_s). The batch driver scheduled all
+    // arrivals up front, so the arrival always preceded the heartbeat;
+    // the streamed feed must reproduce that via priority scheduling —
+    // the heartbeat at t = 3.0 then launches job 2 immediately instead
+    // of one full period later.
+    let jobs = vec![
+        JobSpec {
+            id: 1,
+            name: "tie-1".into(),
+            class: JobClass::Small,
+            submit_time: 1.0,
+            map_durations: vec![0.5],
+            reduce_durations: vec![],
+        },
+        JobSpec {
+            id: 2,
+            name: "tie-2".into(),
+            class: JobClass::Small,
+            submit_time: 3.0,
+            map_durations: vec![5.0],
+            reduce_durations: vec![],
+        },
+    ];
+    let wl = Workload::new("tie", jobs).unwrap();
+    let outcome = Simulation::new(cfg(1, 1))
+        .scheduler(SchedulerKind::Fifo)
+        .workload(wl.into_source())
+        .run();
+    assert_eq!(outcome.sojourn.len(), 2);
+    // Launched at the t = 3.0 heartbeat: finishes at 8.0 (sojourn 5.0).
+    // Losing the tie would delay the launch to t = 6.0 (sojourn 8.0).
+    let sojourn2 = outcome.sojourn.by_job()[&2];
+    assert!(
+        (sojourn2 - 5.0).abs() < 1e-9,
+        "job 2 must launch at its arrival heartbeat (sojourn {sojourn2})"
+    );
+    assert!((outcome.makespan - 8.0).abs() < 1e-9);
+}

@@ -192,7 +192,7 @@ fn random_workload(rng: &mut Pcg64, n_jobs: usize) -> Workload {
             }
         })
         .collect();
-    Workload::new("prop", jobs)
+    Workload::new("prop", jobs).expect("unique ids")
 }
 
 #[test]
