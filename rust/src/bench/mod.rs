@@ -1,10 +1,18 @@
-//! Wall-clock benchmark harness.
+//! Wall-clock benchmark harness + the simulator perf trajectory.
 //!
 //! `criterion` is not available offline, so `cargo bench` targets use this
 //! harness: warmup, N timed samples, mean / p50 / p99 and a JSON record.
 //! Figure-reproduction benches additionally print the paper-shaped series
 //! through [`crate::report`].
+//!
+//! The second half of the module backs the `hfsp bench` subcommand:
+//! [`ScenarioRecord`] is one row of the `BENCH_sim.json` trajectory file
+//! (schema `hfsp-bench/v2`; every v1 field preserved, plus
+//! `events_pushed` / `heap_peak` / `peak_rss_mb`), and
+//! [`compare_trajectories`] computes the events/sec deltas behind
+//! `hfsp bench --compare old.json` — the CI regression gate.
 
+use crate::cluster::driver::SimOutcome;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use std::time::Instant;
@@ -136,6 +144,151 @@ impl Bench {
     }
 }
 
+// -- the simulator perf trajectory (`hfsp bench` / BENCH_sim.json) ------
+
+/// One scenario row of the perf-trajectory file. The v1 fields
+/// (`scenario`, `scheduler`, `events`, `wall_ms`, `events_per_sec`,
+/// `makespan_s`) are always written; the v2 fields are optional so v1
+/// baselines still parse for `--compare`.
+#[derive(Clone, Debug)]
+pub struct ScenarioRecord {
+    pub scenario: String,
+    pub scheduler: String,
+    pub events: u64,
+    pub wall_ms: f64,
+    pub events_per_sec: f64,
+    pub makespan_s: f64,
+    /// Total events scheduled (v2).
+    pub events_pushed: Option<u64>,
+    /// Pending-event heap high-water mark (v2).
+    pub heap_peak: Option<u64>,
+    /// Process peak RSS after the scenario, MiB — cumulative across
+    /// scenarios within one bench run (v2; Linux only).
+    pub peak_rss_mb: Option<f64>,
+}
+
+impl ScenarioRecord {
+    /// Snapshot a simulation outcome as a trajectory row, stamping the
+    /// current process peak RSS.
+    pub fn from_outcome(scenario: impl Into<String>, o: &SimOutcome) -> Self {
+        Self {
+            scenario: scenario.into(),
+            scheduler: o.scheduler.to_string(),
+            events: o.events_processed,
+            wall_ms: o.wall_ms,
+            events_per_sec: o.events_per_sec(),
+            makespan_s: o.makespan,
+            events_pushed: Some(o.events_pushed),
+            heap_peak: Some(o.heap_peak as u64),
+            peak_rss_mb: crate::util::rss::peak_rss_mb(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("scenario", self.scenario.as_str().into());
+        o.set("scheduler", self.scheduler.as_str().into());
+        o.set("events", self.events.into());
+        o.set("wall_ms", self.wall_ms.into());
+        o.set("events_per_sec", self.events_per_sec.into());
+        o.set("makespan_s", self.makespan_s.into());
+        if let Some(p) = self.events_pushed {
+            o.set("events_pushed", p.into());
+        }
+        if let Some(h) = self.heap_peak {
+            o.set("heap_peak", h.into());
+        }
+        if let Some(r) = self.peak_rss_mb {
+            o.set("peak_rss_mb", r.into());
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            scenario: j.get("scenario")?.as_str()?.to_string(),
+            scheduler: j.get("scheduler")?.as_str()?.to_string(),
+            events: j.get("events")?.as_u64()?,
+            wall_ms: j.get("wall_ms")?.as_f64()?,
+            events_per_sec: j.get("events_per_sec")?.as_f64()?,
+            makespan_s: j.get("makespan_s").and_then(Json::as_f64).unwrap_or(0.0),
+            events_pushed: j.get("events_pushed").and_then(Json::as_u64),
+            heap_peak: j.get("heap_peak").and_then(Json::as_u64),
+            peak_rss_mb: j.get("peak_rss_mb").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// Serialize a trajectory (schema `hfsp-bench/v2`).
+pub fn trajectory_to_json(records: &[ScenarioRecord]) -> Json {
+    let mut j = Json::obj();
+    j.set("schema", "hfsp-bench/v2".into());
+    j.set(
+        "runs",
+        Json::Arr(records.iter().map(ScenarioRecord::to_json).collect()),
+    );
+    j
+}
+
+/// Parse a trajectory file — accepts both the v1 and v2 schemas (rows
+/// missing the v2 fields parse with `None`s). Unparseable rows are
+/// skipped: a baseline that predates a scenario must not block the gate.
+pub fn parse_trajectory(j: &Json) -> Vec<ScenarioRecord> {
+    j.get("runs")
+        .and_then(Json::as_arr)
+        .map(|rows| rows.iter().filter_map(ScenarioRecord::from_json).collect())
+        .unwrap_or_default()
+}
+
+/// One `--compare` delta row: events/sec then vs now for a scenario
+/// present in both trajectories.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub scenario: String,
+    pub scheduler: String,
+    pub old_events_per_sec: f64,
+    pub new_events_per_sec: f64,
+}
+
+impl CompareRow {
+    /// Fractional throughput change: +0.5 = 50 % faster, −0.3 = 30 %
+    /// slower.
+    pub fn delta(&self) -> f64 {
+        if self.old_events_per_sec <= 0.0 {
+            return 0.0;
+        }
+        self.new_events_per_sec / self.old_events_per_sec - 1.0
+    }
+
+    /// Fractional regression (positive = slower), for the gate.
+    pub fn regression(&self) -> f64 {
+        (-self.delta()).max(0.0)
+    }
+}
+
+/// Join two trajectories on (scenario, scheduler), in `new` order.
+pub fn compare_trajectories(old: &[ScenarioRecord], new: &[ScenarioRecord]) -> Vec<CompareRow> {
+    new.iter()
+        .filter_map(|n| {
+            let o = old
+                .iter()
+                .find(|o| o.scenario == n.scenario && o.scheduler == n.scheduler)?;
+            Some(CompareRow {
+                scenario: n.scenario.clone(),
+                scheduler: n.scheduler.clone(),
+                old_events_per_sec: o.events_per_sec,
+                new_events_per_sec: n.events_per_sec,
+            })
+        })
+        .collect()
+}
+
+/// Largest fractional regression across the joined rows (0.0 when no
+/// row regressed or nothing joined).
+pub fn worst_regression(rows: &[CompareRow]) -> f64 {
+    rows.iter().map(CompareRow::regression).fold(0.0, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +313,76 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    fn record(scenario: &str, eps: f64) -> ScenarioRecord {
+        ScenarioRecord {
+            scenario: scenario.to_string(),
+            scheduler: "HFSP".to_string(),
+            events: 1000,
+            wall_ms: 10.0,
+            events_per_sec: eps,
+            makespan_s: 5.0,
+            events_pushed: Some(1200),
+            heap_peak: Some(64),
+            peak_rss_mb: Some(12.5),
+        }
+    }
+
+    #[test]
+    fn trajectory_round_trips_through_json_with_v2_fields() {
+        let records = vec![record("open-1e5", 50_000.0)];
+        let j = trajectory_to_json(&records);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("hfsp-bench/v2"));
+        let parsed = parse_trajectory(&j);
+        assert_eq!(parsed.len(), 1);
+        let r = &parsed[0];
+        assert_eq!(r.scenario, "open-1e5");
+        assert_eq!(r.events, 1000);
+        assert_eq!(r.events_pushed, Some(1200));
+        assert_eq!(r.heap_peak, Some(64));
+        assert_eq!(r.peak_rss_mb, Some(12.5));
+    }
+
+    #[test]
+    fn v1_rows_without_new_fields_still_parse() {
+        let text = r#"{
+            "schema": "hfsp-bench/v1",
+            "runs": [{
+                "scenario": "fb-0.3x20", "scheduler": "FIFO",
+                "events": 42, "wall_ms": 1.0,
+                "events_per_sec": 42000.0, "makespan_s": 9.0
+            }]
+        }"#;
+        let j = crate::util::json::parse(text).unwrap();
+        let parsed = parse_trajectory(&j);
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].events_pushed, None);
+        assert_eq!(parsed[0].heap_peak, None);
+    }
+
+    #[test]
+    fn empty_baseline_joins_nothing_and_gates_nothing() {
+        let j = crate::util::json::parse(r#"{"schema":"hfsp-bench/v2","runs":[]}"#).unwrap();
+        let old = parse_trajectory(&j);
+        let new = vec![record("open-1e5", 50_000.0)];
+        let rows = compare_trajectories(&old, &new);
+        assert!(rows.is_empty());
+        assert_eq!(worst_regression(&rows), 0.0);
+    }
+
+    #[test]
+    fn compare_flags_the_regressed_scenario() {
+        let old = vec![record("a", 100_000.0), record("b", 100_000.0)];
+        let new = vec![
+            record("a", 250_000.0), // 2.5x faster
+            record("b", 60_000.0),  // 40 % slower
+            record("c", 10_000.0),  // new scenario: not gated
+        ];
+        let rows = compare_trajectories(&old, &new);
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].delta() - 1.5).abs() < 1e-12);
+        assert!((rows[1].regression() - 0.4).abs() < 1e-12);
+        assert!((worst_regression(&rows) - 0.4).abs() < 1e-12);
     }
 }

@@ -27,7 +27,15 @@
 //!   ([`Probe::halt_requested`](crate::metrics::Probe::halt_requested));
 //! * evict finished jobs from the job table (schedulers drop their own
 //!   per-job state in `on_job_finished`, so the table only ever holds
-//!   *active* jobs — the other half of the O(active) memory story).
+//!   *active* jobs — the other half of the O(active) memory story). The
+//!   table itself is the arena-backed [`JobTable`]: O(1) id lookups on
+//!   the per-event path, slab slots recycled across evictions.
+//!
+//! The heartbeat hot path is allocation-free in steady state (the
+//! action buffer and the schedulers' working sets are reusable scratch)
+//! and same-instant heartbeat bursts are coalesced through
+//! [`Engine::pop_coalesced`] instead of bouncing one event at a time
+//! through the dispatch loop.
 //!
 //! Completion events are guarded by per-task **epochs**: every task state
 //! transition bumps the epoch, so a completion scheduled before a
@@ -53,7 +61,7 @@ use crate::cluster::{Cluster, ClusterConfig, Hdfs};
 use crate::faults::plan::FaultEventKind;
 use crate::faults::{pick_speculation_candidate, FaultConfig, FaultPlan, FaultStats};
 use crate::job::task::NodeId;
-use crate::job::{Job, JobId, JobSpec, Phase, TaskRef};
+use crate::job::{Job, JobId, JobSpec, JobTable, Phase, TaskRef};
 use crate::metrics::probe::{KillCause, Probe, ProbeEvent, ProbeStack};
 use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
 use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
@@ -154,6 +162,12 @@ pub struct SimOutcome {
     /// Stale heartbeat-chain events dropped by the engine's lazy
     /// deletion (never dispatched into the driver); 0 on fault-free runs.
     pub events_skipped: u64,
+    /// Total events ever scheduled on the engine (≥ `events_processed`;
+    /// the bench harness uses pushed-vs-processed to attribute wall time
+    /// to event volume vs per-event cost).
+    pub events_pushed: u64,
+    /// High-water mark of the pending-event heap.
+    pub heap_peak: usize,
     /// Jobs that entered the system (== `sojourn.len()` when the run
     /// drained; larger on probe-halted or truncated sessions).
     pub jobs_arrived: usize,
@@ -242,10 +256,15 @@ struct Driver<'s, 'w, 'p> {
     source_done: bool,
     arrived_jobs: usize,
     // -- cluster & scheduler --------------------------------------------
-    jobs: BTreeMap<JobId, Job>,
+    /// Live jobs in arena storage: O(1) id lookups on the per-event hot
+    /// path, id-ordered iteration for the schedulers (see [`JobTable`]).
+    jobs: JobTable,
     cluster: Cluster,
     hdfs: Hdfs,
     scheduler: Box<dyn Scheduler>,
+    /// Reusable heartbeat action buffer (cleared per heartbeat; the
+    /// steady-state event loop performs no per-event allocation here).
+    actions: Vec<Action>,
     probes: ProbeStack<'p>,
     finished_jobs: usize,
     peak_live_jobs: usize,
@@ -326,10 +345,11 @@ pub fn run_session<'s, 'w, 'p>(
         lookahead: None,
         source_done: false,
         arrived_jobs: 0,
-        jobs: BTreeMap::new(),
+        jobs: JobTable::new(),
         cluster: Cluster::new(cfg.cluster),
         hdfs: Hdfs::new(cfg.cluster.nodes, cfg.cluster.replication, hdfs_rng),
         scheduler,
+        actions: Vec::new(),
         probes: ProbeStack::new(cfg.record_timelines, fstats, user_probes),
         finished_jobs: 0,
         peak_live_jobs: 0,
@@ -404,6 +424,8 @@ pub fn run_session<'s, 'w, 'p>(
         makespan: engine.now(),
         events_processed: engine.processed(),
         events_skipped: engine.skipped(),
+        events_pushed: engine.pushed(),
+        heap_peak: engine.heap_peak(),
         jobs_arrived,
         peak_live_jobs,
         halted_by_probe,
@@ -424,6 +446,7 @@ fn heartbeat_chain(ev: &Ev) -> Option<(usize, u32)> {
 
 impl Driver<'_, '_, '_> {
     fn handle(&mut self, eng: &mut Engine<Ev>, now: Time, ev: Ev) {
+        let was_heartbeat = matches!(ev, Ev::Heartbeat { .. });
         match ev {
             Ev::Arrival => self.on_arrival(eng, now),
             Ev::Heartbeat { node, epoch } => self.on_heartbeat(eng, now, node, epoch),
@@ -435,11 +458,39 @@ impl Driver<'_, '_, '_> {
             Ev::NodeRecover(node) => self.on_node_recover(eng, now, node),
             Ev::SpecDone { task, id } => self.on_spec_done(now, task, id),
         }
+        if self.check_halt(eng) {
+            return;
+        }
+        // Same-instant heartbeat coalescing: when several nodes' chains
+        // land on one tick (coincident stagger offsets, post-recovery
+        // re-phasing), drain them here instead of bouncing each through
+        // the outer dispatch loop. Processing order, event accounting
+        // and the per-event halt checks are identical to the
+        // uncoalesced path — this only removes loop overhead.
+        if was_heartbeat {
+            while let Some(Ev::Heartbeat { node, epoch }) =
+                eng.pop_coalesced(heartbeat_chain, |e| matches!(e, Ev::Heartbeat { .. }))
+            {
+                self.on_heartbeat(eng, now, node, epoch);
+                if self.check_halt(eng) {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Post-event halt checks (session drained, probe-requested stop);
+    /// returns whether the engine was halted.
+    fn check_halt(&mut self, eng: &mut Engine<Ev>) -> bool {
         if self.drained() {
             eng.halt();
+            true
         } else if self.probes.take_halt() {
             self.halted_by_probe = true;
             eng.halt();
+            true
+        } else {
+            false
         }
     }
 
@@ -596,19 +647,24 @@ impl Driver<'_, '_, '_> {
             eng.halt();
             return;
         }
-        let actions = {
+        // The action buffer is reusable driver scratch, taken out of
+        // `self` for the duration (the view borrows `self` fields).
+        let mut actions = std::mem::take(&mut self.actions);
+        actions.clear();
+        {
             let view = SchedView {
                 jobs: &self.jobs,
                 cluster: &self.cluster,
                 hdfs: &self.hdfs,
                 now,
             };
-            self.scheduler.on_heartbeat(&view, node)
-        };
-        for action in actions {
+            self.scheduler.on_heartbeat(&view, node, &mut actions);
+        }
+        for action in actions.drain(..) {
             log::trace!("t={now:.2} node={node} apply {action:?}");
             self.apply(eng, now, action);
         }
+        self.actions = actions;
         // Leftover slots may host a speculative clone of a straggling
         // task (fault subsystem; off by default, and inert without speed
         // diversity — a clone restarted from scratch at the same speed

@@ -16,9 +16,8 @@
 
 use crate::cluster::Cluster;
 use crate::job::task::TaskState;
-use crate::job::{Job, JobId, Phase, TaskRef};
+use crate::job::{JobTable, Phase, TaskRef};
 use crate::sim::Time;
-use std::collections::BTreeMap;
 
 /// Speculative-execution policy parameters.
 #[derive(Clone, Copy, Debug)]
@@ -54,7 +53,7 @@ impl Default for SpeculationConfig {
 #[allow(clippy::too_many_arguments)]
 pub fn pick_speculation_candidate(
     cfg: &SpeculationConfig,
-    jobs: &BTreeMap<JobId, Job>,
+    jobs: &JobTable,
     cluster: &Cluster,
     speeds: &[f64],
     offer_node: usize,
@@ -97,14 +96,14 @@ pub fn pick_speculation_candidate(
 mod tests {
     use super::*;
     use crate::cluster::ClusterConfig;
-    use crate::job::{JobClass, JobSpec};
+    use crate::job::{Job, JobClass, JobSpec};
 
     /// Build one map-only job plus a cluster with its launches applied.
     fn setup(
         n_nodes: usize,
         durations: &[f64],
         launches: &[(u32, usize, Time, f64)], // (index, node, started, speed)
-    ) -> (BTreeMap<JobId, Job>, Cluster) {
+    ) -> (JobTable, Cluster) {
         let mut job = Job::new(JobSpec {
             id: 1,
             name: "j1".into(),
@@ -129,7 +128,7 @@ mod tests {
             job.counts_mut(Phase::Map).on_launch();
             cluster.node_mut(node).start_task(t);
         }
-        let mut jobs = BTreeMap::new();
+        let mut jobs = JobTable::new();
         jobs.insert(1, job);
         (jobs, cluster)
     }

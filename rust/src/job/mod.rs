@@ -7,8 +7,10 @@
 //! which only observe task completions (and the Δ-progress reports used by
 //! the reduce-size estimator, §3.2.1).
 
+pub mod table;
 pub mod task;
 
+pub use table::JobTable;
 pub use task::{TaskRef, TaskRuntime, TaskState};
 
 use crate::sim::Time;

@@ -1,0 +1,223 @@
+//! Arena-backed job table: the driver's live-job storage.
+//!
+//! The per-event hot path (heartbeat handling, task completion) looks a
+//! job up by id several times per event. The original `BTreeMap` paid a
+//! pointer-chasing descent per lookup and per iteration step; this table
+//! is a **slab arena** instead:
+//!
+//! * [`Job`]s live in a dense `Vec<Option<Job>>`; a slot freed by a
+//!   finished job is recycled (freelist), so slab indices stay compact
+//!   and jobs never move once inserted — on streaming sessions the slab
+//!   footprint is O(peak live jobs), not O(total jobs);
+//! * id → slot is one [`FastMap`] hash (deterministic fixed-seed FxHash
+//!   of a `u64`), making `get`/`get_mut`/`contains_key` O(1);
+//! * iteration order is **ascending job id** — exactly the `BTreeMap`
+//!   contract schedulers rely on for determinism — maintained as a
+//!   sorted `(id, slot)` index updated only on arrival/eviction (the
+//!   cold path), so hot-path iteration is a linear walk over a
+//!   contiguous vector.
+//!
+//! The API mirrors the `BTreeMap<JobId, Job>` subset the driver and
+//! schedulers used, so call sites read unchanged (`jobs[&id]`,
+//! `jobs.get(&id)`, `jobs.values()`); an equivalence property test pins
+//! the behavioural match (`tests/integration_perf.rs`).
+
+use super::{Job, JobId};
+use crate::util::fxmap::FastMap;
+use std::ops::Index;
+
+/// Dense slab of live jobs with O(1) id lookups and id-ordered
+/// iteration. See the module docs for the layout rationale.
+#[derive(Default)]
+pub struct JobTable {
+    /// Slab storage; `None` slots are recyclable.
+    slots: Vec<Option<Job>>,
+    /// Recycled slot indices.
+    free: Vec<u32>,
+    /// id → slab slot.
+    by_id: FastMap<JobId, u32>,
+    /// Live `(id, slot)` pairs, sorted ascending by id.
+    ordered: Vec<(JobId, u32)>,
+}
+
+impl JobTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ordered.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ordered.is_empty()
+    }
+
+    /// Capacity of the slab (diagnostics: high-water mark of live jobs).
+    pub fn slab_capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn contains_key(&self, id: &JobId) -> bool {
+        self.by_id.contains_key(id)
+    }
+
+    pub fn get(&self, id: &JobId) -> Option<&Job> {
+        let slot = *self.by_id.get(id)?;
+        self.slots[slot as usize].as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: &JobId) -> Option<&mut Job> {
+        let slot = *self.by_id.get(id)?;
+        self.slots[slot as usize].as_mut()
+    }
+
+    /// Insert a job under `id`. Replaces and returns any existing entry
+    /// (matching the map contract; the driver treats duplicates as a
+    /// stream error before ever calling this).
+    pub fn insert(&mut self, id: JobId, job: Job) -> Option<Job> {
+        if let Some(&slot) = self.by_id.get(&id) {
+            return self.slots[slot as usize].replace(job);
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Some(job);
+                s
+            }
+            None => {
+                let s = u32::try_from(self.slots.len()).expect("job slab exceeds u32 slots");
+                self.slots.push(Some(job));
+                s
+            }
+        };
+        self.by_id.insert(id, slot);
+        let pos = self
+            .ordered
+            .binary_search_by_key(&id, |&(jid, _)| jid)
+            .unwrap_err();
+        self.ordered.insert(pos, (id, slot));
+        None
+    }
+
+    pub fn remove(&mut self, id: &JobId) -> Option<Job> {
+        let slot = self.by_id.remove(id)?;
+        let pos = self
+            .ordered
+            .binary_search_by_key(id, |&(jid, _)| jid)
+            .expect("indexed job present in ordered view");
+        self.ordered.remove(pos);
+        self.free.push(slot);
+        self.slots[slot as usize].take()
+    }
+
+    /// Live jobs in ascending id (= submission) order.
+    pub fn values(&self) -> impl Iterator<Item = &Job> {
+        self.ordered
+            .iter()
+            .map(|&(_, slot)| self.slots[slot as usize].as_ref().expect("live slot"))
+    }
+
+    /// `(id, job)` pairs in ascending id order.
+    pub fn iter(&self) -> impl Iterator<Item = (JobId, &Job)> {
+        self.ordered.iter().map(|&(id, slot)| {
+            (id, self.slots[slot as usize].as_ref().expect("live slot"))
+        })
+    }
+
+    /// Live ids in ascending order.
+    pub fn keys(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.ordered.iter().map(|&(id, _)| id)
+    }
+}
+
+impl Index<&JobId> for JobTable {
+    type Output = Job;
+
+    fn index(&self, id: &JobId) -> &Job {
+        self.get(id).expect("no job for id")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, JobSpec};
+
+    fn job(id: JobId) -> Job {
+        Job::new(JobSpec {
+            id,
+            name: format!("j{id}"),
+            class: JobClass::Small,
+            submit_time: 0.0,
+            map_durations: vec![1.0],
+            reduce_durations: vec![],
+        })
+    }
+
+    #[test]
+    fn insert_get_remove_round_trip() {
+        let mut t = JobTable::new();
+        assert!(t.is_empty());
+        assert!(t.insert(5, job(5)).is_none());
+        assert!(t.insert(1, job(1)).is_none());
+        assert_eq!(t.len(), 2);
+        assert!(t.contains_key(&5));
+        assert_eq!(t.get(&1).unwrap().id(), 1);
+        assert_eq!(t[&5].id(), 5);
+        t.get_mut(&1).unwrap().maps_done = 1;
+        assert_eq!(t.get(&1).unwrap().maps_done, 1);
+        let removed = t.remove(&5).unwrap();
+        assert_eq!(removed.id(), 5);
+        assert!(t.get(&5).is_none());
+        assert!(t.remove(&5).is_none());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn iteration_is_ascending_id_order_regardless_of_insertion() {
+        let mut t = JobTable::new();
+        for id in [9, 2, 7, 1, 4] {
+            t.insert(id, job(id));
+        }
+        let ids: Vec<JobId> = t.keys().collect();
+        assert_eq!(ids, vec![1, 2, 4, 7, 9]);
+        let via_values: Vec<JobId> = t.values().map(Job::id).collect();
+        assert_eq!(via_values, ids);
+        let via_iter: Vec<JobId> = t
+            .iter()
+            .map(|(id, j)| {
+                assert_eq!(id, j.id());
+                id
+            })
+            .collect();
+        assert_eq!(via_iter, ids);
+    }
+
+    #[test]
+    fn slots_are_recycled_so_the_slab_stays_bounded() {
+        let mut t = JobTable::new();
+        for round in 0..10u64 {
+            for k in 0..4 {
+                t.insert(round * 4 + k, job(round * 4 + k));
+            }
+            for k in 0..4 {
+                t.remove(&(round * 4 + k)).unwrap();
+            }
+        }
+        // 40 jobs passed through, but never more than 4 were live.
+        assert_eq!(t.slab_capacity(), 4);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn insert_replaces_existing_entry() {
+        let mut t = JobTable::new();
+        t.insert(3, job(3));
+        let mut replacement = job(3);
+        replacement.maps_done = 1;
+        let old = t.insert(3, replacement).unwrap();
+        assert_eq!(old.maps_done, 0);
+        assert_eq!(t.get(&3).unwrap().maps_done, 1);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -13,7 +13,9 @@
 //!   experiment grid across a thread pool and emit the aggregated table
 //!   + JSON report (`--grid faults` adds the robustness scenarios);
 //! * `bench` — time the standard scenarios and emit `BENCH_sim.json`
-//!   (events/sec + wall-clock per scenario, the perf trajectory file);
+//!   (events/sec, wall-clock, queue stats and peak RSS per scenario —
+//!   the perf trajectory file); `--compare old.json` prints deltas
+//!   against a baseline and exits non-zero past `--threshold`;
 //! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
 
 use hfsp::cluster::driver::{run_session, run_simulation, SimConfig, SimOutcome};
@@ -86,6 +88,9 @@ fn cli() -> Cli {
                 .flag("scale", "0.3", "scale FB-dataset job counts by this factor")
                 .flag("nodes", "20", "cluster size")
                 .flag("seed", "42", "rng seed")
+                .flag("profile", "quick", "scenario set: quick | full (adds the open-1e6 streaming run)")
+                .flag("compare", "", "baseline BENCH_sim.json: print events/sec deltas and fail past --threshold")
+                .flag("threshold", "0.30", "max tolerated fractional events/sec regression for --compare")
                 .flag("out", "BENCH_sim.json", "benchmark JSON output path"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
                 .flag("slots", "4", "single-node slot count"),
@@ -508,15 +513,47 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The `bench` subcommand: one timed simulation per registered
-/// scheduler on the standard FB-dataset scenario (plus the Fig. 7
-/// preemption microbenchmark on HFSP), emitting the perf-trajectory
-/// record `BENCH_sim.json` (schema: scenario → events/sec, wall_ms).
+/// The `bench` subcommand: timed simulations over the standard scenario
+/// set, emitting the perf-trajectory record `BENCH_sim.json` (schema
+/// `hfsp-bench/v2`: per scenario events/sec, wall-clock, queue stats and
+/// peak RSS) and optionally gating against a committed baseline
+/// (`--compare old.json --threshold 0.30`).
+///
+/// Scenarios (quick profile):
+/// * `fb-{scale}x{nodes}` — the scaled closed FB workload, once per
+///   registered scheduler (the historical v1 rows);
+/// * `fig7-preemption` — the preemption microbenchmark on HFSP;
+/// * `closed-fb2009` — the full-scale (1x) FB-2009 macro workload;
+/// * `hot-churn` — the scaled FB workload under node-churn faults
+///   (stale-chain lazy deletion + crash/requeue on the hot path);
+/// * `open-1e5` — 100k tiny jobs streamed through an open HFSP session
+///   at ≈60 % utilization (the headline streaming number);
+/// * `sweep-4disc` — a single-threaded 4-discipline sweep cell
+///   (mechanism + every ordering policy through the sweep engine).
+///
+/// `--profile full` adds `open-1e6` (a million streamed jobs).
+#[allow(clippy::too_many_lines)]
 fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
+    use hfsp::bench::{
+        compare_trajectories, parse_trajectory, trajectory_to_json, worst_regression,
+        ScenarioRecord,
+    };
+    use hfsp::faults::FaultConfig;
+
     let scale: f64 = args.require("scale")?;
     let nodes: usize = args.require("nodes")?;
     let seed: u64 = args.require("seed")?;
     let out: PathBuf = args.require("out")?;
+    let threshold: f64 = args.require("threshold")?;
+    let profile = args.get("profile").unwrap_or("quick");
+    anyhow::ensure!(
+        matches!(profile, "quick" | "full"),
+        "unknown bench profile {profile:?} (quick|full)"
+    );
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&threshold),
+        "--threshold must be a fraction in [0, 1]"
+    );
     let cfg = SimConfig {
         cluster: ClusterConfig {
             nodes,
@@ -528,78 +565,134 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     let fb = FbWorkload::scaled(scale).generate(&mut RngStreams::workload(seed));
     let fig7 = synthetic::fig7_workload();
 
-    struct BenchRun {
-        scenario: String,
-        outcome: SimOutcome,
-    }
-    let mut runs: Vec<BenchRun> = Vec::new();
-    for entry in REGISTRY {
-        let outcome = run_simulation(&cfg, entry.make(), &fb);
-        runs.push(BenchRun {
-            scenario: format!("fb-{scale}x{nodes}"),
-            outcome,
-        });
-    }
-    runs.push(BenchRun {
-        scenario: "fig7-preemption".to_string(),
-        outcome: run_simulation(&cfg, SchedulerKind::hfsp(), &fig7),
-    });
-    // Streaming coverage: 100k tiny jobs through an open HFSP session,
-    // sized to ≈60 % utilization of this bench cluster. events/sec on
-    // this row tracks the WorkloadSource + probe path specifically.
-    {
+    /// An open HFSP session streaming `jobs` tiny jobs at ≈60 %
+    /// utilization of the bench cluster: the WorkloadSource + probe
+    /// path specifically.
+    fn open_record(cfg: &SimConfig, jobs: u64, name: &'static str) -> ScenarioRecord {
         let task_s = 4.0;
-        let slots = (nodes * cfg.cluster.map_slots).max(1) as f64;
+        let slots = (cfg.cluster.nodes * cfg.cluster.map_slots).max(1) as f64;
         let rate = 0.6 * slots / task_s;
         let mut open = OpenArrivals::poisson(rate, f64::INFINITY)
             .mix(JobMix::Uniform { maps: 1, task_s })
-            .max_jobs(100_000)
-            .named("open-1e5");
-        runs.push(BenchRun {
-            scenario: "open-1e5".to_string(),
-            outcome: run_session(&cfg, SchedulerKind::hfsp(), &mut open, Vec::new()),
+            .max_jobs(jobs)
+            .named(name);
+        let outcome = run_session(cfg, SchedulerKind::hfsp(), &mut open, Vec::new());
+        ScenarioRecord::from_outcome(name, &outcome)
+    }
+
+    let mut records: Vec<ScenarioRecord> = Vec::new();
+    for entry in REGISTRY {
+        let outcome = run_simulation(&cfg, entry.make(), &fb);
+        records.push(ScenarioRecord::from_outcome(
+            format!("fb-{scale}x{nodes}"),
+            &outcome,
+        ));
+    }
+    records.push(ScenarioRecord::from_outcome(
+        "fig7-preemption",
+        &run_simulation(&cfg, SchedulerKind::hfsp(), &fig7),
+    ));
+    // The paper's macro workload at full scale, closed replay.
+    {
+        let full = FbWorkload::default().generate(&mut RngStreams::workload(seed));
+        records.push(ScenarioRecord::from_outcome(
+            "closed-fb2009",
+            &run_simulation(&cfg, SchedulerKind::hfsp(), &full),
+        ));
+    }
+    // Node churn (no permanent losses, so the run always drains):
+    // crash/requeue handling, chain invalidation and lazy deletion on
+    // the hot path.
+    {
+        let churn = SimConfig {
+            faults: FaultConfig {
+                enabled: true,
+                mtbf_s: 600.0,
+                repair_s: 60.0,
+                permanent_fraction: 0.0,
+                ..FaultConfig::disabled()
+            },
+            ..cfg.clone()
+        };
+        records.push(ScenarioRecord::from_outcome(
+            "hot-churn",
+            &run_simulation(&churn, SchedulerKind::hfsp(), &fb),
+        ));
+    }
+    records.push(open_record(&cfg, 100_000, "open-1e5"));
+    if profile == "full" {
+        records.push(open_record(&cfg, 1_000_000, "open-1e6"));
+    }
+    // One sweep cell per size-based discipline, single-threaded (the
+    // sweep engine's per-cell overhead is part of what's measured).
+    {
+        let mut grid = ExperimentGrid::new("bench-4disc")
+            .base_config(cfg.clone())
+            .workload(WorkloadSpec::Fb(FbWorkload::scaled(scale)))
+            .nodes(&[nodes])
+            .seeds(&[seed]);
+        for name in ["hfsp", "srpt", "las", "psbs"] {
+            grid = grid.scheduler(SchedulerKind::from_name(name)?);
+        }
+        let results = run_grid_threads(&grid, 1);
+        let events = results.total_events();
+        let wall_ms = results.wall_ms;
+        records.push(ScenarioRecord {
+            scenario: "sweep-4disc".to_string(),
+            scheduler: "ALL".to_string(),
+            events,
+            wall_ms,
+            events_per_sec: if wall_ms > 0.0 {
+                events as f64 / (wall_ms / 1e3)
+            } else {
+                0.0
+            },
+            makespan_s: 0.0,
+            events_pushed: None,
+            heap_peak: None,
+            peak_rss_mb: hfsp::util::rss::peak_rss_mb(),
         });
     }
 
-    let rows: Vec<Vec<String>> = runs
+    let fmt_opt_u64 = |v: Option<u64>| v.map_or_else(|| "-".to_string(), |x| x.to_string());
+    let rows: Vec<Vec<String>> = records
         .iter()
         .map(|r| {
             vec![
                 r.scenario.clone(),
-                r.outcome.scheduler.to_string(),
-                r.outcome.events_processed.to_string(),
-                format!("{:.1}", r.outcome.wall_ms),
-                format!("{:.0}", r.outcome.events_per_sec()),
+                r.scheduler.clone(),
+                r.events.to_string(),
+                format!("{:.1}", r.wall_ms),
+                format!("{:.0}", r.events_per_sec),
+                fmt_opt_u64(r.events_pushed),
+                fmt_opt_u64(r.heap_peak),
+                r.peak_rss_mb
+                    .map_or_else(|| "-".to_string(), |x| format!("{x:.0}")),
             ]
         })
         .collect();
     println!(
         "{}",
         report::table(
-            &["scenario", "scheduler", "events", "wall (ms)", "events/sec"],
+            &[
+                "scenario",
+                "scheduler",
+                "events",
+                "wall (ms)",
+                "events/sec",
+                "pushed",
+                "heap peak",
+                "peak RSS (MB)"
+            ],
             &rows
         )
     );
 
-    let mut j = Json::obj();
-    j.set("schema", "hfsp-bench/v1".into());
-    j.set(
-        "runs",
-        Json::Arr(
-            runs.iter()
-                .map(|r| {
-                    let mut o = Json::obj();
-                    o.set("scenario", r.scenario.as_str().into());
-                    o.set("scheduler", r.outcome.scheduler.into());
-                    o.set("events", r.outcome.events_processed.into());
-                    o.set("wall_ms", r.outcome.wall_ms.into());
-                    o.set("events_per_sec", r.outcome.events_per_sec().into());
-                    o.set("makespan_s", r.outcome.makespan.into());
-                    o
-                })
-                .collect(),
-        ),
-    );
+    let mut j = trajectory_to_json(&records);
+    j.set("profile", profile.into());
+    j.set("nodes", nodes.into());
+    j.set("scale", scale.into());
+    j.set("seed", seed.into());
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -607,6 +700,75 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     }
     std::fs::write(&out, j.to_string_pretty())?;
     println!("wrote benchmark record to {}", out.display());
+
+    // --compare: delta table + regression gate against a baseline file.
+    if let Some(path) = args.get("compare").filter(|p| !p.trim().is_empty()) {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading baseline {path}: {e}"))?;
+        let baseline_json = hfsp::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing baseline {path}: {e}"))?;
+        // Scenario names do not encode the bench configuration, so a
+        // baseline recorded under different --nodes/--scale/--profile
+        // would gate on a config artifact, not a code regression. A
+        // mismatch means the baseline must be re-recorded.
+        for (key, current) in [
+            ("nodes", Json::from(nodes)),
+            ("scale", Json::from(scale)),
+            ("profile", Json::from(profile)),
+        ] {
+            if let Some(old) = baseline_json.get(key) {
+                anyhow::ensure!(
+                    *old == current,
+                    "baseline {path} was recorded with --{key} {} but this run used {} — \
+                     events/sec is not comparable across configurations; re-record the \
+                     baseline with the current flags",
+                    old.to_string_compact(),
+                    current.to_string_compact()
+                );
+            }
+        }
+        let baseline = parse_trajectory(&baseline_json);
+        let deltas = compare_trajectories(&baseline, &records);
+        if deltas.is_empty() {
+            println!(
+                "bench --compare: no scenarios shared with {path} (empty seed baseline?) — \
+                 nothing to gate"
+            );
+            return Ok(());
+        }
+        let delta_rows: Vec<Vec<String>> = deltas
+            .iter()
+            .map(|d| {
+                vec![
+                    d.scenario.clone(),
+                    d.scheduler.clone(),
+                    format!("{:.0}", d.old_events_per_sec),
+                    format!("{:.0}", d.new_events_per_sec),
+                    format!("{:+.1}%", d.delta() * 100.0),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            report::table(
+                &["scenario", "scheduler", "old ev/s", "new ev/s", "delta"],
+                &delta_rows
+            )
+        );
+        let worst = worst_regression(&deltas);
+        anyhow::ensure!(
+            worst <= threshold,
+            "events/sec regressed {:.1}% on the worst scenario (gate: {:.0}%) — \
+             baseline {path}",
+            worst * 100.0,
+            threshold * 100.0
+        );
+        println!(
+            "bench --compare: worst regression {:.1}% within the {:.0}% gate",
+            worst * 100.0,
+            threshold * 100.0
+        );
+    }
     Ok(())
 }
 

@@ -43,7 +43,8 @@ use crate::faults::ErrorModel;
 use crate::job::task::NodeId;
 use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::sim::Time;
-use std::collections::{HashMap, HashSet};
+use crate::util::fxmap::{FastMap, FastSet};
+use std::collections::HashSet;
 use std::path::PathBuf;
 
 /// Which size-estimator implementation the Training module uses.
@@ -85,7 +86,7 @@ pub enum MaxMinKind {
 impl MaxMinKind {
     pub fn build(&self) -> Box<dyn MaxMinBackend> {
         match self {
-            MaxMinKind::Native => Box::new(NativeMaxMin),
+            MaxMinKind::Native => Box::new(NativeMaxMin::default()),
             MaxMinKind::Xla { artifact_dir } => Box::new(
                 xla_estimator::XlaMaxMin::load(artifact_dir)
                     .expect("loading XLA maxmin artifact (run `make artifacts`)"),
@@ -226,8 +227,12 @@ pub trait Discipline {
     /// only when this changes.
     fn generation(&self, phase: Phase) -> u64;
 
-    /// Total job order for `phase`: ascending priority key.
-    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)>;
+    /// Total job order for `phase`: ascending priority key. Returns a
+    /// borrow of the discipline's internal cache — valid until the next
+    /// `&mut` call, recomputed (at most) when
+    /// [`Discipline::generation`] has moved. Implementations must not
+    /// allocate when the order is unchanged.
+    fn order(&mut self, phase: Phase) -> &[(JobId, f64)];
 
     /// Diagnostic remaining-work figure (trace logging only).
     fn remaining(&self, id: JobId, phase: Phase) -> Option<f64> {
@@ -238,32 +243,44 @@ pub trait Discipline {
 
 /// Cached priority view derived from the discipline's job order, keyed
 /// by the discipline's generation counter (recomputing rank/key maps on
-/// every heartbeat dominated the hot path — §Perf iteration 2).
+/// every heartbeat dominated the hot path — §Perf iteration 2). The
+/// order is copied from the discipline's cache slice and the rank/key
+/// lookups live in one reusable [`FastMap`] (§Perf iteration 4: one
+/// hash per lookup instead of two, deterministic fixed-seed hashing,
+/// zero steady-state allocation).
 #[derive(Default)]
 struct OrderCache {
     generation: u64,
     valid: bool,
-    order: Vec<JobId>,
-    rank: HashMap<JobId, usize>,
-    finish: HashMap<JobId, f64>,
+    /// `(job, priority key)` pairs, ascending key.
+    order: Vec<(JobId, f64)>,
+    /// job → (rank, priority key).
+    rank: FastMap<JobId, (usize, f64)>,
 }
 
 impl OrderCache {
     fn refresh(&mut self, discipline: &mut dyn Discipline, phase: Phase) {
-        if self.valid && self.generation == discipline.generation(phase) {
+        let generation = discipline.generation(phase);
+        if self.valid && self.generation == generation {
             return;
         }
         let projected = discipline.order(phase);
         self.order.clear();
+        self.order.extend_from_slice(projected);
         self.rank.clear();
-        self.finish.clear();
-        for (r, &(id, t)) in projected.iter().enumerate() {
-            self.order.push(id);
-            self.rank.insert(id, r);
-            self.finish.insert(id, t);
+        for (r, &(id, t)) in self.order.iter().enumerate() {
+            self.rank.insert(id, (r, t));
         }
-        self.generation = discipline.generation(phase);
+        self.generation = generation;
         self.valid = true;
+    }
+
+    fn rank_of(&self, id: JobId) -> Option<usize> {
+        self.rank.get(&id).map(|&(r, _)| r)
+    }
+
+    fn key_of(&self, id: JobId) -> Option<f64> {
+        self.rank.get(&id).map(|&(_, k)| k)
     }
 }
 
@@ -286,6 +303,11 @@ pub struct SizeBasedScheduler {
     order_reduce: OrderCache,
     /// Lazily sized from the first view (cluster capacity per phase).
     sized: bool,
+    /// Reusable per-heartbeat working sets (§Perf iteration 4: two set
+    /// and one vec allocation per phase per heartbeat, gone).
+    scratch_picked: FastSet<TaskRef>,
+    scratch_resumed: FastSet<TaskRef>,
+    scratch_victims: Vec<TaskRef>,
 }
 
 impl SizeBasedScheduler {
@@ -321,6 +343,9 @@ impl SizeBasedScheduler {
             order_map: OrderCache::default(),
             order_reduce: OrderCache::default(),
             sized: false,
+            scratch_picked: FastSet::default(),
+            scratch_resumed: FastSet::default(),
+            scratch_victims: Vec::new(),
         }
     }
 
@@ -363,7 +388,7 @@ impl SizeBasedScheduler {
         view: &SchedView,
         job: &Job,
         node: NodeId,
-        picked: &HashSet<TaskRef>,
+        picked: &FastSet<TaskRef>,
     ) -> Option<(TaskRef, bool)> {
         if let Some(t) = self.index.pick_local(job, node, picked) {
             self.delay.clear(job.id());
@@ -388,7 +413,7 @@ impl SizeBasedScheduler {
         job: &Job,
         phase: Phase,
         node: NodeId,
-        picked: &HashSet<TaskRef>,
+        picked: &FastSet<TaskRef>,
     ) -> Option<(TaskRef, bool)> {
         match phase {
             Phase::Map => self.pick_map(view, job, node, picked),
@@ -403,7 +428,7 @@ impl SizeBasedScheduler {
         job: JobId,
         phase: Phase,
         node: NodeId,
-        resumed: &HashSet<TaskRef>,
+        resumed: &FastSet<TaskRef>,
     ) -> Option<TaskRef> {
         view.cluster
             .node(node)
@@ -421,10 +446,11 @@ impl SizeBasedScheduler {
         ctx_budget: &mut usize,
     ) {
         // Priority order from the discipline (cached across heartbeats
-        // until the discipline's generation changes); taken out of `self`
-        // for the duration of the call so the borrow checker allows
-        // `&mut self` pickers (§Perf iteration 3: cloning the rank/key
-        // maps per heartbeat was measurable).
+        // until the discipline's generation changes); the cache and the
+        // scratch working sets are taken out of `self` for the duration
+        // of the call so the borrow checker allows `&mut self` pickers
+        // (§Perf iteration 3: cloning the rank/key maps per heartbeat
+        // was measurable; iteration 4 made the working sets reusable).
         match phase {
             Phase::Map => self.order_map.refresh(self.discipline.as_mut(), phase),
             Phase::Reduce => self.order_reduce.refresh(self.discipline.as_mut(), phase),
@@ -433,14 +459,32 @@ impl SizeBasedScheduler {
             Phase::Map => std::mem::take(&mut self.order_map),
             Phase::Reduce => std::mem::take(&mut self.order_reduce),
         };
-        self.assign_phase_inner(view, node, phase, actions, ctx_budget, &cache);
+        let mut picked = std::mem::take(&mut self.scratch_picked);
+        let mut resumed = std::mem::take(&mut self.scratch_resumed);
+        let mut victims = std::mem::take(&mut self.scratch_victims);
+        picked.clear();
+        resumed.clear();
+        self.assign_phase_inner(
+            view,
+            node,
+            phase,
+            actions,
+            ctx_budget,
+            &cache,
+            &mut picked,
+            &mut resumed,
+            &mut victims,
+        );
+        self.scratch_picked = picked;
+        self.scratch_resumed = resumed;
+        self.scratch_victims = victims;
         match phase {
             Phase::Map => self.order_map = cache,
             Phase::Reduce => self.order_reduce = cache,
         }
     }
 
-    #[allow(clippy::too_many_lines)]
+    #[allow(clippy::too_many_lines, clippy::too_many_arguments)]
     fn assign_phase_inner(
         &mut self,
         view: &SchedView,
@@ -449,23 +493,21 @@ impl SizeBasedScheduler {
         actions: &mut Vec<Action>,
         ctx_budget: &mut usize,
         cache: &OrderCache,
+        picked: &mut FastSet<TaskRef>,
+        resumed: &mut FastSet<TaskRef>,
+        victims: &mut Vec<TaskRef>,
     ) {
         let mut free = view.cluster.node(node).free_slots(phase);
-        let mut picked: HashSet<TaskRef> = HashSet::new();
-        let mut resumed: HashSet<TaskRef> = HashSet::new();
-        let order = &cache.order;
-        let rank = &cache.rank;
-        let finish = &cache.finish;
         if node == 0 && phase == Phase::Map && log::log_enabled!(log::Level::Trace) {
-            let head: Vec<String> = order
+            let head: Vec<String> = cache
+                .order
                 .iter()
                 .take(4)
-                .map(|id| {
-                    let j = &view.jobs[id];
+                .map(|&(id, key)| {
+                    let j = &view.jobs[&id];
                     format!(
-                        "j{id}(key={:.0},rem={:.0},pend={},run={})",
-                        finish.get(id).copied().unwrap_or(-1.0),
-                        self.discipline.remaining(*id, phase).unwrap_or(-1.0),
+                        "j{id}(key={key:.0},rem={:.0},pend={},run={})",
+                        self.discipline.remaining(id, phase).unwrap_or(-1.0),
                         j.pending_tasks(Phase::Map),
                         j.running_tasks(Phase::Map)
                     )
@@ -511,7 +553,7 @@ impl SizeBasedScheduler {
                     && *ctx_budget > 0
                     && training_running < self.cfg.max_training_slots
                 {
-                    let Some((task, local)) = self.pick_task(view, job, phase, node, &picked)
+                    let Some((task, local)) = self.pick_task(view, job, phase, node, picked)
                     else {
                         break;
                     };
@@ -527,7 +569,7 @@ impl SizeBasedScheduler {
         self.training = training;
 
         // -- Stage 1: fill free slots in priority order -------------------
-        for &id in order {
+        for &(id, _) in &cache.order {
             if free == 0 {
                 break;
             }
@@ -538,7 +580,7 @@ impl SizeBasedScheduler {
             // Resume-first: suspended tasks parked on this node (§3.3
             // "Impact on data locality": resume on the same machine).
             while free > 0 {
-                let Some(t) = Self::suspended_here(view, id, phase, node, &resumed) else {
+                let Some(t) = Self::suspended_here(view, id, phase, node, resumed) else {
                     break;
                 };
                 resumed.insert(t);
@@ -547,7 +589,7 @@ impl SizeBasedScheduler {
             }
             // Then pending launches.
             while free > 0 && *ctx_budget > 0 {
-                let Some((task, local)) = self.pick_task(view, job, phase, node, &picked)
+                let Some((task, local)) = self.pick_task(view, job, phase, node, picked)
                 else {
                     break;
                 };
@@ -570,23 +612,19 @@ impl SizeBasedScheduler {
         let cluster_free = view.cluster.free_slots(phase);
         // Victims: running tasks on this node, worst priority first ("the
         // scheduler selects for suspension the tasks of jobs sorted in
-        // decreasing order of their size").
-        let mut victims: Vec<TaskRef> = view
-            .cluster
-            .node(node)
-            .running(phase)
-            .to_vec();
-        victims.sort_by_key(|t| std::cmp::Reverse(rank.get(&t.job).copied().unwrap_or(0)));
-        let mut victim_iter = victims.into_iter().peekable();
+        // decreasing order of their size"). `victims` is reusable scratch.
+        victims.clear();
+        victims.extend_from_slice(view.cluster.node(node).running(phase));
+        victims.sort_by_key(|t| std::cmp::Reverse(cache.rank_of(t.job).unwrap_or(0)));
+        let mut victim_iter = victims.iter().copied().peekable();
         let mut suspended_total = view.cluster.suspended_count();
 
-        for &id in order {
+        for &(id, my_finish) in &cache.order {
             let job = &view.jobs[&id];
             if phase == Phase::Reduce && !job.map_phase_done() {
                 continue;
             }
-            let my_rank = rank[&id];
-            let my_finish = finish.get(&id).copied().unwrap_or(0.0);
+            let my_rank = cache.rank_of(id).expect("ordered job has a rank");
             // Pending tasks can be absorbed by free slots anywhere in the
             // cluster; contexts suspended on THIS node can only resume
             // here, so they always justify preemption.
@@ -607,21 +645,18 @@ impl SizeBasedScheduler {
                 let Some(&victim) = victim_iter.peek() else {
                     return;
                 };
-                let victim_rank = rank.get(&victim.job).copied().unwrap_or(usize::MAX);
+                let victim_rank = cache.rank_of(victim.job).unwrap_or(usize::MAX);
                 if victim_rank <= my_rank {
                     break; // no victim is worse than this job; next job
                 }
-                let victim_finish = finish
-                    .get(&victim.job)
-                    .copied()
-                    .unwrap_or(f64::INFINITY);
+                let victim_finish = cache.key_of(victim.job).unwrap_or(f64::INFINITY);
                 if victim_finish - my_finish < self.cfg.preempt_threshold_s {
                     break; // near-tie: let the victim run (avoid flapping)
                 }
                 // Check primitive availability BEFORE picking a placement:
                 // `pick_task` consumes locality-index entries, so it must
                 // only run when the launch will actually be emitted.
-                let resume_cand = Self::suspended_here(view, id, phase, node, &resumed);
+                let resume_cand = Self::suspended_here(view, id, phase, node, resumed);
                 if resume_cand.is_none() && !pending_unmet {
                     break; // remaining pending demand fits in free slots
                 }
@@ -645,7 +680,7 @@ impl SizeBasedScheduler {
                 let placement: Option<Action> = match resume_cand {
                     Some(t) => Some(Action::Resume { task: t }),
                     None => self
-                        .pick_task(view, job, phase, node, &picked)
+                        .pick_task(view, job, phase, node, picked)
                         .map(|(task, local)| Action::Launch { task, node, local }),
                 };
                 let Some(placement) = placement else {
@@ -748,17 +783,15 @@ impl Scheduler for SizeBasedScheduler {
         self.reduce_started.remove(&id);
     }
 
-    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId, actions: &mut Vec<Action>) {
         self.ensure_sized(view);
         // Job aging / virtual-clock advance (§3.1).
         self.discipline.advance(view.now);
-        let mut actions = Vec::new();
         // Context-memory budget shared by both phases: every launch adds a
         // JVM context on the node; suspensions park one. The budget keeps
         // a heartbeat batch within RAM + swap capacity (§3.3).
         let mut ctx_budget = view.cluster.node(node).context_headroom();
-        self.assign_phase(view, node, Phase::Map, &mut actions, &mut ctx_budget);
-        self.assign_phase(view, node, Phase::Reduce, &mut actions, &mut ctx_budget);
-        actions
+        self.assign_phase(view, node, Phase::Map, actions, &mut ctx_budget);
+        self.assign_phase(view, node, Phase::Reduce, actions, &mut ctx_budget);
     }
 }

@@ -15,7 +15,8 @@ use crate::cluster::Hdfs;
 use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::job::task::NodeId;
 use crate::sim::Time;
-use std::collections::{HashMap, HashSet};
+use crate::util::fxmap::FastSet;
+use std::collections::HashMap;
 
 /// Per-job inverted index: node → map-task indices with a local replica.
 struct JobLocal {
@@ -63,7 +64,7 @@ impl LocalityIndex {
         &mut self,
         job: &Job,
         node: NodeId,
-        picked: &HashSet<TaskRef>,
+        picked: &FastSet<TaskRef>,
     ) -> Option<TaskRef> {
         let entry = self.jobs.get_mut(&job.id())?;
         let list = entry.per_node.get_mut(&node)?;
@@ -91,7 +92,7 @@ impl LocalityIndex {
     }
 
     /// Pick any pending map task of `job` (non-local fallback).
-    pub fn pick_any(&mut self, job: &Job, picked: &HashSet<TaskRef>) -> Option<TaskRef> {
+    pub fn pick_any(&mut self, job: &Job, picked: &FastSet<TaskRef>) -> Option<TaskRef> {
         let n = job.spec.n_maps() as u32;
         let entry = self.jobs.get_mut(&job.id())?;
         // Fast path: advance the cursor.
@@ -126,7 +127,7 @@ impl LocalityIndex {
 }
 
 /// Pick a pending reduce task (reduces have no input locality, §3.1).
-pub fn pick_reduce(job: &Job, picked: &HashSet<TaskRef>) -> Option<TaskRef> {
+pub fn pick_reduce(job: &Job, picked: &FastSet<TaskRef>) -> Option<TaskRef> {
     job.reduces.iter().enumerate().find_map(|(i, t)| {
         let tr = TaskRef {
             job: job.id(),
@@ -200,7 +201,7 @@ mod tests {
     #[test]
     fn pick_local_returns_replica_holder_tasks() {
         let (job, hdfs, mut idx) = setup(10, 30);
-        let picked = HashSet::new();
+        let picked = FastSet::default();
         for node in 0..10 {
             while let Some(t) = idx.pick_local(&job, node, &picked) {
                 assert!(hdfs.is_local(node, t), "picked task must be local");
@@ -224,7 +225,7 @@ mod tests {
             };
             job.task_mut(t).launch(0, 0.0, hdfs.is_local(0, t), 1.0);
         }
-        let picked = HashSet::new();
+        let picked = FastSet::default();
         for node in 0..4 {
             assert!(idx.pick_local(&job, node, &picked).is_none());
         }
@@ -233,7 +234,7 @@ mod tests {
     #[test]
     fn pick_any_respects_picked_set() {
         let (job, _hdfs, mut idx) = setup(4, 3);
-        let mut picked = HashSet::new();
+        let mut picked = FastSet::default();
         let a = idx.pick_any(&job, &picked).unwrap();
         picked.insert(a);
         let b = idx.pick_any(&job, &picked).unwrap();
@@ -247,7 +248,7 @@ mod tests {
     #[test]
     fn pick_any_finds_requeued_task_behind_cursor() {
         let (mut job, _hdfs, mut idx) = setup(4, 3);
-        let picked = HashSet::new();
+        let picked = FastSet::default();
         // Advance the cursor past all tasks.
         for _ in 0..3 {
             let t = idx.pick_any(&job, &picked).unwrap();
@@ -267,10 +268,10 @@ mod tests {
     #[test]
     fn pick_reduce_in_order() {
         let job = mk_job(1, 1);
-        let picked = HashSet::new();
+        let picked = FastSet::default();
         let r = pick_reduce(&job, &picked).unwrap();
         assert_eq!(r.index, 0);
-        let mut picked = HashSet::new();
+        let mut picked = FastSet::default();
         picked.insert(r);
         assert_eq!(pick_reduce(&job, &picked).unwrap().index, 1);
     }

@@ -88,7 +88,9 @@ impl Discipline for FspDiscipline {
         }
     }
 
-    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
+    fn order(&mut self, phase: Phase) -> &[(JobId, f64)] {
+        // Borrow of the virtual cluster's cached projection — no clone;
+        // the mechanism copies it at most once per generation.
         self.vc(phase).projected_finish_order()
     }
 

@@ -20,20 +20,26 @@
 //! threshold doubles as the scheduler's quantum: a fresh job only
 //! preempts a victim that has attained at least
 //! `preempt_threshold_s` more service.
+//!
+//! Storage mirrors SRPT: per-phase [`FastMap`] state plus a lazily
+//! rebuilt `OrderedCache` served by slice.
 
 use crate::job::{JobId, Phase};
 use crate::scheduler::core::Discipline;
 use crate::sim::Time;
-use std::collections::HashMap;
+use crate::util::fxmap::FastMap;
 
 use super::srpt::phase_idx;
+use super::OrderedCache;
 
 /// The LAS discipline.
 #[derive(Default)]
 pub struct LasDiscipline {
-    attained: HashMap<(JobId, Phase), f64>,
+    /// Per-phase attained service ([map, reduce]).
+    attained: [FastMap<JobId, f64>; 2],
     /// Per-phase order version ([map, reduce]).
     generation: [u64; 2],
+    cache: [OrderedCache; 2],
 }
 
 impl LasDiscipline {
@@ -42,7 +48,9 @@ impl LasDiscipline {
     }
 
     fn bump(&mut self, phase: Phase) {
-        self.generation[phase_idx(phase)] += 1;
+        let i = phase_idx(phase);
+        self.generation[i] += 1;
+        self.cache[i].invalidate();
     }
 }
 
@@ -57,7 +65,7 @@ impl Discipline for LasDiscipline {
         _n_tasks: usize,
         _now: Time,
     ) {
-        self.attained.insert((id, phase), 0.0);
+        self.attained[phase_idx(phase)].insert(id, 0.0);
         self.bump(phase);
     }
 
@@ -67,21 +75,21 @@ impl Discipline for LasDiscipline {
     }
 
     fn service_observed(&mut self, id: JobId, phase: Phase, observed: f64, _now: Time) {
-        if let Some(a) = self.attained.get_mut(&(id, phase)) {
+        if let Some(a) = self.attained[phase_idx(phase)].get_mut(&id) {
             *a += observed;
             self.bump(phase);
         }
     }
 
     fn phase_completed(&mut self, id: JobId, phase: Phase, _now: Time) {
-        if self.attained.remove(&(id, phase)).is_some() {
+        if self.attained[phase_idx(phase)].remove(&id).is_some() {
             self.bump(phase);
         }
     }
 
     fn job_removed(&mut self, id: JobId, _now: Time) {
         for phase in [Phase::Map, Phase::Reduce] {
-            if self.attained.remove(&(id, phase)).is_some() {
+            if self.attained[phase_idx(phase)].remove(&id).is_some() {
                 self.bump(phase);
             }
         }
@@ -93,14 +101,8 @@ impl Discipline for LasDiscipline {
         self.generation[phase_idx(phase)]
     }
 
-    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
-        let mut out: Vec<(JobId, f64)> = self
-            .attained
-            .iter()
-            .filter(|((_, p), _)| *p == phase)
-            .map(|(&(id, _), &a)| (id, a))
-            .collect();
-        out.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN key").then(a.0.cmp(&b.0)));
-        out
+    fn order(&mut self, phase: Phase) -> &[(JobId, f64)] {
+        let i = phase_idx(phase);
+        self.cache[i].get_or_rebuild(self.attained[i].iter().map(|(&id, &a)| (id, a)))
     }
 }

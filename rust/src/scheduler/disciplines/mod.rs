@@ -29,6 +29,44 @@ pub use psbs::PsbsDiscipline;
 pub use srpt::SrptDiscipline;
 
 use super::core::{Discipline, SizeBasedConfig};
+use crate::job::JobId;
+
+/// Lazily rebuilt `(job, priority key)` order cache shared by the
+/// map-backed disciplines (SRPT, LAS, PSBS): one per phase, marked
+/// stale by every lifecycle hook that bumps the discipline's
+/// generation, rebuilt at most once per [`Discipline::order`] call.
+/// Ascending key, ties by job id; [`f64::total_cmp`] so a pathological
+/// key stream can never panic the comparator. Keeping the
+/// dirty-flag/rebuild protocol in ONE place means an invalidation fix
+/// cannot silently diverge between disciplines.
+#[derive(Default)]
+pub(crate) struct OrderedCache {
+    entries: Vec<(JobId, f64)>,
+    dirty: bool,
+}
+
+impl OrderedCache {
+    /// Mark the cached order stale (pair with every generation bump).
+    pub(crate) fn invalidate(&mut self) {
+        self.dirty = true;
+    }
+
+    /// The cached order, rebuilt from `entries` when stale. No
+    /// allocation and no sort when the order is unchanged.
+    pub(crate) fn get_or_rebuild(
+        &mut self,
+        entries: impl Iterator<Item = (JobId, f64)>,
+    ) -> &[(JobId, f64)] {
+        if self.dirty {
+            self.entries.clear();
+            self.entries.extend(entries);
+            self.entries
+                .sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            self.dirty = false;
+        }
+        &self.entries
+    }
+}
 
 /// Which ordering policy a [`SizeBasedConfig`] selects.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -107,10 +145,10 @@ mod tests {
         d.phase_started(1, Phase::Map, 100.0, 10, 0.0);
         d.phase_started(2, Phase::Map, 10.0, 2, 1.0);
         d.advance(2.0);
-        let order = d.order(Phase::Map);
+        let order = d.order(Phase::Map).to_vec();
         assert_eq!(order.len(), 2, "both registered jobs present");
         assert!(order.windows(2).all(|w| w[0].1 <= w[1].1), "keys ascending");
-        let again = d.order(Phase::Map);
+        let again = d.order(Phase::Map).to_vec();
         assert_eq!(
             order.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
             again.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
@@ -162,7 +200,7 @@ mod tests {
         d.service_observed(1, Phase::Map, 30.0, 1.0);
         assert_eq!(d.order(Phase::Map)[0].0, 2, "fresh job first under LAS");
         // Estimates must not perturb the order (size-oblivious).
-        let before = d.order(Phase::Map);
+        let before = d.order(Phase::Map).to_vec();
         d.size_estimated(2, Phase::Map, 1e6, 2.0);
         assert_eq!(before, d.order(Phase::Map));
     }

@@ -21,12 +21,13 @@
 //! O(n² log n) worst case.
 //!
 //! The priority key is a virtual timestamp; the preemption threshold
-//! therefore compares virtual-time gaps.
+//! therefore compares virtual-time gaps. Tag storage is a [`FastMap`]
+//! per phase with a lazily rebuilt `OrderedCache` served by slice.
 
 use crate::job::{JobId, Phase};
 use crate::scheduler::core::Discipline;
 use crate::sim::Time;
-use std::collections::HashMap;
+use crate::util::fxmap::FastMap;
 
 struct TaggedJob {
     /// Virtual finish tag (bound at arrival, re-bound on estimates).
@@ -40,7 +41,8 @@ struct TaggedJob {
 struct PhaseQueue {
     vnow: f64,
     last: Time,
-    jobs: HashMap<JobId, TaggedJob>,
+    jobs: FastMap<JobId, TaggedJob>,
+    cache: OrderedCache,
 }
 
 impl PhaseQueue {
@@ -57,6 +59,7 @@ impl PhaseQueue {
 }
 
 use super::srpt::phase_idx;
+use super::OrderedCache;
 
 /// The PSBS-style discipline.
 #[derive(Default)]
@@ -81,6 +84,7 @@ impl PsbsDiscipline {
 
     fn bump(&mut self, phase: Phase) {
         self.generation[phase_idx(phase)] += 1;
+        self.queue(phase).cache.invalidate();
     }
 }
 
@@ -161,12 +165,10 @@ impl Discipline for PsbsDiscipline {
         self.generation[phase_idx(phase)]
     }
 
-    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
+    fn order(&mut self, phase: Phase) -> &[(JobId, f64)] {
         let q = self.queue(phase);
-        let mut out: Vec<(JobId, f64)> =
-            q.jobs.iter().map(|(&id, j)| (id, j.tag)).collect();
-        out.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN tag").then(a.0.cmp(&b.0)));
-        out
+        let jobs = &q.jobs;
+        q.cache.get_or_rebuild(jobs.iter().map(|(&id, j)| (id, j.tag)))
     }
 
     fn remaining(&self, id: JobId, phase: Phase) -> Option<f64> {

@@ -11,11 +11,16 @@
 //! Compared in the PSBS line of work (arXiv 1410.6122, 1403.5996) as the
 //! upper-bound reference that is *most* sensitive to estimation error —
 //! under-estimated large jobs camp at the head of the queue.
+//!
+//! State is per-phase ([`FastMap`] keyed by job id) with a lazily
+//! rebuilt `OrderedCache`: [`Discipline::order`] hands out a slice,
+//! only re-sorting after a lifecycle event dirtied the phase.
 
+use super::OrderedCache;
 use crate::job::{JobId, Phase};
 use crate::scheduler::core::Discipline;
 use crate::sim::Time;
-use std::collections::HashMap;
+use crate::util::fxmap::FastMap;
 
 struct JobState {
     estimated_total: f64,
@@ -31,10 +36,12 @@ impl JobState {
 /// The SRPT discipline.
 #[derive(Default)]
 pub struct SrptDiscipline {
-    jobs: HashMap<(JobId, Phase), JobState>,
-    /// Per-phase order version ([map, reduce]): a map-phase event must
-    /// not invalidate the mechanism's cached reduce order.
+    /// Per-phase job state ([map, reduce]).
+    jobs: [FastMap<JobId, JobState>; 2],
+    /// Per-phase order version: a map-phase event must not invalidate
+    /// the mechanism's cached reduce order.
     generation: [u64; 2],
+    cache: [OrderedCache; 2],
 }
 
 pub(super) fn phase_idx(phase: Phase) -> usize {
@@ -50,7 +57,9 @@ impl SrptDiscipline {
     }
 
     fn bump(&mut self, phase: Phase) {
-        self.generation[phase_idx(phase)] += 1;
+        let i = phase_idx(phase);
+        self.generation[i] += 1;
+        self.cache[i].invalidate();
     }
 }
 
@@ -65,8 +74,8 @@ impl Discipline for SrptDiscipline {
         _n_tasks: usize,
         _now: Time,
     ) {
-        self.jobs.insert(
-            (id, phase),
+        self.jobs[phase_idx(phase)].insert(
+            id,
             JobState {
                 estimated_total: initial_size,
                 attained: 0.0,
@@ -76,28 +85,28 @@ impl Discipline for SrptDiscipline {
     }
 
     fn size_estimated(&mut self, id: JobId, phase: Phase, total: f64, _now: Time) {
-        if let Some(j) = self.jobs.get_mut(&(id, phase)) {
+        if let Some(j) = self.jobs[phase_idx(phase)].get_mut(&id) {
             j.estimated_total = total.max(0.0);
             self.bump(phase);
         }
     }
 
     fn service_observed(&mut self, id: JobId, phase: Phase, observed: f64, _now: Time) {
-        if let Some(j) = self.jobs.get_mut(&(id, phase)) {
+        if let Some(j) = self.jobs[phase_idx(phase)].get_mut(&id) {
             j.attained += observed;
             self.bump(phase);
         }
     }
 
     fn phase_completed(&mut self, id: JobId, phase: Phase, _now: Time) {
-        if self.jobs.remove(&(id, phase)).is_some() {
+        if self.jobs[phase_idx(phase)].remove(&id).is_some() {
             self.bump(phase);
         }
     }
 
     fn job_removed(&mut self, id: JobId, _now: Time) {
         for phase in [Phase::Map, Phase::Reduce] {
-            if self.jobs.remove(&(id, phase)).is_some() {
+            if self.jobs[phase_idx(phase)].remove(&id).is_some() {
                 self.bump(phase);
             }
         }
@@ -109,18 +118,12 @@ impl Discipline for SrptDiscipline {
         self.generation[phase_idx(phase)]
     }
 
-    fn order(&mut self, phase: Phase) -> Vec<(JobId, f64)> {
-        let mut out: Vec<(JobId, f64)> = self
-            .jobs
-            .iter()
-            .filter(|((_, p), _)| *p == phase)
-            .map(|(&(id, _), j)| (id, j.remaining()))
-            .collect();
-        out.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN key").then(a.0.cmp(&b.0)));
-        out
+    fn order(&mut self, phase: Phase) -> &[(JobId, f64)] {
+        let i = phase_idx(phase);
+        self.cache[i].get_or_rebuild(self.jobs[i].iter().map(|(&id, j)| (id, j.remaining())))
     }
 
     fn remaining(&self, id: JobId, phase: Phase) -> Option<f64> {
-        self.jobs.get(&(id, phase)).map(JobState::remaining)
+        self.jobs[phase_idx(phase)].get(&id).map(JobState::remaining)
     }
 }

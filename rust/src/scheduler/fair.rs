@@ -14,7 +14,8 @@ use super::delay::{pick_reduce, DelayTimer, LocalityIndex};
 use super::{Action, SchedView, Scheduler};
 use crate::job::task::NodeId;
 use crate::job::{Job, JobId, Phase, TaskRef};
-use std::collections::{HashMap, HashSet};
+use crate::util::fxmap::{FastMap, FastSet};
+use std::collections::HashMap;
 
 /// FAIR configuration.
 #[derive(Clone, Debug)]
@@ -41,6 +42,11 @@ pub struct FairScheduler {
     delay: DelayTimer,
     /// Weights (extension point for pools; uniform in the paper's setup).
     weights: HashMap<JobId, f64>,
+    /// Reusable per-heartbeat working sets (the picked-task set and the
+    /// deficit ordering's extra-launch counters; the deficit re-sort
+    /// itself still builds its candidate list per pick).
+    picked: FastSet<TaskRef>,
+    extra: FastMap<JobId, usize>,
 }
 
 impl FairScheduler {
@@ -51,6 +57,8 @@ impl FairScheduler {
             index: LocalityIndex::new(),
             delay,
             weights: HashMap::new(),
+            picked: FastSet::default(),
+            extra: FastMap::default(),
         }
     }
 
@@ -69,7 +77,7 @@ impl FairScheduler {
         &self,
         view: &'b SchedView,
         phase: Phase,
-        extra: &HashMap<JobId, usize>,
+        extra: &FastMap<JobId, usize>,
     ) -> Vec<&'b Job> {
         let mut jobs: Vec<&Job> = view
             .active_jobs()
@@ -83,9 +91,7 @@ impl FairScheduler {
                 / self.weight(a.id());
             let rb = (b.running_tasks(phase) + extra.get(&b.id()).copied().unwrap_or(0)) as f64
                 / self.weight(b.id());
-            ra.partial_cmp(&rb)
-                .unwrap()
-                .then_with(|| a.id().cmp(&b.id()))
+            ra.total_cmp(&rb).then_with(|| a.id().cmp(&b.id()))
         });
         jobs
     }
@@ -95,13 +101,14 @@ impl FairScheduler {
         view: &SchedView,
         node: NodeId,
         actions: &mut Vec<Action>,
-        picked: &mut HashSet<TaskRef>,
+        picked: &mut FastSet<TaskRef>,
+        extra: &mut FastMap<JobId, usize>,
     ) {
         let mut free = view.cluster.node(node).free_slots(Phase::Map);
-        let mut extra: HashMap<JobId, usize> = HashMap::new();
+        extra.clear();
         while free > 0 {
             // Re-sort after each pick so shares stay balanced.
-            let order = self.deficit_order(view, Phase::Map, &extra);
+            let order = self.deficit_order(view, Phase::Map, extra);
             let mut launched = false;
             for job in order {
                 // Delay scheduling: prefer a local task; allow non-local
@@ -146,12 +153,13 @@ impl FairScheduler {
         view: &SchedView,
         node: NodeId,
         actions: &mut Vec<Action>,
-        picked: &mut HashSet<TaskRef>,
+        picked: &mut FastSet<TaskRef>,
+        extra: &mut FastMap<JobId, usize>,
     ) {
         let mut free = view.cluster.node(node).free_slots(Phase::Reduce);
-        let mut extra: HashMap<JobId, usize> = HashMap::new();
+        extra.clear();
         while free > 0 {
-            let order = self.deficit_order(view, Phase::Reduce, &extra);
+            let order = self.deficit_order(view, Phase::Reduce, extra);
             let Some(task) = order.iter().find_map(|job| pick_reduce(job, picked)) else {
                 break;
             };
@@ -185,11 +193,13 @@ impl Scheduler for FairScheduler {
         self.weights.remove(&job);
     }
 
-    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
-        let mut actions = Vec::new();
-        let mut picked = HashSet::new();
-        self.assign_maps(view, node, &mut actions, &mut picked);
-        self.assign_reduces(view, node, &mut actions, &mut picked);
-        actions
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId, actions: &mut Vec<Action>) {
+        let mut picked = std::mem::take(&mut self.picked);
+        let mut extra = std::mem::take(&mut self.extra);
+        picked.clear();
+        self.assign_maps(view, node, actions, &mut picked, &mut extra);
+        self.assign_reduces(view, node, actions, &mut picked, &mut extra);
+        self.picked = picked;
+        self.extra = extra;
     }
 }

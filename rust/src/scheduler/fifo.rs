@@ -12,16 +12,19 @@ use super::delay::{pick_reduce, LocalityIndex};
 use super::{Action, SchedView, Scheduler};
 use crate::job::task::NodeId;
 use crate::job::{JobId, Phase, TaskRef};
-use std::collections::HashSet;
+use crate::util::fxmap::FastSet;
 
 pub struct FifoScheduler {
     index: LocalityIndex,
+    /// Reusable per-heartbeat picked set (hot path allocates nothing).
+    picked: FastSet<TaskRef>,
 }
 
 impl FifoScheduler {
     pub fn new() -> Self {
         Self {
             index: LocalityIndex::new(),
+            picked: FastSet::default(),
         }
     }
 
@@ -31,7 +34,7 @@ impl FifoScheduler {
         node: NodeId,
         phase: Phase,
         actions: &mut Vec<Action>,
-        picked: &mut HashSet<TaskRef>,
+        picked: &mut FastSet<TaskRef>,
     ) {
         let mut free = view.cluster.node(node).free_slots(phase);
         if free == 0 {
@@ -99,11 +102,11 @@ impl Scheduler for FifoScheduler {
         self.index.remove_job(job);
     }
 
-    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action> {
-        let mut actions = Vec::new();
-        let mut picked = HashSet::new();
-        self.assign_phase(view, node, Phase::Map, &mut actions, &mut picked);
-        self.assign_phase(view, node, Phase::Reduce, &mut actions, &mut picked);
-        actions
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId, actions: &mut Vec<Action>) {
+        let mut picked = std::mem::take(&mut self.picked);
+        picked.clear();
+        self.assign_phase(view, node, Phase::Map, actions, &mut picked);
+        self.assign_phase(view, node, Phase::Reduce, actions, &mut picked);
+        self.picked = picked;
     }
 }

@@ -61,15 +61,18 @@ pub mod hfsp {
 
 use crate::cluster::{Cluster, Hdfs};
 use crate::job::task::NodeId;
-use crate::job::{Job, JobId, TaskRef};
+use crate::job::{Job, JobId, JobTable, TaskRef};
 use crate::sim::Time;
 use self::disciplines::DisciplineKind;
-use std::collections::BTreeMap;
 use std::sync::OnceLock;
 
 /// Read-only view of the world handed to schedulers.
+///
+/// `jobs` is the driver's arena-backed [`JobTable`]: id lookups are O(1)
+/// hashing into dense slab storage, iteration is id (= submission)
+/// order — the per-event hot path never walks a tree.
 pub struct SchedView<'a> {
-    pub jobs: &'a BTreeMap<JobId, Job>,
+    pub jobs: &'a JobTable,
     pub cluster: &'a Cluster,
     pub hdfs: &'a Hdfs,
     pub now: Time,
@@ -128,8 +131,10 @@ pub trait Scheduler {
         let _ = (view, job);
     }
 
-    /// Heartbeat from `node`: return actions to apply, in order.
-    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId) -> Vec<Action>;
+    /// Heartbeat from `node`: push actions to apply, in order, onto
+    /// `actions` (a cleared, reusable buffer owned by the driver — the
+    /// hot path allocates no per-heartbeat `Vec`).
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId, actions: &mut Vec<Action>);
 }
 
 /// Factory enum used by the CLI, benches and examples.

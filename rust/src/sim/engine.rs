@@ -117,6 +117,16 @@ impl<E> Engine<E> {
         self.queue.len()
     }
 
+    /// Total events ever scheduled on this engine (bench diagnostic).
+    pub fn pushed(&self) -> u64 {
+        self.queue.scheduled_count()
+    }
+
+    /// High-water mark of the pending-event set (bench diagnostic).
+    pub fn heap_peak(&self) -> usize {
+        self.queue.peak_len()
+    }
+
     /// Schedule at an absolute time; must not be in the past.
     pub fn schedule_at(&mut self, time: Time, event: E) {
         assert!(
@@ -154,6 +164,46 @@ impl<E> Engine<E> {
     /// Ask the run loop to stop after the current event.
     pub fn halt(&mut self) {
         self.halt = true;
+    }
+
+    /// Pop the next event only if it fires at the **current instant** and
+    /// matches `pred`, with the same lazy chain deletion and event
+    /// accounting as [`Engine::run_filtered`]. Handlers use this to
+    /// coalesce a same-instant burst (e.g. several node heartbeats
+    /// landing on one tick) into a single dispatch, skipping the outer
+    /// loop's per-event overhead. Returns `None` once the head event is
+    /// later, different in kind, blocked by a pending halt, or when
+    /// popping would trip the event-count guard (the main loop must be
+    /// the one to observe the trip).
+    pub fn pop_coalesced<C, P>(&mut self, chain_of: C, pred: P) -> Option<E>
+    where
+        C: Fn(&E) -> Option<(usize, u32)>,
+        P: Fn(&E) -> bool,
+    {
+        loop {
+            if self.halt || self.processed >= self.event_limit {
+                return None;
+            }
+            {
+                let head = self.queue.peek()?;
+                if head.time != self.now || !pred(&head.event) {
+                    return None;
+                }
+            }
+            let ev = self.queue.pop().expect("peeked event vanished");
+            if let Some((chain, epoch)) = chain_of(&ev.event) {
+                let stale = match self.chain_epochs.get(chain) {
+                    Some(&cur) => cur != epoch,
+                    None => false,
+                };
+                if stale {
+                    self.skipped += 1;
+                    continue;
+                }
+            }
+            self.processed += 1;
+            return Some(ev.event);
+        }
     }
 
     /// Run until the queue drains, the handler halts, or the guard trips.
@@ -323,6 +373,75 @@ mod tests {
         eng.run_filtered(|_| Some((99, 3)), |_, _, _| n += 1);
         assert_eq!(n, 1);
         assert_eq!(eng.skipped(), 0);
+    }
+
+    #[test]
+    fn pop_coalesced_drains_same_instant_matches_only() {
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.schedule_at(1.0, Ev::Ping(1));
+        eng.schedule_at(1.0, Ev::Ping(2));
+        eng.schedule_at(1.0, Ev::Stop);
+        eng.schedule_at(2.0, Ev::Ping(3));
+        let mut dispatched = Vec::new();
+        let mut coalesced = Vec::new();
+        eng.run(|e, _, ev| {
+            dispatched.push(format!("{ev:?}"));
+            if matches!(ev, Ev::Ping(_)) {
+                // Drain the same-instant Ping burst; Stop (different
+                // kind) and the t=2 Ping (later instant) must stay.
+                while let Some(next) =
+                    e.pop_coalesced(|_| None, |ev| matches!(ev, Ev::Ping(_)))
+                {
+                    coalesced.push(format!("{next:?}"));
+                }
+            }
+        });
+        assert_eq!(dispatched, vec!["Ping(1)", "Stop", "Ping(3)"]);
+        assert_eq!(coalesced, vec!["Ping(2)"]);
+        // Coalesced events count as processed exactly like dispatched ones.
+        assert_eq!(eng.processed(), 4);
+        assert_eq!(eng.pushed(), 4);
+        assert!(eng.heap_peak() >= 4);
+    }
+
+    #[test]
+    fn pop_coalesced_respects_chain_staleness_and_event_limit() {
+        #[derive(Debug, PartialEq)]
+        enum Cev {
+            Tick { chain: usize, epoch: u32 },
+        }
+        let chain_of = |ev: &Cev| {
+            let Cev::Tick { chain, epoch } = ev;
+            Some((*chain, *epoch))
+        };
+        let mut eng: Engine<Cev> = Engine::new();
+        eng.init_chains(2);
+        eng.schedule_at(1.0, Cev::Tick { chain: 0, epoch: 0 });
+        eng.schedule_at(1.0, Cev::Tick { chain: 1, epoch: 0 });
+        eng.schedule_at(1.0, Cev::Tick { chain: 0, epoch: 0 });
+        eng.bump_chain(1); // the middle event is now stale
+        let mut seen = 0;
+        let mut coalesced = 0;
+        eng.run_filtered(chain_of, |e, _, _| {
+            seen += 1;
+            while e.pop_coalesced(chain_of, |_| true).is_some() {
+                coalesced += 1;
+            }
+        });
+        assert_eq!(seen, 1);
+        assert_eq!(coalesced, 1, "stale tick skipped, live tick coalesced");
+        assert_eq!(eng.skipped(), 1);
+        assert_eq!(eng.processed(), 2);
+
+        // At the event limit, coalescing defers to the main loop so the
+        // guard trips identically with or without coalescing.
+        let mut lim: Engine<Ev> = Engine::new().with_event_limit(1);
+        lim.schedule_at(1.0, Ev::Ping(0));
+        lim.schedule_at(1.0, Ev::Ping(1));
+        let reason = lim.run(|e, _, _| {
+            assert!(e.pop_coalesced(|_| None, |_| true).is_none());
+        });
+        assert_eq!(reason, StopReason::EventLimit);
     }
 
     #[test]

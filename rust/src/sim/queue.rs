@@ -61,6 +61,9 @@ impl<E> Ord for ScheduledEvent<E> {
 pub struct EventQueue<E> {
     heap: BinaryHeap<ScheduledEvent<E>>,
     next_seq: u64,
+    /// High-water mark of the pending set (bench diagnostic: attributes
+    /// wall time to event volume vs per-event cost).
+    peak_len: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -74,6 +77,7 @@ impl<E> EventQueue<E> {
         Self {
             heap: BinaryHeap::new(),
             next_seq: 0,
+            peak_len: 0,
         }
     }
 
@@ -102,12 +106,18 @@ impl<E> EventQueue<E> {
             seq,
             event,
         });
+        self.peak_len = self.peak_len.max(self.heap.len());
         seq
     }
 
     /// Pop the earliest event.
     pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
         self.heap.pop()
+    }
+
+    /// The earliest pending event, without removing it.
+    pub fn peek(&self) -> Option<&ScheduledEvent<E>> {
+        self.heap.peek()
     }
 
     /// Time of the earliest pending event.
@@ -126,6 +136,11 @@ impl<E> EventQueue<E> {
     /// Total number of events ever scheduled (diagnostics).
     pub fn scheduled_count(&self) -> u64 {
         self.next_seq
+    }
+
+    /// Largest number of simultaneously pending events so far.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
     }
 }
 
@@ -164,6 +179,8 @@ mod tests {
         assert_eq!(q.pop().unwrap().event, 'x');
         assert!(q.pop().is_none());
         assert_eq!(q.scheduled_count(), 3);
+        // Peak pending set: both initial pushes were in flight together.
+        assert_eq!(q.peak_len(), 2);
     }
 
     #[test]

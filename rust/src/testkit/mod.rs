@@ -11,6 +11,7 @@
 //!     .pair(Gen::f64_range(-1e3, 1e3)), |(a, b)| a + b == b + a);
 //! ```
 
+pub mod reference;
 pub mod scenarios;
 
 use crate::util::rng::{Pcg64, Rng, SeedableRng};

@@ -1,0 +1,208 @@
+//! Naive reference implementations retained for differential testing.
+//!
+//! [`NaiveVirtualCluster`] is the pre-optimization virtual cluster kept
+//! alive as an executable specification: map-backed storage, no order
+//! cache — every [`NaiveVirtualCluster::projected_finish_order`] call
+//! re-runs the fluid-forward projection from scratch and re-sorts. The
+//! incremental production implementation
+//! ([`crate::scheduler::core::virtual_cluster::VirtualCluster`]) must
+//! agree with it on every projected order and every virtual finish time
+//! across the scenario matrix (`tests/integration_perf.rs`); any cache
+//! invalidation bug shows up as a divergence here long before it would
+//! corrupt a golden file.
+//!
+//! Deliberately simple, deliberately slow — do not "optimize" this
+//! module; its value is being obviously correct.
+
+use crate::job::JobId;
+use crate::scheduler::core::virtual_cluster::maxmin_waterfill;
+use crate::sim::Time;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct NaiveVJob {
+    total: f64,
+    aged: f64,
+    tau: f64,
+    width_cap: f64,
+}
+
+impl NaiveVJob {
+    fn remaining(&self) -> f64 {
+        (self.total - self.aged).max(0.0)
+    }
+
+    fn width(&self) -> f64 {
+        if self.tau <= 0.0 {
+            return 0.0;
+        }
+        (self.remaining() / self.tau).ceil().min(self.width_cap)
+    }
+}
+
+/// The uncached, map-backed PS reference simulation (see module docs).
+pub struct NaiveVirtualCluster {
+    slots: f64,
+    jobs: BTreeMap<JobId, NaiveVJob>,
+    last_event: Time,
+}
+
+impl NaiveVirtualCluster {
+    pub fn new(slots: usize) -> Self {
+        assert!(slots > 0, "virtual cluster needs capacity");
+        Self {
+            slots: slots as f64,
+            jobs: BTreeMap::new(),
+            last_event: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn contains(&self, id: JobId) -> bool {
+        self.jobs.contains_key(&id)
+    }
+
+    pub fn remaining(&self, id: JobId) -> Option<f64> {
+        self.jobs.get(&id).map(NaiveVJob::remaining)
+    }
+
+    pub fn total_remaining(&self) -> f64 {
+        self.jobs.values().map(NaiveVJob::remaining).sum()
+    }
+
+    pub fn age_to(&mut self, now: Time) {
+        let dt = now - self.last_event;
+        if dt < 0.0 {
+            return;
+        }
+        self.last_event = now;
+        if dt == 0.0 || self.jobs.is_empty() {
+            return;
+        }
+        // BTreeMap iteration = ascending job id, matching the production
+        // implementation's sorted arrays so float accumulation order is
+        // identical and the differential comparison can be tight.
+        let ids: Vec<JobId> = self.jobs.keys().copied().collect();
+        let demands: Vec<f64> = ids
+            .iter()
+            .map(|id| self.jobs[id].width().min(self.slots))
+            .collect();
+        let alloc = maxmin_waterfill(&demands, self.slots);
+        for (id, a) in ids.iter().zip(alloc) {
+            let j = self.jobs.get_mut(id).unwrap();
+            j.aged = (j.aged + a * dt).min(j.total);
+        }
+    }
+
+    pub fn add_job(&mut self, id: JobId, total: f64, n_tasks: usize, now: Time) {
+        self.age_to(now);
+        let total = total.clamp(0.0, f64::MAX);
+        let width_cap = n_tasks.max(1) as f64;
+        self.jobs.insert(
+            id,
+            NaiveVJob {
+                total,
+                aged: 0.0,
+                tau: (total / width_cap).max(f64::MIN_POSITIVE),
+                width_cap,
+            },
+        );
+    }
+
+    pub fn remove_job(&mut self, id: JobId, now: Time) {
+        self.age_to(now);
+        self.jobs.remove(&id);
+    }
+
+    pub fn set_total(&mut self, id: JobId, new_total: f64, now: Time) {
+        self.age_to(now);
+        if let Some(j) = self.jobs.get_mut(&id) {
+            j.total = new_total.clamp(0.0, f64::MAX);
+            j.tau = (j.total / j.width_cap).max(f64::MIN_POSITIVE);
+        }
+    }
+
+    /// Projected PS finish order, recomputed from scratch on every call.
+    pub fn projected_finish_order(&self) -> Vec<(JobId, Time)> {
+        let mut live: Vec<(JobId, NaiveVJob)> =
+            self.jobs.iter().map(|(&id, j)| (id, j.clone())).collect();
+        let mut finished: Vec<(JobId, Time)> = Vec::with_capacity(live.len());
+        let mut t = self.last_event;
+        live.retain(|(id, j)| {
+            if j.remaining() <= 0.0 {
+                finished.push((*id, t));
+                false
+            } else {
+                true
+            }
+        });
+        let mut guard = 0usize;
+        while !live.is_empty() {
+            guard += 1;
+            if guard > 100_000 {
+                for (id, _) in &live {
+                    finished.push((*id, f64::INFINITY));
+                }
+                break;
+            }
+            let demands: Vec<f64> =
+                live.iter().map(|(_, j)| j.width().min(self.slots)).collect();
+            let alloc = maxmin_waterfill(&demands, self.slots);
+            let mut dt = f64::INFINITY;
+            for ((_, j), &a) in live.iter().zip(&alloc) {
+                if a <= 0.0 {
+                    continue;
+                }
+                dt = dt.min(j.remaining() / a);
+            }
+            if !dt.is_finite() || dt <= 0.0 {
+                for (id, _) in &live {
+                    finished.push((*id, f64::INFINITY));
+                }
+                break;
+            }
+            t += dt;
+            let mut next: Vec<(JobId, NaiveVJob)> = Vec::with_capacity(live.len());
+            for ((id, mut j), &a) in live.into_iter().zip(&alloc) {
+                j.aged = (j.aged + a * dt).min(j.total);
+                if j.remaining() <= 1e-9 {
+                    finished.push((id, t));
+                } else {
+                    next.push((id, j));
+                }
+            }
+            live = next;
+        }
+        finished.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The naive reference reproduces the paper's Fig. 1 PS order —
+    /// anchoring it to the same ground truth as the production impl.
+    #[test]
+    fn naive_reproduces_fig1() {
+        let mut vc = NaiveVirtualCluster::new(1);
+        vc.add_job(1, 30.0, 10, 0.0);
+        vc.add_job(2, 10.0, 10, 10.0);
+        vc.add_job(3, 10.0, 10, 15.0);
+        let ids: Vec<JobId> = vc
+            .projected_finish_order()
+            .iter()
+            .map(|&(id, _)| id)
+            .collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+        assert!((vc.remaining(1).unwrap() - 17.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Fast, deterministic hashing for simulator-internal maps.
+//!
+//! The per-event hot path indexes arenas and caches by small integer
+//! keys (job ids, task refs). `std`'s default SipHash is DoS-resistant
+//! but costs ~10x more than needed for trusted keys, and its per-map
+//! random seed makes iteration order differ between map instances —
+//! every hot structure here must already avoid order-dependence, but a
+//! fixed-seed hasher removes the hazard class entirely. This is the
+//! classic FxHash multiply-rotate mix (as used by rustc), implemented
+//! locally because the offline build carries no external crates.
+//!
+//! Use [`FastMap`]/[`FastSet`] for simulator-internal state keyed by
+//! trusted ids; keep `std` defaults for anything fed by external input.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FxHash: one wrapping multiply + rotate per word. Deterministic
+/// (seed-free) and fast on integer keys.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add_to_hash(n as u64);
+    }
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add_to_hash(n as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add_to_hash(n);
+    }
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add_to_hash(n as u64);
+    }
+}
+
+/// `HashMap` with the deterministic [`FxHasher`].
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// `HashSet` with the deterministic [`FxHasher`].
+pub type FastSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_and_set_round_trip() {
+        let mut m: FastMap<u64, &str> = FastMap::default();
+        m.insert(1, "a");
+        m.insert(2, "b");
+        assert_eq!(m.get(&1), Some(&"a"));
+        assert_eq!(m.remove(&2), Some("b"));
+        assert!(m.get(&2).is_none());
+
+        let mut s: FastSet<(u64, u32)> = FastSet::default();
+        assert!(s.insert((7, 3)));
+        assert!(!s.insert((7, 3)));
+        assert!(s.contains(&(7, 3)));
+    }
+
+    #[test]
+    fn hashing_is_deterministic_across_instances() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let b1: BuildHasherDefault<FxHasher> = BuildHasherDefault::default();
+        let b2: BuildHasherDefault<FxHasher> = BuildHasherDefault::default();
+        for key in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(b1.hash_one(key), b2.hash_one(key));
+        }
+    }
+
+    #[test]
+    fn distinct_keys_rarely_collide() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let b: BuildHasherDefault<FxHasher> = BuildHasherDefault::default();
+        let mut seen = std::collections::HashSet::new();
+        for key in 0u64..10_000 {
+            seen.insert(b.hash_one(key));
+        }
+        assert_eq!(seen.len(), 10_000, "trivial collisions on dense keys");
+    }
+}

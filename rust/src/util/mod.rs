@@ -8,8 +8,10 @@
 
 pub mod cli;
 pub mod config;
+pub mod fxmap;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod rss;
 pub mod stats;
 pub mod timeline;

@@ -1,0 +1,51 @@
+//! Process peak-RSS probe for the benchmark harness.
+//!
+//! Reads `VmHWM` from `/proc/self/status` (Linux). The value is the
+//! process-lifetime high-water mark, so per-scenario readings taken
+//! after each run are **cumulative**: a scenario's reading is "the
+//! largest resident set any scenario so far has needed". That is the
+//! right trajectory signal for `BENCH_sim.json` (a memory regression in
+//! any scenario lifts the plateau) without the portability burden of
+//! per-allocation accounting. On non-Linux hosts the probe returns
+//! `None` and the bench record omits the field.
+
+/// Peak resident set size of this process in mebibytes, if the
+/// platform exposes it.
+pub fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    parse_vm_hwm_kb(&status).map(|kb| kb / 1024.0)
+}
+
+/// Extract `VmHWM` (kB) from `/proc/self/status` content.
+fn parse_vm_hwm_kb(status: &str) -> Option<f64> {
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let number = rest.trim().trim_end_matches("kB").trim();
+            return number.parse::<f64>().ok();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_vm_hwm_line() {
+        let status = "Name:\thfsp\nVmPeak:\t  200 kB\nVmHWM:\t   10240 kB\nThreads:\t1\n";
+        assert_eq!(parse_vm_hwm_kb(status), Some(10240.0));
+    }
+
+    #[test]
+    fn missing_line_is_none() {
+        assert_eq!(parse_vm_hwm_kb("Name:\thfsp\n"), None);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn live_probe_reports_a_positive_value() {
+        let mb = peak_rss_mb().expect("linux exposes VmHWM");
+        assert!(mb > 0.0);
+    }
+}

@@ -1,0 +1,276 @@
+//! Hot-path overhaul safety net.
+//!
+//! The incremental `VirtualCluster` (dense arrays, cached projection,
+//! scratch buffers) is pinned against the retained naive reference
+//! implementation (`testkit::reference::NaiveVirtualCluster`) across
+//! op streams derived from the `testkit::scenarios` matrix; the
+//! arena-backed `JobTable` is pinned against a `BTreeMap` model; the
+//! adversarial-estimate regression guards the `total_cmp` comparator
+//! fix; and the queue-level stats surfaced on `SimOutcome` for the
+//! bench harness are sanity-checked end to end.
+
+use hfsp::cluster::driver::{run_simulation, SimConfig};
+use hfsp::cluster::ClusterConfig;
+use hfsp::job::{Job, JobClass, JobId, JobSpec, JobTable, Phase};
+use hfsp::scheduler::core::virtual_cluster::VirtualCluster;
+use hfsp::scheduler::core::Discipline;
+use hfsp::scheduler::disciplines::{LasDiscipline, PsbsDiscipline, SrptDiscipline};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::testkit::reference::NaiveVirtualCluster;
+use hfsp::testkit::scenarios::matrix;
+use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
+use std::collections::BTreeMap;
+
+// -- incremental vs naive virtual cluster --------------------------------
+
+/// Compare the production projection against the naive reference. Both
+/// recompute from identical job state here (the production cache was
+/// just invalidated by a structural op), so orders must match exactly
+/// and finish times to float-noise tolerance.
+fn assert_projections_agree(fast: &mut VirtualCluster, naive: &NaiveVirtualCluster, ctx: &str) {
+    let expected = naive.projected_finish_order();
+    let got = fast.projected_finish_order();
+    assert_eq!(
+        got.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+        expected.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+        "projected order diverged [{ctx}]"
+    );
+    for (&(id, tg), &(_, te)) in got.iter().zip(expected.iter()) {
+        let tol = 1e-9 * te.abs().max(1.0);
+        assert!(
+            (tg - te).abs() <= tol || (tg.is_infinite() && te.is_infinite()),
+            "finish time diverged for job {id} [{ctx}]: {tg} vs {te}"
+        );
+    }
+}
+
+fn assert_remaining_agree(
+    fast: &VirtualCluster,
+    naive: &NaiveVirtualCluster,
+    ids: &[JobId],
+    ctx: &str,
+) {
+    for &id in ids {
+        match (fast.remaining(id), naive.remaining(id)) {
+            (Some(a), Some(b)) => {
+                let tol = 1e-9 * b.abs().max(1.0);
+                assert!(
+                    (a - b).abs() <= tol,
+                    "remaining diverged for job {id} [{ctx}]: {a} vs {b}"
+                );
+            }
+            (a, b) => assert_eq!(a.is_some(), b.is_some(), "membership diverged for {id} [{ctx}]"),
+        }
+    }
+}
+
+/// Drive the incremental and the naive virtual cluster through an
+/// identical op stream (arrivals from the scenario's workload,
+/// interleaved aging, seeded estimate revisions, removals in projected
+/// order) and require identical orders and finish times throughout.
+#[test]
+fn incremental_virtual_cluster_matches_naive_reference_across_scenario_matrix() {
+    for sc in matrix(&[1, 2]) {
+        let slots = (sc.cfg.cluster.nodes * sc.cfg.cluster.map_slots).max(1);
+        let mut fast = VirtualCluster::new(slots);
+        let mut naive = NaiveVirtualCluster::new(slots);
+        let mut rng = Pcg64::seed_from_u64(sc.cfg.seed ^ 0x9E37_79B9);
+        let mut now = 0.0f64;
+        let mut live: Vec<JobId> = Vec::new();
+
+        let mut jobs: Vec<&JobSpec> = sc.workload.jobs.iter().collect();
+        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
+
+        for (step, spec) in jobs.iter().enumerate() {
+            now = now.max(spec.submit_time);
+            let size = spec.true_phase_size(Phase::Map).max(1.0);
+            let width = spec.n_maps().max(1);
+            fast.add_job(spec.id, size, width, now);
+            naive.add_job(spec.id, size, width, now);
+            live.push(spec.id);
+            assert_projections_agree(&mut fast, &naive, &format!("{}/add#{step}", sc.label));
+
+            // Age along the trajectory (does not invalidate the cache).
+            let dt = rng.gen_range_f64(0.5, 30.0);
+            now += dt;
+            fast.age_to(now);
+            naive.age_to(now);
+            assert_remaining_agree(&fast, &naive, &live, &format!("{}/age#{step}", sc.label));
+
+            // Occasional estimate revision on a random live job.
+            if !live.is_empty() && rng.gen_index(3) == 0 {
+                let victim = live[rng.gen_index(live.len())];
+                let revised = rng.gen_range_f64(0.5, 3.0) * size;
+                fast.set_total(victim, revised, now);
+                naive.set_total(victim, revised, now);
+                assert_projections_agree(&mut fast, &naive, &format!("{}/est#{step}", sc.label));
+            }
+
+            // Occasionally retire the job the projection serves first.
+            if live.len() > 2 && rng.gen_index(4) == 0 {
+                let head = fast.projected_finish_order()[0].0;
+                fast.remove_job(head, now);
+                naive.remove_job(head, now);
+                live.retain(|&id| id != head);
+                assert_projections_agree(&mut fast, &naive, &format!("{}/rm#{step}", sc.label));
+            }
+        }
+
+        // Drain: remove everything in projected order, checking at each
+        // step (exercises the cache under repeated invalidation).
+        while !live.is_empty() {
+            now += rng.gen_range_f64(0.5, 10.0);
+            fast.age_to(now);
+            naive.age_to(now);
+            let head = fast.projected_finish_order()[0].0;
+            fast.remove_job(head, now);
+            naive.remove_job(head, now);
+            live.retain(|&id| id != head);
+            assert_projections_agree(&mut fast, &naive, &format!("{}/drain", sc.label));
+        }
+        assert!(fast.is_empty() && naive.is_empty());
+    }
+}
+
+// -- arena vs map equivalence --------------------------------------------
+
+fn mk_job(id: JobId) -> Job {
+    Job::new(JobSpec {
+        id,
+        name: format!("j{id}"),
+        class: JobClass::Small,
+        submit_time: 0.0,
+        map_durations: vec![1.0, 2.0],
+        reduce_durations: vec![3.0],
+    })
+}
+
+/// The arena-backed `JobTable` must be observationally equivalent to the
+/// `BTreeMap<JobId, Job>` it replaced: same membership, same lookups,
+/// same id-ordered iteration, across randomized insert/remove/mutate
+/// streams with heavy slot recycling.
+#[test]
+fn job_table_matches_btreemap_model_under_random_ops() {
+    for seed in [3u64, 17, 4242] {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut table = JobTable::new();
+        let mut model: BTreeMap<JobId, Job> = BTreeMap::new();
+        for step in 0..2_000u32 {
+            let id = rng.gen_index(64) as JobId;
+            match rng.gen_index(4) {
+                0 | 1 => {
+                    // Insert (duplicate inserts replace in both).
+                    let a = table.insert(id, mk_job(id));
+                    let b = model.insert(id, mk_job(id));
+                    assert_eq!(a.is_some(), b.is_some(), "insert result @{step}");
+                }
+                2 => {
+                    let a = table.remove(&id);
+                    let b = model.remove(&id);
+                    assert_eq!(a.is_some(), b.is_some(), "remove result @{step}");
+                }
+                _ => {
+                    // Mutate through get_mut, observe through get.
+                    if let Some(j) = table.get_mut(&id) {
+                        j.maps_done = (step % 3) as usize;
+                    }
+                    if let Some(j) = model.get_mut(&id) {
+                        j.maps_done = (step % 3) as usize;
+                    }
+                }
+            }
+            assert_eq!(table.len(), model.len(), "len @{step}");
+            assert_eq!(table.contains_key(&id), model.contains_key(&id));
+            assert_eq!(
+                table.get(&id).map(|j| (j.id(), j.maps_done)),
+                model.get(&id).map(|j| (j.id(), j.maps_done)),
+                "lookup @{step}"
+            );
+            // Iteration order is the BTreeMap contract: ascending id.
+            assert_eq!(
+                table.keys().collect::<Vec<_>>(),
+                model.keys().copied().collect::<Vec<_>>(),
+                "iteration order @{step}"
+            );
+        }
+        // The slab never grew past the live high-water mark of 64 ids.
+        assert!(table.slab_capacity() <= 64);
+    }
+}
+
+// -- adversarial estimate streams (comparator panics) --------------------
+
+/// NaN-free but hostile estimate streams (inf, MAX, zero, denormals)
+/// must never panic a discipline's ordering comparator (regression for
+/// the `partial_cmp(..).unwrap()` footgun) and must keep every
+/// registered job in the order.
+#[test]
+fn adversarial_estimate_stream_never_panics_any_discipline() {
+    let adversarial = [
+        f64::INFINITY,
+        f64::MAX,
+        0.0,
+        1e-300,
+        f64::MIN_POSITIVE,
+        1e308,
+    ];
+    let mut disciplines: Vec<Box<dyn Discipline>> = vec![
+        Box::new(SrptDiscipline::new()),
+        Box::new(LasDiscipline::new()),
+        Box::new(PsbsDiscipline::new()),
+        Box::new(hfsp::scheduler::disciplines::FspDiscipline::new(
+            hfsp::scheduler::core::MaxMinKind::Native,
+        )),
+    ];
+    for d in &mut disciplines {
+        d.bind_capacity(4, 2);
+        for id in 1..=3u64 {
+            d.phase_started(id, Phase::Map, 10.0 * id as f64, 4, 0.0);
+        }
+        for (i, &est) in adversarial.iter().enumerate() {
+            let id = 1 + (i as u64 % 3);
+            let now = (i + 1) as f64;
+            d.advance(now);
+            d.size_estimated(id, Phase::Map, est, now);
+            d.service_observed(id, Phase::Map, 1.0, now);
+            let order = d.order(Phase::Map);
+            // LAS ignores estimates but must still hold all three jobs.
+            assert_eq!(order.len(), 3, "job lost under adversarial estimates");
+            assert!(
+                order.windows(2).all(|w| w[0].1.total_cmp(&w[1].1).is_le()),
+                "order keys not ascending"
+            );
+        }
+    }
+}
+
+// -- queue stats on SimOutcome -------------------------------------------
+
+/// `events_pushed` / `heap_peak` let the bench harness attribute wall
+/// time to event volume vs per-event cost; sanity-pin their invariants
+/// on a real run.
+#[test]
+fn sim_outcome_exposes_consistent_queue_stats() {
+    let wl = hfsp::workload::synthetic::uniform_batch(6, 3, 5.0);
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    for kind in [SchedulerKind::Fifo, SchedulerKind::hfsp()] {
+        let o = run_simulation(&cfg, kind, &wl);
+        assert_eq!(o.sojourn.len(), 6, "all jobs finish");
+        assert!(o.events_pushed >= o.events_processed, "pushed >= processed");
+        assert!(
+            o.events_pushed >= o.events_processed + o.events_skipped,
+            "every processed or skipped event was pushed"
+        );
+        assert!(o.heap_peak >= 1, "something was pending at some point");
+        assert!(
+            (o.heap_peak as u64) <= o.events_pushed,
+            "peak cannot exceed total pushes"
+        );
+    }
+}
