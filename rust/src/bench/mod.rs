@@ -165,6 +165,10 @@ pub struct ScenarioRecord {
     /// Process peak RSS after the scenario, MiB — cumulative across
     /// scenarios within one bench run (v2; Linux only).
     pub peak_rss_mb: Option<f64>,
+    /// Event-queue backend the row was measured under (v2; `"calendar"`
+    /// or `"heap"`). Absent rows (v1 baselines, pre-backend v2 files)
+    /// join any backend in `--compare` — see [`compare_trajectories`].
+    pub queue: Option<String>,
 }
 
 impl ScenarioRecord {
@@ -181,7 +185,14 @@ impl ScenarioRecord {
             events_pushed: Some(o.events_pushed),
             heap_peak: Some(o.heap_peak as u64),
             peak_rss_mb: crate::util::rss::peak_rss_mb(),
+            queue: None,
         }
+    }
+
+    /// Stamp the row with the queue backend it was measured under.
+    pub fn with_queue(mut self, queue: &str) -> Self {
+        self.queue = Some(queue.to_string());
+        self
     }
 
     pub fn to_json(&self) -> Json {
@@ -201,6 +212,9 @@ impl ScenarioRecord {
         if let Some(r) = self.peak_rss_mb {
             o.set("peak_rss_mb", r.into());
         }
+        if let Some(q) = &self.queue {
+            o.set("queue", q.as_str().into());
+        }
         o
     }
 
@@ -215,6 +229,10 @@ impl ScenarioRecord {
             events_pushed: j.get("events_pushed").and_then(Json::as_u64),
             heap_peak: j.get("heap_peak").and_then(Json::as_u64),
             peak_rss_mb: j.get("peak_rss_mb").and_then(Json::as_f64),
+            queue: j
+                .get("queue")
+                .and_then(Json::as_str)
+                .map(|s| s.to_string()),
         })
     }
 }
@@ -238,6 +256,35 @@ pub fn parse_trajectory(j: &Json) -> Vec<ScenarioRecord> {
         .and_then(Json::as_arr)
         .map(|rows| rows.iter().filter_map(ScenarioRecord::from_json).collect())
         .unwrap_or_default()
+}
+
+/// Parse a trajectory file from raw text: the parsed document (for the
+/// config-stamp checks) plus its rows. Errors on malformed JSON — a
+/// corrupt baseline must fail the gate loudly, not read as "no rows".
+pub fn parse_trajectory_text(text: &str) -> Result<(Json, Vec<ScenarioRecord>), String> {
+    let j = crate::util::json::parse(text).map_err(|e| format!("malformed trajectory: {e}"))?;
+    let rows = parse_trajectory(&j);
+    Ok((j, rows))
+}
+
+/// Check the baseline's top-level config stamps against the current
+/// run's. Returns the first mismatch as `Some("key: baseline vs
+/// current")`; keys the baseline never stamped are skipped (older
+/// baselines must not block the gate on fields they predate).
+pub fn baseline_config_mismatch(baseline: &Json, current: &[(&str, Json)]) -> Option<String> {
+    for (key, want) in current {
+        match baseline.get(key) {
+            Some(have) if have != want => {
+                return Some(format!(
+                    "baseline {key}={} vs current {key}={}",
+                    have.to_string_compact(),
+                    want.to_string_compact()
+                ));
+            }
+            _ => {}
+        }
+    }
+    None
 }
 
 /// One `--compare` delta row: events/sec then vs now for a scenario
@@ -266,13 +313,18 @@ impl CompareRow {
     }
 }
 
-/// Join two trajectories on (scenario, scheduler), in `new` order.
+/// Join two trajectories on (scenario, scheduler), in `new` order. The
+/// queue-backend stamp must match too when both sides carry one; a row
+/// without the stamp (v1 baselines) joins any backend, so pre-backend
+/// baselines keep gating.
 pub fn compare_trajectories(old: &[ScenarioRecord], new: &[ScenarioRecord]) -> Vec<CompareRow> {
     new.iter()
         .filter_map(|n| {
-            let o = old
-                .iter()
-                .find(|o| o.scenario == n.scenario && o.scheduler == n.scheduler)?;
+            let o = old.iter().find(|o| {
+                o.scenario == n.scenario
+                    && o.scheduler == n.scheduler
+                    && (o.queue.is_none() || n.queue.is_none() || o.queue == n.queue)
+            })?;
             Some(CompareRow {
                 scenario: n.scenario.clone(),
                 scheduler: n.scheduler.clone(),
@@ -326,6 +378,7 @@ mod tests {
             events_pushed: Some(1200),
             heap_peak: Some(64),
             peak_rss_mb: Some(12.5),
+            queue: None,
         }
     }
 
@@ -384,5 +437,45 @@ mod tests {
         assert!((rows[0].delta() - 1.5).abs() < 1e-12);
         assert!((rows[1].regression() - 0.4).abs() < 1e-12);
         assert!((worst_regression(&rows) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_stamp_round_trips_and_gates_the_join() {
+        let stamped = record("a", 100_000.0).with_queue("calendar");
+        let j = trajectory_to_json(&[stamped.clone()]);
+        let parsed = parse_trajectory(&j);
+        assert_eq!(parsed[0].queue.as_deref(), Some("calendar"));
+
+        // Same backend on both sides: joins.
+        let rows = compare_trajectories(&parsed, &[stamped.clone()]);
+        assert_eq!(rows.len(), 1);
+        // Different backend: filtered out.
+        let heap = record("a", 100_000.0).with_queue("heap");
+        assert!(compare_trajectories(&parsed, &[heap]).is_empty());
+        // Unstamped baseline (v1): wildcard, still joins.
+        let rows = compare_trajectories(&[record("a", 100_000.0)], &[stamped]);
+        assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn parse_trajectory_text_rejects_malformed_json() {
+        assert!(parse_trajectory_text("{not json").is_err());
+        let (j, rows) =
+            parse_trajectory_text(r#"{"schema":"hfsp-bench/v2","runs":[]}"#).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("hfsp-bench/v2"));
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn baseline_config_mismatch_skips_absent_keys_and_flags_diffs() {
+        let j = crate::util::json::parse(r#"{"nodes": 8, "profile": "quick"}"#).unwrap();
+        assert_eq!(
+            baseline_config_mismatch(&j, &[("nodes", Json::from(8u64))]),
+            None
+        );
+        assert_eq!(baseline_config_mismatch(&j, &[("scale", Json::from(0.1))]), None);
+        let m = baseline_config_mismatch(&j, &[("nodes", Json::from(20u64))]);
+        assert!(m.is_some(), "differing stamp must be flagged");
+        assert!(m.unwrap().contains("nodes"));
     }
 }

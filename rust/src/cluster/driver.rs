@@ -65,7 +65,7 @@ use crate::job::{Job, JobId, JobSpec, JobTable, Phase, TaskRef};
 use crate::metrics::probe::{KillCause, Probe, ProbeEvent, ProbeStack};
 use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
 use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
-use crate::sim::{Engine, StopReason, Time};
+use crate::sim::{CalendarQueue, Engine, EventQueue, PendingQueue, QueueKind, StopReason, Time};
 use crate::util::config::Config;
 use crate::util::rng::{Pcg64, RngStreams, StreamId};
 use crate::util::timeline::TimelineSet;
@@ -97,6 +97,10 @@ pub struct SimConfig {
     /// Fault & perturbation scenario (disabled by default; when disabled
     /// the run is bit-identical to a build without the subsystem).
     pub faults: FaultConfig,
+    /// Pending-event queue backend ([`QueueKind::Calendar`] by default;
+    /// `heap` is the binary-heap reference — both deliver the exact same
+    /// `(time, class, seq)` order, so outcomes are byte-identical).
+    pub queue: QueueKind,
 }
 
 impl Default for SimConfig {
@@ -110,6 +114,7 @@ impl Default for SimConfig {
             // Generous default: the FB-dataset macro run is ~1e6 events.
             event_limit: 500_000_000,
             faults: FaultConfig::disabled(),
+            queue: QueueKind::default(),
         }
     }
 }
@@ -123,6 +128,10 @@ impl SimConfig {
         self.max_sim_time_s = c.get_f64("sim.max_sim_time_s", self.max_sim_time_s);
         self.reduce_progress_delta_s =
             c.get_f64("sim.reduce_progress_delta_s", self.reduce_progress_delta_s);
+        match QueueKind::from_name(c.get_str("sim.queue", self.queue.name())) {
+            Ok(kind) => self.queue = kind,
+            Err(e) => log::warn!("{e}; keeping queue backend {:?}", self.queue.name()),
+        }
         self.cluster.nodes = c.get_usize("cluster.nodes", self.cluster.nodes);
         self.cluster.map_slots = c.get_usize("cluster.map_slots", self.cluster.map_slots);
         self.cluster.reduce_slots =
@@ -305,6 +314,24 @@ pub fn run_session<'s, 'w, 'p>(
     source: &'s mut (dyn WorkloadSource + 'w),
     user_probes: Vec<&'p mut dyn Probe>,
 ) -> SimOutcome {
+    // Monomorphized per backend: the event loop never branches on the
+    // queue kind, and both instantiations share this one driver body.
+    match cfg.queue {
+        QueueKind::Heap => {
+            run_session_queued::<EventQueue<Ev>>(cfg, kind, source, user_probes)
+        }
+        QueueKind::Calendar => {
+            run_session_queued::<CalendarQueue<Ev>>(cfg, kind, source, user_probes)
+        }
+    }
+}
+
+fn run_session_queued<Q: PendingQueue<Ev>>(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    source: &mut (dyn WorkloadSource + '_),
+    user_probes: Vec<&mut dyn Probe>,
+) -> SimOutcome {
     let t0 = std::time::Instant::now();
     let workload_name = source.name().to_string();
     // Named substreams, derived eagerly in fixed order: enabling faults
@@ -364,7 +391,13 @@ pub fn run_session<'s, 'w, 'p>(
         spec_seq: 0,
     };
 
-    let mut engine: Engine<Ev> = Engine::new().with_event_limit(cfg.event_limit);
+    // Width hint: staggered heartbeats land one per `hb / nodes` seconds
+    // of simulated time, which is the dominant inter-event gap on the
+    // steady-state hot path (the calendar backend tunes its bucket width
+    // from it; the heap ignores the hint).
+    let gap_hint = cfg.cluster.heartbeat_s / cfg.cluster.nodes.max(1) as f64;
+    let mut engine: Engine<Ev, Q> =
+        Engine::from_queue(Q::with_gap_hint(gap_hint)).with_event_limit(cfg.event_limit);
     // One heartbeat epoch chain per node (lazy deletion of stale chains).
     engine.init_chains(cfg.cluster.nodes);
     // The first arrival batch (scheduled before the heartbeats so the
@@ -445,7 +478,7 @@ fn heartbeat_chain(ev: &Ev) -> Option<(usize, u32)> {
 }
 
 impl Driver<'_, '_, '_> {
-    fn handle(&mut self, eng: &mut Engine<Ev>, now: Time, ev: Ev) {
+    fn handle<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time, ev: Ev) {
         let was_heartbeat = matches!(ev, Ev::Heartbeat { .. });
         match ev {
             Ev::Arrival => self.on_arrival(eng, now),
@@ -481,7 +514,7 @@ impl Driver<'_, '_, '_> {
 
     /// Post-event halt checks (session drained, probe-requested stop);
     /// returns whether the engine was halted.
-    fn check_halt(&mut self, eng: &mut Engine<Ev>) -> bool {
+    fn check_halt<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>) -> bool {
         if self.drained() {
             eng.halt();
             true
@@ -520,7 +553,7 @@ impl Driver<'_, '_, '_> {
     /// Scheduling whole instant-batches (rather than strictly one
     /// arrival) preserves the historical event order for workloads with
     /// simultaneous submissions, at O(batch + 1) memory.
-    fn schedule_next_batch(&mut self, eng: &mut Engine<Ev>) {
+    fn schedule_next_batch<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>) {
         if self.source_done {
             return;
         }
@@ -577,7 +610,7 @@ impl Driver<'_, '_, '_> {
         }
     }
 
-    fn on_arrival(&mut self, eng: &mut Engine<Ev>, now: Time) {
+    fn on_arrival<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time) {
         let spec = self
             .pending_arrivals
             .pop_front()
@@ -632,7 +665,13 @@ impl Driver<'_, '_, '_> {
         }
     }
 
-    fn on_heartbeat(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId, epoch: u32) {
+    fn on_heartbeat<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &mut Engine<Ev, Q>,
+        now: Time,
+        node: NodeId,
+        epoch: u32,
+    ) {
         // Stale epochs were already dropped by the engine's lazy
         // deletion (`heartbeat_chain`); a down node with a *current*
         // epoch is unreachable by construction, but guard defensively —
@@ -681,7 +720,7 @@ impl Driver<'_, '_, '_> {
         }
     }
 
-    fn apply(&mut self, eng: &mut Engine<Ev>, now: Time, action: Action) {
+    fn apply<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time, action: Action) {
         match action {
             Action::Launch { task, node, local: _ } => self.do_launch(eng, now, task, node),
             Action::Suspend { task } => self.do_suspend(now, task),
@@ -690,7 +729,13 @@ impl Driver<'_, '_, '_> {
         }
     }
 
-    fn do_launch(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef, node: NodeId) {
+    fn do_launch<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &mut Engine<Ev, Q>,
+        now: Time,
+        task: TaskRef,
+        node: NodeId,
+    ) {
         let Some(job) = self.jobs.get(&task.job) else {
             self.reject(now, task, "launch of unknown job");
             return;
@@ -770,7 +815,7 @@ impl Driver<'_, '_, '_> {
             .emit(now, &ProbeEvent::TaskSuspended { task, node });
     }
 
-    fn do_resume(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef) {
+    fn do_resume<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time, task: TaskRef) {
         let Some(job) = self.jobs.get(&task.job) else {
             self.reject(now, task, "resume of unknown job");
             return;
@@ -867,7 +912,13 @@ impl Driver<'_, '_, '_> {
         debug_assert!(false, "rejected action on {task}: {why}");
     }
 
-    fn on_task_done(&mut self, eng: &mut Engine<Ev>, now: Time, task: TaskRef, epoch: u64) {
+    fn on_task_done<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &mut Engine<Ev, Q>,
+        now: Time,
+        task: TaskRef,
+        epoch: u64,
+    ) {
         let _ = eng;
         let Some(job) = self.jobs.get_mut(&task.job) else {
             // The job finished (and was evicted) while this completion
@@ -983,7 +1034,13 @@ impl Driver<'_, '_, '_> {
     /// Apply a planned node crash: the node goes down, its running and
     /// suspended task attempts lose their work and re-enter the pending
     /// queue, and every speculative race it participates in is resolved.
-    fn on_node_crash(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId, permanent: bool) {
+    fn on_node_crash<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &mut Engine<Ev, Q>,
+        now: Time,
+        node: NodeId,
+        permanent: bool,
+    ) {
         if self.cluster.node(node).is_down() {
             return; // defensive: plan never crashes a down node
         }
@@ -1048,7 +1105,7 @@ impl Driver<'_, '_, '_> {
 
     /// Apply a planned node recovery: the node comes back empty and
     /// restarts its heartbeat chain.
-    fn on_node_recover(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId) {
+    fn on_node_recover<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time, node: NodeId) {
         if !self.cluster.node(node).is_down() {
             return; // defensive
         }
@@ -1066,7 +1123,7 @@ impl Driver<'_, '_, '_> {
 
     /// Offer this node's leftover slots (at most one per phase per
     /// heartbeat, Hadoop-style) to clones of straggling tasks.
-    fn maybe_speculate(&mut self, eng: &mut Engine<Ev>, now: Time, node: NodeId) {
+    fn maybe_speculate<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time, node: NodeId) {
         for phase in [Phase::Map, Phase::Reduce] {
             if !self.cluster.node(node).has_free_slot(phase) {
                 continue;
@@ -1205,6 +1262,7 @@ mod tests {
 event_limit = 1234
 max_sim_time_s = 500.0
 seed = 9
+queue = "heap"
 
 [cluster]
 nodes = 7
@@ -1223,6 +1281,7 @@ size_error_sigma = 0.4
         assert_eq!(cfg.max_sim_time_s, 500.0);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.cluster.nodes, 7);
+        assert_eq!(cfg.queue, QueueKind::Heap);
         assert!(cfg.faults.enabled);
         assert_eq!(cfg.faults.mtbf_s, 3600.0);
         assert_eq!(cfg.faults.straggler_fraction, 0.2);
@@ -1238,7 +1297,16 @@ size_error_sigma = 0.4
         let dflt = SimConfig::default();
         assert_eq!(cfg.event_limit, dflt.event_limit);
         assert_eq!(cfg.seed, dflt.seed);
+        assert_eq!(cfg.queue, QueueKind::Calendar);
         assert!(!cfg.faults.enabled);
+    }
+
+    #[test]
+    fn apply_config_keeps_backend_on_unknown_queue_name() {
+        let c = Config::parse("[sim]\nqueue = \"fibheap\"\n").unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.apply_config(&c);
+        assert_eq!(cfg.queue, QueueKind::Calendar);
     }
 
     #[test]

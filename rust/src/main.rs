@@ -25,7 +25,7 @@ use hfsp::job::JobClass;
 use hfsp::report;
 use hfsp::scheduler::core::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
 use hfsp::scheduler::{SchedulerKind, REGISTRY};
-use hfsp::sim::StopReason;
+use hfsp::sim::{QueueKind, StopReason};
 use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::util::cli::{Cli, Command, Parsed};
 use hfsp::util::config::Config as FileConfig;
@@ -61,6 +61,7 @@ fn cli() -> Cli {
                 .flag("faults", "", "fault scenario: none | churn | stragglers | error | full (default: from --config, else none)")
                 .flag("event-limit", "0", "override the event-count guard (0 = default)")
                 .flag("config", "", "TOML-subset config file; its [sim]/[cluster] keys override --seed/--nodes/--map-slots/--reduce-slots")
+                .flag("queue", "", "event queue backend: calendar | heap (default: from --config, else calendar)")
                 .flag("out", "", "write JSON outcome summary here")
                 .switch("stream", "replay --trace through the streaming TraceSource (constant memory)")
                 .switch("timelines", "record per-job slot timelines")
@@ -82,6 +83,7 @@ fn cli() -> Cli {
                 .flag("faults", "", "explicit comma-separated fault scenarios (overrides --grid)")
                 .flag("threads", "0", "worker threads (0 = all cores)")
                 .flag("event-limit", "0", "override the event-count guard (0 = default)")
+                .flag("queue", "", "event queue backend: calendar | heap (default: calendar)")
                 .flag("name", "cli-sweep", "sweep name recorded in the report")
                 .flag("out", "reports/sweep.json", "aggregated JSON report path"),
             Command::new("bench", "time the standard scenarios; emit BENCH_sim.json")
@@ -91,7 +93,9 @@ fn cli() -> Cli {
                 .flag("profile", "quick", "scenario set: quick | full (adds the open-1e6 streaming run)")
                 .flag("compare", "", "baseline BENCH_sim.json: print events/sec deltas and fail past --threshold")
                 .flag("threshold", "0.30", "max tolerated fractional events/sec regression for --compare")
-                .flag("out", "BENCH_sim.json", "benchmark JSON output path"),
+                .flag("queue", "", "event queue backend: calendar | heap (default: calendar)")
+                .flag("out", "BENCH_sim.json", "benchmark JSON output path")
+                .switch("require-baseline", "fail --compare when the baseline shares no scenarios (arms the CI gate against an empty baseline)"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
                 .flag("slots", "4", "single-node slot count"),
         ],
@@ -324,6 +328,9 @@ fn sim_config(args: &hfsp::util::cli::Args) -> anyhow::Result<SimConfig> {
     if let Some(name) = args.get("faults") {
         cfg.faults = FaultSpec::from_name(name)?.config;
     }
+    if let Some(name) = args.get("queue") {
+        cfg.queue = QueueKind::from_name(name)?;
+    }
     if let Some(limit) = args.get_parsed::<u64>("event-limit")? {
         if limit > 0 {
             cfg.event_limit = limit;
@@ -451,6 +458,9 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     };
 
     let mut base = SimConfig::default();
+    if let Some(name) = args.get("queue") {
+        base.queue = QueueKind::from_name(name)?;
+    }
     if let Some(limit) = args.get_parsed::<u64>("event-limit")? {
         if limit > 0 {
             base.event_limit = limit;
@@ -535,8 +545,8 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
 #[allow(clippy::too_many_lines)]
 fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     use hfsp::bench::{
-        compare_trajectories, parse_trajectory, trajectory_to_json, worst_regression,
-        ScenarioRecord,
+        baseline_config_mismatch, compare_trajectories, parse_trajectory_text,
+        trajectory_to_json, worst_regression, ScenarioRecord,
     };
     use hfsp::faults::FaultConfig;
 
@@ -545,6 +555,10 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     let seed: u64 = args.require("seed")?;
     let out: PathBuf = args.require("out")?;
     let threshold: f64 = args.require("threshold")?;
+    let queue = match args.get("queue") {
+        Some(name) => QueueKind::from_name(name)?,
+        None => QueueKind::default(),
+    };
     let profile = args.get("profile").unwrap_or("quick");
     anyhow::ensure!(
         matches!(profile, "quick" | "full"),
@@ -560,6 +574,7 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
             ..Default::default()
         },
         seed,
+        queue,
         ..Default::default()
     };
     let fb = FbWorkload::scaled(scale).generate(&mut RngStreams::workload(seed));
@@ -651,8 +666,15 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
             events_pushed: None,
             heap_peak: None,
             peak_rss_mb: hfsp::util::rss::peak_rss_mb(),
+            queue: None,
         });
     }
+    // Every row carries the backend it was measured under, so mixed-
+    // backend baselines join per backend in --compare.
+    let records: Vec<ScenarioRecord> = records
+        .into_iter()
+        .map(|r| r.with_queue(queue.name()))
+        .collect();
 
     let fmt_opt_u64 = |v: Option<u64>| v.map_or_else(|| "-".to_string(), |x| x.to_string());
     let rows: Vec<Vec<String>> = records
@@ -693,6 +715,7 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     j.set("nodes", nodes.into());
     j.set("scale", scale.into());
     j.set("seed", seed.into());
+    j.set("queue", queue.name().into());
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -705,31 +728,37 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("compare").filter(|p| !p.trim().is_empty()) {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading baseline {path}: {e}"))?;
-        let baseline_json = hfsp::util::json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing baseline {path}: {e}"))?;
+        let (baseline_json, baseline) =
+            parse_trajectory_text(&text).map_err(|e| anyhow::anyhow!("baseline {path}: {e}"))?;
         // Scenario names do not encode the bench configuration, so a
         // baseline recorded under different --nodes/--scale/--profile
         // would gate on a config artifact, not a code regression. A
-        // mismatch means the baseline must be re-recorded.
-        for (key, current) in [
-            ("nodes", Json::from(nodes)),
-            ("scale", Json::from(scale)),
-            ("profile", Json::from(profile)),
-        ] {
-            if let Some(old) = baseline_json.get(key) {
-                anyhow::ensure!(
-                    *old == current,
-                    "baseline {path} was recorded with --{key} {} but this run used {} — \
-                     events/sec is not comparable across configurations; re-record the \
-                     baseline with the current flags",
-                    old.to_string_compact(),
-                    current.to_string_compact()
-                );
-            }
+        // mismatch means the baseline must be re-recorded. (The queue
+        // backend is deliberately NOT checked here: it is a per-row join
+        // key, so mixed-backend baselines compare per backend.)
+        if let Some(diff) = baseline_config_mismatch(
+            &baseline_json,
+            &[
+                ("nodes", Json::from(nodes)),
+                ("scale", Json::from(scale)),
+                ("profile", Json::from(profile)),
+            ],
+        ) {
+            anyhow::bail!(
+                "baseline {path} configuration mismatch ({diff}) — events/sec is not \
+                 comparable across configurations; re-record the baseline with the \
+                 current flags"
+            );
         }
-        let baseline = parse_trajectory(&baseline_json);
         let deltas = compare_trajectories(&baseline, &records);
         if deltas.is_empty() {
+            anyhow::ensure!(
+                !args.get_bool("require-baseline"),
+                "bench --compare --require-baseline: baseline {path} shares no \
+                 (scenario, scheduler, queue) rows with this run ({} baseline rows) — \
+                 the regression gate would be vacuous; re-record the baseline",
+                baseline.len()
+            );
             println!(
                 "bench --compare: no scenarios shared with {path} (empty seed baseline?) — \
                  nothing to gate"

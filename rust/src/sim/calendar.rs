@@ -1,0 +1,534 @@
+//! Bucketed calendar queue — the default [`PendingQueue`] backend.
+//!
+//! A calendar queue (Brown, CACM 1988) hashes events by time into a
+//! power-of-two array of *buckets*: with bucket width `w`, an event at
+//! time `t` belongs to **day** `⌊t / w⌋`, stored in bucket
+//! `day & (n_buckets − 1)`. Popping scans the bucket of the current day
+//! and advances day by day; when the width matches the typical
+//! inter-event gap (≈ one event per bucket-day), push and pop are O(1)
+//! amortized instead of the heap's O(log n) — which is what the
+//! heartbeat-dominated event streams of a MapReduce simulation produce:
+//! one event roughly every `heartbeat_s / nodes` simulated seconds.
+//!
+//! ## Ordering contract
+//!
+//! Delivery order is **exactly** the engine-wide total order
+//! `(time, class, seq)` ([`ScheduledEvent::delivery_cmp`]): class-0
+//! (priority) events beat class-1 events at the same instant and `seq`
+//! breaks the remaining ties FIFO. Equal times always map to the same
+//! day and hence the same bucket, and the scan selects the bucket's
+//! minimum by the *full* key, so the calendar realizes the same order
+//! as the binary-heap reference bit-for-bit — proven by the
+//! differential testbed (`tests/queue_differential.rs`), which is the
+//! licence for this backend to be the default.
+//!
+//! ## Mechanics
+//!
+//! * **Lap scan** — the pop path checks the cursor day's bucket for
+//!   slots due *this* day (slots of later laps are skipped), advancing
+//!   at most one full lap of the array. An event due on the cursor day
+//!   can only live in the cursor bucket, so advancing past an empty day
+//!   never skips anything.
+//! * **Sparse fallback** — if a whole lap finds nothing due (the next
+//!   event is more than `n_buckets` days ahead), a direct scan finds
+//!   the global minimum and jumps the cursor to its day, bounding the
+//!   pop cost at O(pending) instead of walking empty days.
+//! * **Self-resizing** — the array doubles when occupancy exceeds two
+//!   events per bucket and halves below one event per two buckets
+//!   (within `[16, 65536]`); each rebuild retunes the width to twice
+//!   the mean adjacent gap of a sorted sample of pending event times.
+//!   The factor-2 hysteresis amortizes the O(pending) rebuild to O(1)
+//!   per operation.
+//! * **Past pushes rewind** — pushing a time earlier than the cursor
+//!   day moves the cursor back (the queue, like the heap, accepts any
+//!   non-negative finite time regardless of pop history; the engine's
+//!   monotonic-clock assertion lives a layer above).
+//!
+//! Resize decisions depend only on the queue's own deterministic
+//! history, so runs remain bit-reproducible.
+
+use super::queue::{sealed, PendingQueue, ScheduledEvent};
+use super::Time;
+use std::cmp::Ordering;
+
+/// Bucket-count floor: below this a resize is never attempted (the
+/// array is too small for the rebuild to be worth it).
+const MIN_BUCKETS: usize = 16;
+/// Bucket-count ceiling: beyond this buckets just grow longer (bounds
+/// the array's memory at ~512 KiB of `Vec` headers).
+const MAX_BUCKETS: usize = 1 << 16;
+/// Width floor, guarding division blow-ups on degenerate gap samples.
+const MIN_WIDTH: f64 = 1e-9;
+/// Resize width tuning samples at most this many pending events.
+const WIDTH_SAMPLE: usize = 64;
+
+/// One stored event plus its (width-dependent) day, cached so the scan
+/// never re-derives it.
+#[derive(Debug)]
+struct Slot<E> {
+    day: u64,
+    ev: ScheduledEvent<E>,
+}
+
+/// Pending-event set as a bucketed calendar (see module docs).
+#[derive(Debug)]
+pub struct CalendarQueue<E> {
+    /// `buckets.len()` is always a power of two.
+    buckets: Vec<Vec<Slot<E>>>,
+    /// `buckets.len() - 1`, as the day→bucket mask.
+    mask: u64,
+    /// Bucket width in simulated seconds (> 0, finite).
+    width: f64,
+    /// Cursor: the day currently being drained. Invariant: no pending
+    /// slot has `day < self.day`.
+    day: u64,
+    len: usize,
+    next_seq: u64,
+    /// High-water mark of the pending set (bench diagnostic).
+    peak_len: usize,
+}
+
+impl<E> Default for CalendarQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> CalendarQueue<E> {
+    /// A calendar with a 1-second initial bucket width; prefer
+    /// [`CalendarQueue::with_gap_hint`] when the typical inter-event
+    /// gap is known (resizes retune the width either way).
+    pub fn new() -> Self {
+        Self::with_gap_hint(1.0)
+    }
+
+    /// A calendar whose initial bucket width is the expected typical
+    /// inter-event gap in simulated seconds. Non-finite or non-positive
+    /// hints fall back to 1 s.
+    pub fn with_gap_hint(gap_s: f64) -> Self {
+        let width = if gap_s.is_finite() && gap_s > 0.0 {
+            gap_s.max(MIN_WIDTH)
+        } else {
+            1.0
+        };
+        Self {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: MIN_BUCKETS as u64 - 1,
+            width,
+            day: 0,
+            len: 0,
+            next_seq: 0,
+            peak_len: 0,
+        }
+    }
+
+    /// Day number of an event time under the current width. The
+    /// float→int cast saturates, so astronomical times all land on the
+    /// last day — which only coarsens bucketing, never ordering (order
+    /// is always decided by the full `(time, class, seq)` key).
+    fn day_of(&self, time: Time) -> u64 {
+        (time / self.width) as u64
+    }
+
+    fn bucket_of(&self, day: u64) -> usize {
+        (day & self.mask) as usize
+    }
+
+    /// Schedule `event` at absolute time `time` (class 1). Panics on
+    /// NaN/negative time — both indicate a simulator bug upstream.
+    pub fn push(&mut self, time: Time, event: E) -> u64 {
+        self.push_class(time, 1, event)
+    }
+
+    /// Schedule `event` to be delivered **before** any ordinary event
+    /// at the same instant (class 0; see
+    /// [`EventQueue::push_priority`](super::queue::EventQueue::push_priority)).
+    pub fn push_priority(&mut self, time: Time, event: E) -> u64 {
+        self.push_class(time, 0, event)
+    }
+
+    fn push_class(&mut self, time: Time, class: u8, event: E) -> u64 {
+        assert!(
+            time.is_finite() && time >= 0.0,
+            "event time must be finite and non-negative, got {time}"
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let day = self.day_of(time);
+        // Rewind: the cursor must never sit past a pending event's day.
+        if day < self.day {
+            self.day = day;
+        }
+        let idx = self.bucket_of(day);
+        self.buckets[idx].push(Slot {
+            day,
+            ev: ScheduledEvent {
+                time,
+                class,
+                seq,
+                event,
+            },
+        });
+        self.len += 1;
+        self.peak_len = self.peak_len.max(self.len);
+        if self.len > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            self.resize();
+        }
+        seq
+    }
+
+    /// Pop the earliest event in delivery order.
+    pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        let (bi, si) = self.locate_min()?;
+        // swap_remove is safe: selection is always by the full key, so
+        // in-bucket order carries no information.
+        let slot = self.buckets[bi].swap_remove(si);
+        self.len -= 1;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            self.resize();
+        }
+        Some(slot.ev)
+    }
+
+    /// The earliest pending event, without removing it. Takes `&mut`
+    /// because locating the minimum advances the day cursor (toward,
+    /// never past, the earliest pending day — a later `pop` returns
+    /// exactly this event).
+    pub fn peek(&mut self) -> Option<&ScheduledEvent<E>> {
+        let (bi, si) = self.locate_min()?;
+        Some(&self.buckets[bi][si].ev)
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        self.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total number of events ever scheduled (diagnostics).
+    pub fn scheduled_count(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Largest number of simultaneously pending events so far.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// Locate the minimum-key pending event, advancing the day cursor
+    /// to its day. Returns `(bucket, slot)` indices.
+    fn locate_min(&mut self) -> Option<(usize, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        // Lap scan: a slot due on the cursor day can only sit in the
+        // cursor bucket, so inspect it and advance day by day, at most
+        // one full lap of the array.
+        for _ in 0..self.buckets.len() {
+            let idx = self.bucket_of(self.day);
+            let bucket = &self.buckets[idx];
+            let mut best: Option<usize> = None;
+            for (i, slot) in bucket.iter().enumerate() {
+                debug_assert!(slot.day >= self.day, "pending slot behind the cursor");
+                if slot.day > self.day {
+                    continue; // a later lap of this bucket
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => slot.ev.delivery_cmp(&bucket[b].ev) == Ordering::Less,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            if let Some(i) = best {
+                return Some((idx, i));
+            }
+            // No slot due this day anywhere (the cursor bucket is the
+            // only place one could be): the day is exhausted.
+            self.day = self.day.saturating_add(1);
+        }
+        // Sparse fallback: the next event is more than one lap ahead of
+        // the cursor. Find the global minimum directly and jump to its
+        // day (the min-key event has the min time, hence the min day).
+        let mut best: Option<(usize, usize)> = None;
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (si, slot) in bucket.iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some((bb, bs)) => {
+                        slot.ev.delivery_cmp(&self.buckets[bb][bs].ev) == Ordering::Less
+                    }
+                };
+                if better {
+                    best = Some((bi, si));
+                }
+            }
+        }
+        let (bi, si) = best.expect("non-empty queue has a minimum");
+        self.day = self.buckets[bi][si].day;
+        Some((bi, si))
+    }
+
+    /// Rebuild the bucket array sized to the pending count, retuning
+    /// the bucket width from sampled inter-event gaps. O(pending), but
+    /// triggered only at factor-2 occupancy thresholds, so the cost
+    /// amortizes to O(1) per operation.
+    fn resize(&mut self) {
+        let target = self
+            .len
+            .max(1)
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let mut slots: Vec<Slot<E>> = Vec::with_capacity(self.len);
+        for bucket in &mut self.buckets {
+            slots.append(bucket);
+        }
+        self.width = self.tuned_width(&slots);
+        if self.buckets.len() != target {
+            self.buckets = (0..target).map(|_| Vec::new()).collect();
+            self.mask = target as u64 - 1;
+        }
+        // Re-map every slot under the new width and aim the cursor at
+        // the earliest pending day (0 when empty; pushes rewind).
+        let mut min_day = u64::MAX;
+        for mut slot in slots {
+            slot.day = self.day_of(slot.ev.time);
+            min_day = min_day.min(slot.day);
+            let idx = self.bucket_of(slot.day);
+            self.buckets[idx].push(slot);
+        }
+        self.day = if self.len == 0 { 0 } else { min_day };
+    }
+
+    /// Width ≈ twice the mean adjacent gap of a sorted sample of
+    /// pending event times (≈ one event per bucket-day with headroom
+    /// for jitter). Keeps the current width when the sample has no two
+    /// distinct times — there is nothing to learn from it.
+    fn tuned_width(&self, slots: &[Slot<E>]) -> f64 {
+        let mut times: Vec<f64> = slots.iter().take(WIDTH_SAMPLE).map(|s| s.ev.time).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).expect("non-finite event time"));
+        let mut sum = 0.0;
+        let mut n = 0u32;
+        for w in times.windows(2) {
+            let gap = w[1] - w[0];
+            if gap > 0.0 {
+                sum += gap;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            self.width
+        } else {
+            (2.0 * sum / f64::from(n)).max(MIN_WIDTH)
+        }
+    }
+}
+
+impl<E> sealed::Sealed for CalendarQueue<E> {}
+
+impl<E> PendingQueue<E> for CalendarQueue<E> {
+    const LABEL: &'static str = "calendar";
+
+    fn with_gap_hint(gap_s: f64) -> Self {
+        CalendarQueue::with_gap_hint(gap_s)
+    }
+
+    fn push(&mut self, time: Time, event: E) -> u64 {
+        CalendarQueue::push(self, time, event)
+    }
+
+    fn push_priority(&mut self, time: Time, event: E) -> u64 {
+        CalendarQueue::push_priority(self, time, event)
+    }
+
+    fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        CalendarQueue::pop(self)
+    }
+
+    fn peek(&mut self) -> Option<&ScheduledEvent<E>> {
+        CalendarQueue::peek(self)
+    }
+
+    fn peek_time(&mut self) -> Option<Time> {
+        CalendarQueue::peek_time(self)
+    }
+
+    fn len(&self) -> usize {
+        CalendarQueue::len(self)
+    }
+
+    fn is_empty(&self) -> bool {
+        CalendarQueue::is_empty(self)
+    }
+
+    fn scheduled_count(&self) -> u64 {
+        CalendarQueue::scheduled_count(self)
+    }
+
+    fn peak_len(&self) -> usize {
+        CalendarQueue::peak_len(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = CalendarQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_tie_break_at_equal_times() {
+        let mut q = CalendarQueue::new();
+        for i in 0..100 {
+            q.push(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn priority_class_wins_same_instant_ties_regardless_of_insertion_order() {
+        let mut q = CalendarQueue::new();
+        q.push(5.0, "normal-early");
+        q.push_priority(5.0, "prio-late");
+        q.push(5.0, "normal-late");
+        q.push_priority(5.0, "prio-later");
+        q.push(4.0, "earlier-time");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(
+            order,
+            vec![
+                "earlier-time",
+                "prio-late",
+                "prio-later",
+                "normal-early",
+                "normal-late"
+            ]
+        );
+    }
+
+    #[test]
+    fn interleaved_push_pop_and_stats() {
+        let mut q = CalendarQueue::new();
+        q.push(10.0, 'x');
+        q.push(1.0, 'y');
+        assert_eq!(q.pop().unwrap().event, 'y');
+        q.push(5.0, 'z');
+        assert_eq!(q.pop().unwrap().event, 'z');
+        assert_eq!(q.pop().unwrap().event, 'x');
+        assert!(q.pop().is_none());
+        assert_eq!(q.scheduled_count(), 3);
+        assert_eq!(q.peak_len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_time_matches_pop_and_is_stable() {
+        let mut q = CalendarQueue::new();
+        q.push(2.5, ());
+        q.push(1.5, ());
+        assert_eq!(q.peek_time(), Some(1.5));
+        assert_eq!(q.peek_time(), Some(1.5), "peek must not consume");
+        assert_eq!(q.pop().unwrap().time, 1.5);
+        assert_eq!(q.peek_time(), Some(2.5));
+    }
+
+    #[test]
+    fn past_push_rewinds_the_cursor() {
+        // Standalone queues accept any non-negative time regardless of
+        // pop history (the heap does too); popping a far-future event
+        // advances the cursor, and a subsequent earlier push must still
+        // come out first.
+        let mut q = CalendarQueue::with_gap_hint(0.5);
+        q.push(100.0, "far");
+        assert_eq!(q.pop().unwrap().event, "far");
+        q.push(1.0, "early");
+        q.push(50.0, "mid");
+        assert_eq!(q.pop().unwrap().event, "early");
+        assert_eq!(q.pop().unwrap().event, "mid");
+    }
+
+    #[test]
+    fn grows_and_shrinks_with_occupancy() {
+        let mut q = CalendarQueue::with_gap_hint(1.0);
+        // Deterministic scattered times with collisions.
+        for i in 0..4096u32 {
+            q.push(f64::from((i * 37) % 501), i);
+        }
+        assert!(
+            q.buckets.len() > MIN_BUCKETS,
+            "4096 pending events must have grown the array, got {}",
+            q.buckets.len()
+        );
+        let mut last = (-1.0, 0u8, 0u64);
+        let mut popped = 0;
+        while let Some(e) = q.pop() {
+            let key = (e.time, e.class, e.seq);
+            assert!(last < key, "pop order regressed: {last:?} -> {key:?}");
+            last = key;
+            popped += 1;
+        }
+        assert_eq!(popped, 4096);
+        assert_eq!(
+            q.buckets.len(),
+            MIN_BUCKETS,
+            "draining must shrink the array back"
+        );
+        assert_eq!(q.peak_len(), 4096);
+    }
+
+    #[test]
+    fn sparse_fallback_jumps_empty_laps() {
+        // With a tiny width, consecutive events sit millions of days
+        // apart: every pop exercises the direct-scan fallback.
+        let mut q = CalendarQueue::with_gap_hint(1e-6);
+        q.push(900.0, "c");
+        q.push(0.5, "a");
+        q.push(40_000.0, "d");
+        q.push(7.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn degenerate_width_hints_fall_back() {
+        for hint in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let mut q = CalendarQueue::with_gap_hint(hint);
+            assert!(q.width.is_finite() && q.width > 0.0);
+            q.push(2.0, "b");
+            q.push(1.0, "a");
+            assert_eq!(q.pop().unwrap().event, "a");
+            assert_eq!(q.pop().unwrap().event, "b");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_time() {
+        let mut q = CalendarQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_time() {
+        let mut q = CalendarQueue::new();
+        q.push(-1.0, ());
+    }
+}

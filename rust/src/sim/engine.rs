@@ -1,9 +1,14 @@
 //! The simulation engine: event loop + virtual clock.
 //!
-//! Generic over the event type; the cluster driver supplies a handler that
-//! may schedule further events through [`Engine::schedule_in`] /
-//! [`Engine::schedule_at`]. The engine enforces the monotonic-time
-//! invariant and supports a hard event-count limit as a runaway guard.
+//! Generic over the event type **and** the pending-queue backend
+//! ([`PendingQueue`]; the binary-heap [`EventQueue`] by default, the
+//! bucketed [`CalendarQueue`](super::calendar::CalendarQueue) in
+//! production — both realize the identical delivery order, so every
+//! engine feature below behaves bit-identically on either). The cluster
+//! driver supplies a handler that may schedule further events through
+//! [`Engine::schedule_in`] / [`Engine::schedule_at`]. The engine
+//! enforces the monotonic-time invariant and supports a hard
+//! event-count limit as a runaway guard.
 //!
 //! The queue is *demand-driven* by design: it holds only what handlers
 //! have scheduled so far, so a streaming session that feeds arrivals one
@@ -23,8 +28,9 @@
 //! pop time, without dispatching them into the handler. Skips are
 //! counted ([`Engine::skipped`]) and surfaced as a run diagnostic.
 
-use super::queue::EventQueue;
+use super::queue::{EventQueue, PendingQueue};
 use super::Time;
+use std::marker::PhantomData;
 
 /// Why the run loop returned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,9 +43,11 @@ pub enum StopReason {
     EventLimit,
 }
 
-/// Event loop over an [`EventQueue`].
-pub struct Engine<E> {
-    queue: EventQueue<E>,
+/// Event loop over a [`PendingQueue`] backend (`Q` defaults to the
+/// binary-heap [`EventQueue`]; the cluster driver selects the backend
+/// at runtime from `SimConfig.queue`).
+pub struct Engine<E, Q = EventQueue<E>> {
+    queue: Q,
     now: Time,
     processed: u64,
     /// Stale chain events dropped at pop time (lazy deletion).
@@ -48,6 +56,8 @@ pub struct Engine<E> {
     halt: bool,
     /// Current epoch per registered event chain (see module docs).
     chain_epochs: Vec<u32>,
+    /// The event type only appears through `Q`'s trait impl.
+    _ev: PhantomData<fn(E)>,
 }
 
 impl<E> Default for Engine<E> {
@@ -57,9 +67,20 @@ impl<E> Default for Engine<E> {
 }
 
 impl<E> Engine<E> {
+    /// An engine over the default binary-heap backend (type-parameter
+    /// defaults do not drive expression inference, so this stays on the
+    /// concrete default type; use [`Engine::from_queue`] for an
+    /// explicit backend).
     pub fn new() -> Self {
+        Self::from_queue(EventQueue::new())
+    }
+}
+
+impl<E, Q: PendingQueue<E>> Engine<E, Q> {
+    /// An engine over an explicitly constructed queue backend.
+    pub fn from_queue(queue: Q) -> Self {
         Self {
-            queue: EventQueue::new(),
+            queue,
             now: 0.0,
             processed: 0,
             skipped: 0,
@@ -70,6 +91,7 @@ impl<E> Engine<E> {
             event_limit: 500_000_000,
             halt: false,
             chain_epochs: Vec::new(),
+            _ev: PhantomData,
         }
     }
 
@@ -212,7 +234,7 @@ impl<E> Engine<E> {
     /// schedule new events on `engine`.
     pub fn run<F>(&mut self, handler: F) -> StopReason
     where
-        F: FnMut(&mut Engine<E>, Time, E),
+        F: FnMut(&mut Engine<E, Q>, Time, E),
     {
         self.run_filtered(|_| None, handler)
     }
@@ -229,7 +251,7 @@ impl<E> Engine<E> {
     pub fn run_filtered<C, F>(&mut self, chain_of: C, mut handler: F) -> StopReason
     where
         C: Fn(&E) -> Option<(usize, u32)>,
-        F: FnMut(&mut Engine<E>, Time, E),
+        F: FnMut(&mut Engine<E, Q>, Time, E),
     {
         loop {
             if self.halt {
@@ -442,6 +464,27 @@ mod tests {
             assert!(e.pop_coalesced(|_| None, |_| true).is_none());
         });
         assert_eq!(reason, StopReason::EventLimit);
+    }
+
+    #[test]
+    fn engine_is_generic_over_the_calendar_backend() {
+        use crate::sim::calendar::CalendarQueue;
+        let mut eng: Engine<Ev, CalendarQueue<Ev>> =
+            Engine::from_queue(CalendarQueue::with_gap_hint(0.5));
+        eng.schedule_at(2.0, Ev::Ping(2));
+        eng.schedule_at(1.0, Ev::Ping(1));
+        let mut seen = Vec::new();
+        let reason = eng.run(|e, t, ev| {
+            seen.push(t);
+            if let Ev::Ping(1) = ev {
+                e.schedule_in(0.5, Ev::Ping(15));
+            }
+        });
+        assert_eq!(reason, StopReason::Drained);
+        assert_eq!(seen, vec![1.0, 1.5, 2.0]);
+        assert_eq!(eng.processed(), 3);
+        assert_eq!(eng.pushed(), 3);
+        assert_eq!(eng.heap_peak(), 2);
     }
 
     #[test]

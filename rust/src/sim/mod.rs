@@ -10,12 +10,21 @@
 //!   the queue carries a monotonically increasing sequence number;
 //! * simulated time is `f64` seconds; the engine asserts time never flows
 //!   backwards.
+//!
+//! The pending-event set has two interchangeable backends behind the
+//! sealed [`PendingQueue`] trait — the binary-heap [`EventQueue`]
+//! reference and the bucketed [`CalendarQueue`] default — selected per
+//! run via [`QueueKind`] (`SimConfig.queue` / `--queue`). Both realize
+//! the identical `(time, class, seq)` delivery order, pinned by the
+//! differential testbed in `tests/queue_differential.rs`.
 
+pub mod calendar;
 pub mod engine;
 pub mod queue;
 
+pub use calendar::CalendarQueue;
 pub use engine::{Engine, StopReason};
-pub use queue::{EventQueue, ScheduledEvent};
+pub use queue::{EventQueue, PendingQueue, QueueKind, ScheduledEvent};
 
 /// Simulated time, in seconds since simulation start.
 pub type Time = f64;

@@ -1,9 +1,11 @@
-//! Deterministic pending-event queue.
+//! Deterministic pending-event queue: the backend contract plus the
+//! binary-heap reference implementation.
 //!
-//! A binary min-heap ordered by `(time, class, seq)` where `seq` is a
-//! global insertion counter: events scheduled for the same instant are
-//! delivered in the order they were scheduled. This stable tie-break is
-//! what makes whole simulation runs bit-reproducible across platforms.
+//! Both backends realize the same total order on `(time, class, seq)`
+//! where `seq` is a global insertion counter: events scheduled for the
+//! same instant are delivered in the order they were scheduled. This
+//! stable tie-break is what makes whole simulation runs bit-reproducible
+//! across platforms.
 //!
 //! The **class** is a two-level priority within an instant:
 //! [`EventQueue::push_priority`] events (class 0) are delivered before
@@ -14,10 +16,112 @@
 //! arrival always won any same-instant tie — a lazily pulled arrival
 //! would otherwise lose ties to events scheduled before it was pulled.
 //! The priority class reproduces the batch ordering exactly.
+//!
+//! ## Backends
+//!
+//! * [`EventQueue`] (this module) — a `BinaryHeap`; O(log n) per op,
+//!   no tuning, the reference the differential testbed pins against
+//!   (`tests/queue_differential.rs`).
+//! * [`CalendarQueue`](super::calendar::CalendarQueue) — a bucketed
+//!   calendar queue tuned to the heartbeat interval; near-O(1) per op
+//!   on the heartbeat-dominated streams the simulator produces, and the
+//!   default backend.
+//!
+//! The [`PendingQueue`] trait is **sealed**: the engine's determinism
+//! contract (exact `(time, class, seq)` order) cannot be soundly
+//! promised by out-of-crate implementations, so only these two backends
+//! exist. Select one via `SimConfig.queue` / `--queue {heap,calendar}`.
 
 use super::Time;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+/// Seal for [`PendingQueue`]: backends live in this crate only (the
+/// differential testbed is the licence to add one).
+pub(crate) mod sealed {
+    pub trait Sealed {}
+}
+
+/// The pending-event set contract shared by the heap and calendar
+/// backends. [`Engine`](super::Engine) is generic over it.
+///
+/// Implementations must realize the exact total order of
+/// [`ScheduledEvent::delivery_cmp`] — `(time, class, seq)` — including
+/// the class-0-first same-instant semantics and FIFO `seq` tie-break
+/// documented on [`EventQueue`]. `peek` takes `&mut self` because the
+/// calendar backend advances its day cursor while locating the minimum.
+pub trait PendingQueue<E>: sealed::Sealed + Sized {
+    /// Backend label for logs and bench rows (`"heap"` / `"calendar"`).
+    const LABEL: &'static str;
+
+    /// Construct a queue tuned to an expected typical inter-event gap in
+    /// simulated seconds (the calendar's initial bucket width; the heap
+    /// ignores it). Non-finite or non-positive hints fall back to a
+    /// safe default.
+    fn with_gap_hint(gap_s: f64) -> Self;
+
+    /// Schedule `event` at absolute time `time` (class 1). Panics on
+    /// NaN/negative time — both indicate a simulator bug upstream.
+    fn push(&mut self, time: Time, event: E) -> u64;
+
+    /// Schedule `event` to be delivered **before** any ordinary event at
+    /// the same instant (class 0; see [`EventQueue::push_priority`]).
+    fn push_priority(&mut self, time: Time, event: E) -> u64;
+
+    /// Pop the earliest event in delivery order.
+    fn pop(&mut self) -> Option<ScheduledEvent<E>>;
+
+    /// The earliest pending event, without removing it.
+    fn peek(&mut self) -> Option<&ScheduledEvent<E>>;
+
+    /// Time of the earliest pending event.
+    fn peek_time(&mut self) -> Option<Time> {
+        self.peek().map(|e| e.time)
+    }
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total number of events ever scheduled (diagnostics).
+    fn scheduled_count(&self) -> u64;
+
+    /// Largest number of simultaneously pending events so far.
+    fn peak_len(&self) -> usize;
+}
+
+/// Which [`PendingQueue`] backend a simulation uses
+/// (`SimConfig.queue` / `--queue` / config key `sim.queue`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Binary-heap reference backend ([`EventQueue`]).
+    Heap,
+    /// Bucketed calendar queue, the default
+    /// ([`CalendarQueue`](super::calendar::CalendarQueue)).
+    #[default]
+    Calendar,
+}
+
+impl QueueKind {
+    pub const ALL: [QueueKind; 2] = [QueueKind::Heap, QueueKind::Calendar];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Calendar => "calendar",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "heap" => Ok(QueueKind::Heap),
+            "calendar" => Ok(QueueKind::Calendar),
+            other => anyhow::bail!("unknown queue backend {other:?} (heap|calendar)"),
+        }
+    }
+}
 
 /// An event with its scheduled delivery time.
 #[derive(Clone, Debug)]
@@ -42,17 +146,25 @@ impl<E> PartialOrd for ScheduledEvent<E> {
     }
 }
 
+impl<E> ScheduledEvent<E> {
+    /// Forward **delivery order** on the `(time, class, seq)` key — the
+    /// total order every [`PendingQueue`] backend must realize exactly
+    /// (the heap's `Ord` is this comparison reversed, for max-heap
+    /// storage). Times are finite by the push-time invariant.
+    pub fn delivery_cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .expect("non-finite event time")
+            .then_with(|| self.class.cmp(&other.class))
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
 impl<E> Ord for ScheduledEvent<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse: BinaryHeap is a max-heap, we want the earliest event on
-        // top. Total order on (time, class, seq); times are finite by
-        // invariant.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .expect("non-finite event time")
-            .then_with(|| other.class.cmp(&self.class))
-            .then_with(|| other.seq.cmp(&self.seq))
+        // Reverse: BinaryHeap is a max-heap, we want the earliest event
+        // on top.
+        other.delivery_cmp(self)
     }
 }
 
@@ -144,6 +256,52 @@ impl<E> EventQueue<E> {
     }
 }
 
+impl<E> sealed::Sealed for EventQueue<E> {}
+
+impl<E> PendingQueue<E> for EventQueue<E> {
+    const LABEL: &'static str = "heap";
+
+    fn with_gap_hint(_gap_s: f64) -> Self {
+        Self::new()
+    }
+
+    fn push(&mut self, time: Time, event: E) -> u64 {
+        EventQueue::push(self, time, event)
+    }
+
+    fn push_priority(&mut self, time: Time, event: E) -> u64 {
+        EventQueue::push_priority(self, time, event)
+    }
+
+    fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        EventQueue::pop(self)
+    }
+
+    fn peek(&mut self) -> Option<&ScheduledEvent<E>> {
+        EventQueue::peek(self)
+    }
+
+    fn peek_time(&mut self) -> Option<Time> {
+        EventQueue::peek_time(self)
+    }
+
+    fn len(&self) -> usize {
+        EventQueue::len(self)
+    }
+
+    fn is_empty(&self) -> bool {
+        EventQueue::is_empty(self)
+    }
+
+    fn scheduled_count(&self) -> u64 {
+        EventQueue::scheduled_count(self)
+    }
+
+    fn peak_len(&self) -> usize {
+        EventQueue::peak_len(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,5 +384,54 @@ mod tests {
     fn rejects_negative_time() {
         let mut q = EventQueue::new();
         q.push(-1.0, ());
+    }
+
+    #[test]
+    fn queue_kind_names_round_trip_and_calendar_is_default() {
+        assert_eq!(QueueKind::default(), QueueKind::Calendar);
+        for kind in QueueKind::ALL {
+            assert_eq!(QueueKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(QueueKind::from_name("splay").is_err());
+    }
+
+    #[test]
+    fn delivery_cmp_orders_time_then_class_then_seq() {
+        let ev = |time, class, seq| ScheduledEvent {
+            time,
+            class,
+            seq,
+            event: (),
+        };
+        use std::cmp::Ordering::*;
+        assert_eq!(ev(1.0, 1, 9).delivery_cmp(&ev(2.0, 0, 0)), Less);
+        assert_eq!(ev(1.0, 0, 9).delivery_cmp(&ev(1.0, 1, 0)), Less);
+        assert_eq!(ev(1.0, 1, 3).delivery_cmp(&ev(1.0, 1, 4)), Less);
+        assert_eq!(ev(1.0, 1, 3).delivery_cmp(&ev(1.0, 1, 3)), Equal);
+    }
+
+    #[test]
+    fn trait_surface_matches_inherent_behaviour() {
+        // The PendingQueue impl delegates to the inherent methods; pin
+        // that the generic path observes identical accounting.
+        fn drive<Q: PendingQueue<u32>>() -> (Vec<(f64, u8, u64, u32)>, usize, u64) {
+            let mut q = Q::with_gap_hint(0.5);
+            q.push(2.0, 1);
+            q.push_priority(2.0, 2);
+            q.push(1.0, 3);
+            assert_eq!(q.peek_time(), Some(1.0));
+            let mut order = Vec::new();
+            while let Some(e) = q.pop() {
+                order.push((e.time, e.class, e.seq, e.event));
+            }
+            (order, q.peak_len(), q.scheduled_count())
+        }
+        let (order, peak, count) = drive::<EventQueue<u32>>();
+        assert_eq!(
+            order,
+            vec![(1.0, 1, 2, 3), (2.0, 0, 1, 2), (2.0, 1, 0, 1)]
+        );
+        assert_eq!(peak, 3);
+        assert_eq!(count, 3);
     }
 }

@@ -1,0 +1,178 @@
+//! Regression-gate coverage for the bench trajectory machinery behind
+//! `hfsp bench --compare` — the goldens and threshold boundaries the CI
+//! gate depends on now that `BENCH_sim.json` ships a non-empty baseline.
+
+use hfsp::bench::{
+    baseline_config_mismatch, compare_trajectories, parse_trajectory, parse_trajectory_text,
+    trajectory_to_json, worst_regression, ScenarioRecord,
+};
+use hfsp::util::json::Json;
+
+fn record(scenario: &str, scheduler: &str, eps: f64) -> ScenarioRecord {
+    ScenarioRecord {
+        scenario: scenario.to_string(),
+        scheduler: scheduler.to_string(),
+        events: 100_000,
+        wall_ms: 25.0,
+        events_per_sec: eps,
+        makespan_s: 321.5,
+        events_pushed: Some(120_000),
+        heap_peak: Some(4096),
+        peak_rss_mb: Some(64.0),
+        queue: None,
+    }
+}
+
+// -- golden round-trips ----------------------------------------------------
+
+#[test]
+fn v2_golden_round_trips_every_field_including_queue() {
+    let records = vec![
+        record("closed-fb2009", "HFSP", 1.25e6).with_queue("calendar"),
+        record("sweep-4disc", "ALL", 9.0e5).with_queue("heap"),
+    ];
+    let j = trajectory_to_json(&records);
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("hfsp-bench/v2"));
+    let text = j.to_string_pretty();
+    let (doc, parsed) = parse_trajectory_text(&text).expect("golden must re-parse");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some("hfsp-bench/v2"));
+    assert_eq!(parsed.len(), 2);
+    let r = &parsed[0];
+    assert_eq!(r.scenario, "closed-fb2009");
+    assert_eq!(r.scheduler, "HFSP");
+    assert_eq!(r.events, 100_000);
+    assert_eq!(r.wall_ms, 25.0);
+    assert_eq!(r.events_per_sec, 1.25e6);
+    assert_eq!(r.makespan_s, 321.5);
+    assert_eq!(r.events_pushed, Some(120_000));
+    assert_eq!(r.heap_peak, Some(4096));
+    assert_eq!(r.peak_rss_mb, Some(64.0));
+    assert_eq!(r.queue.as_deref(), Some("calendar"));
+    assert_eq!(parsed[1].queue.as_deref(), Some("heap"));
+}
+
+#[test]
+fn v1_golden_parses_with_nones_and_still_gates() {
+    // A literal v1 file as the historical tooling wrote it: no schema-v2
+    // fields, no queue stamps.
+    let text = r#"{
+        "schema": "hfsp-bench/v1",
+        "runs": [
+            {"scenario": "fb-0.3x20", "scheduler": "HFSP",
+             "events": 500000, "wall_ms": 400.0,
+             "events_per_sec": 1250000.0, "makespan_s": 4200.0}
+        ]
+    }"#;
+    let (_, baseline) = parse_trajectory_text(text).expect("v1 must parse");
+    assert_eq!(baseline.len(), 1);
+    assert_eq!(baseline[0].events_pushed, None);
+    assert_eq!(baseline[0].heap_peak, None);
+    assert_eq!(baseline[0].peak_rss_mb, None);
+    assert_eq!(baseline[0].queue, None);
+    // The unstamped v1 row joins a backend-stamped v2 row (wildcard).
+    let new = vec![record("fb-0.3x20", "HFSP", 1_000_000.0).with_queue("calendar")];
+    let rows = compare_trajectories(&baseline, &new);
+    assert_eq!(rows.len(), 1);
+    assert!((rows[0].regression() - 0.2).abs() < 1e-12);
+}
+
+#[test]
+fn malformed_baseline_is_an_error_not_an_empty_trajectory() {
+    assert!(parse_trajectory_text("{not json").is_err());
+    assert!(parse_trajectory_text("").is_err());
+    // A well-formed document without "runs" parses as zero rows (the
+    // --require-baseline switch is what turns that into a failure).
+    let (_, rows) = parse_trajectory_text("{\"schema\": \"hfsp-bench/v2\"}").unwrap();
+    assert!(rows.is_empty());
+}
+
+// -- threshold boundaries --------------------------------------------------
+
+#[test]
+fn gate_is_inclusive_at_the_exact_threshold() {
+    // 16 -> 11 regresses by exactly 5/16 = 0.3125, which is binary-exact:
+    // the gate `worst <= threshold` must pass at threshold 0.3125 and
+    // fail just below it.
+    let old = vec![record("a", "HFSP", 16.0)];
+    let new = vec![record("a", "HFSP", 11.0)];
+    let rows = compare_trajectories(&old, &new);
+    let worst = worst_regression(&rows);
+    assert_eq!(worst, 0.3125);
+    assert!(worst <= 0.3125, "gate must be inclusive at the boundary");
+    assert!(worst > 0.30, "and trip a tighter 30% gate");
+}
+
+#[test]
+fn improvements_never_register_as_regressions() {
+    let old = vec![record("a", "HFSP", 100_000.0), record("b", "SRPT", 50_000.0)];
+    let new = vec![
+        record("a", "HFSP", 180_000.0), // 1.8x faster
+        record("b", "SRPT", 50_000.0),  // unchanged
+    ];
+    let rows = compare_trajectories(&old, &new);
+    assert_eq!(rows.len(), 2);
+    assert!((rows[0].delta() - 0.8).abs() < 1e-12);
+    assert_eq!(rows[0].regression(), 0.0);
+    assert_eq!(rows[1].regression(), 0.0);
+    assert_eq!(worst_regression(&rows), 0.0);
+}
+
+#[test]
+fn degenerate_zero_baseline_throughput_does_not_divide() {
+    let old = vec![record("a", "HFSP", 0.0)];
+    let new = vec![record("a", "HFSP", 100.0)];
+    let rows = compare_trajectories(&old, &new);
+    assert_eq!(rows[0].delta(), 0.0);
+    assert_eq!(worst_regression(&rows), 0.0);
+}
+
+// -- join semantics --------------------------------------------------------
+
+#[test]
+fn join_is_keyed_on_scenario_scheduler_and_queue() {
+    let old = vec![
+        record("a", "HFSP", 100.0).with_queue("calendar"),
+        record("a", "HFSP", 999.0).with_queue("heap"),
+        record("a", "FIFO", 100.0).with_queue("calendar"),
+    ];
+    let new = vec![record("a", "HFSP", 100.0).with_queue("calendar")];
+    let rows = compare_trajectories(&old, &new);
+    assert_eq!(rows.len(), 1);
+    // First match in baseline order is the calendar row, not heap's 999.
+    assert_eq!(rows[0].old_events_per_sec, 100.0);
+    // Backend mismatch on both sides stamped: no join.
+    let new_heap = vec![record("a", "FIFO", 100.0).with_queue("heap")];
+    assert!(compare_trajectories(&old, &new_heap).is_empty());
+}
+
+#[test]
+fn empty_baseline_yields_no_rows() {
+    let j = trajectory_to_json(&[]);
+    let baseline = parse_trajectory(&j);
+    assert!(baseline.is_empty());
+    let new = vec![record("a", "HFSP", 100.0)];
+    assert!(compare_trajectories(&baseline, &new).is_empty());
+}
+
+// -- baseline config stamps ------------------------------------------------
+
+#[test]
+fn config_stamp_mismatch_is_detected_and_absent_stamps_are_ignored() {
+    let baseline =
+        hfsp::util::json::parse(r#"{"nodes": 8, "scale": 0.1, "profile": "quick", "runs": []}"#)
+            .unwrap();
+    let same = [
+        ("nodes", Json::from(8u64)),
+        ("scale", Json::from(0.1)),
+        ("profile", Json::from("quick")),
+    ];
+    assert_eq!(baseline_config_mismatch(&baseline, &same), None);
+
+    let diff = [("nodes", Json::from(20u64))];
+    let msg = baseline_config_mismatch(&baseline, &diff).expect("mismatch must be flagged");
+    assert!(msg.contains("nodes"), "message names the offending key: {msg}");
+
+    // v1 baselines predate the stamps entirely: nothing to check.
+    let unstamped = hfsp::util::json::parse(r#"{"runs": []}"#).unwrap();
+    assert_eq!(baseline_config_mismatch(&unstamped, &same), None);
+}

@@ -3,6 +3,8 @@
 use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
 use hfsp::cluster::ClusterConfig;
 use hfsp::scheduler::SchedulerKind;
+use hfsp::sim::QueueKind;
+use hfsp::sweep::{run_grid, ExperimentGrid, WorkloadSpec};
 use hfsp::util::rng::{Pcg64, SeedableRng};
 use hfsp::workload::swim::FbWorkload;
 use hfsp::workload::synthetic::uniform_batch;
@@ -170,4 +172,47 @@ fn map_less_jobs_complete() {
     let wl = hfsp::workload::synthetic::fig7_workload();
     let o = run_simulation(&small_cfg(4), SchedulerKind::SizeBased(Default::default()), &wl);
     assert_eq!(o.sojourn.len(), 5);
+}
+
+/// Run the same seeded scenario under one queue backend.
+fn run_with_queue(queue: QueueKind) -> SimOutcome {
+    let mut cfg = small_cfg(10);
+    cfg.queue = queue;
+    run_simulation(&cfg, SchedulerKind::SizeBased(Default::default()), &small_workload(23))
+}
+
+#[test]
+fn queue_backends_produce_byte_identical_outcomes() {
+    let mut heap = run_with_queue(QueueKind::Heap);
+    let mut calendar = run_with_queue(QueueKind::Calendar);
+    // Wall-clock is the only nondeterministic field.
+    heap.wall_ms = 0.0;
+    calendar.wall_ms = 0.0;
+    assert_eq!(
+        format!("{heap:?}"),
+        format!("{calendar:?}"),
+        "SimOutcome must be byte-identical across queue backends"
+    );
+}
+
+#[test]
+fn sweep_report_json_is_byte_identical_across_queue_backends() {
+    // The aggregated sweep report contains no wall-clock fields, so the
+    // whole multi-cell artifact must serialize identically per backend.
+    let report_for = |queue: QueueKind| {
+        let mut base = small_cfg(4);
+        base.queue = queue;
+        let grid = ExperimentGrid::new("queue-differential")
+            .base_config(base)
+            .workload(WorkloadSpec::Fixed(uniform_batch(6, 3, 8.0)))
+            .seeds(&[3, 17])
+            .scheduler(SchedulerKind::Fifo)
+            .scheduler(SchedulerKind::hfsp());
+        run_grid(&grid).aggregate().to_json().to_string_pretty()
+    };
+    assert_eq!(
+        report_for(QueueKind::Heap),
+        report_for(QueueKind::Calendar),
+        "sweep JSON must be byte-identical across queue backends"
+    );
 }

@@ -1,0 +1,358 @@
+//! Differential queue testbed: the calendar backend earns its place by
+//! matching the binary-heap reference **exactly**.
+//!
+//! Three layers, increasingly end-to-end:
+//!
+//! 1. queue-level fuzz — randomized push/push_priority/pop streams driven
+//!    through both [`PendingQueue`] backends *and* an independent
+//!    stable-sort oracle; pop traces (including `(time, class, seq)`
+//!    keys), peak occupancy and scheduled counts must be identical;
+//! 2. engine-level fuzz — a self-scheduling handler (chains, staleness
+//!    bumps, same-instant bursts, priority pushes, coalescing) over
+//!    `Engine<_, EventQueue>` vs `Engine<_, CalendarQueue>`: identical
+//!    dispatch traces and identical processed/skipped/pushed/peak stats;
+//! 3. whole-simulation differential — every `testkit::scenarios` matrix
+//!    entry (and every registered scheduler) run under both backends
+//!    must produce byte-identical `SimOutcome`s (wall-clock zeroed).
+
+use hfsp::cluster::driver::{run_simulation, SimOutcome};
+use hfsp::scheduler::{SchedulerKind, REGISTRY};
+use hfsp::sim::{CalendarQueue, Engine, EventQueue, PendingQueue, QueueKind, StopReason};
+use hfsp::testkit::scenarios::matrix;
+use hfsp::util::rng::{Pcg64, Rng, SeedableRng};
+
+// -- layer 1: queue-level fuzz vs a stable-sort oracle --------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Push(f64),
+    PushPriority(f64),
+    Pop,
+}
+
+/// Random op stream mixing collision-heavy grid times (`k * 0.5`),
+/// continuous times, and occasional far-future outliers that force the
+/// calendar's sparse fallback and resize paths.
+fn op_stream(seed: u64, n: usize) -> Vec<Op> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        let roll = rng.next_f64();
+        let time = match rng.gen_index(10) {
+            0..=4 => rng.gen_index(100) as f64 * 0.5, // heavy same-instant ties
+            5..=8 => rng.gen_range_f64(0.0, 50.0),
+            _ => rng.gen_range_f64(0.0, 1e6), // sparse outliers
+        };
+        ops.push(if roll < 0.6 {
+            Op::Push(time)
+        } else if roll < 0.7 {
+            Op::PushPriority(time)
+        } else {
+            Op::Pop
+        });
+    }
+    ops
+}
+
+/// Everything observable about a run: the popped `(time-bits, class,
+/// seq, payload)` keys (including the final drain) plus the stats.
+#[derive(Debug, PartialEq, Eq)]
+struct QueueTrace {
+    pops: Vec<(u64, u8, u64, u32)>,
+    peak_len: usize,
+    scheduled: u64,
+}
+
+fn drive<Q: PendingQueue<u32>>(ops: &[Op]) -> QueueTrace {
+    let mut q = Q::with_gap_hint(0.5);
+    let mut payload = 0u32;
+    let mut pops = Vec::new();
+    for &op in ops {
+        match op {
+            Op::Push(t) => {
+                payload += 1;
+                q.push(t, payload);
+            }
+            Op::PushPriority(t) => {
+                payload += 1;
+                q.push_priority(t, payload);
+            }
+            Op::Pop => {
+                // peek must agree with the subsequent pop, and peeking
+                // must not disturb delivery order.
+                let peeked = q.peek().map(|e| (e.time.to_bits(), e.class, e.seq, e.event));
+                let popped = q.pop().map(|e| (e.time.to_bits(), e.class, e.seq, e.event));
+                assert_eq!(peeked, popped, "peek disagreed with pop [{}]", Q::LABEL);
+                if let Some(key) = popped {
+                    pops.push(key);
+                }
+            }
+        }
+    }
+    while let Some(e) = q.pop() {
+        pops.push((e.time.to_bits(), e.class, e.seq, e.event));
+    }
+    assert!(q.is_empty(), "drained queue not empty [{}]", Q::LABEL);
+    QueueTrace {
+        pops,
+        peak_len: q.peak_len(),
+        scheduled: q.scheduled_count(),
+    }
+}
+
+/// Independent model: a plain vector popped by linear-scan minimum on
+/// the `(time, class, seq)` key. Deliberately shares no code with
+/// either backend.
+fn drive_oracle(ops: &[Op]) -> QueueTrace {
+    let mut pending: Vec<(f64, u8, u64, u32)> = Vec::new();
+    let mut next_seq = 0u64;
+    let mut peak = 0usize;
+    let mut payload = 0u32;
+    let mut pops = Vec::new();
+    let mut push = |pending: &mut Vec<(f64, u8, u64, u32)>, t: f64, class: u8, p: u32| {
+        pending.push((t, class, next_seq, p));
+        next_seq += 1;
+    };
+    let pop_min = |pending: &mut Vec<(f64, u8, u64, u32)>| -> Option<(u64, u8, u64, u32)> {
+        let best = pending
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap()
+                    .then_with(|| a.1.cmp(&b.1))
+                    .then_with(|| a.2.cmp(&b.2))
+            })
+            .map(|(i, _)| i)?;
+        let (t, class, seq, p) = pending.remove(best);
+        Some((t.to_bits(), class, seq, p))
+    };
+    for &op in ops {
+        match op {
+            Op::Push(t) => {
+                payload += 1;
+                push(&mut pending, t, 1, payload);
+            }
+            Op::PushPriority(t) => {
+                payload += 1;
+                push(&mut pending, t, 0, payload);
+            }
+            Op::Pop => {
+                if let Some(key) = pop_min(&mut pending) {
+                    pops.push(key);
+                }
+            }
+        }
+        peak = peak.max(pending.len());
+    }
+    while let Some(key) = pop_min(&mut pending) {
+        pops.push(key);
+    }
+    QueueTrace {
+        pops,
+        peak_len: peak,
+        scheduled: next_seq,
+    }
+}
+
+#[test]
+fn fuzzed_op_streams_match_across_backends_and_oracle() {
+    for seed in [1u64, 11, 0xBEEF, 123_456_789] {
+        let ops = op_stream(seed, 10_000);
+        let oracle = drive_oracle(&ops);
+        let heap = drive::<EventQueue<u32>>(&ops);
+        let calendar = drive::<CalendarQueue<u32>>(&ops);
+        assert_eq!(heap, oracle, "heap diverged from oracle (seed {seed})");
+        assert_eq!(calendar, oracle, "calendar diverged from oracle (seed {seed})");
+    }
+}
+
+#[test]
+fn monotone_pop_heavy_stream_exercises_shrink_and_still_matches() {
+    // A simulation-shaped stream: mostly alternating push/pop around an
+    // advancing clock, so the calendar grows, lap-scans and shrinks.
+    for seed in [7u64, 4242] {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut ops = Vec::new();
+        let mut now = 0.0f64;
+        for _ in 0..4000 {
+            ops.push(Op::Push(now + rng.gen_range_f64(0.0, 3.0)));
+            if rng.gen_bool(0.5) {
+                ops.push(Op::Pop);
+                now += rng.gen_range_f64(0.0, 0.05);
+            }
+        }
+        for _ in 0..4000 {
+            ops.push(Op::Pop);
+        }
+        let oracle = drive_oracle(&ops);
+        assert_eq!(drive::<EventQueue<u32>>(&ops), oracle, "heap (seed {seed})");
+        assert_eq!(
+            drive::<CalendarQueue<u32>>(&ops),
+            oracle,
+            "calendar (seed {seed})"
+        );
+    }
+}
+
+// -- layer 2: engine-level fuzz -------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Fev {
+    Tick { chain: usize, epoch: u32 },
+    Work(u32),
+}
+
+fn fev_chain(ev: &Fev) -> Option<(usize, u32)> {
+    match ev {
+        Fev::Tick { chain, epoch } => Some((*chain, *epoch)),
+        Fev::Work(_) => None,
+    }
+}
+
+/// Everything the engine exposes after a run, plus the dispatch trace.
+#[derive(Debug, PartialEq, Eq)]
+struct EngineTrace {
+    dispatched: Vec<String>,
+    stop: String,
+    processed: u64,
+    skipped: u64,
+    pushed: u64,
+    peak: usize,
+}
+
+/// A self-scheduling storm: 4 heartbeat-like chains that reschedule,
+/// occasionally bump their own epoch (making in-flight ticks stale),
+/// spray same-instant work bursts (some priority-class), and coalesce
+/// them — every structural feature the cluster driver relies on. All
+/// randomness is drawn inside the handler, so identical pop order ⇒
+/// identical draws ⇒ any backend divergence cascades into the trace.
+fn drive_engine<Q: PendingQueue<Fev>>(seed: u64) -> EngineTrace {
+    const CHAINS: usize = 4;
+    let mut eng: Engine<Fev, Q> = Engine::from_queue(Q::with_gap_hint(0.25));
+    eng.init_chains(CHAINS);
+    for chain in 0..CHAINS {
+        eng.schedule_at(0.25 * (chain as f64 + 1.0), Fev::Tick { chain, epoch: 0 });
+    }
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut budget = 3000u32;
+    let mut work_id = 0u32;
+    let mut dispatched = Vec::new();
+    let stop = eng.run_filtered(fev_chain, |eng, now, ev| {
+        dispatched.push(format!("{now:.9}:{ev:?}"));
+        match ev {
+            Fev::Tick { chain, .. } => {
+                // Occasionally invalidate the chain: any *other* in-flight
+                // tick of it (a fork from below) is stranded stale and must
+                // be lazily skipped, identically on both backends.
+                if rng.gen_bool(0.1) {
+                    eng.bump_chain(chain);
+                }
+                let epoch = eng.chain_epoch(chain);
+                if budget > 0 {
+                    budget -= 1;
+                    eng.schedule_in(rng.gen_range_f64(0.0, 1.0), Fev::Tick { chain, epoch });
+                }
+                if budget > 0 && rng.gen_bool(0.15) {
+                    budget -= 1;
+                    // Fork the chain: a duplicate tick for a later bump to
+                    // strand.
+                    eng.schedule_in(rng.gen_range_f64(0.0, 1.0), Fev::Tick { chain, epoch });
+                }
+                if budget > 0 && rng.gen_bool(0.4) {
+                    budget -= 1;
+                    work_id += 1;
+                    // Same-instant burst: collides with this tick's time.
+                    eng.schedule_at(now, Fev::Work(work_id));
+                }
+                if budget > 0 && rng.gen_bool(0.2) {
+                    budget -= 1;
+                    work_id += 1;
+                    // Priority event at a quantized future instant shared
+                    // across chains (guaranteed class-0-vs-class-1 ties).
+                    let t = now + rng.gen_index(4) as f64 * 0.25;
+                    eng.schedule_at_priority(t, Fev::Work(work_id));
+                }
+            }
+            Fev::Work(_) => {
+                if rng.gen_bool(0.5) {
+                    while let Some(next) =
+                        eng.pop_coalesced(fev_chain, |e| matches!(e, Fev::Work(_)))
+                    {
+                        dispatched.push(format!("{now:.9}:coalesced:{next:?}"));
+                    }
+                }
+            }
+        }
+    });
+    EngineTrace {
+        dispatched,
+        stop: format!("{stop:?}"),
+        processed: eng.processed(),
+        skipped: eng.skipped(),
+        pushed: eng.pushed(),
+        peak: eng.heap_peak(),
+    }
+}
+
+#[test]
+fn self_scheduling_engine_storm_is_backend_invariant() {
+    let mut total_skipped = 0;
+    for seed in [5u64, 77, 999] {
+        let heap = drive_engine::<EventQueue<Fev>>(seed);
+        let calendar = drive_engine::<CalendarQueue<Fev>>(seed);
+        assert_eq!(heap.stop, "Drained", "storm must drain (seed {seed})");
+        assert_eq!(heap, calendar, "engine trace diverged (seed {seed})");
+        assert!(heap.processed > 1000, "storm too small (seed {seed})");
+        total_skipped += heap.skipped;
+    }
+    assert!(total_skipped > 0, "storm never exercised lazy chain deletion");
+}
+
+// -- layer 3: whole-simulation differential -------------------------------
+
+/// The byte-identity probe: full `Debug` output with the only
+/// wall-clock-dependent field zeroed.
+fn outcome_fingerprint(mut o: SimOutcome) -> String {
+    o.wall_ms = 0.0;
+    format!("{o:?}")
+}
+
+#[test]
+fn scenario_matrix_outcomes_are_byte_identical_across_backends() {
+    for sc in matrix(&[1, 2]) {
+        let mut heap_cfg = sc.cfg.clone();
+        heap_cfg.queue = QueueKind::Heap;
+        let mut cal_cfg = sc.cfg.clone();
+        cal_cfg.queue = QueueKind::Calendar;
+        let heap = run_simulation(&heap_cfg, SchedulerKind::hfsp(), &sc.workload);
+        let calendar = run_simulation(&cal_cfg, SchedulerKind::hfsp(), &sc.workload);
+        assert_eq!(heap.stop, StopReason::Halted, "{} did not drain", sc.label);
+        assert_eq!(
+            outcome_fingerprint(heap),
+            outcome_fingerprint(calendar),
+            "SimOutcome diverged across queue backends [{}]",
+            sc.label
+        );
+    }
+}
+
+#[test]
+fn every_registered_scheduler_is_backend_invariant() {
+    let sc = &matrix(&[3])[0];
+    for entry in REGISTRY {
+        let mut heap_cfg = sc.cfg.clone();
+        heap_cfg.queue = QueueKind::Heap;
+        let mut cal_cfg = sc.cfg.clone();
+        cal_cfg.queue = QueueKind::Calendar;
+        let heap = run_simulation(&heap_cfg, entry.make(), &sc.workload);
+        let calendar = run_simulation(&cal_cfg, entry.make(), &sc.workload);
+        assert_eq!(
+            outcome_fingerprint(heap),
+            outcome_fingerprint(calendar),
+            "SimOutcome diverged across queue backends [{} / {}]",
+            sc.label,
+            entry.name
+        );
+    }
+}
