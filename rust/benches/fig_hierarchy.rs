@@ -1,0 +1,127 @@
+//! Hierarchical fair-share convergence under a Zipf tenant population —
+//! the repo-specific hierarchy figure (no direct paper counterpart; the
+//! scenario is the multi-tenant deployment §5 of the paper gestures at).
+//!
+//! One saturated session per scheduler: a 3-pool tree with weights
+//! 3/2/1 (every leaf running HFSP) versus the flat HFSP scheduler, both
+//! fed by the same Zipf(0.5) population of 10k users hashed across 100
+//! pool ids (routed onto the 3 leaves by `pool % 3`). [`TenantProbe`]
+//! measures what each pool actually received.
+//!
+//! Expected shape: the hierarchy's measured slot-shares track the
+//! configured 1/2 : 1/3 : 1/6 split within a few percent; the flat
+//! scheduler ignores pools entirely, so its shares track the demand mix
+//! instead and its share-vs-weight error is large.
+
+use hfsp::prelude::*;
+use hfsp::report::table;
+use hfsp::scheduler::hierarchy::PoolDecl;
+
+fn topology_321() -> Topology {
+    let decl = |name: &str, weight: f64| PoolDecl {
+        name: name.into(),
+        parent: None,
+        weight,
+        discipline: Some(DisciplineKind::Fsp),
+    };
+    Topology::from_pools(vec![
+        decl("gold", 3.0),
+        decl("silver", 2.0),
+        decl("bronze", 1.0),
+    ])
+    .expect("static 3-pool topology is valid")
+}
+
+fn main() {
+    hfsp::util::logging::init_from_env();
+    let jobs: u64 = std::env::var("HFSP_FIG_HIERARCHY_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5_000);
+    let nodes = 20;
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        seed: 42,
+        ..Default::default()
+    };
+    // Offered load ≈ 1.2 on the map slots: the cluster stays saturated
+    // until the bounded population drains, so measured slot-shares are
+    // steady-state shares.
+    let slots = (nodes * cfg.cluster.map_slots) as f64;
+    let rate = 1.2 * slots / (2.0 * 8.0);
+    let population = || {
+        TenantPopulation::new(10_000, 100, rate, f64::INFINITY, 42)
+            .mix(JobMix::Uniform { maps: 2, task_s: 8.0 })
+            .max_jobs(jobs)
+    };
+
+    let weights = [("gold", 3.0), ("silver", 2.0), ("bronze", 1.0)];
+    let wsum: f64 = weights.iter().map(|(_, w)| w).sum();
+
+    let mut rows = Vec::new();
+    for (label, kind) in [
+        (
+            "HIER 3/2/1",
+            SchedulerKind::Hierarchical(HierarchyConfig::with_topology(topology_321())),
+        ),
+        ("flat HFSP", SchedulerKind::hfsp()),
+    ] {
+        let mut probe = TenantProbe::new();
+        let outcome = Simulation::new(cfg.clone())
+            .scheduler(kind)
+            .workload(population())
+            .probe(&mut probe)
+            .run();
+        // Fold the 100 hashed pool ids onto the 3 leaves the tree
+        // routes them to (pool % 3), mirroring the scheduler's routing.
+        let mut leaf_slot_s = [0.0f64; 3];
+        let mut leaf_sojourn = [(0.0f64, 0usize); 3];
+        for (&pool, usage) in probe.pools() {
+            let leaf = pool as usize % 3;
+            leaf_slot_s[leaf] += usage.slot_seconds;
+            leaf_sojourn[leaf].0 += usage.sojourn_sum_s;
+            leaf_sojourn[leaf].1 += usage.jobs_done;
+        }
+        let total: f64 = leaf_slot_s.iter().sum();
+        for (leaf, (name, w)) in weights.iter().enumerate() {
+            let share = if total > 0.0 { leaf_slot_s[leaf] / total } else { 0.0 };
+            let want = w / wsum;
+            let mean_sojourn = if leaf_sojourn[leaf].1 > 0 {
+                leaf_sojourn[leaf].0 / leaf_sojourn[leaf].1 as f64
+            } else {
+                0.0
+            };
+            rows.push(vec![
+                label.to_string(),
+                (*name).to_string(),
+                format!("{want:.3}"),
+                format!("{share:.3}"),
+                format!("{:+.1}%", (share - want) / want * 100.0),
+                format!("{mean_sojourn:.0}"),
+            ]);
+        }
+        println!(
+            "{label}: {} jobs in {:.0} s makespan, jain(slot-seconds over hashed pools) = {:.3}",
+            outcome.sojourn.len(),
+            outcome.makespan,
+            probe.jain_slot_seconds()
+        );
+    }
+    println!(
+        "{}",
+        table(
+            &[
+                "scheduler",
+                "pool",
+                "weight share",
+                "slot share",
+                "error",
+                "mean sojourn (s)"
+            ],
+            &rows
+        )
+    );
+}

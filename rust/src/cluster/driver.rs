@@ -638,6 +638,7 @@ impl Driver<'_, '_, '_> {
                 job: id,
                 n_maps: spec.n_maps(),
                 n_reduces: spec.n_reduces(),
+                tenant: spec.tenant,
             },
         );
         let job = Job::new(spec);
@@ -1241,6 +1242,7 @@ impl Driver<'_, '_, '_> {
             &PerJobRecord {
                 job: job.id(),
                 class: job.spec.class,
+                tenant: job.spec.tenant,
                 submit: job.spec.submit_time,
                 finish: job.finish_time.expect("finished job has finish_time"),
                 n_maps: job.spec.n_maps(),

@@ -108,6 +108,7 @@ mod tests {
             id: 1,
             name: "j1".into(),
             class: JobClass::Medium,
+            tenant: crate::job::TenantId::default(),
             submit_time: 0.0,
             map_durations: durations.to_vec(),
             reduce_durations: vec![],

@@ -55,12 +55,44 @@ impl JobClass {
     pub const ALL: [JobClass; 3] = [JobClass::Small, JobClass::Medium, JobClass::Large];
 }
 
+/// Submitting tenant of a job: the pool it was submitted through and the
+/// user who submitted it. The default (`pool 0, user 0`) is the implicit
+/// single-tenant world every pre-hierarchy workload generator lives in —
+/// flat schedulers ignore the field entirely, so legacy runs stay
+/// byte-identical.
+///
+/// The hierarchical scheduler routes jobs to leaf pools by `pool` (see
+/// [`crate::scheduler::hierarchy`]); `user` feeds the intra-pool
+/// fair-share layer and the per-tenant metrics probe
+/// ([`crate::metrics::TenantProbe`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId {
+    /// Pool the job was submitted through.
+    pub pool: u32,
+    /// Submitting user within the pool.
+    pub user: u32,
+}
+
+impl TenantId {
+    pub fn new(pool: u32, user: u32) -> Self {
+        Self { pool, user }
+    }
+
+    /// Whether this is the implicit single-tenant default.
+    pub fn is_default(&self) -> bool {
+        *self == TenantId::default()
+    }
+}
+
 /// Immutable job description produced by the workload generator.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub id: JobId,
     pub name: String,
     pub class: JobClass,
+    /// Submitting tenant (pool + user); [`TenantId::default`] for
+    /// single-tenant workloads.
+    pub tenant: TenantId,
     /// Submission (arrival) time, seconds.
     pub submit_time: Time,
     /// True duration of each MAP task, seconds (one HDFS block each).
@@ -315,6 +347,7 @@ mod tests {
             id: 1,
             name: "j1".into(),
             class: JobClass::Medium,
+            tenant: TenantId::default(),
             submit_time: 10.0,
             map_durations: vec![5.0, 7.0, 9.0],
             reduce_durations: vec![20.0],

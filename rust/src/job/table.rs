@@ -141,13 +141,14 @@ impl Index<&JobId> for JobTable {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::job::{JobClass, JobSpec};
+    use crate::job::{JobClass, JobSpec, TenantId};
 
     fn job(id: JobId) -> Job {
         Job::new(JobSpec {
             id,
             name: format!("j{id}"),
             class: JobClass::Small,
+            tenant: TenantId::default(),
             submit_time: 0.0,
             map_durations: vec![1.0],
             reduce_durations: vec![],

@@ -134,13 +134,14 @@ pub mod prelude {
     pub use crate::cluster::driver::{run_session, run_simulation, SimConfig, SimOutcome};
     pub use crate::cluster::ClusterConfig;
     pub use crate::faults::{FaultConfig, FaultSpec, FaultStats, SpeculationConfig};
-    pub use crate::job::{JobClass, JobId, JobSpec, Phase};
+    pub use crate::job::{JobClass, JobId, JobSpec, Phase, TenantId};
     pub use crate::metrics::sojourn::SojournStats;
-    pub use crate::metrics::{JobLimitProbe, Probe, ProbeEvent};
+    pub use crate::metrics::{jain_index, JobLimitProbe, Probe, ProbeEvent, TenantProbe};
     pub use crate::scheduler::core::{
         HfspConfig, PreemptionPrimitive, SizeBasedConfig,
     };
     pub use crate::scheduler::disciplines::DisciplineKind;
+    pub use crate::scheduler::hierarchy::{HierarchyConfig, Topology};
     pub use crate::scheduler::SchedulerKind;
     pub use crate::session::Simulation;
     pub use crate::sweep::{
@@ -148,5 +149,7 @@ pub mod prelude {
     };
     pub use crate::util::rng::{Pcg64, Rng, SeedableRng};
     pub use crate::workload::swim::FbWorkload;
-    pub use crate::workload::{ClosedSource, JobMix, OpenArrivals, Workload, WorkloadSource};
+    pub use crate::workload::{
+        ClosedSource, JobMix, OpenArrivals, TenantPopulation, Workload, WorkloadSource,
+    };
 }

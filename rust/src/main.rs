@@ -24,6 +24,7 @@ use hfsp::faults::FaultSpec;
 use hfsp::job::JobClass;
 use hfsp::report;
 use hfsp::scheduler::core::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
+use hfsp::scheduler::hierarchy::{HierarchyConfig, Topology};
 use hfsp::scheduler::{SchedulerKind, REGISTRY};
 use hfsp::sim::{QueueKind, StopReason};
 use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
@@ -32,7 +33,7 @@ use hfsp::util::config::Config as FileConfig;
 use hfsp::util::json::Json;
 use hfsp::util::rng::RngStreams;
 use hfsp::workload::swim::FbWorkload;
-use hfsp::workload::{synthetic, trace, JobMix, OpenArrivals, Workload};
+use hfsp::workload::{synthetic, trace, JobMix, OpenArrivals, TenantPopulation, Workload};
 use std::path::{Path, PathBuf};
 
 fn cli() -> Cli {
@@ -50,10 +51,14 @@ fn cli() -> Cli {
                 .flag("reduce-slots", "2", "reduce slots per node")
                 .flag("seed", "42", "rng seed (workload + placement + faults + arrivals)")
                 .flag("trace", "", "replay this JSONL trace instead of generating")
-                .flag("arrivals", "closed", "closed (job list) | open (Poisson arrival session)")
-                .flag("rate", "0.08", "open arrivals: mean jobs per second (FB mix; paper load ≈ 0.08)")
-                .flag("duration", "3600", "open arrivals: submission horizon, seconds")
-                .flag("max-jobs", "0", "open arrivals: stop after this many submissions (0 = horizon only)")
+                .flag("arrivals", "closed", "closed (job list) | open (Poisson) | population (Zipf multi-tenant)")
+                .flag("rate", "0.08", "open/population arrivals: mean jobs per second (FB mix; paper load ≈ 0.08)")
+                .flag("duration", "3600", "open/population arrivals: submission horizon, seconds")
+                .flag("max-jobs", "0", "open/population arrivals: stop after this many submissions (0 = horizon only)")
+                .flag("pools", "", "hier scheduler: pool topology — single | example | <topology.json>")
+                .flag("users", "10000", "population arrivals: Zipf user population size")
+                .flag("tenant-pools", "100", "population arrivals: number of pools users hash onto")
+                .flag("zipf-s", "0.5", "population arrivals: Zipf skew exponent (> 0; smaller = flatter)")
                 .flag("preemption", "suspend", "hfsp preemption: suspend | wait | kill")
                 .flag("estimator", "native", "hfsp estimator: native | mean | xla")
                 .flag("maxmin", "native", "hfsp max-min backend: native | xla")
@@ -75,10 +80,14 @@ fn cli() -> Cli {
                 .flag("schedulers", "fifo,fair,hfsp", SchedulerKind::cli_help_list())
                 .flag("nodes", "100", "comma-separated cluster sizes")
                 .flag("seeds", "42,7,1234", "comma-separated seeds")
-                .flag("workload", "fb", "fb | fb-map-only | fig7 | open (streaming Poisson arrivals)")
+                .flag("workload", "fb", "fb | fb-map-only | fig7 | open (Poisson) | population (Zipf multi-tenant)")
                 .flag("scale", "1.0", "scale FB-dataset job counts by this factor")
-                .flag("rates", "0.08", "open workload: comma-separated arrival rates (jobs/s) — one load point each")
-                .flag("duration", "3600", "open workload: submission horizon, seconds")
+                .flag("rates", "0.08", "open/population workload: comma-separated arrival rates (jobs/s) — one load point each")
+                .flag("duration", "3600", "open/population workload: submission horizon, seconds")
+                .flag("pools", "", "hier schedulers: pool topology — single | example | <topology.json>")
+                .flag("users", "10000", "population workload: Zipf user population size")
+                .flag("tenant-pools", "100", "population workload: number of pools users hash onto")
+                .flag("zipf-s", "0.5", "population workload: Zipf skew exponent (> 0)")
                 .flag("grid", "none", "extra axis preset: none | faults (the robustness grid)")
                 .flag("faults", "", "explicit comma-separated fault scenarios (overrides --grid)")
                 .flag("threads", "0", "worker threads (0 = all cores)")
@@ -201,7 +210,61 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     );
                     outcome
                 }
-                other => anyhow::bail!("unknown --arrivals mode {other:?} (closed|open)"),
+                "population" => {
+                    anyhow::ensure!(
+                        args.get("trace").is_none(),
+                        "--arrivals population generates its own jobs; replay traces with \
+                         --arrivals closed [--stream]"
+                    );
+                    anyhow::ensure!(
+                        !args.get_bool("stream"),
+                        "--stream applies to trace replay; it does nothing with --arrivals population"
+                    );
+                    let rate: f64 = args.require("rate")?;
+                    let duration: f64 = args.require("duration")?;
+                    anyhow::ensure!(rate > 0.0 && rate.is_finite(), "--rate must be positive and finite");
+                    let users: u64 = args.require("users")?;
+                    let tenant_pools: u32 = args.require("tenant-pools")?;
+                    let zipf_s: f64 = args.require("zipf-s")?;
+                    anyhow::ensure!(
+                        users > 0 && users <= u64::from(u32::MAX),
+                        "--users must be in 1..=2^32-1"
+                    );
+                    anyhow::ensure!(tenant_pools > 0, "--tenant-pools must be positive");
+                    anyhow::ensure!(
+                        zipf_s > 0.0 && zipf_s.is_finite(),
+                        "--zipf-s must be positive and finite"
+                    );
+                    let max_jobs: u64 = args.require("max-jobs")?;
+                    anyhow::ensure!(
+                        (duration > 0.0 && duration.is_finite()) || max_jobs > 0,
+                        "--duration must be positive and finite (or pass --max-jobs to bound the session)"
+                    );
+                    let horizon = if duration > 0.0 && duration.is_finite() {
+                        duration
+                    } else {
+                        f64::INFINITY
+                    };
+                    let mut src =
+                        TenantPopulation::new(users, tenant_pools, rate, horizon, cfg.seed)
+                            .skew(zipf_s);
+                    if max_jobs > 0 {
+                        src = src.max_jobs(max_jobs);
+                    }
+                    println!(
+                        "population session: {rate} jobs/s from {users} Zipf(s={zipf_s}) users \
+                         across {tenant_pools} pools"
+                    );
+                    let outcome = run_session(&cfg, kind, &mut src, Vec::new());
+                    println!(
+                        "  {} jobs arrived, {} finished, peak {} live jobs",
+                        outcome.jobs_arrived,
+                        outcome.sojourn.len(),
+                        outcome.peak_live_jobs
+                    );
+                    outcome
+                }
+                other => anyhow::bail!("unknown --arrivals mode {other:?} (closed|open|population)"),
             };
             print_outcome(&outcome, args.get_bool("per-class"));
             maybe_write_json(args.get("out"), &[&outcome])?;
@@ -272,28 +335,43 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
 fn scheduler_from_args(args: &hfsp::util::cli::Args) -> anyhow::Result<SchedulerKind> {
     let name = args.get("scheduler").unwrap_or("hfsp");
     let mut kind = SchedulerKind::from_name(name)?;
+    // `--pools` selects the hierarchy's topology; a malformed topology
+    // (unknown parent, non-positive weight, duplicate name, cycle) is a
+    // hard error surfaced here, before any simulation starts.
+    let pools = args.get("pools").filter(|p| !p.trim().is_empty());
+    if let Some(arg) = pools {
+        match &mut kind {
+            SchedulerKind::Hierarchical(h) => h.topology = Topology::from_arg(arg)?,
+            _ => anyhow::bail!("--pools requires --scheduler hier (got {name:?})"),
+        }
+    }
     // The mechanism flags apply to every size-based discipline, not just
     // HFSP: `--preemption kill` SRPT or `--estimator mean` PSBS are
-    // legitimate configurations.
-    if let SchedulerKind::SizeBased(cfg) = &mut kind {
-        cfg.preemption = PreemptionPrimitive::from_name(args.get("preemption").unwrap_or("suspend"))?;
-        let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-        cfg.estimator = match args.get("estimator").unwrap_or("native") {
-            "native" => EstimatorKind::Native,
-            "mean" => EstimatorKind::Mean,
-            "xla" => EstimatorKind::Xla {
-                artifact_dir: artifacts.clone(),
-            },
-            other => anyhow::bail!("unknown estimator {other:?}"),
-        };
-        cfg.maxmin = match args.get("maxmin").unwrap_or("native") {
-            "native" => MaxMinKind::Native,
-            "xla" => MaxMinKind::Xla {
-                artifact_dir: artifacts,
-            },
-            other => anyhow::bail!("unknown maxmin backend {other:?}"),
-        };
-    }
+    // legitimate configurations. The hierarchical scheduler shares the
+    // same mechanism through its base config, so the flags reach its
+    // leaf pools too.
+    let cfg = match &mut kind {
+        SchedulerKind::SizeBased(cfg) => cfg,
+        SchedulerKind::Hierarchical(h) => &mut h.base,
+        _ => return Ok(kind),
+    };
+    cfg.preemption = PreemptionPrimitive::from_name(args.get("preemption").unwrap_or("suspend"))?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    cfg.estimator = match args.get("estimator").unwrap_or("native") {
+        "native" => EstimatorKind::Native,
+        "mean" => EstimatorKind::Mean,
+        "xla" => EstimatorKind::Xla {
+            artifact_dir: artifacts.clone(),
+        },
+        other => anyhow::bail!("unknown estimator {other:?}"),
+    };
+    cfg.maxmin = match args.get("maxmin").unwrap_or("native") {
+        "native" => MaxMinKind::Native,
+        "xla" => MaxMinKind::Xla {
+            artifact_dir: artifacts,
+        },
+        other => anyhow::bail!("unknown maxmin backend {other:?}"),
+    };
     Ok(kind)
 }
 
@@ -404,7 +482,7 @@ fn print_outcome(o: &SimOutcome, per_class: bool) {
 /// table + deterministic JSON report.
 fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     let scheduler_list: String = args.require("schedulers")?;
-    let schedulers: Vec<SchedulerKind> = csv_items(&scheduler_list)
+    let mut schedulers: Vec<SchedulerKind> = csv_items(&scheduler_list)
         .into_iter()
         .map(SchedulerKind::from_name)
         .collect::<anyhow::Result<_>>()?;
@@ -412,6 +490,19 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
         !schedulers.is_empty(),
         "--schedulers must list at least one scheduler"
     );
+    // `--pools` retargets every hierarchical scheduler in the list; a
+    // malformed topology is a hard error before any cell runs.
+    if let Some(arg) = args.get("pools").filter(|p| !p.trim().is_empty()) {
+        let topology = Topology::from_arg(arg)?;
+        let mut applied = false;
+        for kind in &mut schedulers {
+            if let SchedulerKind::Hierarchical(h) = kind {
+                h.topology = topology.clone();
+                applied = true;
+            }
+        }
+        anyhow::ensure!(applied, "--pools requires a hier entry in --schedulers");
+    }
     let nodes = parse_csv::<usize>(&args.require::<String>("nodes")?, "nodes")?;
     let seeds = parse_csv::<u64>(&args.require::<String>("seeds")?, "seeds")?;
     let scale: f64 = args.require("scale")?;
@@ -441,7 +532,45 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
                 .map(|rate| WorkloadSpec::Open(OpenArrivals::poisson(rate, duration)))
                 .collect()
         }
-        other => anyhow::bail!("unknown workload {other:?} (fb|fb-map-only|fig7|open)"),
+        // Zipf multi-tenant arrivals: same load-point axis as "open",
+        // but every job carries a (pool, user) tenant identity drawn
+        // from the population's private RNG substream.
+        "population" => {
+            let rates = parse_csv::<f64>(&args.require::<String>("rates")?, "rates")?;
+            let duration: f64 = args.require("duration")?;
+            let users: u64 = args.require("users")?;
+            let tenant_pools: u32 = args.require("tenant-pools")?;
+            let zipf_s: f64 = args.require("zipf-s")?;
+            anyhow::ensure!(
+                duration > 0.0 && duration.is_finite(),
+                "--duration must be positive and finite"
+            );
+            anyhow::ensure!(
+                rates.iter().all(|r| *r > 0.0 && r.is_finite()),
+                "--rates must all be positive and finite"
+            );
+            anyhow::ensure!(
+                users > 0 && users <= u64::from(u32::MAX),
+                "--users must be in 1..=2^32-1"
+            );
+            anyhow::ensure!(tenant_pools > 0, "--tenant-pools must be positive");
+            anyhow::ensure!(
+                zipf_s > 0.0 && zipf_s.is_finite(),
+                "--zipf-s must be positive and finite"
+            );
+            rates
+                .into_iter()
+                .map(|rate| {
+                    WorkloadSpec::Population(
+                        // Seed 0 is a placeholder: each sweep cell
+                        // reseeds the template with its own seed.
+                        TenantPopulation::new(users, tenant_pools, rate, duration, 0)
+                            .skew(zipf_s),
+                    )
+                })
+                .collect()
+        }
+        other => anyhow::bail!("unknown workload {other:?} (fb|fb-map-only|fig7|open|population)"),
     };
 
     // Faults axis: an explicit --faults list wins over the --grid preset.
@@ -538,6 +667,9 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
 ///   (stale-chain lazy deletion + crash/requeue on the hot path);
 /// * `open-1e5` — 100k tiny jobs streamed through an open HFSP session
 ///   at ≈60 % utilization (the headline streaming number);
+/// * `hier-zipf` — the hierarchical scheduler under the Zipf
+///   multi-tenant population source (10k users across 100 pools): the
+///   share-tree + per-leaf discipline hot path;
 /// * `sweep-4disc` — a single-threaded 4-discipline sweep cell
 ///   (mechanism + every ordering policy through the sweep engine).
 ///
@@ -637,6 +769,22 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     records.push(open_record(&cfg, 100_000, "open-1e5"));
     if profile == "full" {
         records.push(open_record(&cfg, 1_000_000, "open-1e6"));
+    }
+    // The hierarchy hot path: Zipf tenants from a 10k-user population
+    // hashed across 100 pools, scheduled by the example 3-pool tree at
+    // ≈60 % utilization (same load shape as open-1e5 so the two rows
+    // are comparable).
+    {
+        let task_s = 4.0;
+        let slots = (cfg.cluster.nodes * cfg.cluster.map_slots).max(1) as f64;
+        let rate = 0.6 * slots / task_s;
+        let mut pop = TenantPopulation::new(10_000, 100, rate, f64::INFINITY, seed)
+            .mix(JobMix::Uniform { maps: 1, task_s })
+            .max_jobs(20_000)
+            .named("hier-zipf");
+        let kind = SchedulerKind::Hierarchical(HierarchyConfig::default());
+        let outcome = run_session(&cfg, kind, &mut pop, Vec::new());
+        records.push(ScenarioRecord::from_outcome("hier-zipf", &outcome));
     }
     // One sweep cell per size-based discipline, single-threaded (the
     // sweep engine's per-cell overhead is part of what's measured).

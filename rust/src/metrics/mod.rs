@@ -5,6 +5,7 @@
 pub mod locality;
 pub mod probe;
 pub mod sojourn;
+pub mod tenancy;
 
 pub use locality::LocalityStats;
 pub use probe::{
@@ -12,3 +13,4 @@ pub use probe::{
     ProbeEvent, ProbeStack, SojournProbe, TimelineProbe,
 };
 pub use sojourn::{PerJobRecord, SojournStats};
+pub use tenancy::{jain_index, PoolUsage, TenantProbe};

@@ -34,7 +34,7 @@
 
 use crate::faults::FaultStats;
 use crate::job::task::NodeId;
-use crate::job::{JobId, Phase, TaskRef};
+use crate::job::{JobId, Phase, TaskRef, TenantId};
 use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
 use crate::sim::Time;
 use crate::util::timeline::TimelineSet;
@@ -60,6 +60,8 @@ pub enum ProbeEvent {
         job: JobId,
         n_maps: usize,
         n_reduces: usize,
+        /// Submitting tenant (default for single-tenant workloads).
+        tenant: TenantId,
     },
     /// A pending task attempt started on `node`. `re_execution` marks
     /// attempt ≥ 2 (the task was crash-killed or KILL-preempted before).
@@ -462,6 +464,7 @@ mod tests {
         PerJobRecord {
             job,
             class: JobClass::Small,
+            tenant: TenantId::default(),
             submit: 0.0,
             finish: 5.0,
             n_maps: 1,

@@ -5,7 +5,7 @@
 //! collects per-job records and per-class summaries (the clustering of
 //! Fig. 3) and produces ECDF series.
 
-use crate::job::{JobClass, JobId};
+use crate::job::{JobClass, JobId, TenantId};
 use crate::util::json::Json;
 use crate::util::stats::{Ecdf, Moments};
 use std::collections::BTreeMap;
@@ -15,6 +15,8 @@ use std::collections::BTreeMap;
 pub struct PerJobRecord {
     pub job: JobId,
     pub class: JobClass,
+    /// Submitting tenant (default for single-tenant workloads).
+    pub tenant: TenantId,
     pub submit: f64,
     pub finish: f64,
     pub n_maps: usize,
@@ -129,6 +131,7 @@ mod tests {
         PerJobRecord {
             job,
             class,
+            tenant: TenantId::default(),
             submit,
             finish,
             n_maps: 1,

@@ -1,0 +1,281 @@
+//! Per-tenant fairness accounting.
+//!
+//! The hierarchical scheduler promises each pool a weighted share of
+//! the cluster; this probe measures what pools *actually received*.
+//! [`TenantProbe`] streams the same task-lifecycle events the timeline
+//! probe uses, but attributes occupied slot-time to the submitting
+//! tenant's **pool** (known from the `JobArrived` event), keeping one
+//! accumulator per *observed* pool — memory scales with pools that
+//! actually submitted, never with the population.
+//!
+//! Two summaries come out:
+//!
+//! * [`TenantProbe::shares`] — normalized slot-seconds per pool, the
+//!   quantity the 3/2/1-weight convergence test checks against the
+//!   configured weights;
+//! * [`TenantProbe::jain_index`] — Jain's fairness index
+//!   J = (Σx)² / (n·Σx²) over a chosen per-pool metric (1 = perfectly
+//!   even, 1/n = one pool took everything).
+
+use super::probe::{Probe, ProbeEvent};
+use super::sojourn::PerJobRecord;
+use crate::job::JobId;
+use crate::sim::Time;
+use crate::util::fxmap::FastMap;
+use std::collections::BTreeMap;
+
+/// Running slot-time and sojourn accumulators for one pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolUsage {
+    /// Occupied slot-seconds (map + reduce), accrued on release.
+    pub slot_seconds: f64,
+    /// Finished jobs.
+    pub jobs_done: usize,
+    /// Sum of finished jobs' sojourn times.
+    pub sojourn_sum_s: f64,
+}
+
+impl PoolUsage {
+    pub fn mean_sojourn_s(&self) -> f64 {
+        if self.jobs_done == 0 {
+            0.0
+        } else {
+            self.sojourn_sum_s / self.jobs_done as f64
+        }
+    }
+}
+
+/// Jain's fairness index over a set of non-negative allocations:
+/// (Σx)² / (n·Σx²); 1.0 for an even split, 1/n for a monopoly. Defined
+/// as 1.0 for empty or all-zero input (nothing was shared unevenly).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if n == 0.0 || sq <= 0.0 {
+        1.0
+    } else {
+        sum * sum / (n * sq)
+    }
+}
+
+/// Streaming per-pool usage probe (attach via
+/// [`Simulation::probe`](crate::session::Simulation::probe)).
+#[derive(Clone, Debug, Default)]
+pub struct TenantProbe {
+    /// job → pool, learned from `JobArrived`; entries are dropped on
+    /// job completion, so this tracks *live* jobs only.
+    job_pool: FastMap<JobId, u32>,
+    /// task-slot occupancy start, keyed by (job, phase-ordinal, index)
+    /// → (pool, start). TaskRef is Copy+Hash through its fields.
+    running: FastMap<(JobId, u8, usize), (u32, Time)>,
+    pools: BTreeMap<u32, PoolUsage>,
+}
+
+impl TenantProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Per-pool accumulators, keyed by pool id, in pool order.
+    pub fn pools(&self) -> &BTreeMap<u32, PoolUsage> {
+        &self.pools
+    }
+
+    /// Normalized slot-second shares per pool (sums to 1 when any work
+    /// ran), in pool-id order.
+    pub fn shares(&self) -> Vec<(u32, f64)> {
+        let total: f64 = self.pools.values().map(|p| p.slot_seconds).sum();
+        self.pools
+            .iter()
+            .map(|(&id, p)| {
+                (
+                    id,
+                    if total > 0.0 {
+                        p.slot_seconds / total
+                    } else {
+                        0.0
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Jain index over per-pool slot-seconds.
+    pub fn jain_slot_seconds(&self) -> f64 {
+        let xs: Vec<f64> = self.pools.values().map(|p| p.slot_seconds).collect();
+        jain_index(&xs)
+    }
+
+    /// Jain index over per-pool mean sojourn times (only pools with
+    /// finished jobs participate).
+    pub fn jain_mean_sojourn(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .pools
+            .values()
+            .filter(|p| p.jobs_done > 0)
+            .map(PoolUsage::mean_sojourn_s)
+            .collect();
+        jain_index(&xs)
+    }
+
+    fn acquire(&mut self, key: (JobId, u8, usize), now: Time) {
+        if let Some(&pool) = self.job_pool.get(&key.0) {
+            self.running.insert(key, (pool, now));
+        }
+    }
+
+    fn release(&mut self, key: (JobId, u8, usize), now: Time) {
+        if let Some((pool, start)) = self.running.remove(&key) {
+            self.pools.entry(pool).or_default().slot_seconds += now - start;
+        }
+    }
+}
+
+fn task_key(task: &crate::job::TaskRef) -> (JobId, u8, usize) {
+    (task.job, task.phase as u8, task.index)
+}
+
+impl Probe for TenantProbe {
+    fn name(&self) -> &'static str {
+        "tenancy"
+    }
+
+    fn on_event(&mut self, now: Time, event: &ProbeEvent) {
+        match event {
+            ProbeEvent::JobArrived { job, tenant, .. } => {
+                self.job_pool.insert(*job, tenant.pool);
+                self.pools.entry(tenant.pool).or_default();
+            }
+            ProbeEvent::TaskLaunched { task, .. } | ProbeEvent::TaskResumed { task, .. } => {
+                self.acquire(task_key(task), now);
+            }
+            ProbeEvent::TaskSuspended { task, .. }
+            | ProbeEvent::TaskCompleted { task, .. }
+            | ProbeEvent::TaskKilled {
+                task,
+                running: true,
+                ..
+            } => {
+                self.release(task_key(task), now);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_job_done(&mut self, _now: Time, record: &PerJobRecord) {
+        let pool = self
+            .job_pool
+            .remove(&record.job)
+            .unwrap_or(record.tenant.pool);
+        let p = self.pools.entry(pool).or_default();
+        p.jobs_done += 1;
+        p.sojourn_sum_s += record.sojourn();
+    }
+
+    fn on_finish(&mut self, now: Time) {
+        // Close out any still-occupied slots (probe-halted sessions).
+        let keys: Vec<_> = self.running.keys().copied().collect();
+        for k in keys {
+            self.release(k, now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, Phase, TaskRef, TenantId};
+
+    fn arrive(p: &mut TenantProbe, job: JobId, pool: u32) {
+        p.on_event(
+            0.0,
+            &ProbeEvent::JobArrived {
+                job,
+                n_maps: 1,
+                n_reduces: 0,
+                tenant: TenantId::new(pool, 0),
+            },
+        );
+    }
+
+    fn task(job: JobId) -> TaskRef {
+        TaskRef {
+            job,
+            phase: Phase::Map,
+            index: 0,
+        }
+    }
+
+    #[test]
+    fn slot_seconds_accrue_to_the_submitting_pool() {
+        let mut p = TenantProbe::new();
+        arrive(&mut p, 1, 3);
+        arrive(&mut p, 2, 7);
+        p.on_event(
+            10.0,
+            &ProbeEvent::TaskLaunched {
+                task: task(1),
+                node: 0,
+                local: true,
+                re_execution: false,
+            },
+        );
+        p.on_event(
+            10.0,
+            &ProbeEvent::TaskLaunched {
+                task: task(2),
+                node: 0,
+                local: true,
+                re_execution: false,
+            },
+        );
+        p.on_event(
+            30.0,
+            &ProbeEvent::TaskCompleted {
+                task: task(1),
+                node: 0,
+                local: true,
+                observed_s: 20.0,
+                speculative: false,
+            },
+        );
+        // Job 2's task still runs at halt time 50 — on_finish closes it.
+        p.on_finish(50.0);
+        assert_eq!(p.pools()[&3].slot_seconds, 20.0);
+        assert_eq!(p.pools()[&7].slot_seconds, 40.0);
+        let shares = p.shares();
+        assert_eq!(shares.len(), 2);
+        assert!((shares[0].1 - 20.0 / 60.0).abs() < 1e-12);
+        assert!((shares[1].1 - 40.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sojourns_group_by_pool_via_the_record_tenant() {
+        let mut p = TenantProbe::new();
+        arrive(&mut p, 1, 2);
+        let rec = PerJobRecord {
+            job: 1,
+            class: JobClass::Small,
+            tenant: TenantId::new(2, 9),
+            submit: 5.0,
+            finish: 25.0,
+            n_maps: 1,
+            n_reduces: 0,
+            true_size: 10.0,
+        };
+        p.on_job_done(25.0, &rec);
+        assert_eq!(p.pools()[&2].jobs_done, 1);
+        assert!((p.pools()[&2].mean_sojourn_s() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        assert!((jain_index(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        let mid = jain_index(&[3.0, 2.0, 1.0]);
+        assert!(mid > 0.25 && mid < 1.0, "{mid}");
+    }
+}

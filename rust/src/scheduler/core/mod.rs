@@ -249,17 +249,17 @@ pub trait Discipline {
 /// hash per lookup instead of two, deterministic fixed-seed hashing,
 /// zero steady-state allocation).
 #[derive(Default)]
-struct OrderCache {
+pub(crate) struct OrderCache {
     generation: u64,
     valid: bool,
     /// `(job, priority key)` pairs, ascending key.
-    order: Vec<(JobId, f64)>,
+    pub(crate) order: Vec<(JobId, f64)>,
     /// job → (rank, priority key).
     rank: FastMap<JobId, (usize, f64)>,
 }
 
 impl OrderCache {
-    fn refresh(&mut self, discipline: &mut dyn Discipline, phase: Phase) {
+    pub(crate) fn refresh(&mut self, discipline: &mut dyn Discipline, phase: Phase) {
         let generation = discipline.generation(phase);
         if self.valid && self.generation == generation {
             return;
@@ -275,11 +275,11 @@ impl OrderCache {
         self.valid = true;
     }
 
-    fn rank_of(&self, id: JobId) -> Option<usize> {
+    pub(crate) fn rank_of(&self, id: JobId) -> Option<usize> {
         self.rank.get(&id).map(|&(r, _)| r)
     }
 
-    fn key_of(&self, id: JobId) -> Option<f64> {
+    pub(crate) fn key_of(&self, id: JobId) -> Option<f64> {
         self.rank.get(&id).map(|&(_, k)| k)
     }
 }

@@ -175,7 +175,7 @@ impl DelayTimer {
 mod tests {
     use super::*;
     use crate::cluster::Hdfs;
-    use crate::job::{Job, JobClass, JobSpec};
+    use crate::job::{Job, JobClass, JobSpec, TenantId};
     use crate::util::rng::{Pcg64, SeedableRng};
 
     fn mk_job(id: JobId, n_maps: usize) -> Job {
@@ -183,6 +183,7 @@ mod tests {
             id,
             name: format!("j{id}"),
             class: JobClass::Medium,
+            tenant: TenantId::default(),
             submit_time: 0.0,
             map_durations: vec![10.0; n_maps],
             reduce_durations: vec![20.0; 2],

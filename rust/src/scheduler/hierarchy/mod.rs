@@ -1,0 +1,929 @@
+//! Hierarchical multi-tenant scheduling: pools → users → jobs.
+//!
+//! This subsystem composes the repo's two fairness mechanisms into a
+//! tree. A [`Topology`] declares weighted pools (interior nodes split
+//! capacity by **weighted max-min** over their *active* children —
+//! [`tree::ShareTree`]); each **leaf** pool runs any registered
+//! size-based [`Discipline`] over the jobs routed to it (HFSP in one
+//! pool, SRPT or LAS in another); **below** each leaf an unweighted
+//! max-min layer shares the leaf's slots between its active users
+//! (reusing [`maxmin_waterfill_into`], the same kernel as the FSP
+//! virtual cluster). Jobs are routed by their [`TenantId`]:
+//! `tenant.pool % n_leaves` selects the leaf, `tenant.user` the user
+//! bucket within it.
+//!
+//! ## Relation to the flat scheduler
+//!
+//! The per-leaf machinery is the flat
+//! [`SizeBasedScheduler`](crate::scheduler::core::SizeBasedScheduler)'s
+//! mechanism re-hosted: one [`Discipline`] + training module +
+//! [`OrderCache`] per leaf, with the locality index, delay timer and
+//! suspension guard shared across the tree (they model cluster-level
+//! facts, not policy). Two deliberate simplifications against the flat
+//! heartbeat loop, both documented here because the degenerate case
+//! side-steps them entirely:
+//!
+//! * no training-priority stage — training samples still accrue from
+//!   ordinary completions, they just don't get dedicated slots;
+//! * preemption operates at pool granularity (an under-served pool
+//!   suspends the worst-ranked task of the most over-served pool)
+//!   rather than per-job rank gaps.
+//!
+//! A **single-leaf** topology has nothing to split, so
+//! [`SchedulerKind::build`](crate::scheduler::SchedulerKind::build)
+//! lowers it to the flat `SizeBasedScheduler` via
+//! [`HierarchyConfig::flat_equivalent`] — outcomes are *structurally*
+//! byte-identical to the non-hierarchical scheduler, not merely close
+//! (asserted across the scenario matrix by `tests/hierarchy.rs`).
+//!
+//! ## Share computation per heartbeat
+//!
+//! 1. per-leaf demand = pending + running tasks of gated jobs, plus
+//!    suspended tasks parked anywhere (they must resume eventually);
+//! 2. [`ShareTree::allocate`] splits the phase's total slots top-down
+//!    into per-leaf targets;
+//! 3. within each leaf, per-user targets via unweighted water-filling;
+//! 4. the node's free slots go one at a time to the leaf with the
+//!    largest `target − usage` deficit (ties: lower virtual time, then
+//!    lower leaf index), inside it to the max-deficit user, inside that
+//!    to the first job in the leaf discipline's order — resume-first,
+//!    then delay-scheduled launches;
+//! 5. pool-level preemption (if the base config allows) swaps slots
+//!    from pools over target by ≥ 1 to pools under target by ≥ 1 with
+//!    unmet demand on this node.
+
+pub mod topology;
+pub mod tree;
+
+pub use topology::{PoolDecl, PoolNode, Topology};
+pub use tree::ShareTree;
+
+use super::core::{Discipline, OrderCache, SizeBasedConfig, SuspensionGuard};
+use super::core::training::{TrainingModule, TrainingUpdate};
+use super::core::virtual_cluster::maxmin_waterfill_into;
+use super::delay::{pick_reduce, DelayTimer, LocalityIndex};
+use super::disciplines::{self, DisciplineKind};
+use super::{Action, SchedView, Scheduler};
+use crate::faults::ErrorModel;
+use crate::job::task::NodeId;
+use crate::job::{Job, JobId, Phase, TaskRef};
+use crate::scheduler::core::PreemptionPrimitive;
+use crate::sim::Time;
+use crate::util::fxmap::{FastMap, FastSet};
+use std::collections::HashSet;
+
+/// Configuration of the hierarchical scheduler: the pool tree plus the
+/// base mechanism parameters every leaf inherits (each leaf overrides
+/// only `base.discipline` with its own).
+#[derive(Clone, Debug)]
+pub struct HierarchyConfig {
+    pub topology: Topology,
+    pub base: SizeBasedConfig,
+}
+
+impl Default for HierarchyConfig {
+    /// The built-in 3-pool example topology over default mechanism
+    /// parameters.
+    fn default() -> Self {
+        Self {
+            topology: Topology::example(),
+            base: SizeBasedConfig::default(),
+        }
+    }
+}
+
+impl HierarchyConfig {
+    pub fn with_topology(topology: Topology) -> Self {
+        Self {
+            topology,
+            base: SizeBasedConfig::default(),
+        }
+    }
+
+    /// The degenerate single-pool hierarchy running `discipline`.
+    pub fn single(discipline: DisciplineKind) -> Self {
+        Self::with_topology(Topology::single_pool(discipline))
+    }
+
+    /// For a single-leaf topology: the flat [`SizeBasedConfig`] the
+    /// hierarchy collapses to (the tree has nothing to split, the user
+    /// layer nothing to share). `None` for real hierarchies.
+    pub fn flat_equivalent(&self) -> Option<SizeBasedConfig> {
+        if self.topology.n_leaves() != 1 {
+            return None;
+        }
+        let mut cfg = self.base.clone();
+        cfg.discipline = self.topology.leaf(0).discipline.unwrap_or_default();
+        Some(cfg)
+    }
+}
+
+/// Per-leaf scheduling state: the flat mechanism's policy-side pieces,
+/// one set per pool.
+struct LeafPool {
+    discipline: Box<dyn Discipline>,
+    /// `None` for size-oblivious leaf disciplines (LAS).
+    training: Option<TrainingModule>,
+    order_map: OrderCache,
+    order_reduce: OrderCache,
+    reduce_started: HashSet<JobId>,
+}
+
+impl LeafPool {
+    fn new(base: &SizeBasedConfig, discipline: DisciplineKind, leaf: usize) -> Self {
+        let cfg = SizeBasedConfig {
+            discipline,
+            ..base.clone()
+        };
+        let training = if discipline.uses_estimates() {
+            let error = if cfg.error_sigma > 0.0 {
+                // Per-leaf seed tweak: error draws in one pool must not
+                // shift the error stream another pool sees.
+                Some(ErrorModel::log_normal(
+                    cfg.error_sigma,
+                    cfg.error_seed.wrapping_add(leaf as u64),
+                ))
+            } else if cfg.error_alpha > 0.0 {
+                Some(ErrorModel::uniform(
+                    cfg.error_alpha,
+                    cfg.error_seed.wrapping_add(leaf as u64),
+                ))
+            } else {
+                None
+            };
+            Some(TrainingModule::new(
+                cfg.sample_set,
+                cfg.xi,
+                cfg.estimator.build(),
+                error,
+            ))
+        } else {
+            None
+        };
+        Self {
+            discipline: disciplines::build(&cfg),
+            training,
+            order_map: OrderCache::default(),
+            order_reduce: OrderCache::default(),
+            reduce_started: HashSet::new(),
+        }
+    }
+
+    fn initial_estimate(&mut self, id: JobId, phase: Phase, n_tasks: usize) -> f64 {
+        match &mut self.training {
+            Some(t) => t.start_phase(id, phase, n_tasks),
+            None => 0.0,
+        }
+    }
+
+    fn start_reduce(&mut self, view: &SchedView, id: JobId) {
+        if !self.reduce_started.insert(id) {
+            return;
+        }
+        let n = view.jobs[&id].spec.n_reduces();
+        if n == 0 {
+            return;
+        }
+        let initial = self.initial_estimate(id, Phase::Reduce, n);
+        self.discipline
+            .phase_started(id, Phase::Reduce, initial, n, view.now);
+    }
+}
+
+/// One user's standing inside a leaf's unweighted max-min layer for the
+/// current heartbeat.
+#[derive(Clone, Copy, Debug)]
+struct UserShare {
+    user: u32,
+    demand: f64,
+    target: f64,
+    usage: f64,
+    /// No placeable candidate on this node right now.
+    blocked: bool,
+}
+
+enum Placed {
+    Launch,
+    Resume,
+}
+
+/// The pools → users → jobs tree scheduler. See the module docs for the
+/// share-computation walkthrough.
+pub struct HierarchicalScheduler {
+    cfg: HierarchyConfig,
+    tree: ShareTree,
+    leaves: Vec<LeafPool>,
+    index: LocalityIndex,
+    delay: DelayTimer,
+    guard: SuspensionGuard,
+    /// job → (leaf ordinal, user id) — fixed at arrival from the spec's
+    /// [`crate::job::TenantId`].
+    job_leaf: FastMap<JobId, (usize, u32)>,
+    sized: bool,
+    /// Last virtual-time advance (one advance per distinct heartbeat
+    /// instant, not per node).
+    vtime_now: Time,
+    // -- reusable per-heartbeat buffers --
+    demand: Vec<f64>,
+    usage: Vec<f64>,
+    target: Vec<f64>,
+    active: Vec<bool>,
+    blocked: Vec<bool>,
+    user_plan: Vec<Vec<UserShare>>,
+    user_demands: Vec<f64>,
+    user_alloc: Vec<f64>,
+    wf_order: Vec<usize>,
+    scratch_caches: Vec<OrderCache>,
+    scratch_picked: FastSet<TaskRef>,
+    scratch_resumed: FastSet<TaskRef>,
+}
+
+impl HierarchicalScheduler {
+    pub fn new(cfg: HierarchyConfig) -> Self {
+        let n = cfg.topology.n_leaves();
+        let leaves = (0..n)
+            .map(|l| {
+                let d = cfg.topology.leaf(l).discipline.unwrap_or_default();
+                LeafPool::new(&cfg.base, d, l)
+            })
+            .collect();
+        let tree = ShareTree::new(&cfg.topology);
+        let guard = SuspensionGuard::new(cfg.base.suspend_hi, cfg.base.suspend_lo);
+        let delay = DelayTimer::new(cfg.base.locality_timeout_s);
+        Self {
+            cfg,
+            tree,
+            leaves,
+            index: LocalityIndex::new(),
+            delay,
+            guard,
+            job_leaf: FastMap::default(),
+            sized: false,
+            vtime_now: 0.0,
+            demand: Vec::new(),
+            usage: Vec::new(),
+            target: Vec::new(),
+            active: Vec::new(),
+            blocked: Vec::new(),
+            user_plan: (0..n).map(|_| Vec::new()).collect(),
+            user_demands: Vec::new(),
+            user_alloc: Vec::new(),
+            wf_order: Vec::new(),
+            scratch_caches: Vec::new(),
+            scratch_picked: FastSet::default(),
+            scratch_resumed: FastSet::default(),
+        }
+    }
+
+    fn ensure_sized(&mut self, view: &SchedView) {
+        if !self.sized {
+            // Every leaf's reference world sees the full cluster; the
+            // tree enforces shares at placement time, not inside the
+            // disciplines' fluid simulations.
+            let map_slots = view.cluster.total_slots(Phase::Map).max(1);
+            let red_slots = view.cluster.total_slots(Phase::Reduce).max(1);
+            for leaf in &mut self.leaves {
+                leaf.discipline.bind_capacity(map_slots, red_slots);
+            }
+            self.sized = true;
+        }
+    }
+
+    /// Pick a map task for `job` on `node` under delay scheduling
+    /// (identical to the flat mechanism's picker — the timer and index
+    /// are cluster-level state shared by all pools).
+    fn pick_map(
+        &mut self,
+        view: &SchedView,
+        job: &Job,
+        node: NodeId,
+        picked: &FastSet<TaskRef>,
+    ) -> Option<(TaskRef, bool)> {
+        if let Some(t) = self.index.pick_local(job, node, picked) {
+            self.delay.clear(job.id());
+            return Some((t, true));
+        }
+        if job.pending_tasks(Phase::Map) == 0 {
+            return None;
+        }
+        if self.delay.skip_and_check(job.id(), view.now) {
+            if let Some(t) = self.index.pick_any(job, picked) {
+                self.delay.clear(job.id());
+                return Some((t, false));
+            }
+        }
+        None
+    }
+
+    fn pick_task(
+        &mut self,
+        view: &SchedView,
+        job: &Job,
+        phase: Phase,
+        node: NodeId,
+        picked: &FastSet<TaskRef>,
+    ) -> Option<(TaskRef, bool)> {
+        match phase {
+            Phase::Map => self.pick_map(view, job, node, picked),
+            Phase::Reduce => pick_reduce(job, picked).map(|t| (t, true)),
+        }
+    }
+
+    /// A suspended task of `job` parked on `node` not yet resumed in
+    /// this batch.
+    fn suspended_here(
+        view: &SchedView,
+        job: JobId,
+        phase: Phase,
+        node: NodeId,
+        resumed: &FastSet<TaskRef>,
+    ) -> Option<TaskRef> {
+        view.cluster
+            .node(node)
+            .suspended_tasks()
+            .find(|t| t.job == job && t.phase == phase && !resumed.contains(t))
+    }
+
+    /// Advance every node's virtual time to `view.now` using per-leaf
+    /// slot usage across both phases (the clock measures normalized
+    /// service, so phases pool together).
+    fn advance_vtime(&mut self, view: &SchedView) {
+        let dt = view.now - self.vtime_now;
+        if dt <= 0.0 {
+            return;
+        }
+        let n = self.leaves.len();
+        self.usage.clear();
+        self.usage.resize(n, 0.0);
+        self.active.clear();
+        self.active.resize(n, false);
+        for job in view.active_jobs() {
+            let Some(&(l, _)) = self.job_leaf.get(&job.id()) else {
+                continue;
+            };
+            self.usage[l] +=
+                (job.running_tasks(Phase::Map) + job.running_tasks(Phase::Reduce)) as f64;
+            self.active[l] = true;
+        }
+        self.tree.advance(dt, &self.usage, &self.active);
+        self.vtime_now = view.now;
+    }
+
+    /// Compute per-leaf demand/usage and per-leaf-per-user plans for
+    /// `phase`, then tree targets. `caches` are the leaves' refreshed
+    /// order caches (taken out of `self` by the caller).
+    fn compute_shares(&mut self, view: &SchedView, phase: Phase, caches: &[OrderCache]) {
+        let n = self.leaves.len();
+        self.demand.clear();
+        self.demand.resize(n, 0.0);
+        self.usage.clear();
+        self.usage.resize(n, 0.0);
+        for (l, cache) in caches.iter().enumerate() {
+            let users = &mut self.user_plan[l];
+            users.clear();
+            for &(id, _) in &cache.order {
+                let job = &view.jobs[&id];
+                if phase == Phase::Reduce && !job.map_phase_done() {
+                    continue;
+                }
+                let pending = job.pending_tasks(phase) as f64;
+                let running = job.running_tasks(phase) as f64;
+                self.demand[l] += pending + running;
+                self.usage[l] += running;
+                let user = self.job_leaf.get(&id).map(|&(_, u)| u).unwrap_or(0);
+                users.push(UserShare {
+                    user,
+                    demand: pending + running,
+                    target: 0.0,
+                    usage: running,
+                    blocked: false,
+                });
+            }
+        }
+        // Suspended tasks parked anywhere are demand too: a pool whose
+        // tasks are all suspended must keep a non-zero claim or it would
+        // never be allotted the slot needed to resume them.
+        for nd in view.cluster.nodes() {
+            for t in nd.suspended_tasks() {
+                if t.phase != phase {
+                    continue;
+                }
+                if let Some(&(l, u)) = self.job_leaf.get(&t.job) {
+                    self.demand[l] += 1.0;
+                    if let Some(us) = self.user_plan[l].iter_mut().find(|us| us.user == u) {
+                        us.demand += 1.0;
+                    } else {
+                        self.user_plan[l].push(UserShare {
+                            user: u,
+                            demand: 1.0,
+                            target: 0.0,
+                            usage: 0.0,
+                            blocked: false,
+                        });
+                    }
+                }
+            }
+        }
+        let capacity = view.cluster.total_slots(phase) as f64;
+        self.tree.allocate(&self.demand, capacity, &mut self.target);
+        // Intra-leaf user layer: merge per-job rows into per-user rows,
+        // then unweighted max-min of the leaf's target over user demands
+        // — the same water-filling kernel the FSP virtual cluster uses.
+        for l in 0..n {
+            let users = &mut self.user_plan[l];
+            users.sort_by_key(|us| us.user);
+            let mut w = 0;
+            for r in 0..users.len() {
+                if w > 0 && users[w - 1].user == users[r].user {
+                    users[w - 1].demand += users[r].demand;
+                    users[w - 1].usage += users[r].usage;
+                } else {
+                    users[w] = users[r];
+                    w += 1;
+                }
+            }
+            users.truncate(w);
+            self.user_demands.clear();
+            self.user_demands.extend(users.iter().map(|us| us.demand));
+            maxmin_waterfill_into(
+                &self.user_demands,
+                self.target[l],
+                &mut self.user_alloc,
+                &mut self.wf_order,
+            );
+            for (us, &t) in users.iter_mut().zip(&self.user_alloc) {
+                us.target = t;
+            }
+        }
+    }
+
+    /// Place one task from leaf `l` on `node`: max-deficit user first,
+    /// within the user the leaf discipline's order; resume-first, then
+    /// a delay-scheduled launch. Returns `None` when nothing of this
+    /// leaf is placeable here right now.
+    #[allow(clippy::too_many_arguments)]
+    fn place_one(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        phase: Phase,
+        cache: &OrderCache,
+        users: &mut [UserShare],
+        picked: &mut FastSet<TaskRef>,
+        resumed: &mut FastSet<TaskRef>,
+        ctx_budget: &mut usize,
+        actions: &mut Vec<Action>,
+    ) -> Option<Placed> {
+        loop {
+            let mut best: Option<usize> = None;
+            for (i, us) in users.iter().enumerate() {
+                if us.blocked || us.demand - us.usage <= 0.0 {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let d = us.target - us.usage;
+                        let db = users[b].target - users[b].usage;
+                        d > db + 1e-9
+                    }
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            let ui = best?;
+            let user = users[ui].user;
+            for &(id, _) in &cache.order {
+                let routed = self.job_leaf.get(&id).map(|&(_, u)| u);
+                if routed != Some(user) {
+                    continue;
+                }
+                let job = &view.jobs[&id];
+                if phase == Phase::Reduce && !job.map_phase_done() {
+                    continue;
+                }
+                if let Some(t) = Self::suspended_here(view, id, phase, node, resumed) {
+                    resumed.insert(t);
+                    actions.push(Action::Resume { task: t });
+                    users[ui].usage += 1.0;
+                    return Some(Placed::Resume);
+                }
+                if *ctx_budget > 0 {
+                    if let Some((task, local)) = self.pick_task(view, job, phase, node, picked) {
+                        picked.insert(task);
+                        actions.push(Action::Launch { task, node, local });
+                        *ctx_budget -= 1;
+                        users[ui].usage += 1.0;
+                        return Some(Placed::Launch);
+                    }
+                }
+            }
+            users[ui].blocked = true;
+        }
+    }
+
+    /// Fill + preempt for one phase on one node heartbeat.
+    #[allow(clippy::too_many_lines)]
+    fn assign_phase(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        phase: Phase,
+        actions: &mut Vec<Action>,
+        ctx_budget: &mut usize,
+    ) {
+        let n = self.leaves.len();
+        for leaf in &mut self.leaves {
+            let cache = match phase {
+                Phase::Map => &mut leaf.order_map,
+                Phase::Reduce => &mut leaf.order_reduce,
+            };
+            cache.refresh(leaf.discipline.as_mut(), phase);
+        }
+        // Caches and scratch sets move out of `self` so the `&mut self`
+        // pickers stay callable (same dance as the flat scheduler).
+        let mut caches = std::mem::take(&mut self.scratch_caches);
+        caches.clear();
+        caches.extend(self.leaves.iter_mut().map(|leaf| match phase {
+            Phase::Map => std::mem::take(&mut leaf.order_map),
+            Phase::Reduce => std::mem::take(&mut leaf.order_reduce),
+        }));
+        let mut picked = std::mem::take(&mut self.scratch_picked);
+        let mut resumed = std::mem::take(&mut self.scratch_resumed);
+        picked.clear();
+        resumed.clear();
+
+        self.compute_shares(view, phase, &caches);
+        let mut user_plan = std::mem::take(&mut self.user_plan);
+
+        // -- Fill: one slot at a time to the worst-off pool --------------
+        let mut free = view.cluster.node(node).free_slots(phase);
+        self.blocked.clear();
+        self.blocked.resize(n, false);
+        while free > 0 {
+            let mut best: Option<usize> = None;
+            for l in 0..n {
+                if self.blocked[l] {
+                    continue;
+                }
+                if self.demand[l] - self.usage[l] <= 0.0 {
+                    self.blocked[l] = true;
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let d = self.target[l] - self.usage[l];
+                        let db = self.target[b] - self.usage[b];
+                        d > db + 1e-9
+                            || ((d - db).abs() <= 1e-9
+                                && self.tree.leaf_vtime(l) < self.tree.leaf_vtime(b))
+                    }
+                };
+                if better {
+                    best = Some(l);
+                }
+            }
+            let Some(l) = best else { break };
+            match self.place_one(
+                view,
+                node,
+                phase,
+                &caches[l],
+                &mut user_plan[l],
+                &mut picked,
+                &mut resumed,
+                ctx_budget,
+                actions,
+            ) {
+                Some(_) => {
+                    free -= 1;
+                    self.usage[l] += 1.0;
+                }
+                None => self.blocked[l] = true,
+            }
+        }
+
+        // -- Pool-level preemption ----------------------------------------
+        if self.cfg.base.preemption != PreemptionPrimitive::Wait {
+            self.preempt_phase(
+                view,
+                node,
+                phase,
+                &caches,
+                &mut user_plan,
+                &mut picked,
+                &mut resumed,
+                ctx_budget,
+                actions,
+            );
+        }
+
+        self.user_plan = user_plan;
+        for (leaf, cache) in self.leaves.iter_mut().zip(caches.drain(..)) {
+            match phase {
+                Phase::Map => leaf.order_map = cache,
+                Phase::Reduce => leaf.order_reduce = cache,
+            }
+        }
+        self.scratch_caches = caches;
+        self.scratch_picked = picked;
+        self.scratch_resumed = resumed;
+    }
+
+    /// Swap slots from pools over target to pools under target. A
+    /// claimant must be a full slot under its target with demand this
+    /// node can serve (a suspended task parked here, or pending tasks
+    /// exceeding the cluster's free slots); the victim is the worst-
+    /// ranked running task (in its own pool's order) of the most
+    /// over-served pool. The ≥ 1-slot gap on both sides is the thrash
+    /// guard: after each swap both gaps shrink, so the loop terminates
+    /// and near-balanced pools never flap.
+    #[allow(clippy::too_many_arguments)]
+    fn preempt_phase(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        phase: Phase,
+        caches: &[OrderCache],
+        user_plan: &mut [Vec<UserShare>],
+        picked: &mut FastSet<TaskRef>,
+        resumed: &mut FastSet<TaskRef>,
+        ctx_budget: &mut usize,
+        actions: &mut Vec<Action>,
+    ) {
+        let n = self.leaves.len();
+        let cluster_free = view.cluster.free_slots(phase);
+        let mut suspended_total = view.cluster.suspended_count();
+        let mut preempted: Vec<TaskRef> = Vec::new();
+        loop {
+            // Claimant: most under-served pool, at least one slot short.
+            let claimant = (0..n)
+                .filter(|&l| self.target[l] - self.usage[l] >= 1.0 - 1e-9)
+                .max_by(|&a, &b| {
+                    (self.target[a] - self.usage[a]).total_cmp(&(self.target[b] - self.usage[b]))
+                });
+            let Some(cl) = claimant else { return };
+            // Victim pool: most over-served, at least one slot over, with
+            // a running task on this node we haven't already preempted.
+            let victim_task = (0..n)
+                .filter(|&l| l != cl && self.usage[l] - self.target[l] >= 1.0 - 1e-9)
+                .max_by(|&a, &b| {
+                    (self.usage[a] - self.target[a]).total_cmp(&(self.usage[b] - self.target[b]))
+                })
+                .and_then(|vl| {
+                    view.cluster
+                        .node(node)
+                        .running(phase)
+                        .iter()
+                        .filter(|t| {
+                            !preempted.contains(t)
+                                && self.job_leaf.get(&t.job).map(|&(l, _)| l) == Some(vl)
+                        })
+                        .max_by_key(|t| caches[vl].rank_of(t.job).unwrap_or(0))
+                        .copied()
+                        .map(|t| (vl, t))
+                });
+            let Some((vl, victim)) = victim_task else { return };
+            // Does this node actually help the claimant?
+            let resume_cand = user_plan[cl]
+                .iter()
+                .filter(|us| !us.blocked)
+                .find_map(|us| {
+                    caches[cl].order.iter().find_map(|&(id, _)| {
+                        (self.job_leaf.get(&id).map(|&(_, u)| u) == Some(us.user))
+                            .then(|| Self::suspended_here(view, id, phase, node, resumed))
+                            .flatten()
+                    })
+                });
+            let pending_unmet = caches[cl].order.iter().any(|&(id, _)| {
+                let job = &view.jobs[&id];
+                (phase == Phase::Map || job.map_phase_done())
+                    && job.pending_tasks(phase) > cluster_free
+            });
+            if resume_cand.is_none() && !pending_unmet {
+                return;
+            }
+            let preempt_action = match self.cfg.base.preemption {
+                PreemptionPrimitive::Kill => Some(Action::Kill { task: victim }),
+                PreemptionPrimitive::Suspend => {
+                    let have_ctx = resume_cand.is_some() || *ctx_budget >= 1;
+                    if have_ctx && self.guard.allow_suspend(suspended_total) {
+                        Some(Action::Suspend { task: victim })
+                    } else {
+                        None
+                    }
+                }
+                PreemptionPrimitive::Wait => unreachable!(),
+            };
+            let Some(preempt_action) = preempt_action else { return };
+            let placement = match resume_cand {
+                Some(t) => Some(Action::Resume { task: t }),
+                None => {
+                    // First launchable job of the claimant pool, in
+                    // discipline order.
+                    let mut found = None;
+                    for &(id, _) in &caches[cl].order {
+                        let job = &view.jobs[&id];
+                        if phase == Phase::Reduce && !job.map_phase_done() {
+                            continue;
+                        }
+                        if *ctx_budget == 0 {
+                            break;
+                        }
+                        if let Some((task, local)) =
+                            self.pick_task(view, job, phase, node, picked)
+                        {
+                            found = Some(Action::Launch { task, node, local });
+                            break;
+                        }
+                    }
+                    found
+                }
+            };
+            let Some(placement) = placement else { return };
+            if matches!(preempt_action, Action::Suspend { .. }) {
+                suspended_total += 1;
+            }
+            preempted.push(victim);
+            actions.push(preempt_action);
+            match placement {
+                Action::Resume { task } => {
+                    resumed.insert(task);
+                }
+                Action::Launch { task, .. } => {
+                    picked.insert(task);
+                    *ctx_budget = ctx_budget.saturating_sub(1);
+                }
+                _ => {}
+            }
+            actions.push(placement);
+            self.usage[vl] -= 1.0;
+            self.usage[cl] += 1.0;
+        }
+    }
+}
+
+impl Scheduler for HierarchicalScheduler {
+    fn name(&self) -> &'static str {
+        "HIER"
+    }
+
+    fn on_job_arrival(&mut self, view: &SchedView, id: JobId) {
+        self.ensure_sized(view);
+        let job = &view.jobs[&id];
+        self.index.add_job(job, view.hdfs);
+        let l = self.cfg.topology.leaf_for_pool(job.spec.tenant.pool);
+        self.job_leaf.insert(id, (l, job.spec.tenant.user));
+        let n_maps = job.spec.n_maps();
+        let leaf = &mut self.leaves[l];
+        if n_maps > 0 {
+            let initial = leaf.initial_estimate(id, Phase::Map, n_maps);
+            leaf.discipline
+                .phase_started(id, Phase::Map, initial, n_maps, view.now);
+        } else {
+            leaf.start_reduce(view, id);
+        }
+    }
+
+    fn on_task_completed(&mut self, view: &SchedView, task: TaskRef, observed: f64) {
+        let id = task.job;
+        let Some(&(l, _)) = self.job_leaf.get(&id) else {
+            return;
+        };
+        let leaf = &mut self.leaves[l];
+        let job = &view.jobs[&id];
+        let phase = task.phase;
+        let tasks_done = match phase {
+            Phase::Map => job.maps_done,
+            Phase::Reduce => job.reduces_done,
+        };
+        leaf.discipline.service_observed(id, phase, observed, view.now);
+        if let Some(training) = &mut leaf.training {
+            if let TrainingUpdate::Estimated { total } =
+                training.observe_completion(id, phase, observed, tasks_done)
+            {
+                leaf.discipline.size_estimated(id, phase, total, view.now);
+            }
+        }
+        if job.remaining_tasks(phase) == 0 {
+            leaf.discipline.phase_completed(id, phase, view.now);
+        }
+        if phase == Phase::Map && job.map_phase_done() {
+            leaf.start_reduce(view, id);
+        }
+    }
+
+    fn on_reduce_progress(&mut self, view: &SchedView, task: TaskRef, delta: f64, progress: f64) {
+        if progress <= 0.0 {
+            return;
+        }
+        let Some(&(l, _)) = self.job_leaf.get(&task.job) else {
+            return;
+        };
+        let leaf = &mut self.leaves[l];
+        if let Some(training) = &mut leaf.training {
+            if let TrainingUpdate::Estimated { total } =
+                training.observe_progress(task.job, delta, progress)
+            {
+                leaf.discipline
+                    .size_estimated(task.job, Phase::Reduce, total, view.now);
+            }
+        }
+    }
+
+    fn on_job_finished(&mut self, view: &SchedView, id: JobId) {
+        if let Some((l, _)) = self.job_leaf.remove(&id) {
+            let leaf = &mut self.leaves[l];
+            leaf.discipline.job_removed(id, view.now);
+            if let Some(training) = &mut leaf.training {
+                training.remove_job(id);
+            }
+            leaf.reduce_started.remove(&id);
+        }
+        self.index.remove_job(id);
+        self.delay.remove_job(id);
+    }
+
+    fn on_heartbeat(&mut self, view: &SchedView, node: NodeId, actions: &mut Vec<Action>) {
+        self.ensure_sized(view);
+        for leaf in &mut self.leaves {
+            leaf.discipline.advance(view.now);
+        }
+        self.advance_vtime(view);
+        let mut ctx_budget = view.cluster.node(node).context_headroom();
+        self.assign_phase(view, node, Phase::Map, actions, &mut ctx_budget);
+        self.assign_phase(view, node, Phase::Reduce, actions, &mut ctx_budget);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::driver::{run_simulation, SimConfig};
+    use crate::cluster::ClusterConfig;
+    use crate::scheduler::SchedulerKind;
+
+    #[test]
+    fn flat_equivalent_exists_only_for_single_leaf_topologies() {
+        let single = HierarchyConfig::single(DisciplineKind::Srpt);
+        let flat = single.flat_equivalent().expect("one leaf collapses");
+        assert_eq!(flat.discipline, DisciplineKind::Srpt);
+        assert!(HierarchyConfig::default().flat_equivalent().is_none());
+    }
+
+    #[test]
+    fn hierarchical_example_completes_a_batch_workload() {
+        // All jobs carry the default tenant → pool 0 (prod / HFSP); the
+        // other two pools stay empty. Everything must finish with no
+        // rejected actions.
+        let wl = crate::workload::synthetic::uniform_batch(6, 4, 10.0);
+        let cfg = SimConfig {
+            cluster: ClusterConfig {
+                nodes: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let o = run_simulation(
+            &cfg,
+            SchedulerKind::Hierarchical(HierarchyConfig::default()),
+            &wl,
+        );
+        assert_eq!(o.scheduler, "HIER");
+        assert_eq!(o.sojourn.len(), 6);
+        assert_eq!(o.counters.rejected_actions, 0);
+    }
+
+    #[test]
+    fn tenants_spread_across_pools_all_complete() {
+        use crate::job::{JobClass, JobSpec, TenantId};
+        let jobs = (0..9u64)
+            .map(|i| JobSpec {
+                id: i + 1,
+                name: format!("t{i}"),
+                class: JobClass::Small,
+                tenant: TenantId::new((i % 3) as u32, (i % 4) as u32),
+                submit_time: 0.25 * i as f64,
+                map_durations: vec![4.0; 3],
+                reduce_durations: vec![6.0],
+            })
+            .collect();
+        let wl = crate::workload::Workload::new("spread", jobs).unwrap();
+        let cfg = SimConfig {
+            cluster: ClusterConfig {
+                nodes: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let o = run_simulation(
+            &cfg,
+            SchedulerKind::Hierarchical(HierarchyConfig::default()),
+            &wl,
+        );
+        assert_eq!(o.sojourn.len(), 9, "all tenants' jobs complete");
+        assert_eq!(o.counters.rejected_actions, 0);
+    }
+}

@@ -1,0 +1,366 @@
+//! The fair-share tree: weighted max-min capacity splitting plus
+//! FSP-style virtual-time decay at every node.
+//!
+//! Each heartbeat the scheduler feeds per-leaf slot *demands* into
+//! [`ShareTree::allocate`]; demands aggregate bottom-up over the
+//! topology, then the cluster's capacity is split top-down, each
+//! interior node performing a **weighted** max-min division over its
+//! children's subtree demands. When a node's children carry equal
+//! weights the split delegates to the shared water-filling routine
+//! ([`maxmin_waterfill_into`]) — the same kernel the FSP discipline's
+//! virtual cluster uses — so the two fairness paths cannot drift apart.
+//!
+//! Separately, each node carries a **virtual time**: normalized service
+//! `Σ usage·dt / weight` while active. The scheduler breaks allocation
+//! ties toward the lowest virtual time, which is what makes weighted
+//! sharing hold over time rather than per-instant. The decay rule keeps
+//! the clock meaningful across idleness: an idle node's virtual time is
+//! snapped **up** to the minimum among its active siblings, so a tenant
+//! that slept for an hour wakes with the same standing as the
+//! least-served active tenant — it is not starved (its clock never runs
+//! ahead while idle), and it cannot starve others by cashing in an
+//! hour-long backlog claim.
+
+use crate::scheduler::core::virtual_cluster::maxmin_waterfill_into;
+use super::topology::{Topology, ROOT};
+
+/// Per-heartbeat share computation state over a fixed [`Topology`].
+/// All buffers are reusable: steady-state [`ShareTree::allocate`] and
+/// [`ShareTree::advance`] calls do not allocate.
+pub struct ShareTree {
+    parent: Vec<usize>,
+    children: Vec<Vec<usize>>,
+    weight: Vec<f64>,
+    /// Node indices ordered so parents precede children (BFS from the
+    /// root) — the traversal order for top-down splits; reversed for
+    /// bottom-up aggregation.
+    topo: Vec<usize>,
+    /// Node index of each leaf ordinal.
+    leaf_nodes: Vec<usize>,
+    /// Normalized service clock per node (see module docs).
+    vtime: Vec<f64>,
+    // -- reusable working state --
+    demand: Vec<f64>,
+    target: Vec<f64>,
+    usage: Vec<f64>,
+    active: Vec<bool>,
+    kid_demands: Vec<f64>,
+    kid_alloc: Vec<f64>,
+    kid_order: Vec<usize>,
+    wf_order: Vec<usize>,
+}
+
+impl ShareTree {
+    pub fn new(topology: &Topology) -> Self {
+        let nodes = topology.nodes();
+        let n = nodes.len();
+        // BFS from the root: a node's parent always appears earlier.
+        let mut topo = Vec::with_capacity(n);
+        topo.push(ROOT);
+        let mut head = 0;
+        while head < topo.len() {
+            let cur = topo[head];
+            head += 1;
+            topo.extend(nodes[cur].children.iter().copied());
+        }
+        debug_assert_eq!(topo.len(), n, "topology is connected");
+        Self {
+            parent: nodes.iter().map(|p| p.parent).collect(),
+            children: nodes.iter().map(|p| p.children.clone()).collect(),
+            weight: nodes.iter().map(|p| p.weight).collect(),
+            topo,
+            leaf_nodes: (0..topology.n_leaves()).map(|l| topology.leaf_node(l)).collect(),
+            vtime: vec![0.0; n],
+            demand: vec![0.0; n],
+            target: vec![0.0; n],
+            usage: vec![0.0; n],
+            active: vec![false; n],
+            kid_demands: Vec::new(),
+            kid_alloc: Vec::new(),
+            kid_order: Vec::new(),
+            wf_order: Vec::new(),
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaf_nodes.len()
+    }
+
+    /// Split `capacity` slots over the leaves given per-leaf demands
+    /// (slot counts). Writes one target per leaf into `out` (cleared
+    /// first). Targets are fractional: the scheduler compares them
+    /// against integer usage as deficits.
+    pub fn allocate(&mut self, leaf_demands: &[f64], capacity: f64, out: &mut Vec<f64>) {
+        assert_eq!(leaf_demands.len(), self.leaf_nodes.len());
+        self.demand.iter_mut().for_each(|d| *d = 0.0);
+        for (l, &d) in leaf_demands.iter().enumerate() {
+            debug_assert!(d >= 0.0 && d.is_finite());
+            self.demand[self.leaf_nodes[l]] = d;
+        }
+        // Bottom-up: subtree demand.
+        for i in (1..self.topo.len()).rev() {
+            let n = self.topo[i];
+            self.demand[self.parent[n]] += self.demand[n];
+        }
+        // Top-down: weighted max-min split of each node's target.
+        self.target.iter_mut().for_each(|t| *t = 0.0);
+        self.target[ROOT] = capacity.min(self.demand[ROOT]);
+        for i in 0..self.topo.len() {
+            let n = self.topo[i];
+            if !self.children[n].is_empty() {
+                self.split_node(n);
+            }
+        }
+        out.clear();
+        out.extend(self.leaf_nodes.iter().map(|&n| self.target[n]));
+    }
+
+    /// Weighted max-min over one node's children: sort by demand/weight
+    /// ascending; a child whose demand fits under its weighted fair
+    /// share of what remains is fully satisfied (its surplus raises the
+    /// water level for the rest), otherwise it — and, by the sort order,
+    /// every child after it — is capped at `w_i · remaining / Σw`.
+    /// Uniform weights reduce to plain water-filling, so that case
+    /// delegates to the shared [`maxmin_waterfill_into`] kernel.
+    fn split_node(&mut self, node: usize) {
+        let kids = &self.children[node];
+        let cap = self.target[node];
+        self.kid_demands.clear();
+        self.kid_demands.extend(kids.iter().map(|&c| self.demand[c]));
+        let uniform = kids
+            .windows(2)
+            .all(|w| self.weight[w[0]] == self.weight[w[1]]);
+        if uniform {
+            maxmin_waterfill_into(
+                &self.kid_demands,
+                cap,
+                &mut self.kid_alloc,
+                &mut self.wf_order,
+            );
+            if self.kid_alloc.is_empty() {
+                // The kernel's "everyone satisfied" fast path copies the
+                // demands; an empty result only means zero children.
+                return;
+            }
+        } else {
+            let k = kids.len();
+            self.kid_order.clear();
+            self.kid_order.extend(0..k);
+            let (demands, weights) = (&self.kid_demands, &self.weight);
+            self.kid_order.sort_by(|&a, &b| {
+                let ra = demands[a] / weights[kids[a]];
+                let rb = demands[b] / weights[kids[b]];
+                ra.total_cmp(&rb).then(a.cmp(&b))
+            });
+            self.kid_alloc.clear();
+            self.kid_alloc.resize(k, 0.0);
+            let mut remaining = cap;
+            let mut wsum: f64 = kids.iter().map(|&c| self.weight[c]).sum();
+            for &i in &self.kid_order {
+                let w = self.weight[kids[i]];
+                let fair = if wsum > 0.0 { w * remaining / wsum } else { 0.0 };
+                let a = self.kid_demands[i].min(fair);
+                self.kid_alloc[i] = a;
+                remaining -= a;
+                wsum -= w;
+            }
+        }
+        for (i, &c) in kids.iter().enumerate() {
+            self.target[c] = self.kid_alloc[i];
+        }
+    }
+
+    /// Advance virtual time by `dt` given per-leaf slot usage and
+    /// activity, then apply the idle-decay rule at every interior node.
+    pub fn advance(&mut self, dt: f64, leaf_usage: &[f64], leaf_active: &[bool]) {
+        assert_eq!(leaf_usage.len(), self.leaf_nodes.len());
+        if dt <= 0.0 {
+            return;
+        }
+        self.usage.iter_mut().for_each(|u| *u = 0.0);
+        self.active.iter_mut().for_each(|a| *a = false);
+        for (l, &n) in self.leaf_nodes.iter().enumerate() {
+            self.usage[n] = leaf_usage[l];
+            self.active[n] = leaf_active[l] || leaf_usage[l] > 0.0;
+        }
+        for i in (1..self.topo.len()).rev() {
+            let n = self.topo[i];
+            self.usage[self.parent[n]] += self.usage[n];
+            if self.active[n] {
+                self.active[self.parent[n]] = true;
+            }
+        }
+        for n in 0..self.vtime.len() {
+            if self.active[n] {
+                self.vtime[n] += self.usage[n] * dt / self.weight[n];
+            }
+        }
+        // Idle decay: snap idle children up to the least-served active
+        // sibling (parents first, so a freshly snapped interior node is
+        // in place before its own children are compared — though the
+        // rule is local, this keeps clocks monotone down the tree).
+        for &p in &self.topo {
+            if self.children[p].is_empty() {
+                continue;
+            }
+            let floor = self.children[p]
+                .iter()
+                .filter(|&&c| self.active[c])
+                .map(|&c| self.vtime[c])
+                .fold(f64::INFINITY, f64::min);
+            if floor.is_finite() {
+                for &c in &self.children[p] {
+                    if !self.active[c] && self.vtime[c] < floor {
+                        self.vtime[c] = floor;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The virtual-time clock of a leaf ordinal (tie-break key: lower =
+    /// less normalized service = serve first).
+    pub fn leaf_vtime(&self, leaf: usize) -> f64 {
+        self.vtime[self.leaf_nodes[leaf]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::disciplines::DisciplineKind;
+    use crate::scheduler::hierarchy::topology::PoolDecl;
+
+    fn flat(weights: &[f64]) -> Topology {
+        Topology::from_pools(
+            weights
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| PoolDecl {
+                    name: format!("p{i}"),
+                    parent: None,
+                    weight: w,
+                    discipline: Some(DisciplineKind::Fsp),
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    fn alloc(tree: &mut ShareTree, demands: &[f64], cap: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        tree.allocate(demands, cap, &mut out);
+        out
+    }
+
+    #[test]
+    fn saturated_demands_split_by_weight() {
+        let mut tree = ShareTree::new(&flat(&[3.0, 2.0, 1.0]));
+        let a = alloc(&mut tree, &[100.0, 100.0, 100.0], 12.0);
+        assert!((a[0] - 6.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 4.0).abs() < 1e-9, "{a:?}");
+        assert!((a[2] - 2.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn satisfied_demand_surplus_flows_to_the_hungry() {
+        let mut tree = ShareTree::new(&flat(&[3.0, 2.0, 1.0]));
+        // prod wants almost nothing; its unused weighted share is
+        // redistributed 2:1 between the saturated pools.
+        let a = alloc(&mut tree, &[1.0, 100.0, 100.0], 13.0);
+        assert!((a[0] - 1.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 8.0).abs() < 1e-9, "{a:?}");
+        assert!((a[2] - 4.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn allocation_is_bounded_and_conserving() {
+        let mut tree = ShareTree::new(&flat(&[5.0, 1.0, 2.0, 2.0]));
+        for (demands, cap) in [
+            (vec![3.0, 0.0, 7.0, 2.0], 8.0),
+            (vec![1.0, 1.0, 1.0, 1.0], 100.0),
+            (vec![0.0, 0.0, 0.0, 0.0], 16.0),
+            (vec![50.0, 50.0, 50.0, 50.0], 7.0),
+        ] {
+            let a = alloc(&mut tree, &demands, cap);
+            for (x, d) in a.iter().zip(&demands) {
+                assert!(*x >= -1e-12 && *x <= d + 1e-9, "{a:?} vs {demands:?}");
+            }
+            let total: f64 = a.iter().sum();
+            let want = cap.min(demands.iter().sum());
+            assert!((total - want).abs() < 1e-9, "{a:?}: {total} != {want}");
+        }
+    }
+
+    #[test]
+    fn uniform_weights_match_the_shared_waterfill_kernel() {
+        let mut tree = ShareTree::new(&flat(&[2.0, 2.0, 2.0, 2.0]));
+        let demands = [9.0, 1.0, 4.0, 6.0];
+        let a = alloc(&mut tree, &demands, 12.0);
+        let mut want = Vec::new();
+        let mut scratch = Vec::new();
+        maxmin_waterfill_into(&demands, 12.0, &mut want, &mut scratch);
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn nested_split_composes() {
+        // root -> org(2) {etl(1), ml(1)}, misc(1): org's 2/3 of capacity
+        // splits evenly between its two leaves.
+        let t = Topology::from_pools(vec![
+            PoolDecl { name: "org".into(), parent: None, weight: 2.0, discipline: None },
+            PoolDecl { name: "etl".into(), parent: Some("org".into()), weight: 1.0, discipline: None },
+            PoolDecl { name: "ml".into(), parent: Some("org".into()), weight: 1.0, discipline: None },
+            PoolDecl { name: "misc".into(), parent: None, weight: 1.0, discipline: None },
+        ])
+        .unwrap();
+        assert_eq!(t.n_leaves(), 3);
+        let mut tree = ShareTree::new(&t);
+        let a = alloc(&mut tree, &[100.0, 100.0, 100.0], 12.0);
+        assert!((a[0] - 4.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 4.0).abs() < 1e-9, "{a:?}");
+        assert!((a[2] - 4.0).abs() < 1e-9, "{a:?}");
+        // With ml idle, etl absorbs org's whole 2/3.
+        let a = alloc(&mut tree, &[100.0, 0.0, 100.0], 12.0);
+        assert!((a[0] - 8.0).abs() < 1e-9, "{a:?}");
+        assert!((a[2] - 4.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn vtime_tracks_normalized_service() {
+        let mut tree = ShareTree::new(&flat(&[3.0, 1.0]));
+        // Equal raw service: the weight-3 pool's clock runs 3x slower.
+        tree.advance(10.0, &[6.0, 6.0], &[true, true]);
+        assert!((tree.leaf_vtime(0) - 20.0).abs() < 1e-9);
+        assert!((tree.leaf_vtime(1) - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_pool_decays_to_the_least_served_active_sibling() {
+        let mut tree = ShareTree::new(&flat(&[1.0, 1.0, 1.0]));
+        // Pool 2 sleeps while 0 and 1 are served.
+        tree.advance(10.0, &[4.0, 2.0, 0.0], &[true, true, false]);
+        assert!((tree.leaf_vtime(0) - 40.0).abs() < 1e-9);
+        assert!((tree.leaf_vtime(1) - 20.0).abs() < 1e-9);
+        // Decay: the sleeper's clock snapped up to min(40, 20) = 20 — on
+        // waking it ties with the least-served active pool instead of
+        // holding a 20-unit starvation claim over everyone.
+        assert!((tree.leaf_vtime(2) - 20.0).abs() < 1e-9);
+        // ...and an idle clock never runs ahead of active ones.
+        tree.advance(10.0, &[4.0, 2.0, 0.0], &[true, true, false]);
+        assert!(tree.leaf_vtime(2) <= tree.leaf_vtime(0));
+        assert!((tree.leaf_vtime(2) - 40.0).abs() < 1e-9, "snapped to new floor");
+    }
+
+    #[test]
+    fn advance_ignores_nonpositive_dt_and_all_idle() {
+        let mut tree = ShareTree::new(&flat(&[1.0, 1.0]));
+        tree.advance(0.0, &[5.0, 5.0], &[true, true]);
+        tree.advance(-1.0, &[5.0, 5.0], &[true, true]);
+        assert_eq!(tree.leaf_vtime(0), 0.0);
+        // All idle: clocks hold.
+        tree.advance(10.0, &[0.0, 0.0], &[false, false]);
+        assert_eq!(tree.leaf_vtime(0), 0.0);
+        assert_eq!(tree.leaf_vtime(1), 0.0);
+    }
+}

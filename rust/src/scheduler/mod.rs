@@ -32,6 +32,7 @@ pub mod delay;
 pub mod disciplines;
 pub mod fair;
 pub mod fifo;
+pub mod hierarchy;
 
 /// Back-compat facade: HFSP is the size-based [`core`] driven by the
 /// FSP discipline. Historical import paths (`scheduler::hfsp::training`,
@@ -145,6 +146,11 @@ pub enum SchedulerKind {
     /// Any size-based discipline on the shared mechanism
     /// ([`core::SizeBasedScheduler`]); `cfg.discipline` selects which.
     SizeBased(core::SizeBasedConfig),
+    /// Multi-tenant pools → users → jobs tree
+    /// ([`hierarchy::HierarchicalScheduler`]); a single-leaf topology
+    /// lowers to the flat size-based scheduler at build time, so its
+    /// outcomes are byte-identical to [`SchedulerKind::SizeBased`].
+    Hierarchical(hierarchy::HierarchyConfig),
 }
 
 /// One row of the scheduler [`REGISTRY`].
@@ -182,6 +188,9 @@ fn make_las() -> SchedulerKind {
 }
 fn make_psbs() -> SchedulerKind {
     SchedulerKind::size_based(DisciplineKind::Psbs)
+}
+fn make_hier() -> SchedulerKind {
+    SchedulerKind::Hierarchical(hierarchy::HierarchyConfig::default())
 }
 
 /// The single source of truth for registered schedulers: drives
@@ -226,6 +235,12 @@ pub static REGISTRY: &[SchedulerEntry] = &[
         about: "size-based core + PSBS-style late-binding virtual time",
         make: make_psbs,
     },
+    SchedulerEntry {
+        name: "hier",
+        label: "HIER",
+        about: "hierarchical pools → users → jobs (weighted fair tree, per-pool disciplines)",
+        make: make_hier,
+    },
 ];
 
 impl SchedulerKind {
@@ -250,6 +265,13 @@ impl SchedulerKind {
             SchedulerKind::SizeBased(cfg) => {
                 Box::new(core::SizeBasedScheduler::new(cfg.clone()))
             }
+            SchedulerKind::Hierarchical(cfg) => match cfg.flat_equivalent() {
+                // Degenerate single-pool tree: build the flat scheduler
+                // itself, so the outcome (label included) is the flat
+                // outcome, byte for byte.
+                Some(flat) => Box::new(core::SizeBasedScheduler::new(flat)),
+                None => Box::new(hierarchy::HierarchicalScheduler::new(cfg.clone())),
+            },
         }
     }
 
@@ -258,6 +280,10 @@ impl SchedulerKind {
             SchedulerKind::Fifo => "FIFO",
             SchedulerKind::Fair(_) => "FAIR",
             SchedulerKind::SizeBased(cfg) => cfg.discipline.label(),
+            SchedulerKind::Hierarchical(cfg) => match cfg.flat_equivalent() {
+                Some(flat) => flat.discipline.label(),
+                None => "HIER",
+            },
         }
     }
 
@@ -272,13 +298,18 @@ impl SchedulerKind {
         if sigma <= 0.0 {
             return;
         }
-        if let SchedulerKind::SizeBased(cfg) = self {
-            if cfg.error_alpha == 0.0 && cfg.error_sigma == 0.0 {
-                cfg.error_sigma = sigma;
-                // Fixed tweak decorrelates the error stream from the
-                // workload/placement streams derived from the same seed.
-                cfg.error_seed = seed ^ 0xE57A_11FE;
-            }
+        let cfg = match self {
+            SchedulerKind::SizeBased(cfg) => cfg,
+            // The hierarchy's leaves inherit the base mechanism config,
+            // so the error model reaches every pool's estimator.
+            SchedulerKind::Hierarchical(h) => &mut h.base,
+            _ => return,
+        };
+        if cfg.error_alpha == 0.0 && cfg.error_sigma == 0.0 {
+            cfg.error_sigma = sigma;
+            // Fixed tweak decorrelates the error stream from the
+            // workload/placement streams derived from the same seed.
+            cfg.error_seed = seed ^ 0xE57A_11FE;
         }
     }
 
@@ -372,6 +403,23 @@ mod tests {
         };
         assert_eq!(cfg.discipline, DisciplineKind::Fsp);
         assert_eq!(SchedulerKind::hfsp().label(), "HFSP");
+    }
+
+    #[test]
+    fn hierarchical_label_lowers_for_single_pool_topologies() {
+        let single =
+            SchedulerKind::Hierarchical(hierarchy::HierarchyConfig::single(DisciplineKind::Las));
+        assert_eq!(single.label(), "LAS", "degenerate tree reports its leaf");
+        assert_eq!(SchedulerKind::from_name("hier").unwrap().label(), "HIER");
+    }
+
+    #[test]
+    fn fault_error_reaches_the_hierarchy_base_config() {
+        let mut k = SchedulerKind::Hierarchical(hierarchy::HierarchyConfig::default());
+        k.apply_fault_error(0.5, 42);
+        let SchedulerKind::Hierarchical(h) = &k else { unreachable!() };
+        assert_eq!(h.base.error_sigma, 0.5);
+        assert_eq!(h.base.error_seed, 42 ^ 0xE57A_11FE);
     }
 
     #[test]

@@ -13,7 +13,9 @@ use crate::faults::FaultSpec;
 use crate::scheduler::SchedulerKind;
 use crate::util::rng::{RngStreams, StreamId};
 use crate::workload::swim::FbWorkload;
-use crate::workload::{synthetic, ClosedSource, OpenArrivals, Workload, WorkloadSource};
+use crate::workload::{
+    synthetic, ClosedSource, OpenArrivals, TenantPopulation, Workload, WorkloadSource,
+};
 
 /// A workload axis value: how to obtain the job trace for one cell.
 ///
@@ -54,6 +56,12 @@ pub enum WorkloadSpec {
     /// arrival substream. Several `Open` axis values with different
     /// rates express a PSBS-style load-factor sweep.
     Open(OpenArrivals),
+    /// A Zipf tenant-population template ([`TenantPopulation`]): open
+    /// arrivals whose jobs carry pool/user tenant ids, for the
+    /// hierarchical-scheduler axis. The template is re-seeded from the
+    /// cell seed, so the tenant sequence is a per-cell deterministic
+    /// function of the grid seeds.
+    Population(TenantPopulation),
 }
 
 impl WorkloadSpec {
@@ -69,6 +77,7 @@ impl WorkloadSpec {
             WorkloadSpec::DecreasingSize { jobs, .. } => format!("decreasing-{jobs}"),
             WorkloadSpec::Fixed(wl) => wl.name.clone(),
             WorkloadSpec::Open(template) => template.name().to_string(),
+            WorkloadSpec::Population(template) => template.name().to_string(),
         }
     }
 
@@ -109,6 +118,18 @@ impl WorkloadSpec {
                 let jobs = std::iter::from_fn(|| src.next_job(&mut rng)).collect();
                 Workload::new(src.name(), jobs).expect("open generator assigns unique ids")
             }
+            WorkloadSpec::Population(template) => {
+                assert!(
+                    template.is_bounded(),
+                    "population workload {:?} has no horizon or job cap — it \
+                     would generate forever (sweep cells attach no halting probe)",
+                    template.name()
+                );
+                let mut src = template.clone().reseed(seed);
+                let mut rng = RngStreams::new(seed).stream(StreamId::Arrivals);
+                let jobs = std::iter::from_fn(|| src.next_job(&mut rng)).collect();
+                Workload::new(src.name(), jobs).expect("population assigns unique ids")
+            }
         }
     }
 
@@ -125,6 +146,15 @@ impl WorkloadSpec {
                     template.name()
                 );
                 Box::new(template.clone())
+            }
+            WorkloadSpec::Population(template) => {
+                assert!(
+                    template.is_bounded(),
+                    "population workload {:?} has no horizon or job cap — a \
+                     sweep cell could never drain it (no halting probe attached)",
+                    template.name()
+                );
+                Box::new(template.clone().reseed(seed))
             }
             closed => Box::new(ClosedSource::from(closed.realize(seed))),
         }

@@ -186,10 +186,16 @@ pub enum StreamId {
     /// API; closed sources never draw from it, so batch replays keep
     /// their historical byte-identical outcomes.
     Arrivals = 3,
+    /// Tenant-population synthesis: Zipf user-identity draws and job-shape
+    /// sampling inside [`crate::workload::population::TenantPopulation`].
+    /// Kept separate from `Arrivals` (which drives inter-arrival gaps) so
+    /// the *who submits what* sequence is byte-identical regardless of
+    /// faults, placement, or how the arrival clock is consumed.
+    Population = 4,
 }
 
 /// Number of named substreams derived by [`RngStreams::new`].
-pub const STREAM_COUNT: usize = 4;
+pub const STREAM_COUNT: usize = 5;
 
 /// Per-subsystem RNG substreams, all derived **eagerly and in a fixed
 /// order** from one master seed.
@@ -297,6 +303,74 @@ impl Zipf {
     }
 }
 
+/// Table-free Zipf-distributed rank in `[1, n]` with exponent `s > 0`,
+/// by Hörmann–Derflinger rejection inversion. O(1) memory and O(1)
+/// expected draws regardless of `n` — this is what lets the tenant
+/// population model 10⁶ users without materializing a CDF table
+/// ([`Zipf`] stays the small-`n` reference; the two agree in
+/// distribution, not draw-for-draw).
+#[derive(Clone, Copy, Debug)]
+pub struct ZipfStreaming {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    threshold: f64,
+}
+
+impl ZipfStreaming {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0, "ZipfStreaming: n must be positive");
+        assert!(s > 0.0, "ZipfStreaming: exponent must be positive");
+        let h = |x: f64| h_integral(x, s);
+        Self {
+            n,
+            s,
+            h_x1: h(1.5) - 1.0,
+            h_n: h(n as f64 + 0.5),
+            threshold: 2.0 - h_integral_inverse(h(2.5) - (-s * 2.0f64.ln()).exp(), s),
+        }
+    }
+
+    /// Draw a rank in `[1, n]`.
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> u64 {
+        loop {
+            let u = self.h_n + rng.next_f64() * (self.h_x1 - self.h_n);
+            let x = h_integral_inverse(u, self.s);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.threshold
+                || u >= h_integral(k + 0.5, self.s) - (-self.s * k.ln()).exp()
+            {
+                return k as u64;
+            }
+        }
+    }
+}
+
+/// ∫ (1+t)^(-s) dt rewritten as `helper((1-s)·ln x)·ln x`, stable at
+/// s → 1 (where it degenerates to ln x).
+fn h_integral(x: f64, s: f64) -> f64 {
+    let log_x = x.ln();
+    let q = (1.0 - s) * log_x;
+    // (e^q − 1)/q, with the q → 0 limit handled by expm1's precision
+    // plus an explicit series guard.
+    let helper = if q.abs() > 1e-8 { q.exp_m1() / q } else { 1.0 + q / 2.0 };
+    helper * log_x
+}
+
+/// Inverse of [`h_integral`].
+fn h_integral_inverse(x: f64, s: f64) -> f64 {
+    let mut t = x * (1.0 - s);
+    if t < -1.0 {
+        // Numerical round-off below the function's range; clamp to the
+        // boundary (matches the reference implementation).
+        t = -1.0;
+    }
+    // ln1p(t)/t with the t → 0 limit.
+    let helper = if t.abs() > 1e-8 { t.ln_1p() / t } else { 1.0 - t / 2.0 };
+    (helper * x).exp()
+}
+
 /// Weighted categorical choice: returns an index sampled proportionally to
 /// `weights`. Panics on empty or all-zero weights.
 pub fn weighted_choice<R: Rng>(rng: &mut R, weights: &[f64]) -> usize {
@@ -335,6 +409,60 @@ pub fn sample_indices<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn zipf_streaming_matches_the_table_zipf_in_distribution() {
+        // Rank frequencies from the rejection sampler must track the
+        // table-based reference: p(k) ∝ k^(-s).
+        let n = 50;
+        let s = 0.8;
+        let z = ZipfStreaming::new(n as u64, s);
+        let mut rng = Pcg64::seed_from_u64(11);
+        let mut counts = vec![0u64; n];
+        let draws = 200_000;
+        for _ in 0..draws {
+            let k = z.sample(&mut rng);
+            assert!((1..=n as u64).contains(&k));
+            counts[(k - 1) as usize] += 1;
+        }
+        let hn: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        for k in [1usize, 2, 5, 20] {
+            let expect = (k as f64).powf(-s) / hn;
+            let got = counts[k - 1] as f64 / draws as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "rank {k}: got {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_streaming_stays_in_range_for_huge_populations() {
+        // The whole point: 10⁶ ranks with no table. Also cover s = 1,
+        // the analytic singularity of the transform.
+        for s in [0.5, 1.0, 1.5] {
+            let z = ZipfStreaming::new(1_000_000, s);
+            let mut rng = Pcg64::seed_from_u64(29);
+            let draws = 100_000u64;
+            let mut top = 0u64;
+            for _ in 0..draws {
+                let k = z.sample(&mut rng);
+                assert!((1..=1_000_000).contains(&k), "s={s}");
+                if k == 1 {
+                    top += 1;
+                }
+            }
+            // Rank-1 frequency must track 1/H_n(s) — the skew survives
+            // the transform (for s = 0.5 that is only ≈ 5·10⁻⁴, so the
+            // check is a wide Poisson band, not a tight tolerance).
+            let hn: f64 = (1..=1_000_000u64).map(|k| (k as f64).powf(-s)).sum();
+            let expect = draws as f64 / hn;
+            assert!(
+                (top as f64) > 0.3 * expect && (top as f64) < 3.0 * expect,
+                "s={s}: rank-1 count {top}, expected ≈ {expect:.1}"
+            );
+        }
+    }
 
     #[test]
     fn pcg64_is_deterministic() {
@@ -500,18 +628,50 @@ mod tests {
         let mut b = streams.stream(StreamId::Faults);
         let mut c = streams.stream(StreamId::Scheduler);
         let mut d = streams.stream(StreamId::Arrivals);
+        let mut p = streams.stream(StreamId::Population);
         let mut w = RngStreams::workload(5);
         let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
         let zs: Vec<u64> = (0..64).map(|_| c.next_u64()).collect();
         let ds: Vec<u64> = (0..64).map(|_| d.next_u64()).collect();
+        let ps: Vec<u64> = (0..64).map(|_| p.next_u64()).collect();
         let ws: Vec<u64> = (0..64).map(|_| w.next_u64()).collect();
         assert_ne!(xs, ys);
         assert_ne!(ys, zs);
         assert_ne!(xs, zs);
         assert_ne!(zs, ds);
         assert_ne!(xs, ds);
+        assert_ne!(ds, ps);
+        assert_ne!(xs, ps);
         assert_ne!(xs, ws);
+    }
+
+    #[test]
+    fn appending_the_population_stream_kept_earlier_streams_stable() {
+        // Regression for the STREAM_COUNT=4 -> 5 bump: the first four
+        // named substreams are split *before* Population, so its addition
+        // must not shift a single draw in any of them. Pin against a
+        // hand-rolled four-split derivation.
+        for seed in [0u64, 99, 0xFEED] {
+            let mut master = Pcg64::seed_from_u64(seed);
+            let legacy: Vec<Pcg64> = (0..4).map(|_| master.split()).collect();
+            let streams = RngStreams::new(seed);
+            for (i, id) in [
+                StreamId::Placement,
+                StreamId::Faults,
+                StreamId::Scheduler,
+                StreamId::Arrivals,
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let mut old = legacy[i].clone();
+                let mut new = streams.stream(id);
+                for _ in 0..32 {
+                    assert_eq!(old.next_u64(), new.next_u64(), "stream {id:?} shifted");
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,12 +15,14 @@
 //! replay lazily through [`trace::TraceSource`].
 
 pub mod open;
+pub mod population;
 pub mod source;
 pub mod swim;
 pub mod synthetic;
 pub mod trace;
 
 pub use open::{JobMix, OpenArrivals};
+pub use population::TenantPopulation;
 pub use source::{ClosedSource, WorkloadSource};
 
 use crate::job::JobSpec;
@@ -110,6 +112,7 @@ mod tests {
             id,
             name: format!("j{id}"),
             class: JobClass::Small,
+            tenant: crate::job::TenantId::default(),
             submit_time: submit,
             map_durations: vec![10.0],
             reduce_durations: vec![5.0],

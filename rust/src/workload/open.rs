@@ -21,7 +21,7 @@
 
 use super::source::WorkloadSource;
 use super::swim::FbWorkload;
-use crate::job::{JobClass, JobSpec};
+use crate::job::{JobClass, JobSpec, TenantId};
 use crate::util::rng::{exponential, weighted_choice, Pcg64, Rng};
 
 /// Per-job shape sampler for open generators.
@@ -74,6 +74,7 @@ impl JobMix {
                 id,
                 name: format!("open-uni-{id}"),
                 class: JobClass::Small,
+                tenant: TenantId::default(),
                 submit_time: submit,
                 map_durations: vec![*task_s; *maps],
                 reduce_durations: vec![],

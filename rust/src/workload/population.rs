@@ -1,0 +1,278 @@
+//! Zipf tenant-population workload generation.
+//!
+//! Multi-tenant clusters serve a long-tailed user population: a few
+//! heavy hitters submit most of the jobs while thousands of occasional
+//! users fill the tail. [`TenantPopulation`] models that as an open
+//! Poisson arrival process (like [`OpenArrivals`](super::OpenArrivals))
+//! whose submitting *user* is drawn per job from a Zipf distribution
+//! over `n_users` identities, each user hashing stably onto one of
+//! `n_pools` pools. The resulting [`JobSpec::tenant`] drives the
+//! hierarchical scheduler's pool routing and the per-tenant fairness
+//! metrics.
+//!
+//! Memory does not scale with the population: user identities are
+//! *sampled*, never enumerated (the table-free
+//! [`ZipfStreaming`] sampler draws ranks in O(1) memory, and the
+//! user → pool map is a stateless hash), so 10⁶ users across thousands
+//! of pools cost the same as one.
+//!
+//! ## Determinism
+//!
+//! The *who submits what* sequence — user, pool, job shape — is drawn
+//! from a private RNG derived from the dedicated
+//! [`StreamId::Population`] substream of the generator's seed. Only the
+//! inter-arrival gaps come from the driver-supplied arrivals RNG. The
+//! tenant/shape sequence is therefore byte-identical no matter how the
+//! arrival clock is consumed and regardless of the faults or placement
+//! substreams — a property the determinism suite pins down.
+
+use super::open::JobMix;
+use super::source::WorkloadSource;
+use crate::job::{JobSpec, TenantId};
+use crate::util::rng::{exponential, Pcg64, RngStreams, StreamId, ZipfStreaming};
+
+/// Stateless user → pool assignment: a splitmix64 finalizer keeps pool
+/// membership stable for any user id without per-user state, and
+/// scatters consecutive ranks so the heavy hitters don't all land in
+/// pool 0.
+fn pool_of(user: u64, n_pools: u32) -> u32 {
+    let mut z = user.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % u64::from(n_pools)) as u32
+}
+
+/// Open Poisson arrivals from a Zipf-distributed user population.
+///
+/// Like [`OpenArrivals`](super::OpenArrivals), the struct is a
+/// *template*: cloning yields a fresh generator positioned at t = 0
+/// with an unconsumed identity stream, which is how the sweep engine
+/// gives every cell its own run.
+#[derive(Clone, Debug)]
+pub struct TenantPopulation {
+    name: String,
+    /// Population size (Zipf support); users are ranks `0..n_users`.
+    pub n_users: u64,
+    /// Number of pools users hash onto.
+    pub n_pools: u32,
+    /// Zipf skew exponent over user activity.
+    pub zipf_s: f64,
+    /// Mean arrival rate, jobs per simulated second.
+    pub rate: f64,
+    /// Stop submitting after this simulated time.
+    pub horizon_s: f64,
+    /// Hard cap on submitted jobs (`u64::MAX` = uncapped).
+    pub max_jobs: u64,
+    /// Shape sampler.
+    pub mix: JobMix,
+    seed: u64,
+    zipf: ZipfStreaming,
+    /// Private identity/shape RNG ([`StreamId::Population`]); never the
+    /// driver's arrivals stream.
+    tenant_rng: Pcg64,
+    clock: f64,
+    emitted: u64,
+}
+
+impl TenantPopulation {
+    /// A population of `n_users` users over `n_pools` pools submitting
+    /// at `rate` jobs/s until `horizon_s`, with the default 0.5 skew of
+    /// the multi-tenant trace literature.
+    pub fn new(n_users: u64, n_pools: u32, rate: f64, horizon_s: f64, seed: u64) -> Self {
+        assert!(n_users > 0, "population needs at least one user");
+        assert!(
+            n_users <= u64::from(u32::MAX),
+            "user ids are u32 ({n_users} users requested)"
+        );
+        assert!(n_pools > 0, "population needs at least one pool");
+        assert!(rate > 0.0, "arrival rate must be positive");
+        let zipf_s = 0.5;
+        Self {
+            name: format!("pop-u{n_users}-p{n_pools}-r{rate}"),
+            n_users,
+            n_pools,
+            zipf_s,
+            rate,
+            horizon_s,
+            max_jobs: u64::MAX,
+            mix: JobMix::fb(),
+            seed,
+            zipf: ZipfStreaming::new(n_users, zipf_s),
+            tenant_rng: RngStreams::new(seed).stream(StreamId::Population),
+            clock: 0.0,
+            emitted: 0,
+        }
+    }
+
+    /// Replace the Zipf exponent (builder style).
+    pub fn skew(mut self, s: f64) -> Self {
+        self.zipf_s = s;
+        self.zipf = ZipfStreaming::new(self.n_users, s);
+        self
+    }
+
+    /// Replace the job mix (builder style).
+    pub fn mix(mut self, mix: JobMix) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    /// Cap the number of submitted jobs (builder style).
+    pub fn max_jobs(mut self, max: u64) -> Self {
+        self.max_jobs = max;
+        self
+    }
+
+    /// Override the display name (sweep labels).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Re-derive the identity stream from a new seed (the CLI passes
+    /// the run seed so `--seed` governs the tenant sequence too).
+    pub fn reseed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self.tenant_rng = RngStreams::new(seed).stream(StreamId::Population);
+        self
+    }
+
+    /// Jobs emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Whether the stream terminates on its own (see
+    /// [`OpenArrivals::is_bounded`](super::OpenArrivals::is_bounded)).
+    pub fn is_bounded(&self) -> bool {
+        self.horizon_s.is_finite() || self.max_jobs < u64::MAX
+    }
+}
+
+impl WorkloadSource for TenantPopulation {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn next_job(&mut self, rng: &mut Pcg64) -> Option<JobSpec> {
+        if self.emitted >= self.max_jobs {
+            return None;
+        }
+        self.clock += exponential(rng, 1.0 / self.rate);
+        if self.clock > self.horizon_s {
+            return None;
+        }
+        let id = self.emitted;
+        self.emitted += 1;
+        // Identity and shape from the private population stream only.
+        let user = self.zipf.sample(&mut self.tenant_rng) - 1;
+        let mut spec = self.mix.sample(&mut self.tenant_rng, id, self.clock);
+        spec.tenant = TenantId::new(pool_of(user, self.n_pools), user as u32);
+        spec.name = format!("pop-{id}-u{user}");
+        Some(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SeedableRng;
+
+    fn drain(src: &mut TenantPopulation, arrivals: &mut Pcg64) -> Vec<JobSpec> {
+        std::iter::from_fn(|| src.next_job(arrivals)).collect()
+    }
+
+    #[test]
+    fn population_arrivals_are_ordered_dense_and_bounded() {
+        let tpl = TenantPopulation::new(1_000, 10, 2.0, 500.0, 7)
+            .mix(JobMix::Uniform { maps: 1, task_s: 1.0 });
+        assert!(tpl.is_bounded());
+        let mut rng = Pcg64::seed_from_u64(7);
+        let jobs = drain(&mut tpl.clone(), &mut rng);
+        assert!((jobs.len() as f64 - 1_000.0).abs() < 200.0, "{}", jobs.len());
+        let mut last = 0.0;
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i as u64);
+            assert!(j.submit_time >= last && j.submit_time <= 500.0);
+            last = j.submit_time;
+            assert!(u64::from(j.tenant.user) < 1_000);
+            assert!(j.tenant.pool < 10);
+        }
+    }
+
+    #[test]
+    fn activity_is_zipf_skewed_and_pools_spread() {
+        let tpl = TenantPopulation::new(10_000, 100, 10.0, 2_000.0, 3)
+            .mix(JobMix::Uniform { maps: 1, task_s: 1.0 });
+        let mut rng = Pcg64::seed_from_u64(3);
+        let jobs = drain(&mut tpl.clone(), &mut rng);
+        assert!(jobs.len() > 10_000);
+        let mut by_user = std::collections::HashMap::<u32, usize>::new();
+        let mut pools = std::collections::HashSet::new();
+        for j in &jobs {
+            *by_user.entry(j.tenant.user).or_default() += 1;
+            pools.insert(j.tenant.pool);
+        }
+        // Long tail: far fewer distinct users than jobs, and the top
+        // user dwarfs the median.
+        assert!(by_user.len() < jobs.len() / 2);
+        let top = by_user.values().copied().max().unwrap();
+        assert!(top > jobs.len() / 200, "top user {top} of {}", jobs.len());
+        // The hash spreads users over (nearly) all pools.
+        assert!(pools.len() > 90, "only {} pools hit", pools.len());
+    }
+
+    #[test]
+    fn tenant_sequence_is_independent_of_the_arrival_stream() {
+        // Same template, two *different* arrival RNGs: submit times
+        // differ, but the (user, pool, shape) sequence is identical —
+        // the identity stream is private.
+        let tpl = TenantPopulation::new(50_000, 64, 5.0, 1_000.0, 42);
+        let mut ra = Pcg64::seed_from_u64(1);
+        let mut rb = Pcg64::seed_from_u64(999);
+        let a = drain(&mut tpl.clone(), &mut ra);
+        let b = drain(&mut tpl.clone(), &mut rb);
+        let n = a.len().min(b.len());
+        assert!(n > 1_000);
+        let mut times_differ = false;
+        for (x, y) in a[..n].iter().zip(&b[..n]) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.map_durations, y.map_durations);
+            assert_eq!(x.reduce_durations, y.reduce_durations);
+            times_differ |= x.submit_time != y.submit_time;
+        }
+        assert!(times_differ, "different arrival RNGs must shift the clock");
+    }
+
+    #[test]
+    fn reseed_changes_the_identity_stream_deterministically() {
+        let tpl = TenantPopulation::new(1_000, 8, 5.0, 200.0, 1);
+        let mut r1 = Pcg64::seed_from_u64(5);
+        let mut r2 = Pcg64::seed_from_u64(5);
+        let a = drain(&mut tpl.clone(), &mut r1);
+        let b = drain(&mut tpl.clone().reseed(1), &mut r2);
+        assert_eq!(a.len(), b.len(), "reseed(same) is a no-op");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+        }
+        let mut r3 = Pcg64::seed_from_u64(5);
+        let c = drain(&mut tpl.clone().reseed(2), &mut r3);
+        let n = a.len().min(c.len());
+        assert!(
+            a[..n].iter().zip(&c[..n]).any(|(x, y)| x.tenant != y.tenant),
+            "different seeds draw different tenants"
+        );
+    }
+
+    #[test]
+    fn pool_hash_is_stable_and_in_range() {
+        for u in [0u64, 1, 999_999, u64::MAX] {
+            let p = pool_of(u, 100);
+            assert_eq!(p, pool_of(u, 100), "stable");
+            assert!(p < 100);
+        }
+        // 1-pool degenerate case maps everyone to pool 0.
+        assert_eq!(pool_of(123, 1), 0);
+    }
+}

@@ -186,6 +186,7 @@ impl FbWorkload {
             id,
             name: format!("fb-{}-{id}", class.name()),
             class,
+            tenant: crate::job::TenantId::default(),
             submit_time: submit,
             map_durations,
             reduce_durations,

@@ -1,7 +1,7 @@
 //! Synthetic workloads for the paper's micro-benchmarks and illustrations.
 
 use super::Workload;
-use crate::job::{JobClass, JobSpec};
+use crate::job::{JobClass, JobSpec, TenantId};
 
 /// The Fig. 7 preemption workload (§4.3 "Job preemption disciplines"):
 /// a small cluster of 4 machines × 2 reduce slots; five reduce-only jobs.
@@ -16,6 +16,7 @@ pub fn fig7_workload() -> Workload {
         id: 1,
         name: "fig7-j1".into(),
         class: JobClass::Large,
+        tenant: TenantId::default(),
         submit_time: 140.0,
         map_durations: vec![],
         reduce_durations: vec![500.0; 11],
@@ -25,6 +26,7 @@ pub fn fig7_workload() -> Workload {
             id: i,
             name: format!("fig7-j{i}"),
             class: JobClass::Small,
+            tenant: TenantId::default(),
             submit_time: 150.0,
             map_durations: vec![],
             reduce_durations: vec![60.0; n_red],
@@ -46,6 +48,7 @@ pub fn decreasing_size_workload(n_jobs: usize, slots_worth: usize, base_task_s: 
                 id: i as u64 + 1,
                 name: format!("dec-{i}"),
                 class: JobClass::Medium,
+                tenant: TenantId::default(),
                 submit_time: 5.0 * i as f64,
                 map_durations: vec![],
                 reduce_durations: vec![task_s.max(10.0); slots_worth],
@@ -69,6 +72,7 @@ pub fn fig1_workload(server_slots: usize, waves: usize) -> Workload {
         id,
         name: format!("fig1-j{id}"),
         class: JobClass::Small,
+        tenant: TenantId::default(),
         submit_time: submit,
         map_durations: vec![size_s / waves as f64; server_slots * waves],
         reduce_durations: vec![],
@@ -91,6 +95,7 @@ pub fn fig2_workload(total_slots: usize, waves: usize) -> Workload {
             id,
             name: format!("fig2-j{id}"),
             class: JobClass::Small,
+            tenant: TenantId::default(),
             submit_time: submit,
             map_durations: vec![size_s / waves as f64; width * waves],
             reduce_durations: vec![],
@@ -116,6 +121,7 @@ pub fn uniform_batch(n: usize, maps_per_job: usize, task_s: f64) -> Workload {
             id: i as u64 + 1,
             name: format!("uni-{i}"),
             class: JobClass::Medium,
+            tenant: TenantId::default(),
             submit_time: 0.0,
             map_durations: vec![task_s; maps_per_job],
             reduce_durations: vec![],

@@ -20,7 +20,7 @@
 
 use super::source::WorkloadSource;
 use super::Workload;
-use crate::job::{JobClass, JobSpec};
+use crate::job::{JobClass, JobSpec, TenantId};
 use crate::util::json::{self, Json};
 use crate::util::rng::Pcg64;
 use std::io::{BufRead, Write};
@@ -48,7 +48,27 @@ pub fn job_to_json(job: &JobSpec) -> Json {
     o.set("submit", job.submit_time.into());
     o.set("maps", job.map_durations.clone().into());
     o.set("reduces", job.reduce_durations.clone().into());
+    // Tenant keys are only emitted for multi-tenant jobs, so every
+    // pre-hierarchy trace (and its golden bytes) is unchanged.
+    if !job.tenant.is_default() {
+        o.set("pool", u64::from(job.tenant.pool).into());
+        o.set("user", u64::from(job.tenant.user).into());
+    }
     o
+}
+
+/// Decode the optional tenant keys (absent = the single-tenant default).
+fn tenant_from_json(v: &Json) -> anyhow::Result<TenantId> {
+    let field = |key: &str| -> anyhow::Result<u32> {
+        match v.get(key) {
+            None => Ok(0),
+            Some(x) => x
+                .as_u64()
+                .and_then(|n| u32::try_from(n).ok())
+                .ok_or_else(|| anyhow::anyhow!("field {key:?} must be a u32")),
+        }
+    };
+    Ok(TenantId::new(field("pool")?, field("user")?))
 }
 
 /// Decode one job from a JSON object.
@@ -82,6 +102,7 @@ pub fn job_from_json(v: &Json) -> anyhow::Result<JobSpec> {
                 .as_str()
                 .ok_or_else(|| anyhow::anyhow!("class must be a string"))?,
         )?,
+        tenant: tenant_from_json(v)?,
         submit_time: get("submit")?
             .as_f64()
             .filter(|t| *t >= 0.0)
@@ -277,6 +298,20 @@ mod tests {
         assert!(from_jsonl("t", bad).is_err());
         // Unknown class.
         let bad = r#"{"id":1,"name":"x","class":"huge","submit":0,"maps":[5],"reduces":[]}"#;
+        assert!(from_jsonl("t", bad).is_err());
+    }
+
+    #[test]
+    fn tenant_keys_roundtrip_and_default_is_omitted() {
+        let mut j = crate::workload::synthetic::fig7_workload().jobs[0].clone();
+        let plain = job_to_json(&j).to_string_compact();
+        assert!(!plain.contains("pool"), "default tenant emits no keys: {plain}");
+        j.tenant = TenantId::new(3, 71);
+        let v = json::parse(&job_to_json(&j).to_string_compact()).unwrap();
+        let back = job_from_json(&v).unwrap();
+        assert_eq!(back.tenant, TenantId::new(3, 71));
+        // Malformed tenant values are hard errors.
+        let bad = r#"{"id":1,"name":"x","class":"small","submit":0,"maps":[5],"reduces":[],"pool":-3}"#;
         assert!(from_jsonl("t", bad).is_err());
     }
 

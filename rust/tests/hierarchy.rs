@@ -1,0 +1,341 @@
+//! Hierarchical scheduler integration tests.
+//!
+//! Four properties, matching the ISSUE's acceptance criteria:
+//!
+//! 1. malformed pool topologies are hard errors — one test per failure
+//!    class (unknown parent, non-positive weight, duplicate name,
+//!    parent cycle), through the same [`Topology`] entry points the CLI
+//!    uses;
+//! 2. a **single-pool** hierarchy is *byte-identical* to the flat
+//!    size-based scheduler (the build-time lowering, checked across the
+//!    whole `testkit::scenarios` matrix and both event-queue backends);
+//! 3. a 3-pool tree with weights 3/2/1 under saturating, weight-
+//!    proportional load converges to 3/2/1 **slot shares** within 5 %
+//!    (measured by [`TenantProbe`]);
+//! 4. the Zipf population source is deterministic per seed and its
+//!    tenant sequence is independent of the placement/fault RNG
+//!    substreams (same identities under `none` and `hot-churn` faults).
+
+use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use hfsp::cluster::ClusterConfig;
+use hfsp::faults::{FaultConfig, FaultSpec};
+use hfsp::job::{JobClass, JobSpec, TenantId};
+use hfsp::metrics::{Probe, ProbeEvent, TenantProbe};
+use hfsp::scheduler::core::SizeBasedConfig;
+use hfsp::scheduler::disciplines::DisciplineKind;
+use hfsp::scheduler::hierarchy::{HierarchyConfig, PoolDecl, Topology};
+use hfsp::scheduler::SchedulerKind;
+use hfsp::session::Simulation;
+use hfsp::sim::{QueueKind, Time};
+use hfsp::testkit::scenarios::matrix;
+use hfsp::workload::{JobMix, TenantPopulation, Workload};
+
+// -- 1. malformed topologies are hard errors ------------------------------
+
+#[test]
+fn unknown_parent_is_rejected() {
+    let err = Topology::from_json_str(
+        r#"{"pools": [{"name": "etl", "parent": "missing", "weight": 1}]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("unknown parent") && err.contains("missing"), "{err}");
+}
+
+#[test]
+fn non_positive_weights_are_rejected() {
+    for w in ["0", "-1", "-0.5"] {
+        let err = Topology::from_json_str(&format!(
+            r#"{{"pools": [{{"name": "p", "weight": {w}}}]}}"#
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("non-positive weight"), "weight {w}: {err}");
+    }
+}
+
+#[test]
+fn duplicate_pool_names_are_rejected() {
+    let err = Topology::from_json_str(
+        r#"{"pools": [{"name": "p", "weight": 1}, {"name": "p", "weight": 2}]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("duplicate pool name"), "{err}");
+}
+
+#[test]
+fn parent_cycles_are_rejected() {
+    let err = Topology::from_json_str(
+        r#"{"pools": [
+            {"name": "a", "parent": "c", "weight": 1},
+            {"name": "b", "parent": "a", "weight": 1},
+            {"name": "c", "parent": "b", "weight": 1}
+        ]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("cycle"), "{err}");
+}
+
+#[test]
+fn from_arg_propagates_file_and_parse_errors() {
+    // The CLI funnels --pools through from_arg: a missing file and a
+    // malformed document must both surface as errors, not defaults.
+    let err = Topology::from_arg("/nonexistent/pools.json").unwrap_err();
+    assert!(format!("{err:#}").contains("reading pool topology"), "{err:#}");
+
+    let dir = std::env::temp_dir().join("hfsp-hier-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad-topology.json");
+    std::fs::write(&path, r#"{"pools": [{"name": "p", "weight": -3}]}"#).unwrap();
+    let err = Topology::from_arg(path.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("non-positive weight"), "{err:#}");
+}
+
+// -- 2. degenerate hierarchy == flat scheduler, byte for byte -------------
+
+/// Full `Debug` output with the only wall-clock-dependent field zeroed
+/// (same idiom as the queue differential testbed).
+fn outcome_fingerprint(mut o: SimOutcome) -> String {
+    o.wall_ms = 0.0;
+    format!("{o:?}")
+}
+
+#[test]
+fn single_pool_hierarchy_is_byte_identical_to_the_flat_scheduler() {
+    // FSP exercises the estimate-driven path, LAS the size-oblivious
+    // one; the matrix covers workload shapes × fault environments ×
+    // seeds, and each cell runs under both queue backends.
+    for sc in matrix(&[1, 2]) {
+        for queue in [QueueKind::Heap, QueueKind::Calendar] {
+            for discipline in [DisciplineKind::Fsp, DisciplineKind::Las] {
+                let mut cfg = sc.cfg.clone();
+                cfg.queue = queue;
+                let flat_kind = SchedulerKind::SizeBased(SizeBasedConfig {
+                    discipline,
+                    ..Default::default()
+                });
+                let hier_kind = SchedulerKind::Hierarchical(HierarchyConfig::single(discipline));
+                assert_eq!(
+                    hier_kind.label(),
+                    flat_kind.label(),
+                    "single-pool hierarchy must lower to the flat label"
+                );
+                let flat = run_simulation(&cfg, flat_kind, &sc.workload);
+                let hier = run_simulation(&cfg, hier_kind, &sc.workload);
+                assert_eq!(
+                    outcome_fingerprint(flat),
+                    outcome_fingerprint(hier),
+                    "degenerate hierarchy diverged from flat [{} / {queue:?} / {discipline:?}]",
+                    sc.label
+                );
+            }
+        }
+    }
+}
+
+// -- 3. weighted shares converge ------------------------------------------
+
+fn pool_decl(name: &str, weight: f64) -> PoolDecl {
+    PoolDecl {
+        name: name.into(),
+        parent: None,
+        weight,
+        discipline: Some(DisciplineKind::Fsp),
+    }
+}
+
+#[test]
+fn three_pool_321_weights_converge_to_slot_shares_within_5_percent() {
+    let topology = Topology::from_pools(vec![
+        pool_decl("gold", 3.0),
+        pool_decl("silver", 2.0),
+        pool_decl("bronze", 1.0),
+    ])
+    .unwrap();
+    let kind = SchedulerKind::Hierarchical(HierarchyConfig::with_topology(topology));
+
+    // Weight-proportional saturating load: 6 nodes × 4 map slots = 24
+    // slots split 12/8/4 (integer targets), fed by 360/240/120 one-map
+    // jobs, so every pool stays backlogged and they drain together —
+    // the measured slot-share is the steady-state share, not a tail
+    // artifact.
+    let mut jobs = Vec::new();
+    for (pool, n) in [(0u32, 360usize), (1, 240), (2, 120)] {
+        for i in 0..n {
+            let id = jobs.len() as u64 + 1;
+            jobs.push(JobSpec {
+                id,
+                name: format!("p{pool}-{i}"),
+                class: JobClass::Small,
+                tenant: TenantId::new(pool, (i % 5) as u32),
+                submit_time: 0.001 * id as f64,
+                map_durations: vec![10.0],
+                reduce_durations: vec![],
+            });
+        }
+    }
+    let wl = Workload::new("wfq-321", jobs).unwrap();
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 6,
+            ..Default::default()
+        },
+        seed: 42,
+        ..Default::default()
+    };
+    let mut probe = TenantProbe::new();
+    let outcome = Simulation::new(cfg)
+        .scheduler(kind)
+        .workload(wl.into_source())
+        .probe(&mut probe)
+        .run();
+    assert_eq!(outcome.scheduler, "HIER");
+    assert_eq!(outcome.sojourn.len(), 720, "every job must finish");
+    assert_eq!(outcome.counters.rejected_actions, 0);
+
+    let shares = probe.shares();
+    assert_eq!(shares.len(), 3);
+    for (pool, want) in [(0u32, 3.0 / 6.0), (1, 2.0 / 6.0), (2, 1.0 / 6.0)] {
+        let got = shares.iter().find(|(p, _)| *p == pool).unwrap().1;
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel < 0.05,
+            "pool {pool}: slot share {got:.4}, want {want:.4} (off by {:.1}%)",
+            rel * 100.0
+        );
+    }
+    // With proportional load the per-pool experience should also be
+    // broadly even — Jain over mean sojourns near 1.
+    assert!(
+        probe.jain_mean_sojourn() > 0.9,
+        "jain(mean sojourn) = {:.3}",
+        probe.jain_mean_sojourn()
+    );
+}
+
+// -- 4. population determinism & substream independence -------------------
+
+/// Records every `JobArrived` tenant identity, in arrival order.
+#[derive(Default)]
+struct ArrivalLog {
+    tenants: Vec<(u32, u32)>,
+}
+
+impl Probe for ArrivalLog {
+    fn name(&self) -> &'static str {
+        "arrival-log"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &ProbeEvent) {
+        if let ProbeEvent::JobArrived { tenant, .. } = event {
+            self.tenants.push((tenant.pool, tenant.user));
+        }
+    }
+}
+
+fn population_run(seed: u64, faults: FaultConfig) -> (SimOutcome, Vec<(u32, u32)>) {
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 4,
+            ..Default::default()
+        },
+        seed,
+        faults,
+        ..Default::default()
+    };
+    let src = TenantPopulation::new(5_000, 50, 4.0, f64::INFINITY, seed)
+        .mix(JobMix::Uniform { maps: 1, task_s: 4.0 })
+        .max_jobs(300);
+    let mut log = ArrivalLog::default();
+    let outcome = Simulation::new(cfg)
+        .scheduler(SchedulerKind::Hierarchical(HierarchyConfig::default()))
+        .workload(src)
+        .probe(&mut log)
+        .run();
+    (outcome, log.tenants)
+}
+
+#[test]
+fn population_runs_are_deterministic_per_seed() {
+    let (a, ta) = population_run(42, FaultConfig::disabled());
+    let (b, tb) = population_run(42, FaultConfig::disabled());
+    assert_eq!(a.sojourn.len(), 300, "bounded population session must drain");
+    assert_eq!(ta, tb, "tenant sequence must be seed-deterministic");
+    assert_eq!(outcome_fingerprint(a), outcome_fingerprint(b));
+
+    let (_, tc) = population_run(43, FaultConfig::disabled());
+    assert_ne!(ta, tc, "different seeds must draw different tenants");
+}
+
+#[test]
+fn tenant_sequence_is_independent_of_the_fault_substream() {
+    // Faults perturb placement and node lifetimes (their own RNG
+    // streams) but must not shift which tenants submit: the population
+    // draws identities from the dedicated Population substream.
+    let churn = FaultSpec::from_name("churn").map_or_else(
+        |_| FaultConfig {
+            enabled: true,
+            mtbf_s: 600.0,
+            repair_s: 60.0,
+            permanent_fraction: 0.0,
+            ..FaultConfig::disabled()
+        },
+        |s| s.config,
+    );
+    let (_, quiet) = population_run(7, FaultConfig::disabled());
+    let (_, churned) = population_run(7, churn);
+    assert_eq!(
+        quiet, churned,
+        "fault RNG consumption leaked into the tenant identity stream"
+    );
+}
+
+// -- sweep plumbing smoke --------------------------------------------------
+
+#[test]
+fn population_sweep_report_is_identical_across_thread_counts() {
+    use hfsp::sweep::{run_grid_threads, ExperimentGrid, WorkloadSpec};
+
+    let pop = TenantPopulation::new(2_000, 30, 3.0, 45.0, 0)
+        .mix(JobMix::Uniform { maps: 1, task_s: 4.0 });
+    let grid = ExperimentGrid::new("hier-threads")
+        .scheduler(SchedulerKind::Hierarchical(HierarchyConfig::default()))
+        .scheduler(SchedulerKind::hfsp())
+        .workload(WorkloadSpec::Population(pop))
+        .nodes(&[4])
+        .seeds(&[1, 2]);
+    let serial = run_grid_threads(&grid, 1).aggregate().to_json().to_string_pretty();
+    let threaded = run_grid_threads(&grid, 4).aggregate().to_json().to_string_pretty();
+    assert_eq!(
+        serial, threaded,
+        "population sweep aggregates must be byte-identical across thread counts"
+    );
+}
+
+#[test]
+fn population_sweep_cells_run_hierarchical_schedulers() {
+    use hfsp::sweep::{run_grid, ExperimentGrid, WorkloadSpec};
+
+    let pop = TenantPopulation::new(1_000, 12, 2.0, 60.0, 0)
+        .mix(JobMix::Uniform { maps: 1, task_s: 4.0 });
+    let grid = ExperimentGrid::new("hier-smoke")
+        .scheduler(SchedulerKind::Hierarchical(HierarchyConfig::default()))
+        .scheduler(SchedulerKind::Hierarchical(HierarchyConfig::single(
+            DisciplineKind::Srpt,
+        )))
+        .workload(WorkloadSpec::Population(pop))
+        .nodes(&[4])
+        .seeds(&[42]);
+    let results = run_grid(&grid);
+    assert_eq!(results.len(), 2);
+    for cell in &results.cells {
+        assert!(cell.outcome.stream_error.is_none());
+        assert!(
+            cell.outcome.sojourn.len() > 0,
+            "a 60 s population cell must finish jobs"
+        );
+        assert_eq!(cell.outcome.counters.rejected_actions, 0);
+    }
+}

@@ -139,6 +139,7 @@ fn mk_job(id: JobId) -> Job {
         id,
         name: format!("j{id}"),
         class: JobClass::Small,
+        tenant: hfsp::job::TenantId::default(),
         submit_time: 0.0,
         map_durations: vec![1.0, 2.0],
         reduce_durations: vec![3.0],

@@ -31,6 +31,7 @@ fn fifo_serves_jobs_in_submission_order() {
             id: 1,
             name: "a".into(),
             class: JobClass::Medium,
+            tenant: hfsp::job::TenantId::default(),
             submit_time: 0.0,
             map_durations: vec![30.0; 8],
             reduce_durations: vec![],
@@ -39,6 +40,7 @@ fn fifo_serves_jobs_in_submission_order() {
             id: 2,
             name: "b".into(),
             class: JobClass::Medium,
+            tenant: hfsp::job::TenantId::default(),
             submit_time: 1.0,
             map_durations: vec![30.0; 8],
             reduce_durations: vec![],

@@ -299,6 +299,7 @@ fn arrivals_win_exact_time_ties_against_heartbeats() {
             id: 1,
             name: "tie-1".into(),
             class: JobClass::Small,
+            tenant: hfsp::job::TenantId::default(),
             submit_time: 1.0,
             map_durations: vec![0.5],
             reduce_durations: vec![],
@@ -307,6 +308,7 @@ fn arrivals_win_exact_time_ties_against_heartbeats() {
             id: 2,
             name: "tie-2".into(),
             class: JobClass::Small,
+            tenant: hfsp::job::TenantId::default(),
             submit_time: 3.0,
             map_durations: vec![5.0],
             reduce_durations: vec![],

@@ -186,6 +186,7 @@ fn random_workload(rng: &mut Pcg64, n_jobs: usize) -> Workload {
                 id: i as u64 + 1,
                 name: format!("p{i}"),
                 class: JobClass::Medium,
+                tenant: hfsp::job::TenantId::default(),
                 submit_time: rng.gen_range_f64(0.0, 120.0),
                 map_durations: vec![map_d; n_maps],
                 reduce_durations: vec![red_d; n_reduces],
