@@ -341,6 +341,35 @@ pub fn worst_regression(rows: &[CompareRow]) -> f64 {
     rows.iter().map(CompareRow::regression).fold(0.0, f64::max)
 }
 
+/// Fold CI-measured `artifact` rows into a `committed` trajectory
+/// (`hfsp bench --merge-baseline`): rows join on (scenario, scheduler,
+/// queue) with the queue stamp matched exactly — a provisional row is
+/// replaced only by a measurement from the same backend. Matched
+/// committed rows are replaced in place (file order preserved),
+/// unmatched artifact rows are appended, and committed rows the
+/// artifact never measured are kept. Returns `(replaced, appended)`.
+pub fn merge_baselines(
+    committed: &mut Vec<ScenarioRecord>,
+    artifact: &[ScenarioRecord],
+) -> (usize, usize) {
+    let (mut replaced, mut appended) = (0, 0);
+    for row in artifact {
+        match committed.iter_mut().find(|c| {
+            c.scenario == row.scenario && c.scheduler == row.scheduler && c.queue == row.queue
+        }) {
+            Some(slot) => {
+                *slot = row.clone();
+                replaced += 1;
+            }
+            None => {
+                committed.push(row.clone());
+                appended += 1;
+            }
+        }
+    }
+    (replaced, appended)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -455,6 +484,29 @@ mod tests {
         // Unstamped baseline (v1): wildcard, still joins.
         let rows = compare_trajectories(&[record("a", 100_000.0)], &[stamped]);
         assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn merge_baselines_replaces_appends_and_preserves() {
+        let mut committed = vec![
+            record("a", 1_000.0).with_queue("calendar"),
+            record("b", 1_000.0).with_queue("calendar"),
+        ];
+        let artifact = vec![
+            record("a", 90_000.0).with_queue("calendar"), // replaces
+            record("a", 80_000.0).with_queue("heap"),     // other backend: appends
+            record("c", 70_000.0).with_queue("calendar"), // new scenario: appends
+        ];
+        let (replaced, appended) = merge_baselines(&mut committed, &artifact);
+        assert_eq!((replaced, appended), (1, 2));
+        assert_eq!(committed.len(), 4);
+        // In-place replacement keeps file order; untouched rows survive.
+        assert_eq!(committed[0].scenario, "a");
+        assert_eq!(committed[0].events_per_sec, 90_000.0);
+        assert_eq!(committed[1].scenario, "b");
+        assert_eq!(committed[1].events_per_sec, 1_000.0);
+        assert_eq!(committed[2].queue.as_deref(), Some("heap"));
+        assert_eq!(committed[3].scenario, "c");
     }
 
     #[test]

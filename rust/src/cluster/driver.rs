@@ -57,20 +57,26 @@
 //! byte-identical to the historical batch path (same event order, same
 //! event count, same statistics).
 
+use crate::cluster::partition::Partition;
 use crate::cluster::{Cluster, ClusterConfig, Hdfs};
 use crate::faults::plan::FaultEventKind;
-use crate::faults::{pick_speculation_candidate, FaultConfig, FaultPlan, FaultStats};
+use crate::faults::{pick_speculation_candidate, FaultConfig, FaultEvent, FaultPlan, FaultStats};
 use crate::job::task::NodeId;
 use crate::job::{Job, JobId, JobSpec, JobTable, Phase, TaskRef};
 use crate::metrics::probe::{KillCause, Probe, ProbeEvent, ProbeStack};
 use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
-use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
-use crate::sim::{CalendarQueue, Engine, EventQueue, PendingQueue, QueueKind, StopReason, Time};
+use crate::scheduler::{Action, DemandDigest, SchedView, Scheduler, SchedulerKind};
+use crate::sim::shard::LaneRouter;
+use crate::sim::{
+    CalendarQueue, Engine, EventQueue, MergeMode, PendingQueue, QueueKind, ShardSpec,
+    ShardedQueue, StopReason, Time,
+};
 use crate::util::config::Config;
 use crate::util::rng::{Pcg64, RngStreams, StreamId};
 use crate::util::timeline::TimelineSet;
 use crate::workload::{ClosedSource, Workload, WorkloadSource};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc;
 
 pub use crate::metrics::probe::ActionCounters;
 
@@ -101,6 +107,12 @@ pub struct SimConfig {
     /// `heap` is the binary-heap reference — both deliver the exact same
     /// `(time, class, seq)` order, so outcomes are byte-identical).
     pub queue: QueueKind,
+    /// Sharded execution (`--shards`/`--merge`/`--window`): partition the
+    /// cluster into `count` shards. `Deterministic` merge k-way merges
+    /// the per-shard timelines into the exact serial order (byte-identical
+    /// outcome); `Fast` merge runs the shards on real threads under a
+    /// conservative window barrier. Default: serial (`count == 1`).
+    pub shards: ShardSpec,
 }
 
 impl Default for SimConfig {
@@ -115,6 +127,7 @@ impl Default for SimConfig {
             event_limit: 500_000_000,
             faults: FaultConfig::disabled(),
             queue: QueueKind::default(),
+            shards: ShardSpec::default(),
         }
     }
 }
@@ -132,6 +145,13 @@ impl SimConfig {
             Ok(kind) => self.queue = kind,
             Err(e) => log::warn!("{e}; keeping queue backend {:?}", self.queue.name()),
         }
+        self.shards.count = c.get_usize("sim.shards", self.shards.count);
+        match MergeMode::from_name(c.get_str("sim.merge", self.shards.merge.name())) {
+            Ok(mode) => self.shards.merge = mode,
+            Err(e) => log::warn!("{e}; keeping merge mode {:?}", self.shards.merge.name()),
+        }
+        let window = c.get_f64("sim.window_s", self.shards.window_s.unwrap_or(0.0));
+        self.shards.window_s = (window > 0.0).then_some(window);
         self.cluster.nodes = c.get_usize("cluster.nodes", self.cluster.nodes);
         self.cluster.map_slots = c.get_usize("cluster.map_slots", self.cluster.map_slots);
         self.cluster.reduce_slots =
@@ -292,6 +312,11 @@ struct Driver<'s, 'w, 'p> {
     /// deterministic for byte-identical reruns).
     spec: BTreeMap<TaskRef, SpecAttempt>,
     spec_seq: u64,
+    /// Fast-merge shard worker: more jobs may be injected at the next
+    /// window boundary even though the local source is exhausted, so the
+    /// session must not report itself drained (heartbeat chains stay
+    /// alive between windows). Cleared by the coordinator's `Finish`.
+    external_feed: bool,
 }
 
 /// Run `workload` under `kind` on the cluster described by `cfg`.
@@ -314,6 +339,15 @@ pub fn run_session<'s, 'w, 'p>(
     source: &'s mut (dyn WorkloadSource + 'w),
     user_probes: Vec<&'p mut dyn Probe>,
 ) -> SimOutcome {
+    let shards = cfg.shards.normalized(cfg.cluster.nodes);
+    if !shards.is_serial() {
+        return match shards.merge {
+            MergeMode::Deterministic => {
+                run_session_merged(cfg, shards.count, kind, source, user_probes)
+            }
+            MergeMode::Fast => run_session_sharded(cfg, shards, kind, source, user_probes),
+        };
+    }
     // Monomorphized per backend: the event loop never branches on the
     // queue kind, and both instantiations share this one driver body.
     match cfg.queue {
@@ -331,6 +365,66 @@ fn run_session_queued<Q: PendingQueue<Ev>>(
     kind: SchedulerKind,
     source: &mut (dyn WorkloadSource + '_),
     user_probes: Vec<&mut dyn Probe>,
+) -> SimOutcome {
+    // Width hint: staggered heartbeats land one per `hb / nodes` seconds
+    // of simulated time, which is the dominant inter-event gap on the
+    // steady-state hot path (the calendar backend tunes its bucket width
+    // from it; the heap ignores the hint).
+    let gap_hint = cfg.cluster.heartbeat_s / cfg.cluster.nodes.max(1) as f64;
+    run_session_on(cfg, kind, source, user_probes, Q::with_gap_hint(gap_hint))
+}
+
+/// Deterministic-merge lane routing: every event goes to the lane of the
+/// shard owning it — per-node events by partition range, per-task events
+/// by job id, the arrival feed to lane 0.
+fn shard_of_event(part: &Partition, ev: &Ev) -> usize {
+    match ev {
+        Ev::Arrival => 0,
+        Ev::Heartbeat { node, .. } | Ev::NodeCrash { node, .. } => part.shard_of_node(*node),
+        Ev::NodeRecover(node) => part.shard_of_node(*node),
+        Ev::TaskDone { task, .. } | Ev::ReduceProgress { task, .. } | Ev::SpecDone { task, .. } => {
+            task.job as usize % part.count()
+        }
+    }
+}
+
+/// Deterministic merge mode: the shard structure lives entirely in the
+/// queue. Per-shard lanes (each an ordinary backend of the configured
+/// [`QueueKind`]) are k-way merged on the global `(time, class, seq)`
+/// order ([`ShardedQueue`]) and feed the ordinary single-loop driver —
+/// so the outcome is byte-identical to `--shards 1`, pinned by
+/// `tests/shard_equivalence.rs` across the testkit scenario matrix.
+fn run_session_merged(
+    cfg: &SimConfig,
+    count: usize,
+    kind: SchedulerKind,
+    source: &mut (dyn WorkloadSource + '_),
+    user_probes: Vec<&mut dyn Probe>,
+) -> SimOutcome {
+    let part = Partition::new(cfg.cluster.nodes, count);
+    let gap_hint = cfg.cluster.heartbeat_s / cfg.cluster.nodes.max(1) as f64;
+    match cfg.queue {
+        QueueKind::Heap => {
+            let router: LaneRouter<Ev> = Box::new(move |ev| shard_of_event(&part, ev));
+            let queue: ShardedQueue<Ev, EventQueue<(u64, Ev)>> =
+                ShardedQueue::new(part.count(), gap_hint, router);
+            run_session_on(cfg, kind, source, user_probes, queue)
+        }
+        QueueKind::Calendar => {
+            let router: LaneRouter<Ev> = Box::new(move |ev| shard_of_event(&part, ev));
+            let queue: ShardedQueue<Ev, CalendarQueue<(u64, Ev)>> =
+                ShardedQueue::new(part.count(), gap_hint, router);
+            run_session_on(cfg, kind, source, user_probes, queue)
+        }
+    }
+}
+
+fn run_session_on<Q: PendingQueue<Ev>>(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    source: &mut (dyn WorkloadSource + '_),
+    user_probes: Vec<&mut dyn Probe>,
+    queue: Q,
 ) -> SimOutcome {
     let t0 = std::time::Instant::now();
     let workload_name = source.name().to_string();
@@ -389,15 +483,11 @@ fn run_session_queued<Q: PendingQueue<Ev>>(
         speeds,
         spec: BTreeMap::new(),
         spec_seq: 0,
+        external_feed: false,
     };
 
-    // Width hint: staggered heartbeats land one per `hb / nodes` seconds
-    // of simulated time, which is the dominant inter-event gap on the
-    // steady-state hot path (the calendar backend tunes its bucket width
-    // from it; the heap ignores the hint).
-    let gap_hint = cfg.cluster.heartbeat_s / cfg.cluster.nodes.max(1) as f64;
     let mut engine: Engine<Ev, Q> =
-        Engine::from_queue(Q::with_gap_hint(gap_hint)).with_event_limit(cfg.event_limit);
+        Engine::from_queue(queue).with_event_limit(cfg.event_limit);
     // One heartbeat epoch chain per node (lazy deletion of stale chains).
     engine.init_chains(cfg.cluster.nodes);
     // The first arrival batch (scheduled before the heartbeats so the
@@ -477,6 +567,539 @@ fn heartbeat_chain(ev: &Ev) -> Option<(usize, u32)> {
     }
 }
 
+// ---------------------------------------------------------------------
+// Fast merge: shard workers on real threads under a conservative
+// time-window barrier.
+// ---------------------------------------------------------------------
+
+/// A source that never yields: fast-merge shard workers receive their
+/// jobs from the coordinator ([`Driver::inject_external`]) instead of a
+/// workload source.
+struct EmptySource;
+
+impl WorkloadSource for EmptySource {
+    fn name(&self) -> &str {
+        "shard-feed"
+    }
+
+    fn next_job(&mut self, _rng: &mut Pcg64) -> Option<JobSpec> {
+        None
+    }
+}
+
+/// Coordinator → worker control: one `Window` per barrier round, then
+/// `Finish`.
+enum ShardCtl {
+    /// Inject `jobs`, then run the shard's event loop up to `horizon`.
+    Window { horizon: Time, jobs: Vec<JobSpec> },
+    /// No further windows: drain everything still in flight and exit.
+    Finish,
+}
+
+/// Worker → coordinator report, one per window.
+struct ShardReport {
+    shard: usize,
+    /// Aggregate demand/capacity snapshot — the routing input.
+    digest: DemandDigest,
+    /// Still-untouched jobs handed back for re-routing (spillover).
+    exports: Vec<JobSpec>,
+    /// Arrived-but-unfinished jobs on this shard.
+    live: usize,
+    /// The shard stopped early (event limit, stream error, time cap).
+    halted: bool,
+}
+
+/// Everything a worker carries home for the final merge.
+struct ShardParts {
+    scheduler: &'static str,
+    sojourn: SojournStats,
+    locality: LocalityStats,
+    timelines: TimelineSet,
+    counters: ActionCounters,
+    faults: FaultStats,
+    makespan: Time,
+    processed: u64,
+    skipped: u64,
+    pushed: u64,
+    heap_peak: usize,
+    jobs_arrived: usize,
+    peak_live_jobs: usize,
+    stream_error: Option<String>,
+    stop: StopReason,
+}
+
+/// Per-shard construction bundle, moved into the worker thread.
+struct ShardSetup {
+    shard: usize,
+    /// Shard-mixed seed: per-shard substreams are mutually independent
+    /// and independent of the coordinator's arrival stream.
+    seed: u64,
+    kind: SchedulerKind,
+    /// The shard's slice of the cluster (local node ids `0..nodes`).
+    cluster: ClusterConfig,
+    /// Node speeds, sliced from the *global* fault plan so the same
+    /// physical nodes straggle regardless of the shard count.
+    speeds: Vec<f64>,
+    fstats: FaultStats,
+    /// Crash/recover schedule, node ids remapped to shard-local.
+    fault_events: Vec<FaultEvent>,
+}
+
+/// One shard's event loop: an ordinary serial driver over the shard's
+/// slice of the cluster, advanced window-by-window under the
+/// coordinator's conservative barrier. Strictly one report per window —
+/// the barrier protocol is deadlock-free by construction.
+fn shard_worker<Q: PendingQueue<Ev>>(
+    cfg: &SimConfig,
+    setup: ShardSetup,
+    ctl: mpsc::Receiver<ShardCtl>,
+    reports: mpsc::Sender<ShardReport>,
+) -> ShardParts {
+    let nodes = setup.cluster.nodes;
+    let streams = RngStreams::new(setup.seed);
+    let hdfs_rng = streams.stream(StreamId::Placement);
+    let arrival_rng = streams.stream(StreamId::Arrivals);
+    let scheduler = setup.kind.build();
+    let scheduler_name = scheduler.name();
+    let mut source = EmptySource;
+    let mut driver = Driver {
+        source: &mut source,
+        arrival_rng,
+        pending_arrivals: VecDeque::new(),
+        lookahead: None,
+        source_done: true,
+        arrived_jobs: 0,
+        jobs: JobTable::new(),
+        cluster: Cluster::new(setup.cluster),
+        hdfs: Hdfs::new(nodes, setup.cluster.replication, hdfs_rng),
+        scheduler,
+        actions: Vec::new(),
+        probes: ProbeStack::new(cfg.record_timelines, setup.fstats, Vec::new()),
+        finished_jobs: 0,
+        peak_live_jobs: 0,
+        halted_by_probe: false,
+        stream_error: None,
+        delta: cfg.reduce_progress_delta_s,
+        max_sim_time: cfg.max_sim_time_s,
+        faults_cfg: cfg.faults.clone(),
+        has_stragglers: setup.speeds.iter().any(|&s| s < 1.0),
+        speeds: setup.speeds,
+        spec: BTreeMap::new(),
+        spec_seq: 0,
+        external_feed: true,
+    };
+    let gap_hint = setup.cluster.heartbeat_s / nodes.max(1) as f64;
+    let mut engine: Engine<Ev, Q> =
+        Engine::from_queue(Q::with_gap_hint(gap_hint)).with_event_limit(cfg.event_limit);
+    engine.init_chains(nodes);
+    let hb = setup.cluster.heartbeat_s;
+    for node in 0..nodes {
+        let offset = hb * (node as f64 + 1.0) / nodes as f64;
+        engine.schedule_at(offset, Ev::Heartbeat { node, epoch: 0 });
+    }
+    for ev in &setup.fault_events {
+        let event = match ev.kind {
+            FaultEventKind::Crash => Ev::NodeCrash {
+                node: ev.node,
+                permanent: ev.permanent,
+            },
+            FaultEventKind::Recover => Ev::NodeRecover(ev.node),
+        };
+        engine.schedule_at(ev.time, event);
+    }
+
+    let mut stop = StopReason::Drained;
+    let mut stopped = false;
+    while let Ok(msg) = ctl.recv() {
+        match msg {
+            ShardCtl::Window { horizon, jobs } => {
+                if !stopped {
+                    driver.inject_external(&mut engine, jobs);
+                    let reason = engine.run_until(horizon, heartbeat_chain, |eng, now, ev| {
+                        driver.handle(eng, now, ev)
+                    });
+                    match reason {
+                        // Pin the clock to the barrier so next-window
+                        // injections land at a common time base.
+                        StopReason::Horizon | StopReason::Drained => engine.advance_to(horizon),
+                        other => {
+                            stop = other;
+                            stopped = true;
+                        }
+                    }
+                }
+                let exports = if stopped {
+                    Vec::new()
+                } else {
+                    driver.take_exports(&engine)
+                };
+                let report = ShardReport {
+                    shard: setup.shard,
+                    digest: DemandDigest::snapshot(&driver.jobs, &driver.cluster),
+                    exports,
+                    live: driver.arrived_jobs - driver.finished_jobs,
+                    halted: stopped,
+                };
+                if reports.send(report).is_err() {
+                    break; // coordinator gone
+                }
+            }
+            ShardCtl::Finish => {
+                if !stopped {
+                    // Final drain: no more injections, so the ordinary
+                    // drained() halt applies again.
+                    driver.external_feed = false;
+                    stop = engine.run_filtered(heartbeat_chain, |eng, now, ev| {
+                        driver.handle(eng, now, ev)
+                    });
+                }
+                break;
+            }
+        }
+    }
+
+    let stream_error = driver.stream_error.take();
+    let jobs_arrived = driver.arrived_jobs;
+    let peak_live_jobs = driver.peak_live_jobs;
+    let (sojourn, locality, timelines, counters, faults) = driver.probes.into_parts(engine.now());
+    ShardParts {
+        scheduler: scheduler_name,
+        sojourn,
+        locality,
+        timelines,
+        counters,
+        faults,
+        makespan: engine.now(),
+        processed: engine.processed(),
+        skipped: engine.skipped(),
+        pushed: engine.pushed(),
+        heap_peak: engine.heap_peak(),
+        jobs_arrived,
+        peak_live_jobs,
+        stream_error,
+        stop,
+    }
+}
+
+/// First index holding the maximum value.
+fn argmax_first(v: &[i64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// First index holding the minimum value.
+fn argmin_first(v: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x < v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Route a batch of jobs across shards: each job goes to the shard with
+/// the most estimated free map slots (lowest shard id on ties), and the
+/// estimate is debited by the job's map count so one window's batch
+/// spreads instead of piling onto one shard. With every estimate
+/// exhausted, fall back to spreading by this window's assignment count —
+/// a saturated shard will spill what it cannot start
+/// ([`Driver::take_exports`]) and the job re-routes next window.
+fn route_jobs(jobs: Vec<JobSpec>, digests: &[DemandDigest], count: usize) -> Vec<Vec<JobSpec>> {
+    let mut batches: Vec<Vec<JobSpec>> = (0..count).map(|_| Vec::new()).collect();
+    let mut free: Vec<i64> = digests.iter().map(|d| d.free_map_slots as i64).collect();
+    let mut assigned = vec![0usize; count];
+    for job in jobs {
+        let best = argmax_first(&free);
+        let pick = if free[best] > 0 {
+            best
+        } else {
+            argmin_first(&assigned)
+        };
+        free[pick] -= job.n_maps().max(1) as i64;
+        assigned[pick] += 1;
+        batches[pick].push(job);
+    }
+    batches
+}
+
+/// Merge stop reasons: truncation outranks a halt, which outranks a
+/// clean drain.
+fn worse(a: StopReason, b: StopReason) -> StopReason {
+    use StopReason::*;
+    match (a, b) {
+        (EventLimit, _) | (_, EventLimit) => EventLimit,
+        (Halted, _) | (_, Halted) => Halted,
+        _ => Drained,
+    }
+}
+
+/// Fold per-shard results into one [`SimOutcome`]. Sojourn records,
+/// locality, action counters and fault stats merge exactly (sums /
+/// re-sorted concatenations); `heap_peak` and `peak_live_jobs` are sums
+/// of per-shard peaks (an upper bound — the shards need not peak at the
+/// same instant).
+fn merge_parts(
+    parts: Vec<ShardParts>,
+    workload: String,
+    stream_error: Option<String>,
+    wall_ms: f64,
+) -> SimOutcome {
+    let mut parts = parts.into_iter();
+    let first = parts.next().expect("at least one shard");
+    let mut out = SimOutcome {
+        scheduler: first.scheduler,
+        workload,
+        sojourn: first.sojourn,
+        locality: first.locality,
+        timelines: first.timelines,
+        counters: first.counters,
+        faults: first.faults,
+        makespan: first.makespan,
+        events_processed: first.processed,
+        events_skipped: first.skipped,
+        events_pushed: first.pushed,
+        heap_peak: first.heap_peak,
+        jobs_arrived: first.jobs_arrived,
+        peak_live_jobs: first.peak_live_jobs,
+        halted_by_probe: false,
+        stream_error: stream_error.or(first.stream_error),
+        stop: first.stop,
+        wall_ms,
+    };
+    for p in parts {
+        out.sojourn.merge(p.sojourn);
+        out.locality.merge(&p.locality);
+        out.timelines.merge(p.timelines);
+        out.counters.merge(&p.counters);
+        out.faults.merge(&p.faults);
+        out.makespan = out.makespan.max(p.makespan);
+        out.events_processed += p.processed;
+        out.events_skipped += p.skipped;
+        out.events_pushed += p.pushed;
+        out.heap_peak += p.heap_peak;
+        out.jobs_arrived += p.jobs_arrived;
+        out.peak_live_jobs += p.peak_live_jobs;
+        if out.stream_error.is_none() {
+            out.stream_error = p.stream_error;
+        }
+        out.stop = worse(out.stop, p.stop);
+    }
+    // Idle shard clocks sit at the final window boundary; on a clean run
+    // the real makespan is the last completion.
+    if out.stop != StopReason::EventLimit && out.stream_error.is_none() {
+        if let Some(last) = out.sojourn.records().last() {
+            out.makespan = last.finish;
+        }
+    }
+    out
+}
+
+/// Fast merge mode: shard workers on real threads, each a full serial
+/// driver over its contiguous slice of the cluster, advanced in lock
+/// step by a conservative time-window barrier (default window = one
+/// heartbeat period; `--window` overrides). Arrivals, routing decisions
+/// (merged per-shard [`DemandDigest`]s) and placement spillover flow
+/// through MPSC channels drained at window boundaries. Aggregate
+/// statistics merge exactly, but cross-shard event interleaving is
+/// relaxed — outcomes are **not** byte-identical to serial; gate on
+/// aggregate metrics, or use [`MergeMode::Deterministic`].
+fn run_session_sharded(
+    cfg: &SimConfig,
+    shards: ShardSpec,
+    kind: SchedulerKind,
+    source: &mut (dyn WorkloadSource + '_),
+    user_probes: Vec<&mut dyn Probe>,
+) -> SimOutcome {
+    let t0 = std::time::Instant::now();
+    if !user_probes.is_empty() {
+        log::warn!(
+            "fast-merge sharded runs do not support user probes; {} ignored \
+             (use --merge deterministic)",
+            user_probes.len()
+        );
+    }
+    let workload_name = source.name().to_string();
+    let part = Partition::new(cfg.cluster.nodes, shards.count);
+    let n = part.count();
+    let window = shards.window(cfg.cluster.heartbeat_s);
+
+    // Global fault plan, compiled once and sliced per shard: the same
+    // physical nodes crash and straggle whatever the shard count.
+    let mut slowdowns = vec![1.0; cfg.cluster.nodes];
+    let mut fault_events: Vec<FaultEvent> = Vec::new();
+    if cfg.faults.enabled {
+        let mut fault_rng = RngStreams::new(cfg.seed).stream(StreamId::Faults);
+        let plan = FaultPlan::compile(
+            &cfg.faults,
+            cfg.cluster.nodes,
+            cfg.max_sim_time_s,
+            &mut fault_rng,
+        );
+        slowdowns = plan.slowdowns;
+        fault_events = plan.events;
+    }
+    let mut setups = Vec::with_capacity(n);
+    for s in 0..n {
+        let range = part.nodes_of_shard(s);
+        let speeds: Vec<f64> = range.clone().map(|node| 1.0 / slowdowns[node]).collect();
+        let fstats = FaultStats {
+            straggler_nodes: speeds.iter().filter(|&&sp| sp < 1.0).count() as u64,
+            ..FaultStats::default()
+        };
+        let events: Vec<FaultEvent> = fault_events
+            .iter()
+            .filter(|e| range.contains(&e.node))
+            .map(|e| FaultEvent {
+                node: e.node - range.start,
+                ..*e
+            })
+            .collect();
+        setups.push(ShardSetup {
+            shard: s,
+            seed: cfg.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(s as u64 + 1),
+            kind: kind.clone(),
+            cluster: ClusterConfig {
+                nodes: range.len(),
+                ..cfg.cluster
+            },
+            speeds,
+            fstats,
+            fault_events: events,
+        });
+    }
+
+    // The coordinator owns the real arrival stream.
+    let mut arrival_rng = RngStreams::new(cfg.seed).stream(StreamId::Arrivals);
+
+    std::thread::scope(|scope| {
+        let (report_tx, report_rx) = mpsc::channel::<ShardReport>();
+        let mut ctl_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for setup in setups {
+            let (tx, rx) = mpsc::channel::<ShardCtl>();
+            ctl_txs.push(tx);
+            let reports = report_tx.clone();
+            handles.push(match cfg.queue {
+                QueueKind::Heap => scope
+                    .spawn(move || shard_worker::<EventQueue<Ev>>(cfg, setup, rx, reports)),
+                QueueKind::Calendar => scope
+                    .spawn(move || shard_worker::<CalendarQueue<Ev>>(cfg, setup, rx, reports)),
+            });
+        }
+        drop(report_tx);
+
+        // Pre-first-window digests: full capacity, nothing live.
+        let mut digests: Vec<DemandDigest> = (0..n)
+            .map(|s| DemandDigest {
+                free_map_slots: part.len(s) * cfg.cluster.map_slots,
+                free_reduce_slots: part.len(s) * cfg.cluster.reduce_slots,
+                ..DemandDigest::default()
+            })
+            .collect();
+        let mut lives = vec![0usize; n];
+        let mut backlog: Vec<JobSpec> = Vec::new();
+        let mut lookahead: Option<JobSpec> = None;
+        let mut src_done = false;
+        let mut stream_error: Option<String> = None;
+        let mut last_submit: Time = 0.0;
+        let mut horizon = window;
+        let mut any_halted = false;
+
+        loop {
+            // Pull every arrival strictly before this window's horizon
+            // (events *at* the horizon belong to the next window, same
+            // convention as [`Engine::run_until`]).
+            let mut pool = std::mem::take(&mut backlog);
+            while !src_done {
+                let next = lookahead.take().or_else(|| source.next_job(&mut arrival_rng));
+                match next {
+                    None => {
+                        src_done = true;
+                        if stream_error.is_none() {
+                            stream_error = source.take_error();
+                        }
+                    }
+                    Some(mut job) => {
+                        if job.submit_time < last_submit {
+                            log::warn!(
+                                "workload source emitted job {} out of order ({} < {}); clamping",
+                                job.id,
+                                job.submit_time,
+                                last_submit
+                            );
+                            job.submit_time = last_submit;
+                        }
+                        last_submit = job.submit_time;
+                        if job.submit_time < horizon {
+                            pool.push(job);
+                        } else {
+                            lookahead = Some(job);
+                            break;
+                        }
+                    }
+                }
+            }
+            // Route the pool and open the window on every shard.
+            let batches = route_jobs(pool, &digests, n);
+            for (tx, jobs) in ctl_txs.iter().zip(batches) {
+                if tx.send(ShardCtl::Window { horizon, jobs }).is_err() {
+                    any_halted = true;
+                }
+            }
+            // Barrier: one report per shard.
+            for _ in 0..n {
+                match report_rx.recv() {
+                    Ok(r) => {
+                        digests[r.shard] = r.digest;
+                        lives[r.shard] = r.live;
+                        backlog.extend(r.exports);
+                        any_halted |= r.halted;
+                    }
+                    Err(_) => {
+                        any_halted = true;
+                        break;
+                    }
+                }
+            }
+            if any_halted {
+                break;
+            }
+            let total_live: usize = lives.iter().sum();
+            if src_done && lookahead.is_none() && backlog.is_empty() && total_live == 0 {
+                break;
+            }
+            // Idle fast-forward: nothing in flight anywhere and the next
+            // arrival is beyond the horizon — jump straight to it
+            // instead of spinning empty windows.
+            horizon = match &lookahead {
+                Some(job) if total_live == 0 && backlog.is_empty() => job.submit_time + window,
+                _ => horizon + window,
+            };
+        }
+
+        for tx in &ctl_txs {
+            let _ = tx.send(ShardCtl::Finish);
+        }
+        drop(ctl_txs);
+        let parts: Vec<ShardParts> = handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect();
+        merge_parts(
+            parts,
+            workload_name,
+            stream_error,
+            t0.elapsed().as_secs_f64() * 1e3,
+        )
+    })
+}
+
 impl Driver<'_, '_, '_> {
     fn handle<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time, ev: Ev) {
         let was_heartbeat = matches!(ev, Ev::Heartbeat { .. });
@@ -530,7 +1153,8 @@ impl Driver<'_, '_, '_> {
     /// No arrivals remain (source exhausted, none queued) and every
     /// arrived job finished — the session is complete.
     fn drained(&self) -> bool {
-        self.source_done
+        !self.external_feed
+            && self.source_done
             && self.lookahead.is_none()
             && self.pending_arrivals.is_empty()
             && self.finished_jobs == self.arrived_jobs
@@ -608,6 +1232,80 @@ impl Driver<'_, '_, '_> {
                 }
             }
         }
+    }
+
+    /// Fast-merge worker: queue coordinator-routed jobs as ordinary
+    /// arrivals. A spilled job re-arrives "now" (its original submit
+    /// time is in the past on this shard's clock) but keeps its
+    /// [`JobSpec::submit_time`], so sojourn statistics still measure
+    /// from the true submission.
+    fn inject_external<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &mut Engine<Ev, Q>,
+        mut specs: Vec<JobSpec>,
+    ) {
+        if specs.is_empty() {
+            return;
+        }
+        let now = eng.now();
+        // Firing order = effective arrival time; the sort is stable so
+        // the coordinator's routing order breaks same-instant ties, and
+        // `pending_arrivals` (a FIFO) stays aligned with the `Arrival`
+        // events' priority-class `(time, seq)` order.
+        specs.sort_by(|a, b| {
+            a.submit_time
+                .max(now)
+                .total_cmp(&b.submit_time.max(now))
+        });
+        for spec in specs {
+            eng.schedule_at_priority(spec.submit_time.max(now), Ev::Arrival);
+            self.pending_arrivals.push_back(spec);
+        }
+    }
+
+    /// Fast-merge worker: hand *untouched* jobs (no task ever launched)
+    /// back to the coordinator for re-routing, but only when this shard
+    /// is out of map slots — a saturated shard sheds queued work that
+    /// another shard may start immediately. Untouched-only keeps the
+    /// migration trivial: the spec is the job's entire state, so nothing
+    /// can be lost or double-launched in flight.
+    fn take_exports<Q: PendingQueue<Ev>>(&mut self, eng: &Engine<Ev, Q>) -> Vec<JobSpec> {
+        if self.cluster.free_slots(Phase::Map) > 0 {
+            return Vec::new();
+        }
+        let now = eng.now();
+        let untouched: Vec<JobId> = self
+            .jobs
+            .values()
+            .filter(|job| {
+                [Phase::Map, Phase::Reduce].iter().all(|&phase| {
+                    job.tasks(phase)
+                        .iter()
+                        .all(|t| t.state.is_pending() && t.attempts == 0)
+                })
+            })
+            .map(|job| job.id())
+            .collect();
+        let mut out = Vec::with_capacity(untouched.len());
+        for id in untouched {
+            {
+                let view = SchedView {
+                    jobs: &self.jobs,
+                    cluster: &self.cluster,
+                    hdfs: &self.hdfs,
+                    now,
+                };
+                // The scheduler drops its per-job state exactly as for a
+                // finished job; the job will re-arrive elsewhere.
+                self.scheduler.on_job_finished(&view, id);
+            }
+            let job = self.jobs.remove(&id).expect("untouched job in table");
+            self.hdfs.evict_job(id, job.spec.n_maps());
+            self.arrived_jobs -= 1;
+            self.probes.emit(now, &ProbeEvent::JobSpilled { job: id });
+            out.push(job.spec);
+        }
+        out
     }
 
     fn on_arrival<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time) {

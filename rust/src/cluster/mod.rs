@@ -16,7 +16,9 @@ pub mod cluster;
 pub mod driver;
 pub mod hdfs;
 pub mod node;
+pub mod partition;
 
 pub use cluster::{Cluster, ClusterConfig};
 pub use hdfs::Hdfs;
 pub use node::Node;
+pub use partition::Partition;

@@ -1,0 +1,160 @@
+//! Cluster partitioning for sharded execution.
+//!
+//! A [`Partition`] splits a cluster's node id space into `S` contiguous
+//! shards. Each shard **owns** its node range outright: every per-node
+//! event (heartbeats, crash/recover, task completions on that node) is
+//! handled by the shard's own engine, so the hot path never takes a
+//! lock — cross-shard traffic moves through channels drained at window
+//! boundaries (see [`crate::sim::shard`]).
+//!
+//! Contiguous ranges (rather than round-robin striping) keep the
+//! per-shard cluster model a plain `Cluster` over `len(s)` nodes: a
+//! global node id maps to `(shard, local id)` with two integer ops, and
+//! the fault plan / speed tables slice cleanly.
+
+/// A contiguous split of `nodes` node ids into `count` shards.
+///
+/// The first `nodes % count` shards take one extra node, so shard sizes
+/// differ by at most one. `count` is clamped to `nodes` at construction
+/// (a shard must own at least one node — `Cluster::new` asserts a
+/// non-empty node set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    nodes: usize,
+    count: usize,
+}
+
+impl Partition {
+    /// Partition `nodes` node ids into (at most) `count` shards.
+    pub fn new(nodes: usize, count: usize) -> Self {
+        assert!(nodes > 0, "cannot partition an empty cluster");
+        let clamped = count.clamp(1, nodes);
+        if clamped != count {
+            log::warn!(
+                "clamping shard count {count} to {clamped} ({nodes} nodes; \
+                 every shard must own at least one node)"
+            );
+        }
+        Self {
+            nodes,
+            count: clamped,
+        }
+    }
+
+    /// Number of shards (after clamping).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Total nodes across all shards.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Global node ids owned by shard `s`, as a contiguous range.
+    pub fn nodes_of_shard(&self, s: usize) -> std::ops::Range<usize> {
+        assert!(s < self.count, "shard {s} out of range ({})", self.count);
+        let base = self.nodes / self.count;
+        let extra = self.nodes % self.count;
+        // Shards [0, extra) hold base+1 nodes; the rest hold base.
+        let start = s * base + s.min(extra);
+        let len = base + usize::from(s < extra);
+        start..start + len
+    }
+
+    /// Node count of shard `s`.
+    pub fn len(&self, s: usize) -> usize {
+        self.nodes_of_shard(s).len()
+    }
+
+    /// Whether shard `s` owns zero nodes (never true after clamping;
+    /// kept for API completeness).
+    pub fn is_empty(&self, s: usize) -> bool {
+        self.len(s) == 0
+    }
+
+    /// The shard owning global node id `node`.
+    pub fn shard_of_node(&self, node: usize) -> usize {
+        assert!(node < self.nodes, "node {node} out of range ({})", self.nodes);
+        let base = self.nodes / self.count;
+        let extra = self.nodes % self.count;
+        // The first `extra` shards cover [0, extra*(base+1)).
+        let wide = extra * (base + 1);
+        if node < wide {
+            node / (base + 1)
+        } else {
+            extra + (node - wide) / base
+        }
+    }
+
+    /// Translate a global node id to its shard-local id.
+    pub fn local_id(&self, node: usize) -> usize {
+        let s = self.shard_of_node(node);
+        node - self.nodes_of_shard(s).start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_owns_contiguous_ranges() {
+        let p = Partition::new(8, 4);
+        assert_eq!(p.count(), 4);
+        for s in 0..4 {
+            assert_eq!(p.nodes_of_shard(s), 2 * s..2 * s + 2);
+            assert_eq!(p.len(s), 2);
+            assert!(!p.is_empty(s));
+        }
+    }
+
+    #[test]
+    fn uneven_split_front_loads_the_remainder() {
+        let p = Partition::new(10, 4);
+        assert_eq!(p.nodes_of_shard(0), 0..3);
+        assert_eq!(p.nodes_of_shard(1), 3..6);
+        assert_eq!(p.nodes_of_shard(2), 6..8);
+        assert_eq!(p.nodes_of_shard(3), 8..10);
+        let total: usize = (0..4).map(|s| p.len(s)).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn shard_of_node_inverts_the_ranges() {
+        for (nodes, count) in [(1, 1), (5, 2), (10, 4), (100, 7), (16, 16)] {
+            let p = Partition::new(nodes, count);
+            for s in 0..p.count() {
+                for node in p.nodes_of_shard(s) {
+                    assert_eq!(p.shard_of_node(node), s, "node {node} of {nodes}/{count}");
+                    let local = p.local_id(node);
+                    assert_eq!(p.nodes_of_shard(s).start + local, node);
+                    assert!(local < p.len(s));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_count_clamps_to_one_node_per_shard() {
+        let p = Partition::new(3, 8);
+        assert_eq!(p.count(), 3);
+        for s in 0..3 {
+            assert_eq!(p.len(s), 1);
+            assert_eq!(p.nodes_of_shard(s), s..s + 1);
+        }
+    }
+
+    #[test]
+    fn zero_count_clamps_to_single_shard() {
+        let p = Partition::new(5, 0);
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.nodes_of_shard(0), 0..5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_cluster_is_rejected() {
+        Partition::new(0, 2);
+    }
+}

@@ -240,6 +240,20 @@ pub struct FaultStats {
     pub wasted_work_s: f64,
 }
 
+impl FaultStats {
+    /// Fold another shard's stats into this one (sharded-run merge; every
+    /// field is a sum over disjoint node sets).
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.crashes += other.crashes;
+        self.recoveries += other.recoveries;
+        self.permanent_losses += other.permanent_losses;
+        self.straggler_nodes += other.straggler_nodes;
+        self.crash_task_kills += other.crash_task_kills;
+        self.re_executed_tasks += other.re_executed_tasks;
+        self.wasted_work_s += other.wasted_work_s;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

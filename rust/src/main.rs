@@ -26,7 +26,7 @@ use hfsp::report;
 use hfsp::scheduler::core::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
 use hfsp::scheduler::hierarchy::{HierarchyConfig, Topology};
 use hfsp::scheduler::{SchedulerKind, REGISTRY};
-use hfsp::sim::{QueueKind, StopReason};
+use hfsp::sim::{MergeMode, QueueKind, ShardSpec, StopReason};
 use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::util::cli::{Cli, Command, Parsed};
 use hfsp::util::config::Config as FileConfig;
@@ -67,6 +67,9 @@ fn cli() -> Cli {
                 .flag("event-limit", "0", "override the event-count guard (0 = default)")
                 .flag("config", "", "TOML-subset config file; its [sim]/[cluster] keys override --seed/--nodes/--map-slots/--reduce-slots")
                 .flag("queue", "", "event queue backend: calendar | heap (default: from --config, else calendar)")
+                .flag("shards", "", "partition the cluster across this many shards (default: from --config, else 1 = serial)")
+                .flag("merge", "", "shard merge mode: deterministic (byte-identical to serial) | fast (threaded window barrier)")
+                .flag("window", "", "fast merge: barrier window, simulated seconds (default: one heartbeat period)")
                 .flag("out", "", "write JSON outcome summary here")
                 .switch("stream", "replay --trace through the streaming TraceSource (constant memory)")
                 .switch("timelines", "record per-job slot timelines")
@@ -103,6 +106,8 @@ fn cli() -> Cli {
                 .flag("compare", "", "baseline BENCH_sim.json: print events/sec deltas and fail past --threshold")
                 .flag("threshold", "0.30", "max tolerated fractional events/sec regression for --compare")
                 .flag("queue", "", "event queue backend: calendar | heap (default: calendar)")
+                .flag("shards", "4", "shard count for the par-open-1e6 fast-merge scenario")
+                .flag("merge-baseline", "", "rewrite the committed --out trajectory from this CI-measured artifact (no scenarios run)")
                 .flag("out", "BENCH_sim.json", "benchmark JSON output path")
                 .switch("require-baseline", "fail --compare when the baseline shares no scenarios (arms the CI gate against an empty baseline)"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
@@ -414,6 +419,23 @@ fn sim_config(args: &hfsp::util::cli::Args) -> anyhow::Result<SimConfig> {
             cfg.event_limit = limit;
         }
     }
+    // Sharding flags (commands that don't define them fall through to
+    // the config file / serial default).
+    if let Some(n) = args.get_parsed::<usize>("shards")? {
+        if n > 0 {
+            cfg.shards.count = n;
+        }
+    }
+    if let Some(name) = args.get("merge").filter(|m| !m.trim().is_empty()) {
+        cfg.shards.merge = MergeMode::from_name(name)?;
+    }
+    if let Some(w) = args.get_parsed::<f64>("window")? {
+        anyhow::ensure!(
+            w > 0.0 && w.is_finite(),
+            "--window must be positive and finite"
+        );
+        cfg.shards.window_s = Some(w);
+    }
     Ok(cfg)
 }
 
@@ -671,9 +693,17 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
 ///   multi-tenant population source (10k users across 100 pools): the
 ///   share-tree + per-leaf discipline hot path;
 /// * `sweep-4disc` — a single-threaded 4-discipline sweep cell
-///   (mechanism + every ordering policy through the sweep engine).
+///   (mechanism + every ordering policy through the sweep engine);
+/// * `par-open-1e6-serial` / `par-open-1e6` — a million streamed jobs
+///   run serially and again under the fast shard merge on `--shards`
+///   threads: the parallel-speedup row pair.
 ///
-/// `--profile full` adds `open-1e6` (a million streamed jobs).
+/// `--profile full` adds `open-1e6` (a million streamed jobs, serial,
+/// the historical row).
+///
+/// `--merge-baseline new.json` runs no scenarios: it rewrites the
+/// committed trajectory at `--out` from a CI-measured artifact (see
+/// `merge_baseline_file`).
 #[allow(clippy::too_many_lines)]
 fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     use hfsp::bench::{
@@ -686,7 +716,14 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     let nodes: usize = args.require("nodes")?;
     let seed: u64 = args.require("seed")?;
     let out: PathBuf = args.require("out")?;
+    // --merge-baseline: rewrite the committed trajectory from a
+    // CI-measured artifact; no scenarios run.
+    if let Some(artifact) = args.get("merge-baseline").filter(|p| !p.trim().is_empty()) {
+        return merge_baseline_file(&out, artifact);
+    }
     let threshold: f64 = args.require("threshold")?;
+    let shards: usize = args.require("shards")?;
+    anyhow::ensure!(shards > 0, "--shards must be positive");
     let queue = match args.get("queue") {
         Some(name) => QueueKind::from_name(name)?,
         None => QueueKind::default(),
@@ -769,6 +806,36 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     records.push(open_record(&cfg, 100_000, "open-1e5"));
     if profile == "full" {
         records.push(open_record(&cfg, 1_000_000, "open-1e6"));
+    }
+    // Sharded throughput: the same million-job open stream run serially
+    // and under the fast merge on `--shards` worker threads — the row
+    // pair behind CI's parallel-speedup assertion. Wide 30 s windows
+    // amortize the barrier; cross-shard tie order is relaxed here, with
+    // serial equivalence pinned separately by the deterministic mode.
+    {
+        records.push(open_record(&cfg, 1_000_000, "par-open-1e6-serial"));
+        let sharded = SimConfig {
+            shards: ShardSpec {
+                count: shards,
+                merge: MergeMode::Fast,
+                window_s: Some(30.0),
+            },
+            ..cfg.clone()
+        };
+        records.push(open_record(&sharded, 1_000_000, "par-open-1e6"));
+        let eps = |name: &str| {
+            records
+                .iter()
+                .find(|r| r.scenario == name)
+                .map_or(0.0, |r| r.events_per_sec)
+        };
+        let serial_eps = eps("par-open-1e6-serial");
+        if serial_eps > 0.0 {
+            println!(
+                "parallel speedup: {:.2}x ({shards} shards, fast merge)",
+                eps("par-open-1e6") / serial_eps
+            );
+        }
     }
     // The hierarchy hot path: Zipf tenants from a 10k-user population
     // hashed across 100 pools, scheduled by the example 3-pool tree at
@@ -864,6 +931,7 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     j.set("scale", scale.into());
     j.set("seed", seed.into());
     j.set("queue", queue.name().into());
+    j.set("shards", shards.into());
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -890,6 +958,7 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
                 ("nodes", Json::from(nodes)),
                 ("scale", Json::from(scale)),
                 ("profile", Json::from(profile)),
+                ("shards", Json::from(shards)),
             ],
         ) {
             anyhow::bail!(
@@ -946,6 +1015,67 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
             threshold * 100.0
         );
     }
+    Ok(())
+}
+
+/// `bench --merge-baseline new.json`: rewrite the committed trajectory
+/// at `--out` from a CI-measured artifact. Rows join on (scenario,
+/// scheduler, queue); artifact rows replace their committed
+/// counterparts, unmatched artifact rows (freshly added scenarios) are
+/// appended, and committed rows the artifact never measured (e.g. the
+/// full profile's extra scenarios) are preserved. Config stamps must
+/// agree (skip-if-absent semantics, same as `--compare`); the artifact's
+/// stamps are carried into the rewritten file.
+fn merge_baseline_file(out: &Path, artifact_path: &str) -> anyhow::Result<()> {
+    use hfsp::bench::{
+        baseline_config_mismatch, merge_baselines, parse_trajectory_text, trajectory_to_json,
+    };
+    let committed_text = std::fs::read_to_string(out)
+        .map_err(|e| anyhow::anyhow!("reading committed trajectory {}: {e}", out.display()))?;
+    let (committed_json, mut rows) = parse_trajectory_text(&committed_text)
+        .map_err(|e| anyhow::anyhow!("committed trajectory {}: {e}", out.display()))?;
+    let artifact_text = std::fs::read_to_string(artifact_path)
+        .map_err(|e| anyhow::anyhow!("reading artifact {artifact_path}: {e}"))?;
+    let (artifact_json, artifact_rows) = parse_trajectory_text(&artifact_text)
+        .map_err(|e| anyhow::anyhow!("artifact {artifact_path}: {e}"))?;
+    anyhow::ensure!(
+        !artifact_rows.is_empty(),
+        "artifact {artifact_path} has no trajectory rows — nothing to merge"
+    );
+    // The artifact must have been measured under the committed file's
+    // configuration, else the merged rows would gate on a config
+    // artifact rather than a code change.
+    const STAMPS: [&str; 6] = ["nodes", "scale", "profile", "seed", "queue", "shards"];
+    let current: Vec<(&str, Json)> = STAMPS
+        .iter()
+        .filter_map(|k| artifact_json.get(k).map(|v| (*k, v.clone())))
+        .collect();
+    if let Some(diff) = baseline_config_mismatch(&committed_json, &current) {
+        anyhow::bail!(
+            "artifact {artifact_path} configuration mismatch ({diff}) — re-measure the \
+             artifact under the committed trajectory's flags"
+        );
+    }
+    let (replaced, appended) = merge_baselines(&mut rows, &artifact_rows);
+    let mut j = trajectory_to_json(&rows);
+    for key in STAMPS {
+        if let Some(v) = artifact_json.get(key).or_else(|| committed_json.get(key)) {
+            j.set(key, v.clone());
+        }
+    }
+    j.set(
+        "note",
+        "CI-measured perf-trajectory baseline for `hfsp bench --compare` (config per the \
+         top-level stamps). Refresh after an intentional perf change: download the \
+         BENCH_new.json artifact from the bench CI job and run `hfsp bench \
+         --merge-baseline BENCH_new.json --out BENCH_sim.json`."
+            .into(),
+    );
+    std::fs::write(out, j.to_string_pretty())?;
+    println!(
+        "merged {artifact_path} into {}: {replaced} row(s) replaced, {appended} appended",
+        out.display()
+    );
     Ok(())
 }
 

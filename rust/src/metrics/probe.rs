@@ -113,6 +113,10 @@ pub enum ProbeEvent {
     SpeculativeLaunched { task: TaskRef, node: NodeId },
     /// A speculative clone beat its original.
     SpeculativeWon { task: TaskRef },
+    /// Sharded execution: a still-untouched job was handed back to the
+    /// coordinator because its shard had no free map slots; it will
+    /// re-arrive on another shard in the next window.
+    JobSpilled { job: JobId },
 }
 
 /// A streaming simulation observer. All methods have no-op defaults —
@@ -164,6 +168,26 @@ pub struct ActionCounters {
     pub speculative_launches: u64,
     /// Speculative races won by the clone (original discarded).
     pub speculative_wins: u64,
+    /// Sharded execution: cross-shard job spillovers (each is one job
+    /// handed back to the coordinator and re-placed on another shard).
+    pub spilled_jobs: u64,
+}
+
+impl ActionCounters {
+    /// Fold another shard's counters into this one (sharded-run merge).
+    pub fn merge(&mut self, other: &ActionCounters) {
+        self.launches += other.launches;
+        self.suspends += other.suspends;
+        self.resumes += other.resumes;
+        self.kills += other.kills;
+        self.swap_ins += other.swap_ins;
+        self.heartbeats += other.heartbeats;
+        self.stale_completions += other.stale_completions;
+        self.rejected_actions += other.rejected_actions;
+        self.speculative_launches += other.speculative_launches;
+        self.speculative_wins += other.speculative_wins;
+        self.spilled_jobs += other.spilled_jobs;
+    }
 }
 
 /// Built-in probe: per-job sojourn records ([`SojournStats`]).
@@ -277,6 +301,7 @@ impl Probe for CounterProbe {
             ProbeEvent::ActionRejected { .. } => c.rejected_actions += 1,
             ProbeEvent::SpeculativeLaunched { .. } => c.speculative_launches += 1,
             ProbeEvent::SpeculativeWon { .. } => c.speculative_wins += 1,
+            ProbeEvent::JobSpilled { .. } => c.spilled_jobs += 1,
             _ => {}
         }
     }
@@ -620,6 +645,23 @@ mod tests {
         let tl = on.set.job(7).expect("timeline recorded");
         assert!(tl.is_balanced());
         assert!((tl.slot_seconds() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_count_spills_and_merge_fieldwise() {
+        let mut p = CounterProbe::default();
+        p.on_event(0.0, &ProbeEvent::JobSpilled { job: 4 });
+        p.on_event(0.0, &ProbeEvent::Heartbeat { node: 0 });
+        assert_eq!(p.counters.spilled_jobs, 1);
+        let mut merged = ActionCounters {
+            launches: 2,
+            heartbeats: 5,
+            ..Default::default()
+        };
+        merged.merge(&p.counters);
+        assert_eq!(merged.launches, 2);
+        assert_eq!(merged.heartbeats, 6);
+        assert_eq!(merged.spilled_jobs, 1);
     }
 
     #[test]

@@ -59,6 +59,16 @@ impl SojournStats {
         &self.records
     }
 
+    /// Fold another shard's records into this collection and restore the
+    /// global completion order `(finish, job)` — the order the serial
+    /// driver produces, since it appends records as jobs finish and
+    /// breaks completion ties by arrival (job id) order.
+    pub fn merge(&mut self, other: SojournStats) {
+        self.records.extend(other.records);
+        self.records
+            .sort_by(|a, b| a.finish.total_cmp(&b.finish).then(a.job.cmp(&b.job)));
+    }
+
     pub fn sojourns(&self) -> Vec<f64> {
         self.records.iter().map(|r| r.sojourn()).collect()
     }
@@ -159,6 +169,21 @@ mod tests {
         s.push(rec(2, JobClass::Large, 0.0, 100.0));
         assert_eq!(s.ecdf(Some(JobClass::Small)).len(), 1);
         assert_eq!(s.ecdf(None).len(), 2);
+    }
+
+    #[test]
+    fn merge_restores_completion_order() {
+        let mut a = SojournStats::new();
+        a.push(rec(1, JobClass::Small, 0.0, 30.0));
+        a.push(rec(4, JobClass::Small, 0.0, 50.0));
+        let mut b = SojournStats::new();
+        b.push(rec(2, JobClass::Small, 0.0, 10.0));
+        b.push(rec(3, JobClass::Small, 0.0, 30.0));
+        a.merge(b);
+        let order: Vec<u64> = a.records().iter().map(|r| r.job).collect();
+        // Ties on finish time fall back to job id (1 before 3 at t=30).
+        assert_eq!(order, vec![2, 1, 3, 4]);
+        assert_eq!(a.len(), 4);
     }
 
     #[test]

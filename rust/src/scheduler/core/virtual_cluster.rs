@@ -81,6 +81,33 @@ pub trait MaxMinBackend {
         out.clear();
         out.extend_from_slice(&alloc);
     }
+
+    /// Batched allocation over independent capacity pools in **one**
+    /// backend call: `demands` is the concatenation of per-segment
+    /// demand slices, `segments` their `(len, capacity)` layout, and
+    /// `out` (cleared first) receives the concatenated allocations in
+    /// the same layout. Each segment is max-min fair *within itself* —
+    /// segments never share capacity. This is the per-heartbeat
+    /// map+reduce aging pair collapsed into a single backend dispatch
+    /// ([`VirtualCluster::age_pair_to`]); batching must not change the
+    /// numbers, so every implementation must match the per-segment
+    /// [`MaxMinBackend::allocate_into`] loop exactly (pinned by test).
+    fn allocate_segments_into(
+        &mut self,
+        demands: &[f64],
+        segments: &[(usize, f64)],
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        let mut start = 0;
+        let mut tmp = Vec::new();
+        for &(len, capacity) in segments {
+            self.allocate_into(&demands[start..start + len], capacity, &mut tmp);
+            out.extend_from_slice(&tmp);
+            start += len;
+        }
+        debug_assert_eq!(start, demands.len(), "segment layout covers the demands");
+    }
 }
 
 /// Native water-filling max-min allocation (with a reusable index-order
@@ -99,6 +126,23 @@ impl MaxMinBackend for NativeMaxMin {
 
     fn allocate_into(&mut self, demands: &[f64], capacity: f64, out: &mut Vec<f64>) {
         maxmin_waterfill_into(demands, capacity, out, &mut self.order);
+    }
+
+    /// Allocation-free batching: water-fill each segment directly into
+    /// `out` (no per-segment temporary — the default's `tmp` vec).
+    fn allocate_segments_into(
+        &mut self,
+        demands: &[f64],
+        segments: &[(usize, f64)],
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        let mut start = 0;
+        for &(len, capacity) in segments {
+            maxmin_waterfill_append(&demands[start..start + len], capacity, out, &mut self.order);
+            start += len;
+        }
+        debug_assert_eq!(start, demands.len(), "segment layout covers the demands");
     }
 }
 
@@ -119,12 +163,26 @@ pub fn maxmin_waterfill_into(
     alloc: &mut Vec<f64>,
     order: &mut Vec<usize>,
 ) {
-    let n = demands.len();
     alloc.clear();
+    maxmin_waterfill_append(demands, capacity, alloc, order);
+}
+
+/// [`maxmin_waterfill_into`] without the clear: the allocation is
+/// **appended** to `alloc`, so independent capacity pools can be water-
+/// filled back to back into one buffer
+/// ([`MaxMinBackend::allocate_segments_into`]).
+pub fn maxmin_waterfill_append(
+    demands: &[f64],
+    capacity: f64,
+    alloc: &mut Vec<f64>,
+    order: &mut Vec<usize>,
+) {
+    let n = demands.len();
     if n == 0 {
         return;
     }
     debug_assert!(demands.iter().all(|d| *d >= 0.0 && d.is_finite()));
+    let base = alloc.len();
     let total: f64 = demands.iter().sum();
     if total <= capacity {
         // Everyone satisfied.
@@ -135,12 +193,12 @@ pub fn maxmin_waterfill_into(
     order.clear();
     order.extend(0..n);
     order.sort_by(|&a, &b| demands[a].total_cmp(&demands[b]));
-    alloc.resize(n, 0.0);
+    alloc.resize(base + n, 0.0);
     let mut remaining = capacity;
     for (rank, &i) in order.iter().enumerate() {
         let claim = remaining / (n - rank) as f64;
         let a = demands[i].min(claim);
-        alloc[i] = a;
+        alloc[base + i] = a;
         remaining -= a;
     }
 }
@@ -292,6 +350,46 @@ impl VirtualCluster {
         // the projected completion order and absolute finish times remain
         // valid, so the cache survives (a 5x end-to-end win — §Perf).
         // Only structural changes (add/remove/set_total) invalidate.
+    }
+
+    /// Age two phase clusters (map + reduce) to `now` with **one**
+    /// batched backend call ([`MaxMinBackend::allocate_segments_into`])
+    /// instead of two — the per-heartbeat aging pair of
+    /// [`FspDiscipline`](crate::scheduler::disciplines::fsp::FspDiscipline).
+    ///
+    /// The batch applies only when both clusters advance by the same
+    /// positive step and both hold jobs; otherwise (one side was aged
+    /// mid-event by a structural change, or is empty) it falls back to
+    /// two sequential [`VirtualCluster::age_to`] calls. Either path
+    /// produces bit-identical progress (pinned by test): the batched
+    /// segments are water-filled with exactly the per-phase arithmetic.
+    pub fn age_pair_to(a: &mut VirtualCluster, b: &mut VirtualCluster, now: Time) {
+        let dt = now - a.last_event;
+        if dt != now - b.last_event || dt <= 0.0 || a.vjobs.is_empty() || b.vjobs.is_empty() {
+            a.age_to(now);
+            b.age_to(now);
+            return;
+        }
+        a.last_event = now;
+        b.last_event = now;
+        let (slots_a, slots_b) = (a.slots, b.slots);
+        a.demands.clear();
+        a.demands.extend(a.vjobs.iter().map(|j| j.width().min(slots_a)));
+        a.demands.extend(b.vjobs.iter().map(|j| j.width().min(slots_b)));
+        let split = a.vjobs.len();
+        let segments = [(split, slots_a), (a.demands.len() - split, slots_b)];
+        // `a`'s backend serves the whole batch (both sides of an FSP
+        // pair share the backend kind) and `a`'s scratch holds the
+        // concatenated result.
+        a.backend
+            .allocate_segments_into(&a.demands, &segments, &mut a.alloc);
+        for (j, &x) in a.vjobs.iter_mut().zip(a.alloc[..split].iter()) {
+            j.aged = (j.aged + x * dt).min(j.total);
+        }
+        for (j, &x) in b.vjobs.iter_mut().zip(a.alloc[split..].iter()) {
+            j.aged = (j.aged + x * dt).min(j.total);
+        }
+        // Pure aging: both caches stay valid (same contract as `age_to`).
     }
 
     /// Register a job's phase (ages the system first). `total` is the
@@ -514,6 +612,88 @@ mod tests {
         let mut out = Vec::new();
         native.allocate_into(&[1.0, 10.0, 10.0], 9.0, &mut out);
         assert_eq!(out, maxmin_waterfill(&[1.0, 10.0, 10.0], 9.0));
+    }
+
+    #[test]
+    fn waterfill_append_concatenates_independent_pools() {
+        let mut alloc = Vec::new();
+        let mut order = Vec::new();
+        maxmin_waterfill_append(&[1.0, 10.0, 10.0], 9.0, &mut alloc, &mut order);
+        maxmin_waterfill_append(&[5.0, 5.0], 6.0, &mut alloc, &mut order);
+        maxmin_waterfill_append(&[], 4.0, &mut alloc, &mut order);
+        assert_eq!(alloc.len(), 5);
+        assert_eq!(&alloc[..3], maxmin_waterfill(&[1.0, 10.0, 10.0], 9.0).as_slice());
+        assert_eq!(&alloc[3..], maxmin_waterfill(&[5.0, 5.0], 6.0).as_slice());
+    }
+
+    #[test]
+    fn allocate_segments_matches_the_per_segment_loop_exactly() {
+        // The batched entry point must be *bit-identical* to looping
+        // allocate_into over the segments — batching is a dispatch
+        // optimization, never a numerical change.
+        let demands = [3.0, 0.5, 7.0, 2.0, 9.0, 1.0, 10.0, 10.0];
+        let segments = [(5usize, 4.0), (3usize, 9.0)];
+        let mut native = NativeMaxMin::default();
+        let mut batched = Vec::new();
+        native.allocate_segments_into(&demands, &segments, &mut batched);
+        let mut looped = Vec::new();
+        let mut tmp = Vec::new();
+        let mut start = 0;
+        for &(len, capacity) in &segments {
+            native.allocate_into(&demands[start..start + len], capacity, &mut tmp);
+            looped.extend_from_slice(&tmp);
+            start += len;
+        }
+        assert_eq!(batched, looped);
+        // An under-capacity segment next to a saturated one.
+        let segments = [(5usize, 100.0), (3usize, 9.0)];
+        native.allocate_segments_into(&demands, &segments, &mut batched);
+        assert_eq!(&batched[..5], &demands[..5], "satisfied segment copies through");
+        assert_eq!(&batched[5..], maxmin_waterfill(&demands[5..], 9.0).as_slice());
+    }
+
+    #[test]
+    fn age_pair_matches_sequential_aging_exactly() {
+        let build = || {
+            let mut m = VirtualCluster::new(4);
+            let mut r = VirtualCluster::new(2);
+            m.add_job(1, 50.0, 4, 0.0);
+            m.add_job(2, 30.0, 8, 0.0);
+            m.add_job(3, 7.0, 1, 0.0);
+            r.add_job(1, 20.0, 2, 0.0);
+            r.add_job(2, 60.0, 6, 0.0);
+            (m, r)
+        };
+        let (mut m1, mut r1) = build();
+        let (mut m2, mut r2) = build();
+        for t in [2.0, 5.5, 9.0, 9.0, 31.0] {
+            m1.age_to(t);
+            r1.age_to(t);
+            VirtualCluster::age_pair_to(&mut m2, &mut r2, t);
+        }
+        for id in [1, 2, 3] {
+            // Bitwise equality: the batch is the same arithmetic.
+            assert_eq!(m1.remaining(id), m2.remaining(id), "map job {id}");
+            assert_eq!(r1.remaining(id), r2.remaining(id), "reduce job {id}");
+        }
+    }
+
+    #[test]
+    fn age_pair_falls_back_when_clocks_diverge_or_a_side_is_empty() {
+        let mut m = VirtualCluster::new(2);
+        let mut r = VirtualCluster::new(2);
+        m.add_job(1, 10.0, 2, 0.0);
+        r.add_job(1, 12.0, 2, 0.0);
+        // Desynchronize the clocks: m was aged mid-event.
+        m.age_to(1.0);
+        VirtualCluster::age_pair_to(&mut m, &mut r, 3.0);
+        assert!((m.remaining(1).unwrap() - 4.0).abs() < 1e-12);
+        assert!((r.remaining(1).unwrap() - 6.0).abs() < 1e-12);
+        // One side empty: the non-empty side still ages.
+        let mut empty = VirtualCluster::new(2);
+        VirtualCluster::age_pair_to(&mut m, &mut empty, 4.0);
+        assert!((m.remaining(1).unwrap() - 2.0).abs() < 1e-12);
+        assert!(empty.is_empty());
     }
 
     // -- virtual cluster ---------------------------------------------------

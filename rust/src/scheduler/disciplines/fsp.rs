@@ -76,9 +76,10 @@ impl Discipline for FspDiscipline {
     }
 
     fn advance(&mut self, now: Time) {
-        // Job aging: advance the PS reference simulations to now (§3.1).
-        self.vc_map.age_to(now);
-        self.vc_reduce.age_to(now);
+        // Job aging: advance both PS reference simulations to now in one
+        // batched max-min backend call (§3.1; bit-identical to the
+        // former per-phase `age_to` loop — pinned by test).
+        VirtualCluster::age_pair_to(&mut self.vc_map, &mut self.vc_reduce, now);
     }
 
     fn generation(&self, phase: Phase) -> u64 {

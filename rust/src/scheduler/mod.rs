@@ -92,6 +92,64 @@ impl<'a> SchedView<'a> {
     }
 }
 
+/// Compact per-shard scheduling-demand summary, shipped from shard
+/// workers to the coordinator at every window boundary of a sharded run
+/// (fast merge mode). The coordinator routes new arrivals from the
+/// *merged* digests — it never touches a shard's live `SchedView` — so
+/// the hot path stays lock-free: digests are plain `Copy` data moved
+/// through the window MPSC channels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DemandDigest {
+    /// Jobs arrived and not yet finished on the shard.
+    pub live_jobs: usize,
+    /// Map tasks waiting for a slot.
+    pub pending_maps: usize,
+    /// Reduce tasks waiting for a slot.
+    pub pending_reduces: usize,
+    /// Free map slots on the shard's nodes.
+    pub free_map_slots: usize,
+    /// Free reduce slots on the shard's nodes.
+    pub free_reduce_slots: usize,
+}
+
+impl DemandDigest {
+    /// Snapshot the digest from a shard's live state.
+    pub fn snapshot(jobs: &JobTable, cluster: &Cluster) -> Self {
+        use crate::job::Phase;
+        let mut d = DemandDigest {
+            free_map_slots: cluster.free_slots(Phase::Map),
+            free_reduce_slots: cluster.free_slots(Phase::Reduce),
+            ..Default::default()
+        };
+        for job in jobs.values() {
+            if job.is_finished() {
+                continue;
+            }
+            d.live_jobs += 1;
+            d.pending_maps += job.pending_tasks(Phase::Map);
+            d.pending_reduces += job.pending_tasks(Phase::Reduce);
+        }
+        d
+    }
+
+    /// Fold another shard's digest into this one (the coordinator's
+    /// cluster-wide view is the sum over shards).
+    pub fn merge(&mut self, other: &DemandDigest) {
+        self.live_jobs += other.live_jobs;
+        self.pending_maps += other.pending_maps;
+        self.pending_reduces += other.pending_reduces;
+        self.free_map_slots += other.free_map_slots;
+        self.free_reduce_slots += other.free_reduce_slots;
+    }
+
+    /// Whether the shard is overloaded: queued map work with no free map
+    /// slot. The coordinator prefers routing new jobs away from (and
+    /// accepting spillover from) such shards.
+    pub fn saturated(&self) -> bool {
+        self.free_map_slots == 0 && self.pending_maps > 0
+    }
+}
+
 /// A scheduling decision applied by the driver.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Action {
@@ -359,6 +417,34 @@ impl SchedulerKind {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn demand_digest_merges_and_flags_saturation() {
+        let mut total = DemandDigest::default();
+        assert!(!total.saturated(), "an idle shard is not saturated");
+        let a = DemandDigest {
+            live_jobs: 2,
+            pending_maps: 5,
+            pending_reduces: 1,
+            free_map_slots: 0,
+            free_reduce_slots: 2,
+        };
+        let b = DemandDigest {
+            live_jobs: 1,
+            pending_maps: 0,
+            pending_reduces: 0,
+            free_map_slots: 4,
+            free_reduce_slots: 2,
+        };
+        assert!(a.saturated());
+        assert!(!b.saturated());
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.live_jobs, 3);
+        assert_eq!(total.pending_maps, 5);
+        assert_eq!(total.free_map_slots, 4);
+        assert_eq!(total.free_reduce_slots, 4);
+    }
 
     #[test]
     fn registry_names_parse_to_matching_labels() {

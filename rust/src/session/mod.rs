@@ -69,6 +69,17 @@ impl<'a> Simulation<'a> {
         self
     }
 
+    /// Shard the simulation ([`ShardSpec`]): partition the cluster into
+    /// `spec.count` shards merged deterministically (byte-identical to
+    /// serial) or run on real threads under a conservative window
+    /// barrier (`MergeMode::Fast`).
+    ///
+    /// [`ShardSpec`]: crate::sim::ShardSpec
+    pub fn shards(mut self, spec: crate::sim::ShardSpec) -> Self {
+        self.cfg.shards = spec;
+        self
+    }
+
     /// Attach the workload source (closed replay, open generator, or
     /// streaming trace).
     pub fn workload(mut self, source: impl WorkloadSource + 'a) -> Self {
@@ -166,5 +177,25 @@ mod tests {
     #[should_panic(expected = "without a workload source")]
     fn run_without_source_panics_with_guidance() {
         let _ = Simulation::new(SimConfig::default()).run();
+    }
+
+    #[test]
+    fn deterministic_shards_match_serial() {
+        let wl = synthetic::fig7_workload();
+        let mut cfg = SimConfig::default();
+        cfg.cluster.nodes = 4;
+        cfg.cluster.map_slots = 1;
+        let serial = Simulation::new(cfg.clone()).workload(wl.as_source()).run();
+        let sharded = Simulation::new(cfg)
+            .shards(crate::sim::ShardSpec {
+                count: 2,
+                ..Default::default()
+            })
+            .workload(wl.as_source())
+            .run();
+        assert_eq!(serial.events_processed, sharded.events_processed);
+        assert_eq!(serial.makespan, sharded.makespan);
+        assert_eq!(serial.sojourn.mean(), sharded.sojourn.mean());
+        assert_eq!(serial.counters.launches, sharded.counters.launches);
     }
 }

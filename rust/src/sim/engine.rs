@@ -41,6 +41,9 @@ pub enum StopReason {
     Halted,
     /// The event-count guard tripped (indicates a livelock/bug).
     EventLimit,
+    /// The run reached a time-window horizon ([`Engine::run_until`]):
+    /// every remaining event fires at or after the horizon.
+    Horizon,
 }
 
 /// Event loop over a [`PendingQueue`] backend (`Q` defaults to the
@@ -285,6 +288,72 @@ impl<E, Q: PendingQueue<E>> Engine<E, Q> {
             handler(self, ev.time, ev.event);
         }
     }
+
+    /// [`Engine::run_filtered`] bounded by a time-window horizon: the
+    /// loop returns [`StopReason::Horizon`] as soon as the earliest
+    /// pending event fires at or after `horizon`, **without** popping it
+    /// or advancing the clock — events at exactly the horizon belong to
+    /// the next window. Sharded execution drives each shard's engine in
+    /// conservative windows with this entry point, then drains the tail
+    /// with a final [`Engine::run_filtered`] call.
+    pub fn run_until<C, F>(&mut self, horizon: Time, chain_of: C, mut handler: F) -> StopReason
+    where
+        C: Fn(&E) -> Option<(usize, u32)>,
+        F: FnMut(&mut Engine<E, Q>, Time, E),
+    {
+        loop {
+            if self.halt {
+                self.halt = false;
+                return StopReason::Halted;
+            }
+            match self.queue.peek_time() {
+                None => return StopReason::Drained,
+                Some(t) if t >= horizon => return StopReason::Horizon,
+                Some(_) => {}
+            }
+            let ev = self.queue.pop().expect("peeked event vanished");
+            debug_assert!(
+                ev.time >= self.now,
+                "time went backwards: {} -> {}",
+                self.now,
+                ev.time
+            );
+            self.now = ev.time;
+            if let Some((chain, epoch)) = chain_of(&ev.event) {
+                let stale = match self.chain_epochs.get(chain) {
+                    Some(&cur) => cur != epoch,
+                    None => false,
+                };
+                if stale {
+                    self.skipped += 1;
+                    continue;
+                }
+            }
+            self.processed += 1;
+            if self.processed > self.event_limit {
+                return StopReason::EventLimit;
+            }
+            handler(self, ev.time, ev.event);
+        }
+    }
+
+    /// Advance the clock to `now` without dispatching anything. Sharded
+    /// window execution uses this to pin a shard's clock to the window
+    /// boundary before injecting the next window's events (so injected
+    /// arrivals at the boundary never look like the past).
+    pub fn advance_to(&mut self, now: Time) {
+        assert!(
+            now >= self.now,
+            "cannot rewind the clock: now={} requested={}",
+            self.now,
+            now
+        );
+        debug_assert!(
+            now <= self.queue.peek_time().unwrap_or(f64::INFINITY),
+            "advancing past a pending event"
+        );
+        self.now = now;
+    }
 }
 
 #[cfg(test)]
@@ -485,6 +554,80 @@ mod tests {
         assert_eq!(eng.processed(), 3);
         assert_eq!(eng.pushed(), 3);
         assert_eq!(eng.heap_peak(), 2);
+    }
+
+    #[test]
+    fn run_until_stops_at_the_horizon_without_advancing() {
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.schedule_at(1.0, Ev::Ping(1));
+        eng.schedule_at(2.0, Ev::Ping(2));
+        eng.schedule_at(3.0, Ev::Ping(3));
+        let mut seen = Vec::new();
+        // An event at exactly the horizon belongs to the *next* window.
+        let reason = eng.run_until(2.0, |_| None, |_, t, _| seen.push(t));
+        assert_eq!(reason, StopReason::Horizon);
+        assert_eq!(seen, vec![1.0]);
+        assert_eq!(eng.now(), 1.0, "clock stays at the last dispatched event");
+        assert_eq!(eng.pending(), 2);
+        // The boundary pin lets the next window inject at the horizon.
+        eng.advance_to(2.0);
+        eng.schedule_at_priority(2.0, Ev::Ping(20));
+        let reason = eng.run_until(4.0, |_| None, |_, t, _| seen.push(t));
+        assert_eq!(reason, StopReason::Horizon);
+        assert_eq!(seen, vec![1.0, 2.0, 2.0, 3.0]);
+        let reason = eng.run_until(f64::INFINITY, |_| None, |_, t, _| seen.push(t));
+        assert_eq!(reason, StopReason::Drained);
+        assert_eq!(seen.len(), 4);
+    }
+
+    #[test]
+    fn run_until_honors_halt_chains_and_the_event_limit() {
+        // Halt wins over the horizon check.
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.schedule_at(1.0, Ev::Stop);
+        eng.schedule_at(1.5, Ev::Ping(9));
+        let reason = eng.run_until(10.0, |_| None, |e, _, ev| {
+            if let Ev::Stop = ev {
+                e.halt();
+            }
+        });
+        assert_eq!(reason, StopReason::Halted);
+        assert_eq!(eng.pending(), 1);
+
+        // Stale chain events are lazily dropped inside the window.
+        #[derive(Debug)]
+        enum Cev {
+            Tick { chain: usize, epoch: u32 },
+        }
+        let chain_of = |ev: &Cev| {
+            let Cev::Tick { chain, epoch } = ev;
+            Some((*chain, *epoch))
+        };
+        let mut ceng: Engine<Cev> = Engine::new();
+        ceng.init_chains(1);
+        ceng.schedule_at(1.0, Cev::Tick { chain: 0, epoch: 0 });
+        ceng.bump_chain(0);
+        ceng.schedule_at(2.0, Cev::Tick { chain: 0, epoch: 1 });
+        let mut n = 0;
+        let reason = ceng.run_until(5.0, chain_of, |_, _, _| n += 1);
+        assert_eq!(reason, StopReason::Drained);
+        assert_eq!(n, 1);
+        assert_eq!(ceng.skipped(), 1);
+
+        // The runaway guard trips identically under a horizon.
+        let mut lim: Engine<Ev> = Engine::new().with_event_limit(5);
+        lim.schedule_at(0.0, Ev::Ping(0));
+        let reason = lim.run_until(1.0, |_| None, |e, _, _| e.schedule_in(0.0, Ev::Ping(0)));
+        assert_eq!(reason, StopReason::EventLimit);
+    }
+
+    #[test]
+    #[should_panic(expected = "rewind")]
+    fn advance_to_rejects_the_past() {
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.schedule_at(1.0, Ev::Ping(1));
+        eng.run(|_, _, _| {});
+        eng.advance_to(0.5);
     }
 
     #[test]

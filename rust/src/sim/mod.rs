@@ -21,10 +21,12 @@
 pub mod calendar;
 pub mod engine;
 pub mod queue;
+pub mod shard;
 
 pub use calendar::CalendarQueue;
 pub use engine::{Engine, StopReason};
 pub use queue::{EventQueue, PendingQueue, QueueKind, ScheduledEvent};
+pub use shard::{MergeMode, ShardSpec, ShardedQueue};
 
 /// Simulated time, in seconds since simulation start.
 pub type Time = f64;

@@ -1,0 +1,379 @@
+//! Sharded execution: spec types and the deterministic-merge queue.
+//!
+//! One simulation can be split across `S` shards, each owning a
+//! contiguous slice of the cluster ([`Partition`]) and its own event
+//! timeline. Two merge modes exist (selected by [`MergeMode`] on the
+//! [`ShardSpec`]):
+//!
+//! * **Deterministic** — the per-shard timelines are lanes of one
+//!   [`ShardedQueue`], k-way merged on the exact global
+//!   `(time, class, seq)` delivery order. A single driver loop consumes
+//!   the merged stream, so the run is *byte-identical* to the serial
+//!   driver — the shard structure is observable only through the queue
+//!   label. This is the pinned serial-equivalence mode.
+//! * **Fast** — shards run on real threads under a conservative
+//!   time-window barrier, exchanging jobs and demand digests through
+//!   MPSC channels at window boundaries (see
+//!   [`run_session`](crate::cluster::driver::run_session)). Tie order
+//!   across shards is relaxed; aggregate metrics are gated by tolerance
+//!   instead of byte equality.
+//!
+//! [`Partition`]: crate::cluster::partition::Partition
+
+use super::queue::{sealed, PendingQueue, ScheduledEvent};
+use super::Time;
+
+/// How a sharded run recombines its per-shard results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergeMode {
+    /// Exact k-way merge on the global `(time, class, seq)` order:
+    /// byte-identical to the serial driver (the default).
+    #[default]
+    Deterministic,
+    /// Threaded window-barrier execution; same-instant tie order across
+    /// shards is relaxed for throughput.
+    Fast,
+}
+
+impl MergeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeMode::Deterministic => "deterministic",
+            MergeMode::Fast => "fast",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "deterministic" => Ok(MergeMode::Deterministic),
+            "fast" => Ok(MergeMode::Fast),
+            other => anyhow::bail!("unknown merge mode {other:?} (deterministic|fast)"),
+        }
+    }
+}
+
+/// Sharding configuration carried on
+/// [`SimConfig`](crate::cluster::driver::SimConfig) (`--shards`,
+/// `--merge`, `--window`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardSpec {
+    /// Number of cluster partitions; `1` is the plain serial driver.
+    pub count: usize,
+    /// Recombination mode for `count > 1`.
+    pub merge: MergeMode,
+    /// Barrier window length for the fast mode, simulated seconds.
+    /// `None` derives the window from the heartbeat period (safe but
+    /// barrier-heavy on sparse workloads; benches use wider windows).
+    pub window_s: Option<f64>,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        Self {
+            count: 1,
+            merge: MergeMode::Deterministic,
+            window_s: None,
+        }
+    }
+}
+
+impl ShardSpec {
+    /// Whether this spec degenerates to the single-loop serial driver.
+    pub fn is_serial(&self) -> bool {
+        self.count <= 1
+    }
+
+    /// Clamp the shard count to the node count (every shard must own at
+    /// least one node).
+    pub fn normalized(mut self, nodes: usize) -> Self {
+        self.count = self.count.clamp(1, nodes.max(1));
+        self
+    }
+
+    /// The effective barrier window: the explicit setting when positive
+    /// and finite, else one heartbeat period.
+    pub fn window(&self, heartbeat_s: f64) -> f64 {
+        match self.window_s {
+            Some(w) if w.is_finite() && w > 0.0 => w,
+            _ => heartbeat_s.max(f64::MIN_POSITIVE),
+        }
+    }
+}
+
+/// Routes an event to the shard lane that owns it.
+pub type LaneRouter<E> = Box<dyn Fn(&E) -> usize>;
+
+/// The deterministic-merge pending-event set: `S` per-shard lanes (each
+/// an ordinary [`PendingQueue`] backend over `(global_seq, event)`
+/// payloads) k-way merged on the **global** `(time, class, seq)` order.
+///
+/// Every push stamps the event with a queue-wide sequence number and
+/// routes it to its owning lane; pop compares lane heads on
+/// `(time, class, global_seq)`. Within one lane the lane-local insertion
+/// order and the global sequence order agree (both increase with every
+/// push), so each lane's head is also its global minimum — the k-way
+/// min over heads reproduces the exact serial delivery order, and the
+/// observable `ScheduledEvent` stream (times, classes, sequence numbers)
+/// is identical to a single [`EventQueue`](super::EventQueue).
+///
+/// `peek` serves from a stash that is a *pure cache* of the lane heads
+/// (cloned out and re-stamped, invalidated by any push/pop): the trait
+/// returns a borrow, but the merged head lives in no single lane.
+pub struct ShardedQueue<E: Clone, Q: PendingQueue<(u64, E)>> {
+    lanes: Vec<Q>,
+    router: LaneRouter<E>,
+    next_seq: u64,
+    live: usize,
+    peak_len: usize,
+    stash: Option<ScheduledEvent<E>>,
+}
+
+impl<E: Clone, Q: PendingQueue<(u64, E)>> ShardedQueue<E, Q> {
+    /// A queue with `count` lanes. `gap_s` is the *global* typical
+    /// inter-event gap; each lane sees only `1/count` of the stream, so
+    /// lanes are tuned to `gap_s * count`.
+    pub fn new(count: usize, gap_s: f64, router: LaneRouter<E>) -> Self {
+        let count = count.max(1);
+        let lane_gap = gap_s * count as f64;
+        Self {
+            lanes: (0..count).map(|_| Q::with_gap_hint(lane_gap)).collect(),
+            router,
+            next_seq: 0,
+            live: 0,
+            peak_len: 0,
+            stash: None,
+        }
+    }
+
+    /// Number of lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn push_routed(&mut self, time: Time, event: E, priority: bool) -> u64 {
+        self.stash = None;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let lane = (self.router)(&event).min(self.lanes.len() - 1);
+        if priority {
+            self.lanes[lane].push_priority(time, (seq, event));
+        } else {
+            self.lanes[lane].push(time, (seq, event));
+        }
+        self.live += 1;
+        self.peak_len = self.peak_len.max(self.live);
+        seq
+    }
+
+    /// The lane holding the global minimum head, by `(time, class,
+    /// global_seq)`. Global sequence numbers are unique, so the order is
+    /// total and tie-free across lanes.
+    fn min_lane(&mut self) -> Option<usize> {
+        let mut best: Option<(Time, u8, u64, usize)> = None;
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let Some(head) = lane.peek() else { continue };
+            let key = (head.time, head.class, head.event.0, i);
+            let better = match &best {
+                None => true,
+                Some((t, c, s, _)) => {
+                    (key.0.total_cmp(t))
+                        .then(key.1.cmp(c))
+                        .then(key.2.cmp(s))
+                        .is_lt()
+                }
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, _, i)| i)
+    }
+}
+
+impl<E: Clone, Q: PendingQueue<(u64, E)>> sealed::Sealed for ShardedQueue<E, Q> {}
+
+impl<E: Clone, Q: PendingQueue<(u64, E)>> PendingQueue<E> for ShardedQueue<E, Q> {
+    const LABEL: &'static str = "sharded";
+
+    /// Trait-mandated fallback: a single lane with a trivial router
+    /// (the driver always constructs sharded queues via
+    /// [`ShardedQueue::new`]).
+    fn with_gap_hint(gap_s: f64) -> Self {
+        Self::new(1, gap_s, Box::new(|_| 0))
+    }
+
+    fn push(&mut self, time: Time, event: E) -> u64 {
+        self.push_routed(time, event, false)
+    }
+
+    fn push_priority(&mut self, time: Time, event: E) -> u64 {
+        self.push_routed(time, event, true)
+    }
+
+    fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        self.stash = None;
+        let lane = self.min_lane()?;
+        let inner = self.lanes[lane].pop().expect("peeked lane head vanished");
+        self.live -= 1;
+        // Re-stamp with the global sequence number: the merged stream is
+        // observably identical to a single queue's.
+        Some(ScheduledEvent {
+            time: inner.time,
+            class: inner.class,
+            seq: inner.event.0,
+            event: inner.event.1,
+        })
+    }
+
+    fn peek(&mut self) -> Option<&ScheduledEvent<E>> {
+        if self.stash.is_none() {
+            let lane = self.min_lane()?;
+            let head = self.lanes[lane].peek().expect("min lane lost its head");
+            self.stash = Some(ScheduledEvent {
+                time: head.time,
+                class: head.class,
+                seq: head.event.0,
+                event: head.event.1.clone(),
+            });
+        }
+        self.stash.as_ref()
+    }
+
+    fn peek_time(&mut self) -> Option<Time> {
+        // Stash-free: the earliest time needs no tie-breaking.
+        self.lanes
+            .iter_mut()
+            .filter_map(|l| l.peek_time())
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    fn scheduled_count(&self) -> u64 {
+        self.next_seq
+    }
+
+    fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CalendarQueue, EventQueue};
+
+    #[test]
+    fn merge_mode_names_round_trip() {
+        for mode in [MergeMode::Deterministic, MergeMode::Fast] {
+            assert_eq!(MergeMode::from_name(mode.name()).unwrap(), mode);
+        }
+        assert!(MergeMode::from_name("loose").is_err());
+        assert_eq!(MergeMode::default(), MergeMode::Deterministic);
+    }
+
+    #[test]
+    fn spec_defaults_to_serial_and_normalizes() {
+        let spec = ShardSpec::default();
+        assert!(spec.is_serial());
+        assert_eq!(spec.normalized(4).count, 1);
+        let wide = ShardSpec {
+            count: 16,
+            ..Default::default()
+        };
+        assert_eq!(wide.normalized(4).count, 4);
+        assert_eq!(wide.normalized(0).count, 1);
+        assert!(!wide.normalized(8).is_serial());
+    }
+
+    #[test]
+    fn spec_window_falls_back_to_heartbeat() {
+        let mut spec = ShardSpec::default();
+        assert_eq!(spec.window(3.0), 3.0);
+        spec.window_s = Some(30.0);
+        assert_eq!(spec.window(3.0), 30.0);
+        spec.window_s = Some(0.0);
+        assert_eq!(spec.window(3.0), 3.0);
+        spec.window_s = Some(f64::INFINITY);
+        assert_eq!(spec.window(3.0), 3.0);
+    }
+
+    /// Drive the same operation stream through a plain queue and a
+    /// sharded one; the full observable pop stream — times, classes and
+    /// sequence numbers — must match exactly, whatever the router.
+    fn assert_merged_stream_matches<Q: PendingQueue<(u64, u32)>>(lanes: usize) {
+        let mut reference = EventQueue::new();
+        let mut sharded: ShardedQueue<u32, Q> =
+            ShardedQueue::new(lanes, 0.5, Box::new(|ev: &u32| (*ev as usize) % 7));
+        let times = [
+            3.0, 1.0, 1.0, 2.5, 1.0, 9.0, 2.5, 2.5, 0.5, 4.0, 1.0, 3.0, 3.0, 0.5, 6.0,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            let ev = i as u32;
+            if i % 4 == 0 {
+                reference.push_priority(t, ev);
+                sharded.push_priority(t, ev);
+            } else {
+                reference.push(t, ev);
+                sharded.push(t, ev);
+            }
+        }
+        assert_eq!(sharded.len(), times.len());
+        assert_eq!(sharded.scheduled_count(), times.len() as u64);
+        assert_eq!(sharded.peak_len(), times.len());
+        loop {
+            // Interleave peeks to exercise the stash cache.
+            let (pt, ps) = match sharded.peek() {
+                Some(head) => (head.time, head.seq),
+                None => break,
+            };
+            assert_eq!(sharded.peek_time(), Some(pt));
+            let want = reference.pop().expect("reference drained early");
+            let got = sharded.pop().expect("sharded drained early");
+            assert_eq!((got.time, got.class, got.seq), (want.time, want.class, want.seq));
+            assert_eq!(got.event, want.event);
+            assert_eq!((pt, ps), (want.time, want.seq), "peek matches pop");
+        }
+        assert!(reference.pop().is_none(), "sharded queue dropped events");
+        assert!(sharded.is_empty());
+    }
+
+    #[test]
+    fn sharded_heap_lanes_reproduce_serial_order() {
+        assert_merged_stream_matches::<EventQueue<(u64, u32)>>(1);
+        assert_merged_stream_matches::<EventQueue<(u64, u32)>>(3);
+        assert_merged_stream_matches::<EventQueue<(u64, u32)>>(7);
+    }
+
+    #[test]
+    fn sharded_calendar_lanes_reproduce_serial_order() {
+        assert_merged_stream_matches::<CalendarQueue<(u64, u32)>>(2);
+        assert_merged_stream_matches::<CalendarQueue<(u64, u32)>>(5);
+    }
+
+    #[test]
+    fn push_invalidates_the_peek_stash() {
+        let mut q: ShardedQueue<u32, EventQueue<(u64, u32)>> =
+            ShardedQueue::new(2, 1.0, Box::new(|ev: &u32| *ev as usize));
+        q.push(5.0, 1);
+        assert_eq!(q.peek().unwrap().event, 1);
+        // An earlier event on the *other* lane must displace the cached
+        // head.
+        q.push(1.0, 0);
+        assert_eq!(q.peek().unwrap().event, 0);
+        assert_eq!(q.pop().unwrap().event, 0);
+        assert_eq!(q.pop().unwrap().event, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn router_out_of_range_clamps_to_last_lane() {
+        let mut q: ShardedQueue<u32, EventQueue<(u64, u32)>> =
+            ShardedQueue::new(2, 1.0, Box::new(|_| 99));
+        q.push(1.0, 7);
+        assert_eq!(q.lane_count(), 2);
+        assert_eq!(q.pop().unwrap().event, 7);
+    }
+}

@@ -80,6 +80,13 @@ impl JobTimeline {
     pub fn is_balanced(&self) -> bool {
         self.deltas.iter().map(|(_, d)| d).sum::<i64>() == 0
     }
+
+    /// Append another timeline's raw events. Order does not matter:
+    /// every reader sorts ([`JobTimeline::step_series`]) or reduces over
+    /// the whole delta set.
+    pub fn merge(&mut self, other: JobTimeline) {
+        self.deltas.extend(other.deltas);
+    }
 }
 
 /// Timelines for a set of jobs, keyed by an opaque id.
@@ -103,6 +110,15 @@ impl TimelineSet {
 
     pub fn jobs(&self) -> impl Iterator<Item = (&u64, &JobTimeline)> {
         self.jobs.iter()
+    }
+
+    /// Fold another set into this one, concatenating timelines of jobs
+    /// present in both (sharded-run merge; a job that migrated between
+    /// shards has slot intervals in several sets).
+    pub fn merge(&mut self, other: TimelineSet) {
+        for (job, tl) in other.jobs {
+            self.jobs.entry(job).or_default().merge(tl);
+        }
     }
 
     /// Total concurrent slots across all jobs at time `t` — used to assert
@@ -185,6 +201,23 @@ mod tests {
         assert_eq!(ts.total_slots_at(1.0), 2);
         assert_eq!(ts.total_slots_at(2.5), 1);
         assert_eq!(ts.total_slots_at(3.5), 0);
+    }
+
+    #[test]
+    fn merge_concatenates_shared_jobs() {
+        let mut a = TimelineSet::default();
+        a.acquire(1, 0.0);
+        a.release(1, 2.0);
+        let mut b = TimelineSet::default();
+        b.acquire(1, 4.0);
+        b.release(1, 6.0);
+        b.acquire(2, 0.0);
+        b.release(2, 1.0);
+        a.merge(b);
+        let tl = a.job(1).unwrap();
+        assert!(tl.is_balanced());
+        assert!((tl.slot_seconds() - 4.0).abs() < 1e-12);
+        assert!(a.job(2).is_some());
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Sharded-execution equivalence testbed.
+//!
+//! Three layers:
+//!
+//! 1. **Deterministic-merge pin** — every `testkit::scenarios` matrix
+//!    entry run with `--shards {2,4}` under the deterministic merge, on
+//!    both queue backends, must produce a `SimOutcome` byte-identical to
+//!    the serial single-loop driver (wall-clock zeroed). This is the
+//!    serial-equivalence contract of `MergeMode::Deterministic`.
+//! 2. **Fast-merge conservation** — a crafted 2-shard scenario where
+//!    every placement spills (each shard saturates immediately): no job
+//!    may be lost or double-launched across the window-barrier handoff,
+//!    and job/launch counts must match the serial run exactly.
+//! 3. **Fast-merge determinism** — threaded runs are still repeatable:
+//!    the same configuration twice yields byte-identical outcomes
+//!    (thread scheduling must not leak into simulated behaviour).
+
+use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
+use hfsp::cluster::ClusterConfig;
+use hfsp::faults::{FaultConfig, SpeculationConfig};
+use hfsp::scheduler::{SchedulerKind, REGISTRY};
+use hfsp::sim::{MergeMode, QueueKind, ShardSpec, StopReason};
+use hfsp::testkit::scenarios::matrix;
+use hfsp::workload::synthetic;
+
+/// The byte-identity probe: full `Debug` output with the only
+/// wall-clock-dependent field zeroed.
+fn outcome_fingerprint(mut o: SimOutcome) -> String {
+    o.wall_ms = 0.0;
+    format!("{o:?}")
+}
+
+fn with_shards(cfg: &SimConfig, count: usize, merge: MergeMode) -> SimConfig {
+    SimConfig {
+        shards: ShardSpec {
+            count,
+            merge,
+            window_s: None,
+        },
+        ..cfg.clone()
+    }
+}
+
+// -- layer 1: deterministic merge is byte-identical to serial -------------
+
+#[test]
+fn scenario_matrix_outcomes_are_byte_identical_across_shard_counts() {
+    for sc in matrix(&[1]) {
+        for queue in [QueueKind::Heap, QueueKind::Calendar] {
+            let mut serial_cfg = sc.cfg.clone();
+            serial_cfg.queue = queue;
+            let serial = run_simulation(&serial_cfg, SchedulerKind::hfsp(), &sc.workload);
+            assert_ne!(serial.stop, StopReason::EventLimit, "{} truncated", sc.label);
+            let want = outcome_fingerprint(serial);
+            for count in [2, 4] {
+                let cfg = with_shards(&serial_cfg, count, MergeMode::Deterministic);
+                let sharded = run_simulation(&cfg, SchedulerKind::hfsp(), &sc.workload);
+                assert_eq!(
+                    want,
+                    outcome_fingerprint(sharded),
+                    "SimOutcome diverged from serial [{} / {} / {count} shards]",
+                    sc.label,
+                    queue.name(),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_registered_scheduler_is_shard_invariant() {
+    let sc = &matrix(&[3])[0];
+    for entry in REGISTRY {
+        let serial = run_simulation(&sc.cfg, entry.make(), &sc.workload);
+        let cfg = with_shards(&sc.cfg, 2, MergeMode::Deterministic);
+        let sharded = run_simulation(&cfg, entry.make(), &sc.workload);
+        assert_eq!(
+            outcome_fingerprint(serial),
+            outcome_fingerprint(sharded),
+            "SimOutcome diverged from serial [{} / {}]",
+            sc.label,
+            entry.name
+        );
+    }
+}
+
+// -- layer 2: fast-merge cross-shard handoff conserves work ----------------
+
+/// A 2-node cluster with one map slot per node, split into 2 shards, fed
+/// 4 jobs of 4 long maps each at t=0: every shard saturates on its first
+/// launch, so every remaining untouched job spills at the window barrier
+/// and re-routes until a slot frees.
+fn saturated_cfg() -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig {
+            nodes: 2,
+            map_slots: 1,
+            reduce_slots: 1,
+            ..Default::default()
+        },
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fast_merge_spillover_loses_and_duplicates_nothing() {
+    let wl = synthetic::uniform_batch(4, 4, 30.0);
+    let cfg = saturated_cfg();
+    let serial = run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    let fast = run_simulation(
+        &with_shards(&cfg, 2, MergeMode::Fast),
+        SchedulerKind::hfsp(),
+        &wl,
+    );
+    assert_eq!(fast.stream_error, None);
+    assert_ne!(fast.stop, StopReason::EventLimit, "fast run truncated");
+    assert!(
+        fast.counters.spilled_jobs >= 1,
+        "the crafted scenario must exercise placement spillover \
+         (spilled {})",
+        fast.counters.spilled_jobs
+    );
+    // Conservation across the handoff: every job arrived somewhere
+    // exactly once, finished exactly once, and every map task launched
+    // exactly once (no losses, no double-launches).
+    assert_eq!(fast.jobs_arrived, 4, "jobs lost or double-counted in handoff");
+    assert_eq!(fast.sojourn.len(), 4, "not every job finished");
+    assert_eq!(fast.counters.launches, serial.counters.launches);
+    assert_eq!(fast.counters.rejected_actions, 0);
+    assert_eq!(fast.sojourn.len(), serial.sojourn.len());
+    assert_eq!(fast.jobs_arrived, serial.jobs_arrived);
+}
+
+#[test]
+fn fast_merge_survives_stragglers_and_speculation_clones() {
+    // Speculative clones are per-shard state; crossing a window barrier
+    // must neither strand a clone nor double-count its job.
+    let wl = synthetic::uniform_batch(6, 3, 20.0);
+    let mut cfg = saturated_cfg();
+    cfg.cluster.nodes = 4;
+    cfg.cluster.map_slots = 2;
+    cfg.faults = FaultConfig {
+        enabled: true,
+        straggler_fraction: 0.5,
+        speculation: SpeculationConfig {
+            enabled: true,
+            ..SpeculationConfig::default()
+        },
+        ..FaultConfig::disabled()
+    };
+    let fast = run_simulation(
+        &with_shards(&cfg, 2, MergeMode::Fast),
+        SchedulerKind::hfsp(),
+        &wl,
+    );
+    assert_eq!(fast.stream_error, None);
+    assert_ne!(fast.stop, StopReason::EventLimit, "fast run truncated");
+    assert_eq!(fast.jobs_arrived, 6);
+    assert_eq!(fast.sojourn.len(), 6, "a job was lost under speculation");
+    assert_eq!(fast.counters.rejected_actions, 0);
+    // Every map ran at least once; clones only add to the count.
+    assert!(fast.counters.launches >= 18, "launches {}", fast.counters.launches);
+}
+
+// -- layer 3: fast merge is repeatable --------------------------------------
+
+#[test]
+fn fast_merge_runs_are_repeat_deterministic() {
+    let wl = synthetic::uniform_batch(5, 4, 15.0);
+    let cfg = with_shards(&saturated_cfg(), 2, MergeMode::Fast);
+    let a = run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    let b = run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    assert_eq!(
+        outcome_fingerprint(a),
+        outcome_fingerprint(b),
+        "threaded fast-merge run is not repeatable"
+    );
+}
