@@ -22,7 +22,7 @@ fn main() {
     let f = fair.sojourn.by_job();
     let h = hfsp.sojourn.by_job();
     let mut diffs: Vec<f64> = f.iter().map(|(id, fs)| fs - h[id]).collect();
-    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    diffs.sort_by(|a, b| a.total_cmp(b));
 
     let series = vec![Series::new(
         "FAIR - HFSP sojourn (s)",

@@ -31,13 +31,13 @@ impl Measurement {
 
     pub fn p50_ns(&self) -> f64 {
         let mut s = self.samples_ns.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         percentile(&s, 50.0)
     }
 
     pub fn p99_ns(&self) -> f64 {
         let mut s = self.samples_ns.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         percentile(&s, 99.0)
     }
 

@@ -1045,7 +1045,12 @@ fn run_session_sharded(
                     }
                 }
             }
-            // Route the pool and open the window on every shard.
+            // Exports re-enter `backlog` in report-arrival order, which
+            // is thread-timing dependent; sort the pool so routing (an
+            // order-sensitive greedy) is interleaving-independent. The
+            // no-export common case is already submit-ordered, so this
+            // is a stable no-op there.
+            pool.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
             let batches = route_jobs(pool, &digests, n);
             for (tx, jobs) in ctl_txs.iter().zip(batches) {
                 if tx.send(ShardCtl::Window { horizon, jobs }).is_err() {

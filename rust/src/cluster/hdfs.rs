@@ -8,8 +8,8 @@
 //! result, so the randomness matters for Fig. 3/locality reproduction.
 
 use crate::job::{JobId, TaskRef};
+use crate::util::fxmap::FastMap;
 use crate::util::rng::{sample_indices, Pcg64};
-use std::collections::HashMap;
 
 /// Block → replica-node mapping for every map task in the system.
 #[derive(Debug)]
@@ -17,7 +17,7 @@ pub struct Hdfs {
     n_nodes: usize,
     replication: usize,
     /// (job, map index) → replica nodes.
-    placements: HashMap<(JobId, u32), Vec<usize>>,
+    placements: FastMap<(JobId, u32), Vec<usize>>,
     rng: Pcg64,
 }
 
@@ -27,7 +27,7 @@ impl Hdfs {
         Self {
             n_nodes,
             replication: replication.min(n_nodes),
-            placements: HashMap::new(),
+            placements: FastMap::default(),
             rng,
         }
     }

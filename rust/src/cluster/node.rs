@@ -326,7 +326,7 @@ impl Node {
                 .suspended
                 .iter_mut()
                 .filter(|c| !c.swapped)
-                .min_by(|a, b| a.suspended_at.partial_cmp(&b.suspended_at).unwrap());
+                .min_by(|a, b| a.suspended_at.total_cmp(&b.suspended_at));
             match victim {
                 Some(ctx) => {
                     ctx.swapped = true;

@@ -87,12 +87,7 @@ impl FaultPlan {
                 }
             }
         }
-        events.sort_by(|a, b| {
-            a.time
-                .partial_cmp(&b.time)
-                .expect("fault event times are finite")
-                .then(a.node.cmp(&b.node))
-        });
+        events.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.node.cmp(&b.node)));
         FaultPlan {
             events,
             slowdowns,
@@ -123,7 +118,7 @@ mod tests {
     fn disabled_config_compiles_to_empty_plan() {
         let plan = FaultPlan::compile(&FaultConfig::disabled(), 10, 1e6, &mut rng(1));
         assert!(plan.events.is_empty());
-        assert!(plan.slowdowns.iter().all(|&s| s == 1.0));
+        assert!(plan.slowdowns.iter().all(|&s| s.total_cmp(&1.0).is_eq()));
         assert_eq!(plan.permanent_losses, 0);
         assert_eq!(plan.n_stragglers(), 0);
     }

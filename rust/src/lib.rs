@@ -118,6 +118,7 @@ pub mod bench;
 pub mod cluster;
 pub mod faults;
 pub mod job;
+pub mod lint;
 pub mod metrics;
 pub mod report;
 pub mod runtime;

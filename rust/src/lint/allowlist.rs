@@ -1,0 +1,94 @@
+//! The committed `simlint.allow` allowlist.
+//!
+//! One entry per line: `rule-id path -- justification`. The path is
+//! relative to the scanned source root (e.g. `util/fxmap.rs`); the
+//! justification is mandatory — an allowlist entry is a standing waiver
+//! and must say why the site is legitimate. `#` starts a comment.
+//!
+//! ```text
+//! # wall-clock timing that only feeds the wall_ms report field
+//! wall-clock cluster/driver.rs -- Instant::now only measures wall_ms
+//! ```
+
+use std::path::Path;
+
+/// One `rule-id path -- reason` entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub rule: String,
+    /// Path relative to the scanned source root, `/` separators.
+    pub path: String,
+    pub reason: String,
+    /// 1-based line in the allowlist file (for diagnostics).
+    pub line: usize,
+}
+
+/// A parsed allowlist; `permits` is the runner-facing query.
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<Entry>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Allowlist> {
+        let mut entries = Vec::new();
+        for (idx, raw_line) in text.lines().enumerate() {
+            let line = raw_line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (head, reason) = match line.split_once("--") {
+                Some((head, reason)) => (head.trim(), reason.trim()),
+                None => anyhow::bail!(
+                    "allowlist line {}: missing `-- justification` (waivers must say why): {raw_line:?}",
+                    idx + 1
+                ),
+            };
+            let mut parts = head.split_whitespace();
+            let (Some(rule), Some(path), None) = (parts.next(), parts.next(), parts.next())
+            else {
+                anyhow::bail!(
+                    "allowlist line {}: expected `rule-id path -- reason`, got {raw_line:?}",
+                    idx + 1
+                );
+            };
+            anyhow::ensure!(
+                !reason.is_empty(),
+                "allowlist line {}: empty justification",
+                idx + 1
+            );
+            entries.push(Entry {
+                rule: rule.to_string(),
+                path: path.to_string(),
+                reason: reason.to_string(),
+                line: idx + 1,
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Allowlist> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading allowlist {}: {e}", path.display()))?;
+        Allowlist::parse(&text)
+    }
+
+    /// Whether `rule` is waived for the whole file at `rel`.
+    pub fn permits(&self, rule: &str, rel: &str) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.rule == rule && e.path == rel)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}

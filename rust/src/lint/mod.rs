@@ -1,0 +1,349 @@
+//! # simlint — the determinism-contract static-analysis pass.
+//!
+//! Every headline number this crate produces rests on byte-identical
+//! reproducibility: the same seed must yield the same `SimOutcome`
+//! across thread counts, queue backends and shard counts. The
+//! equivalence-test suites check that property *by example*; this pass
+//! enforces the coding contract behind it *mechanically*, over every
+//! file in `rust/src/**`:
+//!
+//! | rule id          | contract                                                        |
+//! |------------------|-----------------------------------------------------------------|
+//! | `hash-container` | no std `HashMap`/`HashSet` (use `FastMap`/`FastSet`/`BTreeMap`) |
+//! | `float-ord`      | no `partial_cmp` comparators / raw float keys (use `total_cmp`) |
+//! | `wall-clock`     | no `Instant`/`SystemTime`/`thread_rng`/env reads in sim code    |
+//! | `rng-stream`     | RNG construction flows through `RngStreams`/`StreamId`          |
+//! | `unsafe-census`  | every `unsafe` carries `// SAFETY:`; `static mut` is banned     |
+//!
+//! Escapes are explicit and audited: a file-scoped entry in the
+//! committed `rust/simlint.allow` (`rule-id path -- justification`), or
+//! an inline `// simlint: allow(rule-id) -- reason` magic comment on or
+//! directly above the flagged line. `#[cfg(test)]` items are skipped —
+//! the contract governs shipped simulation code.
+//!
+//! Run it as `hfsp lint [--deny] [--json]` or via the standalone
+//! `simlint` binary CI uses as a gate. Diagnostics are span-accurate
+//! (`path:line`, rule id, fix hint) and `--json` emits a
+//! machine-readable report.
+
+pub mod allowlist;
+pub mod rules;
+pub mod source;
+
+pub use allowlist::Allowlist;
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One violation: where, which rule, what to do instead.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, `/` separators.
+    pub path: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+    pub hint: &'static str,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} (fix: {})",
+            self.path, self.line, self.rule, self.message, self.hint
+        )
+    }
+}
+
+/// A determinism-contract rule over one scanned file.
+pub trait Rule {
+    /// Stable kebab-case id (`hash-container`, …) used in diagnostics,
+    /// waivers and the allowlist.
+    fn id(&self) -> &'static str;
+    /// One-line description of the contract the rule enforces.
+    fn summary(&self) -> &'static str;
+    /// One-line fix hint attached to every diagnostic.
+    fn hint(&self) -> &'static str;
+    /// Whether the rule visits the file at `rel` at all (path scoping).
+    fn applies(&self, rel: &str) -> bool;
+    /// Emit raw candidate diagnostics; the runner filters test lines,
+    /// inline waivers and allowlist entries afterwards.
+    fn check(&self, file: &SourceFile, out: &mut Vec<Diagnostic>);
+}
+
+/// Lint one already-scanned file through every rule, applying the
+/// test-region / waiver / allowlist filters.
+pub fn lint_file(file: &SourceFile, allow: &Allowlist) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for rule in rules::all() {
+        if !rule.applies(&file.rel) || allow.permits(rule.id(), &file.rel) {
+            continue;
+        }
+        let mut raw = Vec::new();
+        rule.check(file, &mut raw);
+        diags.extend(
+            raw.into_iter()
+                .filter(|d| !file.is_test_line(d.line) && !file.is_waived(d.line, d.rule)),
+        );
+    }
+    diags.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.rule.cmp(b.rule)));
+    diags
+}
+
+/// Lint source text under a virtual relative path (fixture-test entry).
+pub fn lint_text(rel: &str, text: &str, allow: &Allowlist) -> Vec<Diagnostic> {
+    lint_file(&SourceFile::parse(rel, text), allow)
+}
+
+/// Recursively collect the `.rs` files under `root`, as sorted
+/// root-relative `/`-separated paths (deterministic scan order).
+pub fn collect_rs_files(root: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    walk(root, &mut files)
+        .map_err(|e| anyhow::anyhow!("scanning {}: {e}", root.display()))?;
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `.rs` file under `src_root`. Returns diagnostics in
+/// (path, line, rule) order.
+pub fn lint_tree(src_root: &Path, allow: &Allowlist) -> anyhow::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    for path in collect_rs_files(src_root)? {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        diags.extend(lint_file(&SourceFile::parse(&rel, &text), allow));
+    }
+    diags.sort_by(|a, b| {
+        a.path
+            .cmp(&b.path)
+            .then_with(|| a.line.cmp(&b.line))
+            .then_with(|| a.rule.cmp(b.rule))
+    });
+    Ok(diags)
+}
+
+/// Machine-readable report: `{"count": n, "diagnostics": [...]}`.
+pub fn diagnostics_to_json(diags: &[Diagnostic]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let rows = diags
+        .iter()
+        .map(|d| {
+            let mut row = Json::obj();
+            row.set("rule", Json::Str(d.rule.to_string()))
+                .set("path", Json::Str(d.path.clone()))
+                .set("line", Json::Num(d.line as f64))
+                .set("message", Json::Str(d.message.clone()))
+                .set("hint", Json::Str(d.hint.to_string()));
+            row
+        })
+        .collect();
+    let mut report = Json::obj();
+    report
+        .set("count", Json::Num(diags.len() as f64))
+        .set("diagnostics", Json::Arr(rows));
+    report
+}
+
+/// Locate the source root: an explicit `--src`, else `src/` when run
+/// from `rust/`, else `rust/src/` when run from the repository root.
+pub fn resolve_src_root(explicit: Option<&str>) -> anyhow::Result<PathBuf> {
+    if let Some(src) = explicit {
+        let path = PathBuf::from(src);
+        anyhow::ensure!(path.is_dir(), "--src {}: not a directory", path.display());
+        return Ok(path);
+    }
+    for candidate in ["src", "rust/src"] {
+        let path = PathBuf::from(candidate);
+        if path.join("lib.rs").is_file() {
+            return Ok(path);
+        }
+    }
+    anyhow::bail!("no src/lib.rs or rust/src/lib.rs below the working directory; pass --src")
+}
+
+/// The shared `hfsp lint` / `simlint` entry point. Returns the number
+/// of diagnostics; with `deny` the caller turns a non-zero count into a
+/// failing exit.
+pub fn cli_main(
+    src: Option<&str>,
+    allow: Option<&str>,
+    json: bool,
+    deny: bool,
+) -> anyhow::Result<usize> {
+    let src_root = resolve_src_root(src)?;
+    let allowlist = match allow {
+        Some(path) => Allowlist::load(Path::new(path))?,
+        None => {
+            // The committed allowlist sits next to Cargo.toml, one level
+            // above the source root.
+            let default = src_root.join("..").join("simlint.allow");
+            if default.is_file() {
+                Allowlist::load(&default)?
+            } else {
+                Allowlist::empty()
+            }
+        }
+    };
+    let diags = lint_tree(&src_root, &allowlist)?;
+    if json {
+        println!("{}", diagnostics_to_json(&diags).to_string_pretty());
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        println!(
+            "simlint: {} file(s) scanned, {} violation(s), {} allowlist entr(ies)",
+            collect_rs_files(&src_root)?.len(),
+            diags.len(),
+            allowlist.len()
+        );
+    }
+    if deny && !diags.is_empty() {
+        anyhow::bail!("simlint: {} determinism-contract violation(s)", diags.len());
+    }
+    Ok(diags.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::source::{find_token, mask_source, SourceFile};
+    use super::*;
+
+    #[test]
+    fn masking_blanks_comments_and_strings() {
+        let raw = "let a = 1; // HashMap in a comment\nlet s = \"HashMap\"; /* HashMap */\n";
+        let masked = mask_source(raw);
+        assert_eq!(masked.len(), raw.len());
+        assert!(find_token(&masked, "HashMap").is_empty());
+        assert!(masked.contains("let a = 1;"));
+    }
+
+    #[test]
+    fn masking_keeps_lifetimes_and_masks_chars() {
+        let raw = "fn f<'a>(x: &'a str) { let c = 'h'; let e = '\\n'; }";
+        let masked = mask_source(raw);
+        assert!(masked.contains("<'a>"));
+        assert!(!masked.contains("'h'"));
+        assert!(!masked.contains("\\n"));
+    }
+
+    #[test]
+    fn masking_handles_raw_strings() {
+        let raw = "let r = r#\"Instant \" inside\"#; let i = 1;";
+        let masked = mask_source(raw);
+        assert!(find_token(&masked, "Instant").is_empty());
+        assert!(masked.contains("let i = 1;"));
+    }
+
+    #[test]
+    fn token_search_respects_word_boundaries() {
+        let hay = "Instantiate Instant xInstant Instant_";
+        assert_eq!(find_token(hay, "Instant").len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let raw = "use std::collections::HashMap;\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use std::collections::HashMap;\n\
+                   }\n";
+        let file = SourceFile::parse("sim/x.rs", raw);
+        assert!(!file.is_test_line(1));
+        assert!(file.is_test_line(4));
+        let diags = lint_file(&file, &Allowlist::empty());
+        let hash: Vec<_> = diags.iter().filter(|d| d.rule == "hash-container").collect();
+        assert_eq!(hash.len(), 1);
+        assert_eq!(hash[0].line, 1);
+    }
+
+    #[test]
+    fn inline_waivers_cover_their_line_and_the_next() {
+        let raw = "// simlint: allow(hash-container) -- doc example\n\
+                   use std::collections::HashMap;\n\
+                   use std::collections::HashSet;\n";
+        let diags = lint_text("sim/x.rs", raw, &Allowlist::empty());
+        let hash: Vec<_> = diags.iter().filter(|d| d.rule == "hash-container").collect();
+        assert_eq!(hash.len(), 1);
+        assert_eq!(hash[0].line, 3);
+    }
+
+    #[test]
+    fn allowlist_permits_whole_files_and_requires_reasons() {
+        let allow = Allowlist::parse(
+            "# comment\nhash-container sim/x.rs -- the one legit wrapper\n",
+        )
+        .unwrap();
+        assert!(allow.permits("hash-container", "sim/x.rs"));
+        assert!(!allow.permits("hash-container", "sim/y.rs"));
+        assert!(!allow.permits("float-ord", "sim/x.rs"));
+        assert!(Allowlist::parse("hash-container sim/x.rs\n").is_err());
+        let diags = lint_text("sim/x.rs", "use std::collections::HashMap;\n", &allow);
+        assert!(diags.iter().all(|d| d.rule != "hash-container"));
+    }
+
+    #[test]
+    fn partial_cmp_definition_is_exempt_call_site_is_not() {
+        let raw = "impl PartialOrd for X {\n\
+                       fn partial_cmp(&self, o: &X) -> Option<Ordering> { None }\n\
+                   }\n\
+                   fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let diags = lint_text("sim/x.rs", raw, &Allowlist::empty());
+        let ord: Vec<_> = diags.iter().filter(|d| d.rule == "float-ord").collect();
+        assert_eq!(ord.len(), 1);
+        assert_eq!(ord[0].line, 4);
+    }
+
+    #[test]
+    fn wall_clock_scoping_follows_the_contract() {
+        let raw = "use std::time::Instant;\n";
+        assert_eq!(lint_text("sim/engine.rs", raw, &Allowlist::empty()).len(), 1);
+        assert!(lint_text("bench/mod.rs", raw, &Allowlist::empty()).is_empty());
+        assert!(lint_text("util/rss.rs", raw, &Allowlist::empty()).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        let good = "// SAFETY: g has no preconditions here\nfn f() { unsafe { g() } }\n";
+        assert_eq!(lint_text("sim/x.rs", bad, &Allowlist::empty()).len(), 1);
+        assert!(lint_text("sim/x.rs", good, &Allowlist::empty()).is_empty());
+        let diags = lint_text("sim/x.rs", "static mut COUNTER: u64 = 0;\n", &Allowlist::empty());
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("static mut"));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let diags = lint_text(
+            "sim/x.rs",
+            "use std::collections::HashMap;\n",
+            &Allowlist::empty(),
+        );
+        let json = diagnostics_to_json(&diags);
+        assert_eq!(json.get("count").and_then(|c| c.as_u64()), Some(1));
+        let rows = json.get("diagnostics").and_then(|d| d.as_arr()).unwrap();
+        assert_eq!(rows[0].get("rule").and_then(|r| r.as_str()), Some("hash-container"));
+        assert_eq!(rows[0].get("line").and_then(|l| l.as_u64()), Some(1));
+    }
+}

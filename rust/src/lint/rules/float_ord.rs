@@ -1,0 +1,77 @@
+//! `float-ord`: no `partial_cmp`-based float ordering, no raw float
+//! keys in ordered containers.
+//!
+//! `partial_cmp(...).unwrap()` panics on NaN and orders `-0.0 == 0.0`
+//! arbitrarily relative to a later `total_cmp` pass — comparators in
+//! `sort_by`/`binary_search_by`/`min_by` must use `f64::total_cmp`,
+//! whose total order is the same on every platform. Raw `f64`/`f32`
+//! keys in `BTreeMap`/`BTreeSet`/`BinaryHeap` don't even compile
+//! without an ordering wrapper, but an `OrderedFloat`-style newtype
+//! smuggled in by a future dependency would: flag the pattern anyway so
+//! the intent is explicit.
+
+use crate::lint::source::{find_token, SourceFile};
+use crate::lint::{Diagnostic, Rule};
+
+pub struct FloatOrd;
+
+impl Rule for FloatOrd {
+    fn id(&self) -> &'static str {
+        "float-ord"
+    }
+
+    fn summary(&self) -> &'static str {
+        "partial_cmp comparator or raw float key in an ordered container"
+    }
+
+    fn hint(&self) -> &'static str {
+        "use f64::total_cmp (total order, NaN-safe) or a total-order key newtype"
+    }
+
+    fn applies(&self, _rel: &str) -> bool {
+        true
+    }
+
+    fn check(&self, file: &SourceFile, out: &mut Vec<Diagnostic>) {
+        for at in find_token(&file.masked, "partial_cmp") {
+            // `fn partial_cmp(...)` is a `PartialOrd` impl definition,
+            // not a call site.
+            if file.masked[..at].trim_end().ends_with("fn") {
+                continue;
+            }
+            out.push(Diagnostic {
+                rule: self.id(),
+                path: file.rel.clone(),
+                line: file.line_of(at),
+                message: "partial_cmp comparison (panics on NaN, not a total order)".to_string(),
+                hint: self.hint(),
+            });
+        }
+        for container in ["BTreeMap", "BTreeSet", "BinaryHeap"] {
+            for at in find_token(&file.masked, container) {
+                let rest = file.masked[at + container.len()..].trim_start();
+                let Some(args) = rest.strip_prefix('<') else {
+                    continue;
+                };
+                let args = args.trim_start();
+                let floatish = ["f64", "f32"].iter().any(|f| {
+                    args.strip_prefix(f).is_some_and(|tail| {
+                        !tail
+                            .bytes()
+                            .next()
+                            .is_some_and(crate::lint::source::is_ident_byte)
+                    })
+                });
+                if floatish {
+                    out.push(Diagnostic {
+                        rule: self.id(),
+                        path: file.rel.clone(),
+                        line: file.line_of(at),
+                        message: format!("raw float key in {container}"),
+                        hint: self.hint(),
+                    });
+                }
+            }
+        }
+    }
+}

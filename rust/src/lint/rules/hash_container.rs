@@ -1,0 +1,49 @@
+//! `hash-container`: no `std::collections::{HashMap, HashSet}` in
+//! outcome-affecting code.
+//!
+//! Std hash containers use a randomized `SipHash` seed, so their
+//! iteration order differs between processes — any outcome that touches
+//! one risks losing byte-identical reproducibility. Simulation code must
+//! use the deterministic `util::fxmap::FastMap`/`FastSet` (fixed-seed
+//! FxHash) or an ordered `BTreeMap`/`BTreeSet`. The one legitimate site
+//! — `util/fxmap.rs`, which *defines* the wrappers — carries an
+//! allowlist entry.
+
+use crate::lint::source::{find_token, SourceFile};
+use crate::lint::{Diagnostic, Rule};
+
+pub struct HashContainer;
+
+impl Rule for HashContainer {
+    fn id(&self) -> &'static str {
+        "hash-container"
+    }
+
+    fn summary(&self) -> &'static str {
+        "std HashMap/HashSet (randomized iteration order) in simulation code"
+    }
+
+    fn hint(&self) -> &'static str {
+        "use util::fxmap::FastMap/FastSet (or BTreeMap/BTreeSet for ordered iteration)"
+    }
+
+    fn applies(&self, _rel: &str) -> bool {
+        true
+    }
+
+    fn check(&self, file: &SourceFile, out: &mut Vec<Diagnostic>) {
+        for token in ["HashMap", "HashSet"] {
+            for at in find_token(&file.masked, token) {
+                out.push(Diagnostic {
+                    rule: self.id(),
+                    path: file.rel.clone(),
+                    line: file.line_of(at),
+                    message: format!(
+                        "std::collections::{token} has a process-random iteration order"
+                    ),
+                    hint: self.hint(),
+                });
+            }
+        }
+    }
+}

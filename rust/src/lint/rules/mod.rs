@@ -1,0 +1,29 @@
+//! The determinism-contract rule set.
+//!
+//! Each rule is a small [`Rule`](crate::lint::Rule) impl over the masked
+//! source view; [`all`] is the registry the runner and the CLI iterate.
+
+mod float_ord;
+mod hash_container;
+mod rng_stream;
+mod unsafe_census;
+mod wall_clock;
+
+pub use float_ord::FloatOrd;
+pub use hash_container::HashContainer;
+pub use rng_stream::RngStream;
+pub use unsafe_census::UnsafeCensus;
+pub use wall_clock::WallClock;
+
+use super::Rule;
+
+/// Every shipped rule, in diagnostic-output order.
+pub fn all() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(HashContainer),
+        Box::new(FloatOrd),
+        Box::new(WallClock),
+        Box::new(RngStream),
+        Box::new(UnsafeCensus),
+    ]
+}

@@ -1,0 +1,46 @@
+//! `rng-stream`: RNG construction flows through `RngStreams`/`StreamId`.
+//!
+//! The reproducibility format fixes a *tree* of named substreams
+//! (Placement, Faults, Scheduler, Arrivals, Population) derived from the
+//! master seed in `util/rng.rs`. A naked `Pcg64::seed_from_u64(...)`
+//! outside that module creates an anonymous stream that can silently
+//! alias an existing one — enabling a feature would then perturb draws
+//! it must not touch. `util/rng.rs` (the derivation site itself) and
+//! `testkit/` (ad-hoc property-test streams) are out of scope; the one
+//! surviving call site, `faults/error_model.rs`, carries an allowlist
+//! entry documenting its draw-compatibility contract.
+
+use crate::lint::source::{find_token, SourceFile};
+use crate::lint::{Diagnostic, Rule};
+
+pub struct RngStream;
+
+impl Rule for RngStream {
+    fn id(&self) -> &'static str {
+        "rng-stream"
+    }
+
+    fn summary(&self) -> &'static str {
+        "naked RNG seeding outside the RngStreams substream discipline"
+    }
+
+    fn hint(&self) -> &'static str {
+        "derive the generator via util::rng::RngStreams / StreamId"
+    }
+
+    fn applies(&self, rel: &str) -> bool {
+        rel != "util/rng.rs" && !rel.starts_with("testkit/")
+    }
+
+    fn check(&self, file: &SourceFile, out: &mut Vec<Diagnostic>) {
+        for at in find_token(&file.masked, "seed_from_u64") {
+            out.push(Diagnostic {
+                rule: self.id(),
+                path: file.rel.clone(),
+                line: file.line_of(at),
+                message: "seed_from_u64 outside RngStreams (anonymous substream)".to_string(),
+                hint: self.hint(),
+            });
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! `unsafe-census`: every `unsafe` carries a `// SAFETY:` comment;
+//! `static mut` is never acceptable.
+//!
+//! The crate is currently 100% safe code and the sharded driver's
+//! concurrency runs entirely on channels — this rule keeps it that way
+//! by making every future `unsafe` block justify itself at the use
+//! site, and by banning `static mut` outright (it is both a data-race
+//! hazard under the threaded fast-merge path and deprecated-in-spirit
+//! upstream).
+
+use crate::lint::source::{find_token, SourceFile};
+use crate::lint::{Diagnostic, Rule};
+
+/// How far above the `unsafe` keyword a `// SAFETY:` comment may sit.
+const SAFETY_LOOKBACK_LINES: usize = 3;
+
+pub struct UnsafeCensus;
+
+impl Rule for UnsafeCensus {
+    fn id(&self) -> &'static str {
+        "unsafe-census"
+    }
+
+    fn summary(&self) -> &'static str {
+        "unsafe without a SAFETY comment, or static mut"
+    }
+
+    fn hint(&self) -> &'static str {
+        "justify the invariants in a `// SAFETY:` comment directly above (static mut: use channels or atomics)"
+    }
+
+    fn applies(&self, _rel: &str) -> bool {
+        true
+    }
+
+    fn check(&self, file: &SourceFile, out: &mut Vec<Diagnostic>) {
+        for at in find_token(&file.masked, "unsafe") {
+            let line = file.line_of(at);
+            // `static mut` handled below with its own message.
+            let documented = (line.saturating_sub(SAFETY_LOOKBACK_LINES)..=line)
+                .any(|l| l >= 1 && file.raw_line(l).contains("SAFETY:"));
+            if !documented {
+                out.push(Diagnostic {
+                    rule: self.id(),
+                    path: file.rel.clone(),
+                    line,
+                    message: "unsafe without a `// SAFETY:` comment".to_string(),
+                    hint: self.hint(),
+                });
+            }
+        }
+        for at in find_token(&file.masked, "static") {
+            let rest = file.masked[at + "static".len()..].trim_start();
+            if rest.starts_with("mut")
+                && !rest["mut".len()..]
+                    .bytes()
+                    .next()
+                    .is_some_and(crate::lint::source::is_ident_byte)
+            {
+                out.push(Diagnostic {
+                    rule: self.id(),
+                    path: file.rel.clone(),
+                    line: file.line_of(at),
+                    message: "static mut (racy under the threaded fast-merge path)".to_string(),
+                    hint: self.hint(),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! `wall-clock`: no wall-clock or ambient-environment reads in
+//! simulation code.
+//!
+//! Simulated time is the only clock the sim/scheduler/workload/faults
+//! layers may observe: `Instant`/`SystemTime` values differ per run, and
+//! `std::env` reads make outcomes depend on the invoking shell. Timing
+//! for *reporting* (events/sec, peak RSS) belongs in `bench/` and
+//! `util/rss.rs`, which this rule does not visit; the few in-scope
+//! timer sites that only feed `wall_ms` report fields carry allowlist
+//! entries.
+
+use crate::lint::source::{find_substr, find_token, SourceFile};
+use crate::lint::{Diagnostic, Rule};
+
+/// Module prefixes whose outcomes must be a pure function of the seed.
+const IN_SCOPE: &[&str] = &[
+    "sim/", "scheduler/", "workload/", "faults/", "cluster/", "job/", "metrics/", "session/",
+    "sweep/", "util/",
+];
+
+pub struct WallClock;
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        "wall-clock"
+    }
+
+    fn summary(&self) -> &'static str {
+        "wall-clock or environment read in outcome-affecting code"
+    }
+
+    fn hint(&self) -> &'static str {
+        "derive everything from sim time and the seed; wall-clock I/O lives in bench/ and util/rss.rs"
+    }
+
+    fn applies(&self, rel: &str) -> bool {
+        rel != "util/rss.rs" && IN_SCOPE.iter().any(|p| rel.starts_with(p))
+    }
+
+    fn check(&self, file: &SourceFile, out: &mut Vec<Diagnostic>) {
+        for token in ["Instant", "SystemTime", "thread_rng"] {
+            for at in find_token(&file.masked, token) {
+                out.push(Diagnostic {
+                    rule: self.id(),
+                    path: file.rel.clone(),
+                    line: file.line_of(at),
+                    message: format!("{token} read in simulation code"),
+                    hint: self.hint(),
+                });
+            }
+        }
+        // `env::var`, `env::var_os`, `env::vars…` — prefix match on the
+        // call path so the variants stay covered.
+        for at in find_substr(&file.masked, "env::var") {
+            out.push(Diagnostic {
+                rule: self.id(),
+                path: file.rel.clone(),
+                line: file.line_of(at),
+                message: "environment read in simulation code".to_string(),
+                hint: self.hint(),
+            });
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Source-file scanner underlying the `simlint` rules.
+//!
+//! The offline build vendors no parser crates (`syn` is unavailable), so
+//! the rules work over a *masked* view of each file: every byte inside a
+//! comment, string literal, char literal or raw string is replaced with a
+//! space (newlines are preserved so byte offsets and line numbers stay
+//! aligned with the raw text). Token searches over the masked text
+//! therefore never match prose, doc examples or log strings.
+//!
+//! On top of the mask the scanner derives two per-line annotations the
+//! runner uses to filter rule output:
+//!
+//! * **test regions** — the span of any item annotated `#[cfg(test)]`
+//!   (brace-matched over the masked text, so braces inside strings or
+//!   comments cannot derail it). The determinism contract governs
+//!   shipped simulation code; tests may seed ad-hoc RNGs or compare
+//!   floats directly.
+//! * **waivers** — magic comments of the form
+//!   `// simlint: allow(rule-id) -- reason`, the source-level analogue
+//!   of `#[allow(simlint::rule_id)]`. A waiver applies to its own line
+//!   and to the next line, so it can ride inline or sit on the line
+//!   above the flagged expression.
+
+/// A scanned source file: raw text, masked text and per-line metadata.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scanned source root, with `/` separators.
+    pub rel: String,
+    /// The file exactly as read.
+    pub raw: String,
+    /// Same length as `raw`, with comment/string/char-literal bytes
+    /// blanked to spaces (newlines kept).
+    pub masked: String,
+    /// Byte offset of the start of each line (line 1 first).
+    line_starts: Vec<usize>,
+    /// Per line (0-based): inside a `#[cfg(test)]` item span.
+    test_line: Vec<bool>,
+    /// Per line (0-based): rule ids waived on this line.
+    waived: Vec<Vec<String>>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, raw: &str) -> SourceFile {
+        let masked = mask_source(raw);
+        let line_starts = line_starts(raw);
+        let n_lines = line_starts.len();
+        let test_line = test_lines(&masked, &line_starts);
+        let mut waived = vec![Vec::new(); n_lines];
+        for (i, line) in raw.lines().enumerate() {
+            for rule in parse_waivers(line) {
+                waived[i].push(rule.clone());
+                if i + 1 < n_lines {
+                    waived[i + 1].push(rule);
+                }
+            }
+        }
+        SourceFile {
+            rel: rel.to_string(),
+            raw: raw.to_string(),
+            masked,
+            line_starts,
+            test_line,
+            waived,
+        }
+    }
+
+    /// 1-based line number containing byte `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i, // insertion point; line i-1 (0-based) => 1-based i
+        }
+    }
+
+    /// Whether 1-based `line` lies inside a `#[cfg(test)]` item.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_line.get(line.wrapping_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Whether `rule` is waived on 1-based `line` by a magic comment.
+    pub fn is_waived(&self, line: usize, rule: &str) -> bool {
+        self.waived
+            .get(line.wrapping_sub(1))
+            .map(|ids| ids.iter().any(|id| id == rule))
+            .unwrap_or(false)
+    }
+
+    /// The raw text of 1-based `line` (empty when out of range).
+    pub fn raw_line(&self, line: usize) -> &str {
+        self.raw.lines().nth(line.wrapping_sub(1)).unwrap_or("")
+    }
+}
+
+fn line_starts(text: &str) -> Vec<usize> {
+    let mut starts = vec![0];
+    for (i, b) in text.bytes().enumerate() {
+        if b == b'\n' && i + 1 < text.len() {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// Parse `simlint: allow(a, b)` out of one raw line.
+fn parse_waivers(line: &str) -> Vec<String> {
+    let Some(at) = line.find("simlint: allow(") else {
+        return Vec::new();
+    };
+    let rest = &line[at + "simlint: allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return Vec::new();
+    };
+    rest[..close]
+        .split(',')
+        .map(|id| id.trim().to_string())
+        .filter(|id| !id.is_empty())
+        .collect()
+}
+
+/// Blank out comments, strings and char literals, preserving length and
+/// newlines. Handles `//`, nested `/* */`, `"…"` with escapes, raw
+/// strings `r"…"` / `r#"…"#` (and `br` variants), byte strings `b"…"`,
+/// char literals `'x'` / `'\n'`, and leaves lifetimes (`'a`) intact.
+pub fn mask_source(raw: &str) -> String {
+    let bytes = raw.as_bytes();
+    let mut out = bytes.to_vec();
+    let n = bytes.len();
+    let mut i = 0;
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for b in &mut out[from..to.min(out.len())] {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    };
+    while i < n {
+        let b = bytes[i];
+        // Line comment.
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let end = bytes[i..]
+                .iter()
+                .position(|&c| c == b'\n')
+                .map(|p| i + p)
+                .unwrap_or(n);
+            blank(&mut out, i, end);
+            i = end;
+            continue;
+        }
+        // Block comment (nested, as in Rust).
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+            continue;
+        }
+        let prev_ident = i > 0 && is_ident_byte(bytes[i - 1]);
+        // Raw strings: r"…", r#"…"#, br"…", br#"…"#.
+        if !prev_ident && (b == b'r' || (b == b'b' && i + 1 < n && bytes[i + 1] == b'r')) {
+            let hash_start = if b == b'r' { i + 1 } else { i + 2 };
+            let mut j = hash_start;
+            while j < n && bytes[j] == b'#' {
+                j += 1;
+            }
+            if j < n && bytes[j] == b'"' {
+                let hashes = j - hash_start;
+                let mut k = j + 1;
+                let end = loop {
+                    if k >= n {
+                        break n;
+                    }
+                    if bytes[k] == b'"' && k + hashes < n + 1 {
+                        let tail = &bytes[k + 1..(k + 1 + hashes).min(n)];
+                        if tail.len() == hashes && tail.iter().all(|&c| c == b'#') {
+                            break k + 1 + hashes;
+                        }
+                    }
+                    k += 1;
+                };
+                blank(&mut out, i, end);
+                i = end;
+                continue;
+            }
+        }
+        // Byte string b"…" or plain string "…".
+        if b == b'"' || (!prev_ident && b == b'b' && i + 1 < n && bytes[i + 1] == b'"') {
+            let start = i;
+            let mut j = if b == b'"' { i + 1 } else { i + 2 };
+            while j < n {
+                match bytes[j] {
+                    b'\\' => j += 2,
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            blank(&mut out, start, j.min(n));
+            i = j.min(n);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if b == b'\'' && i + 1 < n {
+            if bytes[i + 1] == b'\\' {
+                // '\n', '\'', '\u{…}' — scan to the closing quote.
+                let mut j = i + 2;
+                while j < n {
+                    match bytes[j] {
+                        b'\\' => j += 2,
+                        b'\'' => {
+                            j += 1;
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                blank(&mut out, i, j.min(n));
+                i = j.min(n);
+                continue;
+            }
+            // 'x' (one char, possibly multi-byte) then a closing quote.
+            let ch_len = utf8_len(bytes[i + 1]);
+            let close = i + 1 + ch_len;
+            if close < n && bytes[close] == b'\'' {
+                blank(&mut out, i, close + 1);
+                i = close + 1;
+                continue;
+            }
+            // Lifetime ('a) — leave untouched.
+        }
+        i += 1;
+    }
+    // Only masked bytes were rewritten (to ASCII spaces); every retained
+    // byte is unchanged, so the result is still valid UTF-8.
+    String::from_utf8(out).expect("masking preserves UTF-8")
+}
+
+fn utf8_len(first: u8) -> usize {
+    if first < 0x80 {
+        1
+    } else if first >> 5 == 0b110 {
+        2
+    } else if first >> 4 == 0b1110 {
+        3
+    } else {
+        4
+    }
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of word-boundary occurrences of `token` in `haystack`
+/// (intended for masked text).
+pub fn find_token(haystack: &str, token: &str) -> Vec<usize> {
+    let hay = haystack.as_bytes();
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(token) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident_byte(hay[at - 1]);
+        let end = at + token.len();
+        let after_ok = end >= hay.len() || !is_ident_byte(hay[end]);
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        from = at + token.len().max(1);
+    }
+    hits
+}
+
+/// Byte offsets of plain substring occurrences (no boundary check).
+pub fn find_substr(haystack: &str, needle: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(needle) {
+        hits.push(from + pos);
+        from = from + pos + needle.len().max(1);
+    }
+    hits
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item span.
+fn test_lines(masked: &str, line_starts: &[usize]) -> Vec<bool> {
+    let mut flags = vec![false; line_starts.len()];
+    let bytes = masked.as_bytes();
+    for start in find_substr(masked, "#[cfg(test)]") {
+        let mut i = start + "#[cfg(test)]".len();
+        // Skip whitespace and any further attributes (`#[…]`, bracket
+        // matched) between the cfg attribute and the item itself.
+        loop {
+            while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+                i += 1;
+            }
+            if i + 1 < bytes.len() && bytes[i] == b'#' && bytes[i + 1] == b'[' {
+                let mut depth = 0usize;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                i += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // The item extends to its matching closing brace, or to the
+        // first `;` for brace-less items (`#[cfg(test)] use …;`).
+        let mut end = i;
+        let mut depth = 0usize;
+        while end < bytes.len() {
+            match bytes[end] {
+                b'{' => depth += 1,
+                // An unmatched `}` at depth 0 means the attribute sits on
+                // a brace-less construct inside an enclosing block (e.g. a
+                // match arm): clamp the span there instead of underflowing.
+                b'}' if depth <= 1 => {
+                    end += 1;
+                    break;
+                }
+                b'}' => depth -= 1,
+                b';' if depth == 0 => {
+                    end += 1;
+                    break;
+                }
+                _ => {}
+            }
+            end += 1;
+        }
+        let first = offset_line_idx(line_starts, start);
+        let last = offset_line_idx(line_starts, end.saturating_sub(1).max(start));
+        for flag in flags.iter_mut().take(last + 1).skip(first) {
+            *flag = true;
+        }
+    }
+    flags
+}
+
+/// 0-based line index containing byte `offset`.
+fn offset_line_idx(line_starts: &[usize], offset: usize) -> usize {
+    match line_starts.binary_search(&offset) {
+        Ok(i) => i,
+        Err(i) => i.saturating_sub(1),
+    }
+}

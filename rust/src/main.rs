@@ -16,7 +16,11 @@
 //!   (events/sec, wall-clock, queue stats and peak RSS per scenario —
 //!   the perf trajectory file); `--compare old.json` prints deltas
 //!   against a baseline and exits non-zero past `--threshold`;
-//! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines.
+//! * `fsp-demo` — the Fig. 1/2 PS-vs-FSP intuition timelines;
+//! * `lint` — the `simlint` determinism-contract static-analysis pass
+//!   over `rust/src` (std hash containers, `partial_cmp` comparators,
+//!   wall-clock reads, naked RNG seeding, undocumented `unsafe`);
+//!   `--deny` is the CI gate mode.
 
 use hfsp::cluster::driver::{run_session, run_simulation, SimConfig, SimOutcome};
 use hfsp::cluster::ClusterConfig;
@@ -112,6 +116,11 @@ fn cli() -> Cli {
                 .switch("require-baseline", "fail --compare when the baseline shares no scenarios (arms the CI gate against an empty baseline)"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
                 .flag("slots", "4", "single-node slot count"),
+            Command::new("lint", "simlint: determinism-contract static analysis over rust/src")
+                .flag("src", "", "source root to scan (default: ./src, or ./rust/src from the repo root)")
+                .flag("allow", "", "allowlist file (default: simlint.allow next to Cargo.toml, when present)")
+                .switch("json", "emit a machine-readable JSON report instead of text diagnostics")
+                .switch("deny", "exit non-zero on any violation (the CI gate mode)"),
         ],
     }
 }
@@ -331,6 +340,15 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         Parsed::Command("fsp-demo", args) => {
             let slots: usize = args.require("slots")?;
             fsp_demo(slots);
+            Ok(())
+        }
+        Parsed::Command("lint", args) => {
+            hfsp::lint::cli_main(
+                args.get("src").filter(|s| !s.trim().is_empty()),
+                args.get("allow").filter(|s| !s.trim().is_empty()),
+                args.get_bool("json"),
+                args.get_bool("deny"),
+            )?;
             Ok(())
         }
         Parsed::Command(other, _) => anyhow::bail!("unhandled subcommand {other}"),

@@ -31,7 +31,7 @@ pub fn to_csv(series: &[Series]) -> String {
         .iter()
         .flat_map(|s| s.points.iter().map(|&(x, _)| x))
         .collect();
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
     let mut out = String::from("x");
     for s in series {

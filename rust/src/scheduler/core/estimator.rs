@@ -56,7 +56,7 @@ pub fn lsq_quantile_phase_size(samples: &[f64], n_tasks: usize) -> f64 {
     assert!(!samples.is_empty(), "estimator needs at least one sample");
     let s = samples.len();
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+    sorted.sort_by(|a, b| a.total_cmp(b));
     if s == 1 {
         return sorted[0] * n_tasks as f64;
     }

@@ -44,7 +44,6 @@ use crate::job::task::NodeId;
 use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::sim::Time;
 use crate::util::fxmap::{FastMap, FastSet};
-use std::collections::HashSet;
 use std::path::PathBuf;
 
 /// Which size-estimator implementation the Training module uses.
@@ -298,7 +297,7 @@ pub struct SizeBasedScheduler {
     delay: DelayTimer,
     guard: SuspensionGuard,
     /// Jobs whose reduce phase has been registered with the discipline.
-    reduce_started: HashSet<JobId>,
+    reduce_started: FastSet<JobId>,
     order_map: OrderCache,
     order_reduce: OrderCache,
     /// Lazily sized from the first view (cluster capacity per phase).
@@ -339,7 +338,7 @@ impl SizeBasedScheduler {
             index: LocalityIndex::new(),
             delay,
             guard,
-            reduce_started: HashSet::new(),
+            reduce_started: FastSet::default(),
             order_map: OrderCache::default(),
             order_reduce: OrderCache::default(),
             sized: false,

@@ -15,7 +15,8 @@
 use super::estimator::SizeEstimator;
 use crate::faults::ErrorModel;
 use crate::job::{JobId, Phase};
-use std::collections::{HashMap, VecDeque};
+use crate::util::fxmap::FastMap;
+use std::collections::VecDeque;
 
 /// Rolling mean of the last `cap` observations (the "recently executed
 /// tasks of other jobs" statistic behind initial estimates).
@@ -74,7 +75,7 @@ enum PhaseState {
 
 /// The Training module.
 pub struct TrainingModule {
-    states: HashMap<(JobId, Phase), PhaseState>,
+    states: FastMap<(JobId, Phase), PhaseState>,
     recent_map: RollingMean,
     recent_reduce: RollingMean,
     sample_set: usize,
@@ -111,7 +112,7 @@ impl TrainingModule {
         assert!(sample_set >= 1);
         assert!(xi >= 1.0, "confidence parameter ξ ranges over [1, ∞)");
         Self {
-            states: HashMap::new(),
+            states: FastMap::default(),
             recent_map: RollingMean::new(100),
             recent_reduce: RollingMean::new(100),
             sample_set,

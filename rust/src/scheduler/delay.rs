@@ -15,12 +15,11 @@ use crate::cluster::Hdfs;
 use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::job::task::NodeId;
 use crate::sim::Time;
-use crate::util::fxmap::FastSet;
-use std::collections::HashMap;
+use crate::util::fxmap::{FastMap, FastSet};
 
 /// Per-job inverted index: node → map-task indices with a local replica.
 struct JobLocal {
-    per_node: HashMap<NodeId, Vec<u32>>,
+    per_node: FastMap<NodeId, Vec<u32>>,
     /// Cursor for non-local picks (tasks mostly launch in index order).
     cursor: u32,
 }
@@ -28,7 +27,7 @@ struct JobLocal {
 /// Locality index over all active jobs.
 #[derive(Default)]
 pub struct LocalityIndex {
-    jobs: HashMap<JobId, JobLocal>,
+    jobs: FastMap<JobId, JobLocal>,
 }
 
 impl LocalityIndex {
@@ -38,7 +37,7 @@ impl LocalityIndex {
 
     /// Register a job's map tasks from HDFS placement (call at arrival).
     pub fn add_job(&mut self, job: &Job, hdfs: &Hdfs) {
-        let mut per_node: HashMap<NodeId, Vec<u32>> = HashMap::new();
+        let mut per_node: FastMap<NodeId, Vec<u32>> = FastMap::default();
         for i in 0..job.spec.n_maps() as u32 {
             for &node in hdfs.replicas(job.id(), i) {
                 per_node.entry(node).or_default().push(i);
@@ -142,14 +141,14 @@ pub fn pick_reduce(job: &Job, picked: &FastSet<TaskRef>) -> Option<TaskRef> {
 /// lack of a local task.
 pub struct DelayTimer {
     timeout_s: f64,
-    skipped_since: HashMap<JobId, Time>,
+    skipped_since: FastMap<JobId, Time>,
 }
 
 impl DelayTimer {
     pub fn new(timeout_s: f64) -> Self {
         Self {
             timeout_s,
-            skipped_since: HashMap::new(),
+            skipped_since: FastMap::default(),
         }
     }
 

@@ -15,7 +15,6 @@ use super::{Action, SchedView, Scheduler};
 use crate::job::task::NodeId;
 use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::util::fxmap::{FastMap, FastSet};
-use std::collections::HashMap;
 
 /// FAIR configuration.
 #[derive(Clone, Debug)]
@@ -41,7 +40,7 @@ pub struct FairScheduler {
     index: LocalityIndex,
     delay: DelayTimer,
     /// Weights (extension point for pools; uniform in the paper's setup).
-    weights: HashMap<JobId, f64>,
+    weights: FastMap<JobId, f64>,
     /// Reusable per-heartbeat working sets (the picked-task set and the
     /// deficit ordering's extra-launch counters; the deficit re-sort
     /// itself still builds its candidate list per pick).
@@ -56,7 +55,7 @@ impl FairScheduler {
             cfg,
             index: LocalityIndex::new(),
             delay,
-            weights: HashMap::new(),
+            weights: FastMap::default(),
             picked: FastSet::default(),
             extra: FastMap::default(),
         }

@@ -70,7 +70,6 @@ use crate::job::{Job, JobId, Phase, TaskRef};
 use crate::scheduler::core::PreemptionPrimitive;
 use crate::sim::Time;
 use crate::util::fxmap::{FastMap, FastSet};
-use std::collections::HashSet;
 
 /// Configuration of the hierarchical scheduler: the pool tree plus the
 /// base mechanism parameters every leaf inherits (each leaf overrides
@@ -126,7 +125,7 @@ struct LeafPool {
     training: Option<TrainingModule>,
     order_map: OrderCache,
     order_reduce: OrderCache,
-    reduce_started: HashSet<JobId>,
+    reduce_started: FastSet<JobId>,
 }
 
 impl LeafPool {
@@ -165,7 +164,7 @@ impl LeafPool {
             training,
             order_map: OrderCache::default(),
             order_reduce: OrderCache::default(),
-            reduce_started: HashSet::new(),
+            reduce_started: FastSet::default(),
         }
     }
 

@@ -129,7 +129,7 @@ impl ShareTree {
         self.kid_demands.extend(kids.iter().map(|&c| self.demand[c]));
         let uniform = kids
             .windows(2)
-            .all(|w| self.weight[w[0]] == self.weight[w[1]]);
+            .all(|w| self.weight[w[0]].total_cmp(&self.weight[w[1]]).is_eq());
         if uniform {
             maxmin_waterfill_into(
                 &self.kid_demands,

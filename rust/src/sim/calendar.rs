@@ -314,7 +314,7 @@ impl<E> CalendarQueue<E> {
     /// distinct times — there is nothing to learn from it.
     fn tuned_width(&self, slots: &[Slot<E>]) -> f64 {
         let mut times: Vec<f64> = slots.iter().take(WIDTH_SAMPLE).map(|s| s.ev.time).collect();
-        times.sort_by(|a, b| a.partial_cmp(b).expect("non-finite event time"));
+        times.sort_by(|a, b| a.total_cmp(b));
         let mut sum = 0.0;
         let mut n = 0u32;
         for w in times.windows(2) {

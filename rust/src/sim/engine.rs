@@ -211,7 +211,7 @@ impl<E, Q: PendingQueue<E>> Engine<E, Q> {
             }
             {
                 let head = self.queue.peek()?;
-                if head.time != self.now || !pred(&head.event) {
+                if head.time.total_cmp(&self.now).is_ne() || !pred(&head.event) {
                     return None;
                 }
             }

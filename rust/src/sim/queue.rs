@@ -135,7 +135,10 @@ pub struct ScheduledEvent<E> {
 
 impl<E> PartialEq for ScheduledEvent<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.class == other.class && self.seq == other.seq
+        // Defined through `delivery_cmp` so equality is exactly
+        // "neither orders before the other" (total_cmp semantics,
+        // consistent with `Ord`).
+        self.delivery_cmp(other) == Ordering::Equal
     }
 }
 impl<E> Eq for ScheduledEvent<E> {}
@@ -153,8 +156,7 @@ impl<E> ScheduledEvent<E> {
     /// storage). Times are finite by the push-time invariant.
     pub fn delivery_cmp(&self, other: &Self) -> Ordering {
         self.time
-            .partial_cmp(&other.time)
-            .expect("non-finite event time")
+            .total_cmp(&other.time)
             .then_with(|| self.class.cmp(&other.class))
             .then_with(|| self.seq.cmp(&other.seq))
     }

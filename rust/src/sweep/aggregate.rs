@@ -140,8 +140,7 @@ impl GroupStats {
     }
 
     fn finalize(&mut self) {
-        self.pooled_sojourns
-            .sort_by(|a, b| a.partial_cmp(b).expect("NaN sojourn"));
+        self.pooled_sojourns.sort_by(|a, b| a.total_cmp(b));
     }
 
     /// Half-width of the normal-approximation 95 % confidence interval

@@ -458,7 +458,7 @@ mod tests {
             .jobs
             .iter()
             .zip(&c.jobs)
-            .any(|(x, y)| x.submit_time != y.submit_time));
+            .any(|(x, y)| x.submit_time.total_cmp(&y.submit_time).is_ne()));
     }
 
     #[test]

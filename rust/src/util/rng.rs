@@ -295,7 +295,7 @@ impl Zipf {
         let u = rng.next_f64();
         match self
             .cdf
-            .binary_search_by(|probe| probe.partial_cmp(&u).unwrap())
+            .binary_search_by(|probe| probe.total_cmp(&u))
         {
             Ok(i) => i + 1,
             Err(i) => i + 1,

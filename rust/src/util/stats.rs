@@ -156,7 +156,7 @@ pub struct Ecdf {
 
 impl Ecdf {
     pub fn new(mut xs: Vec<f64>) -> Self {
-        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in ECDF sample"));
+        xs.sort_by(|a, b| a.total_cmp(b));
         Self { sorted: xs }
     }
 

@@ -43,13 +43,13 @@ impl JobTimeline {
     /// values are merged.
     pub fn step_series(&self) -> Vec<(f64, i64)> {
         let mut events = self.deltas.clone();
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut out: Vec<(f64, i64)> = Vec::new();
         let mut level = 0i64;
         let mut i = 0;
         while i < events.len() {
             let t = events[i].0;
-            while i < events.len() && events[i].0 == t {
+            while i < events.len() && events[i].0.total_cmp(&t).is_eq() {
                 level += events[i].1;
                 i += 1;
             }

@@ -41,12 +41,7 @@ impl Workload {
     /// anything ingesting external data (trace replay, the CLI) must
     /// propagate the error.
     pub fn new(name: impl Into<String>, mut jobs: Vec<JobSpec>) -> anyhow::Result<Self> {
-        jobs.sort_by(|a, b| {
-            a.submit_time
-                .partial_cmp(&b.submit_time)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
         let mut ids: Vec<_> = jobs.iter().map(|j| j.id).collect();
         ids.sort_unstable();
         if let Some(dup) = ids.windows(2).find(|w| w[0] == w[1]) {

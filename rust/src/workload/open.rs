@@ -277,7 +277,9 @@ mod tests {
             assert_eq!(x.map_durations, y.map_durations);
         }
         assert!(
-            a.iter().zip(&c).any(|(x, y)| x.submit_time != y.submit_time),
+            a.iter()
+                .zip(&c)
+                .any(|(x, y)| x.submit_time.total_cmp(&y.submit_time).is_ne()),
             "different seeds differ"
         );
     }

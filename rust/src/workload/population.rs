@@ -240,7 +240,7 @@ mod tests {
             assert_eq!(x.tenant, y.tenant);
             assert_eq!(x.map_durations, y.map_durations);
             assert_eq!(x.reduce_durations, y.reduce_durations);
-            times_differ |= x.submit_time != y.submit_time;
+            times_differ |= x.submit_time.total_cmp(&y.submit_time).is_ne();
         }
         assert!(times_differ, "different arrival RNGs must shift the clock");
     }

@@ -1,0 +1,302 @@
+//! Exhaustive-interleaving model of the coordinator/worker
+//! window-barrier handshake in `cluster::driver` (loom-style, but
+//! hand-rolled — loom cannot be vendored into this offline build).
+//!
+//! The protocol, reduced to its concurrency skeleton:
+//!
+//! - The coordinator opens window `k` by sending every worker a
+//!   `Window` message with its routed job batch, then blocks until it
+//!   has collected one report per shard.
+//! - Workers run their slice to the horizon and report: completed jobs,
+//!   spillover `exports` to re-route, and a `halted` flag.
+//! - Reports funnel through one shared mpsc channel, so the order they
+//!   reach the coordinator is scheduler-chosen. That order is the ONLY
+//!   nondeterminism in the protocol — workers themselves are
+//!   deterministic functions of their batch.
+//!
+//! The model enumerates every report-arrival permutation at every
+//! barrier (the full interleaving space of the skeleton) and checks:
+//!
+//! 1. **Barrier integrity** — each round collects exactly one report
+//!    per shard, all for the current window.
+//! 2. **Job conservation** — every arrival completes exactly once
+//!    (no-halt scenarios), or at most once (halt scenario).
+//! 3. **Order-insensitivity** — the final completion digest is
+//!    byte-identical across ALL interleavings. This is the property the
+//!    driver's pre-routing `pool.sort_by(submit_time, id)` exists to
+//!    provide: exports re-enter the backlog in arrival order, and the
+//!    greedy router is order-sensitive, so an unsorted pool would make
+//!    this assertion fail.
+//! 4. **Termination** — every path reaches the final barrier (deadlock
+//!    freedom of the skeleton: sends never block, the barrier consumes
+//!    exactly what the workers produce).
+
+use std::collections::BTreeSet;
+
+/// A job in the model: `hops` is how many windows it gets exported
+/// (spilled) before a worker finally completes it. This stands in for
+/// "the shard was saturated and re-routed the job".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Job {
+    id: u32,
+    hops: u8,
+}
+
+/// What one worker sends back at a barrier.
+#[derive(Clone, Debug)]
+struct Report {
+    shard: usize,
+    window: usize,
+    completed: Vec<u32>,
+    exports: Vec<Job>,
+    halted: bool,
+}
+
+/// One completion event: (job, shard it completed on, window).
+type Completion = (u32, usize, usize);
+
+struct Model {
+    shards: usize,
+    /// Arrivals per window (submit order).
+    arrivals: Vec<Vec<Job>>,
+    /// Shard that halts, and the first window it is halted for.
+    halt: Option<(usize, usize)>,
+}
+
+impl Model {
+    /// Deterministic worker: completes jobs with `hops == 0`, exports
+    /// the rest with one hop consumed. A halted worker does nothing.
+    fn worker(&self, shard: usize, window: usize, batch: &[Job]) -> Report {
+        let halted = matches!(self.halt, Some((s, w)) if s == shard && window >= w);
+        let mut completed = Vec::new();
+        let mut exports = Vec::new();
+        if !halted {
+            for job in batch {
+                if job.hops == 0 {
+                    completed.push(job.id);
+                } else {
+                    exports.push(Job {
+                        id: job.id,
+                        hops: job.hops - 1,
+                    });
+                }
+            }
+        }
+        Report {
+            shard,
+            window,
+            completed,
+            exports,
+            halted,
+        }
+    }
+
+    /// Deterministic greedy router over the *sorted* pool — mirrors
+    /// `route_jobs` consuming the coordinator's sorted pool. Skips the
+    /// halted shard the way the digest's zero free slots would.
+    fn route(&self, pool: &[Job], window: usize) -> Vec<Vec<Job>> {
+        let active: Vec<usize> = (0..self.shards)
+            .filter(|&s| !matches!(self.halt, Some((hs, hw)) if hs == s && window >= hw))
+            .collect();
+        let mut batches: Vec<Vec<Job>> = (0..self.shards).map(|_| Vec::new()).collect();
+        for (i, job) in pool.iter().enumerate() {
+            batches[active[i % active.len()]].push(*job);
+        }
+        batches
+    }
+
+    /// Explore every interleaving; returns (distinct digests, paths).
+    fn explore(&self) -> (BTreeSet<Vec<Completion>>, usize) {
+        let mut digests = BTreeSet::new();
+        let mut paths = 0usize;
+        self.dfs(0, Vec::new(), Vec::new(), &mut digests, &mut paths);
+        (digests, paths)
+    }
+
+    fn dfs(
+        &self,
+        window: usize,
+        backlog: Vec<Job>,
+        done: Vec<Completion>,
+        digests: &mut BTreeSet<Vec<Completion>>,
+        paths: &mut usize,
+    ) {
+        if window == self.arrivals.len() {
+            assert!(
+                backlog.is_empty(),
+                "window budget exhausted with jobs still in flight: {backlog:?}"
+            );
+            let mut digest = done;
+            digest.sort_unstable();
+            digests.insert(digest);
+            *paths += 1;
+            return;
+        }
+
+        // Coordinator: pool = backlog + this window's arrivals, sorted
+        // deterministically (the driver sorts by (submit_time, id); the
+        // model's id doubles as submit order).
+        let mut pool = backlog;
+        pool.extend(self.arrivals[window].iter().copied());
+        pool.sort_unstable_by_key(|j| j.id);
+        let batches = self.route(&pool, window);
+
+        // Workers are deterministic; the interleaving choice is purely
+        // the order their reports come off the shared channel.
+        let reports: Vec<Report> = (0..self.shards)
+            .map(|s| self.worker(s, window, &batches[s]))
+            .collect();
+
+        // Property 1: exactly one report per shard, all for this window.
+        let shards_seen: BTreeSet<usize> = reports.iter().map(|r| r.shard).collect();
+        assert_eq!(shards_seen.len(), self.shards, "duplicate/missing shard report");
+        assert!(reports.iter().all(|r| r.window == window), "stale report");
+
+        let any_halt = reports.iter().any(|r| r.halted);
+        for order in permutations(self.shards) {
+            // Coordinator barrier: fold reports in arrival order. This
+            // is where `backlog.extend(r.exports)` makes the backlog
+            // order interleaving-dependent — the next window's sort is
+            // what erases it.
+            let mut backlog = Vec::new();
+            let mut done = done.clone();
+            for &i in &order {
+                let r = &reports[i];
+                done.extend(r.completed.iter().map(|&id| (id, r.shard, window)));
+                backlog.extend(r.exports.iter().copied());
+            }
+            if any_halt {
+                // The real coordinator stops opening windows once any
+                // shard halts; in-flight spillover is abandoned.
+                let mut digest = done;
+                digest.sort_unstable();
+                digests.insert(digest);
+                *paths += 1;
+            } else {
+                self.dfs(window + 1, backlog, done, digests, paths);
+            }
+        }
+    }
+}
+
+/// All permutations of `0..n` (n! of them), lexicographic.
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    fn rec(prefix: &mut Vec<usize>, rest: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if rest.is_empty() {
+            out.push(prefix.clone());
+            return;
+        }
+        for i in 0..rest.len() {
+            let x = rest.remove(i);
+            prefix.push(x);
+            rec(prefix, rest, out);
+            prefix.pop();
+            rest.insert(i, x);
+        }
+    }
+    let mut out = Vec::new();
+    rec(&mut Vec::new(), &mut (0..n).collect(), &mut out);
+    out
+}
+
+fn ids(jobs: &[Job]) -> BTreeSet<u32> {
+    jobs.iter().map(|j| j.id).collect()
+}
+
+#[test]
+fn all_interleavings_agree_with_spillover() {
+    // 3 shards x 3 windows, with multi-hop spillover so several shards
+    // export in the same window — the case where report order matters.
+    let model = Model {
+        shards: 3,
+        arrivals: vec![
+            vec![
+                Job { id: 0, hops: 0 },
+                Job { id: 1, hops: 1 },
+                Job { id: 2, hops: 0 },
+                Job { id: 3, hops: 2 },
+                Job { id: 4, hops: 1 },
+            ],
+            vec![
+                Job { id: 5, hops: 0 },
+                Job { id: 6, hops: 1 },
+                Job { id: 7, hops: 1 },
+            ],
+            vec![Job { id: 8, hops: 0 }, Job { id: 9, hops: 0 }],
+        ],
+        halt: None,
+    };
+    let (digests, paths) = model.explore();
+    // 3 barriers, 3! report orders each.
+    assert_eq!(paths, 6 * 6 * 6, "interleaving space not fully explored");
+    assert_eq!(
+        digests.len(),
+        1,
+        "outcome depends on report arrival order: {digests:#?}"
+    );
+    // Job conservation: every arrival completes exactly once.
+    let digest = digests.iter().next().unwrap();
+    let completed: Vec<u32> = digest.iter().map(|&(id, _, _)| id).collect();
+    let unique: BTreeSet<u32> = completed.iter().copied().collect();
+    assert_eq!(completed.len(), unique.len(), "a job completed twice");
+    let all: BTreeSet<u32> = model.arrivals.iter().flat_map(|w| ids(w)).collect();
+    assert_eq!(unique, all, "lost or phantom jobs");
+}
+
+#[test]
+fn all_interleavings_agree_two_shards_deep() {
+    // 2 shards x 4 windows: longer chains, smaller fan-out per barrier.
+    let model = Model {
+        shards: 2,
+        arrivals: vec![
+            vec![Job { id: 0, hops: 3 }, Job { id: 1, hops: 0 }],
+            vec![Job { id: 2, hops: 2 }, Job { id: 3, hops: 1 }],
+            vec![Job { id: 4, hops: 0 }],
+            vec![Job { id: 5, hops: 0 }],
+        ],
+        halt: None,
+    };
+    let (digests, paths) = model.explore();
+    assert_eq!(paths, 2 * 2 * 2 * 2);
+    assert_eq!(digests.len(), 1, "{digests:#?}");
+    let digest = digests.iter().next().unwrap();
+    let unique: BTreeSet<u32> = digest.iter().map(|&(id, _, _)| id).collect();
+    let all: BTreeSet<u32> = model.arrivals.iter().flat_map(|w| ids(w)).collect();
+    assert_eq!(unique, all);
+}
+
+#[test]
+fn halted_shard_stops_the_run_identically_everywhere() {
+    // Shard 1 halts from window 1 on. The coordinator finishes the
+    // barrier it is in, then stops opening windows; whatever completed
+    // up to that point must not depend on report order, and nothing may
+    // complete twice.
+    let model = Model {
+        shards: 3,
+        arrivals: vec![
+            vec![
+                Job { id: 0, hops: 0 },
+                Job { id: 1, hops: 1 },
+                Job { id: 2, hops: 0 },
+            ],
+            vec![Job { id: 3, hops: 0 }, Job { id: 4, hops: 0 }],
+            vec![Job { id: 5, hops: 0 }],
+        ],
+        halt: Some((1, 1)),
+    };
+    let (digests, paths) = model.explore();
+    // Window 0 barrier (3! orders) then the halting window-1 barrier
+    // (3! orders), after which every path ends.
+    assert_eq!(paths, 6 * 6);
+    assert_eq!(
+        digests.len(),
+        1,
+        "halt path depends on report order: {digests:#?}"
+    );
+    let digest = digests.iter().next().unwrap();
+    let completed: Vec<u32> = digest.iter().map(|&(id, _, _)| id).collect();
+    let unique: BTreeSet<u32> = completed.iter().copied().collect();
+    assert_eq!(completed.len(), unique.len(), "a job completed twice");
+    // Window 0's hops-0 jobs certainly completed before the halt.
+    assert!(unique.contains(&0) && unique.contains(&2));
+}

@@ -59,7 +59,7 @@ fn per_job_series_sorted_like_fig4() {
     let o = outcome();
     let by_job = o.sojourn.by_job();
     let mut diffs: Vec<f64> = by_job.values().map(|v| *v).collect();
-    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    diffs.sort_by(|a, b| a.total_cmp(b));
     let series = Series::new(
         "sorted sojourns",
         diffs.iter().enumerate().map(|(i, &d)| (i as f64, d)).collect(),

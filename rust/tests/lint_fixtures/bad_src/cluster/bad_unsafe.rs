@@ -1,0 +1,9 @@
+//! Fixture: static mut, and unsafe without a SAFETY comment.
+static mut GLOBAL: u64 = 0;
+
+pub fn bump() -> u64 {
+    unsafe {
+        GLOBAL += 1;
+        GLOBAL
+    }
+}

@@ -1,0 +1,5 @@
+//! Fixture: naked RNG seeding outside the substream discipline.
+
+pub fn rng(seed: u64) -> Pcg64 {
+    Pcg64::seed_from_u64(seed)
+}

@@ -1,0 +1,8 @@
+//! Fixture: std hash containers in outcome-affecting code.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub struct Registry {
+    map: HashMap<u64, f64>,
+    set: HashSet<u64>,
+}

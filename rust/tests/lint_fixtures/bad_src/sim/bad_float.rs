@@ -1,0 +1,8 @@
+//! Fixture: partial_cmp comparator and a raw float key.
+use std::collections::BTreeMap;
+
+pub fn sort(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub type Index = BTreeMap<f64, u64>;

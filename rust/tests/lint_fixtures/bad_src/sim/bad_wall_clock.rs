@@ -1,0 +1,10 @@
+//! Fixture: wall-clock and environment reads in sim code.
+use std::time::Instant;
+
+pub fn elapsed_ms() -> u128 {
+    Instant::now().elapsed().as_millis()
+}
+
+pub fn level() -> Option<String> {
+    std::env::var("HFSP_LOG").ok()
+}

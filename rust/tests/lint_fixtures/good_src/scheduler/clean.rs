@@ -1,0 +1,30 @@
+//! Fixture: a module that satisfies the determinism contract.
+use std::collections::BTreeMap;
+
+pub fn sort(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+// Float *values* in ordered containers are fine; only float keys order.
+pub type Index = BTreeMap<u64, f64>;
+
+// simlint: allow(hash-container) -- exercising the inline waiver path
+pub type Raw = std::collections::HashMap<u64, u64>;
+
+// SAFETY: no-op block, documented to satisfy the census.
+pub fn documented() {
+    unsafe {}
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn test_code_is_out_of_scope() {
+        let _ = HashMap::<u64, u64>::new();
+        let _ = Instant::now();
+        let _ = Pcg64::seed_from_u64(7);
+    }
+}

@@ -1,0 +1,115 @@
+//! Tests for the `simlint` determinism-contract pass itself.
+//!
+//! Three layers:
+//!
+//! 1. **Fixture precision** — the known-bad fixture tree under
+//!    `tests/lint_fixtures/bad_src/` must produce *exactly* the expected
+//!    (rule, path, line) set, and the known-good tree none at all.
+//! 2. **Allowlist hygiene** — the committed `simlint.allow` stays within
+//!    its 5-entry budget, every entry names a file that still exists,
+//!    and every entry carries a justification.
+//! 3. **The gate** — `rust/src/**` linted against the committed
+//!    allowlist is clean. This makes plain `cargo test` enforce the
+//!    same bar CI's `hfsp lint --deny` gate does.
+
+use hfsp::lint::{lint_tree, Allowlist};
+use std::path::PathBuf;
+
+fn manifest() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixtures() -> PathBuf {
+    manifest().join("tests").join("lint_fixtures")
+}
+
+#[test]
+fn bad_fixtures_produce_exact_diagnostics() {
+    let diags = lint_tree(&fixtures().join("bad_src"), &Allowlist::empty()).unwrap();
+    let got: Vec<(String, String, usize)> = diags
+        .iter()
+        .map(|d| (d.rule.to_string(), d.path.clone(), d.line))
+        .collect();
+    let want: Vec<(String, String, usize)> = [
+        ("unsafe-census", "cluster/bad_unsafe.rs", 2),
+        ("unsafe-census", "cluster/bad_unsafe.rs", 5),
+        ("rng-stream", "faults/bad_rng.rs", 4),
+        ("hash-container", "scheduler/bad_hash.rs", 2),
+        ("hash-container", "scheduler/bad_hash.rs", 3),
+        ("hash-container", "scheduler/bad_hash.rs", 6),
+        ("hash-container", "scheduler/bad_hash.rs", 7),
+        ("float-ord", "sim/bad_float.rs", 5),
+        ("float-ord", "sim/bad_float.rs", 8),
+        ("wall-clock", "sim/bad_wall_clock.rs", 2),
+        ("wall-clock", "sim/bad_wall_clock.rs", 5),
+        ("wall-clock", "sim/bad_wall_clock.rs", 9),
+    ]
+    .iter()
+    .map(|(r, p, l)| (r.to_string(), p.to_string(), *l))
+    .collect();
+    assert_eq!(got, want, "diagnostics: {diags:#?}");
+}
+
+#[test]
+fn each_bad_fixture_trips_its_rule() {
+    // The acceptance-criterion shape: per bad fixture, the expected rule
+    // id fires at least once (what CI's per-fixture `--deny` runs check).
+    let diags = lint_tree(&fixtures().join("bad_src"), &Allowlist::empty()).unwrap();
+    for (path, rule) in [
+        ("scheduler/bad_hash.rs", "hash-container"),
+        ("sim/bad_float.rs", "float-ord"),
+        ("sim/bad_wall_clock.rs", "wall-clock"),
+        ("faults/bad_rng.rs", "rng-stream"),
+        ("cluster/bad_unsafe.rs", "unsafe-census"),
+    ] {
+        assert!(
+            diags.iter().any(|d| d.path == path && d.rule == rule),
+            "{path}: expected a {rule} diagnostic"
+        );
+    }
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    let diags = lint_tree(&fixtures().join("good_src"), &Allowlist::empty()).unwrap();
+    assert!(diags.is_empty(), "good_src should be clean: {diags:#?}");
+}
+
+#[test]
+fn committed_allowlist_is_within_budget_and_paths_exist() {
+    let allow = Allowlist::load(&manifest().join("simlint.allow")).unwrap();
+    assert!(
+        allow.len() <= 5,
+        "allowlist budget exceeded: {} entries (max 5)",
+        allow.len()
+    );
+    let src = manifest().join("src");
+    for entry in &allow.entries {
+        assert!(
+            src.join(&entry.path).is_file(),
+            "allowlist entry points at a missing file: {}",
+            entry.path
+        );
+        assert!(
+            !entry.reason.is_empty(),
+            "allowlist entry without a justification: {} {}",
+            entry.rule,
+            entry.path
+        );
+    }
+}
+
+#[test]
+fn source_tree_is_clean_under_the_committed_allowlist() {
+    let allow = Allowlist::load(&manifest().join("simlint.allow")).unwrap();
+    let diags = lint_tree(&manifest().join("src"), &allow).unwrap();
+    assert!(
+        diags.is_empty(),
+        "determinism-contract violations in rust/src:\n{}",
+        diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -118,8 +118,9 @@ fn drive_oracle(ops: &[Op]) -> QueueTrace {
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
-                a.0.partial_cmp(&b.0)
-                    .unwrap()
+                // Must mirror ScheduledEvent::delivery_cmp exactly
+                // (total_cmp), or the oracle diverges on -0.0 vs 0.0.
+                a.0.total_cmp(&b.0)
                     .then_with(|| a.1.cmp(&b.1))
                     .then_with(|| a.2.cmp(&b.2))
             })

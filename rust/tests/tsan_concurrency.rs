@@ -1,0 +1,129 @@
+//! ThreadSanitizer exercisers for the two threaded subsystems: the
+//! sharded fast-merge driver (PR-8) and the sweep executor.
+//!
+//! These tests are ordinary `cargo test` passes on a normal build, but
+//! their real job is the CI `tsan` lane:
+//!
+//! ```text
+//! RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+//!     --target x86_64-unknown-linux-gnu --release --test tsan_concurrency
+//! ```
+//!
+//! Each test deliberately drives the cross-thread paths — window-barrier
+//! report traffic, spillover re-routing, worker join/merge, and the
+//! sweep work queue — twice, asserting byte-identical outcomes, so a
+//! data race has both a sanitizer (TSan) and a semantic (fingerprint
+//! mismatch) detector watching it. Sizes are kept small: TSan costs
+//! roughly an order of magnitude in speed and memory.
+
+use hfsp::prelude::*;
+use hfsp::sim::{MergeMode, ShardSpec, StopReason};
+use hfsp::workload::synthetic;
+
+/// Byte-identity probe: full `Debug` output, wall clock zeroed.
+fn outcome_fingerprint(mut o: SimOutcome) -> String {
+    o.wall_ms = 0.0;
+    format!("{o:?}")
+}
+
+fn sharded_cfg(nodes: usize, shards: usize, seed: u64) -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig {
+            nodes,
+            ..Default::default()
+        },
+        seed,
+        shards: ShardSpec {
+            count: shards,
+            merge: MergeMode::Fast,
+            window_s: None,
+        },
+        ..Default::default()
+    }
+}
+
+/// The acceptance scenario: 4 shards, fast merge, open Poisson stream.
+/// Every window crosses the coordinator/worker barrier with live
+/// arrival routing; run twice, the outcomes must match bit-for-bit.
+#[test]
+fn fast_merge_open_stream_4_shards_is_race_free_and_repeatable() {
+    let source = OpenArrivals::poisson(1.0, f64::INFINITY)
+        .mix(JobMix::Uniform {
+            maps: 2,
+            task_s: 3.0,
+        })
+        .max_jobs(300);
+    let run = || {
+        Simulation::new(sharded_cfg(8, 4, 11))
+            .scheduler(SchedulerKind::hfsp())
+            .workload(source.clone())
+            .run()
+    };
+    let a = run();
+    assert_eq!(a.stream_error, None);
+    assert_ne!(a.stop, StopReason::EventLimit, "run truncated");
+    assert_eq!(a.jobs_arrived, 300);
+    assert_eq!(a.sojourn.len(), 300, "every job finishes");
+    let b = run();
+    assert_eq!(
+        outcome_fingerprint(a),
+        outcome_fingerprint(b),
+        "threaded fast-merge open-stream run is not repeatable"
+    );
+}
+
+/// Saturated 2-shard scenario: every placement spills, so the report
+/// channel carries non-empty `exports` every window — the traffic the
+/// pre-routing pool sort makes order-insensitive.
+#[test]
+fn fast_merge_spillover_traffic_is_race_free_and_repeatable() {
+    let wl = synthetic::uniform_batch(4, 4, 30.0);
+    let cfg = SimConfig {
+        cluster: ClusterConfig {
+            nodes: 2,
+            map_slots: 1,
+            reduce_slots: 1,
+            ..Default::default()
+        },
+        seed: 7,
+        shards: ShardSpec {
+            count: 2,
+            merge: MergeMode::Fast,
+            window_s: None,
+        },
+        ..Default::default()
+    };
+    let run = || run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    let a = run();
+    assert!(
+        a.counters.spilled_jobs >= 1,
+        "scenario must exercise spillover (spilled {})",
+        a.counters.spilled_jobs
+    );
+    assert_eq!(a.sojourn.len(), 4, "every job finishes");
+    let b = run();
+    assert_eq!(
+        outcome_fingerprint(a),
+        outcome_fingerprint(b),
+        "spillover handoff is not repeatable"
+    );
+}
+
+/// The sweep executor's worker pool under TSan: 4 threads racing over
+/// the shared cell queue, run twice, aggregates byte-identical.
+#[test]
+fn threaded_sweep_executor_is_race_free_and_repeatable() {
+    let template = OpenArrivals::poisson(2.0, 60.0).mix(JobMix::Uniform {
+        maps: 2,
+        task_s: 2.0,
+    });
+    let grid = ExperimentGrid::new("tsan-smoke")
+        .scheduler(SchedulerKind::hfsp())
+        .scheduler(SchedulerKind::Fifo)
+        .workload(WorkloadSpec::Open(template))
+        .nodes(&[4, 8])
+        .seeds(&[1, 2]);
+    let a = run_grid_threads(&grid, 4).aggregate().to_json().to_string_pretty();
+    let b = run_grid_threads(&grid, 4).aggregate().to_json().to_string_pretty();
+    assert_eq!(a, b, "threaded sweep aggregates must be byte-identical");
+}

@@ -1,0 +1,42 @@
+//! `simlint` — standalone entry point for the determinism-contract
+//! static-analysis pass (the same engine as `hfsp lint`, packaged as
+//! its own binary so CI and pre-commit hooks don't need the full CLI).
+//!
+//! ```text
+//! simlint [--src DIR] [--allow FILE] [--json] [--deny]
+//! ```
+//!
+//! Exits 0 when the tree is clean (or violations are only reported),
+//! 1 on violations under `--deny`, 2 on usage/I-O errors.
+
+fn main() {
+    let mut src: Option<String> = None;
+    let mut allow: Option<String> = None;
+    let mut json = false;
+    let mut deny = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--src" => src = args.next(),
+            "--allow" => allow = args.next(),
+            "--json" => json = true,
+            "--deny" => deny = true,
+            "--help" | "-h" => {
+                println!("simlint [--src DIR] [--allow FILE] [--json] [--deny]");
+                println!("Determinism-contract lint over rust/src (see docs/ARCHITECTURE.md).");
+                return;
+            }
+            other => {
+                eprintln!("simlint: unknown argument {other:?} (see --help)");
+                std::process::exit(2);
+            }
+        }
+    }
+    match hfsp::lint::cli_main(src.as_deref(), allow.as_deref(), json, deny) {
+        Ok(_) => {}
+        Err(e) => {
+            eprintln!("simlint: {e:#}");
+            std::process::exit(if deny { 1 } else { 2 });
+        }
+    }
+}
