@@ -68,8 +68,8 @@ use crate::metrics::{LocalityStats, PerJobRecord, SojournStats};
 use crate::scheduler::{Action, DemandDigest, SchedView, Scheduler, SchedulerKind};
 use crate::sim::shard::LaneRouter;
 use crate::sim::{
-    CalendarQueue, Engine, EventQueue, MergeMode, PendingQueue, QueueKind, ShardSpec,
-    ShardedQueue, StopReason, Time,
+    AutoWindow, CalendarQueue, Engine, EventQueue, MergeMode, PendingQueue, QueueKind, ShardSpec,
+    ShardedQueue, StopReason, Time, WindowTraffic,
 };
 use crate::util::config::Config;
 use crate::util::rng::{Pcg64, RngStreams, StreamId};
@@ -152,6 +152,20 @@ impl SimConfig {
         }
         let window = c.get_f64("sim.window_s", self.shards.window_s.unwrap_or(0.0));
         self.shards.window_s = (window > 0.0).then_some(window);
+        let auto_default = self.shards.auto_window;
+        if c.get_bool("sim.window_auto", auto_default.is_some()) {
+            let prior = auto_default.unwrap_or_default();
+            let bound = |key: &str, prior: Option<f64>| {
+                let v = c.get_f64(key, prior.unwrap_or(0.0));
+                (v > 0.0 && v.is_finite()).then_some(v)
+            };
+            self.shards.auto_window = Some(crate::sim::WindowAuto {
+                min_s: bound("sim.window_auto_min_s", prior.min_s),
+                max_s: bound("sim.window_auto_max_s", prior.max_s),
+            });
+        } else {
+            self.shards.auto_window = None;
+        }
         self.cluster.nodes = c.get_usize("cluster.nodes", self.cluster.nodes);
         self.cluster.map_slots = c.get_usize("cluster.map_slots", self.cluster.map_slots);
         self.cluster.reduce_slots =
@@ -207,6 +221,13 @@ pub struct SimOutcome {
     /// [`SimOutcome::sojourn`] are the one component that grows with
     /// the job count (compactly — no task vectors).
     pub peak_live_jobs: usize,
+    /// Largest single-shard `peak_live_jobs` (== `peak_live_jobs` on
+    /// serial and deterministic-merge runs, where there is one driver
+    /// loop). On fast-merge runs `peak_live_jobs` is instead the
+    /// coordinator-observed global peak: the max over barriers of the
+    /// summed per-shard live counts — per-shard peaks are NOT summed,
+    /// since the shards need not peak at the same instant.
+    pub shard_peak_live_jobs: usize,
     /// A probe requested the early stop (steady-state detection etc.).
     pub halted_by_probe: bool,
     /// The workload stream was invalid (e.g. a duplicate job id from a
@@ -551,6 +572,7 @@ fn run_session_on<Q: PendingQueue<Ev>>(
         heap_peak: engine.heap_peak(),
         jobs_arrived,
         peak_live_jobs,
+        shard_peak_live_jobs: peak_live_jobs,
         halted_by_probe,
         stream_error,
         stop: reason,
@@ -591,7 +613,19 @@ impl WorkloadSource for EmptySource {
 /// `Finish`.
 enum ShardCtl {
     /// Inject `jobs`, then run the shard's event loop up to `horizon`.
-    Window { horizon: Time, jobs: Vec<JobSpec> },
+    Window {
+        horizon: Time,
+        jobs: Vec<JobSpec>,
+        /// Work-stealing quota: hand back up to this many untouched
+        /// jobs at the report even if slots remain free — the
+        /// coordinator saw spare capacity elsewhere at the previous
+        /// barrier.
+        donate: usize,
+        /// Recycled export buffer (emptied, capacity kept): the worker
+        /// fills it and ships it back as `ShardReport::exports`, so
+        /// steady-state windows allocate no fresh report buffers.
+        scratch: Vec<JobSpec>,
+    },
     /// No further windows: drain everything still in flight and exit.
     Finish,
 }
@@ -712,7 +746,12 @@ fn shard_worker<Q: PendingQueue<Ev>>(
     let mut stopped = false;
     while let Ok(msg) = ctl.recv() {
         match msg {
-            ShardCtl::Window { horizon, jobs } => {
+            ShardCtl::Window {
+                horizon,
+                jobs,
+                donate,
+                mut scratch,
+            } => {
                 if !stopped {
                     driver.inject_external(&mut engine, jobs);
                     let reason = engine.run_until(horizon, heartbeat_chain, |eng, now, ev| {
@@ -728,11 +767,15 @@ fn shard_worker<Q: PendingQueue<Ev>>(
                         }
                     }
                 }
-                let exports = if stopped {
-                    Vec::new()
-                } else {
-                    driver.take_exports(&engine)
-                };
+                scratch.clear();
+                let mut exports = scratch;
+                if !stopped {
+                    // Spillover first (saturated: shed everything
+                    // untouched), then the stealing quota on top; both
+                    // run once per window, so a job moves at most once.
+                    driver.take_exports_into(&engine, &mut exports);
+                    driver.take_stolen_into(&engine, donate, &mut exports);
+                }
                 let report = ShardReport {
                     shard: setup.shard,
                     digest: DemandDigest::snapshot(&driver.jobs, &driver.cluster),
@@ -809,7 +852,7 @@ fn argmin_first(v: &[usize]) -> usize {
 /// spreads instead of piling onto one shard. With every estimate
 /// exhausted, fall back to spreading by this window's assignment count —
 /// a saturated shard will spill what it cannot start
-/// ([`Driver::take_exports`]) and the job re-routes next window.
+/// ([`Driver::take_exports_into`]) and the job re-routes next window.
 fn route_jobs(jobs: Vec<JobSpec>, digests: &[DemandDigest], count: usize) -> Vec<Vec<JobSpec>> {
     let mut batches: Vec<Vec<JobSpec>> = (0..count).map(|_| Vec::new()).collect();
     let mut free: Vec<i64> = digests.iter().map(|d| d.free_map_slots as i64).collect();
@@ -841,13 +884,16 @@ fn worse(a: StopReason, b: StopReason) -> StopReason {
 
 /// Fold per-shard results into one [`SimOutcome`]. Sojourn records,
 /// locality, action counters and fault stats merge exactly (sums /
-/// re-sorted concatenations); `heap_peak` and `peak_live_jobs` are sums
-/// of per-shard peaks (an upper bound — the shards need not peak at the
-/// same instant).
+/// re-sorted concatenations). Peaks are **not** summed — the shards
+/// need not peak at the same instant: `shard_peak_live_jobs` and
+/// `heap_peak` are maxima over shards, and `peak_live_jobs` is the
+/// coordinator-observed global peak (max over barriers of the summed
+/// live counts, floored by the largest single-shard peak).
 fn merge_parts(
     parts: Vec<ShardParts>,
     workload: String,
     stream_error: Option<String>,
+    coord_peak: usize,
     wall_ms: f64,
 ) -> SimOutcome {
     let mut parts = parts.into_iter();
@@ -867,6 +913,7 @@ fn merge_parts(
         heap_peak: first.heap_peak,
         jobs_arrived: first.jobs_arrived,
         peak_live_jobs: first.peak_live_jobs,
+        shard_peak_live_jobs: first.peak_live_jobs,
         halted_by_probe: false,
         stream_error: stream_error.or(first.stream_error),
         stop: first.stop,
@@ -882,14 +929,18 @@ fn merge_parts(
         out.events_processed += p.processed;
         out.events_skipped += p.skipped;
         out.events_pushed += p.pushed;
-        out.heap_peak += p.heap_peak;
+        out.heap_peak = out.heap_peak.max(p.heap_peak);
         out.jobs_arrived += p.jobs_arrived;
-        out.peak_live_jobs += p.peak_live_jobs;
+        out.shard_peak_live_jobs = out.shard_peak_live_jobs.max(p.peak_live_jobs);
         if out.stream_error.is_none() {
             out.stream_error = p.stream_error;
         }
         out.stop = worse(out.stop, p.stop);
     }
+    // The global peak can never be below the largest single-shard peak:
+    // the coordinator only samples live counts at barriers, while a
+    // shard tracks its own peak continuously.
+    out.peak_live_jobs = coord_peak.max(out.shard_peak_live_jobs);
     // Idle shard clocks sit at the final window boundary; on a clean run
     // the real makespan is the last completion.
     if out.stop != StopReason::EventLimit && out.stream_error.is_none() {
@@ -928,6 +979,10 @@ fn run_session_sharded(
     let part = Partition::new(cfg.cluster.nodes, shards.count);
     let n = part.count();
     let window = shards.window(cfg.cluster.heartbeat_s);
+    // Adaptive window controller: a pure function of the per-barrier
+    // traffic sums, so the horizon sequence is identical on every
+    // thread interleaving (pinned by tests/barrier_model.rs).
+    let mut auto = shards.auto_window.map(|a| AutoWindow::new(window, a));
 
     // Global fault plan, compiled once and sliced per shard: the same
     // physical nodes crash and straggle whatever the shard count.
@@ -1010,6 +1065,13 @@ fn run_session_sharded(
         let mut last_submit: Time = 0.0;
         let mut horizon = window;
         let mut any_halted = false;
+        // Coordinator-observed global live-job peak: max over barriers
+        // of the summed per-shard live counts (per-shard peaks are NOT
+        // summed — the shards need not peak at the same instant).
+        let mut coord_peak = 0usize;
+        // Retired export buffers, recycled into the next window's
+        // `ShardCtl::Window::scratch` (capacity-only state).
+        let mut scratch_pool: Vec<Vec<JobSpec>> = Vec::new();
 
         loop {
             // Pull every arrival strictly before this window's horizon
@@ -1051,19 +1113,52 @@ fn run_session_sharded(
             // no-export common case is already submit-ordered, so this
             // is a stable no-op there.
             pool.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
+            let routed_jobs = pool.len();
             let batches = route_jobs(pool, &digests, n);
-            for (tx, jobs) in ctl_txs.iter().zip(batches) {
-                if tx.send(ShardCtl::Window { horizon, jobs }).is_err() {
+            // Work-stealing quotas, from the previous barrier's digests
+            // (deterministic: ascending shard order over indexed state,
+            // so report arrival order cannot change the result). Spare
+            // capacity = free map slots beyond a shard's own queued
+            // maps; saturated shards with untouched jobs donate up to
+            // the cluster-wide spare.
+            let mut spare: usize = digests
+                .iter()
+                .map(|d| d.free_map_slots.saturating_sub(d.pending_maps))
+                .sum();
+            let mut donates = vec![0usize; n];
+            if spare > 0 {
+                for (s, d) in digests.iter().enumerate() {
+                    if spare == 0 {
+                        break;
+                    }
+                    if d.pending_maps > d.free_map_slots {
+                        let take = d.stealable_jobs.min(spare);
+                        donates[s] = take;
+                        spare -= take;
+                    }
+                }
+            }
+            for ((tx, jobs), donate) in ctl_txs.iter().zip(batches).zip(&donates) {
+                let msg = ShardCtl::Window {
+                    horizon,
+                    jobs,
+                    donate: *donate,
+                    scratch: scratch_pool.pop().unwrap_or_default(),
+                };
+                if tx.send(msg).is_err() {
                     any_halted = true;
                 }
             }
             // Barrier: one report per shard.
+            let mut crossed_jobs = 0usize;
             for _ in 0..n {
                 match report_rx.recv() {
-                    Ok(r) => {
+                    Ok(mut r) => {
                         digests[r.shard] = r.digest;
                         lives[r.shard] = r.live;
-                        backlog.extend(r.exports);
+                        crossed_jobs += r.exports.len();
+                        backlog.append(&mut r.exports);
+                        scratch_pool.push(r.exports);
                         any_halted |= r.halted;
                     }
                     Err(_) => {
@@ -1076,15 +1171,30 @@ fn run_session_sharded(
                 break;
             }
             let total_live: usize = lives.iter().sum();
+            coord_peak = coord_peak.max(total_live + backlog.len());
             if src_done && lookahead.is_none() && backlog.is_empty() && total_live == 0 {
                 break;
             }
+            // Adapt the next window to this barrier's observed traffic:
+            // cross-shard movement narrows it, a quiet barrier widens it.
+            let step = match auto.as_mut() {
+                Some(ctl) => {
+                    ctl.observe(WindowTraffic {
+                        routed_jobs,
+                        crossed_jobs,
+                        idle_shards: lives.iter().filter(|&&l| l == 0).count(),
+                        shards: n,
+                    });
+                    ctl.current()
+                }
+                None => window,
+            };
             // Idle fast-forward: nothing in flight anywhere and the next
             // arrival is beyond the horizon — jump straight to it
             // instead of spinning empty windows.
             horizon = match &lookahead {
-                Some(job) if total_live == 0 && backlog.is_empty() => job.submit_time + window,
-                _ => horizon + window,
+                Some(job) if total_live == 0 && backlog.is_empty() => job.submit_time + step,
+                _ => horizon + step,
             };
         }
 
@@ -1100,6 +1210,7 @@ fn run_session_sharded(
             parts,
             workload_name,
             stream_error,
+            coord_peak,
             t0.elapsed().as_secs_f64() * 1e3,
         )
     })
@@ -1268,49 +1379,90 @@ impl Driver<'_, '_, '_> {
         }
     }
 
+    /// Remove one untouched job for a cross-shard move: notify the
+    /// scheduler (it drops per-job state exactly as for a finished
+    /// job), evict placement, recycle the task vectors, and emit
+    /// `event` so spillover and stealing stay separately countable.
+    fn export_job(&mut self, now: Time, id: JobId, stolen: bool, out: &mut Vec<JobSpec>) {
+        {
+            let view = SchedView {
+                jobs: &self.jobs,
+                cluster: &self.cluster,
+                hdfs: &self.hdfs,
+                now,
+            };
+            self.scheduler.on_job_finished(&view, id);
+        }
+        let job = self.jobs.remove(&id).expect("untouched job in table");
+        self.hdfs.evict_job(id, job.spec.n_maps());
+        self.arrived_jobs -= 1;
+        let event = if stolen {
+            ProbeEvent::JobMigrated { job: id }
+        } else {
+            ProbeEvent::JobSpilled { job: id }
+        };
+        self.probes.emit(now, &event);
+        out.push(self.jobs.recycle(job));
+    }
+
     /// Fast-merge worker: hand *untouched* jobs (no task ever launched)
     /// back to the coordinator for re-routing, but only when this shard
     /// is out of map slots — a saturated shard sheds queued work that
     /// another shard may start immediately. Untouched-only keeps the
     /// migration trivial: the spec is the job's entire state, so nothing
-    /// can be lost or double-launched in flight.
-    fn take_exports<Q: PendingQueue<Ev>>(&mut self, eng: &Engine<Ev, Q>) -> Vec<JobSpec> {
+    /// can be lost or double-launched in flight. Appends into `out` (a
+    /// recycled report buffer swapped across the window channel).
+    fn take_exports_into<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &Engine<Ev, Q>,
+        out: &mut Vec<JobSpec>,
+    ) {
         if self.cluster.free_slots(Phase::Map) > 0 {
-            return Vec::new();
+            return;
         }
         let now = eng.now();
         let untouched: Vec<JobId> = self
             .jobs
             .values()
-            .filter(|job| {
-                [Phase::Map, Phase::Reduce].iter().all(|&phase| {
-                    job.tasks(phase)
-                        .iter()
-                        .all(|t| t.state.is_pending() && t.attempts == 0)
-                })
-            })
+            .filter(|job| job.is_untouched())
             .map(|job| job.id())
             .collect();
-        let mut out = Vec::with_capacity(untouched.len());
+        out.reserve(untouched.len());
         for id in untouched {
-            {
-                let view = SchedView {
-                    jobs: &self.jobs,
-                    cluster: &self.cluster,
-                    hdfs: &self.hdfs,
-                    now,
-                };
-                // The scheduler drops its per-job state exactly as for a
-                // finished job; the job will re-arrive elsewhere.
-                self.scheduler.on_job_finished(&view, id);
-            }
-            let job = self.jobs.remove(&id).expect("untouched job in table");
-            self.hdfs.evict_job(id, job.spec.n_maps());
-            self.arrived_jobs -= 1;
-            self.probes.emit(now, &ProbeEvent::JobSpilled { job: id });
-            out.push(job.spec);
+            self.export_job(now, id, false, out);
         }
-        out
+    }
+
+    /// Work-stealing donation: give up to `donate` untouched jobs even
+    /// though this shard still has free slots — the coordinator
+    /// determined (from the previous barrier's digests) that another
+    /// shard can start them sooner. Donates the *newest* untouched jobs
+    /// (highest ids), leaving the oldest queued work in place. A shard
+    /// with no free map slots already shed every untouched job through
+    /// [`take_exports_into`], so stealing is a strict superset of
+    /// spillover; each job moves at most once per window because both
+    /// passes run once, at the report boundary.
+    fn take_stolen_into<Q: PendingQueue<Ev>>(
+        &mut self,
+        eng: &Engine<Ev, Q>,
+        donate: usize,
+        out: &mut Vec<JobSpec>,
+    ) {
+        if donate == 0 {
+            return;
+        }
+        let now = eng.now();
+        let mut victims: Vec<JobId> = self
+            .jobs
+            .values()
+            .filter(|job| job.is_untouched())
+            .map(|job| job.id())
+            .collect();
+        let keep = victims.len().saturating_sub(donate);
+        victims.drain(..keep);
+        for id in victims {
+            self.export_job(now, id, true, out);
+        }
     }
 
     fn on_arrival<Q: PendingQueue<Ev>>(&mut self, eng: &mut Engine<Ev, Q>, now: Time) {
@@ -1344,7 +1496,7 @@ impl Driver<'_, '_, '_> {
                 tenant: spec.tenant,
             },
         );
-        let job = Job::new(spec);
+        let job = self.jobs.build_job(spec);
         // Degenerate zero-task job: finishes instantly, never enters the
         // job table or the scheduler.
         if job.is_finished() {
@@ -1352,6 +1504,7 @@ impl Driver<'_, '_, '_> {
             job.finish_time = Some(now);
             self.record_finish(now, &job);
             self.finished_jobs += 1;
+            self.jobs.recycle(job);
         } else {
             self.jobs.insert(id, job);
             self.peak_live_jobs = self.peak_live_jobs.max(self.jobs.len());
@@ -1705,6 +1858,9 @@ impl Driver<'_, '_, '_> {
             self.record_finish(now, &job);
             self.finished_jobs += 1;
             self.hdfs.evict_job(task.job, job.spec.n_maps());
+            // Task vectors return to the table's pool for the next
+            // arrival (allocation recycling; behaviour-invisible).
+            self.jobs.recycle(job);
         }
     }
 

@@ -209,16 +209,23 @@ pub struct Job {
 
 impl Job {
     pub fn new(spec: JobSpec) -> Self {
-        let maps: Vec<TaskRuntime> = spec
-            .map_durations
-            .iter()
-            .map(|&d| TaskRuntime::new(d))
-            .collect();
-        let reduces: Vec<TaskRuntime> = spec
-            .reduce_durations
-            .iter()
-            .map(|&d| TaskRuntime::new(d))
-            .collect();
+        Self::new_with_buffers(spec, Vec::new(), Vec::new())
+    }
+
+    /// Like [`Job::new`] but refilling caller-provided task vectors —
+    /// the allocation-pooling entry point used by
+    /// [`JobTable::build_job`](crate::job::JobTable::build_job).
+    /// The buffers are cleared first, so recycled capacity carries no
+    /// state from the previous occupant.
+    pub fn new_with_buffers(
+        spec: JobSpec,
+        mut maps: Vec<TaskRuntime>,
+        mut reduces: Vec<TaskRuntime>,
+    ) -> Self {
+        maps.clear();
+        maps.extend(spec.map_durations.iter().map(|&d| TaskRuntime::new(d)));
+        reduces.clear();
+        reduces.extend(spec.reduce_durations.iter().map(|&d| TaskRuntime::new(d)));
         let map_counts = PhaseCounts::new(maps.len());
         let reduce_counts = PhaseCounts::new(reduces.len());
         Self {
@@ -284,6 +291,16 @@ impl Job {
 
     pub fn is_finished(&self) -> bool {
         self.maps_done == self.maps.len() && self.reduces_done == self.reduces.len()
+    }
+
+    /// Whether no task of either phase has ever been launched: the job
+    /// carries no per-shard runtime state and can move between shards
+    /// (spillover / work-stealing) by shipping its spec alone.
+    pub fn is_untouched(&self) -> bool {
+        self.maps
+            .iter()
+            .chain(self.reduces.iter())
+            .all(|t| t.state.is_pending() && t.attempts == 0)
     }
 
     /// Number of tasks of `phase` not yet launched (pending, never run or

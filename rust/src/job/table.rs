@@ -22,9 +22,17 @@
 //! `jobs.get(&id)`, `jobs.values()`); an equivalence property test pins
 //! the behavioural match (`tests/integration_perf.rs`).
 
-use super::{Job, JobId};
+use super::task::TaskRuntime;
+use super::{Job, JobId, JobSpec};
 use crate::util::fxmap::FastMap;
 use std::ops::Index;
+
+/// Retired task vectors kept per table for reuse (see
+/// [`JobTable::build_job`] / [`JobTable::recycle`]). Beyond this many
+/// the extras are dropped: open streams rarely hold more distinct
+/// live jobs than this, and an unbounded pool would pin the high-water
+/// footprint forever.
+const TASK_VEC_POOL_CAP: usize = 1024;
 
 /// Dense slab of live jobs with O(1) id lookups and id-ordered
 /// iteration. See the module docs for the layout rationale.
@@ -38,6 +46,11 @@ pub struct JobTable {
     by_id: FastMap<JobId, u32>,
     /// Live `(id, slot)` pairs, sorted ascending by id.
     ordered: Vec<(JobId, u32)>,
+    /// Retired `TaskRuntime` vectors (maps and reduces alike),
+    /// recycled into the next [`build_job`](Self::build_job) instead of
+    /// allocating fresh. Capacity-only state: contents are cleared
+    /// before reuse, so pooling is invisible to simulation behaviour.
+    task_vec_pool: Vec<Vec<TaskRuntime>>,
 }
 
 impl JobTable {
@@ -128,6 +141,37 @@ impl JobTable {
     pub fn keys(&self) -> impl Iterator<Item = JobId> + '_ {
         self.ordered.iter().map(|&(id, _)| id)
     }
+
+    /// Construct a [`Job`] for `spec`, reusing pooled task-vector
+    /// capacity when available. Does **not** insert the job — the
+    /// driver decides whether it enters the table (zero-task jobs
+    /// finish immediately and never do).
+    pub fn build_job(&mut self, spec: JobSpec) -> Job {
+        let maps = self.task_vec_pool.pop().unwrap_or_default();
+        let reduces = self.task_vec_pool.pop().unwrap_or_default();
+        Job::new_with_buffers(spec, maps, reduces)
+    }
+
+    /// Retire a job removed from the table: its task vectors return to
+    /// the pool (cleared, capacity kept) and its spec is handed back —
+    /// the only part a cross-shard move needs to ship.
+    pub fn recycle(&mut self, job: Job) -> JobSpec {
+        let Job {
+            spec, maps, reduces, ..
+        } = job;
+        for mut v in [maps, reduces] {
+            if self.task_vec_pool.len() < TASK_VEC_POOL_CAP {
+                v.clear();
+                self.task_vec_pool.push(v);
+            }
+        }
+        spec
+    }
+
+    /// Pooled task vectors currently idle (diagnostics/tests).
+    pub fn pooled_task_vecs(&self) -> usize {
+        self.task_vec_pool.len()
+    }
 }
 
 impl Index<&JobId> for JobTable {
@@ -208,6 +252,41 @@ mod tests {
         // 40 jobs passed through, but never more than 4 were live.
         assert_eq!(t.slab_capacity(), 4);
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn build_and_recycle_reuse_task_vector_capacity() {
+        let mut t = JobTable::new();
+        let first = t.build_job(JobSpec {
+            id: 1,
+            name: "a".into(),
+            class: JobClass::Small,
+            tenant: TenantId::default(),
+            submit_time: 0.0,
+            map_durations: vec![1.0, 2.0, 3.0],
+            reduce_durations: vec![4.0],
+        });
+        assert_eq!(first.maps.len(), 3);
+        assert_eq!(first.reduces.len(), 1);
+        assert!(first.is_untouched());
+        let spec = t.recycle(first);
+        assert_eq!(spec.id, 1);
+        assert_eq!(t.pooled_task_vecs(), 2);
+        // The next build consumes the pooled vectors and refills them
+        // from its own spec — no stale tasks leak through.
+        let second = t.build_job(JobSpec {
+            id: 2,
+            name: "b".into(),
+            class: JobClass::Small,
+            tenant: TenantId::default(),
+            submit_time: 1.0,
+            map_durations: vec![9.0],
+            reduce_durations: vec![],
+        });
+        assert_eq!(t.pooled_task_vecs(), 0);
+        assert_eq!(second.maps.len(), 1);
+        assert_eq!(second.maps[0].total_work, 9.0);
+        assert!(second.reduces.is_empty());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use hfsp::report;
 use hfsp::scheduler::core::{EstimatorKind, HfspConfig, MaxMinKind, PreemptionPrimitive};
 use hfsp::scheduler::hierarchy::{HierarchyConfig, Topology};
 use hfsp::scheduler::{SchedulerKind, REGISTRY};
-use hfsp::sim::{MergeMode, QueueKind, ShardSpec, StopReason};
+use hfsp::sim::{MergeMode, QueueKind, ShardSpec, StopReason, WindowArg};
 use hfsp::sweep::{run_grid, run_grid_threads, ExperimentGrid, WorkloadSpec};
 use hfsp::util::cli::{Cli, Command, Parsed};
 use hfsp::util::config::Config as FileConfig;
@@ -73,7 +73,7 @@ fn cli() -> Cli {
                 .flag("queue", "", "event queue backend: calendar | heap (default: from --config, else calendar)")
                 .flag("shards", "", "partition the cluster across this many shards (default: from --config, else 1 = serial)")
                 .flag("merge", "", "shard merge mode: deterministic (byte-identical to serial) | fast (threaded window barrier)")
-                .flag("window", "", "fast merge: barrier window, simulated seconds (default: one heartbeat period)")
+                .flag("window", "", "fast merge: barrier window, simulated seconds, or auto[:min,max] for adaptive sizing (default: one heartbeat period)")
                 .flag("out", "", "write JSON outcome summary here")
                 .switch("stream", "replay --trace through the streaming TraceSource (constant memory)")
                 .switch("timelines", "record per-job slot timelines")
@@ -110,9 +110,11 @@ fn cli() -> Cli {
                 .flag("compare", "", "baseline BENCH_sim.json: print events/sec deltas and fail past --threshold")
                 .flag("threshold", "0.30", "max tolerated fractional events/sec regression for --compare")
                 .flag("queue", "", "event queue backend: calendar | heap (default: calendar)")
-                .flag("shards", "4", "shard count for the par-open-1e6 fast-merge scenario")
+                .flag("shards", "4", "shard count for the par-open-* fast-merge scenarios")
+                .flag("window", "auto", "par-open-* scenarios: barrier window, simulated seconds, or auto[:min,max]")
                 .flag("merge-baseline", "", "rewrite the committed --out trajectory from this CI-measured artifact (no scenarios run)")
                 .flag("out", "BENCH_sim.json", "benchmark JSON output path")
+                .switch("scaling", "emit a par-open shard-count scaling sweep (1/2/4/8) with per-shard speedup lines")
                 .switch("require-baseline", "fail --compare when the baseline shares no scenarios (arms the CI gate against an empty baseline)"),
             Command::new("fsp-demo", "PS vs FSP intuition (paper Fig. 1/2)")
                 .flag("slots", "4", "single-node slot count"),
@@ -447,12 +449,14 @@ fn sim_config(args: &hfsp::util::cli::Args) -> anyhow::Result<SimConfig> {
     if let Some(name) = args.get("merge").filter(|m| !m.trim().is_empty()) {
         cfg.shards.merge = MergeMode::from_name(name)?;
     }
-    if let Some(w) = args.get_parsed::<f64>("window")? {
-        anyhow::ensure!(
-            w > 0.0 && w.is_finite(),
-            "--window must be positive and finite"
-        );
-        cfg.shards.window_s = Some(w);
+    if let Some(w) = args.get("window").filter(|w| !w.trim().is_empty()) {
+        match WindowArg::parse(w.trim())? {
+            WindowArg::Fixed(w) => {
+                cfg.shards.window_s = Some(w);
+                cfg.shards.auto_window = None;
+            }
+            WindowArg::Auto(bounds) => cfg.shards.auto_window = Some(bounds),
+        }
     }
     Ok(cfg)
 }
@@ -714,10 +718,19 @@ fn run_sweep(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
 ///   (mechanism + every ordering policy through the sweep engine);
 /// * `par-open-1e6-serial` / `par-open-1e6` — a million streamed jobs
 ///   run serially and again under the fast shard merge on `--shards`
-///   threads: the parallel-speedup row pair.
+///   threads: the parallel-speedup row pair;
+/// * `par-open-1e7-quick` — the production-scale scenario's quick
+///   variant: a million jobs streamed over a 1000-node cluster under
+///   the fast merge (ignores `--nodes`; the cluster size is the
+///   scenario).
 ///
 /// `--profile full` adds `open-1e6` (a million streamed jobs, serial,
-/// the historical row).
+/// the historical row) and `par-open-1e7` (ten million jobs over a
+/// 10k-node cluster under the fast merge — the ROADMAP scale target).
+///
+/// `--scaling` adds the `par-scale-s{1,2,4,8}` shard-count sweep over
+/// the million-job open stream and prints one `scaling speedup:` line
+/// per shard count (the CI monotone-speedup assertion greps these).
 ///
 /// `--merge-baseline new.json` runs no scenarios: it rewrites the
 /// committed trajectory at `--out` from a CI-measured artifact (see
@@ -827,17 +840,27 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
     }
     // Sharded throughput: the same million-job open stream run serially
     // and under the fast merge on `--shards` worker threads — the row
-    // pair behind CI's parallel-speedup assertion. Wide 30 s windows
-    // amortize the barrier; cross-shard tie order is relaxed here, with
-    // serial equivalence pinned separately by the deterministic mode.
+    // pair behind CI's parallel-speedup assertion. The barrier window
+    // comes from --window (default: adaptive, base 30 s); cross-shard
+    // tie order is relaxed here, with serial equivalence pinned
+    // separately by the deterministic mode.
+    let fast_shards = |count: usize| -> anyhow::Result<ShardSpec> {
+        let mut spec = ShardSpec {
+            count,
+            merge: MergeMode::Fast,
+            window_s: Some(30.0),
+            auto_window: None,
+        };
+        match WindowArg::parse(args.get("window").unwrap_or("auto").trim())? {
+            WindowArg::Fixed(w) => spec.window_s = Some(w),
+            WindowArg::Auto(bounds) => spec.auto_window = Some(bounds),
+        }
+        Ok(spec)
+    };
     {
         records.push(open_record(&cfg, 1_000_000, "par-open-1e6-serial"));
         let sharded = SimConfig {
-            shards: ShardSpec {
-                count: shards,
-                merge: MergeMode::Fast,
-                window_s: Some(30.0),
-            },
+            shards: fast_shards(shards)?,
             ..cfg.clone()
         };
         records.push(open_record(&sharded, 1_000_000, "par-open-1e6"));
@@ -853,6 +876,60 @@ fn run_bench(args: &hfsp::util::cli::Args) -> anyhow::Result<()> {
                 "parallel speedup: {:.2}x ({shards} shards, fast merge)",
                 eps("par-open-1e6") / serial_eps
             );
+        }
+    }
+    // The production-scale target (ROADMAP item 1): an open stream over
+    // a 10k-node cluster. The full profile drives the headline 10M-job
+    // run; the quick profile keeps a scaled-down variant (1k nodes, 1M
+    // jobs) under the armed compare gate so the scenario cannot rot
+    // between full-profile runs. Both ignore --nodes: the cluster size
+    // is the scenario.
+    {
+        let big = |nodes: usize, count: usize| -> anyhow::Result<SimConfig> {
+            Ok(SimConfig {
+                cluster: ClusterConfig {
+                    nodes,
+                    ..Default::default()
+                },
+                shards: fast_shards(count)?,
+                ..cfg.clone()
+            })
+        };
+        records.push(open_record(
+            &big(1_000, shards)?,
+            1_000_000,
+            "par-open-1e7-quick",
+        ));
+        if profile == "full" {
+            records.push(open_record(&big(10_000, shards)?, 10_000_000, "par-open-1e7"));
+        }
+    }
+    // --scaling: the shard-count scaling sweep over the million-job
+    // open stream — the speedup curve is measured, not asserted. One
+    // row and one greppable line per shard count; wall time comes from
+    // each outcome's own wall_ms (no extra clock reads here).
+    if args.get_bool("scaling") {
+        let counts = [1usize, 2, 4, 8];
+        let names = ["par-scale-s1", "par-scale-s2", "par-scale-s4", "par-scale-s8"];
+        for (&count, name) in counts.iter().zip(names) {
+            let swept = SimConfig {
+                shards: fast_shards(count)?,
+                ..cfg.clone()
+            };
+            records.push(open_record(&swept, 1_000_000, name));
+        }
+        let base = records
+            .iter()
+            .find(|r| r.scenario == "par-scale-s1")
+            .map_or(0.0, |r| r.events_per_sec);
+        if base > 0.0 {
+            for (&count, name) in counts.iter().zip(names) {
+                let eps = records
+                    .iter()
+                    .find(|r| r.scenario == name)
+                    .map_or(0.0, |r| r.events_per_sec);
+                println!("scaling speedup: {:.2}x at {count} shards (fast merge)", eps / base);
+            }
         }
     }
     // The hierarchy hot path: Zipf tenants from a 10k-user population

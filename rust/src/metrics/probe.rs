@@ -117,6 +117,12 @@ pub enum ProbeEvent {
     /// coordinator because its shard had no free map slots; it will
     /// re-arrive on another shard in the next window.
     JobSpilled { job: JobId },
+    /// Sharded execution: a still-untouched job was stolen from a
+    /// saturated shard at the window barrier and will re-arrive on an
+    /// underloaded shard in the next window (work-stealing; a superset
+    /// of spillover that fires while the donor still has free slots
+    /// elsewhere in the run).
+    JobMigrated { job: JobId },
 }
 
 /// A streaming simulation observer. All methods have no-op defaults —
@@ -171,6 +177,9 @@ pub struct ActionCounters {
     /// Sharded execution: cross-shard job spillovers (each is one job
     /// handed back to the coordinator and re-placed on another shard).
     pub spilled_jobs: u64,
+    /// Sharded execution: jobs stolen from a saturated shard at a
+    /// window barrier and re-placed on an underloaded one.
+    pub stolen_jobs: u64,
 }
 
 impl ActionCounters {
@@ -187,6 +196,7 @@ impl ActionCounters {
         self.speculative_launches += other.speculative_launches;
         self.speculative_wins += other.speculative_wins;
         self.spilled_jobs += other.spilled_jobs;
+        self.stolen_jobs += other.stolen_jobs;
     }
 }
 
@@ -302,6 +312,7 @@ impl Probe for CounterProbe {
             ProbeEvent::SpeculativeLaunched { .. } => c.speculative_launches += 1,
             ProbeEvent::SpeculativeWon { .. } => c.speculative_wins += 1,
             ProbeEvent::JobSpilled { .. } => c.spilled_jobs += 1,
+            ProbeEvent::JobMigrated { .. } => c.stolen_jobs += 1,
             _ => {}
         }
     }

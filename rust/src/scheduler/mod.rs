@@ -110,6 +110,11 @@ pub struct DemandDigest {
     pub free_map_slots: usize,
     /// Free reduce slots on the shard's nodes.
     pub free_reduce_slots: usize,
+    /// Live jobs the shard could donate at the next barrier: still
+    /// completely untouched (no task of either phase ever launched), so
+    /// moving one to another shard carries no per-shard state. The
+    /// coordinator's work-stealing pass sizes its requests from this.
+    pub stealable_jobs: usize,
 }
 
 impl DemandDigest {
@@ -128,6 +133,9 @@ impl DemandDigest {
             d.live_jobs += 1;
             d.pending_maps += job.pending_tasks(Phase::Map);
             d.pending_reduces += job.pending_tasks(Phase::Reduce);
+            if job.is_untouched() {
+                d.stealable_jobs += 1;
+            }
         }
         d
     }
@@ -140,6 +148,7 @@ impl DemandDigest {
         self.pending_reduces += other.pending_reduces;
         self.free_map_slots += other.free_map_slots;
         self.free_reduce_slots += other.free_reduce_slots;
+        self.stealable_jobs += other.stealable_jobs;
     }
 
     /// Whether the shard is overloaded: queued map work with no free map
@@ -428,6 +437,7 @@ mod tests {
             pending_reduces: 1,
             free_map_slots: 0,
             free_reduce_slots: 2,
+            stealable_jobs: 1,
         };
         let b = DemandDigest {
             live_jobs: 1,
@@ -435,6 +445,7 @@ mod tests {
             pending_reduces: 0,
             free_map_slots: 4,
             free_reduce_slots: 2,
+            stealable_jobs: 0,
         };
         assert!(a.saturated());
         assert!(!b.saturated());
@@ -444,6 +455,7 @@ mod tests {
         assert_eq!(total.pending_maps, 5);
         assert_eq!(total.free_map_slots, 4);
         assert_eq!(total.free_reduce_slots, 4);
+        assert_eq!(total.stealable_jobs, 1);
     }
 
     #[test]

@@ -293,7 +293,15 @@ impl<E> CalendarQueue<E> {
         }
         self.width = self.tuned_width(&slots);
         if self.buckets.len() != target {
-            self.buckets = (0..target).map(|_| Vec::new()).collect();
+            // Resize in place instead of reallocating the whole array:
+            // on shrink the surviving (emptied) bucket `Vec`s keep
+            // their capacity, so oscillating occupancy stops paying an
+            // allocation churn per factor-2 crossing.
+            if self.buckets.len() > target {
+                self.buckets.truncate(target);
+            } else {
+                self.buckets.resize_with(target, Vec::new);
+            }
             self.mask = target as u64 - 1;
         }
         // Re-map every slot under the new width and aim the cursor at

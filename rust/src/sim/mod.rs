@@ -26,7 +26,7 @@ pub mod shard;
 pub use calendar::CalendarQueue;
 pub use engine::{Engine, StopReason};
 pub use queue::{EventQueue, PendingQueue, QueueKind, ScheduledEvent};
-pub use shard::{MergeMode, ShardSpec, ShardedQueue};
+pub use shard::{AutoWindow, MergeMode, ShardSpec, ShardedQueue, WindowArg, WindowAuto, WindowTraffic};
 
 /// Simulated time, in seconds since simulation start.
 pub type Time = f64;

@@ -52,6 +52,19 @@ impl MergeMode {
     }
 }
 
+/// Bounds for the adaptive barrier window (`--window auto[:min,max]`,
+/// `sim.window_auto*` config keys). `None` bounds derive from the base
+/// window at [`AutoWindow::new`] time.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowAuto {
+    /// Narrowest the controller may shrink the window, simulated
+    /// seconds. `None` = the base (fixed) window.
+    pub min_s: Option<f64>,
+    /// Widest the controller may grow the window, simulated seconds.
+    /// `None` = 64x the base window.
+    pub max_s: Option<f64>,
+}
+
 /// Sharding configuration carried on
 /// [`SimConfig`](crate::cluster::driver::SimConfig) (`--shards`,
 /// `--merge`, `--window`).
@@ -65,6 +78,11 @@ pub struct ShardSpec {
     /// `None` derives the window from the heartbeat period (safe but
     /// barrier-heavy on sparse workloads; benches use wider windows).
     pub window_s: Option<f64>,
+    /// Adaptive window sizing for the fast mode: the coordinator
+    /// widens/narrows the next window from observed cross-shard traffic
+    /// within these bounds. `None` keeps the window fixed. Ignored by
+    /// the deterministic merge (it has no window barrier).
+    pub auto_window: Option<WindowAuto>,
 }
 
 impl Default for ShardSpec {
@@ -73,6 +91,7 @@ impl Default for ShardSpec {
             count: 1,
             merge: MergeMode::Deterministic,
             window_s: None,
+            auto_window: None,
         }
     }
 }
@@ -97,6 +116,136 @@ impl ShardSpec {
             Some(w) if w.is_finite() && w > 0.0 => w,
             _ => heartbeat_s.max(f64::MIN_POSITIVE),
         }
+    }
+}
+
+/// Per-window cross-shard traffic, as observed by the coordinator at
+/// one barrier. Every field is a sum/count over the window's shard
+/// reports, so the value is invariant under report arrival order —
+/// the property that keeps [`AutoWindow`] deterministic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WindowTraffic {
+    /// Jobs the coordinator routed into shards this window (new
+    /// arrivals plus re-routed backlog).
+    pub routed_jobs: usize,
+    /// Jobs that crossed shards at this barrier: spillover exports plus
+    /// stolen jobs. High crossing traffic means the window is too wide
+    /// for the current contention level.
+    pub crossed_jobs: usize,
+    /// Shards that reported zero live jobs at the barrier — idle shards
+    /// paid the barrier for nothing, so the window is too narrow.
+    pub idle_shards: usize,
+    /// Total shard count, for context.
+    pub shards: usize,
+}
+
+/// Deterministic multiplicative-increase/multiplicative-decrease
+/// controller for the fast-merge barrier window.
+///
+/// The rule, applied once per barrier from that window's
+/// [`WindowTraffic`]:
+///
+/// * any cross-shard job movement (`crossed_jobs > 0`) → **halve** the
+///   window (clamped to `min`): barriers are doing real work, so make
+///   them cheap and frequent to cut job latency across shards;
+/// * no crossing traffic at all → **double** the window (clamped to
+///   `max`): low-interaction phases stop paying a barrier per
+///   heartbeat.
+///
+/// The controller is a pure function of its input sequence: given the
+/// same per-window reports it produces the same horizon sequence, on
+/// any thread interleaving (pinned by `tests/barrier_model.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoWindow {
+    min_s: f64,
+    max_s: f64,
+    current_s: f64,
+}
+
+impl AutoWindow {
+    /// A controller starting at `base_s` (the fixed window the spec
+    /// would have used), bounded by the spec's `auto_window` bounds.
+    pub fn new(base_s: f64, auto: WindowAuto) -> Self {
+        let base = if base_s.is_finite() && base_s > 0.0 {
+            base_s
+        } else {
+            f64::MIN_POSITIVE
+        };
+        let sane = |v: Option<f64>, fallback: f64| match v {
+            Some(x) if x.is_finite() && x > 0.0 => x,
+            _ => fallback,
+        };
+        let min_s = sane(auto.min_s, base);
+        let max_s = sane(auto.max_s, base * 64.0).max(min_s);
+        Self {
+            min_s,
+            max_s,
+            current_s: base.clamp(min_s, max_s),
+        }
+    }
+
+    /// The window length to use for the next barrier.
+    pub fn current(&self) -> f64 {
+        self.current_s
+    }
+
+    /// Fold one barrier's traffic into the controller.
+    pub fn observe(&mut self, traffic: WindowTraffic) {
+        if traffic.crossed_jobs > 0 {
+            self.current_s = (self.current_s * 0.5).max(self.min_s);
+        } else {
+            self.current_s = (self.current_s * 2.0).min(self.max_s);
+        }
+    }
+}
+
+/// Parsed form of the `--window` CLI flag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WindowArg {
+    /// `--window 30`: a fixed barrier window.
+    Fixed(f64),
+    /// `--window auto` / `--window auto:5,120`: adaptive sizing with
+    /// optional explicit bounds.
+    Auto(WindowAuto),
+}
+
+impl WindowArg {
+    /// Parse `"30"`, `"auto"`, or `"auto:MIN,MAX"` (either bound may be
+    /// left empty, as in `"auto:,120"`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(bounds) = s.strip_prefix("auto") {
+            let bounds = bounds.strip_prefix(':').unwrap_or(bounds);
+            if bounds.is_empty() {
+                return Ok(WindowArg::Auto(WindowAuto::default()));
+            }
+            let mut it = bounds.splitn(2, ',');
+            let parse_bound = |part: Option<&str>, which: &str| -> anyhow::Result<Option<f64>> {
+                match part.map(str::trim) {
+                    None | Some("") => Ok(None),
+                    Some(v) => {
+                        let x: f64 = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad --window auto {which} bound {v:?}"))?;
+                        anyhow::ensure!(
+                            x.is_finite() && x > 0.0,
+                            "--window auto {which} bound must be positive and finite"
+                        );
+                        Ok(Some(x))
+                    }
+                }
+            };
+            let min_s = parse_bound(it.next(), "min")?;
+            let max_s = parse_bound(it.next(), "max")?;
+            if let (Some(lo), Some(hi)) = (min_s, max_s) {
+                anyhow::ensure!(lo <= hi, "--window auto bounds must satisfy min <= max");
+            }
+            return Ok(WindowArg::Auto(WindowAuto { min_s, max_s }));
+        }
+        let w: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--window must be a number or auto[:min,max], got {s:?}"))?;
+        anyhow::ensure!(w > 0.0 && w.is_finite(), "--window must be positive and finite");
+        Ok(WindowArg::Fixed(w))
     }
 }
 
@@ -298,6 +447,75 @@ mod tests {
         assert_eq!(spec.window(3.0), 3.0);
         spec.window_s = Some(f64::INFINITY);
         assert_eq!(spec.window(3.0), 3.0);
+    }
+
+    #[test]
+    fn window_arg_parses_fixed_auto_and_bounds() {
+        assert_eq!(WindowArg::parse("30").unwrap(), WindowArg::Fixed(30.0));
+        assert_eq!(
+            WindowArg::parse("auto").unwrap(),
+            WindowArg::Auto(WindowAuto { min_s: None, max_s: None })
+        );
+        assert_eq!(
+            WindowArg::parse("auto:5,120").unwrap(),
+            WindowArg::Auto(WindowAuto { min_s: Some(5.0), max_s: Some(120.0) })
+        );
+        assert_eq!(
+            WindowArg::parse("auto:,120").unwrap(),
+            WindowArg::Auto(WindowAuto { min_s: None, max_s: Some(120.0) })
+        );
+        assert_eq!(
+            WindowArg::parse("auto:5").unwrap(),
+            WindowArg::Auto(WindowAuto { min_s: Some(5.0), max_s: None })
+        );
+        assert!(WindowArg::parse("0").is_err());
+        assert!(WindowArg::parse("-3").is_err());
+        assert!(WindowArg::parse("inf").is_err());
+        assert!(WindowArg::parse("auto:120,5").is_err());
+        assert!(WindowArg::parse("auto:x,5").is_err());
+        assert!(WindowArg::parse("fast").is_err());
+    }
+
+    #[test]
+    fn auto_window_mimd_rule_is_bounded_and_deterministic() {
+        let mut w = AutoWindow::new(10.0, WindowAuto { min_s: Some(5.0), max_s: Some(40.0) });
+        assert_eq!(w.current(), 10.0);
+        let quiet = WindowTraffic { shards: 4, ..Default::default() };
+        let busy = WindowTraffic { crossed_jobs: 3, shards: 4, ..Default::default() };
+        w.observe(quiet);
+        assert_eq!(w.current(), 20.0);
+        w.observe(quiet);
+        assert_eq!(w.current(), 40.0);
+        w.observe(quiet);
+        assert_eq!(w.current(), 40.0, "clamped at max");
+        w.observe(busy);
+        assert_eq!(w.current(), 20.0);
+        w.observe(busy);
+        w.observe(busy);
+        assert_eq!(w.current(), 5.0, "clamped at min");
+        // Replaying the same traffic sequence reproduces the same state.
+        let mut replay = AutoWindow::new(10.0, WindowAuto { min_s: Some(5.0), max_s: Some(40.0) });
+        for t in [quiet, quiet, quiet, busy, busy, busy] {
+            replay.observe(t);
+        }
+        assert_eq!(replay, w);
+    }
+
+    #[test]
+    fn auto_window_defaults_derive_from_base() {
+        let mut w = AutoWindow::new(3.0, WindowAuto::default());
+        // min defaults to the base window, max to 64x base.
+        for _ in 0..10 {
+            w.observe(WindowTraffic::default());
+        }
+        assert_eq!(w.current(), 3.0 * 64.0);
+        for _ in 0..10 {
+            w.observe(WindowTraffic { crossed_jobs: 1, ..Default::default() });
+        }
+        assert_eq!(w.current(), 3.0);
+        // min > max inputs are reconciled instead of panicking.
+        let odd = AutoWindow::new(10.0, WindowAuto { min_s: Some(50.0), max_s: Some(20.0) });
+        assert!(odd.current() >= 20.0 && odd.current() <= 50.0);
     }
 
     /// Drive the same operation stream through a plain queue and a

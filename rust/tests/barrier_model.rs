@@ -30,8 +30,20 @@
 //! 4. **Termination** — every path reaches the final barrier (deadlock
 //!    freedom of the skeleton: sends never block, the barrier consumes
 //!    exactly what the workers produce).
+//!
+//! A second, stateful model (`StealModel`, below) extends the skeleton
+//! with the PR-10 additions: per-shard `DemandDigest`-style reports,
+//! coordinator-computed work-stealing quotas, and an adaptive window
+//! controller (`hfsp::sim::AutoWindow`, the real one) driven by
+//! per-barrier traffic. The same properties must hold — and two new
+//! ones: the stealing quota computation and the horizon sequence the
+//! controller produces must be identical across every report-arrival
+//! permutation, because both are functions of indexed (per-shard) or
+//! summed (per-barrier) state only.
 
 use std::collections::BTreeSet;
+
+use hfsp::sim::{AutoWindow, WindowAuto, WindowTraffic};
 
 /// A job in the model: `hops` is how many windows it gets exported
 /// (spilled) before a worker finally completes it. This stands in for
@@ -299,4 +311,395 @@ fn halted_shard_stops_the_run_identically_everywhere() {
     assert_eq!(completed.len(), unique.len(), "a job completed twice");
     // Window 0's hops-0 jobs certainly completed before the halt.
     assert!(unique.contains(&0) && unique.contains(&2));
+}
+
+// == stateful model: work-stealing quotas + adaptive windows ===============
+
+/// A job in the stateful model: `maps` is its slot demand (feeds the
+/// digest's `pending` figure, like `pending_maps`), `work` is how many
+/// heartbeat rounds it needs once launched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct SJob {
+    id: u32,
+    maps: usize,
+    work: u8,
+    /// Window the job last arrived on its current shard.
+    arrived: usize,
+    /// Whether any of its work has started (the driver's
+    /// `!Job::is_untouched()`): a touched job is pinned to its shard.
+    touched: bool,
+}
+
+/// Per-shard digest, mirroring the `DemandDigest` fields the stealing
+/// quota reads: free slots, queued map demand, donatable jobs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct SDigest {
+    free: usize,
+    pending: usize,
+    stealable: usize,
+}
+
+#[derive(Clone, Debug)]
+struct SShard {
+    cap: usize,
+    /// Queue in ascending id order.
+    queue: Vec<SJob>,
+}
+
+impl SShard {
+    /// Run window `w`. Heartbeats fire only on `hb` windows (modelling
+    /// a barrier window shorter than the heartbeat period — the state
+    /// the stealing pass exists for): a job arriving between heartbeats
+    /// sits untouched across one or more barriers. After the run, the
+    /// export pass mirrors the driver exactly: a saturated shard spills
+    /// everything untouched; otherwise up to `donate` untouched jobs
+    /// (newest first) migrate.
+    fn window(
+        &mut self,
+        w: usize,
+        batch: Vec<SJob>,
+        donate: usize,
+        hb: bool,
+        completed: &mut Vec<(u32, usize)>,
+        exports: &mut Vec<SJob>,
+        stolen: &mut usize,
+    ) -> SDigest {
+        for mut job in batch {
+            job.arrived = w;
+            self.queue.push(job);
+        }
+        self.queue.sort_unstable_by_key(|j| j.id);
+        if hb {
+            // Touched jobs hold their slots; remaining slots launch the
+            // oldest untouched jobs that were present before this window.
+            let mut used = self.queue.iter().filter(|j| j.touched).count();
+            for job in &mut self.queue {
+                if !job.touched && job.arrived < w && used < self.cap {
+                    job.touched = true;
+                    used += 1;
+                }
+            }
+            for job in &mut self.queue {
+                if job.touched {
+                    job.work -= 1;
+                }
+            }
+            let cap = self.cap;
+            self.queue.retain(|j| {
+                if j.touched && j.work == 0 {
+                    completed.push((j.id, w));
+                    false
+                } else {
+                    true
+                }
+            });
+            debug_assert!(self.queue.iter().filter(|j| j.touched).count() <= cap);
+        }
+        let free = self.cap - self.queue.iter().filter(|j| j.touched).count();
+        if free == 0 {
+            // Spillover: shed everything untouched.
+            self.queue.retain(|j| {
+                if !j.touched {
+                    exports.push(*j);
+                    false
+                } else {
+                    true
+                }
+            });
+        } else {
+            // Stealing: donate the newest untouched jobs.
+            let mut given = 0;
+            while given < donate {
+                let Some(pos) = self.queue.iter().rposition(|j| !j.touched) else {
+                    break;
+                };
+                exports.push(self.queue.remove(pos));
+                *stolen += 1;
+                given += 1;
+            }
+        }
+        SDigest {
+            free,
+            pending: self.queue.iter().filter(|j| !j.touched).map(|j| j.maps).sum(),
+            stealable: self.queue.iter().filter(|j| !j.touched).count(),
+        }
+    }
+}
+
+struct StealModel {
+    caps: Vec<usize>,
+    /// Arrivals per window index.
+    arrivals: Vec<Vec<SJob>>,
+    /// Heartbeats fire on windows where `(w + 1) % hb_every == 0`.
+    hb_every: usize,
+}
+
+/// One path's observable outcome: completions, the horizon trace the
+/// adaptive controller produced, and the steal count.
+type StealDigest = (Vec<(u32, usize)>, Vec<u64>, usize);
+
+impl StealModel {
+    /// The driver's routing greedy verbatim: argmax estimated free
+    /// slots, debited by map demand, round-robin fallback.
+    fn route(&self, pool: &[SJob], digests: &[SDigest]) -> Vec<Vec<SJob>> {
+        let n = self.caps.len();
+        let mut batches: Vec<Vec<SJob>> = (0..n).map(|_| Vec::new()).collect();
+        let mut free: Vec<i64> = digests.iter().map(|d| d.free as i64).collect();
+        let mut assigned = vec![0usize; n];
+        for job in pool {
+            let best = (0..n).max_by_key(|&i| (free[i], std::cmp::Reverse(i))).unwrap();
+            let pick = if free[best] > 0 {
+                best
+            } else {
+                (0..n).min_by_key(|&i| (assigned[i], i)).unwrap()
+            };
+            free[pick] -= job.maps.max(1) as i64;
+            assigned[pick] += 1;
+            batches[pick].push(*job);
+        }
+        batches
+    }
+
+    /// The driver's donate-quota pass verbatim: cluster spare capacity
+    /// handed to oversubscribed shards in ascending shard order.
+    fn donates(&self, digests: &[SDigest]) -> Vec<usize> {
+        let mut spare: usize = digests.iter().map(|d| d.free.saturating_sub(d.pending)).sum();
+        let mut donates = vec![0usize; digests.len()];
+        for (s, d) in digests.iter().enumerate() {
+            if spare == 0 {
+                break;
+            }
+            if d.pending > d.free {
+                let take = d.stealable.min(spare);
+                donates[s] = take;
+                spare -= take;
+            }
+        }
+        donates
+    }
+
+    fn explore(&self, auto: AutoWindow) -> (BTreeSet<StealDigest>, usize) {
+        let shards: Vec<SShard> = self
+            .caps
+            .iter()
+            .map(|&cap| SShard { cap, queue: Vec::new() })
+            .collect();
+        let digests: Vec<SDigest> = self
+            .caps
+            .iter()
+            .map(|&cap| SDigest { free: cap, ..SDigest::default() })
+            .collect();
+        let mut out = BTreeSet::new();
+        let mut paths = 0usize;
+        self.dfs(
+            0,
+            shards,
+            digests,
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            0,
+            auto,
+            &mut out,
+            &mut paths,
+        );
+        (out, paths)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &self,
+        w: usize,
+        shards: Vec<SShard>,
+        digests: Vec<SDigest>,
+        backlog: Vec<SJob>,
+        done: Vec<(u32, usize)>,
+        trace: Vec<u64>,
+        stolen: usize,
+        auto: AutoWindow,
+        out: &mut BTreeSet<StealDigest>,
+        paths: &mut usize,
+    ) {
+        assert!(w < 32, "model failed to terminate: window {w}");
+        let n = self.caps.len();
+        // Coordinator: sorted pool -> routed batches + donate quotas
+        // (both pure functions of indexed digests, so permutation-proof
+        // by construction — the assertions below re-check that end to
+        // end through the fold).
+        let mut pool = backlog;
+        if let Some(batch) = self.arrivals.get(w) {
+            pool.extend(batch.iter().copied());
+        }
+        pool.sort_unstable_by_key(|j| j.id);
+        let routed_jobs = pool.len();
+        let batches = self.route(&pool, &digests);
+        let donates = self.donates(&digests);
+        let hb = (w + 1) % self.hb_every == 0;
+
+        // Workers: deterministic given their batch + quota.
+        let mut next_shards = shards;
+        let mut reports: Vec<(SDigest, Vec<SJob>)> = Vec::new();
+        let mut completed = Vec::new();
+        let mut stolen = stolen;
+        for (s, batch) in batches.into_iter().enumerate() {
+            let mut exports = Vec::new();
+            let digest = next_shards[s].window(
+                w,
+                batch,
+                donates[s],
+                hb,
+                &mut completed,
+                &mut exports,
+                &mut stolen,
+            );
+            reports.push((digest, exports));
+        }
+        // A job moves at most once per window: the union of this
+        // barrier's exports can't name one job twice.
+        let moved: BTreeSet<u32> = reports
+            .iter()
+            .flat_map(|(_, e)| e.iter().map(|j| j.id))
+            .collect();
+        let total_exported: usize = reports.iter().map(|(_, e)| e.len()).sum();
+        assert_eq!(moved.len(), total_exported, "a job was exported twice in one window");
+
+        let mut done = done;
+        done.extend(completed);
+
+        for order in permutations(n) {
+            // Barrier fold in report-arrival order: digests land in
+            // indexed slots (order-invariant), exports concatenate
+            // (order-dependent until the next pool sort).
+            let mut next_digests = digests.clone();
+            let mut backlog = Vec::new();
+            for &i in &order {
+                let (digest, exports) = &reports[i];
+                next_digests[i] = *digest;
+                backlog.extend(exports.iter().copied());
+            }
+            let crossed_jobs = backlog.len();
+            let idle = next_shards.iter().filter(|s| s.queue.is_empty()).count();
+            let mut auto = auto;
+            auto.observe(WindowTraffic {
+                routed_jobs,
+                crossed_jobs,
+                idle_shards: idle,
+                shards: n,
+            });
+            let mut trace = trace.clone();
+            trace.push(auto.current().to_bits());
+
+            let drained = w + 1 >= self.arrivals.len()
+                && backlog.is_empty()
+                && next_shards.iter().all(|s| s.queue.is_empty());
+            if drained {
+                let mut digest = done.clone();
+                digest.sort_unstable();
+                out.insert((digest, trace, stolen));
+                *paths += 1;
+            } else {
+                self.dfs(
+                    w + 1,
+                    next_shards.clone(),
+                    next_digests,
+                    backlog,
+                    done.clone(),
+                    trace,
+                    stolen,
+                    auto,
+                    out,
+                    paths,
+                );
+            }
+        }
+    }
+}
+
+/// 3 shards (1/1/2 slots), heartbeat every 3rd window. Job 1 lands on a
+/// shard whose queued map demand exceeds its one slot while another
+/// shard advertises spare capacity, and no heartbeat touches it before
+/// the next barrier — the exact donor/acceptor state the stealing quota
+/// is computed from. The run must steal it, every interleaving must
+/// agree on completions, steal count AND the adaptive horizon sequence,
+/// and the controller must stay inside its bounds.
+#[test]
+fn stealing_and_adaptive_windows_agree_across_all_interleavings() {
+    let model = StealModel {
+        caps: vec![1, 1, 2],
+        arrivals: vec![vec![
+            SJob { id: 0, maps: 1, work: 1, arrived: 0, touched: false },
+            SJob { id: 1, maps: 2, work: 1, arrived: 0, touched: false },
+            SJob { id: 2, maps: 2, work: 2, arrived: 0, touched: false },
+        ]],
+        hb_every: 3,
+    };
+    let auto = AutoWindow::new(
+        8.0,
+        WindowAuto {
+            min_s: Some(2.0),
+            max_s: Some(32.0),
+        },
+    );
+    let (digests, paths) = model.explore(auto);
+    assert!(paths > 0);
+    assert_eq!(
+        digests.len(),
+        1,
+        "stealing/adaptive outcome depends on report order: {digests:#?}"
+    );
+    let (done, trace, stolen) = digests.iter().next().unwrap();
+    assert!(*stolen >= 1, "crafted imbalance never exercised stealing");
+    // Conservation: all three jobs complete exactly once.
+    let ids: Vec<u32> = done.iter().map(|&(id, _)| id).collect();
+    let unique: BTreeSet<u32> = ids.iter().copied().collect();
+    assert_eq!(ids.len(), unique.len(), "a job completed twice");
+    assert_eq!(unique, BTreeSet::from([0, 1, 2]), "lost or phantom jobs");
+    // The horizon sequence stays inside the configured bounds and
+    // actually adapted in both directions.
+    let horizons: Vec<f64> = trace.iter().map(|&b| f64::from_bits(b)).collect();
+    assert!(horizons.iter().all(|&h| (2.0..=32.0).contains(&h)), "{horizons:?}");
+    assert!(
+        horizons.windows(2).any(|p| p[1] < p[0]),
+        "cross-shard traffic never narrowed the window: {horizons:?}"
+    );
+    assert!(
+        horizons.windows(2).any(|p| p[1] > p[0]),
+        "quiet barriers never widened the window: {horizons:?}"
+    );
+}
+
+/// The quota pass itself, pinned against hand-computed digests: spare
+/// capacity goes to oversubscribed shards in ascending order and never
+/// exceeds a donor's stealable count.
+#[test]
+fn donate_quotas_follow_spare_capacity_in_shard_order() {
+    let model = StealModel {
+        caps: vec![1, 1, 1, 1],
+        arrivals: Vec::new(),
+        hb_every: 2,
+    };
+    let digests = vec![
+        // Donor: one slot, three queued maps, two untouched jobs.
+        SDigest { free: 1, pending: 3, stealable: 2 },
+        // Saturated (no free slots): never a donor, never spare.
+        SDigest { free: 0, pending: 4, stealable: 0 },
+        // Idle: one spare slot.
+        SDigest { free: 1, pending: 0, stealable: 0 },
+        // Busy but balanced: neither donor nor spare.
+        SDigest { free: 1, pending: 1, stealable: 1 },
+    ];
+    assert_eq!(model.donates(&digests), vec![1, 0, 0, 0]);
+    // Two spare slots cap at the donor's stealable count.
+    let digests2 = vec![
+        SDigest { free: 1, pending: 9, stealable: 1 },
+        SDigest { free: 2, pending: 0, stealable: 0 },
+        SDigest { free: 1, pending: 0, stealable: 0 },
+    ];
+    assert_eq!(model.donates(&digests2), vec![1, 0, 0]);
+    // No oversubscribed shard -> no movement, whatever the spare.
+    let digests3 = vec![
+        SDigest { free: 4, pending: 0, stealable: 0 },
+        SDigest { free: 2, pending: 2, stealable: 2 },
+    ];
+    assert_eq!(model.donates(&digests3), vec![0, 0]);
 }

@@ -1,25 +1,32 @@
 //! Sharded-execution equivalence testbed.
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! 1. **Deterministic-merge pin** — every `testkit::scenarios` matrix
 //!    entry run with `--shards {2,4}` under the deterministic merge, on
 //!    both queue backends, must produce a `SimOutcome` byte-identical to
-//!    the serial single-loop driver (wall-clock zeroed). This is the
-//!    serial-equivalence contract of `MergeMode::Deterministic`.
-//! 2. **Fast-merge conservation** — a crafted 2-shard scenario where
-//!    every placement spills (each shard saturates immediately): no job
-//!    may be lost or double-launched across the window-barrier handoff,
-//!    and job/launch counts must match the serial run exactly.
+//!    the serial single-loop driver (wall-clock zeroed). The sharded
+//!    configs enable adaptive windows (`--window auto`): barrier sizing
+//!    and work-stealing are fast-merge-only mechanisms, so the
+//!    deterministic merge must ignore them entirely — this pins that.
+//! 2. **Fast-merge conservation** — crafted scenarios where jobs cross
+//!    shards (spillover on a saturated split; work-stealing on an
+//!    imbalanced one): no job may be lost or double-launched across the
+//!    window-barrier handoff, and job/launch counts must match serial.
 //! 3. **Fast-merge determinism** — threaded runs are still repeatable:
 //!    the same configuration twice yields byte-identical outcomes
-//!    (thread scheduling must not leak into simulated behaviour).
+//!    (thread scheduling must not leak into simulated behaviour),
+//!    including with adaptive windows driving the barrier cadence.
+//! 4. **Peak accounting** — per-shard live-job peaks are never summed:
+//!    `peak_live_jobs` must stay a plausible global concurrency bound
+//!    even when jobs transit several shards, and the deterministic
+//!    merge must report exactly the serial peak.
 
 use hfsp::cluster::driver::{run_simulation, SimConfig, SimOutcome};
 use hfsp::cluster::ClusterConfig;
 use hfsp::faults::{FaultConfig, SpeculationConfig};
 use hfsp::scheduler::{SchedulerKind, REGISTRY};
-use hfsp::sim::{MergeMode, QueueKind, ShardSpec, StopReason};
+use hfsp::sim::{MergeMode, QueueKind, ShardSpec, StopReason, WindowAuto};
 use hfsp::testkit::scenarios::matrix;
 use hfsp::workload::synthetic;
 
@@ -36,9 +43,18 @@ fn with_shards(cfg: &SimConfig, count: usize, merge: MergeMode) -> SimConfig {
             count,
             merge,
             window_s: None,
+            auto_window: None,
         },
         ..cfg.clone()
     }
+}
+
+/// Like [`with_shards`] but with adaptive window sizing enabled
+/// (default bounds, as `--window auto` sets them).
+fn with_auto_shards(cfg: &SimConfig, count: usize, merge: MergeMode) -> SimConfig {
+    let mut cfg = with_shards(cfg, count, merge);
+    cfg.shards.auto_window = Some(WindowAuto::default());
+    cfg
 }
 
 // -- layer 1: deterministic merge is byte-identical to serial -------------
@@ -53,7 +69,10 @@ fn scenario_matrix_outcomes_are_byte_identical_across_shard_counts() {
             assert_ne!(serial.stop, StopReason::EventLimit, "{} truncated", sc.label);
             let want = outcome_fingerprint(serial);
             for count in [2, 4] {
-                let cfg = with_shards(&serial_cfg, count, MergeMode::Deterministic);
+                // `auto_window` is set on purpose: adaptive sizing is a
+                // fast-merge mechanism and the deterministic merge must
+                // produce serial-identical bytes with it enabled.
+                let cfg = with_auto_shards(&serial_cfg, count, MergeMode::Deterministic);
                 let sharded = run_simulation(&cfg, SchedulerKind::hfsp(), &sc.workload);
                 assert_eq!(
                     want,
@@ -132,6 +151,42 @@ fn fast_merge_spillover_loses_and_duplicates_nothing() {
     assert_eq!(fast.jobs_arrived, serial.jobs_arrived);
 }
 
+/// Work-stealing conservation on a crafted imbalance: a single 3-map
+/// job routed to shard 0 of a 2 × (1 node × 1 map slot) split, with a
+/// 1 s barrier window well inside the 3 s heartbeat period.
+///
+/// At the first barrier shard 0 reports `pending_maps = 3` against
+/// `free_map_slots = 1` with the job still untouched (its first
+/// heartbeat is two windows away), while shard 1 advertises a spare
+/// slot — exactly the donor/acceptor pattern the stealing quota is
+/// computed from. The coordinator must migrate the job
+/// (`stolen_jobs >= 1`, `JobMigrated`, not the spillover counter)
+/// without losing it, double-counting its arrival, or launching any
+/// task twice.
+#[test]
+fn fast_merge_work_stealing_loses_and_duplicates_nothing() {
+    let wl = synthetic::uniform_batch(1, 3, 10.0);
+    let cfg = saturated_cfg();
+    let serial = run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    let mut sharded_cfg = with_shards(&cfg, 2, MergeMode::Fast);
+    sharded_cfg.shards.window_s = Some(1.0);
+    let fast = run_simulation(&sharded_cfg, SchedulerKind::hfsp(), &wl);
+    assert_eq!(fast.stream_error, None);
+    assert_ne!(fast.stop, StopReason::EventLimit, "fast run truncated");
+    assert!(
+        fast.counters.stolen_jobs >= 1,
+        "the crafted imbalance must exercise work-stealing (stolen {})",
+        fast.counters.stolen_jobs
+    );
+    // Conservation: the job arrived somewhere exactly once, finished
+    // exactly once, and each of its 3 maps launched exactly once.
+    assert_eq!(fast.jobs_arrived, 1, "job lost or double-counted in migration");
+    assert_eq!(fast.sojourn.len(), 1, "the migrated job never finished");
+    assert_eq!(fast.counters.launches, serial.counters.launches);
+    assert_eq!(fast.counters.rejected_actions, 0);
+    assert_eq!(fast.jobs_arrived, serial.jobs_arrived);
+}
+
 #[test]
 fn fast_merge_survives_stragglers_and_speculation_clones() {
     // Speculative clones are per-shard state; crossing a window barrier
@@ -176,4 +231,79 @@ fn fast_merge_runs_are_repeat_deterministic() {
         outcome_fingerprint(b),
         "threaded fast-merge run is not repeatable"
     );
+}
+
+/// Adaptive windows are a pure function of per-barrier traffic sums, so
+/// turning them on must not cost repeatability — the barrier cadence
+/// the MIMD rule produces has to be identical run over run.
+#[test]
+fn fast_merge_with_auto_window_is_repeat_deterministic() {
+    let wl = synthetic::uniform_batch(5, 4, 15.0);
+    let cfg = with_auto_shards(&saturated_cfg(), 2, MergeMode::Fast);
+    let a = run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    let b = run_simulation(&cfg, SchedulerKind::hfsp(), &wl);
+    assert_eq!(a.stream_error, None);
+    assert_ne!(a.stop, StopReason::EventLimit, "auto-window run truncated");
+    assert_eq!(a.jobs_arrived, 5);
+    assert_eq!(a.sojourn.len(), 5, "a job was lost under adaptive windows");
+    assert_eq!(
+        outcome_fingerprint(a),
+        outcome_fingerprint(b),
+        "adaptive-window fast-merge run is not repeatable"
+    );
+}
+
+// -- layer 4: cross-shard peak accounting -----------------------------------
+
+/// Per-shard peaks must never be summed into `peak_live_jobs`. The
+/// spillover scenario makes the bug visible: every job transits several
+/// shards, so each shard's own peak counts it again and a summed merge
+/// reports a "global peak" above the number of jobs that ever existed.
+#[test]
+fn fast_merge_peak_live_jobs_is_not_a_sum_of_shard_peaks() {
+    let wl = synthetic::uniform_batch(4, 4, 30.0);
+    let fast = run_simulation(
+        &with_shards(&saturated_cfg(), 2, MergeMode::Fast),
+        SchedulerKind::hfsp(),
+        &wl,
+    );
+    assert_eq!(fast.stream_error, None);
+    assert!(
+        fast.counters.spilled_jobs >= 1,
+        "scenario must move jobs across shards (spilled {})",
+        fast.counters.spilled_jobs
+    );
+    assert!(
+        fast.peak_live_jobs <= fast.jobs_arrived,
+        "global peak {} exceeds the {} jobs that ever existed — \
+         per-shard peaks were summed",
+        fast.peak_live_jobs,
+        fast.jobs_arrived
+    );
+    // All 4 jobs are submitted at t=0 and live together before any
+    // finishes, so the coordinator must observe the true global peak.
+    assert_eq!(fast.peak_live_jobs, 4);
+    assert!(
+        fast.shard_peak_live_jobs <= fast.peak_live_jobs,
+        "a single shard's peak ({}) cannot exceed the global peak ({})",
+        fast.shard_peak_live_jobs,
+        fast.peak_live_jobs
+    );
+    assert!(fast.shard_peak_live_jobs >= 1);
+}
+
+/// The deterministic merge reports exactly the serial peak (and mirrors
+/// it into `shard_peak_live_jobs` — there is a single logical driver).
+#[test]
+fn deterministic_merge_reports_the_serial_peak() {
+    let sc = &matrix(&[5])[0];
+    let serial = run_simulation(&sc.cfg, SchedulerKind::hfsp(), &sc.workload);
+    let merged = run_simulation(
+        &with_auto_shards(&sc.cfg, 4, MergeMode::Deterministic),
+        SchedulerKind::hfsp(),
+        &sc.workload,
+    );
+    assert_eq!(merged.peak_live_jobs, serial.peak_live_jobs);
+    assert_eq!(merged.shard_peak_live_jobs, serial.shard_peak_live_jobs);
+    assert_eq!(serial.shard_peak_live_jobs, serial.peak_live_jobs);
 }

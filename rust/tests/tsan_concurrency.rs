@@ -17,7 +17,7 @@
 //! roughly an order of magnitude in speed and memory.
 
 use hfsp::prelude::*;
-use hfsp::sim::{MergeMode, ShardSpec, StopReason};
+use hfsp::sim::{MergeMode, ShardSpec, StopReason, WindowAuto};
 use hfsp::workload::synthetic;
 
 /// Byte-identity probe: full `Debug` output, wall clock zeroed.
@@ -37,6 +37,7 @@ fn sharded_cfg(nodes: usize, shards: usize, seed: u64) -> SimConfig {
             count: shards,
             merge: MergeMode::Fast,
             window_s: None,
+            auto_window: None,
         },
         ..Default::default()
     }
@@ -72,6 +73,41 @@ fn fast_merge_open_stream_4_shards_is_race_free_and_repeatable() {
     );
 }
 
+/// Same acceptance stream with the adaptive window engaged: the
+/// horizon now reacts to barrier traffic, so window boundaries (and
+/// hence the report batching) shift relative to the fixed-window run —
+/// the shifted boundaries must still be a pure function of traffic,
+/// not of thread timing.
+#[test]
+fn fast_merge_auto_window_is_race_free_and_repeatable() {
+    let source = OpenArrivals::poisson(1.0, f64::INFINITY)
+        .mix(JobMix::Uniform {
+            maps: 2,
+            task_s: 3.0,
+        })
+        .max_jobs(200);
+    let mut cfg = sharded_cfg(8, 4, 13);
+    cfg.shards.auto_window = Some(WindowAuto {
+        min_s: Some(1.0),
+        max_s: Some(60.0),
+    });
+    let run = || {
+        Simulation::new(cfg.clone())
+            .scheduler(SchedulerKind::hfsp())
+            .workload(source.clone())
+            .run()
+    };
+    let a = run();
+    assert_eq!(a.stream_error, None);
+    assert_eq!(a.sojourn.len(), 200, "every job finishes");
+    let b = run();
+    assert_eq!(
+        outcome_fingerprint(a),
+        outcome_fingerprint(b),
+        "adaptive-window fast-merge run is not repeatable"
+    );
+}
+
 /// Saturated 2-shard scenario: every placement spills, so the report
 /// channel carries non-empty `exports` every window — the traffic the
 /// pre-routing pool sort makes order-insensitive.
@@ -90,6 +126,7 @@ fn fast_merge_spillover_traffic_is_race_free_and_repeatable() {
             count: 2,
             merge: MergeMode::Fast,
             window_s: None,
+            auto_window: None,
         },
         ..Default::default()
     };
